@@ -1,0 +1,219 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (normally driven by `make artifacts`):
+
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--sizes 128,256] [--chunk 128] [--jacobi-chunk 16]
+
+Emits, per padded size P:
+
+    mp_chunk_p{P}_t{T}.hlo.txt       (B, bnorm2, x, r, ks)    -> (x', r', trace)
+    jacobi_chunk_p{P}_t{TJ}.hlo.txt  (A, x, y, alpha)         -> x'
+    size_chunk_p{P}_t{T}.hlo.txt     (Ct, cnorm2, s, tgt, ks) -> (s', trace)
+    residual_norm_p{P}.hlo.txt       (B, x, y)                -> (r, ||r||^2)
+
+plus `manifest.json` describing every artifact (entry point, operand
+shapes/dtypes, chunk length, block size) — the Rust runtime
+(rust/src/runtime/artifacts.rs) is driven entirely by the manifest.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import DEFAULT_BLOCK
+
+# Per-artifact kernel block: on the CPU PJRT plugin a multi-block Pallas
+# grid in interpret mode costs ~20x (measured: P=256 with 128-blocks is
+# 11.5 ms/chunk vs 0.54 ms with one 256-block), so each artifact is
+# lowered with block = P — one VMEM-resident tile per operand. A real TPU
+# lowering would keep 128 (MXU-aligned); see DESIGN.md §Hardware-Adaptation.
+MAX_SINGLE_BLOCK = 2048
+
+
+def block_for(p: int) -> int:
+    if p > MAX_SINGLE_BLOCK:
+        raise SystemExit(
+            f"padded size {p} exceeds the single-block VMEM budget "
+            f"({MAX_SINGLE_BLOCK}); extend aot.py with multi-block tiling"
+        )
+    return p
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True: the
+    bundled xla_extension 0.5.1 PJRT client returns the result tuple as a
+    single buffer, so the Rust side unwraps with Literal::to_tuple —
+    attempted untupled lowering still produced one tuple buffer, see
+    EXPERIMENTS.md §Perf iteration log)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_mp_chunk(p: int, t: int) -> str:
+    fn = functools.partial(model.mp_chunk, block=block_for(p))
+    lowered = jax.jit(fn).lower(
+        _spec((p, p)),  # b_pad
+        _spec((p, 1)),  # bnorm2
+        _spec((p, 1)),  # x
+        _spec((p, 1)),  # r
+        _spec((t,), jnp.int32),  # ks
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_jacobi_chunk(p: int, t: int) -> str:
+    fn = functools.partial(model.jacobi_chunk, t=t, block=block_for(p))
+    lowered = jax.jit(fn).lower(
+        _spec((p, p)),  # a_pad
+        _spec((p, 1)),  # x
+        _spec((p, 1)),  # y
+        _spec((1, 1)),  # alpha
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_size_chunk(p: int, t: int) -> str:
+    fn = functools.partial(model.size_chunk, block=block_for(p))
+    lowered = jax.jit(fn).lower(
+        _spec((p, p)),  # ct_pad
+        _spec((p, 1)),  # cnorm2
+        _spec((p, 1)),  # s
+        _spec((p, 1)),  # target
+        _spec((t,), jnp.int32),  # ks
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_residual_norm(p: int) -> str:
+    fn = functools.partial(model.residual_norm, block=block_for(p))
+    lowered = jax.jit(fn).lower(
+        _spec((p, p)),  # b_pad
+        _spec((p, 1)),  # x
+        _spec((p, 1)),  # y
+    )
+    return to_hlo_text(lowered)
+
+
+def _operands(*ops):
+    return [{"name": n, "shape": list(s), "dtype": d} for (n, s, d) in ops]
+
+
+def build_manifest_entry(kind: str, p: int, t: int | None, fname: str) -> dict:
+    if kind == "mp_chunk":
+        operands = _operands(
+            ("b_pad", (p, p), F32),
+            ("bnorm2", (p, 1), F32),
+            ("x", (p, 1), F32),
+            ("r", (p, 1), F32),
+            ("ks", (t,), I32),
+        )
+        results = _operands(("x", (p, 1), F32), ("r", (p, 1), F32), ("trace", (t, 1), F32))
+    elif kind == "jacobi_chunk":
+        operands = _operands(
+            ("a_pad", (p, p), F32),
+            ("x", (p, 1), F32),
+            ("y", (p, 1), F32),
+            ("alpha", (1, 1), F32),
+        )
+        results = _operands(("x", (p, 1), F32))
+    elif kind == "size_chunk":
+        operands = _operands(
+            ("ct_pad", (p, p), F32),
+            ("cnorm2", (p, 1), F32),
+            ("s", (p, 1), F32),
+            ("target", (p, 1), F32),
+            ("ks", (t,), I32),
+        )
+        results = _operands(("s", (p, 1), F32), ("trace", (t, 1), F32))
+    elif kind == "residual_norm":
+        operands = _operands(
+            ("b_pad", (p, p), F32),
+            ("x", (p, 1), F32),
+            ("y", (p, 1), F32),
+        )
+        results = _operands(("r", (p, 1), F32), ("rnorm2", (1, 1), F32))
+    else:
+        raise ValueError(kind)
+    return {
+        "kind": kind,
+        "file": fname,
+        "padded_size": p,
+        "chunk": t,
+        "block": block_for(p),
+        "operands": operands,
+        "results": results,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="128,256", help="padded sizes P (multiples of block)")
+    ap.add_argument("--chunk", type=int, default=128, help="MP/size-est steps per call")
+    ap.add_argument("--jacobi-chunk", type=int, default=16, help="Jacobi steps per call")
+    args = ap.parse_args()
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    for p in sizes:
+        if p % DEFAULT_BLOCK != 0:
+            raise SystemExit(f"size {p} is not a multiple of the kernel block {DEFAULT_BLOCK}")
+        block_for(p)  # validate against the single-block budget
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for p in sizes:
+        jobs = [
+            ("mp_chunk", args.chunk, lambda: lower_mp_chunk(p, args.chunk),
+             f"mp_chunk_p{p}_t{args.chunk}.hlo.txt"),
+            ("jacobi_chunk", args.jacobi_chunk, lambda: lower_jacobi_chunk(p, args.jacobi_chunk),
+             f"jacobi_chunk_p{p}_t{args.jacobi_chunk}.hlo.txt"),
+            ("size_chunk", args.chunk, lambda: lower_size_chunk(p, args.chunk),
+             f"size_chunk_p{p}_t{args.chunk}.hlo.txt"),
+            ("residual_norm", None, lambda: lower_residual_norm(p),
+             f"residual_norm_p{p}.hlo.txt"),
+        ]
+        for kind, t, produce, fname in jobs:
+            text = produce()
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(build_manifest_entry(kind, p, t, fname))
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "block": DEFAULT_BLOCK,
+        "dtype": "f32",
+        "artifacts": entries,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+# L1 — Pallas kernels (interpret=True on CPU-PJRT; see DESIGN.md
+# §Hardware-Adaptation for the TPU tiling rationale).
+#
+# Three primitive kernels compose into every iterated operator the paper
+# needs (MP projection step, Jacobi/power step, Kaczmarz size-estimation
+# step):
+#
+#   matvec    — tiled (BM, BN) dense mat-vec through the MXU
+#   block_dot — blocked inner product with sequential-grid accumulation
+#   axpy      — fused z = a*x + y over (BM, 1) tiles
+#
+# A column gather B(:,k) is expressed as matvec(B, onehot(k)): on TPU a
+# dense matvec through the 128x128 systolic array beats a scalar gather,
+# and it keeps every kernel shape static (no dynamic slices in the HLO).
+from .matvec import matvec, block_dot, axpy, fused_project, DEFAULT_BLOCK
+from . import ref
+
+__all__ = ["matvec", "block_dot", "axpy", "fused_project", "DEFAULT_BLOCK", "ref"]

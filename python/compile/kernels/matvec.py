@@ -1,0 +1,226 @@
+"""L1 Pallas primitive kernels.
+
+All kernels are written for TPU block shapes (VMEM tiles, MXU-aligned
+128-lane last dimensions) but are lowered with ``interpret=True`` so the
+resulting HLO executes on any PJRT backend, including the Rust CPU client
+(real-TPU Mosaic custom-calls cannot run on CPU — see
+/opt/xla-example/README.md).
+
+Vectors are carried as ``(N, 1)`` column matrices: TPU vector registers are
+(8, 128) tiles, and a rank-2 layout keeps the lowering uniform between the
+matrix and vector operands.
+
+Shape contract: callers pad to a multiple of the block size *before*
+invoking (``python/compile/model.py`` owns padding). Keeping the kernels
+free of tail-masking logic keeps the generated HLO loop bodies dense and
+branch-free — the padded coordinates are arranged by the caller to be
+exactly inert (identity columns / zero entries), so correctness does not
+depend on masking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU systolic array is 128x128; an (8,128) float32 VMEM tile is the
+# minimum vector-register shape. 128 keeps both units fully fed while a
+# (128,128) f32 block is only 64 KiB of VMEM — far under the ~16 MiB/core
+# budget even with double buffering (see DESIGN.md §Perf).
+DEFAULT_BLOCK = 128
+
+
+def _check(n: int, block: int, what: str) -> None:
+    if n % block != 0:
+        raise ValueError(f"{what}={n} must be a multiple of block={block}")
+
+
+# ---------------------------------------------------------------------------
+# matvec: y = M @ x
+# ---------------------------------------------------------------------------
+
+
+def _matvec_kernel(m_ref, x_ref, o_ref):
+    """One (BM, BN) tile of the mat-vec.
+
+    Grid is (M/BM, N/BN) with the contraction dimension innermost; TPU
+    grids execute sequentially, so ``o_ref`` accumulates across the j axis
+    of the grid (revisiting the same output block is the canonical Pallas
+    reduction idiom).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BM, BN) @ (BN, 1) through the MXU; accumulate in f32.
+    o_ref[...] += jnp.dot(
+        m_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matvec(m: jax.Array, x: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Tiled dense mat-vec ``m @ x`` with ``m: (M, N)``, ``x: (N, 1)``."""
+    mm, nn = m.shape
+    _check(mm, block, "M")
+    _check(nn, block, "N")
+    if x.shape != (nn, 1):
+        raise ValueError(f"x must be ({nn}, 1), got {x.shape}")
+    grid = (mm // block, nn // block)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),
+            pl.BlockSpec((block, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mm, 1), m.dtype),
+        interpret=True,
+    )(m, x)
+
+
+# ---------------------------------------------------------------------------
+# block_dot: s = x . y (scalar, returned as (1, 1))
+# ---------------------------------------------------------------------------
+
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...] * y_ref[...], keepdims=True).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def block_dot(x: jax.Array, y: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Blocked inner product of two ``(N, 1)`` vectors; result ``(1, 1)``.
+
+    The sequential TPU grid accumulates partial sums into the single output
+    tile — one VMEM-resident scalar, no cross-block tree needed.
+    """
+    nn = x.shape[0]
+    _check(nn, block, "N")
+    if x.shape != (nn, 1) or y.shape != (nn, 1):
+        raise ValueError(f"x, y must be ({nn}, 1); got {x.shape}, {y.shape}")
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=(nn // block,),
+        in_specs=[
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+# ---------------------------------------------------------------------------
+# axpy: z = a * x + y  (a is a (1, 1) scalar tile)
+# ---------------------------------------------------------------------------
+
+
+def _axpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0, 0] * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def axpy(a: jax.Array, x: jax.Array, y: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Fused ``a * x + y`` over ``(block, 1)`` tiles; ``a`` is ``(1, 1)``."""
+    nn = x.shape[0]
+    _check(nn, block, "N")
+    if a.shape != (1, 1):
+        raise ValueError(f"a must be (1, 1), got {a.shape}")
+    if x.shape != (nn, 1) or y.shape != (nn, 1):
+        raise ValueError(f"x, y must be ({nn}, 1); got {x.shape}, {y.shape}")
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=(nn // block,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nn, 1), x.dtype),
+        interpret=True,
+    )(a, x, y)
+
+
+# ---------------------------------------------------------------------------
+# fused_project: the MP hot-spot in one kernel
+#
+#   col  = B @ e_k            (column gather as masked matvec)
+#   num  = col . r            (projection numerator)
+#
+# Fusing the gather-matvec with the dot avoids writing `col` back to HBM
+# between the two passes: each (BM, BN) tile of B is read once, multiplied
+# into the onehot to produce the tile's column segment, immediately dotted
+# with the matching r segment, and both the running numerator and the
+# column (needed later for the residual AXPY) stay in VMEM.
+# ---------------------------------------------------------------------------
+
+
+def _fused_project_kernel(b_ref, onehot_ref, r_ref, col_ref, num_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init_col():
+        col_ref[...] = jnp.zeros_like(col_ref)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_num():
+        num_ref[...] = jnp.zeros_like(num_ref)
+
+    seg = jnp.dot(
+        b_ref[...], onehot_ref[...], preferred_element_type=jnp.float32
+    ).astype(col_ref.dtype)
+    col_ref[...] += seg
+    num_ref[...] += jnp.sum(seg * r_ref[...], keepdims=True).astype(num_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fused_project(
+    b: jax.Array, onehot: jax.Array, r: jax.Array, *, block: int = DEFAULT_BLOCK
+):
+    """Return ``(col, num) = (B @ e_k, B(:,k)^T r)`` in one HBM pass over B.
+
+    ``onehot`` is the (N, 1) indicator of column k; ``r`` the (N, 1)
+    residual. The numerator accumulates across the whole grid, the column
+    accumulates across the contraction axis only.
+    """
+    mm, nn = b.shape
+    _check(mm, block, "M")
+    _check(nn, block, "N")
+    if onehot.shape != (nn, 1) or r.shape != (mm, 1):
+        raise ValueError(
+            f"onehot must be ({nn},1), r must be ({mm},1); got {onehot.shape}, {r.shape}"
+        )
+    grid = (mm // block, nn // block)
+    return pl.pallas_call(
+        _fused_project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),
+            pl.BlockSpec((block, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm, 1), b.dtype),
+            jax.ShapeDtypeStruct((1, 1), b.dtype),
+        ],
+        interpret=True,
+    )(b, onehot, r)

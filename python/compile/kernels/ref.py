@@ -1,0 +1,136 @@
+"""Pure-jnp oracle for the L1 kernels and the paper's operators.
+
+Everything in here is straight-line jax.numpy — no Pallas — and serves as
+the correctness reference for:
+
+  * the L1 kernels (pytest/hypothesis compare kernel vs ref per-op), and
+  * the L2 chunked models (ref_mp_chunk vs model.mp_chunk), and
+  * the Rust implementation (the runtime_e2e integration test replays the
+    identical activation sequence through artifacts generated from these
+    graphs and compares against the sparse Rust trajectory).
+
+Mathematical setting (paper §II): B = I - alpha*A, y = (1-alpha)*1, and
+the scaled PageRank vector is the unique solution of B x* = y with
+sum(x*) = N (Proposition 1).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# primitive oracles
+# ---------------------------------------------------------------------------
+
+
+def ref_matvec(m, x):
+    """Oracle for kernels.matvec: (M,N) @ (N,1) -> (M,1)."""
+    return m @ x
+
+
+def ref_block_dot(x, y):
+    """Oracle for kernels.block_dot: (N,1)·(N,1) -> (1,1)."""
+    return jnp.sum(x * y).reshape(1, 1)
+
+
+def ref_axpy(a, x, y):
+    """Oracle for kernels.axpy: a*x + y with a (1,1)."""
+    return a[0, 0] * x + y
+
+
+def ref_fused_project(b, onehot, r):
+    """Oracle for kernels.fused_project: (B@e_k, B(:,k)^T r)."""
+    col = b @ onehot
+    num = jnp.sum(col * r).reshape(1, 1)
+    return col, num
+
+
+# ---------------------------------------------------------------------------
+# paper operators (dense form)
+# ---------------------------------------------------------------------------
+
+
+def build_b(a_mat, alpha):
+    """B = I - alpha * A  (paper §II-B)."""
+    n = a_mat.shape[0]
+    return jnp.eye(n, dtype=a_mat.dtype) - alpha * a_mat
+
+
+def column_norms_sq(b_mat):
+    """Precomputed ||B(:,k)||^2 per column (paper Remark 3)."""
+    return jnp.sum(b_mat * b_mat, axis=0)
+
+
+def ref_mp_step(b_mat, bnorm2, x, r, k):
+    """One Algorithm-1 iteration in dense form.
+
+    x' = x + (B(:,k)^T r / ||B(:,k)||^2) e_k        (eq. 7)
+    r' = r - (B(:,k)^T r / ||B(:,k)||^2) B(:,k)     (eq. 8)
+    """
+    col = b_mat[:, k]
+    coef = col @ r / bnorm2[k]
+    x = x.at[k].add(coef)
+    r = r - coef * col
+    return x, r
+
+
+def ref_mp_chunk(b_mat, bnorm2, x, r, ks):
+    """T sequential MP steps; returns (x_T, r_T, ||r_t||^2 trace of len T)."""
+    norms = []
+    for k in ks:
+        x, r = ref_mp_step(b_mat, bnorm2, x, r, int(k))
+        norms.append(jnp.sum(r * r))
+    return x, r, jnp.stack(norms)
+
+
+def ref_jacobi_step(a_mat, x, y, alpha):
+    """x' = alpha*A@x + y — the fixed-point (power-like) iteration for
+    B x = y. With y = (1-alpha)*1 this is the scaled-PageRank centralized
+    iteration; padded coordinates stay inert when their y entries are 0."""
+    return alpha * (a_mat @ x) + y
+
+
+def ref_jacobi_chunk(a_mat, x, y, alpha, t):
+    for _ in range(t):
+        x = ref_jacobi_step(a_mat, x, y, alpha)
+    return x
+
+
+def ref_size_est_step(c_mat, cnorm2, s, k):
+    """One Algorithm-2 iteration: s' = s - (C(k,:) s / ||C(k,:)||^2) C(k,:)^T
+    with C = (I - A)^T (paper eq. 14)."""
+    row = c_mat[k, :]
+    coef = row @ s / cnorm2[k]
+    return s - coef * row
+
+
+def ref_size_est_chunk(c_mat, cnorm2, s, ks):
+    errs = []
+    n = c_mat.shape[0]
+    target = jnp.ones(n, dtype=c_mat.dtype) / n
+    for k in ks:
+        s = ref_size_est_step(c_mat, cnorm2, s, int(k))
+        errs.append(jnp.sum((s - target) ** 2))
+    return s, jnp.stack(errs)
+
+
+def ref_residual(b_mat, x, y):
+    """r = y - B x  (the conserved quantity of eq. 11 is B x_t + r_t = y)."""
+    return y - b_mat @ x
+
+
+def ref_pagerank_exact(a_mat, alpha):
+    """Scaled PageRank by direct solve of (I - alpha A) x = (1-alpha) 1
+    (Proposition 1). Dense; reference only."""
+    n = a_mat.shape[0]
+    b = build_b(a_mat, alpha)
+    y = (1.0 - alpha) * jnp.ones((n,), dtype=a_mat.dtype)
+    return jnp.linalg.solve(b, y)
+
+
+def ref_hyperlink_from_adj(adj):
+    """Column-stochastic hyperlink matrix A from a 0/1 adjacency 'adj'
+    where adj[i, j] = 1 iff page j links to page i (paper §I). Requires no
+    dangling columns."""
+    out_deg = jnp.sum(adj, axis=0)
+    return adj / out_deg[None, :]

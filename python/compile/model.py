@@ -1,0 +1,210 @@
+"""L2 — JAX compute graphs for the paper's iterated operators.
+
+Each public ``*_chunk`` function is a scan of T algorithm steps whose inner
+ops are the L1 Pallas kernels (``kernels.matvec`` / ``block_dot`` / ``axpy``
+/ ``fused_project``). ``python/compile/aot.py`` lowers these once to HLO
+text; the Rust runtime loads and executes them via PJRT. Chunking T steps
+per executable amortizes the per-call PJRT dispatch overhead.
+
+Padding contract (see DESIGN.md §5): all operands are padded to an artifact
+size P ≥ N that is a multiple of the kernel block. The hyperlink matrix A
+is padded block-diagonally with the identity, hence
+
+    B_pad = I - alpha * blockdiag(A, I) = blockdiag(B, (1-alpha) I)
+
+so padded columns are scaled unit vectors, padded residual/state entries
+start at 0 and provably stay 0 for any activation sequence that only
+selects real coordinates (k < N). ``jacobi_chunk`` takes the affine vector
+y as an input (0 on padded coordinates) for the same reason.
+
+Everything is float32: the f64 path lives in the Rust implementation; the
+PJRT path is cross-validated against it at f32 tolerances.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matvec, block_dot, axpy, fused_project, DEFAULT_BLOCK
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# padding helpers (build-time only; the Rust runtime performs the same
+# padding natively — rust/src/runtime/pad.rs mirrors these rules and the
+# python tests pin them down)
+# ---------------------------------------------------------------------------
+
+
+def pad_size(n: int, block: int) -> int:
+    """Smallest multiple of ``block`` that is >= n."""
+    return ((n + block - 1) // block) * block
+
+
+def pad_hyperlink(a_mat: jax.Array, p: int) -> jax.Array:
+    """Pad the (N,N) column-stochastic A to (P,P) block-diagonally with I.
+
+    The padded matrix remains column stochastic; padded coordinates form
+    self-loops that never interact with real ones.
+    """
+    n = a_mat.shape[0]
+    if p < n:
+        raise ValueError(f"pad target {p} < matrix size {n}")
+    out = jnp.zeros((p, p), dtype=a_mat.dtype)
+    out = out.at[:n, :n].set(a_mat)
+    idx = jnp.arange(n, p)
+    return out.at[idx, idx].set(1.0)
+
+
+def pad_vector(v: jax.Array, p: int) -> jax.Array:
+    """Zero-pad an (N,) or (N,1) vector to (P, 1)."""
+    v = v.reshape(-1, 1)
+    n = v.shape[0]
+    return jnp.zeros((p, 1), dtype=v.dtype).at[:n].set(v)
+
+
+def build_b(a_pad: jax.Array, alpha) -> jax.Array:
+    """B = I - alpha A on the padded matrix."""
+    p = a_pad.shape[0]
+    return jnp.eye(p, dtype=a_pad.dtype) - alpha * a_pad
+
+
+def column_norms_sq(b_pad: jax.Array) -> jax.Array:
+    """Per-column ||B(:,k)||^2 as a (P, 1) vector (paper Remark 3)."""
+    return jnp.sum(b_pad * b_pad, axis=0).reshape(-1, 1)
+
+
+def _onehot(k, p: int) -> jax.Array:
+    """(P, 1) float indicator of coordinate k (traced int32 scalar)."""
+    return (jnp.arange(p, dtype=jnp.int32).reshape(p, 1) == k).astype(F32)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — Matching-Pursuit PageRank, T steps per call
+# ---------------------------------------------------------------------------
+
+
+def mp_chunk(b_pad, bnorm2, x, r, ks, *, block: int = DEFAULT_BLOCK):
+    """Run T = len(ks) MP iterations (paper eqs. 7–8) on dense padded B.
+
+    Args:
+      b_pad:  (P, P) padded B = I - alpha A.
+      bnorm2: (P, 1) per-column squared norms.
+      x:      (P, 1) PageRank estimate.
+      r:      (P, 1) residual.
+      ks:     (T,) int32 activation sequence, entries in [0, N).
+
+    Returns (x_T, r_T, rnorm2_trace) with rnorm2_trace of shape (T, 1):
+    ||r_{t+1}||^2 after each step — the quantity of Proposition 2 / Fig. 1.
+    """
+    p = b_pad.shape[0]
+
+    def step(carry, k):
+        x, r, rn2 = carry
+        onehot = _onehot(k, p)
+        col, num = fused_project(b_pad, onehot, r, block=block)
+        denom = block_dot(onehot, bnorm2, block=block)  # = bnorm2[k], gather-free
+        coef = num / denom  # (1, 1)
+        x = axpy(coef, onehot, x, block=block)
+        r = axpy(-coef, col, r, block=block)
+        # Orthogonal projection: ||r'||^2 = ||r||^2 - num^2/||B(:,k)||^2.
+        # Tracking it as a scalar recurrence saves a full O(P) reduction
+        # kernel per step (see EXPERIMENTS.md §Perf).
+        rn2 = rn2 - coef * num
+        return (x, r, rn2), rn2[0]
+
+    rn2_0 = block_dot(r, r, block=block)
+    (x, r, _), trace = jax.lax.scan(step, (x, r, rn2_0), ks)
+    return x, r, trace
+
+
+# ---------------------------------------------------------------------------
+# Centralized baseline — Jacobi / power-like fixed point, T steps per call
+# ---------------------------------------------------------------------------
+
+
+def jacobi_chunk(a_pad, x, y, alpha, t: int, *, block: int = DEFAULT_BLOCK):
+    """x <- alpha * A x + y, iterated t times (t is static).
+
+    With y = (1-alpha) 1 on real coordinates this is the centralized
+    scaled-PageRank iteration (paper eq. 6 fixed point); linear
+    convergence at rate alpha.
+    """
+
+    def step(x, _):
+        ax = matvec(a_pad, x, block=block)
+        return axpy(alpha, ax, y, block=block), None
+
+    x, _ = jax.lax.scan(step, x, None, length=t)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — network size estimation, T steps per call
+# ---------------------------------------------------------------------------
+
+
+def size_chunk(ct_pad, cnorm2, s, target, ks, *, block: int = DEFAULT_BLOCK):
+    """Run T Kaczmarz steps of Algorithm 2 (paper eq. 14).
+
+    We pass C^T (so row operations become column operations and reuse
+    fused_project): with C = (I - A)^T, C^T = I - A and
+    C(k,:) = (C^T)(:,k).
+
+    Args:
+      ct_pad: (P, P) padded C^T = I - A_pad.
+      cnorm2: (P, 1) squared row norms ||C(k,:)||^2.
+      s:      (P, 1) current iterate.
+      target: (P, 1) the true s = 1/N on real coordinates, 0 on padding.
+      ks:     (T,) int32 activation sequence.
+
+    Returns (s_T, err_trace) with err_trace[t] = ||s_{t+1} - target||^2 —
+    the quantity plotted in Fig. 2.
+    """
+    p = ct_pad.shape[0]
+    neg_one = -jnp.ones((1, 1), dtype=F32)
+
+    def step(carry, k):
+        s, err = carry
+        onehot = _onehot(k, p)
+        row, num = fused_project(ct_pad, onehot, s, block=block)
+        denom = block_dot(onehot, cnorm2, block=block)
+        coef = num / denom
+        s = axpy(-coef, row, s, block=block)
+        # ||s' - target||^2 = ||s - target||^2 - num^2/||C(k,:)||^2, using
+        # C(k,:)·target = 0 (rows of C sum to zero against the uniform
+        # target) — an exact scalar recurrence replacing two O(P) kernels.
+        err = err - coef * num
+        return (s, err), err[0]
+
+    diff = axpy(neg_one, target, s, block=block)
+    err0 = block_dot(diff, diff, block=block)
+    (s, _), trace = jax.lax.scan(step, (s, err0), ks)
+    return s, trace
+
+
+# ---------------------------------------------------------------------------
+# Residual evaluation — r = y - B x and its squared norm
+# ---------------------------------------------------------------------------
+
+
+def residual_norm(b_pad, x, y, *, block: int = DEFAULT_BLOCK):
+    """Return (r, ||r||^2) for r = y - B x (conservation check, eq. 11)."""
+    bx = matvec(b_pad, x, block=block)
+    neg_one = -jnp.ones((1, 1), dtype=F32)
+    r = axpy(neg_one, bx, y, block=block)
+    rn2 = block_dot(r, r, block=block)
+    return r, rn2
+
+
+# ---------------------------------------------------------------------------
+# jit entry points (shape-specialized in aot.py)
+# ---------------------------------------------------------------------------
+
+mp_chunk_jit = jax.jit(mp_chunk, static_argnames=("block",))
+jacobi_chunk_jit = jax.jit(jacobi_chunk, static_argnames=("t", "block"))
+size_chunk_jit = jax.jit(size_chunk, static_argnames=("block",))
+residual_norm_jit = jax.jit(residual_norm, static_argnames=("block",))

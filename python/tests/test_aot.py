@@ -1,0 +1,77 @@
+"""AOT pipeline checks: HLO text is produced, is parseable-looking, and the
+manifest agrees with what was lowered. The authoritative load-and-execute
+check lives on the Rust side (rust/tests/runtime_e2e.rs)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+def test_lower_mp_chunk_text():
+    text = aot.lower_mp_chunk(128, 8)
+    assert "ENTRY" in text
+    assert "f32[128,128]" in text  # padded B operand
+    assert "s32[8]" in text  # activation sequence
+
+
+def test_lower_jacobi_chunk_text():
+    text = aot.lower_jacobi_chunk(128, 4)
+    assert "ENTRY" in text
+    assert "f32[128,128]" in text
+
+
+def test_lower_size_chunk_text():
+    text = aot.lower_size_chunk(128, 8)
+    assert "ENTRY" in text
+
+
+def test_lower_residual_norm_text():
+    text = aot.lower_residual_norm(128)
+    assert "ENTRY" in text
+    assert "f32[1,1]" in text  # the norm output
+
+
+def test_manifest_entry_shapes():
+    e = aot.build_manifest_entry("mp_chunk", 128, 16, "x.hlo.txt")
+    names = [o["name"] for o in e["operands"]]
+    assert names == ["b_pad", "bnorm2", "x", "r", "ks"]
+    assert e["operands"][0]["shape"] == [128, 128]
+    assert e["operands"][4]["shape"] == [16]
+    assert e["operands"][4]["dtype"] == "i32"
+    assert [r["name"] for r in e["results"]] == ["x", "r", "trace"]
+
+
+def test_manifest_entry_rejects_unknown():
+    with pytest.raises(ValueError):
+        aot.build_manifest_entry("nope", 128, 1, "x")
+
+
+def test_cli_end_to_end(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--sizes", "128", "--chunk", "4", "--jacobi-chunk", "2"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert res.returncode == 0, res.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert len(manifest["artifacts"]) == 4
+    for entry in manifest["artifacts"]:
+        path = out / entry["file"]
+        assert path.exists()
+        assert "ENTRY" in path.read_text()
+
+
+def test_cli_rejects_unaligned_size(tmp_path):
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path), "--sizes", "100"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True, timeout=120,
+    )
+    assert res.returncode != 0

@@ -1,0 +1,181 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and values; shapes are drawn from a small lattice
+of block multiples (the kernels' documented contract — callers pad), which
+also keeps the jit cache bounded.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matvec, block_dot, axpy, fused_project
+from compile.kernels import ref
+
+BLOCK = 8  # small block for shape diversity; DEFAULT_BLOCK=128 covered below
+SIZES = st.sampled_from([8, 16, 24, 32, 40])
+SEEDS = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+def _arr(rng, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# matvec
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=SIZES, n=SIZES, seed=SEEDS)
+def test_matvec_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    mat = _arr(rng, (m, n))
+    x = _arr(rng, (n, 1))
+    got = matvec(mat, x, block=BLOCK)
+    want = ref.ref_matvec(mat, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matvec_default_block_128():
+    rng = np.random.default_rng(7)
+    mat = _arr(rng, (256, 128))
+    x = _arr(rng, (128, 1))
+    np.testing.assert_allclose(matvec(mat, x), ref.ref_matvec(mat, x), rtol=1e-4, atol=1e-4)
+
+
+def test_matvec_identity():
+    n = 16
+    mat = jnp.eye(n, dtype=jnp.float32)
+    x = jnp.arange(n, dtype=jnp.float32).reshape(n, 1)
+    np.testing.assert_allclose(matvec(mat, x, block=BLOCK), x)
+
+
+def test_matvec_rejects_unpadded():
+    mat = jnp.zeros((12, 16), jnp.float32)
+    x = jnp.zeros((16, 1), jnp.float32)
+    with pytest.raises(ValueError):
+        matvec(mat, x, block=BLOCK)
+
+
+def test_matvec_rejects_bad_vector_shape():
+    mat = jnp.zeros((16, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        matvec(mat, jnp.zeros((16,), jnp.float32), block=BLOCK)
+
+
+def test_matvec_bf16():
+    rng = np.random.default_rng(3)
+    mat = jnp.asarray(rng.standard_normal((16, 16)), jnp.bfloat16)
+    x = jnp.asarray(rng.standard_normal((16, 1)), jnp.bfloat16)
+    got = matvec(mat, x, block=BLOCK).astype(jnp.float32)
+    want = (mat.astype(jnp.float32) @ x.astype(jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# block_dot
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=SIZES, seed=SEEDS)
+def test_block_dot_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (n, 1))
+    y = _arr(rng, (n, 1))
+    got = block_dot(x, y, block=BLOCK)
+    want = ref.ref_block_dot(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_block_dot_orthogonal():
+    x = jnp.zeros((16, 1), jnp.float32).at[0, 0].set(1.0)
+    y = jnp.zeros((16, 1), jnp.float32).at[1, 0].set(1.0)
+    assert float(block_dot(x, y, block=BLOCK)[0, 0]) == 0.0
+
+
+def test_block_dot_self_is_norm_sq():
+    rng = np.random.default_rng(11)
+    x = _arr(rng, (32, 1))
+    got = float(block_dot(x, x, block=BLOCK)[0, 0])
+    assert got == pytest.approx(float(jnp.sum(x * x)), rel=1e-5)
+
+
+def test_block_dot_shape_mismatch():
+    with pytest.raises(ValueError):
+        block_dot(jnp.zeros((16, 1), jnp.float32), jnp.zeros((16, 2), jnp.float32), block=BLOCK)
+
+
+# ---------------------------------------------------------------------------
+# axpy
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=SIZES, seed=SEEDS, a=st.floats(min_value=-10, max_value=10, allow_nan=False))
+def test_axpy_matches_ref(n, seed, a):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (n, 1))
+    y = _arr(rng, (n, 1))
+    aa = jnp.full((1, 1), a, jnp.float32)
+    got = axpy(aa, x, y, block=BLOCK)
+    want = ref.ref_axpy(aa, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_axpy_zero_scalar_is_identity():
+    rng = np.random.default_rng(5)
+    x = _arr(rng, (24, 1))
+    y = _arr(rng, (24, 1))
+    zero = jnp.zeros((1, 1), jnp.float32)
+    np.testing.assert_allclose(axpy(zero, x, y, block=BLOCK), y)
+
+
+def test_axpy_scalar_shape_checked():
+    x = jnp.zeros((16, 1), jnp.float32)
+    with pytest.raises(ValueError):
+        axpy(jnp.zeros((2, 1), jnp.float32), x, x, block=BLOCK)
+
+
+# ---------------------------------------------------------------------------
+# fused_project
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=SIZES, seed=SEEDS)
+def test_fused_project_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    b = _arr(rng, (n, n))
+    r = _arr(rng, (n, 1))
+    k = int(rng.integers(0, n))
+    onehot = jnp.zeros((n, 1), jnp.float32).at[k, 0].set(1.0)
+    col, num = fused_project(b, onehot, r, block=BLOCK)
+    wcol, wnum = ref.ref_fused_project(b, onehot, r)
+    np.testing.assert_allclose(col, wcol, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(num, wnum, rtol=1e-3, atol=1e-3)
+
+
+def test_fused_project_extracts_column():
+    rng = np.random.default_rng(13)
+    n = 16
+    b = _arr(rng, (n, n))
+    r = jnp.zeros((n, 1), jnp.float32)
+    for k in (0, 7, n - 1):
+        onehot = jnp.zeros((n, 1), jnp.float32).at[k, 0].set(1.0)
+        col, num = fused_project(b, onehot, r, block=BLOCK)
+        np.testing.assert_allclose(col[:, 0], b[:, k], rtol=1e-5)
+        assert float(num[0, 0]) == 0.0
+
+
+def test_fused_project_rectangular():
+    rng = np.random.default_rng(17)
+    b = _arr(rng, (24, 16))
+    r = _arr(rng, (24, 1))
+    onehot = jnp.zeros((16, 1), jnp.float32).at[3, 0].set(1.0)
+    col, num = fused_project(b, onehot, r, block=BLOCK)
+    wcol, wnum = ref.ref_fused_project(b, onehot, r)
+    np.testing.assert_allclose(col, wcol, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(num, wnum, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,101 @@
+//! Ablation bench: the DESIGN.md §4 studies (rate tightness, samplers,
+//! parallel batches, greedy-vs-random) as reproducible tables.
+//!
+//! `cargo bench --bench ablation`
+
+use pagerank_mp::harness::ablation;
+use pagerank_mp::harness::report;
+use pagerank_mp::util::bench;
+
+fn main() {
+    let quick = bench::quick_mode();
+    let (n, rounds, steps) = if quick { (40, 5, 8_000) } else { (100, 20, 40_000) };
+    let seed = 2017;
+
+    println!("=== ABL-RATE: measured contraction vs 1-σ²(B̂)/N ===");
+    let t0 = std::time::Instant::now();
+    let rows = ablation::rate_study(n, 0.85, rounds, steps, seed);
+    let tbl: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.family.clone(),
+                format!("{:.6}", r.predicted_bound),
+                format!("{:.6}", r.measured_rate),
+                format!("{:.2}x", r.tightness),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(&["family", "bound", "measured", "tightness"], &tbl)
+    );
+    println!("({:?})\n", t0.elapsed());
+
+    println!("=== ABL-SAMPLER: §IV-3 non-uniform sampling ===");
+    let t0 = std::time::Instant::now();
+    let rows = ablation::sampler_study(n, 0.85, if quick { 5_000 } else { 20_000 }, seed);
+    let tbl: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.sampler.clone(),
+                format!("{:.3e}", r.final_error),
+                r.deferred.to_string(),
+                format!("{:.1}", r.makespan),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(&["sampler", "(1/N)|x-x*|²", "deferred", "makespan"], &tbl)
+    );
+    println!("({:?})\n", t0.elapsed());
+
+    println!("=== ABL-PARALLEL: §IV-1 conflict-free batching ===");
+    let t0 = std::time::Instant::now();
+    let rows = ablation::parallel_study(
+        if quick { 200 } else { 500 },
+        0.85,
+        &[1, 4, 16, 64],
+        &[0.004, 0.02, 0.1],
+        if quick { 100 } else { 500 },
+        seed,
+    );
+    let tbl: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.3}", r.density),
+                r.requested_batch.to_string(),
+                format!("{:.2}", r.effective_batch),
+                format!("{:.3e}", r.final_error),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(&["density", "batch req", "batch eff", "error"], &tbl)
+    );
+    println!("({:?})\n", t0.elapsed());
+
+    println!("=== ABL-GREEDY: §II-B randomization cost/benefit ===");
+    let t0 = std::time::Instant::now();
+    let rows = ablation::greedy_study(n, 0.85, if quick { 5_000 } else { 30_000 }, seed);
+    let tbl: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.algo.clone(),
+                r.iterations.to_string(),
+                format!("{:.3e}", r.final_error),
+                r.total_reads.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(&["algorithm", "iterations", "error", "total reads"], &tbl)
+    );
+    println!("({:?})", t0.elapsed());
+}

@@ -1,0 +1,60 @@
+//! Bench FIG1: regenerates the paper's Figure 1 and times the per-step
+//! cost of each competitor on the §III workload.
+//!
+//! `cargo bench --bench fig1_convergence`
+//! Set PAGERANK_BENCH_QUICK=1 for a reduced-scale smoke run.
+
+use pagerank_mp::algo::common::PageRankSolver;
+use pagerank_mp::algo::ishii_tempo::IshiiTempo;
+use pagerank_mp::algo::mp::MatchingPursuit;
+use pagerank_mp::algo::you_tempo_qiu::YouTempoQiu;
+use pagerank_mp::graph::generators;
+use pagerank_mp::harness::fig1;
+use pagerank_mp::util::bench;
+use pagerank_mp::util::rng::Rng;
+
+fn main() {
+    let quick = bench::quick_mode();
+    println!("=== FIG1: convergence trajectories (paper §III) ===\n");
+    let cfg = if quick {
+        fig1::Fig1Config { n: 40, rounds: 10, steps: 10_000, stride: 200, ..Default::default() }
+    } else {
+        fig1::Fig1Config::default()
+    };
+    let t0 = std::time::Instant::now();
+    let res = fig1::run(&cfg);
+    println!("{}", res.render());
+    for (claim, ok) in res.claims() {
+        println!("[{}] {claim}", if ok { "PASS" } else { "FAIL" });
+    }
+    println!("\nfig1 experiment wall time: {:?}\n", t0.elapsed());
+    pagerank_mp::harness::report::write_file(
+        std::path::Path::new("reports/fig1.csv"),
+        &res.to_csv(),
+    )
+    .expect("write fig1 csv");
+
+    println!("=== per-activation step cost (N=100 paper graph) ===");
+    let g = generators::er_threshold(100, 0.5, 7);
+    let mut b = bench::standard();
+
+    let mut mp = MatchingPursuit::new(&g, 0.85);
+    let mut rng = Rng::seeded(1);
+    b.bench("mp step (Algorithm 1)", Some(1.0), || {
+        std::hint::black_box(mp.step(&mut rng));
+    });
+
+    let mut ytq = YouTempoQiu::new(&g, 0.85);
+    let mut rng = Rng::seeded(2);
+    b.bench("you-tempo-qiu [15] step", Some(1.0), || {
+        std::hint::black_box(ytq.step(&mut rng));
+    });
+
+    let mut it = IshiiTempo::new(&g, 0.85);
+    let mut rng = Rng::seeded(3);
+    b.bench("ishii-tempo [6] step", Some(1.0), || {
+        std::hint::black_box(it.step(&mut rng));
+    });
+
+    println!("\n{}", b.to_csv());
+}

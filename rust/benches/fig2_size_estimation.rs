@@ -1,0 +1,47 @@
+//! Bench FIG2: regenerates the paper's Figure 2 (Algorithm 2 size
+//! estimation, 1000 averaged rounds) and times the estimator step.
+//!
+//! `cargo bench --bench fig2_size_estimation`
+
+use pagerank_mp::algo::size_estimation::SizeEstimator;
+use pagerank_mp::graph::generators;
+use pagerank_mp::harness::fig2;
+use pagerank_mp::util::bench;
+use pagerank_mp::util::rng::Rng;
+
+fn main() {
+    let quick = bench::quick_mode();
+    println!("=== FIG2: network-size estimation (paper Appendix) ===\n");
+    let cfg = if quick {
+        fig2::Fig2Config { n: 40, rounds: 50, steps: 6_000, stride: 100, ..Default::default() }
+    } else {
+        fig2::Fig2Config::default()
+    };
+    let t0 = std::time::Instant::now();
+    let res = fig2::run(&cfg);
+    println!("{}", res.render());
+    for (claim, ok) in res.claims() {
+        println!("[{}] {claim}", if ok { "PASS" } else { "FAIL" });
+    }
+    println!("\nfig2 experiment wall time: {:?}\n", t0.elapsed());
+    pagerank_mp::harness::report::write_file(
+        std::path::Path::new("reports/fig2.csv"),
+        &res.to_csv(),
+    )
+    .expect("write fig2 csv");
+
+    println!("=== Algorithm 2 step cost across topologies ===");
+    let mut b = bench::standard();
+    for (name, g) in [
+        ("er-threshold N=100", generators::er_threshold(100, 0.5, 5)),
+        ("ring N=100", generators::ring(100)),
+        ("star N=100", generators::star(100)),
+    ] {
+        let mut est = SizeEstimator::new(&g).expect("connected");
+        let mut rng = Rng::seeded(9);
+        b.bench(&format!("size-est step, {name}"), Some(1.0), || {
+            std::hint::black_box(est.step(&mut rng));
+        });
+    }
+    println!("\n{}", b.to_csv());
+}

@@ -1,0 +1,90 @@
+//! PERF-RT: PJRT dense-engine latency and the sparse/dense crossover.
+//!
+//! Measures amortized per-activation cost of the AOT-compiled JAX/Pallas
+//! chunks against the sparse f64 Rust implementation — quantifying where
+//! the dense MXU-shaped formulation would pay off on real accelerator
+//! hardware (on CPU-PJRT the interpret-mode kernels are expected to lose;
+//! the DESIGN.md §Hardware-Adaptation note estimates the TPU numbers).
+//!
+//! `cargo bench --bench runtime_pjrt` (requires `make artifacts`)
+
+use pagerank_mp::algo::mp::MatchingPursuit;
+use pagerank_mp::algo::common::PageRankSolver;
+use pagerank_mp::graph::generators;
+use pagerank_mp::runtime::{artifact_dir, Engine, JacobiRunner, MpChunkRunner, SizeChunkRunner};
+use pagerank_mp::util::bench;
+use pagerank_mp::util::rng::Rng;
+
+fn main() {
+    if !artifact_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts` first");
+        return;
+    }
+    let mut engine = Engine::load_default().expect("engine");
+    println!("PJRT platform: {}\n", engine.platform());
+    let mut b = bench::standard();
+
+    for n in [100usize, 200] {
+        let g = generators::er_threshold(n, 0.5, 11);
+
+        let mut runner = MpChunkRunner::new(&mut engine, &g, 0.85).expect("runner");
+        let t = runner.chunk_len();
+        let mut rng = Rng::seeded(12);
+        b.bench(
+            &format!("mp_chunk T={t} (P={}) N={n}", runner.padded_size()),
+            Some(t as f64),
+            || {
+                let ks: Vec<usize> = (0..t).map(|_| rng.below(n)).collect();
+                std::hint::black_box(runner.run_chunk(&mut engine, &ks).expect("chunk"));
+            },
+        );
+
+        let mut jac = JacobiRunner::new(&mut engine, &g, 0.85).expect("runner");
+        let tj = jac.chunk_len();
+        b.bench(&format!("jacobi_chunk T={tj} N={n}"), Some(tj as f64), || {
+            jac.run_chunk(&mut engine).expect("chunk");
+        });
+
+        let mut size = SizeChunkRunner::new(&mut engine, &g).expect("runner");
+        let ts = size.chunk_len();
+        let mut rng = Rng::seeded(13);
+        b.bench(&format!("size_chunk T={ts} N={n}"), Some(ts as f64), || {
+            let ks: Vec<usize> = (0..ts).map(|_| rng.below(n)).collect();
+            std::hint::black_box(size.run_chunk(&mut engine, &ks).expect("chunk"));
+        });
+
+        // sparse reference on identical workload
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut rng = Rng::seeded(14);
+        b.bench(&format!("sparse mp x{t} acts N={n}"), Some(t as f64), || {
+            for _ in 0..t {
+                std::hint::black_box(mp.step(&mut rng));
+            }
+        });
+    }
+
+    // crossover summary
+    println!("\n=== sparse vs dense per-activation summary ===");
+    let rows: Vec<Vec<String>> = b
+        .results()
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                bench::format_ns(r.median_ns()),
+                r.throughput()
+                    .map(|t| format!("{}/s", bench::format_count(t)))
+                    .unwrap_or_default(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        pagerank_mp::harness::report::table(&["case", "median", "steps/s"], &rows)
+    );
+    pagerank_mp::harness::report::write_file(
+        std::path::Path::new("reports/runtime_pjrt.csv"),
+        &b.to_csv(),
+    )
+    .expect("write csv");
+}

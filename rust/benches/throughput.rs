@@ -1,0 +1,112 @@
+//! PERF-L3: activation throughput of the hot paths.
+//!
+//! * matrix-form Algorithm 1 (the in-process production path),
+//! * the distributed coordinator (sequential and async, with latency),
+//! * centralized power-iteration sweeps,
+//! * batch throughput of the parallel extension.
+//!
+//! `cargo bench --bench throughput`
+
+use pagerank_mp::algo::common::PageRankSolver;
+use pagerank_mp::algo::mp::MatchingPursuit;
+use pagerank_mp::algo::parallel_mp::ParallelMatchingPursuit;
+use pagerank_mp::algo::power_iteration::JacobiPowerIteration;
+use pagerank_mp::coordinator::{Coordinator, CoordinatorConfig, Mode, SamplerKind};
+use pagerank_mp::graph::generators;
+use pagerank_mp::network::LatencyModel;
+use pagerank_mp::util::bench;
+use pagerank_mp::util::rng::Rng;
+
+fn main() {
+    let mut b = bench::standard();
+    println!("=== PERF-L3: matrix-form MP activations/s ===");
+    for (name, g) in [
+        ("paper N=100 (dense)", generators::er_threshold(100, 0.5, 1)),
+        ("paper N=1000 (dense)", generators::er_threshold(1000, 0.5, 1)),
+        ("ba N=10000 m=8", generators::barabasi_albert(10_000, 8, 1)),
+        ("er-sparse N=100000 deg~8", generators::erdos_renyi(100_000, 8.0 / 100_000.0, 1)),
+    ] {
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut rng = Rng::seeded(2);
+        let batch = 1024;
+        b.bench(&format!("mp x{batch} acts, {name}"), Some(batch as f64), || {
+            for _ in 0..batch {
+                std::hint::black_box(mp.step(&mut rng));
+            }
+        });
+    }
+
+    println!("\n=== PERF-L3: distributed coordinator activations/s ===");
+    for (name, mode, sampler, latency) in [
+        ("sequential/zero-latency", Mode::Sequential, SamplerKind::Uniform, LatencyModel::Zero),
+        (
+            "sequential/exp-latency",
+            Mode::Sequential,
+            SamplerKind::Uniform,
+            LatencyModel::Exponential { mean: 0.1 },
+        ),
+        (
+            "async/clocks/const-latency",
+            Mode::Async,
+            SamplerKind::ExponentialClocks,
+            LatencyModel::Constant(0.1),
+        ),
+    ] {
+        let g = generators::er_threshold(100, 0.5, 3);
+        let cfg = CoordinatorConfig::default()
+            .with_seed(4)
+            .with_mode(mode)
+            .with_sampler(sampler)
+            .with_latency(latency);
+        let mut coord = Coordinator::new(&g, cfg);
+        let batch = 512u64;
+        b.bench(&format!("coordinator x{batch} acts, {name}"), Some(batch as f64), || {
+            std::hint::black_box(coord.run(batch));
+        });
+    }
+
+    println!("\n=== baseline: centralized power-iteration sweeps ===");
+    for (name, g) in [
+        ("paper N=100", generators::er_threshold(100, 0.5, 5)),
+        ("ba N=10000 m=8", generators::barabasi_albert(10_000, 8, 5)),
+    ] {
+        let mut pi = JacobiPowerIteration::new(&g, 0.85);
+        let m = g.m() as f64;
+        b.bench(&format!("jacobi sweep (m edges), {name}"), Some(m), || {
+            pi.sweep();
+        });
+    }
+
+    println!("\n=== sharded multi-threaded runtime (real parallelism) ===");
+    for shards in [1usize, 2, 4, 8] {
+        let g = generators::erdos_renyi(20_000, 8.0 / 20_000.0, 8);
+        let mut rt = pagerank_mp::coordinator::ShardedRuntime::new(g, 0.85, shards);
+        let mut rng = Rng::seeded(9);
+        let batches = 64;
+        let budget = 64;
+        b.bench(
+            &format!("sharded {shards} shards, {batches}x{budget} batch"),
+            Some((batches * budget) as f64),
+            || {
+                std::hint::black_box(rt.run(batches, budget, &mut rng));
+            },
+        );
+    }
+
+    println!("\n=== parallel extension: batched activations ===");
+    let g = generators::erdos_renyi(10_000, 8.0 / 10_000.0, 6);
+    for batch in [1usize, 8, 32, 128] {
+        let mut pmp = ParallelMatchingPursuit::new(&g, 0.85, batch);
+        let mut rng = Rng::seeded(7);
+        b.bench(&format!("parallel-mp batch={batch} (sparse N=10k)"), Some(batch as f64), || {
+            std::hint::black_box(pmp.step(&mut rng));
+        });
+    }
+
+    println!("\n{}", b.to_csv());
+    pagerank_mp::harness::report::write_file(
+        std::path::Path::new("reports/throughput.csv"),
+        &b.to_csv(),
+    )
+    .expect("write csv");
+}

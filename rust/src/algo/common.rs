@@ -1,0 +1,171 @@
+//! Shared solver interface and trajectory recording.
+//!
+//! Every algorithm (the paper's and the baselines') implements
+//! [`PageRankSolver`], so the Figure-1 harness can run them uniformly:
+//! one `step` = one page activation (the paper's iteration counter `t`),
+//! and [`StepStats`] carries the communication cost of that activation —
+//! the quantity the paper's §II-D analyzes ("the number of 'reads' and
+//! 'writes' is exactly equal to the number of outgoing webpages").
+
+use crate::util::rng::Rng;
+
+/// Communication cost of one activation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StepStats {
+    /// Residual/value reads from other pages.
+    pub reads: usize,
+    /// Residual/value writes to other pages.
+    pub writes: usize,
+    /// Pages activated in this step (1 for sequential algorithms,
+    /// batch size for the parallel extension).
+    pub activated: usize,
+}
+
+impl StepStats {
+    pub fn accumulate(&mut self, other: StepStats) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.activated += other.activated;
+    }
+}
+
+/// Uniform interface over all PageRank iterations.
+pub trait PageRankSolver {
+    /// Number of pages.
+    fn n(&self) -> usize;
+
+    /// Perform one activation/iteration, driven by `rng`.
+    fn step(&mut self, rng: &mut Rng) -> StepStats;
+
+    /// Current PageRank estimate in the paper's *scaled* normalization
+    /// (entries summing to N at the fixed point).
+    fn estimate(&self) -> Vec<f64>;
+
+    /// Short identifier used in reports.
+    fn name(&self) -> &'static str;
+
+    /// Whether `step` needs in-neighbour information — the practical
+    /// limitation (§I) the paper's algorithm avoids.
+    fn requires_in_links(&self) -> bool {
+        false
+    }
+}
+
+/// A recorded error trajectory: `(1/N)‖x_t - x*‖²` sampled every `stride`
+/// activations — exactly Fig. 1's y-axis.
+#[derive(Debug, Clone)]
+pub struct Trajectory {
+    pub name: &'static str,
+    pub stride: usize,
+    pub errors: Vec<f64>,
+    pub total_stats: StepStats,
+}
+
+impl Trajectory {
+    /// Run `solver` for `steps` activations against reference `x_star`,
+    /// recording the scaled squared error every `stride` steps (including
+    /// t=0 before any step).
+    pub fn record<S: PageRankSolver + ?Sized>(
+        solver: &mut S,
+        x_star: &[f64],
+        steps: usize,
+        stride: usize,
+        rng: &mut Rng,
+    ) -> Trajectory {
+        assert_eq!(solver.n(), x_star.len());
+        assert!(stride > 0);
+        let n = solver.n() as f64;
+        let mut errors = Vec::with_capacity(steps / stride + 1);
+        let mut total = StepStats::default();
+        let err = |est: &[f64]| crate::linalg::vector::dist_sq(est, x_star) / n;
+        errors.push(err(&solver.estimate()));
+        for t in 1..=steps {
+            total.accumulate(solver.step(rng));
+            if t % stride == 0 {
+                errors.push(err(&solver.estimate()));
+            }
+        }
+        Trajectory {
+            name: solver.name(),
+            stride,
+            errors,
+            total_stats: total,
+        }
+    }
+
+    /// Final recorded error.
+    pub fn final_error(&self) -> f64 {
+        *self.errors.last().expect("trajectory nonempty")
+    }
+
+    /// Fitted per-*record* decay rate (take the stride-th root for the
+    /// per-activation rate).
+    pub fn decay_rate(&self) -> f64 {
+        crate::util::stats::decay_rate(&self.errors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fake solver that halves a scalar error each step: estimate is
+    /// x* + e_0 * err.
+    struct Halver {
+        x_star: Vec<f64>,
+        err: f64,
+        in_links: bool,
+    }
+
+    impl PageRankSolver for Halver {
+        fn n(&self) -> usize {
+            self.x_star.len()
+        }
+        fn step(&mut self, _rng: &mut Rng) -> StepStats {
+            self.err *= 0.5;
+            StepStats { reads: 2, writes: 1, activated: 1 }
+        }
+        fn estimate(&self) -> Vec<f64> {
+            let mut x = self.x_star.clone();
+            x[0] += self.err;
+            x
+        }
+        fn name(&self) -> &'static str {
+            "halver"
+        }
+        fn requires_in_links(&self) -> bool {
+            self.in_links
+        }
+    }
+
+    #[test]
+    fn trajectory_records_initial_and_strided() {
+        let x_star = vec![1.0; 4];
+        let mut s = Halver { x_star: x_star.clone(), err: 1.0, in_links: false };
+        let mut rng = Rng::seeded(1);
+        let tr = Trajectory::record(&mut s, &x_star, 10, 2, &mut rng);
+        assert_eq!(tr.errors.len(), 6); // t = 0,2,4,6,8,10
+        assert_eq!(tr.errors[0], 0.25); // err=1 -> ||e||²/N = 1/4
+        assert!((tr.errors[1] - 0.25f64.powi(2) * 0.25).abs() < 1e-15); // err 0.25, squared, /N
+        assert_eq!(tr.total_stats.reads, 20);
+        assert_eq!(tr.total_stats.writes, 10);
+        assert_eq!(tr.total_stats.activated, 10);
+    }
+
+    #[test]
+    fn trajectory_decay_rate_matches() {
+        let x_star = vec![0.0; 2];
+        let mut s = Halver { x_star: x_star.clone(), err: 1.0, in_links: false };
+        let mut rng = Rng::seeded(1);
+        let tr = Trajectory::record(&mut s, &x_star, 20, 1, &mut rng);
+        // err halves per step, squared error quarters
+        assert!((tr.decay_rate() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut a = StepStats { reads: 1, writes: 2, activated: 1 };
+        a.accumulate(StepStats { reads: 10, writes: 20, activated: 3 });
+        assert_eq!(a, StepStats { reads: 11, writes: 22, activated: 4 });
+    }
+}

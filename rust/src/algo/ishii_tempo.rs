@@ -1,0 +1,253 @@
+//! Baseline \[6\]: Ishii & Tempo, *Distributed Randomized Algorithms for
+//! the PageRank Computation* (IEEE TAC 2010).
+//!
+//! Structure (as characterized by the paper under reproduction): a
+//! stochastic power iteration `x(t+1) = M_{θ(t)} x(t)` over random
+//! *distributed link matrices*, combined with Polyak (time) averaging —
+//! the average, not the iterate, converges, and only sub-exponentially
+//! (O(1/t) in mean square, cf. \[14\]).
+//!
+//! Our realization re-derives the construction in the *scaled* PageRank
+//! normalization used throughout this repo (entries summing to N rather
+//! than 1), so the trajectories are directly comparable on Fig. 1's axis:
+//!
+//! * when page `i` fires, the link matrix `A_i` moves `x_i` to its
+//!   out-neighbours (`x_j += x_i/N_i`, then `x_i = 0`) and leaves all
+//!   other pages untouched — column-stochastic, realizable with
+//!   out-neighbour writes;
+//! * damping mixes toward the (scaled) teleport `S x = (Σx/N)𝟙`:
+//!   `x ← (1-α̂) A_i x + α̂ (Σx/N) 𝟙`, with
+//!
+//!   `α̂ = (1-α) / (αN + 1 - α)`
+//!
+//!   chosen so that `E[M_θ] x* = x*` for the paper's scaled PageRank
+//!   vector — the derivation: `E[A_θ] = ((N-1)I + A)/N`, then requiring
+//!   the fixed point gives the value above (coefficients verified in
+//!   `expected_update_fixes_x_star`).
+//!
+//! The estimate returned is the running Polyak average
+//! `x̄_t = (1/(t+1)) Σ_{l≤t} x(l)`, initialized (per the paper's Fig. 1)
+//! at the all-one vector.
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+use super::common::{PageRankSolver, StepStats};
+
+/// \[6\]-style distributed randomized power iteration with averaging.
+#[derive(Debug, Clone)]
+pub struct IshiiTempo<'g> {
+    graph: &'g Graph,
+    alpha_hat: f64,
+    /// Raw iterate x(t) (oscillates, does not converge pointwise).
+    x: Vec<f64>,
+    /// Running Polyak average x̄_t (the estimator).
+    avg: Vec<f64>,
+    t: u64,
+}
+
+impl<'g> IshiiTempo<'g> {
+    pub fn new(graph: &'g Graph, alpha: f64) -> Self {
+        let n = graph.n();
+        let nf = n as f64;
+        let alpha_hat = (1.0 - alpha) / (alpha * nf + 1.0 - alpha);
+        IshiiTempo {
+            graph,
+            alpha_hat,
+            x: vec![1.0; n],   // paper Fig. 1: initialized with all-one vector
+            avg: vec![1.0; n], // average includes x(0)
+            t: 0,
+        }
+    }
+
+    /// The derived damping weight α̂.
+    pub fn alpha_hat(&self) -> f64 {
+        self.alpha_hat
+    }
+
+    /// Raw (non-averaged) iterate — exposed for variance studies.
+    pub fn raw_iterate(&self) -> &[f64] {
+        &self.x
+    }
+
+    /// Apply one update with page `i` firing.
+    pub fn step_at(&mut self, i: usize) {
+        let g = self.graph;
+        let n = g.n();
+        // A_i x: page i distributes its mass to its out-neighbours.
+        let deg = g.out_degree(i) as f64;
+        let share = self.x[i] / deg;
+        let xi = self.x[i];
+        self.x[i] = 0.0;
+        for &j in g.out(i) {
+            self.x[j as usize] += share;
+        }
+        let _ = xi;
+        // Damping toward the scaled teleport direction. Σx is invariant
+        // under A_i (column stochastic), and under the full update too.
+        let total: f64 = crate::linalg::vector::sum(&self.x);
+        let tele = self.alpha_hat * total / n as f64;
+        let keep = 1.0 - self.alpha_hat;
+        for v in self.x.iter_mut() {
+            *v = keep * *v + tele;
+        }
+        // Polyak average over x(0..=t+1).
+        self.t += 1;
+        let w = 1.0 / (self.t + 1) as f64;
+        for (a, &v) in self.avg.iter_mut().zip(&self.x) {
+            *a += (v - *a) * w;
+        }
+    }
+}
+
+impl<'g> PageRankSolver for IshiiTempo<'g> {
+    fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    fn step(&mut self, rng: &mut Rng) -> StepStats {
+        let i = rng.below(self.graph.n());
+        let deg = self.graph.out_degree(i);
+        self.step_at(i);
+        // Communication: the firing page pushes to its out-neighbours;
+        // the teleport component is handled by [6] via a broadcast
+        // primitive, which we count as one write per page.
+        StepStats {
+            reads: deg,
+            writes: deg + self.graph.n(),
+            activated: 1,
+        }
+    }
+
+    fn estimate(&self) -> Vec<f64> {
+        self.avg.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "ishii-tempo [6]"
+    }
+
+    fn requires_in_links(&self) -> bool {
+        // The TAC'10 scheme needs pages to combine incoming values (the
+        // paper under reproduction cites this as its practical drawback).
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::linalg::dense::DenseMatrix;
+    use crate::linalg::solve::exact_pagerank;
+    use crate::linalg::vector;
+
+    /// E[M_θ] x* = x*: the α̂ derivation is correct.
+    #[test]
+    fn expected_update_fixes_x_star() {
+        let g = generators::er_threshold(20, 0.5, 51);
+        let n = g.n();
+        let alpha = 0.85;
+        let x_star = exact_pagerank(&g, alpha);
+        // Average the one-step update applied deterministically at every
+        // page (that's N · E[update]).
+        let mut acc = vec![0.0; n];
+        for i in 0..n {
+            let mut it = IshiiTempo::new(&g, alpha);
+            it.x = x_star.clone();
+            it.step_at(i);
+            vector::axpy(1.0, &it.x, &mut acc);
+        }
+        vector::scale(1.0 / n as f64, &mut acc);
+        assert!(
+            vector::dist_inf(&acc, &x_star) < 1e-10,
+            "E[M]x* != x*: {}",
+            vector::dist_inf(&acc, &x_star)
+        );
+    }
+
+    #[test]
+    fn sum_invariant() {
+        let g = generators::er_threshold(30, 0.5, 52);
+        let mut it = IshiiTempo::new(&g, 0.85);
+        let mut rng = Rng::seeded(53);
+        let s0 = vector::sum(it.raw_iterate());
+        for _ in 0..200 {
+            it.step(&mut rng);
+            assert!((vector::sum(it.raw_iterate()) - s0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn average_converges_slowly_toward_x_star() {
+        let g = generators::er_threshold(30, 0.5, 54);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut it = IshiiTempo::new(&g, 0.85);
+        let mut rng = Rng::seeded(55);
+        let e0 = vector::dist_sq(&it.estimate(), &x_star) / 30.0;
+        for _ in 0..30_000 {
+            it.step(&mut rng);
+        }
+        let e1 = vector::dist_sq(&it.estimate(), &x_star) / 30.0;
+        assert!(e1 < 0.5 * e0, "no progress: {e0} -> {e1}");
+        // Sub-exponential: after 30k steps MP would be at ~1e-12·e0; [6]
+        // must still be far from that (this is the paper's whole point).
+        assert!(e1 > 1e-8 * e0, "suspiciously fast for an averaging scheme");
+    }
+
+    #[test]
+    fn raw_iterate_does_not_converge_but_average_does() {
+        let g = generators::er_threshold(25, 0.5, 56);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut it = IshiiTempo::new(&g, 0.85);
+        let mut rng = Rng::seeded(57);
+        for _ in 0..20_000 {
+            it.step(&mut rng);
+        }
+        let raw_err = vector::dist_sq(it.raw_iterate(), &x_star);
+        let avg_err = vector::dist_sq(&it.estimate(), &x_star);
+        assert!(
+            avg_err < 0.2 * raw_err,
+            "averaging must dominate: avg {avg_err} raw {raw_err}"
+        );
+    }
+
+    #[test]
+    fn update_is_affine_as_documented() {
+        // x' = (1-α̂)A_i x + α̂ (Σx/N) 𝟙 — check against a dense
+        // materialization of A_i for one page.
+        let g = generators::star(5);
+        let alpha = 0.85;
+        let mut it = IshiiTempo::new(&g, alpha);
+        let x0: Vec<f64> = (0..5).map(|i| (i + 1) as f64).collect();
+        it.x = x0.clone();
+        it.step_at(0); // hub fires: distributes to 4 leaves
+        let mut ai_x = x0.clone();
+        let share = x0[0] / 4.0;
+        ai_x[0] = 0.0;
+        for j in 1..5 {
+            ai_x[j] += share;
+        }
+        let total: f64 = ai_x.iter().sum();
+        let ah = it.alpha_hat();
+        let want: Vec<f64> = ai_x.iter().map(|&v| (1.0 - ah) * v + ah * total / 5.0).collect();
+        assert!(vector::dist_inf(it.raw_iterate(), &want) < 1e-12);
+    }
+
+    #[test]
+    fn alpha_hat_formula() {
+        let g = generators::ring(10);
+        let it = IshiiTempo::new(&g, 0.85);
+        let want = 0.15 / (0.85 * 10.0 + 0.15);
+        assert!((it.alpha_hat() - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn declares_in_link_requirement() {
+        let g = generators::ring(4);
+        assert!(IshiiTempo::new(&g, 0.85).requires_in_links());
+    }
+
+    #[allow(dead_code)]
+    fn dense_check_helper(_m: &DenseMatrix) {}
+}

@@ -1,0 +1,154 @@
+//! Baseline \[12\]: Lei & Chen, *Distributed Randomized PageRank
+//! Algorithm Based on Stochastic Approximation* (IEEE TAC 2015).
+//!
+//! SA form: when page `i` is activated at global time `t`, it moves its
+//! value toward the local fixed-point target with a diminishing
+//! Robbins–Monro gain:
+//!
+//! `x_i ← x_i + γ_t ( α Σ_{j∈in(i)} x_j/N_j + (1-α) - x_i )`
+//!
+//! with `γ_t = N / (N + t)` (unit initial gain, O(1/t) tail — satisfies
+//! `Σγ = ∞`, `Σγ² < ∞` per page). The gain schedule is what makes SA
+//! robust to update noise but also caps the convergence rate at
+//! sub-exponential O(1/t) (cf. \[14\]) — the behaviour the paper under
+//! reproduction contrasts against. In-neighbour reads are required, as
+//! the paper's §I notes.
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+use super::common::{PageRankSolver, StepStats};
+
+/// \[12\]-style stochastic-approximation iterate.
+#[derive(Debug, Clone)]
+pub struct LeiChen<'g> {
+    graph: &'g Graph,
+    alpha: f64,
+    x: Vec<f64>,
+    t: u64,
+}
+
+impl<'g> LeiChen<'g> {
+    pub fn new(graph: &'g Graph, alpha: f64) -> Self {
+        LeiChen {
+            graph,
+            alpha,
+            x: vec![1.0; graph.n()], // start at the scaled uniform vector
+            t: 0,
+        }
+    }
+
+    /// Robbins–Monro gain at global step t.
+    pub fn gain(&self) -> f64 {
+        let n = self.graph.n() as f64;
+        n / (n + self.t as f64)
+    }
+
+    /// Local fixed-point target for page i: `(Mx)_i` in scaled form.
+    fn local_target(&self, i: usize) -> f64 {
+        let mut s = 0.0;
+        for &j in self.graph.inc(i) {
+            s += self.x[j as usize] / self.graph.out_degree(j as usize) as f64;
+        }
+        self.alpha * s + (1.0 - self.alpha)
+    }
+
+    pub fn step_at(&mut self, i: usize) {
+        let g = self.gain();
+        let target = self.local_target(i);
+        self.x[i] += g * (target - self.x[i]);
+        self.t += 1;
+    }
+}
+
+impl<'g> PageRankSolver for LeiChen<'g> {
+    fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    fn step(&mut self, rng: &mut Rng) -> StepStats {
+        let i = rng.below(self.graph.n());
+        let deg_in = self.graph.in_degree(i);
+        self.step_at(i);
+        StepStats {
+            reads: deg_in,
+            writes: 1,
+            activated: 1,
+        }
+    }
+
+    fn estimate(&self) -> Vec<f64> {
+        self.x.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "lei-chen SA [12]"
+    }
+
+    fn requires_in_links(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::linalg::solve::exact_pagerank;
+    use crate::linalg::vector;
+
+    #[test]
+    fn gain_schedule() {
+        let g = generators::ring(10);
+        let mut lc = LeiChen::new(&g, 0.85);
+        assert_eq!(lc.gain(), 1.0);
+        for _ in 0..10 {
+            lc.step_at(0);
+        }
+        assert!((lc.gain() - 0.5).abs() < 1e-12); // N/(N+t) = 10/20
+    }
+
+    #[test]
+    fn fixed_point_is_stationary() {
+        let g = generators::er_threshold(20, 0.5, 71);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut lc = LeiChen::new(&g, 0.85);
+        lc.x = x_star.clone();
+        for i in 0..20 {
+            lc.step_at(i);
+        }
+        assert!(vector::dist_inf(&lc.x, &x_star) < 1e-10);
+    }
+
+    #[test]
+    fn makes_progress_but_subexponential() {
+        let g = generators::er_threshold(30, 0.5, 72);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut lc = LeiChen::new(&g, 0.85);
+        let mut rng = Rng::seeded(73);
+        let e0 = vector::dist_sq(&lc.estimate(), &x_star) / 30.0;
+        for _ in 0..30_000 {
+            lc.step(&mut rng);
+        }
+        let e1 = vector::dist_sq(&lc.estimate(), &x_star) / 30.0;
+        assert!(e1 < 0.1 * e0, "no progress {e0} -> {e1}");
+        // but far from the exponential floor MP reaches in the same budget
+        assert!(e1 > 1e-10, "SA should not be at machine precision");
+    }
+
+    #[test]
+    fn step_stats() {
+        let g = generators::star(5);
+        let mut lc = LeiChen::new(&g, 0.85);
+        let mut rng = Rng::seeded(74);
+        let st = lc.step(&mut rng);
+        assert_eq!(st.writes, 1);
+        assert_eq!(st.activated, 1);
+    }
+
+    #[test]
+    fn requires_in_links_flag() {
+        let g = generators::ring(3);
+        assert!(LeiChen::new(&g, 0.85).requires_in_links());
+    }
+}

@@ -1,0 +1,36 @@
+//! PageRank algorithms: the paper's contribution, its baselines, and the
+//! §IV future-work extensions.
+//!
+//! | module | algorithm | information used | expected rate |
+//! |--------|-----------|------------------|---------------|
+//! | [`mp`] | **Algorithm 1** — randomized Matching Pursuit | out-links only | exponential (Prop. 2) |
+//! | [`size_estimation`] | **Algorithm 2** — Kaczmarz size estimator | out-links only | exponential (Appendix) |
+//! | [`power_iteration`] | centralized Jacobi/power iteration | global | exponential (rate α), centralized |
+//! | [`ishii_tempo`] | \[6\] randomized power iteration + Polyak averaging | in-links | sub-exponential O(1/t) |
+//! | [`you_tempo_qiu`] | \[15\] randomized incremental (row Kaczmarz) | in-links | exponential |
+//! | [`lei_chen`] | \[12\] stochastic approximation | in-links | sub-exponential |
+//! | [`monte_carlo`] | \[9\] random-walk frequency estimator | out-links | 1/√R Monte-Carlo |
+//! | [`greedy_mp`] | original (non-randomized) best-atom MP | global argmax | exponential, not distributed |
+//! | [`parallel_mp`] | §IV-1 conflict-free parallel activation | out-links | exponential, batched |
+//! | [`dynamic`] | §IV-2 dynamic-network warm restart | out-links | local repair + resume |
+//! | [`stopping`] | §IV-4 ranking certification | `‖r_t‖` + σ(B) | — |
+//!
+//! Non-uniform (residual-weighted) sampling — §IV-3 — lives in
+//! [`crate::coordinator::sampler`] since sampling is a coordinator
+//! concern; `mp::MatchingPursuit::step_at` lets any sampler drive the
+//! same update rule.
+
+pub mod common;
+pub mod dynamic;
+pub mod greedy_mp;
+pub mod ishii_tempo;
+pub mod lei_chen;
+pub mod monte_carlo;
+pub mod mp;
+pub mod parallel_mp;
+pub mod power_iteration;
+pub mod size_estimation;
+pub mod stopping;
+pub mod you_tempo_qiu;
+
+pub use common::{PageRankSolver, StepStats, Trajectory};

@@ -1,0 +1,210 @@
+//! Baseline \[9\]: Das Sarma, Molla, Pandurangan & Upfal, *Fast
+//! distributed PageRank computation* (ICDCN 2013) — Monte-Carlo random
+//! walks.
+//!
+//! The estimator uses the Neumann-series identity behind Proposition 1:
+//! `x* = (1-α) Σ_k α^k A^k 𝟙`, i.e. starting one α-terminated random walk
+//! from every page, `E[visits to i] = x*_i / (1-α)`. With `R` rounds of
+//! walks, `x̂_i = (1-α) · visits_i / R`.
+//!
+//! The paper under reproduction notes the drawback this module measures:
+//! *"the simultaneous runs of a large number of random walks may lead to
+//! the problem of congestion in the network"* — [`CongestionReport`]
+//! records the peak number of walkers resident on a single page per hop.
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+use super::common::{PageRankSolver, StepStats};
+
+/// Congestion metrics for one round of simultaneous walks.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CongestionReport {
+    /// Peak walkers on any single page at any hop.
+    pub peak_page_load: usize,
+    /// Total hops taken (network messages).
+    pub total_hops: usize,
+    /// Number of hops until all walks terminated.
+    pub rounds_to_drain: usize,
+}
+
+/// Monte-Carlo PageRank estimator.
+#[derive(Debug, Clone)]
+pub struct MonteCarlo<'g> {
+    graph: &'g Graph,
+    alpha: f64,
+    visits: Vec<u64>,
+    rounds: u64,
+    last_congestion: CongestionReport,
+}
+
+impl<'g> MonteCarlo<'g> {
+    pub fn new(graph: &'g Graph, alpha: f64) -> Self {
+        MonteCarlo {
+            graph,
+            alpha,
+            visits: vec![0; graph.n()],
+            rounds: 0,
+            last_congestion: CongestionReport::default(),
+        }
+    }
+
+    /// Run one round: a walk starts at *every* page simultaneously (the
+    /// \[9\] scheme); each walk counts its start, then repeatedly moves to
+    /// a uniform out-neighbour with probability α or terminates. All
+    /// walks advance in lockstep so page loads per hop are measurable.
+    pub fn round(&mut self, rng: &mut Rng) -> CongestionReport {
+        let n = self.graph.n();
+        let mut frontier: Vec<u32> = (0..n as u32).collect();
+        let mut report = CongestionReport::default();
+        // Initial placement: one walker everywhere.
+        report.peak_page_load = 1;
+        for &p in &frontier {
+            self.visits[p as usize] += 1;
+        }
+        let mut load = vec![0u32; n];
+        while !frontier.is_empty() {
+            report.rounds_to_drain += 1;
+            let mut next: Vec<u32> = Vec::with_capacity(frontier.len());
+            for &p in &frontier {
+                if rng.bernoulli(self.alpha) {
+                    let out = self.graph.out(p as usize);
+                    let dst = out[rng.below(out.len())];
+                    self.visits[dst as usize] += 1;
+                    report.total_hops += 1;
+                    next.push(dst);
+                }
+            }
+            load.iter_mut().for_each(|v| *v = 0);
+            for &p in &next {
+                load[p as usize] += 1;
+            }
+            let peak = load.iter().copied().max().unwrap_or(0) as usize;
+            report.peak_page_load = report.peak_page_load.max(peak);
+            frontier = next;
+        }
+        self.rounds += 1;
+        self.last_congestion = report.clone();
+        report
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    pub fn last_congestion(&self) -> &CongestionReport {
+        &self.last_congestion
+    }
+}
+
+impl<'g> PageRankSolver for MonteCarlo<'g> {
+    fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    /// One solver step = one full round of walks (so trajectories are
+    /// comparable per unit of communication, use `total_hops`).
+    fn step(&mut self, rng: &mut Rng) -> StepStats {
+        let rep = self.round(rng);
+        StepStats {
+            reads: rep.total_hops,
+            writes: rep.total_hops,
+            activated: self.graph.n(),
+        }
+    }
+
+    /// `x̂ = (1-α) visits / R` (scaled normalization).
+    fn estimate(&self) -> Vec<f64> {
+        if self.rounds == 0 {
+            return vec![0.0; self.graph.n()];
+        }
+        let scale = (1.0 - self.alpha) / self.rounds as f64;
+        self.visits.iter().map(|&v| v as f64 * scale).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "monte-carlo walks [9]"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::linalg::solve::exact_pagerank;
+    use crate::linalg::vector;
+
+    #[test]
+    fn estimator_is_unbiased_ish() {
+        let g = generators::er_threshold(30, 0.5, 81);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut mc = MonteCarlo::new(&g, 0.85);
+        let mut rng = Rng::seeded(82);
+        for _ in 0..3000 {
+            mc.round(&mut rng);
+        }
+        let est = mc.estimate();
+        // Monte-Carlo error ~ 1/sqrt(3000) per entry; generous tolerance.
+        let err = vector::dist_inf(&est, &x_star);
+        assert!(err < 0.15, "err={err}");
+        // mean over pages should be very close to 1 (scaled normalization)
+        let mean = vector::sum(&est) / 30.0;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn convergence_is_sqrt_r() {
+        // Error after 4x the rounds should be ~2x smaller (not 16x):
+        // that's the sub-exponential 1/sqrt(R) signature.
+        let g = generators::er_threshold(25, 0.5, 83);
+        let x_star = exact_pagerank(&g, 0.85);
+        let run = |rounds: usize, seed: u64| {
+            let mut mc = MonteCarlo::new(&g, 0.85);
+            let mut rng = Rng::seeded(seed);
+            for _ in 0..rounds {
+                mc.round(&mut rng);
+            }
+            vector::dist_sq(&mc.estimate(), &x_star) / 25.0
+        };
+        // average over a few seeds to tame noise
+        let e_small: f64 = (0..5).map(|s| run(200, 84 + s)).sum::<f64>() / 5.0;
+        let e_big: f64 = (0..5).map(|s| run(3200, 90 + s)).sum::<f64>() / 5.0;
+        let ratio = e_small / e_big;
+        // 16x rounds -> ~16x smaller squared error (variance scaling);
+        // exponential would give many orders of magnitude.
+        assert!(ratio > 4.0 && ratio < 80.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn congestion_reported() {
+        let g = generators::star(20); // everything funnels through the hub
+        let mut mc = MonteCarlo::new(&g, 0.85);
+        let mut rng = Rng::seeded(85);
+        let rep = mc.round(&mut rng);
+        assert!(rep.peak_page_load > 1, "star hub must congest: {rep:?}");
+        assert!(rep.total_hops > 0);
+        assert_eq!(mc.last_congestion(), &rep);
+    }
+
+    #[test]
+    fn walk_lengths_geometric() {
+        // Expected hops per walk = α/(1-α) ≈ 5.67 at α=0.85.
+        let g = generators::er_threshold(20, 0.5, 86);
+        let mut mc = MonteCarlo::new(&g, 0.85);
+        let mut rng = Rng::seeded(87);
+        let mut hops = 0usize;
+        let rounds = 500;
+        for _ in 0..rounds {
+            hops += mc.round(&mut rng).total_hops;
+        }
+        let per_walk = hops as f64 / (rounds * 20) as f64;
+        assert!((per_walk - 0.85 / 0.15).abs() < 0.3, "per_walk={per_walk}");
+    }
+
+    #[test]
+    fn zero_rounds_estimate_is_zero() {
+        let g = generators::ring(5);
+        let mc = MonteCarlo::new(&g, 0.85);
+        assert_eq!(mc.estimate(), vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,277 @@
+//! **Algorithm 1** — Matching-Pursuit based PageRank (the paper's core
+//! contribution), in its matrix-form (single address space) realization.
+//!
+//! State is exactly what the paper prescribes: two scalars per page
+//! (`x_k`, `r_k`) plus the per-column constants of Remark 3. One `step`:
+//!
+//! 1. draw `k ~ U[0, N)`;
+//! 2. `coef = B(:,k)ᵀ r / ‖B(:,k)‖²` — reads the residuals of `out(k)`;
+//! 3. `x_k += coef` (eq. 7);
+//! 4. `r -= coef · B(:,k)` — writes the residuals of `out(k)` and `k`
+//!    (eq. 8).
+//!
+//! Cost per activation: `N_k` reads + `N_k` writes (§II-D). The squared
+//! residual norm is maintained incrementally: a projection step satisfies
+//! `‖r'‖² = ‖r‖² - coef² ‖B(:,k)‖²`, so no O(N) rescan is needed for
+//! stopping criteria (periodically recomputed to cancel FP drift).
+//!
+//! The message-level (page-agent) realization of the same update lives in
+//! [`crate::coordinator`]; both share this module's arithmetic through
+//! [`crate::linalg::sparse::BColumns`].
+
+use crate::graph::Graph;
+use crate::linalg::sparse::BColumns;
+use crate::util::rng::Rng;
+
+use super::common::{PageRankSolver, StepStats};
+
+/// Matrix-form Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct MatchingPursuit<'g> {
+    graph: &'g Graph,
+    cols: BColumns,
+    /// PageRank estimate x_t (eq. 7).
+    x: Vec<f64>,
+    /// Residual r_t (eq. 8); r_0 = y = (1-α)𝟙.
+    r: Vec<f64>,
+    /// Incrementally maintained ‖r_t‖².
+    rnorm_sq: f64,
+    /// Steps taken.
+    t: u64,
+    /// Recompute ‖r‖² exactly every this many steps (FP-drift control).
+    refresh_every: u64,
+}
+
+impl<'g> MatchingPursuit<'g> {
+    pub fn new(graph: &'g Graph, alpha: f64) -> Self {
+        let n = graph.n();
+        let cols = BColumns::new(graph, alpha);
+        let y = 1.0 - alpha;
+        MatchingPursuit {
+            graph,
+            cols,
+            x: vec![0.0; n],
+            r: vec![y; n],
+            rnorm_sq: y * y * n as f64,
+            t: 0,
+            refresh_every: 1 << 20,
+        }
+    }
+
+    /// Apply the eq. 7/8 update at a *given* page `k` — the primitive that
+    /// uniform, exponential-clock and residual-weighted samplers all
+    /// drive. Returns the projection coefficient.
+    pub fn step_at(&mut self, k: usize) -> f64 {
+        let num = self.cols.col_dot(self.graph, k, &self.r);
+        let coef = num / self.cols.norm_sq(k);
+        self.x[k] += coef;
+        self.cols.sub_scaled_col(self.graph, k, coef, &mut self.r);
+        // Orthogonal projection: ‖r'‖² = ‖r‖² - num²/‖B(:,k)‖².
+        self.rnorm_sq -= coef * num;
+        self.t += 1;
+        if self.t % self.refresh_every == 0 {
+            self.rnorm_sq = crate::linalg::vector::norm2_sq(&self.r);
+        }
+        coef
+    }
+
+    /// Current residual vector (the second scalar per page).
+    pub fn residual(&self) -> &[f64] {
+        &self.r
+    }
+
+    /// Incrementally tracked ‖r_t‖² — drives Prop. 2 style bounds and the
+    /// stopping criterion of [`crate::algo::stopping`].
+    pub fn residual_norm_sq(&self) -> f64 {
+        self.rnorm_sq.max(0.0)
+    }
+
+    /// Number of activations so far.
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.cols.alpha()
+    }
+
+    pub fn graph(&self) -> &Graph {
+        self.graph
+    }
+
+    /// Direct access to the column geometry (shared with the coordinator).
+    pub fn columns(&self) -> &BColumns {
+        &self.cols
+    }
+
+}
+
+impl<'g> PageRankSolver for MatchingPursuit<'g> {
+    fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    fn step(&mut self, rng: &mut Rng) -> StepStats {
+        let k = rng.below(self.graph.n());
+        let deg = self.graph.out_degree(k);
+        self.step_at(k);
+        StepStats {
+            reads: deg,
+            writes: deg,
+            activated: 1,
+        }
+    }
+
+    fn estimate(&self) -> Vec<f64> {
+        self.x.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "mp (Algorithm 1)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::common::Trajectory;
+    use crate::graph::generators;
+    use crate::linalg::dense::DenseMatrix;
+    use crate::linalg::solve::exact_pagerank;
+    use crate::linalg::vector;
+
+    #[test]
+    fn conservation_b_x_plus_r_is_y() {
+        // eq. 11: B x_t + r_t = y throughout the run.
+        let g = generators::er_threshold(50, 0.5, 1);
+        let alpha = 0.85;
+        let mut mp = MatchingPursuit::new(&g, alpha);
+        let mut rng = Rng::seeded(2);
+        let b = DenseMatrix::b_matrix(&g, alpha);
+        for _ in 0..500 {
+            mp.step(&mut rng);
+        }
+        let bx = b.matvec(&mp.estimate());
+        for (i, v) in bx.iter().enumerate() {
+            let lhs = v + mp.residual()[i];
+            assert!((lhs - (1.0 - alpha)).abs() < 1e-10, "page {i}: {lhs}");
+        }
+    }
+
+    #[test]
+    fn residual_norm_incremental_matches_exact() {
+        let g = generators::er_threshold(40, 0.5, 3);
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut rng = Rng::seeded(4);
+        for _ in 0..200 {
+            mp.step(&mut rng);
+        }
+        let exact = vector::norm2_sq(mp.residual());
+        assert!(
+            (mp.residual_norm_sq() - exact).abs() < 1e-10,
+            "incremental {} vs exact {}",
+            mp.residual_norm_sq(),
+            exact
+        );
+    }
+
+    #[test]
+    fn residual_never_increases() {
+        let g = generators::er_threshold(30, 0.5, 5);
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut rng = Rng::seeded(6);
+        let mut prev = mp.residual_norm_sq();
+        for _ in 0..300 {
+            mp.step(&mut rng);
+            let cur = mp.residual_norm_sq();
+            assert!(cur <= prev + 1e-12);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn converges_to_exact_pagerank() {
+        let g = generators::er_threshold(30, 0.5, 7);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut rng = Rng::seeded(8);
+        for _ in 0..60_000 {
+            mp.step(&mut rng);
+        }
+        let err = vector::dist_inf(&mp.estimate(), &x_star);
+        assert!(err < 1e-8, "err={err}");
+    }
+
+    #[test]
+    fn trajectory_decays_exponentially_near_predicted_rate() {
+        let g = generators::er_threshold(30, 0.5, 9);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut rng = Rng::seeded(10);
+        // Average a few rounds for a stable fit.
+        let mut rounds = Vec::new();
+        for round in 0..20 {
+            let mut mp = MatchingPursuit::new(&g, 0.85);
+            let mut r = rng.fork(round);
+            let tr = Trajectory::record(&mut mp, &x_star, 6000, 100, &mut r);
+            rounds.push(tr.errors);
+        }
+        let avg = crate::util::stats::average_trajectories(&rounds);
+        let per_record = crate::util::stats::decay_rate(&avg);
+        let per_step = per_record.powf(1.0 / 100.0);
+        let bound = crate::linalg::spectral::mp_contraction_rate(&g, 0.85);
+        // Measured rate must decay at least as fast as the Prop. 2 bound
+        // (the bound is conservative) and must be genuinely exponential.
+        assert!(per_step < 1.0, "not decaying: {per_step}");
+        assert!(
+            per_step <= bound + 5e-4,
+            "measured {per_step} slower than bound {bound}"
+        );
+    }
+
+    #[test]
+    fn step_stats_count_out_degree() {
+        let g = generators::star(6); // hub degree 5, leaves 1
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        // Deterministically activate the hub then a leaf via step_at.
+        mp.step_at(0);
+        mp.step_at(3);
+        // Now drive via the trait and check the stats match degrees.
+        let mut rng = Rng::seeded(11);
+        let stats = mp.step(&mut rng);
+        assert_eq!(stats.reads, stats.writes);
+        assert!(stats.reads == 1 || stats.reads == 5);
+        assert_eq!(stats.activated, 1);
+    }
+
+    #[test]
+    fn x_sums_toward_n() {
+        // At the fixed point Σx* = N (Def. 2); partial sums approach it.
+        let g = generators::er_threshold(25, 0.5, 12);
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut rng = Rng::seeded(13);
+        for _ in 0..40_000 {
+            mp.step(&mut rng);
+        }
+        let s = vector::sum(&mp.estimate());
+        assert!((s - 25.0).abs() < 1e-6, "sum={s}");
+    }
+
+    #[test]
+    fn zero_alpha_edge_not_allowed_but_small_alpha_works() {
+        let g = generators::ring(8);
+        let mut mp = MatchingPursuit::new(&g, 0.05);
+        let mut rng = Rng::seeded(14);
+        for _ in 0..2000 {
+            mp.step(&mut rng);
+        }
+        let x_star = exact_pagerank(&g, 0.05);
+        assert!(vector::dist_inf(&mp.estimate(), &x_star) < 1e-9);
+    }
+
+    #[test]
+    fn does_not_require_in_links() {
+        let g = generators::ring(4);
+        let mp = MatchingPursuit::new(&g, 0.85);
+        assert!(!mp.requires_in_links());
+    }
+}

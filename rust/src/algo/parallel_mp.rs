@@ -1,0 +1,235 @@
+//! §IV future-work 1 — **parallelization** of Algorithm 1.
+//!
+//! Two projection steps at pages `k` and `k'` commute *exactly* when the
+//! supports of their columns are disjoint: `supp B(:,k) = {k} ∪ out(k)`.
+//! If additionally neither update *reads* what the other *writes* (same
+//! condition), a batch of such pages can be activated simultaneously and
+//! the result equals any sequential ordering of the same activations.
+//!
+//! [`ParallelMatchingPursuit`] samples candidate pages uniformly,
+//! greedily packs a conflict-free subset (first-come-first-kept, so the
+//! marginal distribution of the first accepted page stays uniform), then
+//! applies the batch. The projections touch pairwise-disjoint coordinate
+//! sets, so the sequential application below is semantically identical to
+//! a simultaneous distributed execution — verified against a reversed
+//! ordering in the tests.
+//!
+//! The ablation bench measures effective speedup (activations per batch)
+//! as a function of requested batch size and graph density — dense graphs
+//! (like the paper's N=100, p=0.5 model) admit only tiny batches, sparse
+//! web-like graphs admit large ones; this quantifies the paper's open
+//! question.
+
+use crate::graph::Graph;
+use crate::linalg::sparse::BColumns;
+use crate::util::rng::Rng;
+
+use super::common::{PageRankSolver, StepStats};
+
+/// Batched conflict-free MP.
+#[derive(Debug, Clone)]
+pub struct ParallelMatchingPursuit<'g> {
+    graph: &'g Graph,
+    cols: BColumns,
+    x: Vec<f64>,
+    r: Vec<f64>,
+    batch: usize,
+    /// Scratch marker per page: generation tag to avoid clearing.
+    mark: Vec<u64>,
+    generation: u64,
+    /// Batch-size history (for the ablation's effective-parallelism plot).
+    batch_sizes: Vec<usize>,
+}
+
+impl<'g> ParallelMatchingPursuit<'g> {
+    pub fn new(graph: &'g Graph, alpha: f64, batch: usize) -> Self {
+        assert!(batch >= 1);
+        let n = graph.n();
+        let y = 1.0 - alpha;
+        ParallelMatchingPursuit {
+            cols: BColumns::new(graph, alpha),
+            graph,
+            x: vec![0.0; n],
+            r: vec![y; n],
+            batch,
+            mark: vec![0; n],
+            generation: 0,
+            batch_sizes: Vec::new(),
+        }
+    }
+
+    /// Greedily pack a conflict-free subset from `batch` uniform
+    /// candidates. Returns the accepted pages.
+    pub fn pack_batch(&mut self, rng: &mut Rng) -> Vec<usize> {
+        self.generation += 1;
+        let gen = self.generation;
+        let mut accepted = Vec::with_capacity(self.batch);
+        'cand: for _ in 0..self.batch {
+            let k = rng.below(self.graph.n());
+            // Conflict iff closed neighbourhood intersects an accepted one.
+            if self.mark[k] == gen {
+                continue;
+            }
+            for &j in self.graph.out(k) {
+                if self.mark[j as usize] == gen {
+                    continue 'cand;
+                }
+            }
+            // Accept: mark the closed neighbourhood.
+            self.mark[k] = gen;
+            for &j in self.graph.out(k) {
+                self.mark[j as usize] = gen;
+            }
+            accepted.push(k);
+        }
+        accepted
+    }
+
+    /// Apply a set of *assumed conflict-free* activations.
+    pub fn apply_batch(&mut self, pages: &[usize]) {
+        for &k in pages {
+            let num = self.cols.col_dot(self.graph, k, &self.r);
+            let coef = num / self.cols.norm_sq(k);
+            self.x[k] += coef;
+            self.cols.sub_scaled_col(self.graph, k, coef, &mut self.r);
+        }
+    }
+
+    /// Mean accepted batch size so far (effective parallelism).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    pub fn residual(&self) -> &[f64] {
+        &self.r
+    }
+}
+
+impl<'g> PageRankSolver for ParallelMatchingPursuit<'g> {
+    fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    /// One step = one packed batch (counts as `batch_size` activations).
+    fn step(&mut self, rng: &mut Rng) -> StepStats {
+        let pages = self.pack_batch(rng);
+        let mut stats = StepStats::default();
+        for &k in &pages {
+            let d = self.graph.out_degree(k);
+            stats.reads += d;
+            stats.writes += d;
+        }
+        stats.activated = pages.len();
+        self.batch_sizes.push(pages.len());
+        self.apply_batch(&pages);
+        stats
+    }
+
+    fn estimate(&self) -> Vec<f64> {
+        self.x.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "parallel MP (conflict-free batches)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::mp::MatchingPursuit;
+    use crate::graph::generators;
+    use crate::linalg::solve::exact_pagerank;
+    use crate::linalg::vector;
+
+    #[test]
+    fn packed_batches_are_conflict_free() {
+        let g = generators::erdos_renyi(200, 0.02, 101);
+        let mut pmp = ParallelMatchingPursuit::new(&g, 0.85, 16);
+        let mut rng = Rng::seeded(102);
+        for _ in 0..50 {
+            let batch = pmp.pack_batch(&mut rng);
+            // Closed neighbourhoods pairwise disjoint.
+            let mut seen = std::collections::BTreeSet::new();
+            for &k in &batch {
+                let mut nb: Vec<usize> = g.out(k).iter().map(|&v| v as usize).collect();
+                nb.push(k);
+                nb.sort_unstable();
+                nb.dedup(); // self-loops put k in out(k) too
+                for v in nb {
+                    assert!(seen.insert(v), "conflict at page {v} in batch {batch:?}");
+                }
+            }
+            pmp.apply_batch(&batch);
+        }
+    }
+
+    #[test]
+    fn batch_equals_sequential_on_disjoint_supports() {
+        let g = generators::erdos_renyi(100, 0.02, 103);
+        let mut pmp = ParallelMatchingPursuit::new(&g, 0.85, 8);
+        let mut rng = Rng::seeded(104);
+        let batch = pmp.pack_batch(&mut rng);
+        assert!(batch.len() > 1, "need a real batch for this test");
+        // Sequential reference in a *reversed* order — commutativity.
+        let mut seq = MatchingPursuit::new(&g, 0.85);
+        for &k in batch.iter().rev() {
+            seq.step_at(k);
+        }
+        pmp.apply_batch(&batch);
+        assert!(vector::dist_inf(pmp.residual(), seq.residual()) < 1e-14);
+        assert!(vector::dist_inf(&pmp.estimate(), &seq.estimate()) < 1e-14);
+    }
+
+    #[test]
+    fn dense_graph_packs_tiny_batches() {
+        // Paper's model (p=0.5 dense): conflict everywhere, batches ~1.
+        let g = generators::er_threshold(100, 0.5, 105);
+        let mut pmp = ParallelMatchingPursuit::new(&g, 0.85, 32);
+        let mut rng = Rng::seeded(106);
+        for _ in 0..100 {
+            pmp.step(&mut rng);
+        }
+        assert!(pmp.mean_batch_size() < 3.0, "dense graphs cannot parallelize: {}", pmp.mean_batch_size());
+    }
+
+    #[test]
+    fn sparse_graph_packs_large_batches() {
+        let g = generators::erdos_renyi(500, 0.004, 107);
+        let mut pmp = ParallelMatchingPursuit::new(&g, 0.85, 32);
+        let mut rng = Rng::seeded(108);
+        for _ in 0..100 {
+            pmp.step(&mut rng);
+        }
+        assert!(pmp.mean_batch_size() > 10.0, "sparse graphs parallelize: {}", pmp.mean_batch_size());
+    }
+
+    #[test]
+    fn converges_to_exact() {
+        let g = generators::erdos_renyi(60, 0.08, 109);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut pmp = ParallelMatchingPursuit::new(&g, 0.85, 8);
+        let mut rng = Rng::seeded(110);
+        for _ in 0..40_000 {
+            pmp.step(&mut rng);
+        }
+        assert!(vector::dist_inf(&pmp.estimate(), &x_star) < 1e-7);
+    }
+
+    #[test]
+    fn batch_one_matches_plain_mp() {
+        let g = generators::er_threshold(20, 0.5, 111);
+        let mut pmp = ParallelMatchingPursuit::new(&g, 0.85, 1);
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut r1 = Rng::seeded(7);
+        let mut r2 = Rng::seeded(7);
+        for _ in 0..500 {
+            pmp.step(&mut r1);
+            mp.step(&mut r2);
+        }
+        assert!(vector::dist_inf(&pmp.estimate(), &mp.estimate()) < 1e-14);
+    }
+}

@@ -1,0 +1,258 @@
+//! **Algorithm 2** (Appendix) — distributed network-size estimation.
+//!
+//! Randomized row-projection (Kaczmarz) iteration on `C = (I - A)ᵀ`:
+//! `s_{t+1} = s_t - (C(k,:) s_t / ‖C(k,:)‖²) C(k,:)ᵀ` (eq. 14), started at
+//! `s_0 = e_1`. Because `C(k,:) = (e_k - A(:,k))ᵀ`, each update touches
+//! only page `k` and its out-neighbours — the same communication pattern
+//! as Algorithm 1. The iterate converges to the uniform stationary vector
+//! `s = 𝟙/N`, and each page then estimates `N ≈ 1/s_i`.
+//!
+//! Requires strong connectivity (nullspace of C must be 1-dimensional);
+//! construction fails loudly otherwise via [`SizeEstimationError`].
+
+use crate::graph::scc::is_strongly_connected;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+use super::common::StepStats;
+
+/// Error cases for the estimator.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SizeEstimationError {
+    /// The graph is not strongly connected, so `s` is not unique.
+    NotStronglyConnected,
+    /// Empty graph.
+    Empty,
+}
+
+impl std::fmt::Display for SizeEstimationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SizeEstimationError::NotStronglyConnected => {
+                write!(f, "Algorithm 2 requires a strongly connected graph (Appendix assumption)")
+            }
+            SizeEstimationError::Empty => write!(f, "cannot size-estimate an empty graph"),
+        }
+    }
+}
+
+impl std::error::Error for SizeEstimationError {}
+
+/// Row geometry of `C = (I-A)ᵀ`: per-row squared norms (`‖C(k,:)‖² =
+/// 1 - 2A_kk + 1/N_k`, the α=1 analogue of Remark 3).
+#[derive(Debug, Clone)]
+struct CRows {
+    norms_sq: Vec<f64>,
+    inv_out_deg: Vec<f64>,
+}
+
+impl CRows {
+    fn new(g: &Graph) -> CRows {
+        let n = g.n();
+        let mut norms_sq = Vec::with_capacity(n);
+        let mut inv_out_deg = Vec::with_capacity(n);
+        for k in 0..n {
+            let deg = g.out_degree(k);
+            assert!(deg > 0, "dangling page {k}");
+            let nk = deg as f64;
+            let akk = if g.has_self_loop(k) { 1.0 / nk } else { 0.0 };
+            // ‖e_k - A(:,k)‖² = 1 - 2 A_kk + Σ (1/N_k)² over out(k) = 1 - 2A_kk + 1/N_k
+            norms_sq.push(1.0 - 2.0 * akk + 1.0 / nk);
+            inv_out_deg.push(1.0 / nk);
+        }
+        CRows { norms_sq, inv_out_deg }
+    }
+}
+
+/// Algorithm 2 runner.
+#[derive(Debug, Clone)]
+pub struct SizeEstimator<'g> {
+    graph: &'g Graph,
+    rows: CRows,
+    s: Vec<f64>,
+    t: u64,
+}
+
+impl<'g> SizeEstimator<'g> {
+    /// Create with the paper's initialization `s_0 = [1, 0, …, 0]`.
+    pub fn new(graph: &'g Graph) -> Result<Self, SizeEstimationError> {
+        if graph.n() == 0 {
+            return Err(SizeEstimationError::Empty);
+        }
+        if !is_strongly_connected(graph) {
+            return Err(SizeEstimationError::NotStronglyConnected);
+        }
+        let mut s = vec![0.0; graph.n()];
+        s[0] = 1.0;
+        Ok(SizeEstimator {
+            rows: CRows::new(graph),
+            graph,
+            s,
+            t: 0,
+        })
+    }
+
+    /// One eq. 14 update at a given page `k`; touches `{k} ∪ out(k)` only.
+    pub fn step_at(&mut self, k: usize) -> f64 {
+        let g = self.graph;
+        // C(k,:) s = s_k - (1/N_k) Σ_{j∈out(k)} s_j
+        let mut acc = 0.0;
+        for &j in g.out(k) {
+            acc += self.s[j as usize];
+        }
+        let dot = self.s[k] - self.rows.inv_out_deg[k] * acc;
+        let coef = dot / self.rows.norms_sq[k];
+        // s -= coef * C(k,:)^T: entry k gets -coef·1, out-neighbours get
+        // +coef/N_k (the self-loop position receives both, handled by
+        // doing the neighbour pass first).
+        let w = coef * self.rows.inv_out_deg[k];
+        for &j in g.out(k) {
+            self.s[j as usize] += w;
+        }
+        self.s[k] -= coef;
+        self.t += 1;
+        coef
+    }
+
+    /// One uniformly-sampled update (the algorithm's iteration).
+    pub fn step(&mut self, rng: &mut Rng) -> StepStats {
+        let k = rng.below(self.graph.n());
+        let deg = self.graph.out_degree(k);
+        self.step_at(k);
+        StepStats { reads: deg, writes: deg, activated: 1 }
+    }
+
+    /// Current iterate `s_t`.
+    pub fn s(&self) -> &[f64] {
+        &self.s
+    }
+
+    /// Squared error `‖s_t - 𝟙/N‖²` — Fig. 2's y-axis.
+    pub fn error_sq(&self) -> f64 {
+        let target = 1.0 / self.graph.n() as f64;
+        self.s.iter().map(|v| (v - target) * (v - target)).sum()
+    }
+
+    /// Page `i`'s network-size estimate `1/s_i` (Appendix). Returns
+    /// `None` while the local value is non-positive (early iterations).
+    pub fn estimate_at(&self, i: usize) -> Option<f64> {
+        let v = self.s[i];
+        if v > 0.0 {
+            Some(1.0 / v)
+        } else {
+            None
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::linalg::vector;
+
+    #[test]
+    fn rejects_disconnected() {
+        let mut b = crate::graph::GraphBuilder::new(4)
+            .dangling_policy(crate::graph::DanglingPolicy::SelfLoop);
+        b.add_edge(0, 1).add_edge(1, 0).add_edge(2, 3).add_edge(3, 2);
+        let g = b.build().expect("builds");
+        assert_eq!(
+            SizeEstimator::new(&g).err(),
+            Some(SizeEstimationError::NotStronglyConnected)
+        );
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let g = crate::graph::GraphBuilder::new(0).build().expect("builds");
+        assert_eq!(SizeEstimator::new(&g).err(), Some(SizeEstimationError::Empty));
+    }
+
+    #[test]
+    fn sum_of_entries_conserved() {
+        // 𝟙ᵀ C(k,:)ᵀ = 0 (columns of C sum to zero), so Σ s_t ≡ 1.
+        let g = generators::er_threshold(40, 0.5, 31);
+        let mut est = SizeEstimator::new(&g).expect("connected");
+        let mut rng = Rng::seeded(32);
+        for _ in 0..500 {
+            est.step(&mut rng);
+            let s = vector::sum(est.s());
+            assert!((s - 1.0).abs() < 1e-10, "sum drifted to {s}");
+        }
+    }
+
+    #[test]
+    fn converges_to_uniform() {
+        let g = generators::er_threshold(40, 0.5, 33);
+        let mut est = SizeEstimator::new(&g).expect("connected");
+        let mut rng = Rng::seeded(34);
+        let e0 = est.error_sq();
+        for _ in 0..20_000 {
+            est.step(&mut rng);
+        }
+        let e1 = est.error_sq();
+        assert!(e1 < 1e-12 * e0.max(1.0), "error {e1} from {e0}");
+        // every page's estimate of N is accurate
+        for i in 0..g.n() {
+            let nd = est.estimate_at(i).expect("positive");
+            assert!((nd - 40.0).abs() < 1e-3, "page {i} estimates {nd}");
+        }
+    }
+
+    #[test]
+    fn error_decays_exponentially_in_mean() {
+        let g = generators::er_threshold(30, 0.5, 35);
+        let base = Rng::seeded(36);
+        let mut rounds = Vec::new();
+        for round in 0..30 {
+            let mut est = SizeEstimator::new(&g).expect("connected");
+            let mut rng = base.fork(round);
+            let mut traj = vec![est.error_sq()];
+            for t in 1..=3000usize {
+                est.step(&mut rng);
+                if t % 100 == 0 {
+                    traj.push(est.error_sq());
+                }
+            }
+            rounds.push(traj);
+        }
+        let avg = crate::util::stats::average_trajectories(&rounds);
+        let per_record = crate::util::stats::decay_rate(&avg);
+        assert!(per_record < 0.9, "not exponential: {per_record}");
+        // Appendix bound: per-step rate <= 1 - sigma2(Chat)/N.
+        let bound = crate::linalg::spectral::size_est_contraction_rate(&g);
+        let per_step = per_record.powf(1.0 / 100.0);
+        assert!(per_step <= bound + 5e-3, "measured {per_step} vs bound {bound}");
+    }
+
+    #[test]
+    fn step_touches_only_out_neighbourhood() {
+        let g = generators::ring(10);
+        let mut est = SizeEstimator::new(&g).expect("connected");
+        let before = est.s().to_vec();
+        est.step_at(4); // ring: out(4) = {5}
+        let after = est.s();
+        for i in 0..10 {
+            if i == 4 || i == 5 {
+                continue;
+            }
+            assert_eq!(before[i], after[i], "page {i} must be untouched");
+        }
+    }
+
+    #[test]
+    fn ring_converges() {
+        let g = generators::ring(12);
+        let mut est = SizeEstimator::new(&g).expect("connected");
+        let mut rng = Rng::seeded(37);
+        for _ in 0..20_000 {
+            est.step(&mut rng);
+        }
+        assert!(est.error_sq() < 1e-10);
+    }
+}

@@ -1,0 +1,193 @@
+//! §IV future-work 4 — **stopping criterion**: when can the iteration be
+//! terminated with a *certified* ranking?
+//!
+//! From the Prop. 2 proof, `B(x_t - x*) = r_t`, hence
+//!
+//! `‖x_t - x*‖_∞ ≤ ‖x_t - x*‖₂ ≤ ‖r_t‖₂ / σ_min(B)`
+//!
+//! where `σ_min(B)` is the smallest singular value of the *un-normalized*
+//! `B` (computed once per graph by [`crate::linalg::spectral`]). Every
+//! page's true score then lies in `[x_i - ε, x_i + ε]` with
+//! `ε = ‖r_t‖/σ_min(B)`; a pairwise order `x_i > x_j` is **certified**
+//! when `x_i - x_j > 2ε`. Because Algorithm 1 tracks `‖r_t‖²`
+//! incrementally, the test is O(1) per pair and O(N log N) for a full
+//! certified prefix.
+
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::spectral::singular_values;
+use crate::graph::Graph;
+
+/// Precomputed certification context for a graph.
+#[derive(Debug, Clone)]
+pub struct RankingCertifier {
+    sigma_min_b: f64,
+}
+
+/// Result of a certification query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Certification {
+    /// Uniform error radius ε = ‖r‖/σ_min(B).
+    pub epsilon: f64,
+    /// Length of the certified top prefix of the ranking: the first `k`
+    /// pages in descending score order whose pairwise gaps to the next
+    /// rank all exceed 2ε.
+    pub certified_prefix: usize,
+    /// Ranking by descending estimate (ties by index).
+    pub ranking: Vec<usize>,
+}
+
+impl RankingCertifier {
+    /// O(n³) one-time spectral setup (reference scales).
+    pub fn new(graph: &Graph, alpha: f64) -> Self {
+        let b = DenseMatrix::b_matrix(graph, alpha);
+        let sv = singular_values(&b);
+        RankingCertifier { sigma_min_b: sv[0] }
+    }
+
+    /// Construct from a known σ_min(B) (e.g. cached across runs).
+    pub fn from_sigma(sigma_min_b: f64) -> Self {
+        assert!(sigma_min_b > 0.0);
+        RankingCertifier { sigma_min_b }
+    }
+
+    pub fn sigma_min_b(&self) -> f64 {
+        self.sigma_min_b
+    }
+
+    /// Error radius from the current residual norm (squared).
+    pub fn epsilon(&self, residual_norm_sq: f64) -> f64 {
+        residual_norm_sq.max(0.0).sqrt() / self.sigma_min_b
+    }
+
+    /// Certify the ranking of `x` given `‖r‖²`.
+    pub fn certify(&self, x: &[f64], residual_norm_sq: f64) -> Certification {
+        let eps = self.epsilon(residual_norm_sq);
+        let ranking = crate::util::stats::ranking(x);
+        let mut prefix = 0usize;
+        for w in ranking.windows(2) {
+            let gap = x[w[0]] - x[w[1]];
+            if gap > 2.0 * eps {
+                prefix += 1;
+            } else {
+                break;
+            }
+        }
+        // If every consecutive gap certifies, the whole order is certified.
+        if prefix + 1 == ranking.len() {
+            prefix = ranking.len();
+        }
+        Certification {
+            epsilon: eps,
+            certified_prefix: prefix,
+            ranking,
+        }
+    }
+
+    /// Whether the top-`k` set (as a *set*, the usual search use case) is
+    /// certified: gap between rank k and rank k+1 exceeds 2ε.
+    pub fn top_k_certified(&self, x: &[f64], residual_norm_sq: f64, k: usize) -> bool {
+        assert!(k >= 1 && k <= x.len());
+        if k == x.len() {
+            return true;
+        }
+        let eps = self.epsilon(residual_norm_sq);
+        let ranking = crate::util::stats::ranking(x);
+        x[ranking[k - 1]] - x[ranking[k]] > 2.0 * eps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::common::PageRankSolver;
+    use crate::algo::mp::MatchingPursuit;
+    use crate::graph::generators;
+    use crate::linalg::solve::exact_pagerank;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn epsilon_bound_is_sound() {
+        // ‖x_t - x*‖∞ must actually be ≤ ε along an MP run.
+        let g = generators::er_threshold(25, 0.5, 131);
+        let x_star = exact_pagerank(&g, 0.85);
+        let cert = RankingCertifier::new(&g, 0.85);
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut rng = Rng::seeded(132);
+        for _ in 0..200 {
+            for _ in 0..50 {
+                mp.step(&mut rng);
+            }
+            let eps = cert.epsilon(mp.residual_norm_sq());
+            let true_err = crate::linalg::vector::dist_inf(&mp.estimate(), &x_star);
+            assert!(true_err <= eps + 1e-12, "bound violated: {true_err} > {eps}");
+        }
+    }
+
+    #[test]
+    fn certification_appears_as_residual_shrinks() {
+        let g = generators::er_threshold(25, 0.5, 133);
+        let cert = RankingCertifier::new(&g, 0.85);
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut rng = Rng::seeded(134);
+        let c0 = cert.certify(&mp.estimate(), mp.residual_norm_sq());
+        assert_eq!(c0.certified_prefix, 0, "nothing certifiable at t=0");
+        for _ in 0..80_000 {
+            mp.step(&mut rng);
+        }
+        let c1 = cert.certify(&mp.estimate(), mp.residual_norm_sq());
+        assert!(
+            c1.certified_prefix > 0,
+            "after convergence some prefix must certify (eps={})",
+            c1.epsilon
+        );
+    }
+
+    #[test]
+    fn certified_prefix_is_correct_ranking() {
+        let g = generators::er_threshold(30, 0.5, 135);
+        let x_star = exact_pagerank(&g, 0.85);
+        let cert = RankingCertifier::new(&g, 0.85);
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut rng = Rng::seeded(136);
+        for _ in 0..60_000 {
+            mp.step(&mut rng);
+        }
+        let c = cert.certify(&mp.estimate(), mp.residual_norm_sq());
+        let true_ranking = crate::util::stats::ranking(&x_star);
+        for i in 0..c.certified_prefix.min(c.ranking.len()) {
+            assert_eq!(
+                c.ranking[i], true_ranking[i],
+                "certified rank {i} disagrees with ground truth"
+            );
+        }
+    }
+
+    #[test]
+    fn top_k_certification() {
+        let cert = RankingCertifier::from_sigma(1.0);
+        let x = vec![10.0, 5.0, 4.9, 1.0];
+        // ‖r‖ = 0.01 -> eps = 0.01: gap(1st,2nd)=5 > 0.02 certified;
+        // gap(2nd,3rd)=0.1 > 0.02 too; gap(3rd,4th)=3.9 certified.
+        assert!(cert.top_k_certified(&x, 1e-4, 1));
+        assert!(cert.top_k_certified(&x, 1e-4, 2));
+        // ‖r‖ = 1 -> eps = 1: gap(2nd,3rd)=0.1 < 2 not certified.
+        assert!(!cert.top_k_certified(&x, 1.0, 2));
+        // k = n is trivially certified.
+        assert!(cert.top_k_certified(&x, 1.0, 4));
+    }
+
+    #[test]
+    fn full_ranking_certified_at_tiny_residual() {
+        let cert = RankingCertifier::from_sigma(0.5);
+        let x = vec![3.0, 2.0, 1.0];
+        let c = cert.certify(&x, 1e-20);
+        assert_eq!(c.certified_prefix, 3);
+        assert_eq!(c.ranking, vec![0, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_sigma_rejects_nonpositive() {
+        RankingCertifier::from_sigma(0.0);
+    }
+}

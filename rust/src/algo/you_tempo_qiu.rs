@@ -1,0 +1,210 @@
+//! Baseline \[15\]: You, Tempo & Qiu, *Randomized incremental algorithms
+//! for the PageRank computation* (CDC 2015).
+//!
+//! The randomized-incremental-optimization view of the same linear system
+//! `(I-αA)x = (1-α)𝟙`: minimize `Σ_i (B(i,:)x - y_i)²` by projecting onto
+//! one random *row* constraint per step — randomized Kaczmarz:
+//!
+//! `x ← x + ((y_i - B(i,:)x) / ‖B(i,:)‖²) B(i,:)ᵀ`
+//!
+//! This converges exponentially in expectation (which is why the paper's
+//! Fig. 1 shows \[15\] decaying at a rate similar to MP), **but** row `i`
+//! of `B` is supported on `{i} ∪ in(i)` — the update must read the values
+//! of the pages *linking to* `i` and write back to them, which is exactly
+//! the in-neighbour dependence the paper's §I criticizes. Initialization:
+//! zero vector (paper Fig. 1).
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+use super::common::{PageRankSolver, StepStats};
+
+/// Randomized row-projection (Kaczmarz) solver of \[15\].
+#[derive(Debug, Clone)]
+pub struct YouTempoQiu<'g> {
+    graph: &'g Graph,
+    alpha: f64,
+    /// ‖B(i,:)‖² per row: 1 - 2αA_ii + α² Σ_{j∈in(i)} 1/N_j².
+    row_norms_sq: Vec<f64>,
+    x: Vec<f64>,
+    t: u64,
+}
+
+impl<'g> YouTempoQiu<'g> {
+    pub fn new(graph: &'g Graph, alpha: f64) -> Self {
+        let n = graph.n();
+        let mut row_norms_sq = Vec::with_capacity(n);
+        for i in 0..n {
+            let aii = if graph.has_self_loop(i) {
+                1.0 / graph.out_degree(i) as f64
+            } else {
+                0.0
+            };
+            let mut s = 0.0;
+            for &j in graph.inc(i) {
+                let nj = graph.out_degree(j as usize) as f64;
+                s += 1.0 / (nj * nj);
+            }
+            row_norms_sq.push(1.0 - 2.0 * alpha * aii + alpha * alpha * s);
+        }
+        YouTempoQiu {
+            graph,
+            alpha,
+            row_norms_sq,
+            x: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    /// `B(i,:) x = x_i - α Σ_{j∈in(i)} x_j/N_j` — reads in-neighbours.
+    fn row_dot(&self, i: usize) -> f64 {
+        let mut s = 0.0;
+        for &j in self.graph.inc(i) {
+            s += self.x[j as usize] / self.graph.out_degree(j as usize) as f64;
+        }
+        self.x[i] - self.alpha * s
+    }
+
+    /// One Kaczmarz projection at row `i`.
+    pub fn step_at(&mut self, i: usize) -> f64 {
+        let y_i = 1.0 - self.alpha;
+        let resid = y_i - self.row_dot(i);
+        let coef = resid / self.row_norms_sq[i];
+        // x += coef * B(i,:)^T, supported on {i} ∪ in(i).
+        for &j in self.graph.inc(i) {
+            let nj = self.graph.out_degree(j as usize) as f64;
+            self.x[j as usize] -= coef * self.alpha / nj;
+        }
+        self.x[i] += coef; // diagonal entry 1 (self-loop already folded in
+                           // via in(i) containing i in that case)
+        self.t += 1;
+        coef
+    }
+}
+
+impl<'g> PageRankSolver for YouTempoQiu<'g> {
+    fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    fn step(&mut self, rng: &mut Rng) -> StepStats {
+        let i = rng.below(self.graph.n());
+        let deg_in = self.graph.in_degree(i);
+        self.step_at(i);
+        StepStats {
+            reads: deg_in,
+            writes: deg_in,
+            activated: 1,
+        }
+    }
+
+    fn estimate(&self) -> Vec<f64> {
+        self.x.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "you-tempo-qiu [15]"
+    }
+
+    fn requires_in_links(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::linalg::dense::DenseMatrix;
+    use crate::linalg::solve::exact_pagerank;
+    use crate::linalg::vector;
+
+    #[test]
+    fn row_norms_match_dense() {
+        let g = generators::er_threshold(30, 0.5, 61);
+        let alpha = 0.85;
+        let ytq = YouTempoQiu::new(&g, alpha);
+        let bt = DenseMatrix::b_matrix(&g, alpha).transpose();
+        for i in 0..30 {
+            let want = vector::norm2_sq(bt.col(i)); // row i of B
+            assert!(
+                (ytq.row_norms_sq[i] - want).abs() < 1e-12,
+                "row {i}: {} vs {want}",
+                ytq.row_norms_sq[i]
+            );
+        }
+    }
+
+    #[test]
+    fn step_matches_dense_kaczmarz() {
+        let g = generators::er_threshold(20, 0.5, 62);
+        let alpha = 0.85;
+        let mut ytq = YouTempoQiu::new(&g, alpha);
+        // random-ish starting point
+        let mut rng = Rng::seeded(63);
+        for v in ytq.x.iter_mut() {
+            *v = rng.normal();
+        }
+        let x0 = ytq.x.clone();
+        let b = DenseMatrix::b_matrix(&g, alpha);
+        let bt = b.transpose();
+        let i = 7;
+        ytq.step_at(i);
+        // dense reference
+        let row = bt.col(i);
+        let resid = (1.0 - alpha) - vector::dot(row, &x0);
+        let coef = resid / vector::norm2_sq(row);
+        let mut want = x0;
+        vector::axpy(coef, row, &mut want);
+        assert!(vector::dist_inf(&ytq.x, &want) < 1e-12);
+    }
+
+    #[test]
+    fn converges_to_exact() {
+        let g = generators::er_threshold(30, 0.5, 64);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut ytq = YouTempoQiu::new(&g, 0.85);
+        let mut rng = Rng::seeded(65);
+        for _ in 0..60_000 {
+            ytq.step(&mut rng);
+        }
+        assert!(vector::dist_inf(&ytq.estimate(), &x_star) < 1e-8);
+    }
+
+    #[test]
+    fn exponential_decay_like_mp() {
+        // Fig. 1's observation: [15] decays exponentially at a similar
+        // rate to MP.
+        let g = generators::er_threshold(30, 0.5, 66);
+        let x_star = exact_pagerank(&g, 0.85);
+        let base = Rng::seeded(67);
+        let mut rounds = Vec::new();
+        for round in 0..20 {
+            let mut ytq = YouTempoQiu::new(&g, 0.85);
+            let mut rng = base.fork(round);
+            let tr = crate::algo::common::Trajectory::record(
+                &mut ytq, &x_star, 6000, 100, &mut rng,
+            );
+            rounds.push(tr.errors);
+        }
+        let avg = crate::util::stats::average_trajectories(&rounds);
+        let rate = crate::util::stats::decay_rate(&avg);
+        assert!(rate < 0.95, "should be exponential per record: {rate}");
+    }
+
+    #[test]
+    fn uses_in_links() {
+        let g = generators::ring(5);
+        assert!(YouTempoQiu::new(&g, 0.85).requires_in_links());
+    }
+
+    #[test]
+    fn step_stats_count_in_degree() {
+        let g = generators::star(6);
+        let mut ytq = YouTempoQiu::new(&g, 0.85);
+        let mut rng = Rng::seeded(68);
+        let st = ytq.step(&mut rng);
+        assert!(st.reads == 5 || st.reads == 1); // hub in-deg 5, leaf 1
+        assert_eq!(st.reads, st.writes);
+    }
+}

@@ -1,0 +1,210 @@
+//! Page agents: the two-scalar-per-page state of the paper plus the
+//! local constants of Remark 3.
+//!
+//! Agents are deliberately *dumb*: they hold state and answer the three
+//! §II-D message types; the leader owns scheduling. This mirrors the
+//! paper's storage claim — "it only requires storing two scalar values
+//! per webpage" (`x_k`, `r_k`); `‖B(:,k)‖²` and `1/N_k` are the
+//! preprocessing constants of Remark 3.
+
+use crate::graph::Graph;
+
+/// In-progress activation bookkeeping at the activated page.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PendingActivation {
+    pub activation: u64,
+    /// Sum of out-neighbour residuals received so far.
+    pub acc: f64,
+    pub replies_left: usize,
+}
+
+/// One page's local state.
+#[derive(Debug, Clone)]
+pub struct PageAgent {
+    pub id: u32,
+    /// PageRank estimate x_k (paper scalar #1).
+    pub x: f64,
+    /// Residual r_k (paper scalar #2).
+    pub r: f64,
+    /// Remark-3 constant ‖B(:,k)‖².
+    pub norm_sq: f64,
+    /// 1/N_k.
+    pub inv_deg: f64,
+    /// Whether the page links to itself (A_kk = 1/N_k).
+    pub self_loop: bool,
+    /// Outstanding activation, if this page is currently activated.
+    pub pending: Option<PendingActivation>,
+}
+
+impl PageAgent {
+    /// Build the agent fleet for a graph (the preprocessing step).
+    pub fn fleet(graph: &Graph, alpha: f64) -> Vec<PageAgent> {
+        let cols = crate::linalg::sparse::BColumns::new(graph, alpha);
+        (0..graph.n())
+            .map(|k| PageAgent {
+                id: k as u32,
+                x: 0.0,
+                r: 1.0 - alpha, // r_0 = y = (1-α)𝟙
+                norm_sq: cols.norm_sq(k),
+                inv_deg: 1.0 / graph.out_degree(k) as f64,
+                self_loop: graph.has_self_loop(k),
+                pending: None,
+            })
+            .collect()
+    }
+
+    /// Begin an activation: returns the number of read requests to issue.
+    pub fn begin_activation(&mut self, activation: u64, out_degree: usize) {
+        assert!(self.pending.is_none(), "page {} already active", self.id);
+        self.pending = Some(PendingActivation {
+            activation,
+            acc: 0.0,
+            replies_left: out_degree,
+        });
+    }
+
+    /// Record one read reply; returns `Some(coef)` when all replies are in
+    /// and the projection coefficient is determined (paper eq. 13).
+    pub fn on_read_reply(&mut self, activation: u64, r_value: f64, alpha: f64) -> Option<f64> {
+        let p = self.pending.as_mut().expect("reply without activation");
+        debug_assert_eq!(p.activation, activation, "cross-activation reply");
+        p.acc += r_value;
+        p.replies_left -= 1;
+        if p.replies_left > 0 {
+            return None;
+        }
+        // B(:,k)ᵀ r = r_k - (α/N_k) Σ_{j∈out(k)} r_j  (§II-D numerator)
+        let num = self.r - alpha * self.inv_deg * p.acc;
+        let coef = num / self.norm_sq;
+        Some(coef)
+    }
+
+    /// Apply the local part of the update (eq. 7 for x_k; the diagonal
+    /// component of eq. 8 for r_k) and clear the pending state. The
+    /// out-neighbour deltas are returned for the leader to route; the
+    /// self-loop component is applied locally here.
+    pub fn finish_activation(&mut self, coef: f64, alpha: f64) -> f64 {
+        debug_assert!(self.pending.is_some());
+        self.x += coef;
+        self.r -= coef;
+        if self.self_loop {
+            // page k ∈ out(k): its own WriteDelta short-circuits locally
+            self.r += coef * alpha * self.inv_deg;
+        }
+        self.pending = None;
+        // delta each out-neighbour must apply (j != k handled via messages)
+        coef * alpha * self.inv_deg
+    }
+
+    /// Handle an incoming residual write.
+    pub fn on_write_delta(&mut self, delta: f64) {
+        self.r += delta;
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.pending.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn fleet_initial_state() {
+        let g = generators::er_threshold(20, 0.5, 141);
+        let agents = PageAgent::fleet(&g, 0.85);
+        assert_eq!(agents.len(), 20);
+        for (k, a) in agents.iter().enumerate() {
+            assert_eq!(a.id as usize, k);
+            assert_eq!(a.x, 0.0);
+            assert!((a.r - 0.15).abs() < 1e-15);
+            assert!((a.inv_deg - 1.0 / g.out_degree(k) as f64).abs() < 1e-15);
+            assert!(!a.is_active());
+        }
+    }
+
+    #[test]
+    fn activation_protocol_matches_matrix_form() {
+        // Drive the agent protocol by hand for one activation and compare
+        // against BColumns arithmetic.
+        let g = generators::er_threshold(15, 0.5, 142);
+        let alpha = 0.85;
+        let mut agents = PageAgent::fleet(&g, alpha);
+        let cols = crate::linalg::sparse::BColumns::new(&g, alpha);
+        let r0: Vec<f64> = agents.iter().map(|a| a.r).collect();
+        let k = 3usize;
+        let deg = g.out_degree(k);
+        agents[k].begin_activation(0, deg);
+        assert!(agents[k].is_active());
+        // feed replies
+        let mut coef = None;
+        for &j in g.out(k) {
+            let rv = agents[j as usize].r;
+            coef = agents[k].on_read_reply(0, rv, alpha);
+        }
+        let coef = coef.expect("all replies in");
+        let want_coef = cols.coefficient(&g, k, &r0);
+        assert!((coef - want_coef).abs() < 1e-14);
+        // apply local + remote updates
+        let delta = agents[k].finish_activation(coef, alpha);
+        for &j in g.out(k) {
+            if j as usize != k {
+                agents[j as usize].on_write_delta(delta);
+            }
+        }
+        // compare against the matrix-form residual update
+        let mut want_r = r0.clone();
+        cols.sub_scaled_col(&g, k, want_coef, &mut want_r);
+        for i in 0..g.n() {
+            assert!(
+                (agents[i].r - want_r[i]).abs() < 1e-14,
+                "residual mismatch at page {i}"
+            );
+        }
+        assert!((agents[k].x - want_coef).abs() < 1e-15);
+        assert!(!agents[k].is_active());
+    }
+
+    #[test]
+    fn self_loop_short_circuit() {
+        let mut b = crate::graph::GraphBuilder::new(3)
+            .dangling_policy(crate::graph::DanglingPolicy::SelfLoop);
+        b.add_edge(0, 0).add_edge(0, 1).add_edge(1, 0).add_edge(2, 0);
+        let g = b.build().expect("builds");
+        assert!(g.has_self_loop(0));
+        let alpha = 0.85;
+        let mut agents = PageAgent::fleet(&g, alpha);
+        let cols = crate::linalg::sparse::BColumns::new(&g, alpha);
+        let r0: Vec<f64> = agents.iter().map(|a| a.r).collect();
+        let k = 0usize;
+        agents[k].begin_activation(7, g.out_degree(k));
+        let mut coef = None;
+        for &j in g.out(k) {
+            let rv = agents[j as usize].r;
+            coef = agents[k].on_read_reply(7, rv, alpha);
+        }
+        let coef = coef.expect("done");
+        let delta = agents[k].finish_activation(coef, alpha);
+        for &j in g.out(k) {
+            if j as usize != k {
+                agents[j as usize].on_write_delta(delta);
+            }
+        }
+        let mut want_r = r0;
+        cols.sub_scaled_col(&g, k, cols.coefficient(&g, k, &want_r.clone()), &mut want_r);
+        for i in 0..3 {
+            assert!((agents[i].r - want_r[i]).abs() < 1e-14, "page {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_activation_panics_in_debug() {
+        let g = generators::ring(3);
+        let mut agents = PageAgent::fleet(&g, 0.85);
+        agents[0].begin_activation(0, 1);
+        agents[0].begin_activation(1, 1);
+    }
+}

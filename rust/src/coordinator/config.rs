@@ -1,0 +1,91 @@
+//! Coordinator configuration.
+
+use crate::network::LatencyModel;
+
+use super::sampler::SamplerKind;
+
+/// Execution mode of the distributed runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Activations strictly serialized — Algorithm 1's sequential
+    /// semantics; equivalent to the matrix form.
+    Sequential,
+    /// Independent exponential clocks (paper Remark 1); conflict-free
+    /// overlap allowed, conflicting activations deferred.
+    Async,
+}
+
+/// Full configuration of a coordinator run.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub alpha: f64,
+    pub mode: Mode,
+    pub sampler: SamplerKind,
+    pub latency: LatencyModel,
+    /// RNG seed (sampler and latency streams are forked from it).
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            alpha: crate::DEFAULT_ALPHA,
+            mode: Mode::Sequential,
+            sampler: SamplerKind::Uniform,
+            latency: LatencyModel::Zero,
+            seed: 0,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_mode(mut self, mode: Mode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_sampler(mut self, sampler: SamplerKind) -> Self {
+        self.sampler = sampler;
+        self
+    }
+
+    pub fn with_latency(mut self, latency: LatencyModel) -> Self {
+        self.latency = latency;
+        self
+    }
+
+    pub fn with_alpha(mut self, alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha < 1.0, "alpha in (0,1)");
+        self.alpha = alpha;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain() {
+        let c = CoordinatorConfig::default()
+            .with_seed(9)
+            .with_mode(Mode::Async)
+            .with_alpha(0.7)
+            .with_latency(LatencyModel::Constant(0.5));
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.mode, Mode::Async);
+        assert_eq!(c.alpha, 0.7);
+        assert_eq!(c.latency, LatencyModel::Constant(0.5));
+    }
+
+    #[test]
+    #[should_panic]
+    fn alpha_validated() {
+        CoordinatorConfig::default().with_alpha(1.0);
+    }
+}

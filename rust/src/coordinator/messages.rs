@@ -1,0 +1,61 @@
+//! Protocol messages exchanged between page agents.
+
+/// A routed message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    pub src: u32,
+    pub dst: u32,
+    pub payload: Payload,
+}
+
+/// Message payloads of the §II-D protocol.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Payload {
+    /// Activated page asks an out-neighbour for its residual.
+    ReadRequest { activation: u64 },
+    /// Out-neighbour returns its residual value.
+    ReadReply { activation: u64, r_value: f64 },
+    /// Activated page pushes the residual update `r_dst += delta`.
+    WriteDelta { activation: u64, delta: f64 },
+}
+
+impl Payload {
+    /// Wire-size estimate in bytes (activation id + f64 payload + tag),
+    /// used for traffic accounting.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::ReadRequest { .. } => 9,
+            Payload::ReadReply { .. } | Payload::WriteDelta { .. } => 17,
+        }
+    }
+
+    /// Whether this is a read-path message (request or reply).
+    pub fn is_read(&self) -> bool {
+        matches!(self, Payload::ReadRequest { .. } | Payload::ReadReply { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_sizes() {
+        assert_eq!(Payload::ReadRequest { activation: 1 }.wire_bytes(), 9);
+        assert_eq!(
+            Payload::ReadReply { activation: 1, r_value: 0.5 }.wire_bytes(),
+            17
+        );
+        assert_eq!(
+            Payload::WriteDelta { activation: 1, delta: 0.5 }.wire_bytes(),
+            17
+        );
+    }
+
+    #[test]
+    fn read_classification() {
+        assert!(Payload::ReadRequest { activation: 0 }.is_read());
+        assert!(Payload::ReadReply { activation: 0, r_value: 0.0 }.is_read());
+        assert!(!Payload::WriteDelta { activation: 0, delta: 0.0 }.is_read());
+    }
+}

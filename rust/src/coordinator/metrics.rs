@@ -1,0 +1,146 @@
+//! Run metrics: message counts by type, traffic bytes, deferral and
+//! overlap accounting, and the per-activation read/write verification of
+//! the paper's §II-D cost claim.
+
+use super::messages::Payload;
+
+/// Aggregated run metrics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Metrics {
+    pub activations: u64,
+    pub deferred: u64,
+    pub read_requests: u64,
+    pub read_replies: u64,
+    pub write_deltas: u64,
+    pub bytes: u64,
+    /// Virtual time at which the run finished.
+    pub makespan: f64,
+    /// Max activations simultaneously in flight (async overlap).
+    pub peak_overlap: u32,
+    /// Σ over activations of (activation duration) — for mean latency.
+    pub total_activation_time: f64,
+}
+
+impl Metrics {
+    pub fn on_send(&mut self, payload: &Payload) {
+        self.bytes += payload.wire_bytes() as u64;
+        match payload {
+            Payload::ReadRequest { .. } => self.read_requests += 1,
+            Payload::ReadReply { .. } => self.read_replies += 1,
+            Payload::WriteDelta { .. } => self.write_deltas += 1,
+        }
+    }
+
+    /// Mean messages per activation.
+    pub fn messages_per_activation(&self) -> f64 {
+        if self.activations == 0 {
+            return 0.0;
+        }
+        (self.read_requests + self.read_replies + self.write_deltas) as f64
+            / self.activations as f64
+    }
+
+    /// The §II-D invariant: reads == writes == Σ N_k over activations.
+    /// (ReadRequest and ReadReply both traverse the read path; the paper
+    /// counts logical reads, i.e. request/reply pairs.)
+    pub fn logical_reads(&self) -> u64 {
+        debug_assert_eq!(self.read_requests, self.read_replies);
+        self.read_requests
+    }
+
+    pub fn logical_writes(&self) -> u64 {
+        self.write_deltas
+    }
+
+    /// Mean wall-clock (virtual) duration of an activation.
+    pub fn mean_activation_time(&self) -> f64 {
+        if self.activations == 0 {
+            return 0.0;
+        }
+        self.total_activation_time / self.activations as f64
+    }
+
+    /// Activations per unit virtual time.
+    pub fn activation_throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.activations as f64 / self.makespan
+    }
+
+    /// Human-readable summary block.
+    pub fn render(&self) -> String {
+        format!(
+            "activations      {}\n\
+             deferred         {}\n\
+             reads            {} (requests) / {} (replies)\n\
+             writes           {}\n\
+             traffic          {} bytes\n\
+             msgs/activation  {:.2}\n\
+             makespan         {:.3} vt\n\
+             peak overlap     {}\n\
+             mean act. time   {:.4} vt",
+            self.activations,
+            self.deferred,
+            self.read_requests,
+            self.read_replies,
+            self.write_deltas,
+            self.bytes,
+            self.messages_per_activation(),
+            self.makespan,
+            self.peak_overlap,
+            self.mean_activation_time()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_by_type() {
+        let mut m = Metrics::default();
+        m.on_send(&Payload::ReadRequest { activation: 0 });
+        m.on_send(&Payload::ReadReply { activation: 0, r_value: 1.0 });
+        m.on_send(&Payload::WriteDelta { activation: 0, delta: 0.1 });
+        assert_eq!(m.read_requests, 1);
+        assert_eq!(m.read_replies, 1);
+        assert_eq!(m.write_deltas, 1);
+        assert_eq!(m.bytes, 9 + 17 + 17);
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let m = Metrics {
+            activations: 4,
+            read_requests: 8,
+            read_replies: 8,
+            write_deltas: 8,
+            makespan: 2.0,
+            total_activation_time: 1.0,
+            ..Default::default()
+        };
+        assert_eq!(m.messages_per_activation(), 6.0);
+        assert_eq!(m.logical_reads(), 8);
+        assert_eq!(m.logical_writes(), 8);
+        assert_eq!(m.activation_throughput(), 2.0);
+        assert_eq!(m.mean_activation_time(), 0.25);
+    }
+
+    #[test]
+    fn render_contains_key_fields() {
+        let m = Metrics { activations: 2, ..Default::default() };
+        let txt = m.render();
+        assert!(txt.contains("activations      2"));
+        assert!(txt.contains("msgs/activation"));
+    }
+
+    #[test]
+    fn zero_division_guards() {
+        let m = Metrics::default();
+        assert_eq!(m.messages_per_activation(), 0.0);
+        assert_eq!(m.activation_throughput(), 0.0);
+        assert_eq!(m.mean_activation_time(), 0.0);
+    }
+}

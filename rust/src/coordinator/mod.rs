@@ -1,0 +1,39 @@
+//! The distributed runtime: page agents + activation sampling + the
+//! message protocol of the paper's §II-D, executed over the simulated
+//! network of [`crate::network`].
+//!
+//! One **activation** of page `k` is the full §II-D exchange:
+//!
+//! ```text
+//!   leader clock fires k            (sampler: uniform / exp-clocks / weighted)
+//!   k -> out(k):  ReadRequest        (N_k messages)
+//!   out(k) -> k:  ReadReply(r_j)     (N_k messages)
+//!   k computes    coef = B(:,k)ᵀr / ‖B(:,k)‖²   (local constants only)
+//!   k updates     x_k += coef, r_k -= coef
+//!   k -> out(k):  WriteDelta(+coef·α/N_k)        (N_k messages)
+//! ```
+//!
+//! exactly `N_k` reads and `N_k` writes, which [`metrics`] verifies at
+//! run time. Two execution modes:
+//!
+//! * **Sequential** — activations are serialized (the paper's Algorithm 1
+//!   semantics); with zero latency this is bit-equivalent to the
+//!   matrix-form [`crate::algo::mp::MatchingPursuit`] (tested).
+//! * **Async** — pages fire on independent exponential clocks (Remark 1 /
+//!   \[16\]); overlapping activations with disjoint column supports
+//!   proceed concurrently (they commute — see
+//!   [`crate::algo::parallel_mp`]), conflicting ones are deferred and
+//!   retried, and the achieved overlap is reported.
+
+pub mod agents;
+pub mod config;
+pub mod leader;
+pub mod messages;
+pub mod metrics;
+pub mod sampler;
+pub mod sharded;
+
+pub use config::{CoordinatorConfig, Mode};
+pub use leader::{Coordinator, RunReport};
+pub use sampler::SamplerKind;
+pub use sharded::ShardedRuntime;

@@ -1,0 +1,247 @@
+//! Activation samplers.
+//!
+//! * [`SamplerKind::Uniform`] — the paper's `U[1, N]` draw.
+//! * [`SamplerKind::ExponentialClocks`] — Remark 1 / \[16\]: every page
+//!   carries an independent rate-1 exponential clock; the sequence of
+//!   firing pages is i.i.d. uniform (tested), but firing *times* are
+//!   physical, enabling the async overlap analysis.
+//! * [`SamplerKind::ResidualWeighted`] — §IV future-work 3: sample page
+//!   `k` proportionally to `r_k²` (an idealized importance sampler; a
+//!   real deployment would gossip weight summaries). Implemented with a
+//!   Fenwick tree for O(log N) updates/draws.
+
+use crate::network::events::EventQueue;
+use crate::util::rng::Rng;
+
+/// Which sampling strategy the coordinator uses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplerKind {
+    Uniform,
+    ExponentialClocks,
+    /// Weight each page by `max(r_k², floor)`; `floor > 0` keeps the
+    /// chain irreducible (every page retains positive probability).
+    ResidualWeighted { floor: f64 },
+}
+
+/// Fenwick (binary indexed) tree over non-negative weights, supporting
+/// point updates and sampling proportional to weight in O(log N).
+#[derive(Debug, Clone)]
+pub struct WeightTree {
+    tree: Vec<f64>,
+    weights: Vec<f64>,
+}
+
+impl WeightTree {
+    pub fn new(weights: &[f64]) -> WeightTree {
+        let n = weights.len();
+        let mut t = WeightTree {
+            tree: vec![0.0; n + 1],
+            weights: vec![0.0; n],
+        };
+        for (i, &w) in weights.iter().enumerate() {
+            t.update(i, w);
+        }
+        t
+    }
+
+    pub fn total(&self) -> f64 {
+        self.prefix_sum(self.weights.len())
+    }
+
+    /// Sum of weights `[0, end)`.
+    fn prefix_sum(&self, end: usize) -> f64 {
+        let mut i = end;
+        let mut s = 0.0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+
+    /// Set weight of index `i`.
+    pub fn update(&mut self, i: usize, w: f64) {
+        assert!(w >= 0.0, "negative weight");
+        let delta = w - self.weights[i];
+        self.weights[i] = w;
+        let mut j = i + 1;
+        while j < self.tree.len() {
+            self.tree[j] += delta;
+            j += j & j.wrapping_neg();
+        }
+    }
+
+    pub fn weight(&self, i: usize) -> f64 {
+        self.weights[i]
+    }
+
+    /// Sample an index proportional to weight.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let total = self.total();
+        assert!(total > 0.0, "cannot sample from zero mass");
+        let mut target = rng.uniform() * total;
+        // Descend the implicit Fenwick structure.
+        let mut pos = 0usize;
+        let mut mask = self.tree.len().next_power_of_two() >> 1;
+        while mask > 0 {
+            let next = pos + mask;
+            if next < self.tree.len() && self.tree[next] < target {
+                target -= self.tree[next];
+                pos = next;
+            }
+            mask >>= 1;
+        }
+        pos.min(self.weights.len() - 1)
+    }
+}
+
+/// A sampler instance: produces `(fire_time, page)` pairs.
+#[derive(Debug)]
+pub enum Sampler {
+    Uniform {
+        n: usize,
+    },
+    ExponentialClocks {
+        clocks: EventQueue<usize>,
+    },
+    ResidualWeighted {
+        tree: WeightTree,
+        floor: f64,
+    },
+}
+
+impl Sampler {
+    /// Build; `initial_weights` seeds the residual-weighted tree (use
+    /// `|r_0|² = (1-α)²` per page).
+    pub fn new(kind: SamplerKind, n: usize, rng: &mut Rng) -> Sampler {
+        match kind {
+            SamplerKind::Uniform => Sampler::Uniform { n },
+            SamplerKind::ExponentialClocks => {
+                let mut clocks = EventQueue::new();
+                for k in 0..n {
+                    let t = rng.exponential(1.0);
+                    clocks.schedule(t, k);
+                }
+                Sampler::ExponentialClocks { clocks }
+            }
+            SamplerKind::ResidualWeighted { floor } => Sampler::ResidualWeighted {
+                tree: WeightTree::new(&vec![1.0; n]),
+                floor,
+            },
+        }
+    }
+
+    /// Next activation: `(earliest allowed fire time, page)`. For
+    /// Uniform/ResidualWeighted the fire time is `now` (the leader
+    /// serializes or paces them); for clocks it is the clock's fire time.
+    pub fn next(&mut self, now: f64, rng: &mut Rng) -> (f64, usize) {
+        match self {
+            Sampler::Uniform { n } => (now, rng.below(*n)),
+            Sampler::ExponentialClocks { clocks } => {
+                let ev = clocks.pop().expect("clocks never drain");
+                let page = ev.event;
+                let t = ev.time;
+                // re-arm this page's clock
+                let dt = rng.exponential(1.0);
+                clocks.schedule(t + dt, page);
+                (t.max(now), page)
+            }
+            Sampler::ResidualWeighted { tree, .. } => (now, tree.sample(rng)),
+        }
+    }
+
+    /// Inform the sampler that page `k`'s residual changed.
+    pub fn on_residual(&mut self, k: usize, r: f64) {
+        if let Sampler::ResidualWeighted { tree, floor } = self {
+            tree.update(k, (r * r).max(*floor));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_tree_prefix_and_total() {
+        let t = WeightTree::new(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.total(), 10.0);
+        assert_eq!(t.prefix_sum(2), 3.0);
+        assert_eq!(t.weight(2), 3.0);
+    }
+
+    #[test]
+    fn weight_tree_update() {
+        let mut t = WeightTree::new(&[1.0, 1.0, 1.0]);
+        t.update(1, 5.0);
+        assert_eq!(t.total(), 7.0);
+        assert_eq!(t.weight(1), 5.0);
+    }
+
+    #[test]
+    fn weight_tree_sampling_proportional() {
+        let t = WeightTree::new(&[1.0, 0.0, 3.0, 6.0]);
+        let mut rng = Rng::seeded(151);
+        let mut counts = [0usize; 4];
+        let draws = 100_000;
+        for _ in 0..draws {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let f3 = counts[3] as f64 / draws as f64;
+        assert!((f3 - 0.6).abs() < 0.01, "f3={f3}");
+        let f0 = counts[0] as f64 / draws as f64;
+        assert!((f0 - 0.1).abs() < 0.01, "f0={f0}");
+    }
+
+    #[test]
+    fn uniform_sampler_is_uniform() {
+        let mut rng = Rng::seeded(152);
+        let mut s = Sampler::new(SamplerKind::Uniform, 5, &mut rng);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            let (_, k) = s.next(0.0, &mut rng);
+            counts[k] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn exponential_clocks_marginal_is_uniform() {
+        // Remark 1: the firing-page sequence is i.i.d. U[1,N].
+        let mut rng = Rng::seeded(153);
+        let mut s = Sampler::new(SamplerKind::ExponentialClocks, 4, &mut rng);
+        let mut counts = [0usize; 4];
+        let mut last_t = 0.0;
+        for _ in 0..40_000 {
+            let (t, k) = s.next(last_t, &mut rng);
+            assert!(t >= last_t);
+            last_t = t;
+            counts[k] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+        // inter-activation times average 1/N (superposition of N rate-1
+        // Poisson processes is rate N)
+        assert!((last_t / 40_000.0 - 0.25).abs() < 0.01, "mean gap {}", last_t / 40_000.0);
+    }
+
+    #[test]
+    fn residual_weighted_follows_updates() {
+        let mut rng = Rng::seeded(154);
+        let mut s = Sampler::new(SamplerKind::ResidualWeighted { floor: 1e-12 }, 3, &mut rng);
+        // Concentrate all residual mass on page 2.
+        s.on_residual(0, 0.0);
+        s.on_residual(1, 0.0);
+        s.on_residual(2, 10.0);
+        let mut counts = [0usize; 3];
+        for _ in 0..1000 {
+            let (_, k) = s.next(0.0, &mut rng);
+            counts[k] += 1;
+        }
+        assert!(counts[2] > 990, "{counts:?}");
+    }
+}

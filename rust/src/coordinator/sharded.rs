@@ -1,0 +1,345 @@
+//! Sharded multi-threaded runtime — a *real* parallel deployment of the
+//! paper's algorithm (the §IV-1 extension executed on OS threads), as
+//! opposed to the virtual-time simulator in [`super::leader`].
+//!
+//! Correctness argument (same as [`crate::algo::parallel_mp`]): an
+//! activation of page `k` reads and writes only `supp B(:,k) = {k} ∪
+//! out(k)`. The leader packs batches whose closed neighbourhoods are
+//! pairwise disjoint, so the activations of one batch touch disjoint
+//! memory and can run on worker threads with **no ordering between
+//! them** — the result equals any sequential execution of the same
+//! multiset. Residuals and estimates live in shared `AtomicU64` cells
+//! (f64 bit-cast, relaxed ordering): within a batch every cell is touched
+//! by at most one worker, and the per-batch channel round-trip provides
+//! the inter-batch happens-before edge.
+//!
+//! Topology: one leader (sampling + packing + dispatch) and `W` persistent
+//! workers connected by mpsc channels; each activation is routed to the
+//! worker owning page `k` (`k % W` — the shard map).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::graph::Graph;
+use crate::linalg::sparse::BColumns;
+use crate::util::rng::Rng;
+
+/// Shared per-page state: f64 stored as bits in atomics. Disjointness of
+/// batch supports means `Relaxed` suffices within a batch; the channel
+/// synchronization between batches publishes all writes.
+struct SharedState {
+    x: Vec<AtomicU64>,
+    r: Vec<AtomicU64>,
+}
+
+impl SharedState {
+    fn new(n: usize, y: f64) -> SharedState {
+        SharedState {
+            x: (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect(),
+            r: (0..n).map(|_| AtomicU64::new(y.to_bits())).collect(),
+        }
+    }
+
+    #[inline]
+    fn load_r(&self, i: usize) -> f64 {
+        f64::from_bits(self.r[i].load(Ordering::Relaxed))
+    }
+
+    #[inline]
+    fn store_r(&self, i: usize, v: f64) {
+        self.r[i].store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn load_x(&self, i: usize) -> f64 {
+        f64::from_bits(self.x[i].load(Ordering::Relaxed))
+    }
+
+    #[inline]
+    fn store_x(&self, i: usize, v: f64) {
+        self.x[i].store(v.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// One §II-D activation against the shared state. Only touches
+/// `{k} ∪ out(k)` — the packing invariant makes this race-free.
+fn activate(graph: &Graph, cols: &BColumns, state: &SharedState, k: usize, alpha: f64) {
+    // numerator: r_k - (α/N_k) Σ_{j∈out(k)} r_j
+    let mut acc = 0.0;
+    for &j in graph.out(k) {
+        acc += state.load_r(j as usize);
+    }
+    let deg = graph.out_degree(k) as f64;
+    let num = state.load_r(k) - alpha / deg * acc;
+    let coef = num / cols.norm_sq(k);
+    state.store_x(k, state.load_x(k) + coef);
+    // residual update: out-neighbours += coef·α/N_k, diagonal -= coef
+    let w = coef * alpha / deg;
+    for &j in graph.out(k) {
+        let j = j as usize;
+        state.store_r(j, state.load_r(j) + w);
+    }
+    state.store_r(k, state.load_r(k) - coef);
+}
+
+enum Job {
+    /// Pages to activate (all owned by this worker, supports disjoint from
+    /// every other in-flight job).
+    Batch(Vec<u32>),
+    Shutdown,
+}
+
+/// The sharded runtime handle.
+pub struct ShardedRuntime {
+    graph: Arc<Graph>,
+    state: Arc<SharedState>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    to_workers: Vec<Sender<Job>>,
+    done_rx: Receiver<usize>,
+    shards: usize,
+    /// Scratch: generation-tagged marks for conflict-free packing.
+    mark: Vec<u64>,
+    generation: u64,
+    /// Total activations applied.
+    activations: u64,
+    /// Candidates dropped due to conflicts (batch packing).
+    conflicts: u64,
+}
+
+impl ShardedRuntime {
+    /// Spin up `shards` worker threads for the graph.
+    pub fn new(graph: Graph, alpha: f64, shards: usize) -> ShardedRuntime {
+        assert!(shards >= 1);
+        let n = graph.n();
+        let graph = Arc::new(graph);
+        let cols = Arc::new(BColumns::new(&graph, alpha));
+        let state = Arc::new(SharedState::new(n, 1.0 - alpha));
+        let (done_tx, done_rx) = channel::<usize>();
+        let mut workers = Vec::with_capacity(shards);
+        let mut to_workers = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = channel::<Job>();
+            to_workers.push(tx);
+            let graph = Arc::clone(&graph);
+            let cols = Arc::clone(&cols);
+            let state = Arc::clone(&state);
+            let done = done_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Batch(pages) => {
+                            let count = pages.len();
+                            for k in pages {
+                                activate(&graph, &cols, &state, k as usize, alpha);
+                            }
+                            if done.send(count).is_err() {
+                                return;
+                            }
+                        }
+                        Job::Shutdown => return,
+                    }
+                }
+            }));
+        }
+        ShardedRuntime {
+            mark: vec![0; n],
+            generation: 0,
+            graph,
+            state,
+            workers,
+            to_workers,
+            done_rx,
+            shards,
+            activations: 0,
+            conflicts: 0,
+        }
+    }
+
+    /// Pack a conflict-free batch of up to `budget` uniform candidates
+    /// (first-come-first-kept; rejected candidates are counted, preserving
+    /// the thinned-uniform activation law of the async coordinator).
+    fn pack(&mut self, budget: usize, rng: &mut Rng) -> Vec<u32> {
+        self.generation += 1;
+        let gen = self.generation;
+        let mut accepted = Vec::with_capacity(budget);
+        'cand: for _ in 0..budget {
+            let k = rng.below(self.graph.n());
+            if self.mark[k] == gen {
+                self.conflicts += 1;
+                continue;
+            }
+            for &j in self.graph.out(k) {
+                if self.mark[j as usize] == gen {
+                    self.conflicts += 1;
+                    continue 'cand;
+                }
+            }
+            self.mark[k] = gen;
+            for &j in self.graph.out(k) {
+                self.mark[j as usize] = gen;
+            }
+            accepted.push(k as u32);
+        }
+        accepted
+    }
+
+    /// Run `batches` super-steps of up to `batch_budget` candidate
+    /// activations each. Returns activations applied.
+    pub fn run(&mut self, batches: usize, batch_budget: usize, rng: &mut Rng) -> u64 {
+        let mut applied = 0u64;
+        for _ in 0..batches {
+            let batch = self.pack(batch_budget, rng);
+            if batch.is_empty() {
+                continue;
+            }
+            // Route each activation to the owner shard.
+            let mut per_shard: Vec<Vec<u32>> = vec![Vec::new(); self.shards];
+            for k in batch {
+                per_shard[k as usize % self.shards].push(k);
+            }
+            let mut outstanding = 0usize;
+            for (w, pages) in per_shard.into_iter().enumerate() {
+                if pages.is_empty() {
+                    continue;
+                }
+                applied += pages.len() as u64;
+                self.to_workers[w].send(Job::Batch(pages)).expect("worker alive");
+                outstanding += 1;
+            }
+            // Barrier: wait for all shards of this super-step (provides the
+            // inter-batch happens-before edge).
+            for _ in 0..outstanding {
+                self.done_rx.recv().expect("worker alive");
+            }
+        }
+        self.activations += applied;
+        applied
+    }
+
+    pub fn estimate(&self) -> Vec<f64> {
+        (0..self.graph.n()).map(|i| self.state.load_x(i)).collect()
+    }
+
+    pub fn residual(&self) -> Vec<f64> {
+        (0..self.graph.n()).map(|i| self.state.load_r(i)).collect()
+    }
+
+    pub fn activations(&self) -> u64 {
+        self.activations
+    }
+
+    pub fn conflicts(&self) -> u64 {
+        self.conflicts
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+}
+
+impl Drop for ShardedRuntime {
+    fn drop(&mut self) {
+        for tx in &self.to_workers {
+            let _ = tx.send(Job::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::linalg::dense::DenseMatrix;
+    use crate::linalg::solve::exact_pagerank;
+    use crate::linalg::vector;
+
+    #[test]
+    fn conservation_holds_under_parallel_execution() {
+        let g = generators::erdos_renyi(300, 0.01, 2001);
+        let alpha = 0.85;
+        let mut rt = ShardedRuntime::new(g.clone(), alpha, 4);
+        let mut rng = Rng::seeded(1);
+        rt.run(200, 16, &mut rng);
+        assert!(rt.activations() > 0);
+        let b = DenseMatrix::b_matrix(&g, alpha);
+        let bx = b.matvec(&rt.estimate());
+        for (i, (v, r)) in bx.iter().zip(rt.residual()).enumerate() {
+            assert!(
+                (v + r - (1.0 - alpha)).abs() < 1e-10,
+                "conservation broken at page {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_sequential_application_of_same_batches() {
+        // With 1 shard and the same RNG, the packed batches are identical;
+        // multi-shard execution of disjoint supports must give the same
+        // state as single-shard (commutativity).
+        let g = generators::erdos_renyi(200, 0.01, 2002);
+        let run = |shards: usize| {
+            let mut rt = ShardedRuntime::new(g.clone(), 0.85, shards);
+            let mut rng = Rng::seeded(7);
+            rt.run(100, 8, &mut rng);
+            (rt.estimate(), rt.residual())
+        };
+        let (x1, r1) = run(1);
+        let (x4, r4) = run(4);
+        assert!(vector::dist_inf(&x1, &x4) < 1e-13, "estimates diverged");
+        assert!(vector::dist_inf(&r1, &r4) < 1e-13, "residuals diverged");
+    }
+
+    #[test]
+    fn converges_to_exact_pagerank() {
+        let g = generators::erdos_renyi(150, 0.03, 2003);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut rt = ShardedRuntime::new(g, 0.85, 4);
+        let mut rng = Rng::seeded(9);
+        rt.run(60_000, 8, &mut rng);
+        let err = vector::dist_inf(&rt.estimate(), &x_star);
+        assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
+    fn conflicts_counted_on_dense_graphs() {
+        let g = generators::er_threshold(60, 0.5, 2004);
+        let mut rt = ShardedRuntime::new(g, 0.85, 2);
+        let mut rng = Rng::seeded(11);
+        rt.run(50, 16, &mut rng);
+        assert!(rt.conflicts() > 0, "dense graphs must produce packing conflicts");
+    }
+
+    #[test]
+    fn single_shard_single_candidate_equals_matrix_form() {
+        use crate::algo::mp::MatchingPursuit;
+        let g = generators::er_threshold(40, 0.5, 2005);
+        let mut rt = ShardedRuntime::new(g.clone(), 0.85, 1);
+        let mut rng1 = Rng::seeded(13);
+        rt.run(500, 1, &mut rng1);
+        // Matrix form replaying the same sampler stream (batch=1 packing
+        // draws exactly one page per super-step and never conflicts).
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut rng2 = Rng::seeded(13);
+        for _ in 0..500 {
+            let k = rng2.below(40);
+            mp.step_at(k);
+        }
+        assert!(vector::dist_inf(&rt.estimate(), &crate::algo::common::PageRankSolver::estimate(&mp)) < 1e-13);
+    }
+
+    #[test]
+    fn shards_survive_empty_batches() {
+        // star graph: hub conflicts with everything; batch budget 4 packs
+        // at most 1 activation, sometimes 0 after dedup.
+        let g = generators::star(20);
+        let mut rt = ShardedRuntime::new(g, 0.85, 3);
+        let mut rng = Rng::seeded(17);
+        let applied = rt.run(200, 4, &mut rng);
+        assert!(applied > 0);
+        assert_eq!(rt.activations(), applied);
+    }
+}

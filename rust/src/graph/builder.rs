@@ -1,0 +1,206 @@
+//! Graph construction: edge accumulation, deduplication and dangling-page
+//! handling.
+//!
+//! The paper assumes "without any loss of generality that there are no
+//! dangling pages" (§I) — real crawls have them, so the builder makes the
+//! repair policy explicit instead of silently assuming.
+
+use super::csr::Graph;
+
+/// What to do with pages that have no outgoing links.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DanglingPolicy {
+    /// Refuse to build (the paper's assumption enforced).
+    Error,
+    /// Add a self-loop — keeps the repair local to the page.
+    SelfLoop,
+    /// Link the dangling page to every other page — the classical
+    /// PageRank repair (uniform teleport column), used by the paper's
+    /// experiment generator in our reading of §III.
+    LinkAll,
+}
+
+/// Errors produced by [`GraphBuilder::build`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum BuildError {
+    /// A dangling page was found under [`DanglingPolicy::Error`].
+    Dangling(usize),
+    /// An edge endpoint exceeds the declared node count.
+    EdgeOutOfRange { src: u32, dst: u32, n: usize },
+}
+
+impl std::fmt::Display for BuildError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BuildError::Dangling(k) => {
+                write!(f, "page {k} has no outgoing links (DanglingPolicy::Error)")
+            }
+            BuildError::EdgeOutOfRange { src, dst, n } => {
+                write!(f, "edge ({src},{dst}) out of range for n={n}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BuildError {}
+
+/// Accumulates edges, then produces an immutable [`Graph`].
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(u32, u32)>,
+    allow_self_loops: bool,
+    dangling: DanglingPolicy,
+}
+
+impl GraphBuilder {
+    pub fn new(n: usize) -> GraphBuilder {
+        GraphBuilder {
+            n,
+            edges: Vec::new(),
+            allow_self_loops: true,
+            dangling: DanglingPolicy::LinkAll,
+        }
+    }
+
+    /// Set the dangling-page policy (default [`DanglingPolicy::LinkAll`]).
+    pub fn dangling_policy(mut self, p: DanglingPolicy) -> Self {
+        self.dangling = p;
+        self
+    }
+
+    /// Whether self-loops are kept (default) or dropped on `add_edge`.
+    pub fn allow_self_loops(mut self, allow: bool) -> Self {
+        self.allow_self_loops = allow;
+        self
+    }
+
+    /// Add a directed edge `src -> dst` ("src links to dst"). Duplicates
+    /// are removed at build time.
+    pub fn add_edge(&mut self, src: usize, dst: usize) -> &mut Self {
+        if src == dst && !self.allow_self_loops {
+            return self;
+        }
+        self.edges.push((src as u32, dst as u32));
+        self
+    }
+
+    /// Bulk-add edges.
+    pub fn extend<I: IntoIterator<Item = (usize, usize)>>(&mut self, it: I) -> &mut Self {
+        for (s, d) in it {
+            self.add_edge(s, d);
+        }
+        self
+    }
+
+    /// Number of (pre-dedup) edges currently accumulated.
+    pub fn pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Finalize into a [`Graph`], applying dedup and the dangling policy.
+    pub fn build(mut self) -> Result<Graph, BuildError> {
+        for &(s, d) in &self.edges {
+            if s as usize >= self.n || d as usize >= self.n {
+                return Err(BuildError::EdgeOutOfRange { src: s, dst: d, n: self.n });
+            }
+        }
+        self.edges.sort_unstable();
+        self.edges.dedup();
+
+        // Detect dangling pages on the deduped list.
+        let mut has_out = vec![false; self.n];
+        for &(s, _) in &self.edges {
+            has_out[s as usize] = true;
+        }
+        let dangling: Vec<usize> = (0..self.n).filter(|&k| !has_out[k]).collect();
+        if !dangling.is_empty() {
+            match self.dangling {
+                DanglingPolicy::Error => return Err(BuildError::Dangling(dangling[0])),
+                DanglingPolicy::SelfLoop => {
+                    for &k in &dangling {
+                        self.edges.push((k as u32, k as u32));
+                    }
+                }
+                DanglingPolicy::LinkAll => {
+                    for &k in &dangling {
+                        for d in 0..self.n {
+                            if d != k {
+                                self.edges.push((k as u32, d as u32));
+                            }
+                        }
+                    }
+                }
+            }
+            self.edges.sort_unstable();
+            self.edges.dedup();
+        }
+        Ok(Graph::from_sorted_edges(self.n, &self.edges))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_and_sort() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(2, 0).add_edge(0, 1).add_edge(0, 1).add_edge(1, 2);
+        let g = b.build().expect("builds");
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.out(0), &[1]);
+    }
+
+    #[test]
+    fn dangling_error_policy() {
+        let mut b = GraphBuilder::new(3).dangling_policy(DanglingPolicy::Error);
+        b.add_edge(0, 1).add_edge(1, 0);
+        assert_eq!(b.build().unwrap_err(), BuildError::Dangling(2));
+    }
+
+    #[test]
+    fn dangling_self_loop_policy() {
+        let mut b = GraphBuilder::new(3).dangling_policy(DanglingPolicy::SelfLoop);
+        b.add_edge(0, 1).add_edge(1, 0);
+        let g = b.build().expect("builds");
+        assert_eq!(g.out(2), &[2]);
+        assert!(g.dangling().is_empty());
+    }
+
+    #[test]
+    fn dangling_link_all_policy() {
+        let mut b = GraphBuilder::new(4).dangling_policy(DanglingPolicy::LinkAll);
+        b.add_edge(0, 1).add_edge(1, 0).add_edge(3, 0);
+        let g = b.build().expect("builds");
+        assert_eq!(g.out(2), &[0, 1, 3]); // everything but itself
+        assert!(g.dangling().is_empty());
+    }
+
+    #[test]
+    fn self_loops_dropped_when_disallowed() {
+        let mut b = GraphBuilder::new(2).allow_self_loops(false);
+        b.add_edge(0, 0).add_edge(0, 1).add_edge(1, 0);
+        let g = b.build().expect("builds");
+        assert!(!g.has_self_loop(0));
+        assert_eq!(g.m(), 2);
+    }
+
+    #[test]
+    fn out_of_range_is_error() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 1);
+        b.edges.push((0, 9));
+        match b.build().unwrap_err() {
+            BuildError::EdgeOutOfRange { dst, .. } => assert_eq!(dst, 9),
+            e => panic!("wrong error {e:?}"),
+        }
+    }
+
+    #[test]
+    fn display_messages() {
+        assert!(BuildError::Dangling(7).to_string().contains("page 7"));
+        let e = BuildError::EdgeOutOfRange { src: 1, dst: 2, n: 2 };
+        assert!(e.to_string().contains("(1,2)"));
+    }
+}

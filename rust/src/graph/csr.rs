@@ -1,0 +1,239 @@
+//! Compressed sparse row graph storage.
+//!
+//! [`Graph`] stores both directions of adjacency:
+//!
+//! * out-CSR (`out_offsets`/`out_targets`) — the set `N_k` the paper's
+//!   Algorithm 1 reads residuals from and writes residuals to;
+//! * in-CSR (`in_offsets`/`in_sources`) — needed only by the baselines
+//!   ([6], [12], [15]) whose updates pull from incoming neighbours, and by
+//!   transpose-direction linear algebra.
+//!
+//! Out-edges of each node are stored sorted; the structure is immutable
+//! after construction (the dynamic-network extension rebuilds via
+//! [`crate::graph::GraphBuilder`], mirroring the paper's §IV-2 future-work
+//! discussion where topology changes are events, not steady state).
+
+/// An immutable directed graph with no dangling (zero out-degree) nodes
+/// permitted at PageRank time (the builder repairs or rejects them).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    n: usize,
+    out_offsets: Vec<usize>,
+    out_targets: Vec<u32>,
+    in_offsets: Vec<usize>,
+    in_sources: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from a sorted, deduplicated edge list. Prefer
+    /// [`crate::graph::GraphBuilder`]; this is the low-level constructor.
+    ///
+    /// `edges` are `(src, dst)` pairs meaning "src links to dst".
+    pub fn from_sorted_edges(n: usize, edges: &[(u32, u32)]) -> Graph {
+        debug_assert!(edges.windows(2).all(|w| w[0] <= w[1]), "edges not sorted");
+        let mut out_offsets = vec![0usize; n + 1];
+        let mut in_degree = vec![0usize; n];
+        for &(s, d) in edges {
+            assert!((s as usize) < n && (d as usize) < n, "edge ({s},{d}) out of range");
+            out_offsets[s as usize + 1] += 1;
+            in_degree[d as usize] += 1;
+        }
+        for i in 0..n {
+            out_offsets[i + 1] += out_offsets[i];
+        }
+        let out_targets: Vec<u32> = edges.iter().map(|&(_, d)| d).collect();
+
+        let mut in_offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            in_offsets[i + 1] = in_offsets[i] + in_degree[i];
+        }
+        let mut cursor = in_offsets.clone();
+        let mut in_sources = vec![0u32; edges.len()];
+        for &(s, d) in edges {
+            in_sources[cursor[d as usize]] = s;
+            cursor[d as usize] += 1;
+        }
+        Graph {
+            n,
+            out_offsets,
+            out_targets,
+            in_offsets,
+            in_sources,
+        }
+    }
+
+    /// Number of pages.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of directed edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.out_targets.len()
+    }
+
+    /// Out-neighbours of `k` — the paper's `N_k` set.
+    #[inline]
+    pub fn out(&self, k: usize) -> &[u32] {
+        &self.out_targets[self.out_offsets[k]..self.out_offsets[k + 1]]
+    }
+
+    /// In-neighbours of `k` (pages linking to `k`).
+    #[inline]
+    pub fn inc(&self, k: usize) -> &[u32] {
+        &self.in_sources[self.in_offsets[k]..self.in_offsets[k + 1]]
+    }
+
+    /// Out-degree `N_k`.
+    #[inline]
+    pub fn out_degree(&self, k: usize) -> usize {
+        self.out_offsets[k + 1] - self.out_offsets[k]
+    }
+
+    /// In-degree.
+    #[inline]
+    pub fn in_degree(&self, k: usize) -> usize {
+        self.in_offsets[k + 1] - self.in_offsets[k]
+    }
+
+    /// Whether page `k` links to itself (`A_kk = 1/N_k` in the paper's
+    /// denominator formula, 0 otherwise).
+    #[inline]
+    pub fn has_self_loop(&self, k: usize) -> bool {
+        self.out(k).binary_search(&(k as u32)).is_ok()
+    }
+
+    /// Whether the directed edge `src -> dst` exists.
+    #[inline]
+    pub fn has_edge(&self, src: usize, dst: usize) -> bool {
+        self.out(src).binary_search(&(dst as u32)).is_ok()
+    }
+
+    /// Indices of dangling pages (out-degree 0). Empty for graphs produced
+    /// by the builder with a repair policy.
+    pub fn dangling(&self) -> Vec<usize> {
+        (0..self.n).filter(|&k| self.out_degree(k) == 0).collect()
+    }
+
+    /// Edge list in sorted order (for IO round-trips and rebuilds).
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.m());
+        for s in 0..self.n {
+            for &d in self.out(s) {
+                out.push((s as u32, d));
+            }
+        }
+        out
+    }
+
+    /// The hyperlink-matrix entry `A[i][j]` (1/N_j if j links to i).
+    #[inline]
+    pub fn a_entry(&self, i: usize, j: usize) -> f64 {
+        if self.has_edge(j, i) {
+            1.0 / self.out_degree(j) as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 0 -> 1, 0 -> 2, 1 -> 2, 2 -> 0, 2 -> 2 (self loop)
+    fn tiny() -> Graph {
+        Graph::from_sorted_edges(3, &[(0, 1), (0, 2), (1, 2), (2, 0), (2, 2)])
+    }
+
+    #[test]
+    fn sizes() {
+        let g = tiny();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 5);
+    }
+
+    #[test]
+    fn out_adjacency() {
+        let g = tiny();
+        assert_eq!(g.out(0), &[1, 2]);
+        assert_eq!(g.out(1), &[2]);
+        assert_eq!(g.out(2), &[0, 2]);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.out_degree(1), 1);
+    }
+
+    #[test]
+    fn in_adjacency_is_transpose() {
+        let g = tiny();
+        assert_eq!(g.inc(0), &[2]);
+        assert_eq!(g.inc(1), &[0]);
+        let mut in2 = g.inc(2).to_vec();
+        in2.sort_unstable();
+        assert_eq!(in2, vec![0, 1, 2]);
+        assert_eq!(g.in_degree(2), 3);
+    }
+
+    #[test]
+    fn self_loops() {
+        let g = tiny();
+        assert!(!g.has_self_loop(0));
+        assert!(g.has_self_loop(2));
+    }
+
+    #[test]
+    fn has_edge() {
+        let g = tiny();
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(1, 0));
+    }
+
+    #[test]
+    fn a_entries_column_stochastic() {
+        let g = tiny();
+        for j in 0..3 {
+            let col: f64 = (0..3).map(|i| g.a_entry(i, j)).sum();
+            assert!((col - 1.0).abs() < 1e-12, "column {j} sums to {col}");
+        }
+        assert_eq!(g.a_entry(1, 0), 0.5); // 0 links to 1, N_0 = 2
+        assert_eq!(g.a_entry(2, 2), 0.5); // self loop, N_2 = 2
+    }
+
+    #[test]
+    fn edges_round_trip() {
+        let g = tiny();
+        let e = g.edges();
+        let g2 = Graph::from_sorted_edges(3, &e);
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn dangling_detection() {
+        let g = Graph::from_sorted_edges(3, &[(0, 1)]);
+        assert_eq!(g.dangling(), vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_edge_panics() {
+        Graph::from_sorted_edges(2, &[(0, 5)]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_sorted_edges(0, &[]);
+        assert_eq!(g.n(), 0);
+        assert_eq!(g.m(), 0);
+    }
+
+    #[test]
+    fn in_out_degree_sums_match_edge_count() {
+        let g = tiny();
+        let out_sum: usize = (0..g.n()).map(|k| g.out_degree(k)).sum();
+        let in_sum: usize = (0..g.n()).map(|k| g.in_degree(k)).sum();
+        assert_eq!(out_sum, g.m());
+        assert_eq!(in_sum, g.m());
+    }
+}

@@ -1,0 +1,283 @@
+//! Synthetic graph families.
+//!
+//! [`er_threshold`] is the exact §III construction the paper evaluates on:
+//! an N×N matrix of iid U\[0,1\] entries thresholded at a constant (0.5 in
+//! the paper), giving a dense ER digraph with expected out-degree
+//! ≈ N·(1-threshold). The other families exercise the algorithms on
+//! topologies the paper's motivation section alludes to (power-law webs,
+//! small worlds, clustered communities).
+
+use super::builder::{DanglingPolicy, GraphBuilder};
+use super::csr::Graph;
+use crate::util::rng::Rng;
+
+/// The paper's §III generator: keep edge `(j -> i)` iff `U[0,1] >
+/// threshold`, no self-loops, dangling pages repaired by linking to all
+/// pages (a dangling column is astronomically unlikely at the paper's
+/// N=100, p=0.5, but the policy must be total).
+pub fn er_threshold(n: usize, threshold: f64, seed: u64) -> Graph {
+    let mut rng = Rng::seeded(seed);
+    let mut b = GraphBuilder::new(n).dangling_policy(DanglingPolicy::LinkAll);
+    for j in 0..n {
+        for i in 0..n {
+            if i != j && rng.uniform() > threshold {
+                b.add_edge(j, i);
+            }
+        }
+    }
+    b.build().expect("ER-threshold graphs cannot fail to build")
+}
+
+/// Sparse directed Erdős–Rényi `G(n, p)`: each ordered pair independently
+/// an edge with probability `p`.
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Graph {
+    let mut rng = Rng::seeded(seed);
+    let mut b = GraphBuilder::new(n).dangling_policy(DanglingPolicy::SelfLoop);
+    for s in 0..n {
+        for d in 0..n {
+            if s != d && rng.bernoulli(p) {
+                b.add_edge(s, d);
+            }
+        }
+    }
+    b.build().expect("ER graphs cannot fail to build")
+}
+
+/// Barabási–Albert preferential attachment (directed variant): each new
+/// node adds `m` out-links to existing nodes chosen proportionally to
+/// in-degree + 1. Produces the heavy-tailed in-degree distribution typical
+/// of web graphs.
+pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> Graph {
+    assert!(n >= 2, "BA needs at least 2 nodes");
+    assert!(m >= 1, "BA needs m >= 1");
+    let mut rng = Rng::seeded(seed);
+    let mut b = GraphBuilder::new(n).dangling_policy(DanglingPolicy::SelfLoop);
+    // Repeated-target list implements preferential attachment in O(1) per
+    // draw: node id appears once per unit of (in-degree + 1).
+    let mut targets: Vec<usize> = vec![0];
+    b.add_edge(1, 0);
+    targets.push(1);
+    targets.push(0);
+    for v in 2..n {
+        let picks = m.min(v);
+        let mut chosen = Vec::with_capacity(picks);
+        while chosen.len() < picks {
+            let t = targets[rng.below(targets.len())];
+            if t != v && !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &t in &chosen {
+            b.add_edge(v, t);
+            targets.push(t);
+        }
+        targets.push(v);
+    }
+    b.build().expect("BA graphs cannot fail to build")
+}
+
+/// Watts–Strogatz small world (directed): ring of `k` forward neighbours,
+/// each edge rewired with probability `beta`.
+pub fn watts_strogatz(n: usize, k: usize, beta: f64, seed: u64) -> Graph {
+    assert!(k >= 1 && k < n, "need 1 <= k < n");
+    let mut rng = Rng::seeded(seed);
+    let mut b = GraphBuilder::new(n).dangling_policy(DanglingPolicy::SelfLoop);
+    for s in 0..n {
+        for off in 1..=k {
+            let mut d = (s + off) % n;
+            if rng.bernoulli(beta) {
+                // Rewire to a uniform non-self target.
+                loop {
+                    d = rng.below(n);
+                    if d != s {
+                        break;
+                    }
+                }
+            }
+            b.add_edge(s, d);
+        }
+    }
+    b.build().expect("WS graphs cannot fail to build")
+}
+
+/// Two-block stochastic block model: intra-block probability `p_in`,
+/// inter-block `p_out`. Models clustered link farms / communities.
+pub fn sbm_two_block(n: usize, p_in: f64, p_out: f64, seed: u64) -> Graph {
+    let mut rng = Rng::seeded(seed);
+    let half = n / 2;
+    let mut b = GraphBuilder::new(n).dangling_policy(DanglingPolicy::SelfLoop);
+    for s in 0..n {
+        for d in 0..n {
+            if s == d {
+                continue;
+            }
+            let same = (s < half) == (d < half);
+            let p = if same { p_in } else { p_out };
+            if rng.bernoulli(p) {
+                b.add_edge(s, d);
+            }
+        }
+    }
+    b.build().expect("SBM graphs cannot fail to build")
+}
+
+/// Directed ring: `i -> (i+1) % n`. The slowest-mixing strongly-connected
+/// topology — a useful adversarial case for convergence-rate ablations.
+pub fn ring(n: usize) -> Graph {
+    let mut b = GraphBuilder::new(n).dangling_policy(DanglingPolicy::Error);
+    for i in 0..n {
+        b.add_edge(i, (i + 1) % n);
+    }
+    b.build().expect("ring cannot dangle")
+}
+
+/// Star: hub 0 links to all leaves, all leaves link back to the hub.
+/// Maximum degree skew; the hub's activation touches every page.
+pub fn star(n: usize) -> Graph {
+    assert!(n >= 2);
+    let mut b = GraphBuilder::new(n).dangling_policy(DanglingPolicy::Error);
+    for leaf in 1..n {
+        b.add_edge(0, leaf);
+        b.add_edge(leaf, 0);
+    }
+    b.build().expect("star cannot dangle")
+}
+
+/// Complete digraph (every ordered pair, no self-loops).
+pub fn complete(n: usize) -> Graph {
+    assert!(n >= 2);
+    let mut b = GraphBuilder::new(n).dangling_policy(DanglingPolicy::Error);
+    for s in 0..n {
+        for d in 0..n {
+            if s != d {
+                b.add_edge(s, d);
+            }
+        }
+    }
+    b.build().expect("complete cannot dangle")
+}
+
+/// Dispatch a generator by name — used by the CLI and the benches.
+/// `spec` examples: `er100` is not parsed here; pass name and params
+/// explicitly.
+pub fn by_name(name: &str, n: usize, seed: u64) -> Option<Graph> {
+    match name {
+        "er-threshold" | "paper" => Some(er_threshold(n, 0.5, seed)),
+        "er-sparse" => Some(erdos_renyi(n, (8.0 / n as f64).min(1.0), seed)),
+        "ba" => Some(barabasi_albert(n, 4, seed)),
+        "ws" => Some(watts_strogatz(n, 4, 0.1, seed)),
+        "sbm" => Some(sbm_two_block(n, 0.2, 0.02, seed)),
+        "ring" => Some(ring(n)),
+        "star" => Some(star(n)),
+        "complete" => Some(complete(n)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_threshold_density_matches_paper_model() {
+        let n = 100;
+        let g = er_threshold(n, 0.5, 1);
+        // Expected out-degree ~ (n-1)/2 ~ 49.5; allow generous slack.
+        let avg = g.m() as f64 / n as f64;
+        assert!((avg - 49.5).abs() < 5.0, "avg out-degree {avg}");
+        assert!(g.dangling().is_empty());
+        // No self loops in this model.
+        assert!((0..n).all(|k| !g.has_self_loop(k)));
+    }
+
+    #[test]
+    fn er_threshold_deterministic_per_seed() {
+        assert_eq!(er_threshold(50, 0.5, 9), er_threshold(50, 0.5, 9));
+        assert_ne!(er_threshold(50, 0.5, 9), er_threshold(50, 0.5, 10));
+    }
+
+    #[test]
+    fn er_threshold_extreme_thresholds() {
+        // threshold 1.0 -> no random edges survive; all pages dangling ->
+        // LinkAll repair yields the complete graph.
+        let g = er_threshold(10, 1.0, 3);
+        assert_eq!(g.m(), 10 * 9);
+        // threshold 0.0 -> complete digraph directly.
+        let g = er_threshold(10, 0.0, 3);
+        assert_eq!(g.m(), 10 * 9);
+    }
+
+    #[test]
+    fn erdos_renyi_density() {
+        let g = erdos_renyi(200, 0.05, 5);
+        let expected = 200.0 * 199.0 * 0.05;
+        assert!((g.m() as f64 - expected).abs() < 0.25 * expected);
+    }
+
+    #[test]
+    fn ba_no_dangling_and_heavy_hub() {
+        let g = barabasi_albert(300, 3, 7);
+        assert!(g.dangling().is_empty());
+        let max_in = (0..g.n()).map(|k| g.in_degree(k)).max().expect("nonempty");
+        let avg_in = g.m() as f64 / g.n() as f64;
+        assert!(max_in as f64 > 4.0 * avg_in, "max_in={max_in} avg={avg_in}");
+    }
+
+    #[test]
+    fn ws_degree_regular_before_rewire() {
+        let g = watts_strogatz(50, 3, 0.0, 11);
+        assert!((0..50).all(|k| g.out_degree(k) == 3));
+        assert!(g.has_edge(0, 1) && g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn ws_rewiring_changes_topology() {
+        let a = watts_strogatz(50, 3, 0.0, 11);
+        let b = watts_strogatz(50, 3, 0.9, 11);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn sbm_blocks_denser_inside() {
+        let g = sbm_two_block(100, 0.3, 0.02, 13);
+        let mut intra = 0usize;
+        let mut inter = 0usize;
+        for (s, d) in g.edges() {
+            if ((s as usize) < 50) == ((d as usize) < 50) {
+                intra += 1;
+            } else {
+                inter += 1;
+            }
+        }
+        assert!(intra > 5 * inter, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn ring_structure() {
+        let g = ring(5);
+        assert_eq!(g.m(), 5);
+        assert!(g.has_edge(4, 0));
+        assert!((0..5).all(|k| g.out_degree(k) == 1));
+    }
+
+    #[test]
+    fn star_structure() {
+        let g = star(6);
+        assert_eq!(g.out_degree(0), 5);
+        assert!((1..6).all(|k| g.out(k) == [0]));
+    }
+
+    #[test]
+    fn complete_structure() {
+        let g = complete(4);
+        assert_eq!(g.m(), 12);
+        assert!((0..4).all(|k| g.out_degree(k) == 3));
+    }
+
+    #[test]
+    fn by_name_dispatch() {
+        assert!(by_name("paper", 20, 1).is_some());
+        assert!(by_name("ba", 20, 1).is_some());
+        assert!(by_name("nope", 20, 1).is_none());
+    }
+}

@@ -1,0 +1,177 @@
+//! Plain-text edge-list IO.
+//!
+//! Format: one `src dst` pair per line (whitespace separated), `#` starts
+//! a comment. Node count is `max id + 1` unless a `# nodes: N` header is
+//! present (lets files pin isolated trailing nodes).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use super::builder::{DanglingPolicy, GraphBuilder};
+use super::csr::Graph;
+
+/// IO / parse errors.
+#[derive(Debug)]
+pub enum IoError {
+    Io(std::io::Error),
+    Parse { line: usize, content: String },
+    Build(super::builder::BuildError),
+}
+
+impl std::fmt::Display for IoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IoError::Io(e) => write!(f, "io error: {e}"),
+            IoError::Parse { line, content } => {
+                write!(f, "parse error at line {line}: {content:?}")
+            }
+            IoError::Build(e) => write!(f, "graph build error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for IoError {}
+
+impl From<std::io::Error> for IoError {
+    fn from(e: std::io::Error) -> Self {
+        IoError::Io(e)
+    }
+}
+
+/// Parse an edge list from any reader.
+pub fn read_edge_list<R: Read>(reader: R, dangling: DanglingPolicy) -> Result<Graph, IoError> {
+    let buf = BufReader::new(reader);
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    let mut declared_n: Option<usize> = None;
+    let mut max_id = 0usize;
+    for (lineno, line) in buf.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if let Some(rest) = trimmed.strip_prefix('#') {
+            // Optional "# nodes: N" header.
+            if let Some(v) = rest.trim().strip_prefix("nodes:") {
+                declared_n = v.trim().parse::<usize>().ok();
+            }
+            continue;
+        }
+        let mut it = trimmed.split_whitespace();
+        let (s, d) = match (it.next(), it.next(), it.next()) {
+            (Some(s), Some(d), None) => (s, d),
+            _ => {
+                return Err(IoError::Parse { line: lineno + 1, content: line.clone() });
+            }
+        };
+        let (s, d) = match (s.parse::<usize>(), d.parse::<usize>()) {
+            (Ok(s), Ok(d)) => (s, d),
+            _ => {
+                return Err(IoError::Parse { line: lineno + 1, content: line.clone() });
+            }
+        };
+        max_id = max_id.max(s).max(d);
+        edges.push((s, d));
+    }
+    let n = declared_n.unwrap_or(if edges.is_empty() { 0 } else { max_id + 1 });
+    let mut b = GraphBuilder::new(n).dangling_policy(dangling);
+    b.extend(edges);
+    b.build().map_err(IoError::Build)
+}
+
+/// Load a graph from a file path.
+pub fn load<P: AsRef<Path>>(path: P, dangling: DanglingPolicy) -> Result<Graph, IoError> {
+    let f = std::fs::File::open(path)?;
+    read_edge_list(f, dangling)
+}
+
+/// Serialize a graph as an edge list (with a `# nodes:` header).
+pub fn write_edge_list<W: Write>(g: &Graph, mut w: W) -> std::io::Result<()> {
+    writeln!(w, "# nodes: {}", g.n())?;
+    for (s, d) in g.edges() {
+        writeln!(w, "{s} {d}")?;
+    }
+    Ok(())
+}
+
+/// Save to a file path.
+pub fn save<P: AsRef<Path>>(g: &Graph, path: P) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    write_edge_list(g, std::io::BufWriter::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn parse_basic() {
+        let text = "# a comment\n0 1\n1 2\n2 0\n";
+        let g = read_edge_list(text.as_bytes(), DanglingPolicy::Error).expect("parses");
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert!(g.has_edge(2, 0));
+    }
+
+    #[test]
+    fn nodes_header_respected() {
+        let text = "# nodes: 5\n0 1\n1 0\n";
+        let g = read_edge_list(text.as_bytes(), DanglingPolicy::SelfLoop).expect("parses");
+        assert_eq!(g.n(), 5);
+        assert!(g.has_self_loop(4)); // repaired dangling trailing node
+    }
+
+    #[test]
+    fn bad_line_reports_position() {
+        let text = "0 1\nnot an edge\n";
+        match read_edge_list(text.as_bytes(), DanglingPolicy::SelfLoop) {
+            Err(IoError::Parse { line, .. }) => assert_eq!(line, 2),
+            other => panic!("expected parse error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn three_fields_is_error() {
+        let text = "0 1 7\n";
+        assert!(matches!(
+            read_edge_list(text.as_bytes(), DanglingPolicy::SelfLoop),
+            Err(IoError::Parse { .. })
+        ));
+    }
+
+    #[test]
+    fn empty_input_is_empty_graph() {
+        let g = read_edge_list("".as_bytes(), DanglingPolicy::Error).expect("ok");
+        assert_eq!(g.n(), 0);
+    }
+
+    #[test]
+    fn round_trip() {
+        let g = generators::er_threshold(40, 0.5, 77);
+        let mut buf = Vec::new();
+        write_edge_list(&g, &mut buf).expect("writes");
+        let g2 = read_edge_list(buf.as_slice(), DanglingPolicy::Error).expect("parses");
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let g = generators::ring(10);
+        let dir = std::env::temp_dir().join(format!("prmp_io_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let path = dir.join("g.txt");
+        save(&g, &path).expect("saves");
+        let g2 = load(&path, DanglingPolicy::Error).expect("loads");
+        assert_eq!(g, g2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(matches!(
+            load("/definitely/not/here.txt", DanglingPolicy::Error),
+            Err(IoError::Io(_))
+        ));
+    }
+}

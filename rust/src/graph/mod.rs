@@ -1,0 +1,29 @@
+//! Web-graph substrate.
+//!
+//! The paper models the web as a directed graph whose column-stochastic
+//! hyperlink matrix `A` has `A[i][j] = 1/N_j` iff page `j` links to page
+//! `i` (`N_j` = out-degree of `j`). Everything downstream — Algorithm 1's
+//! out-neighbour reads/writes, the baselines' in-neighbour requirements,
+//! the simulated network topology — is derived from the [`Graph`] type
+//! defined here.
+//!
+//! * [`csr`] — compressed sparse row storage with both out- and
+//!   in-adjacency (MP needs only out-links; the baselines [6]/[12]/[15]
+//!   need in-links, which is exactly the paper's critique of them).
+//! * [`builder`] — edge accumulation, dedup, dangling-page repair.
+//! * [`generators`] — synthetic families including the paper §III
+//!   ER-threshold model.
+//! * [`io`] — plain-text edge-list reading/writing.
+//! * [`stats`] — degree summaries.
+//! * [`scc`] — Tarjan strongly-connected components (Algorithm 2 assumes
+//!   strong connectivity).
+
+pub mod builder;
+pub mod csr;
+pub mod generators;
+pub mod io;
+pub mod scc;
+pub mod stats;
+
+pub use builder::{DanglingPolicy, GraphBuilder};
+pub use csr::Graph;

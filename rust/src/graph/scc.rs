@@ -1,0 +1,164 @@
+//! Strongly-connected components (iterative Tarjan).
+//!
+//! Algorithm 2 (network size estimation) assumes the web graph is
+//! strongly connected — the nullspace of `C = (I-A)ᵀ` is one-dimensional
+//! exactly then. [`is_strongly_connected`] gates the estimator with a
+//! clear error instead of silently returning garbage.
+
+use super::csr::Graph;
+
+/// Tarjan's algorithm, iterative (explicit stack; web-scale graphs would
+/// blow the call stack recursively). Returns a component id per node;
+/// ids are in reverse topological order of the condensation.
+pub fn tarjan_scc(g: &Graph) -> Vec<usize> {
+    let n = g.n();
+    const UNSET: usize = usize::MAX;
+    let mut index = vec![UNSET; n];
+    let mut lowlink = vec![0usize; n];
+    let mut on_stack = vec![false; n];
+    let mut comp = vec![UNSET; n];
+    let mut stack: Vec<usize> = Vec::new();
+    let mut next_index = 0usize;
+    let mut next_comp = 0usize;
+
+    // Explicit DFS frames: (node, out-edge cursor).
+    let mut frames: Vec<(usize, usize)> = Vec::new();
+
+    for root in 0..n {
+        if index[root] != UNSET {
+            continue;
+        }
+        frames.push((root, 0));
+        index[root] = next_index;
+        lowlink[root] = next_index;
+        next_index += 1;
+        stack.push(root);
+        on_stack[root] = true;
+
+        while let Some(&mut (v, ref mut cursor)) = frames.last_mut() {
+            if *cursor < g.out_degree(v) {
+                let w = g.out(v)[*cursor] as usize;
+                *cursor += 1;
+                if index[w] == UNSET {
+                    index[w] = next_index;
+                    lowlink[w] = next_index;
+                    next_index += 1;
+                    stack.push(w);
+                    on_stack[w] = true;
+                    frames.push((w, 0));
+                } else if on_stack[w] {
+                    lowlink[v] = lowlink[v].min(index[w]);
+                }
+            } else {
+                frames.pop();
+                if let Some(&mut (parent, _)) = frames.last_mut() {
+                    lowlink[parent] = lowlink[parent].min(lowlink[v]);
+                }
+                if lowlink[v] == index[v] {
+                    // v is an SCC root: pop its component.
+                    loop {
+                        let w = stack.pop().expect("tarjan stack underflow");
+                        on_stack[w] = false;
+                        comp[w] = next_comp;
+                        if w == v {
+                            break;
+                        }
+                    }
+                    next_comp += 1;
+                }
+            }
+        }
+    }
+    comp
+}
+
+/// Number of strongly-connected components.
+pub fn scc_count(g: &Graph) -> usize {
+    if g.n() == 0 {
+        return 0;
+    }
+    tarjan_scc(g).iter().max().expect("nonempty") + 1
+}
+
+/// Whether the graph is strongly connected (Algorithm 2's requirement).
+pub fn is_strongly_connected(g: &Graph) -> bool {
+    g.n() > 0 && scc_count(g) == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn ring_is_one_scc() {
+        assert!(is_strongly_connected(&generators::ring(10)));
+    }
+
+    #[test]
+    fn star_is_one_scc() {
+        assert!(is_strongly_connected(&generators::star(7)));
+    }
+
+    #[test]
+    fn two_rings_are_two_sccs() {
+        let mut b = GraphBuilder::new(6);
+        for i in 0..3 {
+            b.add_edge(i, (i + 1) % 3);
+            b.add_edge(3 + i, 3 + (i + 1) % 3);
+        }
+        // one-way bridge keeps them separate components
+        b.add_edge(0, 3);
+        let g = b.build().expect("builds");
+        assert_eq!(scc_count(&g), 2);
+        assert!(!is_strongly_connected(&g));
+        let comp = tarjan_scc(&g);
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[3], comp[4]);
+        assert_ne!(comp[0], comp[3]);
+    }
+
+    #[test]
+    fn dag_chain_all_singletons() {
+        let mut b = GraphBuilder::new(4).dangling_policy(crate::graph::DanglingPolicy::SelfLoop);
+        b.add_edge(0, 1).add_edge(1, 2).add_edge(2, 3);
+        let g = b.build().expect("builds");
+        assert_eq!(scc_count(&g), 4);
+    }
+
+    #[test]
+    fn dense_er_is_strongly_connected() {
+        // At p=0.5, N=100 the digraph is strongly connected w.h.p.
+        assert!(is_strongly_connected(&generators::er_threshold(100, 0.5, 5)));
+    }
+
+    #[test]
+    fn reverse_topological_component_ids() {
+        // 0 -> 1 (two singleton SCCs): sink component gets the smaller id.
+        let mut b = GraphBuilder::new(2).dangling_policy(crate::graph::DanglingPolicy::SelfLoop);
+        b.add_edge(0, 1);
+        let g = b.build().expect("builds");
+        let comp = tarjan_scc(&g);
+        assert!(comp[1] < comp[0]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(0).build().expect("builds");
+        assert_eq!(scc_count(&g), 0);
+        assert!(!is_strongly_connected(&g));
+    }
+
+    #[test]
+    fn deep_path_no_stack_overflow() {
+        // 50k-node path — recursion would overflow; iterative must not.
+        let n = 50_000;
+        let mut b = GraphBuilder::new(n).dangling_policy(crate::graph::DanglingPolicy::SelfLoop);
+        for i in 0..n - 1 {
+            b.add_edge(i, i + 1);
+        }
+        let g = b.build().expect("builds");
+        assert_eq!(scc_count(&g), n);
+    }
+}

@@ -1,0 +1,156 @@
+//! Degree statistics and structural summaries — used by the CLI's
+//! `graph-info` command and by experiment reports to describe workloads.
+
+use super::csr::Graph;
+
+/// Summary of a graph's degree structure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegreeStats {
+    pub n: usize,
+    pub m: usize,
+    pub min_out: usize,
+    pub max_out: usize,
+    pub mean_out: f64,
+    pub min_in: usize,
+    pub max_in: usize,
+    pub self_loops: usize,
+    pub dangling: usize,
+    /// Edge density m / (n * (n-1)).
+    pub density: f64,
+}
+
+impl DegreeStats {
+    pub fn compute(g: &Graph) -> DegreeStats {
+        let n = g.n();
+        let m = g.m();
+        let mut min_out = usize::MAX;
+        let mut max_out = 0;
+        let mut min_in = usize::MAX;
+        let mut max_in = 0;
+        let mut self_loops = 0;
+        let mut dangling = 0;
+        for k in 0..n {
+            let od = g.out_degree(k);
+            let id = g.in_degree(k);
+            min_out = min_out.min(od);
+            max_out = max_out.max(od);
+            min_in = min_in.min(id);
+            max_in = max_in.max(id);
+            if g.has_self_loop(k) {
+                self_loops += 1;
+            }
+            if od == 0 {
+                dangling += 1;
+            }
+        }
+        if n == 0 {
+            min_out = 0;
+            min_in = 0;
+        }
+        DegreeStats {
+            n,
+            m,
+            min_out,
+            max_out,
+            mean_out: if n == 0 { 0.0 } else { m as f64 / n as f64 },
+            min_in,
+            max_in,
+            self_loops,
+            dangling,
+            density: if n > 1 {
+                m as f64 / (n as f64 * (n as f64 - 1.0))
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Multi-line human-readable rendering.
+    pub fn render(&self) -> String {
+        format!(
+            "nodes            {}\n\
+             edges            {}\n\
+             out-degree       min {} / mean {:.2} / max {}\n\
+             in-degree        min {} / max {}\n\
+             self-loops       {}\n\
+             dangling         {}\n\
+             density          {:.4}",
+            self.n,
+            self.m,
+            self.min_out,
+            self.mean_out,
+            self.max_out,
+            self.min_in,
+            self.max_in,
+            self.self_loops,
+            self.dangling,
+            self.density
+        )
+    }
+}
+
+/// Out-degree histogram with power-of-two buckets: entry `i` counts nodes
+/// with out-degree in `[2^i, 2^(i+1))` (entry 0 additionally counts 0).
+pub fn out_degree_histogram(g: &Graph) -> Vec<usize> {
+    let mut hist: Vec<usize> = Vec::new();
+    for k in 0..g.n() {
+        let d = g.out_degree(k);
+        let bucket = if d <= 1 { 0 } else { (usize::BITS - (d as usize).leading_zeros()) as usize - 1 };
+        if hist.len() <= bucket {
+            hist.resize(bucket + 1, 0);
+        }
+        hist[bucket] += 1;
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn stats_on_star() {
+        let g = generators::star(5);
+        let s = DegreeStats::compute(&g);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.m, 8);
+        assert_eq!(s.max_out, 4);
+        assert_eq!(s.min_out, 1);
+        assert_eq!(s.dangling, 0);
+        assert_eq!(s.self_loops, 0);
+        assert!((s.mean_out - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_density_complete() {
+        let g = generators::complete(6);
+        let s = DegreeStats::compute(&g);
+        assert!((s.density - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_contains_fields() {
+        let g = generators::ring(4);
+        let txt = DegreeStats::compute(&g).render();
+        assert!(txt.contains("nodes            4"));
+        assert!(txt.contains("edges            4"));
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let g = generators::star(9); // hub out-degree 8, leaves 1
+        let h = out_degree_histogram(&g);
+        assert_eq!(h[0], 8); // eight leaves with degree 1
+        assert_eq!(*h.last().expect("nonempty"), 1); // hub in [8,16)
+        assert_eq!(h.len(), 4);
+    }
+
+    #[test]
+    fn empty_graph_stats() {
+        let g = crate::graph::GraphBuilder::new(0).build().expect("builds");
+        let s = DegreeStats::compute(&g);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean_out, 0.0);
+    }
+}

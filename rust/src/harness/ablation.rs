@@ -1,0 +1,248 @@
+//! Ablation studies beyond the paper's figures (DESIGN.md §4):
+//!
+//! * **ABL-RATE** — measured MP contraction vs the Prop. 2 prediction
+//!   `1 - σ²(B̂)/N` across graph families (the bound's tightness).
+//! * **ABL-SAMPLER** — uniform vs exponential-clock vs residual-weighted
+//!   activation (§IV future-work 3).
+//! * **ABL-PARALLEL** — conflict-free batch activation speedup vs batch
+//!   size and graph density (§IV future-work 1).
+//! * **ABL-GREEDY** — randomized vs best-atom selection: convergence per
+//!   iteration vs communication per iteration.
+
+use crate::algo::common::PageRankSolver;
+use crate::algo::greedy_mp::GreedyMatchingPursuit;
+use crate::algo::mp::MatchingPursuit;
+use crate::algo::parallel_mp::ParallelMatchingPursuit;
+use crate::coordinator::{Coordinator, CoordinatorConfig, SamplerKind};
+use crate::graph::generators;
+use crate::graph::Graph;
+use crate::linalg::solve::exact_pagerank;
+use crate::linalg::spectral;
+use crate::linalg::vector;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One ABL-RATE row.
+#[derive(Debug, Clone)]
+pub struct RateRow {
+    pub family: String,
+    pub n: usize,
+    pub predicted_bound: f64,
+    pub measured_rate: f64,
+    /// measured decades-per-step / predicted decades-per-step (≥ 1 means
+    /// the bound is conservative, as expected).
+    pub tightness: f64,
+}
+
+/// ABL-RATE: contraction-rate bound tightness across graph families.
+pub fn rate_study(n: usize, alpha: f64, rounds: usize, steps: usize, seed: u64) -> Vec<RateRow> {
+    let families: Vec<(String, Graph)> = vec![
+        ("er-threshold(0.5)".into(), generators::er_threshold(n, 0.5, seed)),
+        ("er-sparse".into(), generators::erdos_renyi(n, (8.0 / n as f64).min(1.0), seed)),
+        ("barabasi-albert".into(), generators::barabasi_albert(n, 4, seed)),
+        ("watts-strogatz".into(), generators::watts_strogatz(n, 4, 0.1, seed)),
+        ("ring".into(), generators::ring(n)),
+        ("star".into(), generators::star(n)),
+    ];
+    let base = Rng::seeded(seed ^ 0xAB1);
+    families
+        .into_iter()
+        .map(|(family, g)| {
+            let x_star = exact_pagerank(&g, alpha);
+            let stride = (steps / 50).max(1);
+            let mut rounds_data = Vec::with_capacity(rounds);
+            for round in 0..rounds {
+                let mut rng = base.fork(round as u64);
+                let mut mp = MatchingPursuit::new(&g, alpha);
+                let tr = crate::algo::common::Trajectory::record(
+                    &mut mp, &x_star, steps, stride, &mut rng,
+                );
+                rounds_data.push(tr.errors);
+            }
+            let avg = stats::average_trajectories(&rounds_data);
+            let skip = avg.len() / 5;
+            let measured = stats::decay_rate(&avg[skip..]).powf(1.0 / stride as f64);
+            let bound = spectral::mp_contraction_rate(&g, alpha);
+            let tightness = (1.0 - measured).max(1e-15) / (1.0 - bound).max(1e-15);
+            RateRow {
+                family,
+                n: g.n(),
+                predicted_bound: bound,
+                measured_rate: measured,
+                tightness,
+            }
+        })
+        .collect()
+}
+
+/// One ABL-SAMPLER row.
+#[derive(Debug, Clone)]
+pub struct SamplerRow {
+    pub sampler: String,
+    pub final_error: f64,
+    pub deferred: u64,
+    pub makespan: f64,
+}
+
+/// ABL-SAMPLER: error after a fixed activation budget per sampler.
+pub fn sampler_study(n: usize, alpha: f64, activations: u64, seed: u64) -> Vec<SamplerRow> {
+    let g = generators::er_threshold(n, 0.5, seed);
+    let x_star = exact_pagerank(&g, alpha);
+    let kinds: Vec<(String, SamplerKind)> = vec![
+        ("uniform".into(), SamplerKind::Uniform),
+        ("exp-clocks".into(), SamplerKind::ExponentialClocks),
+        ("residual-weighted".into(), SamplerKind::ResidualWeighted { floor: 1e-12 }),
+    ];
+    kinds
+        .into_iter()
+        .map(|(name, kind)| {
+            let cfg = CoordinatorConfig::default()
+                .with_seed(seed)
+                .with_alpha(alpha)
+                .with_sampler(kind);
+            let mut coord = Coordinator::new(&g, cfg);
+            let rep = coord.run(activations);
+            SamplerRow {
+                sampler: name,
+                final_error: vector::dist_sq(&coord.estimate(), &x_star) / n as f64,
+                deferred: rep.metrics.deferred,
+                makespan: rep.metrics.makespan,
+            }
+        })
+        .collect()
+}
+
+/// One ABL-PARALLEL row.
+#[derive(Debug, Clone)]
+pub struct ParallelRow {
+    pub density: f64,
+    pub requested_batch: usize,
+    pub effective_batch: f64,
+    pub final_error: f64,
+}
+
+/// ABL-PARALLEL: effective parallelism vs requested batch and density.
+pub fn parallel_study(
+    n: usize,
+    alpha: f64,
+    batches: &[usize],
+    densities: &[f64],
+    steps_per_batch: usize,
+    seed: u64,
+) -> Vec<ParallelRow> {
+    let mut rows = Vec::new();
+    for &density in densities {
+        let g = generators::erdos_renyi(n, density, seed);
+        let x_star = exact_pagerank(&g, alpha);
+        for &b in batches {
+            let mut pmp = ParallelMatchingPursuit::new(&g, alpha, b);
+            let mut rng = Rng::seeded(seed ^ (b as u64) << 8);
+            for _ in 0..steps_per_batch {
+                pmp.step(&mut rng);
+            }
+            rows.push(ParallelRow {
+                density,
+                requested_batch: b,
+                effective_batch: pmp.mean_batch_size(),
+                final_error: vector::dist_sq(&pmp.estimate(), &x_star) / n as f64,
+            });
+        }
+    }
+    rows
+}
+
+/// One ABL-GREEDY row.
+#[derive(Debug, Clone)]
+pub struct GreedyRow {
+    pub algo: String,
+    pub iterations: usize,
+    pub final_error: f64,
+    pub total_reads: usize,
+}
+
+/// ABL-GREEDY: randomized vs best-atom MP at a fixed iteration budget.
+pub fn greedy_study(n: usize, alpha: f64, iterations: usize, seed: u64) -> Vec<GreedyRow> {
+    let g = generators::er_threshold(n, 0.5, seed);
+    let x_star = exact_pagerank(&g, alpha);
+    let mut out = Vec::new();
+
+    let mut mp = MatchingPursuit::new(&g, alpha);
+    let mut rng = Rng::seeded(seed + 1);
+    let mut reads = 0usize;
+    for _ in 0..iterations {
+        reads += mp.step(&mut rng).reads;
+    }
+    out.push(GreedyRow {
+        algo: "randomized (Alg. 1)".into(),
+        iterations,
+        final_error: vector::dist_sq(&mp.estimate(), &x_star) / n as f64,
+        total_reads: reads,
+    });
+
+    let mut gmp = GreedyMatchingPursuit::new(&g, alpha);
+    let mut rng = Rng::seeded(seed + 2);
+    let mut reads = 0usize;
+    for _ in 0..iterations {
+        reads += gmp.step(&mut rng).reads;
+    }
+    out.push(GreedyRow {
+        algo: "greedy best-atom [2]".into(),
+        iterations,
+        final_error: vector::dist_sq(&gmp.estimate(), &x_star) / n as f64,
+        total_reads: reads,
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_study_bound_is_conservative() {
+        let rows = rate_study(20, 0.85, 5, 4000, 11);
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            assert!(r.predicted_bound < 1.0);
+            assert!(r.measured_rate < 1.0, "{}: no decay", r.family);
+            // measured at least as fast as predicted (bound conservative)
+            assert!(
+                r.tightness > 0.8,
+                "{}: measured slower than bound: {r:?}",
+                r.family
+            );
+        }
+    }
+
+    #[test]
+    fn sampler_study_weighted_wins() {
+        let rows = sampler_study(30, 0.85, 3000, 12);
+        assert_eq!(rows.len(), 3);
+        let uni = rows.iter().find(|r| r.sampler == "uniform").expect("uniform");
+        let wei = rows
+            .iter()
+            .find(|r| r.sampler == "residual-weighted")
+            .expect("weighted");
+        assert!(wei.final_error < uni.final_error);
+    }
+
+    #[test]
+    fn parallel_study_density_effect() {
+        let rows = parallel_study(100, 0.85, &[8], &[0.01, 0.3], 200, 13);
+        assert_eq!(rows.len(), 2);
+        let sparse = &rows[0];
+        let dense = &rows[1];
+        assert!(sparse.effective_batch > dense.effective_batch);
+    }
+
+    #[test]
+    fn greedy_study_tradeoff() {
+        let rows = greedy_study(25, 0.85, 2000, 14);
+        let rand = &rows[0];
+        let greedy = &rows[1];
+        // Greedy is at least as good per iteration…
+        assert!(greedy.final_error <= rand.final_error * 1.5);
+        // …but pays more reads (argmax scans).
+        assert!(greedy.total_reads > rand.total_reads);
+    }
+}

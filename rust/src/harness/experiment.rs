@@ -1,0 +1,145 @@
+//! Multi-round experiment runner.
+//!
+//! The paper's figures average many independent simulation rounds (100
+//! for Fig. 1, 1000 for Fig. 2). Rounds are embarrassingly parallel and
+//! deterministic: round `i` uses `base_rng.fork(i)`, so results are
+//! identical whatever the thread count.
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// An averaged trajectory with its cross-round variance.
+#[derive(Debug, Clone)]
+pub struct AveragedTrajectory {
+    pub name: String,
+    /// Activation index of each sample (t = stride * i).
+    pub ts: Vec<usize>,
+    pub mean: Vec<f64>,
+    pub variance: Vec<f64>,
+    /// A few raw rounds for spaghetti plots (paper Fig. 1 shows them).
+    pub sample_rounds: Vec<Vec<f64>>,
+}
+
+impl AveragedTrajectory {
+    /// Fitted per-activation decay rate of the mean trajectory.
+    pub fn per_step_rate(&self, stride: usize) -> f64 {
+        stats::decay_rate(&self.mean).powf(1.0 / stride as f64)
+    }
+
+    pub fn final_mean(&self) -> f64 {
+        *self.mean.last().expect("nonempty")
+    }
+}
+
+/// Run `rounds` independent trajectories of `steps` activations each and
+/// average. `make_round(round_rng) -> Vec<f64>` produces one error
+/// trajectory sampled every `stride` (including t=0): the closure owns
+/// algorithm construction so this runner works for every solver and for
+/// the coordinator alike.
+pub fn run_rounds<F>(
+    name: &str,
+    rounds: usize,
+    base: &Rng,
+    threads: usize,
+    make_round: F,
+) -> AveragedTrajectory
+where
+    F: Fn(Rng) -> Vec<f64> + Sync,
+{
+    assert!(rounds > 0);
+    let threads = threads.max(1).min(rounds);
+    let results: Vec<Vec<f64>> = if threads == 1 {
+        (0..rounds).map(|i| make_round(base.fork(i as u64))).collect()
+    } else {
+        // Static block partition over scoped threads — deterministic
+        // regardless of scheduling.
+        let mut results: Vec<Option<Vec<f64>>> = vec![None; rounds];
+        let chunk = rounds.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = results
+                .chunks_mut(chunk)
+                .enumerate()
+                .map(|(ci, slot)| {
+                    let make_round = &make_round;
+                    let base = base.clone();
+                    scope.spawn(move || {
+                        for (off, s) in slot.iter_mut().enumerate() {
+                            let round = ci * chunk + off;
+                            *s = Some(make_round(base.fork(round as u64)));
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("round thread panicked");
+            }
+        });
+        results.into_iter().map(|r| r.expect("round filled")).collect()
+    };
+
+    let mean = stats::average_trajectories(&results);
+    let variance = stats::trajectory_variance(&results);
+    let sample_rounds: Vec<Vec<f64>> = results.iter().take(5).cloned().collect();
+    let len = mean.len();
+    AveragedTrajectory {
+        name: name.to_string(),
+        ts: (0..len).collect(),
+        mean,
+        variance,
+        sample_rounds,
+    }
+}
+
+/// Fill in the activation indices given the sampling stride.
+pub fn with_stride(mut tr: AveragedTrajectory, stride: usize) -> AveragedTrajectory {
+    tr.ts = (0..tr.mean.len()).map(|i| i * stride).collect();
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geometric_round(rng: Rng) -> Vec<f64> {
+        // err halves per record, with seed-dependent start
+        let mut r = rng;
+        let start = 1.0 + r.uniform();
+        (0..20).map(|i| start * 0.5f64.powi(i)).collect()
+    }
+
+    #[test]
+    fn averaging_is_deterministic_and_thread_invariant() {
+        let base = Rng::seeded(99);
+        let a = run_rounds("x", 16, &base, 1, geometric_round);
+        let b = run_rounds("x", 16, &base, 4, geometric_round);
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.variance, b.variance);
+    }
+
+    #[test]
+    fn averaged_rate_recovered() {
+        let base = Rng::seeded(100);
+        let tr = run_rounds("x", 8, &base, 2, geometric_round);
+        let rate = crate::util::stats::decay_rate(&tr.mean);
+        assert!((rate - 0.5).abs() < 1e-9);
+        // stride accounting
+        let tr = with_stride(tr, 10);
+        assert_eq!(tr.ts[3], 30);
+        let per_step = tr.per_step_rate(10);
+        assert!((per_step - 0.5f64.powf(0.1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_rounds_kept() {
+        let base = Rng::seeded(101);
+        let tr = run_rounds("x", 3, &base, 2, geometric_round);
+        assert_eq!(tr.sample_rounds.len(), 3);
+    }
+
+    #[test]
+    fn variance_positive_across_distinct_rounds() {
+        let base = Rng::seeded(102);
+        let tr = run_rounds("x", 10, &base, 3, geometric_round);
+        assert!(tr.variance[0] > 0.0);
+    }
+}

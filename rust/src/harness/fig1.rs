@@ -1,0 +1,265 @@
+//! **FIG1** — the paper's Figure 1.
+//!
+//! Setup (§III): N = 100, hyperlink matrix from iid U\[0,1\] entries
+//! thresholded at 0.5, α = 0.85, 100 simulation rounds averaged.
+//! Trajectories of `(1/N)‖x_t - x*‖²` for:
+//!
+//! * the proposed Matching-Pursuit method (expected: exponential decay),
+//! * \[15\] You–Tempo–Qiu, initialized at 0 (expected: exponential, at a
+//!   similar rate),
+//! * \[6\] Ishii–Tempo, initialized at 𝟙 (expected: sub-exponential decay
+//!   with larger cross-round variance).
+//!
+//! `run` reproduces all three averaged trajectories plus the qualitative
+//! claims as machine-checkable [`Fig1Verdict`] fields.
+
+use crate::algo::common::Trajectory;
+use crate::algo::ishii_tempo::IshiiTempo;
+use crate::algo::mp::MatchingPursuit;
+use crate::algo::you_tempo_qiu::YouTempoQiu;
+use crate::graph::generators;
+use crate::linalg::solve::exact_pagerank;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::experiment::{run_rounds, with_stride, AveragedTrajectory};
+
+/// Experiment parameters (defaults = the paper's §III).
+#[derive(Debug, Clone)]
+pub struct Fig1Config {
+    pub n: usize,
+    pub threshold: f64,
+    pub alpha: f64,
+    pub rounds: usize,
+    /// Total activations per round.
+    pub steps: usize,
+    /// Error-sampling stride (in activations).
+    pub stride: usize,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for Fig1Config {
+    fn default() -> Self {
+        Fig1Config {
+            n: 100,
+            threshold: 0.5,
+            alpha: 0.85,
+            rounds: 100,
+            steps: 60_000,
+            stride: 500,
+            seed: 2017,
+            threads: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4),
+        }
+    }
+}
+
+/// Machine-checked qualitative claims of Figure 1.
+#[derive(Debug, Clone)]
+pub struct Fig1Verdict {
+    /// Per-activation decay rate of E‖x_t - x*‖² for MP (should be < 1).
+    pub mp_rate: f64,
+    /// Same for [15].
+    pub ytq_rate: f64,
+    /// The paper's Prop. 2 bound 1 - σ²(B̂)/N.
+    pub predicted_mp_bound: f64,
+    /// Final mean error of [6] / final mean error of MP (≫ 1 expected).
+    pub it_over_mp_final: f64,
+    /// Mean trajectory variance of [6] / MP over the tail (≫ 1 expected).
+    pub it_over_mp_variance: f64,
+}
+
+/// Full Figure-1 result.
+#[derive(Debug, Clone)]
+pub struct Fig1Result {
+    pub config: Fig1Config,
+    pub mp: AveragedTrajectory,
+    pub ytq: AveragedTrajectory,
+    pub it: AveragedTrajectory,
+    pub verdict: Fig1Verdict,
+}
+
+/// Run the Figure-1 experiment.
+pub fn run(cfg: &Fig1Config) -> Fig1Result {
+    let g = generators::er_threshold(cfg.n, cfg.threshold, cfg.seed);
+    let x_star = exact_pagerank(&g, cfg.alpha);
+    let base = Rng::seeded(cfg.seed ^ 0xF161);
+
+    let record =
+        |mut solver: Box<dyn crate::algo::common::PageRankSolver>, mut rng: Rng| -> Vec<f64> {
+            Trajectory::record(&mut *solver, &x_star, cfg.steps, cfg.stride, &mut rng).errors
+        };
+
+    let mp = with_stride(
+        run_rounds("mp", cfg.rounds, &base, cfg.threads, |rng| {
+            record(Box::new(MatchingPursuit::new(&g, cfg.alpha)), rng)
+        }),
+        cfg.stride,
+    );
+    let ytq = with_stride(
+        run_rounds("ytq15", cfg.rounds, &base, cfg.threads, |rng| {
+            record(Box::new(YouTempoQiu::new(&g, cfg.alpha)), rng)
+        }),
+        cfg.stride,
+    );
+    let it = with_stride(
+        run_rounds("ishii_tempo6", cfg.rounds, &base, cfg.threads, |rng| {
+            record(Box::new(IshiiTempo::new(&g, cfg.alpha)), rng)
+        }),
+        cfg.stride,
+    );
+
+    // Fit rates on the decaying tail (skip the initial transient).
+    let skip = mp.mean.len() / 5;
+    let mp_rate = stats::decay_rate(&mp.mean[skip..]).powf(1.0 / cfg.stride as f64);
+    let ytq_rate = stats::decay_rate(&ytq.mean[skip..]).powf(1.0 / cfg.stride as f64);
+    let predicted_mp_bound = crate::linalg::spectral::mp_contraction_rate(&g, cfg.alpha);
+
+    let tail = mp.mean.len() * 3 / 4;
+    let it_var = stats::mean(&it.variance[tail..]);
+    let mp_var = stats::mean(&mp.variance[tail..]).max(f64::MIN_POSITIVE);
+
+    let verdict = Fig1Verdict {
+        mp_rate,
+        ytq_rate,
+        predicted_mp_bound,
+        it_over_mp_final: it.final_mean() / mp.final_mean().max(f64::MIN_POSITIVE),
+        it_over_mp_variance: it_var / mp_var,
+    };
+
+    Fig1Result { config: cfg.clone(), mp, ytq, it, verdict }
+}
+
+impl Fig1Result {
+    /// CSV of all three averaged trajectories.
+    pub fn to_csv(&self) -> String {
+        super::report::trajectories_csv(&[self.mp.clone(), self.ytq.clone(), self.it.clone()])
+    }
+
+    /// Terminal rendering: plot + verdict table.
+    pub fn render(&self) -> String {
+        let mk = |tr: &AveragedTrajectory, glyph: char| super::plot::Series {
+            label: tr.name.clone(),
+            xs: tr.ts.iter().map(|&t| t as f64).collect(),
+            ys: tr.mean.clone(),
+            glyph,
+        };
+        let plot = super::plot::semilogy(
+            &[mk(&self.mp, '*'), mk(&self.ytq, '+'), mk(&self.it, 'o')],
+            72,
+            20,
+            &format!(
+                "Fig. 1 — (1/N)‖x_t - x*‖², N={}, α={}, {} rounds",
+                self.config.n, self.config.alpha, self.config.rounds
+            ),
+        );
+        let v = &self.verdict;
+        let tbl = super::report::table(
+            &["quantity", "value", "paper expectation"],
+            &[
+                vec![
+                    "MP per-step rate".into(),
+                    format!("{:.6}", v.mp_rate),
+                    format!("exp., ≤ bound {:.6}", v.predicted_mp_bound),
+                ],
+                vec![
+                    "[15] per-step rate".into(),
+                    format!("{:.6}", v.ytq_rate),
+                    "exp., similar to MP".into(),
+                ],
+                vec![
+                    "[6]/MP final error".into(),
+                    format!("{:.3e}", v.it_over_mp_final),
+                    "≫ 1 (sub-exponential)".into(),
+                ],
+                vec![
+                    "[6]/MP tail variance".into(),
+                    format!("{:.3e}", v.it_over_mp_variance),
+                    "≫ 1 (larger variance)".into(),
+                ],
+            ],
+        );
+        format!("{plot}\n{tbl}")
+    }
+
+    /// The paper's qualitative claims as a pass/fail list.
+    pub fn claims(&self) -> Vec<(&'static str, bool)> {
+        let v = &self.verdict;
+        vec![
+            ("MP decays exponentially (rate < 1)", v.mp_rate < 0.99999),
+            (
+                "MP rate is at least as fast as the Prop.2 bound",
+                v.mp_rate <= v.predicted_mp_bound + 1e-4,
+            ),
+            (
+                "[15] decays exponentially at a similar rate (within 2x of MP's decade count)",
+                v.ytq_rate < 1.0
+                    && (1.0 - v.ytq_rate) > 0.4 * (1.0 - v.mp_rate)
+                    && (1.0 - v.ytq_rate) < 2.5 * (1.0 - v.mp_rate),
+            ),
+            ("[6] is far behind both at the horizon", v.it_over_mp_final > 1e2),
+            ("[6] has larger trajectory variance", v.it_over_mp_variance > 1.0),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scaled-down Fig. 1 (N=30, 10 rounds) — the full-size run lives in
+    /// the bench / CLI; this pins the machinery and the claims.
+    #[test]
+    fn small_fig1_reproduces_qualitative_claims() {
+        let cfg = Fig1Config {
+            n: 30,
+            rounds: 10,
+            steps: 12_000,
+            stride: 200,
+            seed: 3,
+            threads: 4,
+            ..Default::default()
+        };
+        let res = run(&cfg);
+        for (claim, ok) in res.claims() {
+            assert!(ok, "claim failed: {claim}\n{:#?}", res.verdict);
+        }
+    }
+
+    #[test]
+    fn csv_and_render_shapes() {
+        let cfg = Fig1Config {
+            n: 20,
+            rounds: 4,
+            steps: 2_000,
+            stride: 200,
+            seed: 4,
+            threads: 2,
+            ..Default::default()
+        };
+        let res = run(&cfg);
+        let csv = res.to_csv();
+        assert!(csv.lines().count() > 5);
+        assert!(csv.starts_with("t,mp_mean,mp_var,ytq15_mean"));
+        let txt = res.render();
+        assert!(txt.contains("Fig. 1"));
+        assert!(txt.contains("MP per-step rate"));
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = Fig1Config {
+            n: 15,
+            rounds: 3,
+            steps: 1_000,
+            stride: 100,
+            seed: 5,
+            threads: 3,
+            ..Default::default()
+        };
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.mp.mean, b.mp.mean);
+        assert_eq!(a.it.variance, b.it.variance);
+    }
+}

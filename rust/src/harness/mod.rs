@@ -1,0 +1,18 @@
+//! Experiment harness: regenerates every figure in the paper's evaluation
+//! plus the ablations of DESIGN.md §4.
+//!
+//! * [`experiment`] — multi-round averaged-trajectory runner (the paper
+//!   averages 100 rounds for Fig. 1, 1000 for Fig. 2), parallelized over
+//!   OS threads.
+//! * [`fig1`] — Figure 1: `(1/N)‖x_t - x*‖²` for MP vs \[6\] vs \[15\].
+//! * [`fig2`] — Figure 2: `‖s_t - s‖²` for Algorithm 2.
+//! * [`ablation`] — rate-vs-prediction, sampler and parallelism studies.
+//! * [`plot`] — ASCII log-scale trajectory plots for terminal reports.
+//! * [`report`] — CSV serialization of every experiment.
+
+pub mod ablation;
+pub mod experiment;
+pub mod fig1;
+pub mod fig2;
+pub mod plot;
+pub mod report;

@@ -1,0 +1,113 @@
+//! ASCII log-scale trajectory plots — the terminal rendition of the
+//! paper's semilogy figures.
+
+/// One plotted series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+    pub glyph: char,
+}
+
+/// Render series on a log10 y-axis, linear x-axis.
+pub fn semilogy(series: &[Series], width: usize, height: usize, title: &str) -> String {
+    assert!(width >= 16 && height >= 4, "plot too small");
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for s in series {
+        for (&x, &y) in s.xs.iter().zip(&s.ys) {
+            if y > 0.0 && y.is_finite() {
+                pts.push((x, y.log10()));
+            }
+        }
+    }
+    if pts.is_empty() {
+        return format!("{title}\n(no positive data to plot)\n");
+    }
+    let xmin = pts.iter().map(|p| p.0).fold(f64::MAX, f64::min);
+    let xmax = pts.iter().map(|p| p.0).fold(f64::MIN, f64::max);
+    let ymin = pts.iter().map(|p| p.1).fold(f64::MAX, f64::min);
+    let ymax = pts.iter().map(|p| p.1).fold(f64::MIN, f64::max);
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for (&x, &y) in s.xs.iter().zip(&s.ys) {
+            if !(y > 0.0) || !y.is_finite() {
+                continue;
+            }
+            let col = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row = (((ymax - y.log10()) / yspan) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = s.glyph;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax - yspan * i as f64 / (height - 1) as f64;
+        let line: String = row.iter().collect();
+        out.push_str(&format!("1e{yv:>6.1} |{line}|\n"));
+    }
+    out.push_str(&format!(
+        "{:>9} +{}+\n{:>10} {:<.0}{:>width$.0}\n",
+        "",
+        "-".repeat(width),
+        "t =",
+        xmin,
+        xmax,
+        width = width - 1
+    ));
+    for s in series {
+        out.push_str(&format!("  {} {}\n", s.glyph, s.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(label: &str, glyph: char, rate: f64) -> Series {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| rate.powf(x)).collect();
+        Series { label: label.into(), xs, ys, glyph: glyph }
+    }
+
+    #[test]
+    fn renders_title_legend_and_glyphs() {
+        let s = [mk("fast", '*', 0.5), mk("slow", 'o', 0.95)];
+        let txt = semilogy(&s, 60, 16, "decay");
+        assert!(txt.starts_with("decay\n"));
+        assert!(txt.contains("* fast"));
+        assert!(txt.contains("o slow"));
+        assert!(txt.matches('*').count() > 10);
+    }
+
+    #[test]
+    fn empty_data_handled() {
+        let s = [Series { label: "x".into(), xs: vec![1.0], ys: vec![0.0], glyph: '*' }];
+        let txt = semilogy(&s, 40, 8, "t");
+        assert!(txt.contains("no positive data"));
+    }
+
+    #[test]
+    fn faster_series_drops_lower() {
+        let s = [mk("fast", '*', 0.5), mk("slow", 'o', 0.99)];
+        let txt = semilogy(&s, 60, 20, "t");
+        // last grid row (smallest y) should contain the fast glyph only
+        let rows: Vec<&str> = txt.lines().collect();
+        let low_rows = &rows[15..20];
+        let fast_low = low_rows.iter().any(|r| r.contains('*'));
+        let slow_low = low_rows.iter().any(|r| r.contains('o'));
+        assert!(fast_low && !slow_low, "{txt}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_small_panics() {
+        semilogy(&[], 4, 2, "t");
+    }
+}

@@ -1,0 +1,124 @@
+//! CSV and table rendering for experiment outputs.
+
+use super::experiment::AveragedTrajectory;
+
+/// Serialize averaged trajectories (shared t-axis) as CSV:
+/// `t,<name>_mean,<name>_var,...` per series.
+pub fn trajectories_csv(trs: &[AveragedTrajectory]) -> String {
+    assert!(!trs.is_empty());
+    let len = trs[0].mean.len();
+    assert!(
+        trs.iter().all(|t| t.mean.len() == len && t.ts.len() == len),
+        "trajectory lengths differ"
+    );
+    let mut out = String::from("t");
+    for t in trs {
+        let id = t.name.replace([' ', ','], "_");
+        out.push_str(&format!(",{id}_mean,{id}_var"));
+    }
+    out.push('\n');
+    for i in 0..len {
+        out.push_str(&trs[0].ts[i].to_string());
+        for t in trs {
+            out.push_str(&format!(",{:e},{:e}", t.mean[i], t.variance[i]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// A simple aligned text table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), cols, "row arity mismatch");
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<&str>, widths: &[usize]| -> String {
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(widths) {
+            line.push_str(&format!("{c:<w$}  ", w = w));
+        }
+        line.trim_end().to_string()
+    };
+    out.push_str(&fmt_row(headers.to_vec(), &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row.iter().map(String::as_str).collect(), &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Write text to a file, creating parent directories.
+pub fn write_file(path: &std::path::Path, content: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(name: &str) -> AveragedTrajectory {
+        AveragedTrajectory {
+            name: name.into(),
+            ts: vec![0, 10, 20],
+            mean: vec![1.0, 0.5, 0.25],
+            variance: vec![0.0, 0.01, 0.02],
+            sample_rounds: vec![],
+        }
+    }
+
+    #[test]
+    fn csv_layout() {
+        let csv = trajectories_csv(&[tr("mp alg"), tr("it")]);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().expect("header"), "t,mp_alg_mean,mp_alg_var,it_mean,it_var");
+        let row = lines.next().expect("row0");
+        assert!(row.starts_with("0,1e0,0e0"));
+        assert_eq!(csv.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_rejects_mismatched_lengths() {
+        let mut b = tr("b");
+        b.mean.pop();
+        b.ts.pop();
+        b.variance.pop();
+        trajectories_csv(&[tr("a"), b]);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let txt = table(
+            &["algo", "rate"],
+            &[
+                vec!["mp".into(), "0.99957".into()],
+                vec!["ishii-tempo".into(), "~1/t".into()],
+            ],
+        );
+        let lines: Vec<&str> = txt.lines().collect();
+        assert!(lines[0].starts_with("algo"));
+        assert!(lines[2].starts_with("mp"));
+        assert!(lines[3].starts_with("ishii-tempo"));
+    }
+
+    #[test]
+    fn write_file_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("prmp_report_{}", std::process::id()));
+        let path = dir.join("sub/out.csv");
+        write_file(&path, "x\n").expect("writes");
+        assert_eq!(std::fs::read_to_string(&path).expect("reads"), "x\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

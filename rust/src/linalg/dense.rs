@@ -1,0 +1,281 @@
+//! Column-major dense matrices.
+//!
+//! Used for reference computations (exact solve, spectra, baselines'
+//! expectation matrices) at the paper's experiment scales (N ≤ a few
+//! thousand). The production path never materializes a dense matrix.
+
+use crate::graph::Graph;
+
+/// Column-major dense matrix. Column-major matches both the paper's
+/// column-atom view of `B = I - αA` and the XLA f32 layout used by the
+/// PJRT runtime (rust/src/runtime/pad.rs converts directly).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    /// data[j * rows + i] = entry (i, j)
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> DenseMatrix {
+        DenseMatrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// Build from a row-major closure (convenient for tests).
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m.set(i, j, f(i, j));
+            }
+        }
+        m
+    }
+
+    /// The column-stochastic hyperlink matrix `A` of the graph:
+    /// `A[i][j] = 1/N_j` iff `j` links to `i` (paper §I).
+    pub fn hyperlink(g: &Graph) -> DenseMatrix {
+        let n = g.n();
+        let mut m = DenseMatrix::zeros(n, n);
+        for j in 0..n {
+            let deg = g.out_degree(j);
+            assert!(deg > 0, "dangling page {j}: repair the graph first");
+            let w = 1.0 / deg as f64;
+            for &i in g.out(j) {
+                m.set(i as usize, j, w);
+            }
+        }
+        m
+    }
+
+    /// `B = I - αA` for the graph (paper §II-B).
+    pub fn b_matrix(g: &Graph, alpha: f64) -> DenseMatrix {
+        let mut m = DenseMatrix::hyperlink(g);
+        for v in m.data.iter_mut() {
+            *v *= -alpha;
+        }
+        for i in 0..m.rows {
+            let v = m.get(i, i) + 1.0;
+            m.set(i, i, v);
+        }
+        m
+    }
+
+    /// The perturbed matrix `M = αA + (1-α)/N 𝟙𝟙ᵀ` (Definition 1).
+    pub fn google_matrix(g: &Graph, alpha: f64) -> DenseMatrix {
+        let n = g.n();
+        let mut m = DenseMatrix::hyperlink(g);
+        let tele = (1.0 - alpha) / n as f64;
+        for v in m.data.iter_mut() {
+            *v = alpha * *v + tele;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i] = v;
+    }
+
+    /// Borrow column `j` as a slice (column-major payoff).
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Raw column-major data.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// y = self · x
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for j in 0..self.cols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            let col = self.col(j);
+            for i in 0..self.rows {
+                y[i] += col[i] * xj;
+            }
+        }
+        y
+    }
+
+    /// y = selfᵀ · x
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        (0..self.cols)
+            .map(|j| crate::linalg::vector::dot(self.col(j), x))
+            .collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> DenseMatrix {
+        DenseMatrix::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+
+    /// self · other (naive; reference scales only).
+    pub fn matmul(&self, other: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = DenseMatrix::zeros(self.rows, other.cols);
+        for j in 0..other.cols {
+            let y = self.matvec(other.col(j));
+            for i in 0..self.rows {
+                out.set(i, j, y[i]);
+            }
+        }
+        out
+    }
+
+    /// Per-column squared norms `{‖B(:,k)‖²}` — the paper's Remark 3
+    /// pre-processing step.
+    pub fn column_norms_sq(&self) -> Vec<f64> {
+        (0..self.cols)
+            .map(|j| crate::linalg::vector::norm2_sq(self.col(j)))
+            .collect()
+    }
+
+    /// Column-normalized copy `B̂` (each column scaled to unit l2 norm).
+    pub fn column_normalized(&self) -> DenseMatrix {
+        let mut out = self.clone();
+        for j in 0..out.cols {
+            let nrm = crate::linalg::vector::norm2(self.col(j));
+            assert!(nrm > 0.0, "zero column {j} cannot be normalized");
+            let s = 1.0 / nrm;
+            for i in 0..out.rows {
+                let v = out.get(i, j) * s;
+                out.set(i, j, v);
+            }
+        }
+        out
+    }
+
+    /// Whether every column sums to 1 (±tol) with non-negative entries.
+    pub fn is_column_stochastic(&self, tol: f64) -> bool {
+        (0..self.cols).all(|j| {
+            let col = self.col(j);
+            col.iter().all(|&v| v >= -tol)
+                && (crate::linalg::vector::sum(col) - 1.0).abs() <= tol
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn identity_and_access() {
+        let m = DenseMatrix::identity(3);
+        assert_eq!(m.get(1, 1), 1.0);
+        assert_eq!(m.get(0, 1), 0.0);
+        assert_eq!(m.col(2), &[0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn hyperlink_is_column_stochastic() {
+        let g = generators::er_threshold(60, 0.5, 3);
+        let a = DenseMatrix::hyperlink(&g);
+        assert!(a.is_column_stochastic(1e-12));
+    }
+
+    #[test]
+    fn hyperlink_matches_graph_entries() {
+        let g = generators::star(4);
+        let a = DenseMatrix::hyperlink(&g);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(a.get(i, j), g.a_entry(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn b_matrix_definition() {
+        let g = generators::ring(4);
+        let alpha = 0.85;
+        let b = DenseMatrix::b_matrix(&g, alpha);
+        let a = DenseMatrix::hyperlink(&g);
+        for i in 0..4 {
+            for j in 0..4 {
+                let expect = if i == j { 1.0 } else { 0.0 } - alpha * a.get(i, j);
+                assert!((b.get(i, j) - expect).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn google_matrix_stochastic_and_positive() {
+        let g = generators::er_threshold(30, 0.5, 4);
+        let m = DenseMatrix::google_matrix(&g, 0.85);
+        assert!(m.is_column_stochastic(1e-12));
+        assert!(m.data().iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn matvec_and_transpose_agree() {
+        let m = DenseMatrix::from_fn(3, 2, |i, j| (i * 2 + j) as f64);
+        let x = vec![1.0, -1.0];
+        let y = m.matvec(&x);
+        assert_eq!(y, vec![-1.0, -1.0, -1.0]);
+        let t = m.transpose();
+        let z = t.matvec_t(&x.to_vec());
+        // (Mᵀ)ᵀ x = M x
+        assert_eq!(z.len(), 3);
+        assert_eq!(z, y);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let g = generators::er_threshold(10, 0.5, 6);
+        let a = DenseMatrix::hyperlink(&g);
+        let i = DenseMatrix::identity(10);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn column_norms_and_normalization() {
+        let m = DenseMatrix::from_fn(2, 2, |i, j| if j == 0 { (i + 1) as f64 } else { 2.0 });
+        let n2 = m.column_norms_sq();
+        assert_eq!(n2, vec![5.0, 8.0]);
+        let hat = m.column_normalized();
+        for j in 0..2 {
+            assert!((crate::linalg::vector::norm2(hat.col(j)) - 1.0).abs() < 1e-14);
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Linear-algebra substrate (f64, dependency-free).
+//!
+//! * [`dense`] — column-major dense matrices, the hyperlink matrix `A`
+//!   and `B = I - αA` materializations used by reference computations.
+//! * [`sparse`] — the sparse column view of `B` that the matrix-form MP
+//!   solver iterates on (`O(N_k)` per activation, the paper's cost model).
+//! * [`vector`] — dot/axpy/norm primitives shared by every algorithm.
+//! * [`solve`] — LU decomposition with partial pivoting: produces the
+//!   exact scaled-PageRank reference `x*` of Proposition 1.
+//! * [`spectral`] — symmetric (Jacobi-rotation) eigensolver to obtain
+//!   `σ(B̂)` and `σ₂(Ĉ)`, the quantities controlling the paper's
+//!   convergence rates (Prop. 2 and the Appendix bound).
+
+pub mod dense;
+pub mod solve;
+pub mod sparse;
+pub mod spectral;
+pub mod vector;
+
+pub use dense::DenseMatrix;
+pub use sparse::BColumns;

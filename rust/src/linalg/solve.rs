@@ -1,0 +1,199 @@
+//! Dense LU solve with partial pivoting.
+//!
+//! Produces the exact scaled-PageRank reference of Proposition 1,
+//! `x* = (1-α)(I-αA)⁻¹𝟙`, against which every algorithm's trajectory
+//! error `(1/N)‖x_t - x*‖²` (Fig. 1's y-axis) is measured.
+
+use super::dense::DenseMatrix;
+use crate::graph::Graph;
+
+/// LU factorization (PA = LU) of a square matrix.
+#[derive(Debug, Clone)]
+pub struct Lu {
+    n: usize,
+    /// Combined L (unit lower, below diagonal) and U (upper incl. diagonal).
+    lu: DenseMatrix,
+    /// Row permutation: row i of PA is row perm[i] of A.
+    perm: Vec<usize>,
+}
+
+/// Error for singular systems.
+#[derive(Debug, PartialEq)]
+pub struct SingularMatrix {
+    pub pivot: usize,
+}
+
+impl std::fmt::Display for SingularMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix is numerically singular at pivot {}", self.pivot)
+    }
+}
+
+impl std::error::Error for SingularMatrix {}
+
+impl Lu {
+    /// Factorize. O(n³); reference scales only.
+    pub fn factor(a: &DenseMatrix) -> Result<Lu, SingularMatrix> {
+        assert_eq!(a.rows(), a.cols(), "LU of non-square matrix");
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        for col in 0..n {
+            // Pivot: largest |entry| on/below the diagonal.
+            let mut p = col;
+            let mut best = lu.get(col, col).abs();
+            for r in (col + 1)..n {
+                let v = lu.get(r, col).abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            if best < 1e-300 {
+                return Err(SingularMatrix { pivot: col });
+            }
+            if p != col {
+                for j in 0..n {
+                    let tmp = lu.get(col, j);
+                    lu.set(col, j, lu.get(p, j));
+                    lu.set(p, j, tmp);
+                }
+                perm.swap(col, p);
+            }
+            let piv = lu.get(col, col);
+            for r in (col + 1)..n {
+                let m = lu.get(r, col) / piv;
+                lu.set(r, col, m);
+                if m != 0.0 {
+                    for j in (col + 1)..n {
+                        let v = lu.get(r, j) - m * lu.get(col, j);
+                        lu.set(r, j, v);
+                    }
+                }
+            }
+        }
+        Ok(Lu { n, lu, perm })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.n);
+        // Forward substitution on P b.
+        let mut y = vec![0.0; self.n];
+        for i in 0..self.n {
+            let mut s = b[self.perm[i]];
+            for j in 0..i {
+                s -= self.lu.get(i, j) * y[j];
+            }
+            y[i] = s;
+        }
+        // Back substitution.
+        let mut x = vec![0.0; self.n];
+        for i in (0..self.n).rev() {
+            let mut s = y[i];
+            for j in (i + 1)..self.n {
+                s -= self.lu.get(i, j) * x[j];
+            }
+            x[i] = s / self.lu.get(i, i);
+        }
+        x
+    }
+}
+
+/// The exact scaled PageRank vector `x* = (1-α)(I-αA)⁻¹𝟙` (Prop. 1).
+/// Panics on dangling pages (repair the graph first); `I-αA` is always
+/// invertible for α ∈ (0,1) by Gershgorin (paper's Prop. 1 proof).
+pub fn exact_pagerank(g: &Graph, alpha: f64) -> Vec<f64> {
+    let b = DenseMatrix::b_matrix(g, alpha);
+    let lu = Lu::factor(&b).expect("I - alpha A is provably invertible");
+    let rhs = vec![1.0 - alpha; g.n()];
+    lu.solve(&rhs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::linalg::vector;
+
+    #[test]
+    fn solve_small_system() {
+        // A = [[2, 1], [1, 3]], b = [3, 5] -> x = [4/5, 7/5]
+        let a = DenseMatrix::from_fn(2, 2, |i, j| [[2.0, 1.0], [1.0, 3.0]][i][j]);
+        let lu = Lu::factor(&a).expect("nonsingular");
+        let x = lu.solve(&[3.0, 5.0]);
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // Zero leading pivot forces a row swap.
+        let a = DenseMatrix::from_fn(2, 2, |i, j| [[0.0, 1.0], [1.0, 0.0]][i][j]);
+        let lu = Lu::factor(&a).expect("nonsingular with pivoting");
+        let x = lu.solve(&[2.0, 3.0]);
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = DenseMatrix::from_fn(2, 2, |i, _| if i == 0 { 1.0 } else { 2.0 });
+        assert!(Lu::factor(&a).is_err());
+    }
+
+    #[test]
+    fn residual_is_tiny_on_random_system() {
+        let n = 50;
+        let rng = std::cell::RefCell::new(crate::util::rng::Rng::seeded(3));
+        let a = DenseMatrix::from_fn(n, n, |_, _| rng.borrow_mut().normal());
+        let mut rng2 = crate::util::rng::Rng::seeded(4);
+        let b: Vec<f64> = (0..n).map(|_| rng2.normal()).collect();
+        let lu = Lu::factor(&a).expect("random gaussian is nonsingular whp");
+        let x = lu.solve(&b);
+        let ax = a.matvec(&x);
+        assert!(vector::dist_inf(&ax, &b) < 1e-9);
+    }
+
+    #[test]
+    fn exact_pagerank_satisfies_definition() {
+        let g = generators::er_threshold(60, 0.5, 12);
+        let alpha = 0.85;
+        let x = exact_pagerank(&g, alpha);
+        // (1b): entries sum to N and are nonnegative.
+        assert!((vector::sum(&x) - g.n() as f64).abs() < 1e-8);
+        assert!(x.iter().all(|&v| v > 0.0));
+        // (1a): B x* = (1-α) 1.
+        let b = DenseMatrix::b_matrix(&g, alpha);
+        let bx = b.matvec(&x);
+        for v in bx {
+            assert!((v - (1.0 - alpha)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn exact_pagerank_is_google_eigenvector() {
+        let g = generators::er_threshold(40, 0.5, 13);
+        let x = exact_pagerank(&g, 0.85);
+        let m = DenseMatrix::google_matrix(&g, 0.85);
+        let mx = m.matvec(&x);
+        assert!(vector::dist_inf(&mx, &x) < 1e-10, "M x* != x*");
+    }
+
+    #[test]
+    fn ring_pagerank_uniform() {
+        // Perfect symmetry -> scaled PageRank = 1 everywhere.
+        let x = exact_pagerank(&generators::ring(8), 0.85);
+        for v in x {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn star_hub_dominates() {
+        let x = exact_pagerank(&generators::star(10), 0.85);
+        let hub = x[0];
+        for leaf in &x[1..] {
+            assert!(hub > *leaf);
+        }
+    }
+}

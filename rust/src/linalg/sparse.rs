@@ -1,0 +1,206 @@
+//! Sparse column view of `B = I - αA`.
+//!
+//! The paper's Algorithm 1 only ever touches `B` column-wise:
+//!
+//! * `B(:,k)ᵀ r = r_k - (α/N_k) Σ_{j ∈ out(k)} r_j`   (numerator, §II-D)
+//! * `‖B(:,k)‖² = 1 - 2αA_kk + α²/N_k`                 (denominator, §II-D)
+//! * the residual update adds `-coef · B(:,k)`, whose support is
+//!   `{k} ∪ out(k)`.
+//!
+//! [`BColumns`] precomputes the per-column constants (Remark 3) and
+//! exposes exactly those three operations at `O(N_k)` cost with zero
+//! allocation, which is what the matrix-form solver and the page agents
+//! share.
+
+use crate::graph::Graph;
+
+/// Precomputed column geometry of `B = I - αA` over a graph.
+#[derive(Debug, Clone)]
+pub struct BColumns {
+    alpha: f64,
+    /// ‖B(:,k)‖² per column (paper Remark 3).
+    norms_sq: Vec<f64>,
+    /// 1/N_k per column.
+    inv_out_deg: Vec<f64>,
+    /// whether k links to itself (A_kk = 1/N_k).
+    self_loop: Vec<bool>,
+}
+
+impl BColumns {
+    pub fn new(g: &Graph, alpha: f64) -> BColumns {
+        assert!((0.0..1.0).contains(&alpha) && alpha > 0.0, "alpha must be in (0,1)");
+        let n = g.n();
+        let mut norms_sq = Vec::with_capacity(n);
+        let mut inv_out_deg = Vec::with_capacity(n);
+        let mut self_loop = Vec::with_capacity(n);
+        for k in 0..n {
+            let deg = g.out_degree(k);
+            assert!(deg > 0, "dangling page {k}: repair the graph first");
+            let nk = deg as f64;
+            let akk = if g.has_self_loop(k) { 1.0 / nk } else { 0.0 };
+            // ‖B(:,k)‖² = 1 - 2 α A_kk + α²/N_k  (§II-D)
+            norms_sq.push(1.0 - 2.0 * alpha * akk + alpha * alpha / nk);
+            inv_out_deg.push(1.0 / nk);
+            self_loop.push(akk > 0.0);
+        }
+        BColumns {
+            alpha,
+            norms_sq,
+            inv_out_deg,
+            self_loop,
+        }
+    }
+
+    #[inline]
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.norms_sq.len()
+    }
+
+    /// `‖B(:,k)‖²` — O(1).
+    #[inline]
+    pub fn norm_sq(&self, k: usize) -> f64 {
+        self.norms_sq[k]
+    }
+
+    #[inline]
+    pub fn has_self_loop(&self, k: usize) -> bool {
+        self.self_loop[k]
+    }
+
+    /// `B(:,k)ᵀ r` given the residual vector — O(N_k): one read per
+    /// out-neighbour, exactly the paper's communication count.
+    #[inline]
+    pub fn col_dot(&self, g: &Graph, k: usize, r: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for &j in g.out(k) {
+            s += r[j as usize];
+        }
+        r[k] - self.alpha * self.inv_out_deg[k] * s
+    }
+
+    /// The MP projection coefficient `B(:,k)ᵀ r / ‖B(:,k)‖²`.
+    #[inline]
+    pub fn coefficient(&self, g: &Graph, k: usize, r: &[f64]) -> f64 {
+        self.col_dot(g, k, r) / self.norms_sq[k]
+    }
+
+    /// `r -= coef * B(:,k)` — O(N_k): one write per out-neighbour plus the
+    /// diagonal entry (§II-D residual update).
+    #[inline]
+    pub fn sub_scaled_col(&self, g: &Graph, k: usize, coef: f64, r: &mut [f64]) {
+        // Off-diagonal support: out-neighbours get -α/N_k entries.
+        let w = coef * self.alpha * self.inv_out_deg[k];
+        for &j in g.out(k) {
+            r[j as usize] += w;
+        }
+        // Diagonal entry of B(:,k) is 1 - αA_kk; the self-loop case already
+        // received its +w above, so subtracting coef·1 completes
+        // coef·(1 - α/N_k) for it and coef·1 for the non-loop case.
+        r[k] -= coef;
+    }
+
+    /// Materialize column k densely (tests / cross-checks only).
+    pub fn dense_col(&self, g: &Graph, k: usize) -> Vec<f64> {
+        let mut col = vec![0.0; self.n()];
+        col[k] = 1.0;
+        let w = self.alpha * self.inv_out_deg[k];
+        for &j in g.out(k) {
+            col[j as usize] -= w;
+        }
+        col
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::linalg::dense::DenseMatrix;
+    use crate::linalg::vector;
+    use crate::util::rng::Rng;
+
+    fn check_against_dense(g: &Graph, alpha: f64, seed: u64) {
+        let cols = BColumns::new(g, alpha);
+        let b = DenseMatrix::b_matrix(g, alpha);
+        let mut rng = Rng::seeded(seed);
+        let r: Vec<f64> = (0..g.n()).map(|_| rng.normal()).collect();
+        for k in 0..g.n() {
+            // norms
+            let want_n2 = vector::norm2_sq(b.col(k));
+            assert!(
+                (cols.norm_sq(k) - want_n2).abs() < 1e-12,
+                "norm_sq mismatch at {k}"
+            );
+            // dot
+            let want_dot = vector::dot(b.col(k), &r);
+            assert!(
+                (cols.col_dot(g, k, &r) - want_dot).abs() < 1e-10,
+                "col_dot mismatch at {k}"
+            );
+            // dense col
+            let got = cols.dense_col(g, k);
+            for i in 0..g.n() {
+                assert!((got[i] - b.get(i, k)).abs() < 1e-14);
+            }
+            // sub_scaled_col
+            let coef = 0.37;
+            let mut r2 = r.clone();
+            cols.sub_scaled_col(g, k, coef, &mut r2);
+            for i in 0..g.n() {
+                let want = r[i] - coef * b.get(i, k);
+                assert!((r2[i] - want).abs() < 1e-12, "residual mismatch at ({k},{i})");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dense_on_er() {
+        let g = generators::er_threshold(40, 0.5, 2);
+        check_against_dense(&g, 0.85, 7);
+    }
+
+    #[test]
+    fn matches_dense_with_self_loops() {
+        // SelfLoop-repaired sparse graph guarantees some A_kk > 0.
+        let mut b = crate::graph::GraphBuilder::new(6)
+            .dangling_policy(crate::graph::DanglingPolicy::SelfLoop);
+        b.add_edge(0, 1).add_edge(1, 2).add_edge(2, 0).add_edge(3, 3).add_edge(4, 4);
+        let g = b.build().expect("builds");
+        assert!(g.has_self_loop(3));
+        check_against_dense(&g, 0.85, 8);
+    }
+
+    #[test]
+    fn matches_dense_on_star_and_ring() {
+        check_against_dense(&generators::star(9), 0.85, 9);
+        check_against_dense(&generators::ring(9), 0.6, 10);
+    }
+
+    #[test]
+    fn norm_formula_closed_form() {
+        let g = generators::ring(5); // N_k = 1, no self loops
+        let cols = BColumns::new(&g, 0.85);
+        for k in 0..5 {
+            assert!((cols.norm_sq(k) - (1.0 + 0.85 * 0.85)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_alpha_one() {
+        let g = generators::ring(3);
+        BColumns::new(&g, 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_dangling() {
+        let g = crate::graph::Graph::from_sorted_edges(2, &[(0, 1)]);
+        BColumns::new(&g, 0.85);
+    }
+}

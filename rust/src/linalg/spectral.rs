@@ -1,0 +1,217 @@
+//! Symmetric eigensolver (cyclic Jacobi rotations) and the paper's rate
+//! constants.
+//!
+//! Proposition 2 bounds the contraction per step by `1 - σ²(B̂)/N` where
+//! `B̂` is the column-normalized `B`; the Appendix bound for Algorithm 2
+//! uses `σ₂(Ĉ)`, the second-smallest eigenvalue of `Ĉ = Σ_k C_k`
+//! (sum of row projectors of `C = (I-A)ᵀ`). Both reduce to eigenvalues of
+//! small symmetric PSD matrices, which the Jacobi method computes to
+//! machine precision — robust and dependency-free.
+
+use super::dense::DenseMatrix;
+use crate::graph::Graph;
+
+/// All eigenvalues of a symmetric matrix, ascending. Cyclic Jacobi;
+/// converges quadratically, O(n³) per sweep (reference scales only).
+pub fn symmetric_eigenvalues(a: &DenseMatrix) -> Vec<f64> {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    let mut m = a.clone();
+    // Verify symmetry up to a tolerance, then symmetrize exactly.
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = (m.get(i, j) - m.get(j, i)).abs();
+            assert!(d < 1e-8, "matrix not symmetric at ({i},{j}): diff {d}");
+            let avg = 0.5 * (m.get(i, j) + m.get(j, i));
+            m.set(i, j, avg);
+            m.set(j, i, avg);
+        }
+    }
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() < 1e-14 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                // Stable tangent of the rotation angle.
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply the rotation G(p,q) on both sides.
+                for k in 0..n {
+                    let akp = m.get(k, p);
+                    let akq = m.get(k, q);
+                    m.set(k, p, c * akp - s * akq);
+                    m.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..n {
+                    let apk = m.get(p, k);
+                    let aqk = m.get(q, k);
+                    m.set(p, k, c * apk - s * aqk);
+                    m.set(q, k, s * apk + c * aqk);
+                }
+            }
+        }
+    }
+    let mut eig: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    eig.sort_by(|a, b| a.partial_cmp(b).expect("NaN eigenvalue"));
+    eig
+}
+
+/// Singular values of a (square) matrix, ascending — via eigenvalues of
+/// `MᵀM`.
+pub fn singular_values(m: &DenseMatrix) -> Vec<f64> {
+    let mtm = m.transpose().matmul(m);
+    symmetric_eigenvalues(&mtm)
+        .into_iter()
+        .map(|l| l.max(0.0).sqrt())
+        .collect()
+}
+
+/// `σ(B̂)` — smallest singular value of the column-normalized
+/// `B = I - αA`. Controls the paper's Algorithm 1 rate.
+pub fn sigma_min_bhat(g: &Graph, alpha: f64) -> f64 {
+    let bhat = DenseMatrix::b_matrix(g, alpha).column_normalized();
+    singular_values(&bhat)[0]
+}
+
+/// The paper's predicted per-step contraction `ρ = 1 - σ²(B̂)/N` for
+/// `E‖r_t‖²` (Proposition 2 / eq. 9).
+pub fn mp_contraction_rate(g: &Graph, alpha: f64) -> f64 {
+    let s = sigma_min_bhat(g, alpha);
+    1.0 - s * s / g.n() as f64
+}
+
+/// `σ₂(Ĉ)` of the Appendix: second-smallest eigenvalue of
+/// `Ĉ = Σ_k C(k,:)ᵀC(k,:)/‖C(k,:)‖²` with `C = (I-A)ᵀ`. The smallest is 0
+/// (nullspace spanned by the stationary vector s).
+pub fn sigma2_chat(g: &Graph) -> f64 {
+    let n = g.n();
+    let a = DenseMatrix::hyperlink(g);
+    // C = (I - A)^T: row k of C is column k of (I - A).
+    let mut chat = DenseMatrix::zeros(n, n);
+    for k in 0..n {
+        // c_k = e_k - A(:,k)
+        let mut c = vec![0.0; n];
+        c[k] += 1.0;
+        for i in 0..n {
+            c[i] -= a.get(i, k);
+        }
+        let n2: f64 = c.iter().map(|v| v * v).sum();
+        assert!(n2 > 0.0, "zero row {k} in C");
+        for i in 0..n {
+            for j in 0..n {
+                let v = chat.get(i, j) + c[i] * c[j] / n2;
+                chat.set(i, j, v);
+            }
+        }
+    }
+    let eig = symmetric_eigenvalues(&chat);
+    // eig[0] ~ 0 (the nullspace); the rate constant is eig[1].
+    eig[1]
+}
+
+/// Predicted per-step contraction of Algorithm 2: `1 - σ₂(Ĉ)/N`.
+pub fn size_est_contraction_rate(g: &Graph) -> f64 {
+    1.0 - sigma2_chat(g) / g.n() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn eigenvalues_of_diagonal() {
+        let d = DenseMatrix::from_fn(3, 3, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let e = symmetric_eigenvalues(&d);
+        assert!((e[0] - 1.0).abs() < 1e-12);
+        assert!((e[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigenvalues_of_known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1 and 3.
+        let m = DenseMatrix::from_fn(2, 2, |i, j| if i == j { 2.0 } else { 1.0 });
+        let e = symmetric_eigenvalues(&m);
+        assert!((e[0] - 1.0).abs() < 1e-12);
+        assert!((e[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn asymmetric_panics() {
+        let m = DenseMatrix::from_fn(2, 2, |i, j| (i * 2 + j) as f64);
+        symmetric_eigenvalues(&m);
+    }
+
+    #[test]
+    fn singular_values_of_orthogonal_scaled() {
+        // diag(3, 4) rotated is still sv {3, 4}.
+        let m = DenseMatrix::from_fn(2, 2, |i, j| {
+            let r = [[0.6, -0.8], [0.8, 0.6]]; // rotation
+            let d = [[3.0, 0.0], [0.0, 4.0]];
+            r[i][0] * d[0][j] + r[i][1] * d[1][j]
+        });
+        let sv = singular_values(&m);
+        assert!((sv[0] - 3.0).abs() < 1e-10);
+        assert!((sv[1] - 4.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn mp_rate_in_unit_interval() {
+        let g = generators::er_threshold(50, 0.5, 21);
+        let rho = mp_contraction_rate(&g, 0.85);
+        assert!(rho > 0.9 && rho < 1.0, "rho={rho}");
+    }
+
+    #[test]
+    fn sigma_min_positive_since_b_invertible() {
+        let g = generators::ring(12);
+        assert!(sigma_min_bhat(&g, 0.85) > 0.0);
+    }
+
+    #[test]
+    fn chat_smallest_eigen_is_zero_and_second_positive() {
+        let g = generators::er_threshold(30, 0.5, 22);
+        // strongly connected -> nullspace dim 1 -> sigma2 > 0
+        assert!(crate::graph::scc::is_strongly_connected(&g));
+        let s2 = sigma2_chat(&g);
+        assert!(s2 > 1e-6, "sigma2={s2}");
+        let n = g.n();
+        let a = DenseMatrix::hyperlink(&g);
+        // verify the stationary direction is (near) null for Chat by
+        // checking C s = 0 with s = 1/n.
+        let s = vec![1.0 / n as f64; n];
+        // C s = (I - A)^T s: row k = s_k - A(:,k)·s
+        for k in 0..n {
+            let mut v = s[k];
+            for i in 0..n {
+                v -= a.get(i, k) * s[i];
+            }
+            assert!(v.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn size_rate_in_unit_interval() {
+        let g = generators::er_threshold(30, 0.5, 23);
+        let rho = size_est_contraction_rate(&g);
+        assert!(rho > 0.5 && rho < 1.0, "rho={rho}");
+    }
+}

@@ -1,0 +1,104 @@
+//! Dense vector primitives (f64). The Rust hot path is sparse, but the
+//! references, baselines and metrics all speak in these.
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Squared l2 norm.
+#[inline]
+pub fn norm2_sq(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// l2 norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    norm2_sq(a).sqrt()
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = x` (copy).
+#[inline]
+pub fn copy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Sum of entries.
+#[inline]
+pub fn sum(x: &[f64]) -> f64 {
+    x.iter().sum()
+}
+
+/// Squared distance ‖a − b‖².
+#[inline]
+pub fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Max-abs (l∞) distance.
+#[inline]
+pub fn dist_inf(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_norms() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        assert_eq!(norm2_sq(&a), 14.0);
+        assert!((norm2(&a) - 14f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn axpy_updates() {
+        let x = [1.0, -1.0];
+        let mut y = [10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 8.0]);
+    }
+
+    #[test]
+    fn scale_and_sum() {
+        let mut x = [1.0, 2.0, 3.0];
+        scale(2.0, &mut x);
+        assert_eq!(sum(&x), 12.0);
+    }
+
+    #[test]
+    fn distances() {
+        let a = [0.0, 3.0];
+        let b = [4.0, 0.0];
+        assert_eq!(dist_sq(&a, &b), 25.0);
+        assert_eq!(dist_inf(&a, &b), 4.0);
+    }
+}

@@ -1,0 +1,355 @@
+//! `pagerank-mp` — CLI for the distributed Matching-Pursuit PageRank
+//! system (Dai & Freris, 2017).
+//!
+//! Subcommands:
+//!
+//! * `rank`       — compute PageRank for a graph (generated or from file)
+//!                  with a chosen engine (sparse matrix-form, distributed
+//!                  coordinator, dense PJRT, power iteration).
+//! * `fig1`       — reproduce the paper's Figure 1 (writes CSV + plot).
+//! * `fig2`       — reproduce the paper's Figure 2.
+//! * `ablation`   — run the DESIGN.md §4 ablation studies.
+//! * `size`       — Algorithm 2 network-size estimation demo.
+//! * `graph-info` — degree/SCC statistics for a graph.
+//! * `artifacts`  — inspect the AOT artifact manifest.
+
+use pagerank_mp::algo::common::PageRankSolver;
+use pagerank_mp::algo::mp::MatchingPursuit;
+use pagerank_mp::algo::power_iteration::JacobiPowerIteration;
+use pagerank_mp::algo::size_estimation::SizeEstimator;
+use pagerank_mp::algo::stopping::RankingCertifier;
+use pagerank_mp::coordinator::{Coordinator, CoordinatorConfig, Mode, SamplerKind};
+use pagerank_mp::graph::{generators, io as graph_io, DanglingPolicy, Graph};
+use pagerank_mp::harness::{ablation, fig1, fig2, report};
+use pagerank_mp::linalg::solve::exact_pagerank;
+use pagerank_mp::network::LatencyModel;
+use pagerank_mp::util::cli::Args;
+use pagerank_mp::util::rng::Rng;
+
+fn load_graph(args: &Args) -> Result<Graph, String> {
+    if let Some(path) = args.get("graph-file") {
+        return graph_io::load(path, DanglingPolicy::LinkAll).map_err(|e| e.to_string());
+    }
+    let name = args.get_str("graph", "paper");
+    let n = args.get_parse("n", 100usize).map_err(|e| e.to_string())?;
+    let seed = args.get_parse("seed", 2017u64).map_err(|e| e.to_string())?;
+    generators::by_name(&name, n, seed).ok_or_else(|| {
+        format!("unknown graph family {name:?} (try: paper, er-sparse, ba, ws, sbm, ring, star, complete)")
+    })
+}
+
+fn cmd_rank(args: &Args) -> Result<(), String> {
+    let g = load_graph(args)?;
+    let alpha = args.get_parse("alpha", 0.85f64).map_err(|e| e.to_string())?;
+    let steps = args.get_parse("steps", 100_000usize).map_err(|e| e.to_string())?;
+    let seed = args.get_parse("seed", 2017u64).map_err(|e| e.to_string())?;
+    let top = args.get_parse("top", 10usize).map_err(|e| e.to_string())?;
+    let engine = args.get_str("engine", "sparse");
+
+    let start = std::time::Instant::now();
+    let (x, label): (Vec<f64>, String) = match engine.as_str() {
+        "sparse" => {
+            let mut mp = MatchingPursuit::new(&g, alpha);
+            let mut rng = Rng::seeded(seed);
+            for _ in 0..steps {
+                mp.step(&mut rng);
+            }
+            // Certified ranking prefix via the stopping criterion (§IV-4).
+            let cert = RankingCertifier::new(&g, alpha);
+            let c = cert.certify(&mp.estimate(), mp.residual_norm_sq());
+            println!(
+                "certified prefix {} pages (eps={:.2e})",
+                c.certified_prefix, c.epsilon
+            );
+            (mp.estimate(), format!("sparse MP, {steps} activations"))
+        }
+        "coordinator" => {
+            let latency = LatencyModel::parse(&args.get_str("latency", "zero"))
+                .ok_or("bad --latency (zero|const:L|uniform:lo:hi|exp:mean)")?;
+            let mode = match args.get_str("mode", "sequential").as_str() {
+                "sequential" => Mode::Sequential,
+                "async" => Mode::Async,
+                m => return Err(format!("bad --mode {m}")),
+            };
+            let sampler = match args.get_str("sampler", "uniform").as_str() {
+                "uniform" => SamplerKind::Uniform,
+                "clocks" => SamplerKind::ExponentialClocks,
+                "weighted" => SamplerKind::ResidualWeighted { floor: 1e-12 },
+                s => return Err(format!("bad --sampler {s}")),
+            };
+            let cfg = CoordinatorConfig::default()
+                .with_alpha(alpha)
+                .with_seed(seed)
+                .with_latency(latency)
+                .with_mode(mode)
+                .with_sampler(sampler);
+            let mut coord = Coordinator::new(&g, cfg);
+            let rep = coord.run(steps as u64);
+            println!("{}\n", rep.metrics.render());
+            (coord.estimate(), format!("distributed coordinator, {steps} activations"))
+        }
+        "dense" => {
+            let mut eng = pagerank_mp::runtime::Engine::load_default()
+                .map_err(|e| format!("{e:#} (run `make artifacts`)"))?;
+            let mut runner = pagerank_mp::runtime::MpChunkRunner::new(&mut eng, &g, alpha)
+                .map_err(|e| e.to_string())?;
+            let t = runner.chunk_len();
+            let mut rng = Rng::seeded(seed);
+            let chunks = steps / t;
+            for _ in 0..chunks {
+                let ks: Vec<usize> = (0..t).map(|_| rng.below(g.n())).collect();
+                runner.run_chunk(&mut eng, &ks).map_err(|e| e.to_string())?;
+            }
+            (
+                runner.estimate(),
+                format!("dense PJRT engine ({}), {} activations", eng.platform(), chunks * t),
+            )
+        }
+        "power" => {
+            let mut pi = JacobiPowerIteration::new(&g, alpha);
+            let sweeps = pi.run_to_tolerance(1e-12, 10_000);
+            (pi.estimate(), format!("centralized power iteration, {sweeps} sweeps"))
+        }
+        e => return Err(format!("unknown engine {e:?} (sparse|coordinator|dense|power)")),
+    };
+    let elapsed = start.elapsed();
+
+    let x_star = exact_pagerank(&g, alpha);
+    let err = pagerank_mp::linalg::vector::dist_sq(&x, &x_star) / g.n() as f64;
+    let agreement = pagerank_mp::util::stats::ranking_agreement(&x, &x_star);
+
+    println!("engine           {label}");
+    println!("elapsed          {elapsed:?}");
+    println!("(1/N)|x-x*|^2    {err:.3e}");
+    println!("rank agreement   {agreement:.4}");
+
+    println!("\ntop {top} pages:");
+    let ranking = pagerank_mp::util::stats::ranking(&x);
+    for (rank, &page) in ranking.iter().take(top).enumerate() {
+        println!("  #{:<3} page {:<6} score {:.6}", rank + 1, page, x[page]);
+    }
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> Result<(), String> {
+    let cfg = fig1::Fig1Config {
+        n: args.get_parse("n", 100usize).map_err(|e| e.to_string())?,
+        threshold: args.get_parse("threshold", 0.5f64).map_err(|e| e.to_string())?,
+        alpha: args.get_parse("alpha", 0.85f64).map_err(|e| e.to_string())?,
+        rounds: args.get_parse("rounds", 100usize).map_err(|e| e.to_string())?,
+        steps: args.get_parse("steps", 60_000usize).map_err(|e| e.to_string())?,
+        stride: args.get_parse("stride", 500usize).map_err(|e| e.to_string())?,
+        seed: args.get_parse("seed", 2017u64).map_err(|e| e.to_string())?,
+        threads: args
+            .get_parse(
+                "threads",
+                std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4),
+            )
+            .map_err(|e| e.to_string())?,
+    };
+    eprintln!("running Fig. 1: N={} rounds={} steps={} …", cfg.n, cfg.rounds, cfg.steps);
+    let res = fig1::run(&cfg);
+    println!("{}", res.render());
+    for (claim, ok) in res.claims() {
+        println!("[{}] {claim}", if ok { "PASS" } else { "FAIL" });
+    }
+    let out = args.get_str("out", "reports/fig1.csv");
+    report::write_file(std::path::Path::new(&out), &res.to_csv()).map_err(|e| e.to_string())?;
+    println!("\nwrote {out}");
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<(), String> {
+    let cfg = fig2::Fig2Config {
+        n: args.get_parse("n", 100usize).map_err(|e| e.to_string())?,
+        threshold: args.get_parse("threshold", 0.5f64).map_err(|e| e.to_string())?,
+        rounds: args.get_parse("rounds", 1000usize).map_err(|e| e.to_string())?,
+        steps: args.get_parse("steps", 20_000usize).map_err(|e| e.to_string())?,
+        stride: args.get_parse("stride", 200usize).map_err(|e| e.to_string())?,
+        seed: args.get_parse("seed", 2017u64).map_err(|e| e.to_string())?,
+        threads: args
+            .get_parse(
+                "threads",
+                std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4),
+            )
+            .map_err(|e| e.to_string())?,
+    };
+    eprintln!("running Fig. 2: N={} rounds={} steps={} …", cfg.n, cfg.rounds, cfg.steps);
+    let res = fig2::run(&cfg);
+    println!("{}", res.render());
+    for (claim, ok) in res.claims() {
+        println!("[{}] {claim}", if ok { "PASS" } else { "FAIL" });
+    }
+    let out = args.get_str("out", "reports/fig2.csv");
+    report::write_file(std::path::Path::new(&out), &res.to_csv()).map_err(|e| e.to_string())?;
+    println!("\nwrote {out}");
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<(), String> {
+    let n = args.get_parse("n", 100usize).map_err(|e| e.to_string())?;
+    let seed = args.get_parse("seed", 2017u64).map_err(|e| e.to_string())?;
+
+    println!("== ABL-RATE: measured vs predicted contraction ==");
+    let rows = ablation::rate_study(n, 0.85, 20, 40_000, seed);
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.family.clone(),
+                format!("{:.6}", r.predicted_bound),
+                format!("{:.6}", r.measured_rate),
+                format!("{:.2}x", r.tightness),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(&["family", "bound 1-σ²/N", "measured", "tightness"], &table_rows)
+    );
+
+    println!("== ABL-SAMPLER: activation strategies (§IV-3) ==");
+    let rows = ablation::sampler_study(n, 0.85, 20_000, seed);
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.sampler.clone(),
+                format!("{:.3e}", r.final_error),
+                r.deferred.to_string(),
+            ]
+        })
+        .collect();
+    println!("{}", report::table(&["sampler", "(1/N)|x-x*|²", "deferred"], &table_rows));
+
+    println!("== ABL-PARALLEL: conflict-free batches (§IV-1) ==");
+    let rows = ablation::parallel_study(500, 0.85, &[1, 4, 16, 64], &[0.004, 0.02, 0.1], 500, seed);
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.3}", r.density),
+                r.requested_batch.to_string(),
+                format!("{:.2}", r.effective_batch),
+                format!("{:.3e}", r.final_error),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(&["density", "batch req.", "batch eff.", "error"], &table_rows)
+    );
+
+    println!("== ABL-GREEDY: randomized vs best-atom (§II-B) ==");
+    let rows = ablation::greedy_study(n, 0.85, 30_000, seed);
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.algo.clone(),
+                format!("{:.3e}", r.final_error),
+                r.total_reads.to_string(),
+            ]
+        })
+        .collect();
+    println!("{}", report::table(&["algorithm", "error", "total reads"], &table_rows));
+    Ok(())
+}
+
+fn cmd_size(args: &Args) -> Result<(), String> {
+    let g = load_graph(args)?;
+    let steps = args.get_parse("steps", 20_000usize).map_err(|e| e.to_string())?;
+    let seed = args.get_parse("seed", 2017u64).map_err(|e| e.to_string())?;
+    let mut est = SizeEstimator::new(&g).map_err(|e| e.to_string())?;
+    let mut rng = Rng::seeded(seed);
+    for t in 0..steps {
+        est.step(&mut rng);
+        if (t + 1) % (steps / 10).max(1) == 0 {
+            println!("t={:<8} ‖s-1/N‖² = {:.3e}", t + 1, est.error_sq());
+        }
+    }
+    println!("\nper-page estimates of N (true N = {}):", g.n());
+    for i in (0..g.n()).step_by((g.n() / 8).max(1)) {
+        match est.estimate_at(i) {
+            Some(nd) => println!("  page {i:<6} N̂ = {nd:.3}"),
+            None => println!("  page {i:<6} (not yet positive)"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_graph_info(args: &Args) -> Result<(), String> {
+    let g = load_graph(args)?;
+    let stats = pagerank_mp::graph::stats::DegreeStats::compute(&g);
+    println!("{}", stats.render());
+    println!(
+        "strongly connected: {}",
+        pagerank_mp::graph::scc::is_strongly_connected(&g)
+    );
+    println!("SCC count: {}", pagerank_mp::graph::scc::scc_count(&g));
+    println!(
+        "predicted MP rate 1-σ²(B̂)/N: {:.6}",
+        pagerank_mp::linalg::spectral::mp_contraction_rate(&g, 0.85)
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(_args: &Args) -> Result<(), String> {
+    let dir = pagerank_mp::runtime::artifact_dir();
+    let manifest = pagerank_mp::runtime::Manifest::load(&dir)
+        .map_err(|e| format!("{e} — run `make artifacts`"))?;
+    println!("artifact dir: {}", dir.display());
+    println!("kernel block: {}", manifest.block);
+    for a in &manifest.artifacts {
+        println!(
+            "  {:<16} P={:<5} T={:<5} {}",
+            a.kind.name(),
+            a.padded_size,
+            a.chunk.map(|c| c.to_string()).unwrap_or_else(|| "-".into()),
+            a.file
+        );
+    }
+    Ok(())
+}
+
+const USAGE: &str = "\
+pagerank-mp — fully distributed PageRank via randomized Matching Pursuit
+
+USAGE: pagerank-mp <command> [options]
+
+COMMANDS:
+  rank        compute PageRank        --graph paper|ba|ws|.. --n 100 --engine sparse|coordinator|dense|power
+              [--alpha 0.85 --steps 100000 --seed S --top 10 --latency zero|const:L --mode sequential|async --sampler uniform|clocks|weighted]
+  fig1        reproduce Figure 1      [--n 100 --rounds 100 --steps 60000 --stride 500 --out reports/fig1.csv]
+  fig2        reproduce Figure 2      [--n 100 --rounds 1000 --steps 20000 --stride 200 --out reports/fig2.csv]
+  ablation    DESIGN.md §4 studies    [--n 100 --seed S]
+  size        Algorithm 2 demo        [--graph paper --n 100 --steps 20000]
+  graph-info  graph statistics        [--graph paper --n 100 | --graph-file edges.txt]
+  artifacts   inspect AOT manifest
+";
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.command.as_deref() {
+        Some("rank") => cmd_rank(&args),
+        Some("fig1") => cmd_fig1(&args),
+        Some("fig2") => cmd_fig2(&args),
+        Some("ablation") => cmd_ablation(&args),
+        Some("size") => cmd_size(&args),
+        Some("graph-info") => cmd_graph_info(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(c) => Err(format!("unknown command {c:?}\n\n{USAGE}")),
+    };
+    let unknown = args.unknown_keys();
+    if !unknown.is_empty() {
+        eprintln!("warning: unused options: {unknown:?}");
+    }
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,111 @@
+//! Per-page congestion accounting.
+//!
+//! Tracks, per destination page, how many messages are in flight /
+//! queued, and the peaks over the run. The paper's §I argues the
+//! Monte-Carlo approach \[9\] "may lead to the problem of congestion in
+//! the network"; the coordinator feeds both MP's and the walk baseline's
+//! traffic through this tracker so the claim is measured, not asserted.
+
+/// Running congestion statistics.
+#[derive(Debug, Clone, Default)]
+pub struct CongestionTracker {
+    in_flight: Vec<u32>,
+    peak_per_page: Vec<u32>,
+    /// Global peak of (messages in flight anywhere).
+    peak_total: u32,
+    total_in_flight: u32,
+    /// Total messages ever enqueued.
+    messages: u64,
+}
+
+impl CongestionTracker {
+    pub fn new(n: usize) -> Self {
+        CongestionTracker {
+            in_flight: vec![0; n],
+            peak_per_page: vec![0; n],
+            peak_total: 0,
+            total_in_flight: 0,
+            messages: 0,
+        }
+    }
+
+    /// A message addressed to `dst` entered the network.
+    pub fn on_send(&mut self, dst: usize) {
+        self.in_flight[dst] += 1;
+        self.total_in_flight += 1;
+        self.messages += 1;
+        if self.in_flight[dst] > self.peak_per_page[dst] {
+            self.peak_per_page[dst] = self.in_flight[dst];
+        }
+        if self.total_in_flight > self.peak_total {
+            self.peak_total = self.total_in_flight;
+        }
+    }
+
+    /// The message addressed to `dst` was delivered/processed.
+    pub fn on_deliver(&mut self, dst: usize) {
+        assert!(self.in_flight[dst] > 0, "deliver without send at {dst}");
+        self.in_flight[dst] -= 1;
+        self.total_in_flight -= 1;
+    }
+
+    /// Peak queued messages at any single page.
+    pub fn peak_page_load(&self) -> u32 {
+        self.peak_per_page.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Peak number of messages simultaneously in flight network-wide.
+    pub fn peak_total(&self) -> u32 {
+        self.peak_total
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.messages
+    }
+
+    /// Per-page peak loads (for hotspot reports).
+    pub fn peaks(&self) -> &[u32] {
+        &self.peak_per_page
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_peaks() {
+        let mut c = CongestionTracker::new(3);
+        c.on_send(1);
+        c.on_send(1);
+        c.on_send(2);
+        assert_eq!(c.peak_page_load(), 2);
+        assert_eq!(c.peak_total(), 3);
+        c.on_deliver(1);
+        c.on_send(1); // back to 2 at page 1, total 3 again
+        assert_eq!(c.peak_page_load(), 2);
+        assert_eq!(c.peak_total(), 3);
+        assert_eq!(c.total_messages(), 4);
+    }
+
+    #[test]
+    fn peaks_are_sticky() {
+        let mut c = CongestionTracker::new(2);
+        for _ in 0..5 {
+            c.on_send(0);
+        }
+        for _ in 0..5 {
+            c.on_deliver(0);
+        }
+        assert_eq!(c.peak_page_load(), 5);
+        assert_eq!(c.peaks()[0], 5);
+        assert_eq!(c.peaks()[1], 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn deliver_without_send_panics() {
+        let mut c = CongestionTracker::new(1);
+        c.on_deliver(0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Virtual-time event queue.
+//!
+//! A thin wrapper over a binary heap keyed by `(time, sequence)`: events
+//! scheduled at equal times pop in insertion order, making simulations
+//! bit-reproducible regardless of heap internals.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event with its virtual firing time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Timed<E> {
+    pub time: f64,
+    seq: u64,
+    pub event: E,
+}
+
+impl<E> Timed<E> {
+    fn key(&self) -> (f64, u64) {
+        (self.time, self.seq)
+    }
+}
+
+impl<E: PartialEq> Eq for Timed<E> {}
+
+impl<E: PartialEq> Ord for Timed<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: reverse of natural order; NaN times are rejected at
+        // insertion so partial_cmp is total here.
+        other
+            .key()
+            .partial_cmp(&self.key())
+            .expect("event times are never NaN")
+    }
+}
+
+impl<E: PartialEq> PartialOrd for Timed<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic min-time event queue.
+#[derive(Debug)]
+pub struct EventQueue<E: PartialEq> {
+    heap: BinaryHeap<Timed<E>>,
+    next_seq: u64,
+    now: f64,
+}
+
+impl<E: PartialEq> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            now: 0.0,
+        }
+    }
+}
+
+impl<E: PartialEq> EventQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `event` at absolute virtual time `at` (must be ≥ now and
+    /// finite).
+    pub fn schedule(&mut self, at: f64, event: E) {
+        assert!(at.is_finite(), "event time must be finite");
+        assert!(
+            at >= self.now - 1e-12,
+            "cannot schedule in the past: {at} < {}",
+            self.now
+        );
+        self.heap.push(Timed {
+            time: at,
+            seq: self.next_seq,
+            event,
+        });
+        self.next_seq += 1;
+    }
+
+    /// Schedule at `now + delay`.
+    pub fn schedule_in(&mut self, delay: f64, event: E) {
+        assert!(delay >= 0.0);
+        let at = self.now + delay;
+        self.schedule(at, event);
+    }
+
+    /// Pop the earliest event, advancing virtual time.
+    pub fn pop(&mut self) -> Option<Timed<E>> {
+        let ev = self.heap.pop();
+        if let Some(t) = &ev {
+            self.now = t.time;
+        }
+        ev
+    }
+
+    /// Earliest scheduled time without popping.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|t| t.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        assert_eq!(q.pop().expect("a").event, "a");
+        assert_eq!(q.now(), 1.0);
+        assert_eq!(q.pop().expect("b").event, "b");
+        assert_eq!(q.pop().expect("c").event, "c");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn equal_times_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule(5.0, i);
+        }
+        for i in 0..10 {
+            assert_eq!(q.pop().expect("event").event, i);
+        }
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, "first");
+        q.pop();
+        q.schedule_in(3.0, "second");
+        let t = q.pop().expect("second");
+        assert_eq!(t.time, 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_past() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, 1);
+        q.pop();
+        q.schedule(1.0, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nan() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule(f64::NAN, 1);
+    }
+
+    #[test]
+    fn peek_and_len() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.schedule(4.0, 1);
+        q.schedule(2.0, 2);
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.len(), 2);
+    }
+}

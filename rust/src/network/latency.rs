@@ -1,0 +1,114 @@
+//! Link-latency models for the simulated network.
+
+use crate::util::rng::Rng;
+
+/// Distribution of one-way message latency (virtual time units).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LatencyModel {
+    /// Idealized zero-latency network (pure algorithmic time).
+    Zero,
+    /// Fixed latency per message.
+    Constant(f64),
+    /// Uniform in `[lo, hi]`.
+    Uniform { lo: f64, hi: f64 },
+    /// Exponential with the given mean (heavy-ish WAN-style tail).
+    Exponential { mean: f64 },
+}
+
+impl LatencyModel {
+    /// Draw one latency sample.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            LatencyModel::Zero => 0.0,
+            LatencyModel::Constant(l) => {
+                debug_assert!(l >= 0.0);
+                l
+            }
+            LatencyModel::Uniform { lo, hi } => {
+                debug_assert!(0.0 <= lo && lo <= hi);
+                lo + (hi - lo) * rng.uniform()
+            }
+            LatencyModel::Exponential { mean } => {
+                debug_assert!(mean > 0.0);
+                rng.exponential(1.0 / mean)
+            }
+        }
+    }
+
+    /// Expected latency (used by reports).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LatencyModel::Zero => 0.0,
+            LatencyModel::Constant(l) => l,
+            LatencyModel::Uniform { lo, hi } => 0.5 * (lo + hi),
+            LatencyModel::Exponential { mean } => mean,
+        }
+    }
+
+    /// Parse from CLI syntax: `zero`, `const:0.5`, `uniform:0.1:0.9`,
+    /// `exp:1.0`.
+    pub fn parse(s: &str) -> Option<LatencyModel> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["zero"] => Some(LatencyModel::Zero),
+            ["const", l] => l.parse().ok().map(LatencyModel::Constant),
+            ["uniform", lo, hi] => {
+                let lo = lo.parse().ok()?;
+                let hi = hi.parse().ok()?;
+                Some(LatencyModel::Uniform { lo, hi })
+            }
+            ["exp", m] => m.parse().ok().map(|mean| LatencyModel::Exponential { mean }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_and_constant() {
+        let mut rng = Rng::seeded(1);
+        assert_eq!(LatencyModel::Zero.sample(&mut rng), 0.0);
+        assert_eq!(LatencyModel::Constant(0.25).sample(&mut rng), 0.25);
+    }
+
+    #[test]
+    fn uniform_within_bounds_and_mean() {
+        let mut rng = Rng::seeded(2);
+        let m = LatencyModel::Uniform { lo: 0.5, hi: 1.5 };
+        let mut acc = 0.0;
+        let n = 50_000;
+        for _ in 0..n {
+            let s = m.sample(&mut rng);
+            assert!((0.5..=1.5).contains(&s));
+            acc += s;
+        }
+        assert!((acc / n as f64 - m.mean()).abs() < 0.01);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Rng::seeded(3);
+        let m = LatencyModel::Exponential { mean: 2.0 };
+        let n = 100_000;
+        let acc: f64 = (0..n).map(|_| m.sample(&mut rng)).sum();
+        assert!((acc / n as f64 - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn parse_syntax() {
+        assert_eq!(LatencyModel::parse("zero"), Some(LatencyModel::Zero));
+        assert_eq!(LatencyModel::parse("const:0.5"), Some(LatencyModel::Constant(0.5)));
+        assert_eq!(
+            LatencyModel::parse("uniform:0.1:0.9"),
+            Some(LatencyModel::Uniform { lo: 0.1, hi: 0.9 })
+        );
+        assert_eq!(
+            LatencyModel::parse("exp:1.5"),
+            Some(LatencyModel::Exponential { mean: 1.5 })
+        );
+        assert_eq!(LatencyModel::parse("bogus:1"), None);
+    }
+}

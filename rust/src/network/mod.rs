@@ -1,0 +1,25 @@
+//! Deterministic discrete-event message network.
+//!
+//! The paper's system is a fleet of per-page processes exchanging
+//! residual reads/writes with out-neighbours; its experiments (like ours)
+//! run in simulation. This module provides the substrate the
+//! [`crate::coordinator`] runs on:
+//!
+//! * [`events`] — a virtual-time event queue with deterministic FIFO
+//!   tie-breaking (same seed ⇒ bit-identical runs);
+//! * [`latency`] — pluggable link-latency models (zero / constant /
+//!   uniform / exponential);
+//! * [`congestion`] — per-page queueing accounting (peak in-flight load,
+//!   used to contrast MP's O(N_k) traffic against the Monte-Carlo
+//!   baseline's walk congestion).
+//!
+//! See DESIGN.md §6: the paper used no physical testbed; this simulated
+//! network preserves the communication pattern (which pages talk to which
+//! and how often) — the property the paper's claims are about.
+
+pub mod congestion;
+pub mod events;
+pub mod latency;
+
+pub use events::{EventQueue, Timed};
+pub use latency::LatencyModel;

@@ -1,0 +1,292 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes `manifest.json` describing every lowered
+//! HLO module: entry-point kind, padded size P, chunk length T, operand
+//! and result shapes. The Rust runtime is driven entirely by the manifest
+//! so Python and Rust cannot drift silently — shape mismatches fail at
+//! load time with a named artifact.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// The four entry points emitted by aot.py.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    MpChunk,
+    JacobiChunk,
+    SizeChunk,
+    ResidualNorm,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<ArtifactKind> {
+        match s {
+            "mp_chunk" => Some(ArtifactKind::MpChunk),
+            "jacobi_chunk" => Some(ArtifactKind::JacobiChunk),
+            "size_chunk" => Some(ArtifactKind::SizeChunk),
+            "residual_norm" => Some(ArtifactKind::ResidualNorm),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArtifactKind::MpChunk => "mp_chunk",
+            ArtifactKind::JacobiChunk => "jacobi_chunk",
+            ArtifactKind::SizeChunk => "size_chunk",
+            ArtifactKind::ResidualNorm => "residual_norm",
+        }
+    }
+}
+
+/// One operand/result shape record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One lowered module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub kind: ArtifactKind,
+    pub file: String,
+    pub padded_size: usize,
+    /// Steps per call (None for residual_norm).
+    pub chunk: Option<usize>,
+    pub operands: Vec<TensorSpec>,
+    pub results: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub block: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+    dir: PathBuf,
+}
+
+/// Manifest loading errors.
+#[derive(Debug)]
+pub enum ManifestError {
+    Io(std::io::Error),
+    Json(crate::util::json::JsonError),
+    Schema(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "manifest io: {e}"),
+            ManifestError::Json(e) => write!(f, "manifest json: {e}"),
+            ManifestError::Schema(s) => write!(f, "manifest schema: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+fn tensor_specs(v: &Json, what: &str) -> Result<Vec<TensorSpec>, ManifestError> {
+    let arr = v
+        .as_array()
+        .ok_or_else(|| ManifestError::Schema(format!("{what} is not an array")))?;
+    arr.iter()
+        .map(|t| {
+            let name = t
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ManifestError::Schema(format!("{what}: missing name")))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_array)
+                .ok_or_else(|| ManifestError::Schema(format!("{what}.{name}: missing shape")))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| ManifestError::Schema(format!("{what}.{name}: bad dim")))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            let dtype = t
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ManifestError::Schema(format!("{what}.{name}: missing dtype")))?
+                .to_string();
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let text =
+            std::fs::read_to_string(dir.join("manifest.json")).map_err(ManifestError::Io)?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, ManifestError> {
+        let v = Json::parse(text).map_err(ManifestError::Json)?;
+        let block = v
+            .get("block")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| ManifestError::Schema("missing block".into()))?;
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_array)
+            .ok_or_else(|| ManifestError::Schema("missing artifacts".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let kind_str = a
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ManifestError::Schema("artifact missing kind".into()))?;
+            let kind = ArtifactKind::parse(kind_str)
+                .ok_or_else(|| ManifestError::Schema(format!("unknown kind {kind_str}")))?;
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ManifestError::Schema("artifact missing file".into()))?
+                .to_string();
+            let padded_size = a
+                .get("padded_size")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| ManifestError::Schema(format!("{file}: missing padded_size")))?;
+            let chunk = a.get("chunk").and_then(Json::as_usize);
+            let operands = tensor_specs(
+                a.get("operands")
+                    .ok_or_else(|| ManifestError::Schema(format!("{file}: missing operands")))?,
+                "operands",
+            )?;
+            let results = tensor_specs(
+                a.get("results")
+                    .ok_or_else(|| ManifestError::Schema(format!("{file}: missing results")))?,
+                "results",
+            )?;
+            artifacts.push(ArtifactSpec {
+                kind,
+                file,
+                padded_size,
+                chunk,
+                operands,
+                results,
+            });
+        }
+        Ok(Manifest {
+            block,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Padded sizes available for a kind, ascending.
+    pub fn sizes_for(&self, kind: ArtifactKind) -> Vec<usize> {
+        let mut s: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .map(|a| a.padded_size)
+            .collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    }
+
+    /// Pick the smallest artifact of `kind` whose padded size fits `n`.
+    pub fn select(&self, kind: ArtifactKind, n: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.padded_size >= n)
+            .min_by_key(|a| a.padded_size)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "block": 128, "dtype": "f32",
+      "artifacts": [
+        {"kind": "mp_chunk", "file": "mp_chunk_p128_t128.hlo.txt",
+         "padded_size": 128, "chunk": 128, "block": 128,
+         "operands": [
+           {"name": "b_pad", "shape": [128, 128], "dtype": "f32"},
+           {"name": "ks", "shape": [128], "dtype": "i32"}],
+         "results": [{"name": "x", "shape": [128, 1], "dtype": "f32"}]},
+        {"kind": "mp_chunk", "file": "mp_chunk_p256_t128.hlo.txt",
+         "padded_size": 256, "chunk": 128, "block": 128,
+         "operands": [], "results": []},
+        {"kind": "residual_norm", "file": "residual_norm_p128.hlo.txt",
+         "padded_size": 128, "chunk": null, "block": 128,
+         "operands": [], "results": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).expect("parses");
+        assert_eq!(m.block, 128);
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].kind, ArtifactKind::MpChunk);
+        assert_eq!(m.artifacts[0].chunk, Some(128));
+        assert_eq!(m.artifacts[2].chunk, None);
+        assert_eq!(m.artifacts[0].operands[1].dtype, "i32");
+    }
+
+    #[test]
+    fn selection_picks_smallest_fitting() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).expect("parses");
+        assert_eq!(
+            m.select(ArtifactKind::MpChunk, 100).expect("fit").padded_size,
+            128
+        );
+        assert_eq!(
+            m.select(ArtifactKind::MpChunk, 129).expect("fit").padded_size,
+            256
+        );
+        assert!(m.select(ArtifactKind::MpChunk, 1000).is_none());
+        assert_eq!(m.sizes_for(ArtifactKind::MpChunk), vec![128, 256]);
+    }
+
+    #[test]
+    fn path_resolution() {
+        let m = Manifest::parse(SAMPLE, Path::new("/data/arts")).expect("parses");
+        let p = m.path_of(&m.artifacts[0]);
+        assert_eq!(p, PathBuf::from("/data/arts/mp_chunk_p128_t128.hlo.txt"));
+    }
+
+    #[test]
+    fn schema_errors_are_descriptive() {
+        let bad = r#"{"artifacts": []}"#;
+        let e = Manifest::parse(bad, Path::new(".")).unwrap_err();
+        assert!(e.to_string().contains("block"));
+        let bad2 = r#"{"block": 128, "artifacts": [{"kind": "nope", "file": "x"}]}"#;
+        let e2 = Manifest::parse(bad2, Path::new(".")).unwrap_err();
+        assert!(e2.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Integration-ish: if `make artifacts` has run, the real manifest
+        // must satisfy this schema.
+        let dir = crate::runtime::artifact_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).expect("real manifest parses");
+            assert!(!m.artifacts.is_empty());
+            assert!(m.select(ArtifactKind::MpChunk, 100).is_some());
+        }
+    }
+}

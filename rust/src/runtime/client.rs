@@ -1,0 +1,201 @@
+//! PJRT engine: compile-once cache of the AOT artifacts.
+//!
+//! Adapted from /opt/xla-example/src/bin/load_hlo.rs: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile`. Compilation happens once per (kind, size);
+//! executions reuse the cached `PjRtLoadedExecutable`.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{ArtifactKind, ArtifactSpec, Manifest};
+
+/// Compiled-executable cache over one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<(ArtifactKind, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn load(dir: &std::path::Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(dir)
+            .map_err(|e| anyhow!("loading manifest from {}: {e}", dir.display()))?;
+        Ok(Engine {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Load from the default artifact directory (`make artifacts` output).
+    pub fn load_default() -> Result<Engine> {
+        Self::load(&super::artifact_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Select the smallest artifact of `kind` fitting `n` pages.
+    pub fn select(&self, kind: ArtifactKind, n: usize) -> Result<ArtifactSpec> {
+        self.manifest
+            .select(kind, n)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no {} artifact fits n={n} (available sizes: {:?}) — re-run \
+                     `make artifacts` with larger --sizes",
+                    kind.name(),
+                    self.manifest.sizes_for(kind)
+                )
+            })
+    }
+
+    /// Get (compiling and caching on first use) the executable for a spec.
+    pub fn executable(
+        &mut self,
+        spec: &ArtifactSpec,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (spec.kind, spec.padded_size);
+        if !self.compiled.contains_key(&key) {
+            let path = self.manifest.path_of(spec);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.file))?;
+            self.compiled.insert(key, exe);
+        }
+        Ok(self.compiled.get(&key).expect("just inserted"))
+    }
+
+    /// Execute an artifact with literal inputs; returns the decomposed
+    /// result tuple (aot.py lowers with return_tuple=True; the 0.5.1 PJRT
+    /// client yields the tuple as a single buffer).
+    pub fn execute(
+        &mut self,
+        spec: &ArtifactSpec,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != spec.operands.len() {
+            return Err(anyhow!(
+                "{}: expected {} operands, got {}",
+                spec.file,
+                spec.operands.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.executable(spec)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", spec.file))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = out.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != spec.results.len() {
+            return Err(anyhow!(
+                "{}: expected {} results, got {}",
+                spec.file,
+                spec.results.len(),
+                parts.len()
+            ));
+        }
+        Ok(parts)
+    }
+
+    /// Upload an f32 host buffer to the device (for buffer-resident reuse
+    /// — the hot-path optimization; see EXPERIMENTS.md §Perf).
+    ///
+    /// NOTE: this deliberately uses `buffer_from_host_buffer`
+    /// (HostBufferSemantics::kImmutableOnlyDuringCall — synchronous copy)
+    /// and NOT `buffer_from_host_literal`: the TFRT CPU client implements
+    /// the latter *asynchronously*, so dropping the source literal after
+    /// the call is a use-after-free that corrupts transfers
+    /// nondeterministically (observed as garbage literal sizes in
+    /// ToLiteralSync — see EXPERIMENTS.md §Perf iteration log).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading f32 buffer to device")
+    }
+
+    /// Upload an i32 host buffer (activation sequences).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading i32 buffer to device")
+    }
+
+    /// Execute with pre-uploaded device buffers for the constant (large)
+    /// operands — the hot path: only the small evolving state crosses the
+    /// host/device boundary per chunk (EXPERIMENTS.md §Perf).
+    pub fn execute_buffers(
+        &mut self,
+        spec: &ArtifactSpec,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(spec)?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing {} (buffers)", spec.file))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = out.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != spec.results.len() {
+            return Err(anyhow!(
+                "{}: expected {} results, got {}",
+                spec.file,
+                spec.results.len(),
+                parts.len()
+            ));
+        }
+        Ok(parts)
+    }
+}
+
+/// Build an f32 literal of the given dims from a row-major buffer.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let count: usize = dims.iter().product();
+    if count != data.len() {
+        return Err(anyhow!("literal shape {:?} != data len {}", dims, data.len()));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal (activation sequences).
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let count: usize = dims.iter().product();
+    if count != data.len() {
+        return Err(anyhow!("literal shape {:?} != data len {}", dims, data.len()));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Extract an f32 literal into a Vec<f32>.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Download a device buffer into a Vec<f32>.
+pub fn buffer_to_vec_f32(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    let lit = buf.to_literal_sync().context("downloading buffer")?;
+    to_vec_f32(&lit)
+}
+
+// NOTE: engine tests live in rust/tests/runtime_e2e.rs — they need the
+// artifacts built by `make artifacts` and a PJRT client, which is too
+// heavy for unit scope.

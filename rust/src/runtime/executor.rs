@@ -1,0 +1,271 @@
+//! Typed runners over the AOT artifacts.
+//!
+//! Each runner owns the padded problem binding plus device-resident
+//! state, converts f64 ↔ f32 at the boundary, and drives
+//! [`super::client::Engine`]. The dense engine's role in the system is
+//! documented in DESIGN.md §2: reference solving, batched-dense
+//! cross-validation of the sparse Rust path, and the Pallas hot-spot
+//! demonstration.
+//!
+//! Hot-path design (EXPERIMENTS.md §Perf): the constant O(P²) matrices
+//! are uploaded once at construction and stay device-resident; per chunk
+//! only the O(P) state and O(T) activation sequence cross the boundary.
+//! (Fully device-resident state is blocked by the 0.5.1 PJRT client
+//! returning results as a single tuple buffer — see the §Perf log.)
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::Graph;
+
+use super::artifacts::{ArtifactKind, ArtifactSpec};
+use super::client::{to_vec_f32, Engine};
+use super::pad::{pad_vec, unpad_vec, PaddedProblem};
+
+/// State shared by the runners for one (graph, alpha) binding.
+struct Binding {
+    spec: ArtifactSpec,
+    pp: PaddedProblem,
+}
+
+impl Binding {
+    fn new(engine: &Engine, kind: ArtifactKind, graph: &Graph, alpha: f64) -> Result<Binding> {
+        let spec = engine.select(kind, graph.n())?;
+        let pp = PaddedProblem::new(graph, alpha, spec.padded_size);
+        Ok(Binding { spec, pp })
+    }
+}
+
+/// Runs `mp_chunk` artifacts: T Algorithm-1 steps per call on dense
+/// padded B, returning the per-step `‖r‖²` trace.
+pub struct MpChunkRunner {
+    binding: Binding,
+    /// Host-mirrored evolving state (f32, padded).
+    x: Vec<f32>,
+    r: Vec<f32>,
+    /// Persistent device buffers for the constant matrix inputs.
+    b_buf: xla::PjRtBuffer,
+    bn_buf: xla::PjRtBuffer,
+}
+
+impl MpChunkRunner {
+    pub fn new(engine: &mut Engine, graph: &Graph, alpha: f64) -> Result<MpChunkRunner> {
+        let binding = Binding::new(engine, ArtifactKind::MpChunk, graph, alpha)?;
+        let p = binding.pp.p;
+        let b_buf = engine.upload_f32(&binding.pp.b_pad, &[p, p])?;
+        let bn_buf = engine.upload_f32(&binding.pp.bnorm2, &[p, 1])?;
+        let x = vec![0.0f32; p];
+        let r = binding.pp.y.clone();
+        // Warm the executable cache so run() latency is pure execution.
+        engine.executable(&binding.spec)?;
+        Ok(MpChunkRunner { binding, x, r, b_buf, bn_buf })
+    }
+
+    /// Chunk length T compiled into the artifact.
+    pub fn chunk_len(&self) -> usize {
+        self.binding.spec.chunk.expect("mp_chunk has a chunk length")
+    }
+
+    pub fn padded_size(&self) -> usize {
+        self.binding.pp.p
+    }
+
+    /// Run exactly `chunk_len` activations given by `ks` (real-page
+    /// indices); returns the per-step `‖r_t‖²` trace.
+    pub fn run_chunk(&mut self, engine: &mut Engine, ks: &[usize]) -> Result<Vec<f64>> {
+        let t = self.chunk_len();
+        if ks.len() != t {
+            return Err(anyhow!("expected {} activations, got {}", t, ks.len()));
+        }
+        let n = self.binding.pp.n;
+        if let Some(&bad) = ks.iter().find(|&&k| k >= n) {
+            return Err(anyhow!("activation {bad} out of range (n={n})"));
+        }
+        let p = self.binding.pp.p;
+        let ks_i32: Vec<i32> = ks.iter().map(|&k| k as i32).collect();
+        let x_buf = engine.upload_f32(&self.x, &[p, 1])?;
+        let r_buf = engine.upload_f32(&self.r, &[p, 1])?;
+        let ks_buf = engine.upload_i32(&ks_i32, &[t])?;
+        let outs = engine.execute_buffers(
+            &self.binding.spec,
+            &[&self.b_buf, &self.bn_buf, &x_buf, &r_buf, &ks_buf],
+        )?;
+        self.x = to_vec_f32(&outs[0])?;
+        self.r = to_vec_f32(&outs[1])?;
+        let trace = to_vec_f32(&outs[2])?;
+        Ok(trace.iter().map(|&v| v as f64).collect())
+    }
+
+    /// Current estimate, un-padded (f64).
+    pub fn estimate(&self) -> Vec<f64> {
+        unpad_vec(&self.x, self.binding.pp.n)
+    }
+
+    /// Current residual, un-padded (f64).
+    pub fn residual(&self) -> Vec<f64> {
+        unpad_vec(&self.r, self.binding.pp.n)
+    }
+
+    /// Padded tail of the state — must stay exactly zero (inertness).
+    pub fn padding_tail_abs_max(&self) -> f32 {
+        let n = self.binding.pp.n;
+        self.x[n..]
+            .iter()
+            .chain(self.r[n..].iter())
+            .fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+}
+
+/// Runs `jacobi_chunk` artifacts: T centralized fixed-point sweeps per
+/// call (`x ← αAx + y`).
+pub struct JacobiRunner {
+    binding: Binding,
+    x: Vec<f32>,
+    a_buf: xla::PjRtBuffer,
+    y_buf: xla::PjRtBuffer,
+    alpha_buf: xla::PjRtBuffer,
+}
+
+impl JacobiRunner {
+    pub fn new(engine: &mut Engine, graph: &Graph, alpha: f64) -> Result<JacobiRunner> {
+        let binding = Binding::new(engine, ArtifactKind::JacobiChunk, graph, alpha)?;
+        let p = binding.pp.p;
+        let a_buf = engine.upload_f32(&binding.pp.a_pad, &[p, p])?;
+        let y_buf = engine.upload_f32(&binding.pp.y, &[p, 1])?;
+        let alpha_buf = engine.upload_f32(&[alpha as f32], &[1, 1])?;
+        engine.executable(&binding.spec)?;
+        Ok(JacobiRunner { x: vec![0.0f32; p], binding, a_buf, y_buf, alpha_buf })
+    }
+
+    /// Sweeps per call.
+    pub fn chunk_len(&self) -> usize {
+        self.binding.spec.chunk.expect("jacobi_chunk has a chunk length")
+    }
+
+    /// Run one chunk of sweeps.
+    pub fn run_chunk(&mut self, engine: &mut Engine) -> Result<()> {
+        let p = self.binding.pp.p;
+        let x_buf = engine.upload_f32(&self.x, &[p, 1])?;
+        let outs = engine.execute_buffers(
+            &self.binding.spec,
+            &[&self.a_buf, &x_buf, &self.y_buf, &self.alpha_buf],
+        )?;
+        self.x = to_vec_f32(&outs[0])?;
+        Ok(())
+    }
+
+    /// Run chunks until the estimate moves less than `tol` (l∞) between
+    /// chunks, up to `max_chunks`. Returns chunks executed.
+    pub fn run_to_tolerance(
+        &mut self,
+        engine: &mut Engine,
+        tol: f64,
+        max_chunks: usize,
+    ) -> Result<usize> {
+        for c in 0..max_chunks {
+            let prev = self.x.clone();
+            self.run_chunk(engine)?;
+            let delta = prev
+                .iter()
+                .zip(&self.x)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            if (delta as f64) < tol {
+                return Ok(c + 1);
+            }
+        }
+        Ok(max_chunks)
+    }
+
+    pub fn estimate(&self) -> Vec<f64> {
+        unpad_vec(&self.x, self.binding.pp.n)
+    }
+}
+
+/// Runs `size_chunk` artifacts: T Algorithm-2 steps per call, returning
+/// the `‖s_t - s‖²` trace (Fig. 2's quantity).
+pub struct SizeChunkRunner {
+    binding: Binding,
+    s: Vec<f32>,
+    ct_buf: xla::PjRtBuffer,
+    cn_buf: xla::PjRtBuffer,
+    tgt_buf: xla::PjRtBuffer,
+}
+
+impl SizeChunkRunner {
+    pub fn new(engine: &mut Engine, graph: &Graph) -> Result<SizeChunkRunner> {
+        // alpha is irrelevant for C = (I-A)^T; reuse the padding binding.
+        let binding = Binding::new(engine, ArtifactKind::SizeChunk, graph, 0.85)?;
+        let p = binding.pp.p;
+        let ct_buf = engine.upload_f32(&binding.pp.ct_pad, &[p, p])?;
+        let cn_buf = engine.upload_f32(&binding.pp.cnorm2, &[p, 1])?;
+        let tgt_buf = engine.upload_f32(&binding.pp.s_target, &[p, 1])?;
+        // s_0 = e_1 (the paper's initialization).
+        let mut s = vec![0.0f32; p];
+        s[0] = 1.0;
+        engine.executable(&binding.spec)?;
+        Ok(SizeChunkRunner { binding, s, ct_buf, cn_buf, tgt_buf })
+    }
+
+    pub fn chunk_len(&self) -> usize {
+        self.binding.spec.chunk.expect("size_chunk has a chunk length")
+    }
+
+    pub fn run_chunk(&mut self, engine: &mut Engine, ks: &[usize]) -> Result<Vec<f64>> {
+        let t = self.chunk_len();
+        if ks.len() != t {
+            return Err(anyhow!("expected {} activations, got {}", t, ks.len()));
+        }
+        let n = self.binding.pp.n;
+        if let Some(&bad) = ks.iter().find(|&&k| k >= n) {
+            return Err(anyhow!("activation {bad} out of range (n={n})"));
+        }
+        let p = self.binding.pp.p;
+        let ks_i32: Vec<i32> = ks.iter().map(|&k| k as i32).collect();
+        let s_buf = engine.upload_f32(&self.s, &[p, 1])?;
+        let ks_buf = engine.upload_i32(&ks_i32, &[t])?;
+        let outs = engine.execute_buffers(
+            &self.binding.spec,
+            &[&self.ct_buf, &self.cn_buf, &s_buf, &self.tgt_buf, &ks_buf],
+        )?;
+        self.s = to_vec_f32(&outs[0])?;
+        let trace = to_vec_f32(&outs[1])?;
+        Ok(trace.iter().map(|&v| v as f64).collect())
+    }
+
+    pub fn s(&self) -> Vec<f64> {
+        unpad_vec(&self.s, self.binding.pp.n)
+    }
+}
+
+/// Runs `residual_norm`: `(r, ‖r‖²) = (y - Bx, ...)` — the eq. 11
+/// conservation checker on the dense engine.
+pub struct ResidualNormRunner {
+    binding: Binding,
+    b_buf: xla::PjRtBuffer,
+    y_buf: xla::PjRtBuffer,
+}
+
+impl ResidualNormRunner {
+    pub fn new(engine: &mut Engine, graph: &Graph, alpha: f64) -> Result<ResidualNormRunner> {
+        let binding = Binding::new(engine, ArtifactKind::ResidualNorm, graph, alpha)?;
+        let p = binding.pp.p;
+        let b_buf = engine.upload_f32(&binding.pp.b_pad, &[p, p])?;
+        let y_buf = engine.upload_f32(&binding.pp.y, &[p, 1])?;
+        engine.executable(&binding.spec)?;
+        Ok(ResidualNormRunner { binding, b_buf, y_buf })
+    }
+
+    /// Evaluate `(r, ‖r‖²)` for an arbitrary estimate `x` (f64, length n).
+    pub fn run(&self, engine: &mut Engine, x: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let p = self.binding.pp.p;
+        if x.len() != self.binding.pp.n {
+            return Err(anyhow!("x has {} entries, graph has {}", x.len(), self.binding.pp.n));
+        }
+        let x_buf = engine.upload_f32(&pad_vec(x, p), &[p, 1])?;
+        let outs =
+            engine.execute_buffers(&self.binding.spec, &[&self.b_buf, &x_buf, &self.y_buf])?;
+        let r = unpad_vec(&to_vec_f32(&outs[0])?, self.binding.pp.n);
+        let rn2 = to_vec_f32(&outs[1])?[0] as f64;
+        Ok((r, rn2))
+    }
+}

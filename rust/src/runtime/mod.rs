@@ -1,0 +1,44 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them from Rust.
+//!
+//! Pipeline (see /opt/xla-example and DESIGN.md §2):
+//!
+//! 1. `make artifacts` runs Python **once**: `python/compile/aot.py`
+//!    lowers the L2 scan graphs (whose inner ops are the L1 Pallas
+//!    kernels, `interpret=True`) to **HLO text** — the interchange format
+//!    the bundled xla_extension 0.5.1 accepts (jax ≥ 0.5 serialized
+//!    protos carry 64-bit instruction ids it rejects).
+//! 2. [`client::Engine`] parses `manifest.json`, compiles each HLO module
+//!    on the PJRT CPU client once, and caches the executables.
+//! 3. [`executor`] exposes typed entry points (`MpChunkRunner`, …) that
+//!    pad f64 state to the artifact's f32 padded shapes ([`pad`]),
+//!    execute, and un-pad.
+//!
+//! Python never runs at request time: after `make artifacts` the Rust
+//! binary is self-contained.
+
+pub mod artifacts;
+pub mod client;
+pub mod executor;
+pub mod pad;
+
+pub use artifacts::{ArtifactKind, ArtifactSpec, Manifest};
+pub use client::Engine;
+pub use executor::{JacobiRunner, MpChunkRunner, ResidualNormRunner, SizeChunkRunner};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$PAGERANK_MP_ARTIFACTS` if set, else
+/// `artifacts/` relative to the current directory, else relative to the
+/// crate root (useful under `cargo test`).
+pub fn artifact_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PAGERANK_MP_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = std::path::PathBuf::from(DEFAULT_ARTIFACT_DIR);
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT_DIR)
+}

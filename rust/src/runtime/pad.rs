@@ -1,0 +1,212 @@
+//! Padding rules — the Rust mirror of `python/compile/model.py`.
+//!
+//! Artifacts are compiled at fixed padded sizes P (multiples of the L1
+//! kernel block). A graph of N ≤ P pages maps in as:
+//!
+//! * `A_pad = blockdiag(A, I)` (padded pages are self-loops, column
+//!   stochastic), hence `B_pad = blockdiag(B, (1-α)I)`;
+//! * vectors zero-pad;
+//! * activation sequences only index real pages, so padded coordinates
+//!   are exactly inert (pinned by tests on both language sides).
+//!
+//! Everything crosses the boundary as **row-major f32** (the layout
+//! `xla::Literal::vec1(..).reshape(..)` produces).
+
+use crate::graph::Graph;
+use crate::linalg::sparse::BColumns;
+
+/// Row-major padded matrices/vectors for one (graph, alpha, P) binding.
+#[derive(Debug, Clone)]
+pub struct PaddedProblem {
+    pub n: usize,
+    pub p: usize,
+    pub alpha: f64,
+    /// Row-major (P,P) hyperlink matrix with identity padding.
+    pub a_pad: Vec<f32>,
+    /// Row-major (P,P) B = I - alpha*A_pad.
+    pub b_pad: Vec<f32>,
+    /// (P,1) per-column squared norms of B_pad.
+    pub bnorm2: Vec<f32>,
+    /// Row-major (P,P) C^T = I - A_pad (for Algorithm 2).
+    pub ct_pad: Vec<f32>,
+    /// (P,1) ||C(k,:)||^2 with padded rows clamped to 1 (guard against
+    /// 0/0; they are never activated).
+    pub cnorm2: Vec<f32>,
+    /// (P,1) y = (1-alpha) on real coordinates, 0 on padding.
+    pub y: Vec<f32>,
+    /// (P,1) target s = 1/N on real coordinates, 0 on padding.
+    pub s_target: Vec<f32>,
+}
+
+impl PaddedProblem {
+    pub fn new(graph: &Graph, alpha: f64, p: usize) -> PaddedProblem {
+        let n = graph.n();
+        assert!(p >= n, "padded size {p} < graph size {n}");
+        let mut a_pad = vec![0.0f32; p * p];
+        // Real block: A[i][j] = 1/N_j iff j -> i.
+        for j in 0..n {
+            let w = 1.0 / graph.out_degree(j) as f64;
+            for &i in graph.out(j) {
+                a_pad[(i as usize) * p + j] = w as f32;
+            }
+        }
+        // Identity padding.
+        for d in n..p {
+            a_pad[d * p + d] = 1.0;
+        }
+        // B = I - alpha A (f32, row-major).
+        let mut b_pad = vec![0.0f32; p * p];
+        for i in 0..p {
+            for j in 0..p {
+                let idij = if i == j { 1.0f32 } else { 0.0 };
+                b_pad[i * p + j] = idij - (alpha as f32) * a_pad[i * p + j];
+            }
+        }
+        // Column norms of B_pad — from the closed form for real columns
+        // (BColumns, f64 precision) and (1-alpha)^2 for padding.
+        let cols = BColumns::new(graph, alpha);
+        let mut bnorm2 = vec![0.0f32; p];
+        for k in 0..n {
+            bnorm2[k] = cols.norm_sq(k) as f32;
+        }
+        let pad_b = ((1.0 - alpha) * (1.0 - alpha)) as f32;
+        bnorm2[n..p].iter_mut().for_each(|v| *v = pad_b);
+
+        // C^T = I - A_pad; padded block is I - I = 0.
+        let mut ct_pad = vec![0.0f32; p * p];
+        for i in 0..p {
+            for j in 0..p {
+                let idij = if i == j { 1.0f32 } else { 0.0 };
+                ct_pad[i * p + j] = idij - a_pad[i * p + j];
+            }
+        }
+        // ||C(k,:)||^2 = 1 - 2 A_kk + 1/N_k for real rows; 1.0 guard on pads.
+        let mut cnorm2 = vec![1.0f32; p];
+        for k in 0..n {
+            let nk = graph.out_degree(k) as f64;
+            let akk = if graph.has_self_loop(k) { 1.0 / nk } else { 0.0 };
+            cnorm2[k] = (1.0 - 2.0 * akk + 1.0 / nk) as f32;
+        }
+
+        let mut y = vec![0.0f32; p];
+        y[..n].iter_mut().for_each(|v| *v = (1.0 - alpha) as f32);
+        let mut s_target = vec![0.0f32; p];
+        s_target[..n].iter_mut().for_each(|v| *v = (1.0 / n as f64) as f32);
+
+        PaddedProblem {
+            n,
+            p,
+            alpha,
+            a_pad,
+            b_pad,
+            bnorm2,
+            ct_pad,
+            cnorm2,
+            y,
+            s_target,
+        }
+    }
+}
+
+/// Zero-pad an f64 vector to a (P,) f32 buffer.
+pub fn pad_vec(v: &[f64], p: usize) -> Vec<f32> {
+    assert!(v.len() <= p);
+    let mut out = vec![0.0f32; p];
+    for (o, &x) in out.iter_mut().zip(v) {
+        *o = x as f32;
+    }
+    out
+}
+
+/// Truncate a (P,) f32 buffer back to n f64 entries.
+pub fn unpad_vec(v: &[f32], n: usize) -> Vec<f64> {
+    assert!(n <= v.len());
+    v[..n].iter().map(|&x| x as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::linalg::dense::DenseMatrix;
+
+    #[test]
+    fn padded_a_matches_python_rules() {
+        let g = generators::er_threshold(20, 0.5, 171);
+        let pp = PaddedProblem::new(&g, 0.85, 32);
+        // Real block equals the dense hyperlink matrix.
+        let a = DenseMatrix::hyperlink(&g);
+        for i in 0..20 {
+            for j in 0..20 {
+                assert!((pp.a_pad[i * 32 + j] as f64 - a.get(i, j)).abs() < 1e-7);
+            }
+        }
+        // Identity padding, zero off-blocks.
+        for d in 20..32 {
+            assert_eq!(pp.a_pad[d * 32 + d], 1.0);
+        }
+        assert_eq!(pp.a_pad[5 * 32 + 25], 0.0);
+        assert_eq!(pp.a_pad[25 * 32 + 5], 0.0);
+        // Columns all sum to 1.
+        for j in 0..32 {
+            let s: f32 = (0..32).map(|i| pp.a_pad[i * 32 + j]).sum();
+            assert!((s - 1.0).abs() < 1e-5, "col {j} sums {s}");
+        }
+    }
+
+    #[test]
+    fn padded_b_and_norms() {
+        let g = generators::er_threshold(20, 0.5, 172);
+        let alpha = 0.85;
+        let pp = PaddedProblem::new(&g, alpha, 32);
+        let b = DenseMatrix::b_matrix(&g, alpha);
+        for i in 0..20 {
+            for j in 0..20 {
+                assert!((pp.b_pad[i * 32 + j] as f64 - b.get(i, j)).abs() < 1e-6);
+            }
+        }
+        // Padded column norms = (1-alpha)^2.
+        for k in 20..32 {
+            assert!((pp.bnorm2[k] - 0.15f32 * 0.15).abs() < 1e-7);
+        }
+        // Real norms match dense computation.
+        let n2 = b.column_norms_sq();
+        for k in 0..20 {
+            assert!((pp.bnorm2[k] as f64 - n2[k]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn ct_pad_rows_are_c_rows() {
+        let g = generators::er_threshold(15, 0.5, 173);
+        let pp = PaddedProblem::new(&g, 0.85, 16);
+        let a = DenseMatrix::hyperlink(&g);
+        // (C^T)[i][j] = (I - A)[i][j]; row k of C is column k of I - A.
+        for i in 0..15 {
+            for j in 0..15 {
+                let want = if i == j { 1.0 } else { 0.0 } - a.get(i, j);
+                assert!((pp.ct_pad[i * 16 + j] as f64 - want).abs() < 1e-6);
+            }
+        }
+        // Padded C^T block is zero; guard norms are 1.
+        assert_eq!(pp.ct_pad[15 * 16 + 15], 0.0);
+        assert_eq!(pp.cnorm2[15], 1.0);
+    }
+
+    #[test]
+    fn vectors_round_trip() {
+        let v = vec![1.5, -2.25, 3.0];
+        let padded = pad_vec(&v, 8);
+        assert_eq!(padded.len(), 8);
+        assert_eq!(padded[3..], [0.0; 5]);
+        let back = unpad_vec(&padded, 3);
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_rejects_small_p() {
+        let g = generators::ring(10);
+        PaddedProblem::new(&g, 0.85, 5);
+    }
+}

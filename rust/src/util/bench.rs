@@ -1,0 +1,232 @@
+//! Micro-benchmark harness (the environment has no `criterion`; this
+//! provides the same discipline: warm-up, many timed iterations, robust
+//! summary statistics, throughput reporting and a stable text format the
+//! `cargo bench` binaries use).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in nanoseconds.
+    pub samples_ns: Vec<f64>,
+    /// Optional units-per-iteration for throughput (e.g. activations).
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        stats::median(&self.samples_ns)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        stats::mean(&self.samples_ns)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        stats::quantile(&self.samples_ns, 0.95)
+    }
+
+    /// Units per second at the median iteration time.
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter
+            .map(|u| u / (self.median_ns() / 1e9))
+    }
+
+    /// One human-readable line, criterion-style.
+    pub fn report_line(&self) -> String {
+        let med = format_ns(self.median_ns());
+        let mean = format_ns(self.mean_ns());
+        let p95 = format_ns(self.p95_ns());
+        match self.throughput() {
+            Some(tp) => format!(
+                "{:<44} median {:>10}  mean {:>10}  p95 {:>10}  thrpt {:>12}/s",
+                self.name,
+                med,
+                mean,
+                p95,
+                format_count(tp)
+            ),
+            None => format!(
+                "{:<44} median {:>10}  mean {:>10}  p95 {:>10}",
+                self.name, med, mean, p95
+            ),
+        }
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Format a large count with an adaptive suffix.
+pub fn format_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Benchmark runner with warm-up and a time budget per case.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode runner for CI / smoke runs (shorter budget).
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(400),
+            min_iters: 5,
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Run one case. `f` is invoked once per iteration; use
+    /// `std::hint::black_box` inside to defeat DCE. `units` is the number
+    /// of logical operations per iteration for throughput reporting.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, units: Option<f64>, mut f: F) -> &BenchResult {
+        // Warm-up phase.
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup {
+            f();
+        }
+        // Timed phase.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            samples_ns: samples,
+            units_per_iter: units,
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last().expect("just pushed")
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render all collected results as a CSV (name, median_ns, mean_ns,
+    /// p95_ns, throughput_per_s).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("name,median_ns,mean_ns,p95_ns,throughput_per_s\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{:.1},{:.1},{:.1},{}\n",
+                r.name,
+                r.median_ns(),
+                r.mean_ns(),
+                r.p95_ns(),
+                r.throughput().map(|t| format!("{t:.1}")).unwrap_or_default()
+            ));
+        }
+        out
+    }
+}
+
+/// Whether `cargo bench` was invoked in quick mode (env PAGERANK_BENCH_QUICK).
+pub fn quick_mode() -> bool {
+    std::env::var("PAGERANK_BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
+}
+
+/// Construct the standard bencher honouring quick mode.
+pub fn standard() -> Bencher {
+    if quick_mode() {
+        Bencher::quick()
+    } else {
+        Bencher::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = Bencher::quick().with_budget(Duration::from_millis(30));
+        let mut acc = 0u64;
+        let r = b.bench("noop", Some(1.0), || {
+            acc = std::hint::black_box(acc.wrapping_add(1));
+        });
+        assert!(r.samples_ns.len() >= 5);
+        assert!(r.median_ns() >= 0.0);
+        assert!(r.throughput().expect("units set") > 0.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut b = Bencher::quick().with_budget(Duration::from_millis(10));
+        b.bench("a", None, || {
+            std::hint::black_box(3u64.pow(7));
+        });
+        let csv = b.to_csv();
+        assert!(csv.starts_with("name,median_ns"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(format_ns(12.0), "12.0 ns");
+        assert_eq!(format_ns(1_500.0), "1.50 µs");
+        assert_eq!(format_ns(2_000_000.0), "2.00 ms");
+        assert_eq!(format_ns(3e9), "3.00 s");
+        assert_eq!(format_count(999.0), "999.0");
+        assert_eq!(format_count(1_200.0), "1.20k");
+        assert_eq!(format_count(3_400_000.0), "3.40M");
+        assert_eq!(format_count(5e9), "5.00G");
+    }
+}

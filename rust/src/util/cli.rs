@@ -1,0 +1,184 @@
+//! Minimal command-line parser (the build environment has no `clap`).
+//!
+//! Grammar: `binary <subcommand> [--flag] [--key value] ...`
+//! Values may also be attached as `--key=value`. Unknown flags are
+//! collected and reported so typos fail loudly instead of being ignored.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed arguments: one optional subcommand plus `--key [value]` pairs.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` and `--key=value` pairs; bare `--flag` maps to "true".
+    options: BTreeMap<String, String>,
+    /// Keys the program actually read — used to report unused/unknown keys.
+    consumed: std::cell::RefCell<Vec<String>>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+/// Error produced when an option fails to parse as the requested type.
+#[derive(Debug)]
+pub struct ParseError {
+    pub key: String,
+    pub value: String,
+    pub wanted: &'static str,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "option --{} = {:?} is not a valid {}",
+            self.key, self.value, self.wanted
+        )
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().expect("peeked");
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.options.insert(stripped.to_string(), "true".into());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// String with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed lookup with default; returns an error if present but invalid.
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, ParseError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| ParseError {
+                key: key.to_string(),
+                value: v.to_string(),
+                wanted: std::any::type_name::<T>(),
+            }),
+        }
+    }
+
+    /// Bare-flag check (`--verbose`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    /// Keys provided on the command line but never read by the program —
+    /// call after all lookups to catch typos.
+    pub fn unknown_keys(&self) -> Vec<String> {
+        let consumed = self.consumed.borrow();
+        self.options
+            .keys()
+            .filter(|k| !consumed.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig1 --rounds 100 --alpha 0.85 --verbose");
+        assert_eq!(a.command.as_deref(), Some("fig1"));
+        assert_eq!(a.get_parse("rounds", 0usize).unwrap(), 100);
+        assert_eq!(a.get_parse("alpha", 0.0f64).unwrap(), 0.85);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --n=500 --graph=ba");
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 500);
+        assert_eq!(a.get("graph"), Some("ba"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_parse("steps", 123usize).unwrap(), 123);
+        assert_eq!(a.get_str("out", "report.csv"), "report.csv");
+    }
+
+    #[test]
+    fn invalid_value_is_error() {
+        let a = parse("run --steps banana");
+        assert!(a.get_parse("steps", 0usize).is_err());
+        let e = a.get_parse("steps", 0usize).unwrap_err();
+        assert!(e.to_string().contains("steps"));
+    }
+
+    #[test]
+    fn positional_arguments() {
+        let a = parse("rank graph.txt out.csv --alpha 0.9");
+        assert_eq!(a.command.as_deref(), Some("rank"));
+        assert_eq!(a.positional, vec!["graph.txt", "out.csv"]);
+    }
+
+    #[test]
+    fn unknown_keys_reported() {
+        let a = parse("run --known 1 --typo 2");
+        let _ = a.get("known");
+        assert_eq!(a.unknown_keys(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --verbose --n 5");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 5);
+    }
+}

@@ -1,0 +1,361 @@
+//! Minimal JSON parser (the environment has no `serde`); sufficient for
+//! the artifact manifest written by `python/compile/aot.py` and for the
+//! harness' report files. Full JSON grammar minus `\u` surrogate pairs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<Json>),
+    Object(BTreeMap<String, Json>),
+}
+
+/// Parse error with byte position.
+#[derive(Debug, PartialEq)]
+pub struct JsonError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err<T>(&self, msg: &str) -> Result<T, JsonError> {
+        Err(JsonError { pos: self.pos, msg: msg.to_string() })
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.bump() == Some(c) {
+            Ok(())
+        } else {
+            self.pos = self.pos.saturating_sub(1);
+            self.err(&format!("expected {:?}", c as char))
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, JsonError> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            self.err(&format!("expected `{lit}`"))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return self.err("unterminated string"),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        if self.pos + 4 > self.bytes.len() {
+                            return self.err("truncated \\u escape");
+                        }
+                        let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                            .map_err(|_| JsonError { pos: self.pos, msg: "bad utf8".into() })?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| JsonError { pos: self.pos, msg: "bad hex".into() })?;
+                        self.pos += 4;
+                        out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                    }
+                    _ => return self.err("bad escape"),
+                },
+                Some(b) => {
+                    // Pass raw UTF-8 bytes through.
+                    if b < 0x80 {
+                        out.push(b as char);
+                    } else {
+                        // Collect the multibyte sequence.
+                        let start = self.pos - 1;
+                        let len = if b >= 0xF0 {
+                            4
+                        } else if b >= 0xE0 {
+                            3
+                        } else {
+                            2
+                        };
+                        if start + len > self.bytes.len() {
+                            return self.err("truncated utf8");
+                        }
+                        let s = std::str::from_utf8(&self.bytes[start..start + len])
+                            .map_err(|_| JsonError { pos: start, msg: "bad utf8".into() })?;
+                        out.push_str(s);
+                        self.pos = start + len;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| JsonError { pos: start, msg: "bad utf8 in number".into() })?;
+        s.parse::<f64>()
+            .map(Json::Number)
+            .map_err(|_| JsonError { pos: start, msg: format!("bad number {s:?}") })
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            None => self.err("unexpected end of input"),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::String(self.string()?)),
+            Some(b'[') => {
+                self.pos += 1;
+                let mut arr = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Json::Array(arr));
+                }
+                loop {
+                    arr.push(self.value()?);
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(b',') => continue,
+                        Some(b']') => return Ok(Json::Array(arr)),
+                        _ => return self.err("expected , or ]"),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let mut map = BTreeMap::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Object(map));
+                }
+                loop {
+                    self.skip_ws();
+                    let key = self.string()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    let val = self.value()?;
+                    map.insert(key, val);
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(b',') => continue,
+                        Some(b'}') => return Ok(Json::Object(map)),
+                        _ => return self.err("expected , or }"),
+                    }
+                }
+            }
+            Some(_) => self.number(),
+        }
+    }
+}
+
+impl Json {
+    /// Parse a JSON document.
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return p.err("trailing garbage");
+        }
+        Ok(v)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().filter(|v| *v >= 0.0 && v.fract() == 0.0).map(|v| v as usize)
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Object(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Serialize (stable key order, compact).
+    pub fn render(&self) -> String {
+        match self {
+            Json::Null => "null".into(),
+            Json::Bool(b) => b.to_string(),
+            Json::Number(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    format!("{}", *n as i64)
+                } else {
+                    format!("{n}")
+                }
+            }
+            Json::String(s) => format!("{s:?}"),
+            Json::Array(a) => {
+                let inner: Vec<String> = a.iter().map(Json::render).collect();
+                format!("[{}]", inner.join(","))
+            }
+            Json::Object(m) => {
+                let inner: Vec<String> =
+                    m.iter().map(|(k, v)| format!("{k:?}:{}", v.render())).collect();
+                format!("{{{}}}", inner.join(","))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Json::parse("null").expect("ok"), Json::Null);
+        assert_eq!(Json::parse("true").expect("ok"), Json::Bool(true));
+        assert_eq!(Json::parse("-2.5e2").expect("ok"), Json::Number(-250.0));
+        assert_eq!(Json::parse(r#""hi""#).expect("ok"), Json::String("hi".into()));
+    }
+
+    #[test]
+    fn escapes_and_unicode() {
+        assert_eq!(
+            Json::parse(r#""a\nb\t\"c\"""#).expect("ok"),
+            Json::String("a\nb\t\"c\"".into())
+        );
+        assert_eq!(Json::parse(r#""A""#).expect("ok"), Json::String("A".into()));
+        assert_eq!(Json::parse("\"héllo\"").expect("ok"), Json::String("héllo".into()));
+    }
+
+    #[test]
+    fn arrays_and_objects() {
+        let v = Json::parse(r#"{"a": [1, 2, {"b": false}], "c": "x"}"#).expect("ok");
+        assert_eq!(v.get("c").and_then(Json::as_str), Some("x"));
+        let arr = v.get("a").and_then(Json::as_array).expect("array");
+        assert_eq!(arr[0].as_usize(), Some(1));
+        assert_eq!(arr[2].get("b"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::parse("[]").expect("ok"), Json::Array(vec![]));
+        assert_eq!(Json::parse("{}").expect("ok"), Json::Object(Default::default()));
+    }
+
+    #[test]
+    fn errors_reported_with_position() {
+        assert!(Json::parse("[1, 2").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("1 garbage").is_err());
+        let e = Json::parse("nul").unwrap_err();
+        assert!(e.to_string().contains("null"));
+    }
+
+    #[test]
+    fn manifest_shape_parses() {
+        // A realistic slice of the aot.py manifest.
+        let text = r#"{
+          "version": 1, "block": 128, "dtype": "f32",
+          "artifacts": [
+            {"kind": "mp_chunk", "file": "mp_chunk_p128_t128.hlo.txt",
+             "padded_size": 128, "chunk": 128,
+             "operands": [{"name": "b_pad", "shape": [128, 128], "dtype": "f32"}],
+             "results": [{"name": "x", "shape": [128, 1], "dtype": "f32"}]}
+          ]
+        }"#;
+        let v = Json::parse(text).expect("ok");
+        assert_eq!(v.get("block").and_then(Json::as_usize), Some(128));
+        let arts = v.get("artifacts").and_then(Json::as_array).expect("arr");
+        assert_eq!(arts[0].get("kind").and_then(Json::as_str), Some("mp_chunk"));
+        assert_eq!(
+            arts[0].get("operands").and_then(Json::as_array).expect("ops")[0]
+                .get("shape")
+                .and_then(Json::as_array)
+                .expect("shape")
+                .len(),
+            2
+        );
+    }
+
+    #[test]
+    fn round_trip_render() {
+        let src = r#"{"a":[1,2.5,"x"],"b":{"c":null}}"#;
+        let v = Json::parse(src).expect("ok");
+        let rendered = v.render();
+        assert_eq!(Json::parse(&rendered).expect("ok"), v);
+    }
+
+    #[test]
+    fn as_usize_rejects_fractions_and_negatives() {
+        assert_eq!(Json::Number(1.5).as_usize(), None);
+        assert_eq!(Json::Number(-3.0).as_usize(), None);
+        assert_eq!(Json::Number(7.0).as_usize(), Some(7));
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared infrastructure: deterministic RNG, statistics, CLI parsing and
+//! the micro-benchmark harness.
+//!
+//! Everything here is dependency-free by design: the build environment is
+//! fully offline, so the substrates a typical project would pull from
+//! crates.io (`rand`, `clap`, `criterion`) are implemented in-repo.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,251 @@
+//! Small statistics toolkit for the experiment harness: summary moments,
+//! quantiles, trajectory averaging and log-linear decay-rate fits (used to
+//! compare measured contraction against the paper's `1 - σ²(B̂)/N` bound).
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance; 0 for fewer than two samples.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Quantile with linear interpolation, `q` in `[0, 1]`.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q), "q={q} out of range");
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in quantile input"));
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Median (0.5 quantile).
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Element-wise mean of equally-long trajectories — the paper averages 100
+/// (Fig. 1) / 1000 (Fig. 2) simulation rounds this way.
+pub fn average_trajectories(rounds: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!rounds.is_empty(), "no trajectories to average");
+    let len = rounds[0].len();
+    assert!(
+        rounds.iter().all(|r| r.len() == len),
+        "trajectory lengths differ"
+    );
+    let mut out = vec![0.0; len];
+    for r in rounds {
+        for (o, v) in out.iter_mut().zip(r) {
+            *o += v;
+        }
+    }
+    let n = rounds.len() as f64;
+    out.iter_mut().for_each(|o| *o /= n);
+    out
+}
+
+/// Element-wise sample variance across trajectories (the paper remarks that
+/// [6] has visibly larger trajectory variance than MP / [15]).
+pub fn trajectory_variance(rounds: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!rounds.is_empty());
+    let len = rounds[0].len();
+    let avg = average_trajectories(rounds);
+    let mut out = vec![0.0; len];
+    if rounds.len() < 2 {
+        return out;
+    }
+    for r in rounds {
+        for i in 0..len {
+            let d = r[i] - avg[i];
+            out[i] += d * d;
+        }
+    }
+    let n = (rounds.len() - 1) as f64;
+    out.iter_mut().for_each(|o| *o /= n);
+    out
+}
+
+/// Ordinary least squares fit `y ≈ a + b x`; returns `(a, b)`.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points");
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+    }
+    assert!(sxx > 0.0, "degenerate x values");
+    let b = sxy / sxx;
+    (my - b * mx, b)
+}
+
+/// Fit an exponential decay `y_t ≈ C ρ^t` on the positive entries of a
+/// trajectory and return the per-step rate `ρ` (log-linear OLS). This is
+/// how the harness extracts the measured contraction factor compared with
+/// the paper's predicted `1 - σ²(B̂)/N`.
+pub fn decay_rate(traj: &[f64]) -> f64 {
+    let pts: Vec<(f64, f64)> = traj
+        .iter()
+        .enumerate()
+        .filter(|(_, &v)| v > 0.0 && v.is_finite())
+        .map(|(t, &v)| (t as f64, v.ln()))
+        .collect();
+    assert!(pts.len() >= 2, "not enough positive points for a decay fit");
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (_, slope) = linear_fit(&xs, &ys);
+    slope.exp()
+}
+
+/// Like [`decay_rate`] but fits only the prefix that stays above
+/// `floor` — trajectories that reach the floating-point noise floor
+/// flatten out and would bias the fit toward 1.
+pub fn decay_rate_above(traj: &[f64], floor: f64) -> f64 {
+    let end = traj.iter().position(|&v| v <= floor).unwrap_or(traj.len());
+    decay_rate(&traj[..end.max(2)])
+}
+
+/// Kendall-tau-style pairwise ranking agreement between two score vectors:
+/// the fraction of ordered pairs on which they agree. 1.0 = identical
+/// ranking. Used by the stopping-criterion extension and examples.
+pub fn ranking_agreement(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let da = a[i] - a[j];
+            let db = b[i] - b[j];
+            total += 1;
+            if (da > 0.0 && db > 0.0) || (da < 0.0 && db < 0.0) || (da == 0.0 && db == 0.0) {
+                agree += 1;
+            }
+        }
+    }
+    agree as f64 / total as f64
+}
+
+/// Indices sorted by descending score — the ranking induced by a PageRank
+/// vector (ties broken by index for determinism).
+pub fn ranking(scores: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&i, &j| {
+        scores[j]
+            .partial_cmp(&scores[i])
+            .expect("NaN score")
+            .then(i.cmp(&j))
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantile_empty_panics() {
+        quantile(&[], 0.5);
+    }
+
+    #[test]
+    fn trajectory_average_and_variance() {
+        let rounds = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        assert_eq!(average_trajectories(&rounds), vec![2.0, 3.0]);
+        assert_eq!(trajectory_variance(&rounds), vec![2.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn trajectory_length_mismatch_panics() {
+        average_trajectories(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 - 0.5 * x).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-10);
+        assert!((b + 0.5).abs() < 1e-10);
+    }
+
+    #[test]
+    fn decay_rate_recovers_rho() {
+        let rho: f64 = 0.98;
+        let traj: Vec<f64> = (0..200).map(|t| 5.0 * rho.powi(t)).collect();
+        let got = decay_rate(&traj);
+        assert!((got - rho).abs() < 1e-9, "got {got}");
+    }
+
+    #[test]
+    fn decay_rate_skips_nonpositive() {
+        let rho: f64 = 0.9;
+        let mut traj: Vec<f64> = (0..100).map(|t| rho.powi(t)).collect();
+        traj[3] = 0.0; // e.g. an exactly-converged entry
+        let got = decay_rate(&traj);
+        assert!((got - rho).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ranking_and_agreement() {
+        let a = [0.1, 0.9, 0.5];
+        assert_eq!(ranking(&a), vec![1, 2, 0]);
+        assert_eq!(ranking_agreement(&a, &a), 1.0);
+        let b = [0.9, 0.1, 0.5]; // swap top and bottom
+        let agr = ranking_agreement(&a, &b);
+        assert!(agr < 0.5, "agr={agr}");
+    }
+
+    #[test]
+    fn ranking_deterministic_on_ties() {
+        let a = [1.0, 1.0, 0.5];
+        assert_eq!(ranking(&a), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,215 @@
+//! Cross-module integration tests: whole-system flows that exercise
+//! several layers together (graph IO → algorithms → harness → reports),
+//! without the PJRT runtime (see runtime_e2e.rs for that).
+
+use pagerank_mp::algo::common::PageRankSolver;
+use pagerank_mp::algo::dynamic::{DynamicMatchingPursuit, EdgeEvent};
+use pagerank_mp::algo::monte_carlo::MonteCarlo;
+use pagerank_mp::algo::mp::MatchingPursuit;
+use pagerank_mp::algo::power_iteration::JacobiPowerIteration;
+use pagerank_mp::algo::stopping::RankingCertifier;
+use pagerank_mp::coordinator::{Coordinator, CoordinatorConfig, Mode, SamplerKind};
+use pagerank_mp::graph::{generators, io as graph_io, DanglingPolicy};
+use pagerank_mp::harness::{fig1, fig2};
+use pagerank_mp::linalg::solve::exact_pagerank;
+use pagerank_mp::linalg::vector;
+use pagerank_mp::network::LatencyModel;
+use pagerank_mp::util::rng::Rng;
+
+const ALPHA: f64 = 0.85;
+
+/// Every engine agrees on the same graph: exact solve, power iteration,
+/// matrix-form MP, distributed coordinator, and Monte-Carlo (loosely).
+#[test]
+fn all_engines_agree() {
+    let g = generators::er_threshold(60, 0.5, 1001);
+    let x_star = exact_pagerank(&g, ALPHA);
+
+    let mut pi = JacobiPowerIteration::new(&g, ALPHA);
+    pi.run_to_tolerance(1e-13, 2000);
+    assert!(vector::dist_inf(&pi.estimate(), &x_star) < 1e-10, "power iteration");
+
+    let mut mp = MatchingPursuit::new(&g, ALPHA);
+    let mut rng = Rng::seeded(5);
+    for _ in 0..200_000 {
+        mp.step(&mut rng);
+    }
+    assert!(vector::dist_inf(&mp.estimate(), &x_star) < 1e-9, "matrix-form MP");
+
+    let cfg = CoordinatorConfig::default().with_seed(6).with_alpha(ALPHA);
+    let mut coord = Coordinator::new(&g, cfg);
+    coord.run(200_000);
+    assert!(
+        vector::dist_inf(&coord.estimate(), &x_star) < 1e-9,
+        "distributed coordinator"
+    );
+
+    let mut mc = MonteCarlo::new(&g, ALPHA);
+    let mut rng = Rng::seeded(7);
+    for _ in 0..4000 {
+        mc.round(&mut rng);
+    }
+    let agr = pagerank_mp::util::stats::ranking_agreement(&mc.estimate(), &x_star);
+    assert!(agr > 0.9, "monte-carlo ranking agreement {agr}");
+}
+
+/// Graph IO round-trips through a file and the ranking is unchanged.
+#[test]
+fn io_round_trip_preserves_ranking() {
+    let g = generators::barabasi_albert(150, 3, 1002);
+    let dir = std::env::temp_dir().join(format!("prmp_int_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let path = dir.join("ba.txt");
+    graph_io::save(&g, &path).expect("save");
+    let g2 = graph_io::load(&path, DanglingPolicy::Error).expect("load");
+    assert_eq!(g, g2);
+    let x1 = exact_pagerank(&g, ALPHA);
+    let x2 = exact_pagerank(&g2, ALPHA);
+    assert_eq!(
+        pagerank_mp::util::stats::ranking(&x1),
+        pagerank_mp::util::stats::ranking(&x2)
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The stopping criterion is sound along a full distributed run.
+#[test]
+fn certification_sound_on_coordinator_run() {
+    let g = generators::er_threshold(40, 0.5, 1003);
+    let x_star = exact_pagerank(&g, ALPHA);
+    let cert = RankingCertifier::new(&g, ALPHA);
+    let cfg = CoordinatorConfig::default()
+        .with_seed(8)
+        .with_latency(LatencyModel::Exponential { mean: 0.05 });
+    let mut coord = Coordinator::new(&g, cfg);
+    for _ in 0..20 {
+        coord.run(2_000);
+        let x = coord.estimate();
+        let rn2 = vector::norm2_sq(&coord.residual());
+        let eps = cert.epsilon(rn2);
+        let true_err = vector::dist_inf(&x, &x_star);
+        assert!(true_err <= eps + 1e-12, "bound violated: {true_err} > {eps}");
+    }
+    // after 40k activations at N=40 some prefix certifies and is correct
+    let x = coord.estimate();
+    let rn2 = vector::norm2_sq(&coord.residual());
+    let c = cert.certify(&x, rn2);
+    assert!(c.certified_prefix > 0);
+    let true_ranking = pagerank_mp::util::stats::ranking(&x_star);
+    let k = c.certified_prefix.min(5);
+    assert_eq!(&c.ranking[..k], &true_ranking[..k]);
+}
+
+/// Dynamic tracking across a long churn sequence stays exact (eq. 11) and
+/// converges to each successive topology's PageRank.
+#[test]
+fn dynamic_tracking_over_churn() {
+    let g = generators::er_threshold(30, 0.5, 1004);
+    let mut dmp = DynamicMatchingPursuit::new(g, ALPHA);
+    let mut rng = Rng::seeded(9);
+    let mut churn = Rng::seeded(10);
+    for event in 0..8 {
+        for _ in 0..45_000 {
+            dmp.step(&mut rng);
+        }
+        let x_star = exact_pagerank(dmp.graph(), ALPHA);
+        assert!(
+            vector::dist_inf(dmp.estimate(), &x_star) < 1e-4,
+            "tracking lost at event {event}: {}",
+            vector::dist_inf(dmp.estimate(), &x_star)
+        );
+        // random valid mutation
+        loop {
+            let s = churn.below(30);
+            let d = churn.below(30);
+            if s == d {
+                continue;
+            }
+            let ev = if dmp.graph().has_edge(s, d) {
+                if dmp.graph().out_degree(s) <= 1 {
+                    continue;
+                }
+                EdgeEvent::Remove { src: s, dst: d }
+            } else {
+                EdgeEvent::Add { src: s, dst: d }
+            };
+            dmp.apply_event(ev).expect("valid event");
+            break;
+        }
+        assert!(dmp.conservation_error() < 1e-9, "eq. 11 broken at event {event}");
+    }
+}
+
+/// Scaled-down Figure 1 + Figure 2 end-to-end through the harness,
+/// asserting every paper claim.
+#[test]
+fn figures_reproduce_claims_small_scale() {
+    let f1 = fig1::run(&fig1::Fig1Config {
+        n: 30,
+        rounds: 8,
+        steps: 10_000,
+        stride: 250,
+        seed: 77,
+        threads: 4,
+        ..Default::default()
+    });
+    for (claim, ok) in f1.claims() {
+        assert!(ok, "fig1 claim failed: {claim}\n{:#?}", f1.verdict);
+    }
+    let f2 = fig2::run(&fig2::Fig2Config {
+        n: 30,
+        rounds: 16,
+        steps: 5_000,
+        stride: 100,
+        seed: 78,
+        threads: 4,
+        ..Default::default()
+    });
+    for (claim, ok) in f2.claims() {
+        assert!(ok, "fig2 claim failed: {claim} (rate {} bound {})", f2.rate, f2.predicted_bound);
+    }
+}
+
+/// Async coordinator on a sparse graph: overlap happens, and the final
+/// state still satisfies conservation against the true topology.
+#[test]
+fn async_overlap_preserves_exactness() {
+    let g = generators::erdos_renyi(400, 0.004, 1005);
+    let cfg = CoordinatorConfig::default()
+        .with_seed(11)
+        .with_mode(Mode::Async)
+        .with_sampler(SamplerKind::ExponentialClocks)
+        .with_latency(LatencyModel::Uniform { lo: 0.1, hi: 0.4 });
+    let mut coord = Coordinator::new(&g, cfg);
+    let rep = coord.run(5_000);
+    assert!(rep.metrics.peak_overlap > 1, "no overlap achieved");
+    let b = pagerank_mp::linalg::dense::DenseMatrix::b_matrix(&g, ALPHA);
+    let bx = b.matvec(&coord.estimate());
+    for (i, (bxi, ri)) in bx.iter().zip(coord.residual()).enumerate() {
+        assert!(
+            (bxi + ri - (1.0 - ALPHA)).abs() < 1e-10,
+            "conservation broken at {i}"
+        );
+    }
+}
+
+/// Message accounting equals the §II-D cost model across samplers.
+#[test]
+fn message_cost_model_holds() {
+    let g = generators::er_threshold(50, 0.5, 1006);
+    for sampler in [SamplerKind::Uniform, SamplerKind::ExponentialClocks] {
+        let cfg = CoordinatorConfig::default().with_seed(12).with_sampler(sampler);
+        let mut coord = Coordinator::new(&g, cfg);
+        let rep = coord.run(1_000);
+        // logical reads == logical writes + self-loop short circuits; on
+        // this generator there are no self-loops, so they are equal.
+        assert_eq!(rep.metrics.logical_reads(), rep.metrics.logical_writes());
+        // and per activation they average the mean out-degree
+        let per_act = rep.metrics.logical_reads() as f64 / rep.metrics.activations as f64;
+        let mean_deg = g.m() as f64 / g.n() as f64;
+        assert!(
+            (per_act - mean_deg).abs() < 0.15 * mean_deg,
+            "per-activation reads {per_act} vs mean degree {mean_deg}"
+        );
+    }
+}

@@ -1,0 +1,287 @@
+//! Property-based tests (hand-rolled: the offline environment has no
+//! proptest crate). Each property is exercised over many seeded random
+//! instances; failures print the offending seed so cases replay exactly.
+
+use pagerank_mp::algo::common::PageRankSolver;
+use pagerank_mp::algo::mp::MatchingPursuit;
+use pagerank_mp::algo::parallel_mp::ParallelMatchingPursuit;
+use pagerank_mp::algo::size_estimation::SizeEstimator;
+use pagerank_mp::coordinator::sampler::WeightTree;
+use pagerank_mp::graph::{generators, DanglingPolicy, GraphBuilder};
+use pagerank_mp::linalg::dense::DenseMatrix;
+use pagerank_mp::linalg::solve::{exact_pagerank, Lu};
+use pagerank_mp::linalg::sparse::BColumns;
+use pagerank_mp::linalg::vector;
+use pagerank_mp::util::json::Json;
+use pagerank_mp::util::rng::Rng;
+
+/// Random graph with guaranteed no dangling pages.
+fn random_graph(rng: &mut Rng) -> pagerank_mp::graph::Graph {
+    let n = rng.range(5, 60);
+    let p = 0.05 + 0.5 * rng.uniform();
+    let mut b = GraphBuilder::new(n).dangling_policy(DanglingPolicy::SelfLoop);
+    for s in 0..n {
+        for d in 0..n {
+            if rng.bernoulli(p) {
+                b.add_edge(s, d);
+            }
+        }
+    }
+    b.build().expect("random graph builds")
+}
+
+/// PROPERTY: eq. 11 conservation — B x_t + r_t = y after any activation
+/// sequence on any graph.
+#[test]
+fn prop_conservation_on_random_graphs() {
+    for case in 0..40u64 {
+        let mut rng = Rng::seeded(9000 + case);
+        let g = random_graph(&mut rng);
+        let alpha = 0.2 + 0.75 * rng.uniform();
+        let mut mp = MatchingPursuit::new(&g, alpha);
+        let steps = rng.range(1, 400);
+        for _ in 0..steps {
+            mp.step(&mut rng);
+        }
+        let b = DenseMatrix::b_matrix(&g, alpha);
+        let bx = b.matvec(&mp.estimate());
+        for (i, (v, r)) in bx.iter().zip(mp.residual()).enumerate() {
+            assert!(
+                (v + r - (1.0 - alpha)).abs() < 1e-9,
+                "case {case}: conservation broken at page {i}"
+            );
+        }
+    }
+}
+
+/// PROPERTY: ‖r‖ is non-increasing pathwise for any graph/α/sequence.
+#[test]
+fn prop_residual_monotone() {
+    for case in 0..40u64 {
+        let mut rng = Rng::seeded(9100 + case);
+        let g = random_graph(&mut rng);
+        let alpha = 0.2 + 0.75 * rng.uniform();
+        let mut mp = MatchingPursuit::new(&g, alpha);
+        let mut prev = mp.residual_norm_sq();
+        for _ in 0..300 {
+            mp.step(&mut rng);
+            let cur = mp.residual_norm_sq();
+            assert!(cur <= prev + 1e-12, "case {case}: residual grew");
+            prev = cur;
+        }
+    }
+}
+
+/// PROPERTY: incremental ‖r‖² tracking equals the exact recomputation.
+#[test]
+fn prop_incremental_norm_exact() {
+    for case in 0..25u64 {
+        let mut rng = Rng::seeded(9200 + case);
+        let g = random_graph(&mut rng);
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        for _ in 0..rng.range(10, 500) {
+            mp.step(&mut rng);
+        }
+        let exact = vector::norm2_sq(mp.residual());
+        assert!(
+            (mp.residual_norm_sq() - exact).abs() <= 1e-9 * exact.max(1.0),
+            "case {case}: drift {} vs {}",
+            mp.residual_norm_sq(),
+            exact
+        );
+    }
+}
+
+/// PROPERTY: the scaled PageRank vector sums to N and is positive for any
+/// graph and α ∈ (0,1) (Proposition 1).
+#[test]
+fn prop_exact_pagerank_properties() {
+    for case in 0..25u64 {
+        let mut rng = Rng::seeded(9300 + case);
+        let g = random_graph(&mut rng);
+        let alpha = 0.05 + 0.9 * rng.uniform();
+        let x = exact_pagerank(&g, alpha);
+        assert!(
+            (vector::sum(&x) - g.n() as f64).abs() < 1e-7,
+            "case {case}: sum {}",
+            vector::sum(&x)
+        );
+        assert!(x.iter().all(|&v| v > 0.0), "case {case}: nonpositive entry");
+    }
+}
+
+/// PROPERTY: BColumns sparse ops equal dense B columns on random graphs.
+#[test]
+fn prop_bcolumns_match_dense() {
+    for case in 0..25u64 {
+        let mut rng = Rng::seeded(9400 + case);
+        let g = random_graph(&mut rng);
+        let alpha = 0.1 + 0.85 * rng.uniform();
+        let cols = BColumns::new(&g, alpha);
+        let b = DenseMatrix::b_matrix(&g, alpha);
+        let r: Vec<f64> = (0..g.n()).map(|_| rng.normal()).collect();
+        for k in 0..g.n() {
+            let want = vector::dot(b.col(k), &r);
+            assert!(
+                (cols.col_dot(&g, k, &r) - want).abs() < 1e-10,
+                "case {case}: col_dot mismatch at {k}"
+            );
+            assert!(
+                (cols.norm_sq(k) - vector::norm2_sq(b.col(k))).abs() < 1e-12,
+                "case {case}: norm mismatch at {k}"
+            );
+        }
+    }
+}
+
+/// PROPERTY: LU solve then multiply recovers the RHS on random systems.
+#[test]
+fn prop_lu_roundtrip() {
+    for case in 0..25u64 {
+        let mut rng = Rng::seeded(9500 + case);
+        let n = rng.range(2, 40);
+        let vals: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let a = DenseMatrix::from_fn(n, n, |i, j| vals[i * n + j]);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let lu = match Lu::factor(&a) {
+            Ok(lu) => lu,
+            Err(_) => continue, // singular draw: skip
+        };
+        let x = lu.solve(&b);
+        let ax = a.matvec(&x);
+        assert!(
+            vector::dist_inf(&ax, &b) < 1e-7,
+            "case {case}: residual {}",
+            vector::dist_inf(&ax, &b)
+        );
+    }
+}
+
+/// PROPERTY: parallel batches equal any sequential order of the same
+/// activations (commutation on disjoint supports).
+#[test]
+fn prop_parallel_batches_commute() {
+    for case in 0..20u64 {
+        let mut rng = Rng::seeded(9600 + case);
+        let n = rng.range(50, 200);
+        let g = generators::erdos_renyi(n, 2.0 / n as f64, 9600 + case);
+        let mut pmp = ParallelMatchingPursuit::new(&g, 0.85, 8);
+        for _ in 0..10 {
+            let batch = pmp.pack_batch(&mut rng);
+            if batch.len() < 2 {
+                pmp.apply_batch(&batch);
+                continue;
+            }
+            // compare forward and reversed application on clones
+            let mut fwd = pmp.clone();
+            let mut rev = pmp.clone();
+            fwd.apply_batch(&batch);
+            let reversed: Vec<usize> = batch.iter().rev().copied().collect();
+            rev.apply_batch(&reversed);
+            assert!(
+                vector::dist_inf(fwd.residual(), rev.residual()) < 1e-13,
+                "case {case}: batch application order mattered"
+            );
+            pmp.apply_batch(&batch);
+        }
+    }
+}
+
+/// PROPERTY: Algorithm 2 conserves Σs = 1 on any strongly connected graph.
+#[test]
+fn prop_size_estimation_sum_invariant() {
+    let mut found = 0;
+    for case in 0..40u64 {
+        let mut rng = Rng::seeded(9700 + case);
+        let g = random_graph(&mut rng);
+        let Ok(mut est) = SizeEstimator::new(&g) else {
+            continue;
+        };
+        found += 1;
+        for _ in 0..300 {
+            est.step(&mut rng);
+        }
+        let s = vector::sum(est.s());
+        assert!((s - 1.0).abs() < 1e-9, "case {case}: sum {s}");
+    }
+    assert!(found > 10, "too few strongly connected draws ({found})");
+}
+
+/// PROPERTY: WeightTree sampling matches a naive linear-scan sampler in
+/// distribution, under random weight updates.
+#[test]
+fn prop_weight_tree_vs_naive() {
+    for case in 0..10u64 {
+        let mut rng = Rng::seeded(9800 + case);
+        let n = rng.range(3, 50);
+        let mut weights: Vec<f64> = (0..n).map(|_| rng.uniform() * 10.0).collect();
+        let mut tree = WeightTree::new(&weights);
+        // random updates
+        for _ in 0..20 {
+            let i = rng.below(n);
+            let w = rng.uniform() * 10.0;
+            weights[i] = w;
+            tree.update(i, w);
+        }
+        assert!((tree.total() - weights.iter().sum::<f64>()).abs() < 1e-9);
+        // empirical distribution agreement (coarse)
+        let draws = 40_000;
+        let mut counts = vec![0f64; n];
+        for _ in 0..draws {
+            counts[tree.sample(&mut rng)] += 1.0;
+        }
+        let total: f64 = weights.iter().sum();
+        for i in 0..n {
+            let expect = weights[i] / total;
+            let got = counts[i] / draws as f64;
+            assert!(
+                (got - expect).abs() < 0.025 + 0.2 * expect,
+                "case {case}: index {i} got {got} want {expect}"
+            );
+        }
+    }
+}
+
+/// PROPERTY: JSON render/parse round-trips random values.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Number((rng.normal() * 100.0).round()),
+            3 => Json::String(format!("s{}", rng.below(1000))),
+            4 => Json::Array((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Object(m)
+            }
+        }
+    }
+    for case in 0..200u64 {
+        let mut rng = Rng::seeded(9900 + case);
+        let v = random_json(&mut rng, 3);
+        let text = v.render();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e} in {text}"));
+        assert_eq!(back, v, "case {case}: round trip changed value");
+    }
+}
+
+/// PROPERTY: ranking agreement is reflexive and symmetric.
+#[test]
+fn prop_ranking_agreement_axioms() {
+    for case in 0..50u64 {
+        let mut rng = Rng::seeded(10_000 + case);
+        let n = rng.range(2, 30);
+        let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        assert_eq!(pagerank_mp::util::stats::ranking_agreement(&a, &a), 1.0);
+        let ab = pagerank_mp::util::stats::ranking_agreement(&a, &b);
+        let ba = pagerank_mp::util::stats::ranking_agreement(&b, &a);
+        assert!((ab - ba).abs() < 1e-15, "case {case}: asymmetric");
+        assert!((0.0..=1.0).contains(&ab));
+    }
+}

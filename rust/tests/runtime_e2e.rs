@@ -1,0 +1,181 @@
+//! End-to-end runtime tests: load the AOT artifacts (built by `make
+//! artifacts`), execute them via PJRT, and cross-validate the dense
+//! JAX/Pallas engine against the sparse f64 Rust implementation on
+//! *identical* activation sequences.
+//!
+//! These tests are skipped (with a loud message) if `artifacts/` has not
+//! been built — run `make artifacts` first.
+
+use pagerank_mp::algo::common::PageRankSolver;
+use pagerank_mp::algo::mp::MatchingPursuit;
+use pagerank_mp::algo::size_estimation::SizeEstimator;
+use pagerank_mp::graph::generators;
+use pagerank_mp::linalg::solve::exact_pagerank;
+use pagerank_mp::linalg::vector;
+use pagerank_mp::runtime::{
+    artifact_dir, Engine, JacobiRunner, MpChunkRunner, ResidualNormRunner, SizeChunkRunner,
+};
+use pagerank_mp::util::rng::Rng;
+
+const ALPHA: f64 = 0.85;
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "SKIP: no artifacts at {} — run `make artifacts`",
+            dir.display()
+        );
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine loads"))
+}
+
+#[test]
+fn engine_loads_and_reports_platform() {
+    let Some(engine) = engine_or_skip() else { return };
+    let platform = engine.platform();
+    assert!(!platform.is_empty());
+    assert!(!engine.manifest().artifacts.is_empty());
+}
+
+#[test]
+fn mp_chunk_matches_sparse_rust_trajectory() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    // The paper's graph model at its experiment scale.
+    let g = generators::er_threshold(100, 0.5, 42);
+    let mut runner = MpChunkRunner::new(&mut engine, &g, ALPHA).expect("runner");
+    let t = runner.chunk_len();
+
+    let mut mp = MatchingPursuit::new(&g, ALPHA);
+    let mut rng = Rng::seeded(777);
+    for chunk in 0..4 {
+        let ks: Vec<usize> = (0..t).map(|_| rng.below(100)).collect();
+        let trace = runner.run_chunk(&mut engine, &ks).expect("chunk runs");
+        assert_eq!(trace.len(), t);
+        for &k in &ks {
+            mp.step_at(k);
+        }
+        // identical activation sequence => same trajectory to f32 tolerance
+        let dense_x = runner.estimate();
+        let sparse_x = mp.estimate();
+        let err = vector::dist_inf(&dense_x, &sparse_x);
+        assert!(err < 5e-4, "chunk {chunk}: dense vs sparse drifted by {err}");
+        // trace endpoint agrees with the sparse incremental ‖r‖²
+        let dr = (trace[t - 1] - mp.residual_norm_sq()).abs();
+        assert!(dr < 5e-4, "chunk {chunk}: trace drift {dr}");
+    }
+    // padding must have stayed exactly inert through all chunks
+    assert_eq!(runner.padding_tail_abs_max(), 0.0);
+}
+
+#[test]
+fn mp_chunk_trace_is_monotone_nonincreasing() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let g = generators::er_threshold(100, 0.5, 43);
+    let mut runner = MpChunkRunner::new(&mut engine, &g, ALPHA).expect("runner");
+    let t = runner.chunk_len();
+    let mut rng = Rng::seeded(44);
+    let ks: Vec<usize> = (0..t).map(|_| rng.below(100)).collect();
+    let trace = runner.run_chunk(&mut engine, &ks).expect("chunk runs");
+    for w in trace.windows(2) {
+        assert!(w[1] <= w[0] + 1e-6, "projection increased the residual");
+    }
+}
+
+#[test]
+fn mp_chunk_rejects_bad_inputs() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let g = generators::er_threshold(50, 0.5, 45);
+    let mut runner = MpChunkRunner::new(&mut engine, &g, ALPHA).expect("runner");
+    let t = runner.chunk_len();
+    // wrong length
+    assert!(runner.run_chunk(&mut engine, &vec![0; t - 1]).is_err());
+    // out-of-range activation (padding index — must be refused, not inert
+    // by accident)
+    let mut ks = vec![0usize; t];
+    ks[3] = 50;
+    assert!(runner.run_chunk(&mut engine, &ks).is_err());
+}
+
+#[test]
+fn jacobi_runner_converges_to_exact() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let g = generators::er_threshold(100, 0.5, 46);
+    let x_star = exact_pagerank(&g, ALPHA);
+    let mut runner = JacobiRunner::new(&mut engine, &g, ALPHA).expect("runner");
+    let chunks = runner
+        .run_to_tolerance(&mut engine, 1e-7, 100)
+        .expect("runs");
+    assert!(chunks < 100, "did not reach tolerance");
+    let err = vector::dist_inf(&runner.estimate(), &x_star);
+    assert!(err < 1e-4, "err={err}");
+}
+
+#[test]
+fn size_chunk_matches_sparse_rust() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let g = generators::er_threshold(100, 0.5, 47);
+    let mut runner = SizeChunkRunner::new(&mut engine, &g).expect("runner");
+    let t = runner.chunk_len();
+    let mut est = SizeEstimator::new(&g).expect("strongly connected");
+    let mut rng = Rng::seeded(48);
+    for _ in 0..3 {
+        let ks: Vec<usize> = (0..t).map(|_| rng.below(100)).collect();
+        let trace = runner.run_chunk(&mut engine, &ks).expect("chunk runs");
+        for &k in &ks {
+            est.step_at(k);
+        }
+        let err = vector::dist_inf(&runner.s(), est.s());
+        assert!(err < 5e-5, "dense vs sparse size est drifted by {err}");
+        // trace endpoint = ‖s - 1/N‖²
+        let want = est.error_sq();
+        assert!((trace[t - 1] - want).abs() < 5e-5);
+    }
+}
+
+#[test]
+fn residual_norm_checks_conservation() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let g = generators::er_threshold(100, 0.5, 49);
+    let checker = ResidualNormRunner::new(&mut engine, &g, ALPHA).expect("runner");
+    // At x = 0 the residual is y itself: ‖r‖² = N(1-α)².
+    let (r, rn2) = checker.run(&mut engine, &vec![0.0; 100]).expect("runs");
+    assert!((rn2 - 100.0 * 0.15 * 0.15).abs() < 1e-4);
+    assert!(r.iter().all(|&v| (v - 0.15).abs() < 1e-6));
+    // At x = x* the residual vanishes.
+    let x_star = exact_pagerank(&g, ALPHA);
+    let (_, rn2) = checker.run(&mut engine, &x_star).expect("runs");
+    assert!(rn2 < 1e-8, "rn2={rn2}");
+}
+
+#[test]
+fn dense_engine_converges_on_paper_workload() {
+    // The dense path run standalone long enough to rank pages correctly.
+    let Some(mut engine) = engine_or_skip() else { return };
+    let g = generators::er_threshold(100, 0.5, 50);
+    let x_star = exact_pagerank(&g, ALPHA);
+    let mut runner = MpChunkRunner::new(&mut engine, &g, ALPHA).expect("runner");
+    let t = runner.chunk_len();
+    let mut rng = Rng::seeded(51);
+    for _ in 0..40 {
+        // ~5k activations
+        let ks: Vec<usize> = (0..t).map(|_| rng.below(100)).collect();
+        runner.run_chunk(&mut engine, &ks).expect("chunk runs");
+    }
+    let agr = pagerank_mp::util::stats::ranking_agreement(&runner.estimate(), &x_star);
+    assert!(agr > 0.95, "ranking agreement {agr}");
+}
+
+#[test]
+fn larger_graph_uses_bigger_artifact() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let g = generators::er_threshold(200, 0.5, 52);
+    let runner = MpChunkRunner::new(&mut engine, &g, ALPHA).expect("runner");
+    assert!(runner.padded_size() >= 200);
+    let too_big = generators::er_threshold(300, 0.5, 53);
+    assert!(
+        MpChunkRunner::new(&mut engine, &too_big, ALPHA).is_err(),
+        "300 pages cannot fit the default 256-padded artifacts"
+    );
+}

@@ -14,11 +14,9 @@
 
 use pagerank_mp::algo::common::PageRankSolver;
 use pagerank_mp::algo::mp::MatchingPursuit;
-use pagerank_mp::coordinator::{Coordinator, CoordinatorConfig, Mode, SamplerKind};
-use pagerank_mp::graph::generators;
+use pagerank_mp::engine::{CoordinatorSolver, GraphSpec, SolverSpec};
 use pagerank_mp::linalg::solve::exact_pagerank;
 use pagerank_mp::linalg::vector;
-use pagerank_mp::network::LatencyModel;
 use pagerank_mp::runtime::{Engine, MpChunkRunner, ResidualNormRunner};
 use pagerank_mp::util::rng::Rng;
 
@@ -28,7 +26,9 @@ fn main() {
     let seed = 20_17;
 
     println!("=== END-TO-END: paper workload (N={n}, ER-threshold 0.5, α={alpha}) ===\n");
-    let graph = generators::er_threshold(n, 0.5, seed);
+    let graph = GraphSpec::ErThreshold { n, threshold: 0.5 }
+        .build(seed)
+        .expect("paper graph builds");
     let x_star = exact_pagerank(&graph, alpha);
     let bound = pagerank_mp::linalg::spectral::mp_contraction_rate(&graph, alpha);
     println!("predicted Prop.2 contraction: 1 - σ²(B̂)/N = {bound:.6}");
@@ -96,15 +96,12 @@ fn main() {
 
     // ---- L3: the distributed coordinator on the same workload -----------
     println!("\n=== L3 distributed coordinator (async exponential clocks) ===");
-    let cfg = CoordinatorConfig::default()
-        .with_alpha(alpha)
-        .with_seed(seed as u64)
-        .with_mode(Mode::Async)
-        .with_sampler(SamplerKind::ExponentialClocks)
-        .with_latency(LatencyModel::Uniform { lo: 0.05, hi: 0.15 });
-    let mut coord = Coordinator::new(&graph, cfg);
+    let spec = SolverSpec::parse("coordinator:async:clocks:uniform:0.05:0.15")
+        .expect("registry spec parses");
+    let mut coord =
+        CoordinatorSolver::from_spec(&graph, alpha, seed as u64, &spec).expect("coordinator spec");
     let tw = std::time::Instant::now();
-    let report = coord.run(steps_done as u64);
+    let report = coord.drive(steps_done as u64);
     let wall = tw.elapsed();
     let coord_err = vector::dist_sq(&coord.estimate(), &x_star) / n as f64;
     println!("{}", report.metrics.render());

@@ -1,54 +1,51 @@
-//! Quickstart: the paper's Algorithm 1 on its own §III workload.
+//! Quickstart: the paper's §III experiment through the declarative
+//! engine API.
 //!
-//! Builds the N=100 ER-threshold graph, runs the Matching-Pursuit
-//! iteration, and verifies against the exact solve of Proposition 1.
+//! One [`Scenario`] value names the graph, the solvers and the
+//! experiment shape; `run()` produces averaged error trajectories,
+//! fitted decay rates and communication totals for every solver
+//! uniformly — Algorithm 1 and two of the paper's baselines here.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use pagerank_mp::algo::common::PageRankSolver;
-use pagerank_mp::algo::mp::MatchingPursuit;
-use pagerank_mp::graph::generators;
-use pagerank_mp::linalg::solve::exact_pagerank;
-use pagerank_mp::linalg::vector;
-use pagerank_mp::util::rng::Rng;
+use pagerank_mp::engine::{GraphSpec, Scenario, SolverSpec};
 
 fn main() {
     // The paper's experiment graph: N=100, iid U[0,1] entries thresholded
-    // at 0.5, α = 0.85.
-    let n = 100;
-    let alpha = 0.85;
-    let graph = generators::er_threshold(n, 0.5, 42);
+    // at 0.5, α = 0.85 (the Scenario default).
+    let scenario = Scenario::new("quickstart", GraphSpec::ErThreshold { n: 100, threshold: 0.5 })
+        .with_solvers(vec![
+            SolverSpec::Mp,
+            SolverSpec::YouTempoQiu,
+            SolverSpec::IshiiTempo,
+        ])
+        .with_steps(30_000)
+        .with_stride(500)
+        .with_rounds(10)
+        .with_seed(42);
+
+    // Scenarios are data: the same experiment ships as config and runs
+    // via `pagerank-mp run-scenario <file.json>` (see
+    // examples/fig1_scenario.json).
+    println!("scenario JSON:\n{}\n", scenario.to_json().render());
+
+    let report = scenario.run().expect("quickstart scenario runs");
+    println!("{}", report.render());
+
+    let mp = report.get("mp").expect("mp ran");
+    let it = report.get("ishii-tempo").expect("baseline ran");
     println!(
-        "graph: {} pages, {} links, mean out-degree {:.1}",
-        graph.n(),
-        graph.m(),
-        graph.m() as f64 / graph.n() as f64
+        "\nMP per-step rate {:.6} (exponential) vs Ishii–Tempo {:.6} (sub-exponential)",
+        mp.decay_rate, it.decay_rate
     );
-
-    // Ground truth per Proposition 1: x* = (1-α)(I-αA)⁻¹ 𝟙.
-    let x_star = exact_pagerank(&graph, alpha);
-
-    // Algorithm 1: each step activates a uniform page, reads the residuals
-    // of its out-neighbours, updates its score and their residuals.
-    let mut mp = MatchingPursuit::new(&graph, alpha);
-    let mut rng = Rng::seeded(7);
-    for t in 0..=120_000u64 {
-        if t % 20_000 == 0 {
-            let err = vector::dist_sq(&mp.estimate(), &x_star) / n as f64;
-            println!(
-                "t = {t:>7}   (1/N)‖x_t - x*‖² = {err:.3e}   ‖r_t‖² = {:.3e}",
-                mp.residual_norm_sq()
-            );
-        }
-        mp.step(&mut rng);
-    }
-
-    // Report the final ranking quality.
-    let est = mp.estimate();
-    let agreement = pagerank_mp::util::stats::ranking_agreement(&est, &x_star);
-    println!("\nranking agreement with exact PageRank: {agreement:.4}");
-    let ranking = pagerank_mp::util::stats::ranking(&est);
-    println!("top 5 pages: {:?}", &ranking[..5]);
-    assert!(agreement > 0.999, "quickstart should fully converge");
+    println!(
+        "MP communication: {} reads / {} writes over {} activations",
+        mp.total_stats.reads, mp.total_stats.writes, mp.total_stats.activated
+    );
+    assert!(mp.decay_rate < 1.0, "MP must decay exponentially");
+    assert!(
+        mp.final_error < it.final_error,
+        "MP must beat the averaging baseline at the horizon"
+    );
     println!("quickstart OK");
 }

@@ -3,34 +3,36 @@
 //! the §IV-4 stopping criterion certifying the top-k result.
 //!
 //! This is the scenario the paper's introduction motivates: per-page
-//! agents, out-neighbour-only communication, asynchronous clocks.
+//! agents, out-neighbour-only communication, asynchronous clocks. The
+//! runtime is named through the engine's string registry — the same spec
+//! string works in scenario JSON files — and driven through the typed
+//! [`CoordinatorSolver`] adapter for metrics access.
 //!
 //! Run with: `cargo run --release --example webgraph_ranking`
 
+use pagerank_mp::algo::common::PageRankSolver;
 use pagerank_mp::algo::stopping::RankingCertifier;
-use pagerank_mp::coordinator::{Coordinator, CoordinatorConfig, Mode, SamplerKind};
-use pagerank_mp::graph::generators;
+use pagerank_mp::engine::{CoordinatorSolver, GraphSpec, SolverSpec};
 use pagerank_mp::linalg::solve::exact_pagerank;
 use pagerank_mp::linalg::vector;
-use pagerank_mp::network::LatencyModel;
 
 fn main() {
     let n = 1_000;
     let alpha = 0.85;
     // Preferential attachment: heavy-tailed in-degrees like a real web.
-    let graph = generators::barabasi_albert(n, 4, 99);
+    let graph = GraphSpec::Family { family: "ba".into(), n }
+        .build(99)
+        .expect("ba family is registered");
     let stats = pagerank_mp::graph::stats::DegreeStats::compute(&graph);
     println!("{}\n", stats.render());
 
     // Asynchronous exponential clocks (paper Remark 1), sparse topology →
-    // real overlap between activations; uniform-latency links.
-    let cfg = CoordinatorConfig::default()
-        .with_alpha(alpha)
-        .with_seed(5)
-        .with_mode(Mode::Async)
-        .with_sampler(SamplerKind::ExponentialClocks)
-        .with_latency(LatencyModel::Uniform { lo: 0.05, hi: 0.25 });
-    let mut coord = Coordinator::new(&graph, cfg);
+    // real overlap between activations; uniform-latency links. The spec
+    // string is exactly what a scenario JSON would carry.
+    let spec = SolverSpec::parse("coordinator:async:clocks:uniform:0.05:0.25")
+        .expect("registry spec parses");
+    let mut coord = CoordinatorSolver::from_spec(&graph, alpha, 5, &spec)
+        .expect("spec names the coordinator");
 
     let x_star = exact_pagerank(&graph, alpha);
     let certifier = RankingCertifier::new(&graph, alpha);
@@ -38,7 +40,7 @@ fn main() {
     let mut total: u64 = 0;
     for round in 1..=8 {
         let budget = 50_000;
-        let report = coord.run(budget);
+        let report = coord.drive(budget);
         total += budget;
         let x = coord.estimate();
         let r = coord.residual();

@@ -5,10 +5,7 @@
 //! Set PAGERANK_BENCH_QUICK=1 for a reduced-scale smoke run.
 
 use pagerank_mp::algo::common::PageRankSolver;
-use pagerank_mp::algo::ishii_tempo::IshiiTempo;
-use pagerank_mp::algo::mp::MatchingPursuit;
-use pagerank_mp::algo::you_tempo_qiu::YouTempoQiu;
-use pagerank_mp::graph::generators;
+use pagerank_mp::engine::{GraphSpec, SolverSpec};
 use pagerank_mp::harness::fig1;
 use pagerank_mp::util::bench;
 use pagerank_mp::util::rng::Rng;
@@ -35,26 +32,17 @@ fn main() {
     .expect("write fig1 csv");
 
     println!("=== per-activation step cost (N=100 paper graph) ===");
-    let g = generators::er_threshold(100, 0.5, 7);
+    let g = GraphSpec::paper(100).build(7).expect("paper graph builds");
     let mut b = bench::standard();
 
-    let mut mp = MatchingPursuit::new(&g, 0.85);
-    let mut rng = Rng::seeded(1);
-    b.bench("mp step (Algorithm 1)", Some(1.0), || {
-        std::hint::black_box(mp.step(&mut rng));
-    });
-
-    let mut ytq = YouTempoQiu::new(&g, 0.85);
-    let mut rng = Rng::seeded(2);
-    b.bench("you-tempo-qiu [15] step", Some(1.0), || {
-        std::hint::black_box(ytq.step(&mut rng));
-    });
-
-    let mut it = IshiiTempo::new(&g, 0.85);
-    let mut rng = Rng::seeded(3);
-    b.bench("ishii-tempo [6] step", Some(1.0), || {
-        std::hint::black_box(it.step(&mut rng));
-    });
+    for key in ["mp", "you-tempo-qiu", "ishii-tempo"] {
+        let spec = SolverSpec::parse(key).expect("registry name");
+        let mut solver = spec.build(&g, 0.85, 1);
+        let mut rng = Rng::seeded(1);
+        b.bench(&format!("{key} step"), Some(1.0), || {
+            std::hint::black_box(solver.step(&mut rng));
+        });
+    }
 
     println!("\n{}", b.to_csv());
 }

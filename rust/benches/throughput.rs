@@ -5,15 +5,14 @@
 //! * centralized power-iteration sweeps,
 //! * batch throughput of the parallel extension.
 //!
+//! All solvers are named and built through the engine registry — the
+//! bench measures exactly what a `Scenario` would run.
+//!
 //! `cargo bench --bench throughput`
 
 use pagerank_mp::algo::common::PageRankSolver;
-use pagerank_mp::algo::mp::MatchingPursuit;
-use pagerank_mp::algo::parallel_mp::ParallelMatchingPursuit;
-use pagerank_mp::algo::power_iteration::JacobiPowerIteration;
-use pagerank_mp::coordinator::{Coordinator, CoordinatorConfig, Mode, SamplerKind};
+use pagerank_mp::engine::{CoordinatorSolver, SolverSpec};
 use pagerank_mp::graph::generators;
-use pagerank_mp::network::LatencyModel;
 use pagerank_mp::util::bench;
 use pagerank_mp::util::rng::Rng;
 
@@ -26,7 +25,7 @@ fn main() {
         ("ba N=10000 m=8", generators::barabasi_albert(10_000, 8, 1)),
         ("er-sparse N=100000 deg~8", generators::erdos_renyi(100_000, 8.0 / 100_000.0, 1)),
     ] {
-        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut mp = SolverSpec::Mp.build(&g, 0.85, 2);
         let mut rng = Rng::seeded(2);
         let batch = 1024;
         b.bench(&format!("mp x{batch} acts, {name}"), Some(batch as f64), || {
@@ -37,31 +36,17 @@ fn main() {
     }
 
     println!("\n=== PERF-L3: distributed coordinator activations/s ===");
-    for (name, mode, sampler, latency) in [
-        ("sequential/zero-latency", Mode::Sequential, SamplerKind::Uniform, LatencyModel::Zero),
-        (
-            "sequential/exp-latency",
-            Mode::Sequential,
-            SamplerKind::Uniform,
-            LatencyModel::Exponential { mean: 0.1 },
-        ),
-        (
-            "async/clocks/const-latency",
-            Mode::Async,
-            SamplerKind::ExponentialClocks,
-            LatencyModel::Constant(0.1),
-        ),
+    for (name, spec) in [
+        ("sequential/zero-latency", "coordinator:sequential:uniform:zero"),
+        ("sequential/exp-latency", "coordinator:sequential:uniform:exp:0.1"),
+        ("async/clocks/const-latency", "coordinator:async:clocks:const:0.1"),
     ] {
         let g = generators::er_threshold(100, 0.5, 3);
-        let cfg = CoordinatorConfig::default()
-            .with_seed(4)
-            .with_mode(mode)
-            .with_sampler(sampler)
-            .with_latency(latency);
-        let mut coord = Coordinator::new(&g, cfg);
+        let spec = SolverSpec::parse(spec).expect("registry spec");
+        let mut coord = CoordinatorSolver::from_spec(&g, 0.85, 4, &spec).expect("coordinator");
         let batch = 512u64;
         b.bench(&format!("coordinator x{batch} acts, {name}"), Some(batch as f64), || {
-            std::hint::black_box(coord.run(batch));
+            std::hint::black_box(coord.drive(batch));
         });
     }
 
@@ -70,10 +55,11 @@ fn main() {
         ("paper N=100", generators::er_threshold(100, 0.5, 5)),
         ("ba N=10000 m=8", generators::barabasi_albert(10_000, 8, 5)),
     ] {
-        let mut pi = JacobiPowerIteration::new(&g, 0.85);
+        let mut pi = SolverSpec::PowerIteration.build(&g, 0.85, 5);
+        let mut rng = Rng::seeded(5);
         let m = g.m() as f64;
         b.bench(&format!("jacobi sweep (m edges), {name}"), Some(m), || {
-            pi.sweep();
+            std::hint::black_box(pi.step(&mut rng));
         });
     }
 
@@ -96,7 +82,7 @@ fn main() {
     println!("\n=== parallel extension: batched activations ===");
     let g = generators::erdos_renyi(10_000, 8.0 / 10_000.0, 6);
     for batch in [1usize, 8, 32, 128] {
-        let mut pmp = ParallelMatchingPursuit::new(&g, 0.85, batch);
+        let mut pmp = SolverSpec::ParallelMp { batch }.build(&g, 0.85, 7);
         let mut rng = Rng::seeded(7);
         b.bench(&format!("parallel-mp batch={batch} (sparse N=10k)"), Some(batch as f64), || {
             std::hint::black_box(pmp.step(&mut rng));

@@ -49,6 +49,16 @@ pub trait PageRankSolver {
     fn requires_in_links(&self) -> bool {
         false
     }
+
+    /// Squared l2 distance `‖x̂_t - x*‖²` of the current estimate from a
+    /// reference vector — the quantity Fig. 1 plots (before its 1/N
+    /// scaling). The default routes through [`PageRankSolver::estimate`]
+    /// and therefore allocates a full vector per call; solvers that hold
+    /// their estimate as plain state override it so the hot recording
+    /// loop in [`Trajectory::record`] runs allocation-free.
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        crate::linalg::vector::dist_sq(&self.estimate(), x_star)
+    }
 }
 
 /// A recorded error trajectory: `(1/N)‖x_t - x*‖²` sampled every `stride`
@@ -77,12 +87,11 @@ impl Trajectory {
         let n = solver.n() as f64;
         let mut errors = Vec::with_capacity(steps / stride + 1);
         let mut total = StepStats::default();
-        let err = |est: &[f64]| crate::linalg::vector::dist_sq(est, x_star) / n;
-        errors.push(err(&solver.estimate()));
+        errors.push(solver.error_sq_vs(x_star) / n);
         for t in 1..=steps {
             total.accumulate(solver.step(rng));
             if t % stride == 0 {
-                errors.push(err(&solver.estimate()));
+                errors.push(solver.error_sq_vs(x_star) / n);
             }
         }
         Trajectory {
@@ -160,6 +169,15 @@ mod tests {
         let tr = Trajectory::record(&mut s, &x_star, 20, 1, &mut rng);
         // err halves per step, squared error quarters
         assert!((tr.decay_rate() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn error_sq_vs_default_matches_estimate_distance() {
+        let x_star = vec![1.0, 2.0, 3.0];
+        let s = Halver { x_star: x_star.clone(), err: 0.5, in_links: false };
+        let direct = crate::linalg::vector::dist_sq(&s.estimate(), &x_star);
+        assert_eq!(s.error_sq_vs(&x_star), direct);
+        assert!((direct - 0.25).abs() < 1e-15);
     }
 
     #[test]

@@ -124,6 +124,10 @@ impl<'g> PageRankSolver for GreedyMatchingPursuit<'g> {
         self.x.clone()
     }
 
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        crate::linalg::vector::dist_sq(&self.x, x_star)
+    }
+
     fn name(&self) -> &'static str {
         "greedy MP (best atom, centralized)"
     }

@@ -123,6 +123,10 @@ impl<'g> PageRankSolver for IshiiTempo<'g> {
         self.avg.clone()
     }
 
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        crate::linalg::vector::dist_sq(&self.avg, x_star)
+    }
+
     fn name(&self) -> &'static str {
         "ishii-tempo [6]"
     }

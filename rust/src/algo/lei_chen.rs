@@ -81,6 +81,10 @@ impl<'g> PageRankSolver for LeiChen<'g> {
         self.x.clone()
     }
 
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        crate::linalg::vector::dist_sq(&self.x, x_star)
+    }
+
     fn name(&self) -> &'static str {
         "lei-chen SA [12]"
     }

@@ -122,6 +122,21 @@ impl<'g> PageRankSolver for MonteCarlo<'g> {
         self.visits.iter().map(|&v| v as f64 * scale).collect()
     }
 
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        if self.rounds == 0 {
+            return x_star.iter().map(|v| v * v).sum();
+        }
+        let scale = (1.0 - self.alpha) / self.rounds as f64;
+        self.visits
+            .iter()
+            .zip(x_star)
+            .map(|(&v, &s)| {
+                let d = v as f64 * scale - s;
+                d * d
+            })
+            .sum()
+    }
+
     fn name(&self) -> &'static str {
         "monte-carlo walks [9]"
     }

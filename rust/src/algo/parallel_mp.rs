@@ -132,6 +132,10 @@ impl<'g> PageRankSolver for ParallelMatchingPursuit<'g> {
         self.x.clone()
     }
 
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        crate::linalg::vector::dist_sq(&self.x, x_star)
+    }
+
     fn name(&self) -> &'static str {
         "parallel MP (conflict-free batches)"
     }

@@ -93,6 +93,10 @@ impl<'g> PageRankSolver for JacobiPowerIteration<'g> {
         self.x.clone()
     }
 
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        crate::linalg::vector::dist_sq(&self.x, x_star)
+    }
+
     fn name(&self) -> &'static str {
         "jacobi power iteration (centralized)"
     }
@@ -156,6 +160,10 @@ impl<'g> PageRankSolver for GooglePowerIteration<'g> {
 
     fn estimate(&self) -> Vec<f64> {
         self.x.clone()
+    }
+
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        crate::linalg::vector::dist_sq(&self.x, x_star)
     }
 
     fn name(&self) -> &'static str {

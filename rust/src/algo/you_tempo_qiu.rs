@@ -102,6 +102,10 @@ impl<'g> PageRankSolver for YouTempoQiu<'g> {
         self.x.clone()
     }
 
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        crate::linalg::vector::dist_sq(&self.x, x_star)
+    }
+
     fn name(&self) -> &'static str {
         "you-tempo-qiu [15]"
     }

@@ -93,9 +93,29 @@ impl<'g> Coordinator<'g> {
         }
     }
 
+    /// Number of pages.
+    pub fn n(&self) -> usize {
+        self.graph.n()
+    }
+
     /// Current PageRank estimates (x_k per page).
     pub fn estimate(&self) -> Vec<f64> {
         self.agents.iter().map(|a| a.x).collect()
+    }
+
+    /// `‖x - x*‖²` against a reference without materializing the
+    /// estimate (same summation order as `vector::dist_sq`, so results
+    /// are bit-identical to the allocating path).
+    pub fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        debug_assert_eq!(x_star.len(), self.agents.len());
+        self.agents
+            .iter()
+            .zip(x_star)
+            .map(|(a, &s)| {
+                let d = a.x - s;
+                d * d
+            })
+            .sum()
     }
 
     /// Current residuals (r_k per page).

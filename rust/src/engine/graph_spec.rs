@@ -1,0 +1,230 @@
+//! Declarative graph descriptions.
+//!
+//! A [`GraphSpec`] names a workload graph without constructing it: the
+//! paper's §III ER-threshold model with explicit parameters, any of the
+//! [`crate::graph::generators::by_name`] synthetic families, or an
+//! edge-list file on disk. Specs are pure data — they parse from compact
+//! registry strings (`"er-threshold:100:0.5"`, `"ba:1000"`,
+//! `"file:web.txt"`), round-trip through [`crate::util::json::Json`], and
+//! build deterministically from a seed.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{generators, io as graph_io, DanglingPolicy, Graph};
+use crate::util::json::Json;
+
+/// A serializable description of a workload graph.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphSpec {
+    /// The paper's §III model: N×N iid U\[0,1\] entries thresholded.
+    ErThreshold { n: usize, threshold: f64 },
+    /// Any family registered in [`generators::by_name`] (`"ba"`, `"ws"`,
+    /// `"er-sparse"`, `"sbm"`, `"ring"`, `"star"`, `"complete"`, …).
+    Family { family: String, n: usize },
+    /// A plain-text edge list loaded from disk (dangling pages repaired
+    /// with the LinkAll policy, as the CLI does).
+    File { path: String },
+}
+
+impl GraphSpec {
+    /// The paper's experiment graph at size `n`.
+    pub fn paper(n: usize) -> GraphSpec {
+        GraphSpec::ErThreshold { n, threshold: 0.5 }
+    }
+
+    /// Canonical registry string (inverse of [`GraphSpec::parse`]).
+    pub fn key(&self) -> String {
+        match self {
+            GraphSpec::ErThreshold { n, threshold } => format!("er-threshold:{n}:{threshold}"),
+            GraphSpec::Family { family, n } => format!("{family}:{n}"),
+            GraphSpec::File { path } => format!("file:{path}"),
+        }
+    }
+
+    /// Parse a registry string: `er-threshold:<n>[:<threshold>]`,
+    /// `paper:<n>`, `<family>:<n>`, or `file:<path>`.
+    pub fn parse(s: &str) -> Result<GraphSpec, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let usage = "graph spec: er-threshold:<n>[:<thr>] | <family>:<n> | file:<path>";
+        match parts.as_slice() {
+            ["er-threshold", n] | ["paper", n] => Ok(GraphSpec::ErThreshold {
+                n: n.parse().map_err(|_| format!("bad n in {s:?}"))?,
+                threshold: 0.5,
+            }),
+            ["er-threshold", n, thr] => Ok(GraphSpec::ErThreshold {
+                n: n.parse().map_err(|_| format!("bad n in {s:?}"))?,
+                threshold: thr.parse().map_err(|_| format!("bad threshold in {s:?}"))?,
+            }),
+            ["file"] => Err(usage.to_string()),
+            ["file", ..] => {
+                // Re-join: file paths may themselves contain ':'.
+                let path = s["file:".len()..].to_string();
+                if path.is_empty() {
+                    return Err(usage.to_string());
+                }
+                Ok(GraphSpec::File { path })
+            }
+            [family, n] => {
+                let n: usize = n.parse().map_err(|_| format!("bad n in {s:?}"))?;
+                // Validate the family name early. The probe size must
+                // satisfy every family's parameter asserts (ws needs
+                // n > 4 for its default k).
+                if generators::by_name(family, 10, 0).is_none() {
+                    return Err(format!("unknown graph family {family:?} — {usage}"));
+                }
+                Ok(GraphSpec::Family { family: family.to_string(), n })
+            }
+            _ => Err(format!("cannot parse graph spec {s:?} — {usage}")),
+        }
+    }
+
+    /// Number of pages the spec will produce (unknown for files).
+    pub fn n(&self) -> Option<usize> {
+        match self {
+            GraphSpec::ErThreshold { n, .. } | GraphSpec::Family { n, .. } => Some(*n),
+            GraphSpec::File { .. } => None,
+        }
+    }
+
+    /// Materialize the graph. Generated families consume `seed`; file
+    /// graphs ignore it.
+    pub fn build(&self, seed: u64) -> Result<Graph, String> {
+        match self {
+            GraphSpec::ErThreshold { n, threshold } => {
+                if *n == 0 {
+                    return Err("er-threshold graph needs n > 0".into());
+                }
+                Ok(generators::er_threshold(*n, *threshold, seed))
+            }
+            GraphSpec::Family { family, n } => generators::by_name(family, *n, seed)
+                .ok_or_else(|| format!("unknown graph family {family:?}")),
+            GraphSpec::File { path } => graph_io::load(path, DanglingPolicy::LinkAll)
+                .map_err(|e| format!("loading graph {path:?}: {e}")),
+        }
+    }
+
+    /// JSON object form: `{"kind": "er-threshold", "n": 100, "threshold": 0.5}`,
+    /// `{"kind": "ba", "n": 1000}`, `{"kind": "file", "path": "web.txt"}`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        match self {
+            GraphSpec::ErThreshold { n, threshold } => {
+                m.insert("kind".to_string(), Json::String("er-threshold".into()));
+                m.insert("n".to_string(), Json::Number(*n as f64));
+                m.insert("threshold".to_string(), Json::Number(*threshold));
+            }
+            GraphSpec::Family { family, n } => {
+                m.insert("kind".to_string(), Json::String(family.clone()));
+                m.insert("n".to_string(), Json::Number(*n as f64));
+            }
+            GraphSpec::File { path } => {
+                m.insert("kind".to_string(), Json::String("file".into()));
+                m.insert("path".to_string(), Json::String(path.clone()));
+            }
+        }
+        Json::Object(m)
+    }
+
+    /// Parse from either the object form of [`GraphSpec::to_json`] or a
+    /// registry string.
+    pub fn from_json(v: &Json) -> Result<GraphSpec, String> {
+        if let Some(s) = v.as_str() {
+            return GraphSpec::parse(s);
+        }
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("graph spec object needs a \"kind\" string")?;
+        match kind {
+            "er-threshold" | "paper" => {
+                let n = v
+                    .get("n")
+                    .and_then(Json::as_usize)
+                    .ok_or("er-threshold graph needs an integer \"n\"")?;
+                let threshold = v.get("threshold").and_then(Json::as_f64).unwrap_or(0.5);
+                Ok(GraphSpec::ErThreshold { n, threshold })
+            }
+            "file" => {
+                let path = v
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or("file graph needs a \"path\" string")?;
+                Ok(GraphSpec::File { path: path.to_string() })
+            }
+            family => {
+                let n = v
+                    .get("n")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("graph family {family:?} needs an integer \"n\""))?;
+                if generators::by_name(family, 10, 0).is_none() {
+                    return Err(format!("unknown graph family {family:?}"));
+                }
+                Ok(GraphSpec::Family { family: family.to_string(), n })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_key_round_trip() {
+        for s in ["er-threshold:40:0.5", "ba:100", "ring:12", "file:graphs/web.txt"] {
+            let spec = GraphSpec::parse(s).expect("parses");
+            assert_eq!(
+                GraphSpec::parse(&spec.key()).expect("key re-parses"),
+                spec,
+                "round trip failed for {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_alias() {
+        assert_eq!(
+            GraphSpec::parse("paper:100").expect("parses"),
+            GraphSpec::ErThreshold { n: 100, threshold: 0.5 }
+        );
+    }
+
+    #[test]
+    fn unknown_family_rejected() {
+        assert!(GraphSpec::parse("banana:10").is_err());
+        assert!(GraphSpec::parse("").is_err());
+    }
+
+    #[test]
+    fn builds_deterministically() {
+        let spec = GraphSpec::paper(20);
+        let a = spec.build(7).expect("builds");
+        let b = spec.build(7).expect("builds");
+        assert_eq!(a, b);
+        assert_eq!(a.n(), 20);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        for spec in [
+            GraphSpec::ErThreshold { n: 30, threshold: 0.4 },
+            GraphSpec::Family { family: "ba".into(), n: 50 },
+            GraphSpec::File { path: "x/y.txt".into() },
+        ] {
+            let j = spec.to_json();
+            let text = j.render();
+            let back = GraphSpec::from_json(&Json::parse(&text).expect("valid json"))
+                .expect("round trips");
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn json_string_form_accepted() {
+        let v = Json::String("er-threshold:25:0.5".into());
+        assert_eq!(
+            GraphSpec::from_json(&v).expect("string form"),
+            GraphSpec::ErThreshold { n: 25, threshold: 0.5 }
+        );
+    }
+}

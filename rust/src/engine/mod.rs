@@ -1,0 +1,39 @@
+//! The declarative experiment engine — one entry point for every
+//! algorithm, runtime, and experiment in the repository.
+//!
+//! The paper's evaluation (and every extension of it in this repo) has
+//! one shape: *build a graph, run a set of PageRank iterations against a
+//! reference solution, average trajectories over rounds, compare decay
+//! rates and communication cost*. This module names each ingredient as
+//! data so that shape is config, not harness code:
+//!
+//! * [`SolverSpec`] — the solver registry: every variant (Algorithm 1,
+//!   its §IV extensions, all five published baselines, and the full
+//!   distributed coordinator) behind one `build(&graph, alpha, seed)`
+//!   factory and a compact string form (`"mp"`, `"parallel-mp:16"`,
+//!   `"coordinator:async:clocks:const:0.1"`).
+//! * [`GraphSpec`] — workload graphs: the paper's ER-threshold model,
+//!   every synthetic family, or edge-list files.
+//! * [`Scenario`] — graph + solvers + experiment shape (steps / stride /
+//!   rounds / threads / α / seed / reference policy), JSON round-trip
+//!   included. [`Scenario::run`] drives the multi-round experiment
+//!   runner uniformly and yields a [`ScenarioReport`].
+//! * [`ScenarioReport`] — per-solver [`SolverReport`]s: averaged
+//!   trajectories, fitted decay rates, read/write totals, wall time;
+//!   renderable as a terminal plot, CSV, or the machine-readable
+//!   `BENCH_scenario.json` perf artifact.
+//!
+//! The Figure-1 harness, the ablations, the CLI `run-scenario`
+//! subcommand, the benches and the examples are all thin layers over
+//! these four types; new workloads (sharded backends, webgraph files,
+//! parameter sweeps) are new `Scenario` values.
+
+pub mod graph_spec;
+pub mod report;
+pub mod scenario;
+pub mod solver_spec;
+
+pub use graph_spec::GraphSpec;
+pub use report::{ScenarioReport, SolverReport};
+pub use scenario::{ReferencePolicy, Scenario};
+pub use solver_spec::{CoordinatorSolver, DynamicSolver, SolverSpec};

@@ -1,0 +1,219 @@
+//! Scenario results: per-solver averaged trajectories, fitted decay
+//! rates, communication totals and wall time — renderable for terminals,
+//! CSV for plotting, and machine-readable JSON for the perf trajectory
+//! (`BENCH_scenario.json`).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::algo::common::StepStats;
+use crate::harness::experiment::AveragedTrajectory;
+use crate::harness::{plot, report as harness_report};
+use crate::util::json::Json;
+
+use super::scenario::Scenario;
+use super::solver_spec::SolverSpec;
+
+/// One solver's result inside a scenario run.
+#[derive(Debug, Clone)]
+pub struct SolverReport {
+    pub spec: SolverSpec,
+    /// Cross-round averaged error trajectory (Fig.-1 axis).
+    pub trajectory: AveragedTrajectory,
+    /// Communication totals summed over all rounds.
+    pub total_stats: StepStats,
+    /// Fitted per-activation decay rate of the mean error (0 when the
+    /// trajectory converged below the noise floor too fast to fit).
+    pub decay_rate: f64,
+    /// Final mean error `(1/N)‖x - x*‖²`.
+    pub final_error: f64,
+    /// Wall-clock time for all rounds of this solver.
+    pub wall: Duration,
+}
+
+/// Everything a [`Scenario::run`] produces.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub scenario: Scenario,
+    pub reports: Vec<SolverReport>,
+}
+
+impl ScenarioReport {
+    /// Look up a solver's report by registry key.
+    pub fn get(&self, key: &str) -> Option<&SolverReport> {
+        self.reports.iter().find(|r| r.spec.key() == key)
+    }
+
+    /// Solver keys ordered by fitted decay rate, fastest (smallest rate)
+    /// first — the Fig.-1 ordering check.
+    pub fn rate_ordering(&self) -> Vec<(String, f64)> {
+        let mut rates: Vec<(String, f64)> = self
+            .reports
+            .iter()
+            .map(|r| (r.spec.key(), r.decay_rate))
+            .collect();
+        rates.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("rates are finite"));
+        rates
+    }
+
+    /// Terminal rendering: semilogy plot of every trajectory plus a
+    /// per-solver summary table.
+    pub fn render(&self) -> String {
+        let glyphs = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+        let series: Vec<plot::Series> = self
+            .reports
+            .iter()
+            .enumerate()
+            .map(|(i, r)| plot::Series {
+                label: r.trajectory.name.clone(),
+                xs: r.trajectory.ts.iter().map(|&t| t as f64).collect(),
+                ys: r.trajectory.mean.clone(),
+                glyph: glyphs[i % glyphs.len()],
+            })
+            .collect();
+        let title = format!(
+            "{} — (1/N)‖x_t - x*‖² on {}, α={}, {} rounds",
+            self.scenario.name,
+            self.scenario.graph.key(),
+            self.scenario.alpha,
+            self.scenario.rounds
+        );
+        let plot = plot::semilogy(&series, 72, 20, &title);
+        let rows: Vec<Vec<String>> = self
+            .reports
+            .iter()
+            .map(|r| {
+                vec![
+                    r.spec.key(),
+                    format!("{:.3e}", r.final_error),
+                    format!("{:.6}", r.decay_rate),
+                    r.total_stats.reads.to_string(),
+                    r.total_stats.writes.to_string(),
+                    format!("{:.0}", r.wall.as_secs_f64() * 1e3),
+                ]
+            })
+            .collect();
+        let table = harness_report::table(
+            &["solver", "final (1/N)|x-x*|²", "rate/step", "reads", "writes", "wall ms"],
+            &rows,
+        );
+        format!("{plot}\n{table}")
+    }
+
+    /// CSV of every averaged trajectory (same shape as the Fig.-1 CSV).
+    pub fn to_csv(&self) -> String {
+        let trajectories: Vec<AveragedTrajectory> =
+            self.reports.iter().map(|r| r.trajectory.clone()).collect();
+        harness_report::trajectories_csv(&trajectories)
+    }
+
+    /// Machine-readable summary: scenario config plus per-solver final
+    /// error, decay rate, communication totals and wall time.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("scenario".to_string(), self.scenario.to_json());
+        m.insert(
+            "solvers".to_string(),
+            Json::Array(
+                self.reports
+                    .iter()
+                    .map(|r| {
+                        let mut s = BTreeMap::new();
+                        s.insert("name".to_string(), Json::String(r.spec.key()));
+                        s.insert("final_error".to_string(), Json::Number(r.final_error));
+                        s.insert("decay_rate".to_string(), Json::Number(r.decay_rate));
+                        s.insert(
+                            "reads".to_string(),
+                            Json::Number(r.total_stats.reads as f64),
+                        );
+                        s.insert(
+                            "writes".to_string(),
+                            Json::Number(r.total_stats.writes as f64),
+                        );
+                        s.insert(
+                            "activated".to_string(),
+                            Json::Number(r.total_stats.activated as f64),
+                        );
+                        s.insert(
+                            "wall_ms".to_string(),
+                            Json::Number(r.wall.as_secs_f64() * 1e3),
+                        );
+                        Json::Object(s)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Object(m)
+    }
+
+    /// Dump [`ScenarioReport::to_json`] to disk — the perf-trajectory
+    /// artifact (`BENCH_scenario.json` at the repo root by convention).
+    pub fn write_bench_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        harness_report::write_file(path, &self.to_json().render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{GraphSpec, Scenario};
+
+    fn small_report() -> ScenarioReport {
+        Scenario::new("report-test", GraphSpec::paper(12))
+            .with_solvers(vec![SolverSpec::Mp, SolverSpec::IshiiTempo])
+            .with_steps(400)
+            .with_stride(100)
+            .with_rounds(2)
+            .with_threads(1)
+            .with_seed(3)
+            .run()
+            .expect("small scenario runs")
+    }
+
+    #[test]
+    fn lookup_render_and_csv() {
+        let rep = small_report();
+        assert!(rep.get("mp").is_some());
+        assert!(rep.get("nope").is_none());
+        let txt = rep.render();
+        assert!(txt.contains("report-test"));
+        assert!(txt.contains("rate/step"));
+        let csv = rep.to_csv();
+        assert!(csv.starts_with("t,mp_mean,mp_var,ishii-tempo_mean"));
+    }
+
+    #[test]
+    fn rate_ordering_sorted() {
+        let rep = small_report();
+        let rates = rep.rate_ordering();
+        assert_eq!(rates.len(), 2);
+        assert!(rates[0].1 <= rates[1].1);
+        // MP is exponential, the averaging baseline is not: MP leads.
+        assert_eq!(rates[0].0, "mp");
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let rep = small_report();
+        let v = rep.to_json();
+        let text = v.render();
+        let parsed = Json::parse(&text).expect("valid json");
+        let solvers = parsed.get("solvers").and_then(Json::as_array).expect("solvers");
+        assert_eq!(solvers.len(), 2);
+        assert_eq!(solvers[0].get("name").and_then(Json::as_str), Some("mp"));
+        assert!(solvers[0].get("final_error").and_then(Json::as_f64).is_some());
+        assert!(solvers[0].get("reads").and_then(Json::as_usize).expect("reads") > 0);
+        assert!(parsed.get("scenario").and_then(|s| s.get("graph")).is_some());
+    }
+
+    #[test]
+    fn bench_json_written_to_disk() {
+        let rep = small_report();
+        let dir = std::env::temp_dir().join("pagerank_mp_engine_test");
+        let path = dir.join("BENCH_scenario.json");
+        rep.write_bench_json(&path).expect("writes");
+        let text = std::fs::read_to_string(&path).expect("readable");
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

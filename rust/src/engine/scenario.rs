@@ -1,0 +1,416 @@
+//! The declarative experiment: graph + solvers + shape, as one value.
+//!
+//! A [`Scenario`] is the single entry point for every experiment in the
+//! repository: it names a [`GraphSpec`], a list of [`SolverSpec`]s and
+//! the experiment shape (steps, stride, rounds, threads, seed, reference
+//! policy), round-trips through JSON, and [`Scenario::run`] drives
+//! [`crate::harness::experiment::run_rounds_stats`] uniformly for every
+//! solver — the Fig.-1/Fig.-2 harnesses, the CLI `run-scenario`
+//! subcommand, the benches and the examples are all thin layers over it.
+//!
+//! ## Determinism contract
+//!
+//! Round `i` of every solver derives one `solver_seed` from
+//! `base.fork(i)`; the solver is built with that seed and stepped with
+//! the stream `Rng::seeded(solver_seed).fork(1)`. That is exactly the
+//! sampler stream the distributed coordinator forks internally, so a
+//! sequential zero-latency [`SolverSpec::Coordinator`] replays the
+//! *identical* activation sequence as the matrix-form [`SolverSpec::Mp`]
+//! — the distributed runtime and the matrix form are interchangeable
+//! inside one scenario (bit-for-bit; tested in `tests/engine.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::algo::common::Trajectory;
+use crate::algo::power_iteration::JacobiPowerIteration;
+use crate::algo::PageRankSolver;
+use crate::graph::Graph;
+use crate::harness::experiment::{run_rounds_stats, with_stride};
+use crate::linalg::solve::exact_pagerank;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::graph_spec::GraphSpec;
+use super::report::{ScenarioReport, SolverReport};
+use super::solver_spec::{CoordinatorSolver, SolverSpec};
+
+/// How the reference solution `x*` is obtained.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReferencePolicy {
+    /// Exact LU solve of `(I-αA)x = (1-α)𝟙` (Proposition 1) — O(N³),
+    /// the right default at paper scale.
+    Exact,
+    /// Jacobi power iteration to the given l∞ tolerance — O(m) per
+    /// sweep, for graphs too large to factor densely.
+    Power { tol: f64 },
+}
+
+/// A complete, serializable experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub graph: GraphSpec,
+    pub solvers: Vec<SolverSpec>,
+    pub alpha: f64,
+    /// Activations per round.
+    pub steps: usize,
+    /// Error-sampling stride (in activations).
+    pub stride: usize,
+    /// Independent rounds averaged.
+    pub rounds: usize,
+    /// Worker threads; 0 = all available cores. Results are identical
+    /// whatever the thread count.
+    pub threads: usize,
+    pub seed: u64,
+    pub reference: ReferencePolicy,
+}
+
+impl Scenario {
+    /// A scenario with the paper's §III defaults (steps, stride, rounds
+    /// and α as in Fig. 1) over the given graph, solving with MP only —
+    /// extend via the `with_*` builders.
+    pub fn new(name: &str, graph: GraphSpec) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            graph,
+            solvers: vec![SolverSpec::Mp],
+            alpha: crate::DEFAULT_ALPHA,
+            steps: 60_000,
+            stride: 500,
+            rounds: 100,
+            threads: 0,
+            seed: 2017,
+            reference: ReferencePolicy::Exact,
+        }
+    }
+
+    /// The paper's experiment graph at size `n`.
+    pub fn paper(name: &str, n: usize) -> Scenario {
+        Scenario::new(name, GraphSpec::paper(n))
+    }
+
+    pub fn with_solvers(mut self, solvers: Vec<SolverSpec>) -> Scenario {
+        self.solvers = solvers;
+        self
+    }
+
+    pub fn with_alpha(mut self, alpha: f64) -> Scenario {
+        assert!(alpha > 0.0 && alpha < 1.0, "alpha in (0,1)");
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn with_steps(mut self, steps: usize) -> Scenario {
+        self.steps = steps;
+        self
+    }
+
+    pub fn with_stride(mut self, stride: usize) -> Scenario {
+        self.stride = stride;
+        self
+    }
+
+    pub fn with_rounds(mut self, rounds: usize) -> Scenario {
+        self.rounds = rounds;
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Scenario {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Scenario {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_reference(mut self, reference: ReferencePolicy) -> Scenario {
+        self.reference = reference;
+        self
+    }
+
+    /// Compute the reference `x*` for a built graph.
+    pub fn reference_solution(&self, graph: &Graph) -> Vec<f64> {
+        match self.reference {
+            ReferencePolicy::Exact => exact_pagerank(graph, self.alpha),
+            ReferencePolicy::Power { tol } => {
+                let mut pi = JacobiPowerIteration::new(graph, self.alpha);
+                pi.run_to_tolerance(tol, 200_000);
+                pi.estimate()
+            }
+        }
+    }
+
+    /// Run every solver through the uniform multi-round experiment
+    /// runner and collect trajectories, communication totals and fitted
+    /// decay rates.
+    pub fn run(&self) -> Result<ScenarioReport, String> {
+        if self.solvers.is_empty() {
+            return Err(format!("scenario {:?} has no solvers", self.name));
+        }
+        if self.steps == 0 || self.stride == 0 || self.rounds == 0 {
+            return Err(format!(
+                "scenario {:?}: steps, stride and rounds must all be > 0",
+                self.name
+            ));
+        }
+        let graph = self.graph.build(self.seed)?;
+        let x_star = self.reference_solution(&graph);
+        let threads = if self.threads == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
+        } else {
+            self.threads
+        };
+        // One base stream shared by all solvers: round i of solver A and
+        // round i of solver B see the same derived seed, which is what
+        // makes cross-solver replay comparisons exact.
+        let base = Rng::seeded(self.seed ^ 0x5CE9_A810);
+
+        let mut reports = Vec::with_capacity(self.solvers.len());
+        for spec in &self.solvers {
+            let t0 = std::time::Instant::now();
+            let (avg, total_stats) =
+                run_rounds_stats(&spec.key(), self.rounds, &base, threads, |round_rng| {
+                    let mut seed_rng = round_rng;
+                    let solver_seed = seed_rng.next_u64();
+                    match spec {
+                        // The distributed runtime records in stride-sized
+                        // chunks so asynchronous activations keep their
+                        // overlap between samples (a per-activation step
+                        // loop would drain the pipeline each activation
+                        // and serialize async runs).
+                        SolverSpec::Coordinator { .. } => {
+                            let mut coord = CoordinatorSolver::from_spec(
+                                &graph,
+                                self.alpha,
+                                solver_seed,
+                                spec,
+                            )
+                            .expect("spec is a coordinator");
+                            coord.record(&x_star, self.steps, self.stride)
+                        }
+                        _ => {
+                            let mut solver = spec.build(&graph, self.alpha, solver_seed);
+                            let mut step_rng = Rng::seeded(solver_seed).fork(1);
+                            let tr = Trajectory::record(
+                                &mut *solver,
+                                &x_star,
+                                self.steps,
+                                self.stride,
+                                &mut step_rng,
+                            );
+                            (tr.errors, tr.total_stats)
+                        }
+                    }
+                });
+            let trajectory = with_stride(avg, self.stride);
+            let decay_rate = fitted_decay(&trajectory.mean, self.stride);
+            let final_error = trajectory.final_mean();
+            reports.push(SolverReport {
+                spec: spec.clone(),
+                trajectory,
+                total_stats,
+                decay_rate,
+                final_error,
+                wall: t0.elapsed(),
+            });
+        }
+        Ok(ScenarioReport { scenario: self.clone(), reports })
+    }
+
+    /// JSON object form (see `examples/fig1_scenario.json`).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::String(self.name.clone()));
+        m.insert("graph".to_string(), self.graph.to_json());
+        m.insert(
+            "solvers".to_string(),
+            Json::Array(self.solvers.iter().map(|s| Json::String(s.key())).collect()),
+        );
+        m.insert("alpha".to_string(), Json::Number(self.alpha));
+        m.insert("steps".to_string(), Json::Number(self.steps as f64));
+        m.insert("stride".to_string(), Json::Number(self.stride as f64));
+        m.insert("rounds".to_string(), Json::Number(self.rounds as f64));
+        m.insert("threads".to_string(), Json::Number(self.threads as f64));
+        m.insert("seed".to_string(), Json::Number(self.seed as f64));
+        m.insert(
+            "reference".to_string(),
+            match self.reference {
+                ReferencePolicy::Exact => Json::String("exact".into()),
+                ReferencePolicy::Power { tol } => {
+                    let mut r = BTreeMap::new();
+                    r.insert("kind".to_string(), Json::String("power".into()));
+                    r.insert("tol".to_string(), Json::Number(tol));
+                    Json::Object(r)
+                }
+            },
+        );
+        Json::Object(m)
+    }
+
+    /// Parse from the object form. Only `graph` is mandatory; everything
+    /// else falls back to the paper defaults of [`Scenario::new`].
+    pub fn from_json(v: &Json) -> Result<Scenario, String> {
+        let graph = GraphSpec::from_json(v.get("graph").ok_or("scenario needs a \"graph\"")?)?;
+        let mut scenario =
+            Scenario::new(v.get("name").and_then(Json::as_str).unwrap_or("scenario"), graph);
+        if let Some(arr) = v.get("solvers").and_then(Json::as_array) {
+            let mut solvers = Vec::with_capacity(arr.len());
+            for s in arr {
+                let key = s
+                    .as_str()
+                    .ok_or("\"solvers\" must be an array of registry strings")?;
+                solvers.push(SolverSpec::parse(key)?);
+            }
+            scenario.solvers = solvers;
+        }
+        if let Some(alpha) = v.get("alpha").and_then(Json::as_f64) {
+            if !(alpha > 0.0 && alpha < 1.0) {
+                return Err(format!("alpha {alpha} out of (0,1)"));
+            }
+            scenario.alpha = alpha;
+        }
+        let get_usize = |key: &str| -> Result<Option<usize>, String> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(j) => j
+                    .as_usize()
+                    .map(Some)
+                    .ok_or_else(|| format!("\"{key}\" must be a non-negative integer")),
+            }
+        };
+        if let Some(steps) = get_usize("steps")? {
+            scenario.steps = steps;
+        }
+        if let Some(stride) = get_usize("stride")? {
+            scenario.stride = stride;
+        }
+        if let Some(rounds) = get_usize("rounds")? {
+            scenario.rounds = rounds;
+        }
+        if let Some(threads) = get_usize("threads")? {
+            scenario.threads = threads;
+        }
+        if let Some(seed) = get_usize("seed")? {
+            scenario.seed = seed as u64;
+        }
+        if let Some(r) = v.get("reference") {
+            scenario.reference = match r.as_str() {
+                Some("exact") => ReferencePolicy::Exact,
+                Some(other) => return Err(format!("unknown reference policy {other:?}")),
+                None => {
+                    let kind = r
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .ok_or("reference object needs a \"kind\"")?;
+                    match kind {
+                        "exact" => ReferencePolicy::Exact,
+                        "power" => ReferencePolicy::Power {
+                            tol: r.get("tol").and_then(Json::as_f64).unwrap_or(1e-12),
+                        },
+                        other => return Err(format!("unknown reference policy {other:?}")),
+                    }
+                }
+            };
+        }
+        Ok(scenario)
+    }
+
+    /// Parse a scenario from JSON text (the `run-scenario` CLI path).
+    pub fn from_json_str(text: &str) -> Result<Scenario, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        Scenario::from_json(&v)
+    }
+}
+
+/// Fit a per-activation decay rate on the tail of an averaged
+/// trajectory, cutting both the initial transient and the floating-point
+/// noise floor (a converged trajectory flattens near ~1e-30 and would
+/// bias the fit toward 1). Returns 0.0 when the trajectory converged too
+/// fast to fit.
+fn fitted_decay(mean: &[f64], stride: usize) -> f64 {
+    const NOISE_FLOOR: f64 = 1e-26;
+    let tail = &mean[mean.len() / 5..];
+    // decay_rate_above panics below 2 fittable points; guard here.
+    let fittable = tail.iter().position(|&v| v <= NOISE_FLOOR).unwrap_or(tail.len());
+    if fittable < 2 {
+        return 0.0;
+    }
+    stats::decay_rate_above(tail, NOISE_FLOOR).powf(1.0 / stride as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scenario {
+        Scenario::paper("tiny", 15)
+            .with_solvers(vec![SolverSpec::Mp, SolverSpec::LeiChen])
+            .with_steps(600)
+            .with_stride(100)
+            .with_rounds(3)
+            .with_threads(2)
+            .with_seed(5)
+    }
+
+    #[test]
+    fn run_produces_one_report_per_solver() {
+        let report = tiny().run().expect("runs");
+        assert_eq!(report.reports.len(), 2);
+        let mp = &report.reports[0];
+        assert_eq!(mp.trajectory.name, "mp");
+        assert_eq!(mp.trajectory.mean.len(), 7); // t = 0,100,…,600
+        assert_eq!(mp.trajectory.ts[1], 100);
+        assert!(mp.final_error < mp.trajectory.mean[0], "mp must make progress");
+        assert!(mp.total_stats.reads > 0);
+        assert!(mp.decay_rate > 0.0 && mp.decay_rate < 1.0);
+    }
+
+    #[test]
+    fn deterministic_and_thread_invariant() {
+        let a = tiny().run().expect("runs");
+        let b = tiny().with_threads(1).run().expect("runs");
+        assert_eq!(a.reports[0].trajectory.mean, b.reports[0].trajectory.mean);
+        assert_eq!(a.reports[1].trajectory.variance, b.reports[1].trajectory.variance);
+        assert_eq!(a.reports[0].total_stats, b.reports[0].total_stats);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_scenario() {
+        let s = tiny().with_reference(ReferencePolicy::Power { tol: 1e-10 });
+        let text = s.to_json().render();
+        let back = Scenario::from_json_str(&text).expect("round trips");
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn from_json_applies_paper_defaults() {
+        let s = Scenario::from_json_str(r#"{"graph": "paper:40"}"#).expect("parses");
+        assert_eq!(s.graph, GraphSpec::ErThreshold { n: 40, threshold: 0.5 });
+        assert_eq!(s.solvers, vec![SolverSpec::Mp]);
+        assert_eq!(s.rounds, 100);
+        assert_eq!(s.alpha, crate::DEFAULT_ALPHA);
+        assert_eq!(s.reference, ReferencePolicy::Exact);
+    }
+
+    #[test]
+    fn malformed_scenarios_rejected() {
+        assert!(Scenario::from_json_str("{}").is_err(), "graph is mandatory");
+        assert!(Scenario::from_json_str(r#"{"graph": "paper:10", "alpha": 1.5}"#).is_err());
+        assert!(Scenario::from_json_str(r#"{"graph": "paper:10", "solvers": ["bogus"]}"#).is_err());
+        assert!(tiny().with_solvers(vec![]).run().is_err());
+        let mut zero_stride = tiny();
+        zero_stride.stride = 0;
+        assert!(zero_stride.run().is_err());
+    }
+
+    #[test]
+    fn fitted_decay_handles_instant_convergence() {
+        assert_eq!(fitted_decay(&[0.0, 0.0, 0.0, 0.0, 0.0], 10), 0.0);
+        let geometric: Vec<f64> = (0..20).map(|i| 0.5f64.powi(i)).collect();
+        let rate = fitted_decay(&geometric, 1);
+        assert!((rate - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,557 @@
+//! The solver registry: every PageRank iteration in the repository,
+//! nameable as data.
+//!
+//! [`SolverSpec`] is a serializable description of a solver variant with
+//! a uniform factory, `spec.build(&graph, alpha, seed)`, that yields a
+//! boxed [`PageRankSolver`]. The string registry
+//! (`SolverSpec::parse("mp")`, `"parallel-mp:16"`,
+//! `"coordinator:async:clocks:const:0.1"`) is the JSON form used by
+//! [`super::Scenario`], so adding a workload to an experiment means
+//! editing config, not harness code.
+//!
+//! Two adapters close the gap between the trait and the non-conforming
+//! runtimes: [`DynamicSolver`] (owns its mutable graph) and
+//! [`CoordinatorSolver`] (drives the full message-passing coordinator one
+//! activation per `step`, so the distributed runtime slots into Fig.-1
+//! style trajectory recording unchanged).
+
+use crate::algo::common::{PageRankSolver, StepStats};
+use crate::algo::{
+    dynamic, greedy_mp, ishii_tempo, lei_chen, monte_carlo, mp, parallel_mp, power_iteration,
+    you_tempo_qiu,
+};
+use crate::coordinator::{Coordinator, CoordinatorConfig, Mode, RunReport, SamplerKind};
+use crate::graph::Graph;
+use crate::network::LatencyModel;
+use crate::util::rng::Rng;
+
+/// A serializable description of any solver variant in the repository.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolverSpec {
+    /// Algorithm 1 — randomized Matching Pursuit (matrix form).
+    Mp,
+    /// Original best-atom MP (centralized argmax selection).
+    GreedyMp,
+    /// §IV-1 conflict-free parallel activation with a requested batch.
+    ParallelMp { batch: usize },
+    /// Centralized Jacobi iteration on `(I-αA)x = (1-α)𝟙`.
+    PowerIteration,
+    /// Classical power iteration on the Google matrix.
+    GooglePower,
+    /// \[6\] Ishii–Tempo randomized power iteration + Polyak averaging.
+    IshiiTempo,
+    /// \[15\] You–Tempo–Qiu randomized incremental (row Kaczmarz).
+    YouTempoQiu,
+    /// \[12\] Lei–Chen stochastic approximation.
+    LeiChen,
+    /// \[9\] Monte-Carlo random-walk frequency estimator.
+    MonteCarlo,
+    /// §IV-2 dynamic-network MP (owns a mutable copy of the graph).
+    DynamicMp,
+    /// The full distributed runtime: page agents over the simulated
+    /// network, parameterized by execution mode, activation sampler and
+    /// link-latency model.
+    Coordinator {
+        mode: Mode,
+        sampler: SamplerKind,
+        latency: LatencyModel,
+    },
+}
+
+fn mode_key(mode: Mode) -> &'static str {
+    match mode {
+        Mode::Sequential => "sequential",
+        Mode::Async => "async",
+    }
+}
+
+fn sampler_key(sampler: SamplerKind) -> &'static str {
+    match sampler {
+        SamplerKind::Uniform => "uniform",
+        SamplerKind::ExponentialClocks => "clocks",
+        SamplerKind::ResidualWeighted { .. } => "weighted",
+    }
+}
+
+fn latency_key(latency: LatencyModel) -> String {
+    match latency {
+        LatencyModel::Zero => "zero".to_string(),
+        LatencyModel::Constant(l) => format!("const:{l}"),
+        LatencyModel::Uniform { lo, hi } => format!("uniform:{lo}:{hi}"),
+        LatencyModel::Exponential { mean } => format!("exp:{mean}"),
+    }
+}
+
+impl SolverSpec {
+    /// The coordinator spec with the paper's Algorithm-1 semantics
+    /// (sequential activations, uniform sampling, ideal network) — with
+    /// zero latency this is bit-equivalent to [`SolverSpec::Mp`] when
+    /// both are driven by [`super::Scenario::run`] (tested).
+    pub fn sequential_coordinator() -> SolverSpec {
+        SolverSpec::Coordinator {
+            mode: Mode::Sequential,
+            sampler: SamplerKind::Uniform,
+            latency: LatencyModel::Zero,
+        }
+    }
+
+    /// Canonical registry string (inverse of [`SolverSpec::parse`]).
+    pub fn key(&self) -> String {
+        match self {
+            SolverSpec::Mp => "mp".to_string(),
+            SolverSpec::GreedyMp => "greedy-mp".to_string(),
+            SolverSpec::ParallelMp { batch } => format!("parallel-mp:{batch}"),
+            SolverSpec::PowerIteration => "power".to_string(),
+            SolverSpec::GooglePower => "google-power".to_string(),
+            SolverSpec::IshiiTempo => "ishii-tempo".to_string(),
+            SolverSpec::YouTempoQiu => "you-tempo-qiu".to_string(),
+            SolverSpec::LeiChen => "lei-chen".to_string(),
+            SolverSpec::MonteCarlo => "monte-carlo".to_string(),
+            SolverSpec::DynamicMp => "dynamic-mp".to_string(),
+            SolverSpec::Coordinator { mode, sampler, latency } => format!(
+                "coordinator:{}:{}:{}",
+                mode_key(*mode),
+                sampler_key(*sampler),
+                latency_key(*latency)
+            ),
+        }
+    }
+
+    /// One-line description for `pagerank-mp list-solvers` and reports.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            SolverSpec::Mp => "Algorithm 1: randomized Matching Pursuit (out-links only)",
+            SolverSpec::GreedyMp => "best-atom MP [2]: centralized argmax selection",
+            SolverSpec::ParallelMp { .. } => "§IV-1 conflict-free batched activation",
+            SolverSpec::PowerIteration => "centralized Jacobi sweeps on (I-αA)x = (1-α)1",
+            SolverSpec::GooglePower => "centralized power iteration on the Google matrix",
+            SolverSpec::IshiiTempo => "[6] randomized power iteration + Polyak averaging",
+            SolverSpec::YouTempoQiu => "[15] randomized incremental (row Kaczmarz)",
+            SolverSpec::LeiChen => "[12] stochastic approximation (Robbins–Monro gains)",
+            SolverSpec::MonteCarlo => "[9] Monte-Carlo random-walk frequency estimator",
+            SolverSpec::DynamicMp => "§IV-2 MP over a mutable graph (warm restart)",
+            SolverSpec::Coordinator { .. } => {
+                "distributed runtime: page agents + samplers + simulated network"
+            }
+        }
+    }
+
+    /// Parse a registry string. Accepts the canonical keys plus short
+    /// aliases (`"ytq"`, `"it"`, `"mc"`, `"jacobi"`, `"greedy"`,
+    /// `"pmp:<batch>"`, `"coord:…"`).
+    pub fn parse(s: &str) -> Result<SolverSpec, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let head = *parts.first().ok_or("empty solver spec")?;
+        let arity_err = |want: &str| format!("solver spec {s:?}: expected {want}");
+        match head {
+            "mp" | "matching-pursuit" => Ok(SolverSpec::Mp),
+            "greedy-mp" | "greedy" => Ok(SolverSpec::GreedyMp),
+            "parallel-mp" | "pmp" => {
+                let batch = match parts.get(1) {
+                    None => 8,
+                    Some(b) => b
+                        .parse()
+                        .map_err(|_| arity_err("parallel-mp:<batch>"))?,
+                };
+                if batch == 0 {
+                    return Err(arity_err("a batch size >= 1"));
+                }
+                Ok(SolverSpec::ParallelMp { batch })
+            }
+            "power" | "power-iteration" | "jacobi" => Ok(SolverSpec::PowerIteration),
+            "google-power" | "google" => Ok(SolverSpec::GooglePower),
+            "ishii-tempo" | "it" => Ok(SolverSpec::IshiiTempo),
+            "you-tempo-qiu" | "ytq" => Ok(SolverSpec::YouTempoQiu),
+            "lei-chen" | "lc" => Ok(SolverSpec::LeiChen),
+            "monte-carlo" | "mc" => Ok(SolverSpec::MonteCarlo),
+            "dynamic-mp" | "dynamic" => Ok(SolverSpec::DynamicMp),
+            "coordinator" | "coord" => {
+                let mode = match parts.get(1).copied().unwrap_or("sequential") {
+                    "sequential" | "seq" => Mode::Sequential,
+                    "async" => Mode::Async,
+                    m => return Err(format!("bad coordinator mode {m:?} (sequential|async)")),
+                };
+                let sampler = match parts.get(2).copied().unwrap_or("uniform") {
+                    "uniform" => SamplerKind::Uniform,
+                    "clocks" => SamplerKind::ExponentialClocks,
+                    "weighted" => SamplerKind::ResidualWeighted { floor: 1e-12 },
+                    sm => {
+                        return Err(format!(
+                            "bad coordinator sampler {sm:?} (uniform|clocks|weighted)"
+                        ))
+                    }
+                };
+                let latency = if parts.len() <= 3 {
+                    LatencyModel::Zero
+                } else {
+                    let spec = parts[3..].join(":");
+                    LatencyModel::parse(&spec).ok_or_else(|| {
+                        format!("bad latency {spec:?} (zero|const:L|uniform:lo:hi|exp:mean)")
+                    })?
+                };
+                Ok(SolverSpec::Coordinator { mode, sampler, latency })
+            }
+            _ => Err(format!(
+                "unknown solver {head:?} — try one of: {}",
+                SolverSpec::all()
+                    .iter()
+                    .map(SolverSpec::key)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )),
+        }
+    }
+
+    /// One of every variant (default parameters) — the registry listing.
+    pub fn all() -> Vec<SolverSpec> {
+        vec![
+            SolverSpec::Mp,
+            SolverSpec::GreedyMp,
+            SolverSpec::ParallelMp { batch: 8 },
+            SolverSpec::PowerIteration,
+            SolverSpec::GooglePower,
+            SolverSpec::IshiiTempo,
+            SolverSpec::YouTempoQiu,
+            SolverSpec::LeiChen,
+            SolverSpec::MonteCarlo,
+            SolverSpec::DynamicMp,
+            SolverSpec::sequential_coordinator(),
+        ]
+    }
+
+    /// The paper's comparison set: Algorithm 1 plus the five published
+    /// baselines it is evaluated against.
+    pub fn all_baselines() -> Vec<SolverSpec> {
+        vec![
+            SolverSpec::Mp,
+            SolverSpec::YouTempoQiu,
+            SolverSpec::IshiiTempo,
+            SolverSpec::LeiChen,
+            SolverSpec::MonteCarlo,
+            SolverSpec::PowerIteration,
+        ]
+    }
+
+    /// Uniform factory: construct the described solver over `graph`.
+    ///
+    /// `seed` parameterizes solvers with internal randomness streams (the
+    /// coordinator); matrix-form solvers are deterministic and driven
+    /// entirely by the `Rng` passed to `step`. [`super::Scenario::run`]
+    /// seeds both from the same per-round value so the two kinds stay
+    /// replay-equivalent.
+    pub fn build<'g>(
+        &self,
+        graph: &'g Graph,
+        alpha: f64,
+        seed: u64,
+    ) -> Box<dyn PageRankSolver + 'g> {
+        match self {
+            SolverSpec::Mp => Box::new(mp::MatchingPursuit::new(graph, alpha)),
+            SolverSpec::GreedyMp => Box::new(greedy_mp::GreedyMatchingPursuit::new(graph, alpha)),
+            SolverSpec::ParallelMp { batch } => {
+                Box::new(parallel_mp::ParallelMatchingPursuit::new(graph, alpha, *batch))
+            }
+            SolverSpec::PowerIteration => {
+                Box::new(power_iteration::JacobiPowerIteration::new(graph, alpha))
+            }
+            SolverSpec::GooglePower => {
+                Box::new(power_iteration::GooglePowerIteration::new(graph, alpha))
+            }
+            SolverSpec::IshiiTempo => Box::new(ishii_tempo::IshiiTempo::new(graph, alpha)),
+            SolverSpec::YouTempoQiu => Box::new(you_tempo_qiu::YouTempoQiu::new(graph, alpha)),
+            SolverSpec::LeiChen => Box::new(lei_chen::LeiChen::new(graph, alpha)),
+            SolverSpec::MonteCarlo => Box::new(monte_carlo::MonteCarlo::new(graph, alpha)),
+            SolverSpec::DynamicMp => Box::new(DynamicSolver::new(graph.clone(), alpha)),
+            SolverSpec::Coordinator { mode, sampler, latency } => Box::new(
+                CoordinatorSolver::build(graph, alpha, seed, *mode, *sampler, *latency),
+            ),
+        }
+    }
+}
+
+/// [`PageRankSolver`] adapter over the §IV-2 dynamic tracker (which owns
+/// its graph so it can mutate topology mid-run).
+pub struct DynamicSolver {
+    inner: dynamic::DynamicMatchingPursuit,
+}
+
+impl DynamicSolver {
+    pub fn new(graph: Graph, alpha: f64) -> DynamicSolver {
+        DynamicSolver { inner: dynamic::DynamicMatchingPursuit::new(graph, alpha) }
+    }
+
+    /// Access the wrapped tracker (topology events, conservation checks).
+    pub fn inner_mut(&mut self) -> &mut dynamic::DynamicMatchingPursuit {
+        &mut self.inner
+    }
+}
+
+impl PageRankSolver for DynamicSolver {
+    fn n(&self) -> usize {
+        self.inner.graph().n()
+    }
+
+    fn step(&mut self, rng: &mut Rng) -> StepStats {
+        self.inner.step(rng)
+    }
+
+    fn estimate(&self) -> Vec<f64> {
+        self.inner.estimate().to_vec()
+    }
+
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        crate::linalg::vector::dist_sq(self.inner.estimate(), x_star)
+    }
+
+    fn name(&self) -> &'static str {
+        "dynamic mp (warm restart)"
+    }
+}
+
+/// [`PageRankSolver`] adapter over the full distributed coordinator: one
+/// trait `step` = one completed activation of the §II-D message protocol
+/// over the simulated network.
+///
+/// The `rng` handed to `step` is ignored — the coordinator owns its
+/// sampler and latency streams, forked from the `seed` it was built with.
+/// [`super::Scenario::run`] derives that seed and the matrix-form step
+/// stream from the same value, which makes the sequential zero-latency
+/// coordinator replay the *identical* activation sequence as
+/// [`SolverSpec::Mp`] (and, with an ideal network, produce bit-identical
+/// estimates — tested in `tests/engine.rs`).
+pub struct CoordinatorSolver<'g> {
+    coord: Coordinator<'g>,
+    prev_reads: u64,
+    prev_writes: u64,
+}
+
+impl<'g> CoordinatorSolver<'g> {
+    /// Construct from explicit runtime parameters.
+    pub fn build(
+        graph: &'g Graph,
+        alpha: f64,
+        seed: u64,
+        mode: Mode,
+        sampler: SamplerKind,
+        latency: LatencyModel,
+    ) -> CoordinatorSolver<'g> {
+        let cfg = CoordinatorConfig::default()
+            .with_alpha(alpha)
+            .with_seed(seed)
+            .with_mode(mode)
+            .with_sampler(sampler)
+            .with_latency(latency);
+        CoordinatorSolver { coord: Coordinator::new(graph, cfg), prev_reads: 0, prev_writes: 0 }
+    }
+
+    /// Construct from a [`SolverSpec::Coordinator`] value (typed access
+    /// to the runtime where the boxed trait object is not enough).
+    pub fn from_spec(
+        graph: &'g Graph,
+        alpha: f64,
+        seed: u64,
+        spec: &SolverSpec,
+    ) -> Result<CoordinatorSolver<'g>, String> {
+        match spec {
+            SolverSpec::Coordinator { mode, sampler, latency } => {
+                Ok(CoordinatorSolver::build(graph, alpha, seed, *mode, *sampler, *latency))
+            }
+            other => Err(format!("not a coordinator spec: {}", other.key())),
+        }
+    }
+
+    /// Run a whole budget of activations at once (cheaper than repeated
+    /// `step` calls) and return the cumulative run report.
+    pub fn drive(&mut self, activations: u64) -> RunReport {
+        let report = self.coord.run(activations);
+        self.prev_reads = report.metrics.logical_reads();
+        self.prev_writes = report.metrics.logical_writes();
+        report
+    }
+
+    /// Record an error trajectory by driving the runtime in stride-sized
+    /// chunks — the coordinator counterpart of
+    /// [`crate::algo::common::Trajectory::record`].
+    ///
+    /// The runtime only yields consistent snapshots at quiescence, so
+    /// errors are sampled at chunk boundaries; *within* a chunk
+    /// asynchronous activations overlap freely. (A per-activation `step`
+    /// loop would drain the pipeline after every single activation and
+    /// silently serialize async runs.) In sequential mode the chunked
+    /// drive replays the identical activation stream as per-activation
+    /// stepping, so the [`SolverSpec::Mp`] equivalence is unaffected.
+    pub fn record(
+        &mut self,
+        x_star: &[f64],
+        steps: usize,
+        stride: usize,
+    ) -> (Vec<f64>, StepStats) {
+        assert!(stride > 0);
+        let n = x_star.len() as f64;
+        let (r0, w0, a0) = {
+            let m = self.coord.metrics();
+            (m.logical_reads(), m.logical_writes(), m.activations)
+        };
+        let mut errors = Vec::with_capacity(steps / stride + 1);
+        errors.push(self.coord.error_sq_vs(x_star) / n);
+        for _ in 0..steps / stride {
+            self.drive(stride as u64);
+            errors.push(self.coord.error_sq_vs(x_star) / n);
+        }
+        let remainder = steps % stride;
+        if remainder > 0 {
+            self.drive(remainder as u64);
+        }
+        let m = self.coord.metrics();
+        let stats = StepStats {
+            reads: (m.logical_reads() - r0) as usize,
+            writes: (m.logical_writes() - w0) as usize,
+            // Actual completions (drain can finish in-flight activations
+            // beyond the requested budget in async mode).
+            activated: (m.activations - a0) as usize,
+        };
+        (errors, stats)
+    }
+
+    /// Cumulative runtime metrics (message counts, deferrals, makespan).
+    pub fn metrics(&self) -> &crate::coordinator::metrics::Metrics {
+        self.coord.metrics()
+    }
+
+    /// Current residual snapshot (quiescent between runs).
+    pub fn residual(&self) -> Vec<f64> {
+        self.coord.residual()
+    }
+
+    /// Virtual time consumed so far.
+    pub fn virtual_time(&self) -> f64 {
+        self.coord.virtual_time()
+    }
+}
+
+impl PageRankSolver for CoordinatorSolver<'_> {
+    fn n(&self) -> usize {
+        self.coord.n()
+    }
+
+    // NOTE: per-activation stepping quiesces the runtime each call, so it
+    // carries Algorithm-1 sequential semantics; `Scenario::run` and
+    // callers that care about async overlap use `record`/`drive` instead.
+    fn step(&mut self, _rng: &mut Rng) -> StepStats {
+        self.coord.run(1);
+        let m = self.coord.metrics();
+        let reads = m.logical_reads();
+        let writes = m.logical_writes();
+        let stats = StepStats {
+            reads: (reads - self.prev_reads) as usize,
+            writes: (writes - self.prev_writes) as usize,
+            activated: 1,
+        };
+        self.prev_reads = reads;
+        self.prev_writes = writes;
+        stats
+    }
+
+    fn estimate(&self) -> Vec<f64> {
+        self.coord.estimate()
+    }
+
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        self.coord.error_sq_vs(x_star)
+    }
+
+    fn name(&self) -> &'static str {
+        "coordinator (agents + simulated network)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::linalg::solve::exact_pagerank;
+
+    #[test]
+    fn every_registry_key_round_trips() {
+        for spec in SolverSpec::all() {
+            let key = spec.key();
+            let back = SolverSpec::parse(&key).expect("canonical key parses");
+            assert_eq!(back, spec, "round trip failed for {key}");
+        }
+    }
+
+    #[test]
+    fn aliases_resolve() {
+        assert_eq!(SolverSpec::parse("ytq").expect("ok"), SolverSpec::YouTempoQiu);
+        assert_eq!(SolverSpec::parse("jacobi").expect("ok"), SolverSpec::PowerIteration);
+        assert_eq!(
+            SolverSpec::parse("pmp:32").expect("ok"),
+            SolverSpec::ParallelMp { batch: 32 }
+        );
+        assert_eq!(
+            SolverSpec::parse("coord:async:clocks:const:0.1").expect("ok"),
+            SolverSpec::Coordinator {
+                mode: Mode::Async,
+                sampler: SamplerKind::ExponentialClocks,
+                latency: LatencyModel::Constant(0.1),
+            }
+        );
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(SolverSpec::parse("bogus").is_err());
+        assert!(SolverSpec::parse("parallel-mp:0").is_err());
+        assert!(SolverSpec::parse("coordinator:teleport").is_err());
+        assert!(SolverSpec::parse("coordinator:async:psychic").is_err());
+        assert!(SolverSpec::parse("coordinator:async:clocks:warp:9").is_err());
+    }
+
+    #[test]
+    fn build_produces_working_solvers() {
+        let g = generators::er_threshold(15, 0.5, 31);
+        let x_star = exact_pagerank(&g, 0.85);
+        for spec in SolverSpec::all() {
+            let mut solver = spec.build(&g, 0.85, 9);
+            assert_eq!(solver.n(), 15, "{}", spec.key());
+            let before = solver.error_sq_vs(&x_star);
+            let mut rng = Rng::seeded(10);
+            for _ in 0..400 {
+                solver.step(&mut rng);
+            }
+            let after = solver.error_sq_vs(&x_star);
+            assert!(
+                after < before,
+                "{} made no progress: {before} -> {after}",
+                spec.key()
+            );
+        }
+    }
+
+    #[test]
+    fn coordinator_adapter_counts_communication() {
+        let g = generators::er_threshold(12, 0.5, 32);
+        let spec = SolverSpec::sequential_coordinator();
+        let mut solver = spec.build(&g, 0.85, 5);
+        let mut rng = Rng::seeded(6);
+        let stats = solver.step(&mut rng);
+        assert_eq!(stats.activated, 1);
+        assert!(stats.reads > 0, "an ER-threshold activation touches neighbours");
+        // No self-loops in the ER-threshold model, so every read pairs
+        // with a wire write (§II-D).
+        assert_eq!(stats.reads, stats.writes);
+    }
+
+    #[test]
+    fn from_spec_rejects_non_coordinator() {
+        let g = generators::ring(5);
+        assert!(CoordinatorSolver::from_spec(&g, 0.85, 1, &SolverSpec::Mp).is_err());
+        assert!(CoordinatorSolver::from_spec(
+            &g,
+            0.85,
+            1,
+            &SolverSpec::sequential_coordinator()
+        )
+        .is_ok());
+    }
+}

@@ -8,17 +8,18 @@
 //!   size and graph density (§IV future-work 1).
 //! * **ABL-GREEDY** — randomized vs best-atom selection: convergence per
 //!   iteration vs communication per iteration.
+//!
+//! Every solver is constructed through the [`crate::engine`] registry —
+//! the studies describe *what* runs; the engine owns *how* it is built.
 
-use crate::algo::common::PageRankSolver;
-use crate::algo::greedy_mp::GreedyMatchingPursuit;
-use crate::algo::mp::MatchingPursuit;
-use crate::algo::parallel_mp::ParallelMatchingPursuit;
-use crate::coordinator::{Coordinator, CoordinatorConfig, SamplerKind};
+use crate::algo::common::{PageRankSolver, StepStats, Trajectory};
+use crate::coordinator::{Mode, SamplerKind};
+use crate::engine::{CoordinatorSolver, SolverSpec};
 use crate::graph::generators;
 use crate::graph::Graph;
 use crate::linalg::solve::exact_pagerank;
 use crate::linalg::spectral;
-use crate::linalg::vector;
+use crate::network::LatencyModel;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -44,6 +45,7 @@ pub fn rate_study(n: usize, alpha: f64, rounds: usize, steps: usize, seed: u64) 
         ("ring".into(), generators::ring(n)),
         ("star".into(), generators::star(n)),
     ];
+    let spec = SolverSpec::Mp;
     let base = Rng::seeded(seed ^ 0xAB1);
     families
         .into_iter()
@@ -53,10 +55,8 @@ pub fn rate_study(n: usize, alpha: f64, rounds: usize, steps: usize, seed: u64) 
             let mut rounds_data = Vec::with_capacity(rounds);
             for round in 0..rounds {
                 let mut rng = base.fork(round as u64);
-                let mut mp = MatchingPursuit::new(&g, alpha);
-                let tr = crate::algo::common::Trajectory::record(
-                    &mut mp, &x_star, steps, stride, &mut rng,
-                );
+                let mut mp = spec.build(&g, alpha, round as u64);
+                let tr = Trajectory::record(&mut *mp, &x_star, steps, stride, &mut rng);
                 rounds_data.push(tr.errors);
             }
             let avg = stats::average_trajectories(&rounds_data);
@@ -96,15 +96,18 @@ pub fn sampler_study(n: usize, alpha: f64, activations: u64, seed: u64) -> Vec<S
     kinds
         .into_iter()
         .map(|(name, kind)| {
-            let cfg = CoordinatorConfig::default()
-                .with_seed(seed)
-                .with_alpha(alpha)
-                .with_sampler(kind);
-            let mut coord = Coordinator::new(&g, cfg);
-            let rep = coord.run(activations);
+            let mut coord = CoordinatorSolver::build(
+                &g,
+                alpha,
+                seed,
+                Mode::Sequential,
+                kind,
+                LatencyModel::Zero,
+            );
+            let rep = coord.drive(activations);
             SamplerRow {
                 sampler: name,
-                final_error: vector::dist_sq(&coord.estimate(), &x_star) / n as f64,
+                final_error: coord.error_sq_vs(&x_star) / n as f64,
                 deferred: rep.metrics.deferred,
                 makespan: rep.metrics.makespan,
             }
@@ -135,16 +138,19 @@ pub fn parallel_study(
         let g = generators::erdos_renyi(n, density, seed);
         let x_star = exact_pagerank(&g, alpha);
         for &b in batches {
-            let mut pmp = ParallelMatchingPursuit::new(&g, alpha, b);
+            let mut pmp = SolverSpec::ParallelMp { batch: b }.build(&g, alpha, seed);
             let mut rng = Rng::seeded(seed ^ (b as u64) << 8);
+            let mut total = StepStats::default();
             for _ in 0..steps_per_batch {
-                pmp.step(&mut rng);
+                total.accumulate(pmp.step(&mut rng));
             }
             rows.push(ParallelRow {
                 density,
                 requested_batch: b,
-                effective_batch: pmp.mean_batch_size(),
-                final_error: vector::dist_sq(&pmp.estimate(), &x_star) / n as f64,
+                // `activated` counts accepted pages per packed batch, so
+                // the mean accepted batch size is total/steps.
+                effective_batch: total.activated as f64 / steps_per_batch as f64,
+                final_error: pmp.error_sq_vs(&x_star) / n as f64,
             });
         }
     }
@@ -164,34 +170,27 @@ pub struct GreedyRow {
 pub fn greedy_study(n: usize, alpha: f64, iterations: usize, seed: u64) -> Vec<GreedyRow> {
     let g = generators::er_threshold(n, 0.5, seed);
     let x_star = exact_pagerank(&g, alpha);
-    let mut out = Vec::new();
-
-    let mut mp = MatchingPursuit::new(&g, alpha);
-    let mut rng = Rng::seeded(seed + 1);
-    let mut reads = 0usize;
-    for _ in 0..iterations {
-        reads += mp.step(&mut rng).reads;
-    }
-    out.push(GreedyRow {
-        algo: "randomized (Alg. 1)".into(),
-        iterations,
-        final_error: vector::dist_sq(&mp.estimate(), &x_star) / n as f64,
-        total_reads: reads,
-    });
-
-    let mut gmp = GreedyMatchingPursuit::new(&g, alpha);
-    let mut rng = Rng::seeded(seed + 2);
-    let mut reads = 0usize;
-    for _ in 0..iterations {
-        reads += gmp.step(&mut rng).reads;
-    }
-    out.push(GreedyRow {
-        algo: "greedy best-atom [2]".into(),
-        iterations,
-        final_error: vector::dist_sq(&gmp.estimate(), &x_star) / n as f64,
-        total_reads: reads,
-    });
-    out
+    let cases: [(&str, SolverSpec, u64); 2] = [
+        ("randomized (Alg. 1)", SolverSpec::Mp, 1),
+        ("greedy best-atom [2]", SolverSpec::GreedyMp, 2),
+    ];
+    cases
+        .into_iter()
+        .map(|(label, spec, seed_off)| {
+            let mut solver = spec.build(&g, alpha, seed + seed_off);
+            let mut rng = Rng::seeded(seed + seed_off);
+            let mut reads = 0usize;
+            for _ in 0..iterations {
+                reads += solver.step(&mut rng).reads;
+            }
+            GreedyRow {
+                algo: label.into(),
+                iterations,
+                final_error: solver.error_sq_vs(&x_star) / n as f64,
+                total_reads: reads,
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -5,6 +5,7 @@
 //! deterministic: round `i` uses `base_rng.fork(i)`, so results are
 //! identical whatever the thread count.
 
+use crate::algo::common::StepStats;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -46,14 +47,35 @@ pub fn run_rounds<F>(
 where
     F: Fn(Rng) -> Vec<f64> + Sync,
 {
+    run_rounds_stats(name, rounds, base, threads, |rng| {
+        (make_round(rng), StepStats::default())
+    })
+    .0
+}
+
+/// Like [`run_rounds`] but the closure also reports the communication
+/// cost of its round; the returned [`StepStats`] is the sum over all
+/// rounds (accumulated in round order, so it is deterministic and
+/// thread-count invariant). This is what [`crate::engine::Scenario`]
+/// drives: one uniform runner for trajectory *and* cost accounting.
+pub fn run_rounds_stats<F>(
+    name: &str,
+    rounds: usize,
+    base: &Rng,
+    threads: usize,
+    make_round: F,
+) -> (AveragedTrajectory, StepStats)
+where
+    F: Fn(Rng) -> (Vec<f64>, StepStats) + Sync,
+{
     assert!(rounds > 0);
     let threads = threads.max(1).min(rounds);
-    let results: Vec<Vec<f64>> = if threads == 1 {
+    let results: Vec<(Vec<f64>, StepStats)> = if threads == 1 {
         (0..rounds).map(|i| make_round(base.fork(i as u64))).collect()
     } else {
         // Static block partition over scoped threads — deterministic
         // regardless of scheduling.
-        let mut results: Vec<Option<Vec<f64>>> = vec![None; rounds];
+        let mut results: Vec<Option<(Vec<f64>, StepStats)>> = vec![None; rounds];
         let chunk = rounds.div_ceil(threads);
         std::thread::scope(|scope| {
             let handles: Vec<_> = results
@@ -77,17 +99,25 @@ where
         results.into_iter().map(|r| r.expect("round filled")).collect()
     };
 
-    let mean = stats::average_trajectories(&results);
-    let variance = stats::trajectory_variance(&results);
-    let sample_rounds: Vec<Vec<f64>> = results.iter().take(5).cloned().collect();
-    let len = mean.len();
-    AveragedTrajectory {
-        name: name.to_string(),
-        ts: (0..len).collect(),
-        mean,
-        variance,
-        sample_rounds,
+    let mut total_stats = StepStats::default();
+    for (_, s) in &results {
+        total_stats.accumulate(*s);
     }
+    let trajectories: Vec<Vec<f64>> = results.into_iter().map(|(t, _)| t).collect();
+    let mean = stats::average_trajectories(&trajectories);
+    let variance = stats::trajectory_variance(&trajectories);
+    let sample_rounds: Vec<Vec<f64>> = trajectories.iter().take(5).cloned().collect();
+    let len = mean.len();
+    (
+        AveragedTrajectory {
+            name: name.to_string(),
+            ts: (0..len).collect(),
+            mean,
+            variance,
+            sample_rounds,
+        },
+        total_stats,
+    )
 }
 
 /// Fill in the activation indices given the sampling stride.
@@ -134,6 +164,22 @@ mod tests {
         let base = Rng::seeded(101);
         let tr = run_rounds("x", 3, &base, 2, geometric_round);
         assert_eq!(tr.sample_rounds.len(), 3);
+    }
+
+    #[test]
+    fn stats_summed_across_rounds_thread_invariant() {
+        let base = Rng::seeded(103);
+        let make = |rng: Rng| {
+            let mut r = rng;
+            let start = 1.0 + r.uniform();
+            let traj: Vec<f64> = (0..6).map(|i| start * 0.5f64.powi(i)).collect();
+            (traj, StepStats { reads: 2, writes: 3, activated: 1 })
+        };
+        let (a, sa) = run_rounds_stats("x", 9, &base, 1, make);
+        let (b, sb) = run_rounds_stats("x", 9, &base, 4, make);
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(sa, sb);
+        assert_eq!(sa, StepStats { reads: 18, writes: 27, activated: 9 });
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! **FIG1** — the paper's Figure 1.
+//! **FIG1** — the paper's Figure 1, as a thin layer over the engine.
 //!
 //! Setup (§III): N = 100, hyperlink matrix from iid U\[0,1\] entries
 //! thresholded at 0.5, α = 0.85, 100 simulation rounds averaged.
@@ -10,19 +10,15 @@
 //! * \[6\] Ishii–Tempo, initialized at 𝟙 (expected: sub-exponential decay
 //!   with larger cross-round variance).
 //!
-//! `run` reproduces all three averaged trajectories plus the qualitative
-//! claims as machine-checkable [`Fig1Verdict`] fields.
+//! All construction goes through [`crate::engine::Scenario`] — this file
+//! contains no solver wiring, only the figure's claim checking; the same
+//! experiment is runnable from config via
+//! `pagerank-mp run-scenario examples/fig1_scenario.json`.
 
-use crate::algo::common::Trajectory;
-use crate::algo::ishii_tempo::IshiiTempo;
-use crate::algo::mp::MatchingPursuit;
-use crate::algo::you_tempo_qiu::YouTempoQiu;
-use crate::graph::generators;
-use crate::linalg::solve::exact_pagerank;
-use crate::util::rng::Rng;
+use crate::engine::{GraphSpec, Scenario, SolverSpec};
 use crate::util::stats;
 
-use super::experiment::{run_rounds, with_stride, AveragedTrajectory};
+use super::experiment::AveragedTrajectory;
 
 /// Experiment parameters (defaults = the paper's §III).
 #[derive(Debug, Clone)]
@@ -54,6 +50,25 @@ impl Default for Fig1Config {
     }
 }
 
+impl Fig1Config {
+    /// The equivalent declarative scenario (the engine value `run`
+    /// drives; also what `examples/fig1_scenario.json` serializes).
+    pub fn scenario(&self) -> Scenario {
+        Scenario::new("fig1", GraphSpec::ErThreshold { n: self.n, threshold: self.threshold })
+            .with_solvers(vec![
+                SolverSpec::Mp,
+                SolverSpec::YouTempoQiu,
+                SolverSpec::IshiiTempo,
+            ])
+            .with_alpha(self.alpha)
+            .with_steps(self.steps)
+            .with_stride(self.stride)
+            .with_rounds(self.rounds)
+            .with_threads(self.threads)
+            .with_seed(self.seed)
+    }
+}
+
 /// Machine-checked qualitative claims of Figure 1.
 #[derive(Debug, Clone)]
 pub struct Fig1Verdict {
@@ -79,55 +94,37 @@ pub struct Fig1Result {
     pub verdict: Fig1Verdict,
 }
 
-/// Run the Figure-1 experiment.
+/// Run the Figure-1 experiment through the engine.
 pub fn run(cfg: &Fig1Config) -> Fig1Result {
-    let g = generators::er_threshold(cfg.n, cfg.threshold, cfg.seed);
-    let x_star = exact_pagerank(&g, cfg.alpha);
-    let base = Rng::seeded(cfg.seed ^ 0xF161);
+    let scenario = cfg.scenario();
+    let report = scenario.run().expect("the fig1 scenario is well-formed");
 
-    let record =
-        |mut solver: Box<dyn crate::algo::common::PageRankSolver>, mut rng: Rng| -> Vec<f64> {
-            Trajectory::record(&mut *solver, &x_star, cfg.steps, cfg.stride, &mut rng).errors
-        };
+    let mp_rep = report.get("mp").expect("mp ran").clone();
+    let ytq_rep = report.get("you-tempo-qiu").expect("[15] ran").clone();
+    let it_rep = report.get("ishii-tempo").expect("[6] ran").clone();
 
-    let mp = with_stride(
-        run_rounds("mp", cfg.rounds, &base, cfg.threads, |rng| {
-            record(Box::new(MatchingPursuit::new(&g, cfg.alpha)), rng)
-        }),
-        cfg.stride,
-    );
-    let ytq = with_stride(
-        run_rounds("ytq15", cfg.rounds, &base, cfg.threads, |rng| {
-            record(Box::new(YouTempoQiu::new(&g, cfg.alpha)), rng)
-        }),
-        cfg.stride,
-    );
-    let it = with_stride(
-        run_rounds("ishii_tempo6", cfg.rounds, &base, cfg.threads, |rng| {
-            record(Box::new(IshiiTempo::new(&g, cfg.alpha)), rng)
-        }),
-        cfg.stride,
-    );
+    let graph = scenario.graph.build(cfg.seed).expect("paper graph builds");
+    let predicted_mp_bound = crate::linalg::spectral::mp_contraction_rate(&graph, cfg.alpha);
 
-    // Fit rates on the decaying tail (skip the initial transient).
-    let skip = mp.mean.len() / 5;
-    let mp_rate = stats::decay_rate(&mp.mean[skip..]).powf(1.0 / cfg.stride as f64);
-    let ytq_rate = stats::decay_rate(&ytq.mean[skip..]).powf(1.0 / cfg.stride as f64);
-    let predicted_mp_bound = crate::linalg::spectral::mp_contraction_rate(&g, cfg.alpha);
-
-    let tail = mp.mean.len() * 3 / 4;
-    let it_var = stats::mean(&it.variance[tail..]);
-    let mp_var = stats::mean(&mp.variance[tail..]).max(f64::MIN_POSITIVE);
+    let tail = mp_rep.trajectory.mean.len() * 3 / 4;
+    let it_var = stats::mean(&it_rep.trajectory.variance[tail..]);
+    let mp_var = stats::mean(&mp_rep.trajectory.variance[tail..]).max(f64::MIN_POSITIVE);
 
     let verdict = Fig1Verdict {
-        mp_rate,
-        ytq_rate,
+        mp_rate: mp_rep.decay_rate,
+        ytq_rate: ytq_rep.decay_rate,
         predicted_mp_bound,
-        it_over_mp_final: it.final_mean() / mp.final_mean().max(f64::MIN_POSITIVE),
+        it_over_mp_final: it_rep.final_error / mp_rep.final_error.max(f64::MIN_POSITIVE),
         it_over_mp_variance: it_var / mp_var,
     };
 
-    Fig1Result { config: cfg.clone(), mp, ytq, it, verdict }
+    Fig1Result {
+        config: cfg.clone(),
+        mp: mp_rep.trajectory,
+        ytq: ytq_rep.trajectory,
+        it: it_rep.trajectory,
+        verdict,
+    }
 }
 
 impl Fig1Result {
@@ -240,7 +237,7 @@ mod tests {
         let res = run(&cfg);
         let csv = res.to_csv();
         assert!(csv.lines().count() > 5);
-        assert!(csv.starts_with("t,mp_mean,mp_var,ytq15_mean"));
+        assert!(csv.starts_with("t,mp_mean,mp_var,you-tempo-qiu_mean"));
         let txt = res.render();
         assert!(txt.contains("Fig. 1"));
         assert!(txt.contains("MP per-step rate"));
@@ -261,5 +258,14 @@ mod tests {
         let b = run(&cfg);
         assert_eq!(a.mp.mean, b.mp.mean);
         assert_eq!(a.it.variance, b.it.variance);
+    }
+
+    #[test]
+    fn config_scenario_json_round_trips() {
+        let cfg = Fig1Config { n: 25, rounds: 7, ..Default::default() };
+        let scenario = cfg.scenario();
+        let text = scenario.to_json().render();
+        let back = Scenario::from_json_str(&text).expect("round trips");
+        assert_eq!(back, scenario);
     }
 }

@@ -5,7 +5,7 @@
 //! the mean.
 
 use crate::algo::size_estimation::SizeEstimator;
-use crate::graph::generators;
+use crate::engine::GraphSpec;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -51,9 +51,14 @@ pub struct Fig2Result {
     pub final_size_rel_err: f64,
 }
 
-/// Run the Figure-2 experiment.
+/// Run the Figure-2 experiment. The graph comes from the engine's
+/// [`GraphSpec`] so Fig. 2 names the same workload substrate as every
+/// scenario; the size estimator itself is not a PageRank solver and
+/// keeps its own recording loop.
 pub fn run(cfg: &Fig2Config) -> Fig2Result {
-    let g = generators::er_threshold(cfg.n, cfg.threshold, cfg.seed);
+    let g = GraphSpec::ErThreshold { n: cfg.n, threshold: cfg.threshold }
+        .build(cfg.seed)
+        .expect("paper graph builds");
     let base = Rng::seeded(cfg.seed ^ 0xF162);
 
     let avg = with_stride(

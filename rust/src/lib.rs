@@ -27,6 +27,12 @@
 //! * [`coordinator`] — the distributed runtime: page agents holding the
 //!   paper's two scalars per page, activation samplers (uniform /
 //!   exponential clocks / residual-weighted), message protocol, metrics.
+//! * [`engine`] — the declarative experiment API: [`engine::SolverSpec`]
+//!   (a string registry over every solver variant with one uniform
+//!   factory), [`engine::GraphSpec`], and [`engine::Scenario`] — graph +
+//!   solvers + experiment shape as one JSON-round-trippable value whose
+//!   `run()` yields trajectories, decay rates and communication totals.
+//!   Every harness, bench, example and the CLI build on it.
 //! * [`network`] — deterministic discrete-event message network with
 //!   latency models and congestion accounting (the simulated substrate —
 //!   see DESIGN.md §6).
@@ -35,26 +41,42 @@
 //! * [`harness`] — experiment drivers that regenerate the paper's
 //!   Figure 1 and Figure 2 plus the ablation studies, with CSV/ASCII
 //!   reporting and a micro-bench harness.
-//! * [`util`] — deterministic RNG, statistics, CLI parsing.
+//! * [`util`] — deterministic RNG, statistics, CLI parsing, JSON, and
+//!   the offline `anyhow`-style error shim.
 //!
 //! ## Quickstart
 //!
-//! ```no_run
-//! use pagerank_mp::graph::generators::er_threshold;
-//! use pagerank_mp::algo::mp::MatchingPursuit;
-//! use pagerank_mp::algo::PageRankSolver;
-//! use pagerank_mp::util::rng::Rng;
+//! Every algorithm, graph family and experiment shape is reachable
+//! through one declarative entry point, [`engine::Scenario`]:
 //!
-//! let graph = er_threshold(100, 0.5, 42);
-//! let mut rng = Rng::seeded(7);
-//! let mut mp = MatchingPursuit::new(&graph, 0.85);
-//! for _ in 0..5_000 { mp.step(&mut rng); }
-//! let x = mp.estimate();
-//! println!("top page: {:?}", x.iter().cloned().fold(f64::MIN, f64::max));
+//! ```no_run
+//! use pagerank_mp::engine::{GraphSpec, Scenario, SolverSpec};
+//!
+//! // The paper's §III experiment: N=100 ER-threshold graph, Algorithm 1
+//! // against two in-link baselines, 100 averaged rounds.
+//! let scenario = Scenario::new("fig1", GraphSpec::ErThreshold { n: 100, threshold: 0.5 })
+//!     .with_solvers(vec![SolverSpec::Mp, SolverSpec::YouTempoQiu, SolverSpec::IshiiTempo])
+//!     .with_rounds(100);
+//! let report = scenario.run().expect("scenario runs");
+//! println!("{}", report.render());
+//! for r in &report.reports {
+//!     println!("{:<16} rate/step {:.6}  final {:.3e}", r.spec.key(), r.decay_rate, r.final_error);
+//! }
 //! ```
+//!
+//! Scenarios are data: they round-trip through JSON
+//! ([`engine::Scenario::to_json`] / [`engine::Scenario::from_json_str`]),
+//! so new experiments ship as config —
+//! `pagerank-mp run-scenario examples/fig1_scenario.json`. Solvers come
+//! from a string registry (`SolverSpec::parse("mp")`,
+//! `"coordinator:async:clocks:const:0.1"`, …; see
+//! `pagerank-mp list-solvers`). For direct, low-level access to a single
+//! solver, `SolverSpec::Mp.build(&graph, 0.85, seed)` returns a boxed
+//! [`algo::PageRankSolver`] ready to `step`.
 
 pub mod algo;
 pub mod coordinator;
+pub mod engine;
 pub mod graph;
 pub mod harness;
 pub mod linalg;

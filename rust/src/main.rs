@@ -3,6 +3,10 @@
 //!
 //! Subcommands:
 //!
+//! * `run-scenario` — run a declarative experiment from a JSON file
+//!                  (the engine API: any graphs × any solvers), dumping
+//!                  the machine-readable `BENCH_scenario.json`.
+//! * `list-solvers` — print the engine's solver registry.
 //! * `rank`       — compute PageRank for a graph (generated or from file)
 //!                  with a chosen engine (sparse matrix-form, distributed
 //!                  coordinator, dense PJRT, power iteration).
@@ -19,6 +23,7 @@ use pagerank_mp::algo::power_iteration::JacobiPowerIteration;
 use pagerank_mp::algo::size_estimation::SizeEstimator;
 use pagerank_mp::algo::stopping::RankingCertifier;
 use pagerank_mp::coordinator::{Coordinator, CoordinatorConfig, Mode, SamplerKind};
+use pagerank_mp::engine::{Scenario, SolverSpec};
 use pagerank_mp::graph::{generators, io as graph_io, DanglingPolicy, Graph};
 use pagerank_mp::harness::{ablation, fig1, fig2, report};
 use pagerank_mp::linalg::solve::exact_pagerank;
@@ -36,6 +41,60 @@ fn load_graph(args: &Args) -> Result<Graph, String> {
     generators::by_name(&name, n, seed).ok_or_else(|| {
         format!("unknown graph family {name:?} (try: paper, er-sparse, ba, ws, sbm, ring, star, complete)")
     })
+}
+
+fn cmd_run_scenario(args: &Args) -> Result<(), String> {
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.get("file").map(str::to_string))
+        .ok_or("usage: pagerank-mp run-scenario <scenario.json> [--bench-out FILE] [--csv FILE] [--threads T]")?;
+    let text = std::fs::read_to_string(&path).map_err(|e| format!("reading {path}: {e}"))?;
+    let mut scenario = Scenario::from_json_str(&text).map_err(|e| format!("{path}: {e}"))?;
+    if let Some(t) = args.get("threads") {
+        scenario.threads = t.parse().map_err(|_| format!("bad --threads {t:?}"))?;
+    }
+    eprintln!(
+        "running scenario {:?}: graph {}, solvers [{}], {} steps x {} rounds …",
+        scenario.name,
+        scenario.graph.key(),
+        scenario.solvers.iter().map(|s| s.key()).collect::<Vec<_>>().join(", "),
+        scenario.steps,
+        scenario.rounds,
+    );
+    let result = scenario.run()?;
+    println!("{}", result.render());
+
+    println!("decay-rate ordering (fastest first):");
+    for (i, (key, rate)) in result.rate_ordering().into_iter().enumerate() {
+        println!("  #{} {:<40} rate/step {:.6}", i + 1, key, rate);
+    }
+
+    let bench_out = args.get_str("bench-out", "BENCH_scenario.json");
+    result
+        .write_bench_json(std::path::Path::new(&bench_out))
+        .map_err(|e| format!("writing {bench_out}: {e}"))?;
+    println!("\nwrote {bench_out}");
+    if let Some(csv) = args.get("csv") {
+        let csv = csv.to_string();
+        report::write_file(std::path::Path::new(&csv), &result.to_csv())
+            .map_err(|e| format!("writing {csv}: {e}"))?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_list_solvers(_args: &Args) -> Result<(), String> {
+    println!("solver registry (engine::SolverSpec) — use these names in scenario JSON:\n");
+    for spec in SolverSpec::all() {
+        println!("  {:<44} {}", spec.key(), spec.describe());
+    }
+    println!(
+        "\nparameterized forms: parallel-mp:<batch>, \
+         coordinator:<sequential|async>:<uniform|clocks|weighted>:<zero|const:L|uniform:lo:hi|exp:mean>"
+    );
+    Ok(())
 }
 
 fn cmd_rank(args: &Args) -> Result<(), String> {
@@ -318,6 +377,10 @@ pagerank-mp — fully distributed PageRank via randomized Matching Pursuit
 USAGE: pagerank-mp <command> [options]
 
 COMMANDS:
+  run-scenario run a declarative experiment from JSON
+              <scenario.json> [--bench-out BENCH_scenario.json --csv out.csv --threads T]
+              (see examples/fig1_scenario.json; solver names via `list-solvers`)
+  list-solvers print the engine's solver registry
   rank        compute PageRank        --graph paper|ba|ws|.. --n 100 --engine sparse|coordinator|dense|power
               [--alpha 0.85 --steps 100000 --seed S --top 10 --latency zero|const:L --mode sequential|async --sampler uniform|clocks|weighted]
   fig1        reproduce Figure 1      [--n 100 --rounds 100 --steps 60000 --stride 500 --out reports/fig1.csv]
@@ -331,6 +394,8 @@ COMMANDS:
 fn main() {
     let args = Args::from_env();
     let result = match args.command.as_deref() {
+        Some("run-scenario") => cmd_run_scenario(&args),
+        Some("list-solvers") => cmd_list_solvers(&args),
         Some("rank") => cmd_rank(&args),
         Some("fig1") => cmd_fig1(&args),
         Some("fig2") => cmd_fig2(&args),

@@ -7,9 +7,11 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 use super::artifacts::{ArtifactKind, ArtifactSpec, Manifest};
+use super::xla_compat as xla;
 
 /// Compiled-executable cache over one PJRT client.
 pub struct Engine {

@@ -13,13 +13,15 @@
 //! (Fully device-resident state is blocked by the 0.5.1 PJRT client
 //! returning results as a single tuple buffer — see the §Perf log.)
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 use crate::graph::Graph;
 
 use super::artifacts::{ArtifactKind, ArtifactSpec};
 use super::client::{to_vec_f32, Engine};
 use super::pad::{pad_vec, unpad_vec, PaddedProblem};
+use super::xla_compat as xla;
 
 /// State shared by the runners for one (graph, alpha) binding.
 struct Binding {

@@ -22,6 +22,16 @@ pub mod client;
 pub mod executor;
 pub mod pad;
 
+// The PJRT bindings: the real `xla` crate when the `pjrt` feature is on
+// (add it as a path dependency pointing at the rust_pallas toolchain's
+// crate), otherwise the offline stub that errors on first use so the rest
+// of the system builds and tests without the toolchain.
+#[cfg(feature = "pjrt")]
+pub(crate) use xla as xla_compat;
+#[cfg(not(feature = "pjrt"))]
+#[path = "xla_stub.rs"]
+pub(crate) mod xla_compat;
+
 pub use artifacts::{ArtifactKind, ArtifactSpec, Manifest};
 pub use client::Engine;
 pub use executor::{JacobiRunner, MpChunkRunner, ResidualNormRunner, SizeChunkRunner};

@@ -1,0 +1,135 @@
+//! Minimal `anyhow`-compatible error type (the build environment is fully
+//! offline — see the [`crate::util`] module docs). Supports exactly the
+//! subset the runtime layer uses: the [`crate::anyhow!`] constructor
+//! macro, [`Context::context`] / [`Context::with_context`] wrapping, a
+//! defaulted [`Result`] alias, and `{:#}` full-chain rendering.
+
+use std::fmt;
+
+/// A context-chained error. `chain[0]` is the outermost (most recent)
+/// context; the last entry is the root cause.
+#[derive(Debug, Clone)]
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` expands to).
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { chain: vec![msg.into()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn wrap(mut self, outer: impl Into<String>) -> Error {
+        self.chain.insert(0, outer.into());
+        self
+    }
+
+    /// The cause chain, outermost context first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — full chain, anyhow-style.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+/// Result alias defaulting the error type, as `anyhow::Result` does.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!`-style construction from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Context-wrapping on fallible values, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).wrap(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "no such file"))
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad value {} at {}", 7, "x");
+        assert_eq!(e.to_string(), "bad value 7 at x");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_renders() {
+        let e = io_err().context("loading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: no such file");
+        assert_eq!(e.chain().len(), 2);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        use std::cell::Cell;
+        let calls = Cell::new(0u32);
+        let base: std::result::Result<u32, Error> = Ok(3);
+        let ok = base.with_context(|| {
+            calls.set(calls.get() + 1);
+            "ctx"
+        });
+        assert_eq!(ok.expect("ok"), 3);
+        assert_eq!(calls.get(), 0, "context closure must not run on Ok");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+        assert_eq!(Some(5).context("unused").expect("some"), 5);
+    }
+
+    #[test]
+    fn nested_contexts_render_outermost_first() {
+        let e = io_err()
+            .context("inner step")
+            .context("outer step")
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer step: inner step: no such file");
+    }
+}

@@ -1,0 +1,51 @@
+//! Race every execution backend on one scenario axis: the sequential
+//! matrix form, the multi-threaded sharded runtime at two shard counts
+//! (and both shard maps), and the dense backend — the comparison the
+//! related work (Ishii–Tempo; Das Sarma et al.) frames as "convergence
+//! per unit of parallel work".
+//!
+//! Run with: `cargo run --release --example backend_race`
+
+use pagerank_mp::engine::{GraphSpec, Scenario, SolverSpec};
+
+fn main() {
+    let scenario = Scenario::new(
+        "backend-race",
+        GraphSpec::ErThreshold { n: 60, threshold: 0.5 },
+    )
+    .with_solvers(vec![
+        SolverSpec::Mp,
+        SolverSpec::parse("sharded:2:8").expect("registry"),
+        SolverSpec::parse("sharded:4:8").expect("registry"),
+        SolverSpec::parse("sharded:4:8:block").expect("registry"),
+        SolverSpec::Dense,
+    ])
+    .with_steps(4_000)
+    .with_stride(400)
+    .with_rounds(5)
+    .with_seed(7);
+
+    eprintln!(
+        "racing [{}] on {} …",
+        scenario.solvers.iter().map(|s| s.key()).collect::<Vec<_>>().join(", "),
+        scenario.graph.key()
+    );
+    let report = scenario.run().expect("scenario runs");
+    println!("{}", report.render());
+
+    println!("decay-rate ordering (fastest first):");
+    for (i, (key, rate)) in report.rate_ordering().into_iter().enumerate() {
+        println!("  #{} {:<24} rate/step {rate:.6}", i + 1, key);
+    }
+
+    println!("\nparallel-work accounting:");
+    for r in &report.reports {
+        println!(
+            "  {:<24} activated {:<8} conflicts dropped {:<6} wall {:>6.0} ms",
+            r.spec.key(),
+            r.total_stats.activated,
+            r.conflicts,
+            r.wall.as_secs_f64() * 1e3
+        );
+    }
+}

@@ -64,19 +64,35 @@ fn main() {
     }
 
     println!("\n=== sharded multi-threaded runtime (real parallelism) ===");
-    for shards in [1usize, 2, 4, 8] {
-        let g = generators::erdos_renyi(20_000, 8.0 / 20_000.0, 8);
-        let mut rt = pagerank_mp::coordinator::ShardedRuntime::new(g, 0.85, shards);
+    // Built through the registry — the bench measures exactly what a
+    // `Scenario` listing "sharded:<shards>:64:<map>" would run; the
+    // mod-vs-block pair quantifies the shard-map hotspot on a hub-heavy
+    // (preferential-attachment) graph.
+    for (shards, map) in [(1usize, "mod"), (2, "mod"), (4, "mod"), (8, "mod"), (8, "block")] {
+        let g = generators::barabasi_albert(20_000, 8, 8);
+        let spec = SolverSpec::parse(&format!("sharded:{shards}:64:{map}")).expect("registry spec");
+        let mut rt = spec.build(&g, 0.85, 8);
         let mut rng = Rng::seeded(9);
         let batches = 64;
-        let budget = 64;
         b.bench(
-            &format!("sharded {shards} shards, {batches}x{budget} batch"),
-            Some((batches * budget) as f64),
+            &format!("sharded:{shards}:64:{map}, {batches} super-steps"),
+            Some((batches * 64) as f64),
             || {
-                std::hint::black_box(rt.run(batches, budget, &mut rng));
+                for _ in 0..batches {
+                    std::hint::black_box(rt.step(&mut rng));
+                }
             },
         );
+    }
+
+    println!("\n=== dense backend: sweeps/s (O(N²) per sweep) ===");
+    for n in [100usize, 400] {
+        let g = generators::er_threshold(n, 0.5, 10);
+        let mut dense = SolverSpec::Dense.build(&g, 0.85, 10);
+        let mut rng = Rng::seeded(10);
+        b.bench(&format!("dense sweep N={n}"), Some((n * n) as f64), || {
+            std::hint::black_box(dense.step(&mut rng));
+        });
     }
 
     println!("\n=== parallel extension: batched activations ===");

@@ -12,6 +12,7 @@
 //! | [`monte_carlo`] | \[9\] random-walk frequency estimator | out-links | 1/√R Monte-Carlo |
 //! | [`greedy_mp`] | original (non-randomized) best-atom MP | global argmax | exponential, not distributed |
 //! | [`parallel_mp`] | §IV-1 conflict-free parallel activation | out-links | exponential, batched |
+//! | [`dense_engine`] | dense-matrix Jacobi (host twin of the PJRT backend) | global, O(N²) | exponential (rate α), centralized |
 //! | [`dynamic`] | §IV-2 dynamic-network warm restart | out-links | local repair + resume |
 //! | [`stopping`] | §IV-4 ranking certification | `‖r_t‖` + σ(B) | — |
 //!
@@ -21,6 +22,7 @@
 //! same update rule.
 
 pub mod common;
+pub mod dense_engine;
 pub mod dynamic;
 pub mod greedy_mp;
 pub mod ishii_tempo;

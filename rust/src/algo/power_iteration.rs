@@ -37,14 +37,19 @@ impl<'g> JacobiPowerIteration<'g> {
 
     /// One full sweep; O(m). `A x` is computed by out-link scatter
     /// (`y_i += x_j / N_j` for each edge j→i) so only out-adjacency is
-    /// used, matching how a crawler stores the graph.
+    /// used, matching how a crawler stores the graph. Dangling pages take
+    /// the implicit self-loop repair (`A_jj = 1`), the shared convention
+    /// of [`crate::linalg::sparse::BColumns`].
     pub fn sweep(&mut self) {
         let g = self.graph;
         let n = g.n();
         self.scratch.iter_mut().for_each(|v| *v = 0.0);
         for j in 0..n {
             let deg = g.out_degree(j);
-            debug_assert!(deg > 0);
+            if deg == 0 {
+                self.scratch[j] += self.x[j];
+                continue;
+            }
             let w = self.x[j] / deg as f64;
             for &i in g.out(j) {
                 self.scratch[i as usize] += w;
@@ -131,7 +136,13 @@ impl<'g> GooglePowerIteration<'g> {
         let n = g.n();
         self.scratch.iter_mut().for_each(|v| *v = 0.0);
         for j in 0..n {
-            let w = self.x[j] / g.out_degree(j) as f64;
+            let deg = g.out_degree(j);
+            if deg == 0 {
+                // dangling: implicit self-loop (shared BColumns convention)
+                self.scratch[j] += self.x[j];
+                continue;
+            }
+            let w = self.x[j] / deg as f64;
             for &i in g.out(j) {
                 self.scratch[i as usize] += w;
             }
@@ -233,6 +244,19 @@ mod tests {
         let st = pi.step(&mut rng);
         assert_eq!(st.reads, g.m());
         assert_eq!(st.activated, 20);
+    }
+
+    #[test]
+    fn jacobi_handles_dangling_pages() {
+        // sink at page 2: sweep must stay finite and converge to the
+        // self-loop-repaired exact reference.
+        let g = crate::graph::Graph::from_sorted_edges(3, &[(0, 1), (0, 2), (1, 0)]);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut pi = JacobiPowerIteration::new(&g, 0.85);
+        pi.run_to_tolerance(1e-13, 2000);
+        let est = pi.estimate();
+        assert!(est.iter().all(|v| v.is_finite()));
+        assert!(vector::dist_inf(&est, &x_star) < 1e-9);
     }
 
     #[test]

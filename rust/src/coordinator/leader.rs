@@ -70,6 +70,15 @@ pub struct Coordinator<'g> {
 
 impl<'g> Coordinator<'g> {
     pub fn new(graph: &'g Graph, cfg: CoordinatorConfig) -> Self {
+        // The §II-D message protocol counts one reply per out-neighbour;
+        // a zero-out-degree activation would never complete. The sharded
+        // and matrix-form backends repair dangling pages on the fly
+        // (implicit self-loop in BColumns); the simulated coordinator
+        // still requires an explicitly repaired graph.
+        assert!(
+            graph.dangling().is_empty(),
+            "coordinator requires a repaired graph (no dangling pages)"
+        );
         let base = Rng::seeded(cfg.seed);
         let mut sampler_rng = base.fork(1);
         let latency_rng = base.fork(2);

@@ -15,7 +15,16 @@
 //!
 //! Topology: one leader (sampling + packing + dispatch) and `W` persistent
 //! workers connected by mpsc channels; each activation is routed to the
-//! worker owning page `k` (`k % W` — the shard map).
+//! worker owning page `k` via a pluggable [`ShardMap`] (modulo or block
+//! ownership). Routing never changes results — batch supports are
+//! disjoint — only load balance: modulo spreads consecutive ids,
+//! block keeps cache-friendly contiguous ranges but concentrates the
+//! hub-heavy low-id prefix of generator graphs on shard 0.
+//!
+//! Dangling pages are repaired on the fly by the shared implicit
+//! self-loop guard of [`BColumns`] (no `α/0` poisoning — see that
+//! module's docs); [`activate`] consults the column constants instead of
+//! dividing by the raw out-degree.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -64,23 +73,83 @@ impl SharedState {
 
 /// One §II-D activation against the shared state. Only touches
 /// `{k} ∪ out(k)` — the packing invariant makes this race-free.
+///
+/// Degree geometry comes from [`BColumns`] (never a raw `α/N_k`
+/// division): a dangling `k` has `inv_out_degree = 1` and an implicit
+/// self-loop, so sink pages update finitely instead of poisoning the
+/// residuals with NaN/inf. The arithmetic and evaluation order mirror
+/// [`BColumns::col_dot`]/[`BColumns::sub_scaled_col`] exactly, which is
+/// what makes a 1-shard batch-1 run bit-identical to the matrix form.
 fn activate(graph: &Graph, cols: &BColumns, state: &SharedState, k: usize, alpha: f64) {
     // numerator: r_k - (α/N_k) Σ_{j∈out(k)} r_j
     let mut acc = 0.0;
     for &j in graph.out(k) {
         acc += state.load_r(j as usize);
     }
-    let deg = graph.out_degree(k) as f64;
-    let num = state.load_r(k) - alpha / deg * acc;
+    if cols.is_dangling(k) {
+        // implicit self-loop: the only "out-neighbour" is k itself
+        acc += state.load_r(k);
+    }
+    let inv_deg = cols.inv_out_degree(k);
+    let num = state.load_r(k) - alpha * inv_deg * acc;
     let coef = num / cols.norm_sq(k);
     state.store_x(k, state.load_x(k) + coef);
     // residual update: out-neighbours += coef·α/N_k, diagonal -= coef
-    let w = coef * alpha / deg;
+    let w = coef * alpha * inv_deg;
     for &j in graph.out(k) {
         let j = j as usize;
         state.store_r(j, state.load_r(j) + w);
     }
+    if cols.is_dangling(k) {
+        state.store_r(k, state.load_r(k) + w);
+    }
     state.store_r(k, state.load_r(k) - coef);
+}
+
+/// Page → shard ownership policy.
+///
+/// `Modulo` (`k % W`) interleaves consecutive ids across shards — the
+/// right default for generator graphs whose hub-heavy pages cluster in a
+/// low-id range (BA preferential attachment, the star family), where
+/// block ownership would hand one shard all the expensive activations.
+/// `Block` assigns contiguous ranges of `⌈n/W⌉` pages — cache-friendly
+/// contiguous state per worker when degrees are uniform. Ownership only
+/// routes work (batch supports are disjoint), so both maps produce
+/// identical estimates; only the per-shard load differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardMap {
+    /// `owner(k) = k % W`.
+    Modulo,
+    /// `owner(k) = k / ⌈n/W⌉` (contiguous ranges).
+    Block,
+}
+
+impl ShardMap {
+    /// Registry string used by `SolverSpec` (`"mod"` / `"block"`).
+    pub fn key(&self) -> &'static str {
+        match self {
+            ShardMap::Modulo => "mod",
+            ShardMap::Block => "block",
+        }
+    }
+
+    /// Parse the registry string.
+    pub fn parse(s: &str) -> Option<ShardMap> {
+        match s {
+            "mod" | "modulo" => Some(ShardMap::Modulo),
+            "block" => Some(ShardMap::Block),
+            _ => None,
+        }
+    }
+
+    /// Which of `shards` workers owns page `k` of an `n`-page graph.
+    #[inline]
+    pub fn owner(&self, k: usize, n: usize, shards: usize) -> usize {
+        match self {
+            ShardMap::Modulo => k % shards,
+            ShardMap::Block => k / n.div_ceil(shards),
+        }
+    }
 }
 
 enum Job {
@@ -98,6 +167,7 @@ pub struct ShardedRuntime {
     to_workers: Vec<Sender<Job>>,
     done_rx: Receiver<usize>,
     shards: usize,
+    map: ShardMap,
     /// Scratch: generation-tagged marks for conflict-free packing.
     mark: Vec<u64>,
     generation: u64,
@@ -105,11 +175,27 @@ pub struct ShardedRuntime {
     activations: u64,
     /// Candidates dropped due to conflicts (batch packing).
     conflicts: u64,
+    /// Residual reads issued by applied activations (§II-D accounting:
+    /// one per out-neighbour — a dangling page's implicit self-read is
+    /// local and free, matching the matrix-form counters).
+    logical_reads: u64,
+    /// Residual writes issued by applied activations (same count).
+    logical_writes: u64,
 }
 
 impl ShardedRuntime {
-    /// Spin up `shards` worker threads for the graph.
+    /// Spin up `shards` worker threads with the default modulo shard map.
     pub fn new(graph: Graph, alpha: f64, shards: usize) -> ShardedRuntime {
+        ShardedRuntime::new_with_map(graph, alpha, shards, ShardMap::Modulo)
+    }
+
+    /// Spin up `shards` worker threads with an explicit [`ShardMap`].
+    pub fn new_with_map(
+        graph: Graph,
+        alpha: f64,
+        shards: usize,
+        map: ShardMap,
+    ) -> ShardedRuntime {
         assert!(shards >= 1);
         let n = graph.n();
         let graph = Arc::new(graph);
@@ -151,8 +237,11 @@ impl ShardedRuntime {
             to_workers,
             done_rx,
             shards,
+            map,
             activations: 0,
             conflicts: 0,
+            logical_reads: 0,
+            logical_writes: 0,
         }
     }
 
@@ -187,6 +276,7 @@ impl ShardedRuntime {
     /// Run `batches` super-steps of up to `batch_budget` candidate
     /// activations each. Returns activations applied.
     pub fn run(&mut self, batches: usize, batch_budget: usize, rng: &mut Rng) -> u64 {
+        let n = self.graph.n();
         let mut applied = 0u64;
         for _ in 0..batches {
             let batch = self.pack(batch_budget, rng);
@@ -196,7 +286,10 @@ impl ShardedRuntime {
             // Route each activation to the owner shard.
             let mut per_shard: Vec<Vec<u32>> = vec![Vec::new(); self.shards];
             for k in batch {
-                per_shard[k as usize % self.shards].push(k);
+                let deg = self.graph.out_degree(k as usize) as u64;
+                self.logical_reads += deg;
+                self.logical_writes += deg;
+                per_shard[self.map.owner(k as usize, n, self.shards)].push(k);
             }
             let mut outstanding = 0usize;
             for (w, pages) in per_shard.into_iter().enumerate() {
@@ -217,12 +310,29 @@ impl ShardedRuntime {
         applied
     }
 
+    /// Number of pages.
+    pub fn n(&self) -> usize {
+        self.graph.n()
+    }
+
     pub fn estimate(&self) -> Vec<f64> {
         (0..self.graph.n()).map(|i| self.state.load_x(i)).collect()
     }
 
     pub fn residual(&self) -> Vec<f64> {
         (0..self.graph.n()).map(|i| self.state.load_r(i)).collect()
+    }
+
+    /// Allocation-free `‖x̂ - x*‖²` against a reference (quiescent
+    /// between `run` calls — the barrier publishes every write).
+    pub fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        assert_eq!(x_star.len(), self.graph.n());
+        let mut s = 0.0;
+        for (i, &xs) in x_star.iter().enumerate() {
+            let d = self.state.load_x(i) - xs;
+            s += d * d;
+        }
+        s
     }
 
     pub fn activations(&self) -> u64 {
@@ -233,8 +343,22 @@ impl ShardedRuntime {
         self.conflicts
     }
 
+    /// §II-D residual reads issued by applied activations so far.
+    pub fn logical_reads(&self) -> u64 {
+        self.logical_reads
+    }
+
+    /// §II-D residual writes issued by applied activations so far.
+    pub fn logical_writes(&self) -> u64 {
+        self.logical_writes
+    }
+
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    pub fn shard_map(&self) -> ShardMap {
+        self.map
     }
 }
 
@@ -329,6 +453,68 @@ mod tests {
             mp.step_at(k);
         }
         assert!(vector::dist_inf(&rt.estimate(), &crate::algo::common::PageRankSolver::estimate(&mp)) < 1e-13);
+    }
+
+    #[test]
+    fn block_and_modulo_maps_give_identical_results() {
+        // Ownership only routes; disjoint supports make the math
+        // placement-invariant.
+        let g = generators::erdos_renyi(300, 0.01, 2006);
+        let run = |map: ShardMap| {
+            let mut rt = ShardedRuntime::new_with_map(g.clone(), 0.85, 4, map);
+            let mut rng = Rng::seeded(21);
+            rt.run(150, 8, &mut rng);
+            (rt.estimate(), rt.residual(), rt.activations())
+        };
+        let (xm, rm, am) = run(ShardMap::Modulo);
+        let (xb, rb, ab) = run(ShardMap::Block);
+        assert_eq!(am, ab, "same rng stream must pack the same batches");
+        assert!(vector::dist_inf(&xm, &xb) < 1e-13);
+        assert!(vector::dist_inf(&rm, &rb) < 1e-13);
+    }
+
+    #[test]
+    fn shard_map_owners_in_range_and_round_trip() {
+        for (n, shards) in [(5usize, 8usize), (100, 4), (101, 4), (1, 1)] {
+            for map in [ShardMap::Modulo, ShardMap::Block] {
+                for k in 0..n {
+                    let w = map.owner(k, n, shards);
+                    assert!(w < shards, "{map:?} owner({k}, {n}, {shards}) = {w}");
+                }
+                assert_eq!(ShardMap::parse(map.key()), Some(map));
+            }
+        }
+        assert_eq!(ShardMap::parse("diagonal"), None);
+    }
+
+    #[test]
+    fn dangling_node_runs_to_convergence_with_finite_residuals() {
+        // Regression: activate() used to compute α/out_degree with no
+        // guard, so any sink page produced NaN/inf residuals.
+        let g = generators::chain(30); // page 29 is a genuine sink
+        assert_eq!(g.dangling(), vec![29]);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut rt = ShardedRuntime::new(g, 0.85, 3);
+        let mut rng = Rng::seeded(23);
+        rt.run(40_000, 4, &mut rng);
+        for (i, r) in rt.residual().into_iter().enumerate() {
+            assert!(r.is_finite(), "residual at page {i} poisoned: {r}");
+        }
+        let err = vector::dist_inf(&rt.estimate(), &x_star);
+        assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
+    fn read_write_counters_match_matrix_form_accounting() {
+        let g = generators::er_threshold(50, 0.5, 2007);
+        let mut rt = ShardedRuntime::new(g.clone(), 0.85, 2);
+        let mut rng = Rng::seeded(25);
+        rt.run(100, 4, &mut rng);
+        assert!(rt.activations() > 0);
+        // §II-D: exactly N_k reads and N_k writes per activation; the
+        // sums must agree and be plausible for the dense paper graph.
+        assert_eq!(rt.logical_reads(), rt.logical_writes());
+        assert!(rt.logical_reads() >= rt.activations(), "dense pages read >= 1 each");
     }
 
     #[test]

@@ -19,7 +19,9 @@ pub enum GraphSpec {
     /// The paper's §III model: N×N iid U\[0,1\] entries thresholded.
     ErThreshold { n: usize, threshold: f64 },
     /// Any family registered in [`generators::by_name`] (`"ba"`, `"ws"`,
-    /// `"er-sparse"`, `"sbm"`, `"ring"`, `"star"`, `"complete"`, …).
+    /// `"er-sparse"`, `"sbm"`, `"ring"`, `"star"`, `"complete"`, and
+    /// `"chain"` — the one family that deliberately keeps a dangling
+    /// tail page, for exercising the solvers' implicit self-loop guard).
     Family { family: String, n: usize },
     /// A plain-text edge list loaded from disk (dangling pages repaired
     /// with the LinkAll policy, as the CLI does).
@@ -193,6 +195,14 @@ mod tests {
     fn unknown_family_rejected() {
         assert!(GraphSpec::parse("banana:10").is_err());
         assert!(GraphSpec::parse("").is_err());
+    }
+
+    #[test]
+    fn chain_family_builds_with_its_dangling_tail() {
+        let spec = GraphSpec::parse("chain:9").expect("parses");
+        assert_eq!(spec, GraphSpec::Family { family: "chain".into(), n: 9 });
+        let g = spec.build(1).expect("builds");
+        assert_eq!(g.dangling(), vec![8], "the sink must survive spec building");
     }
 
     #[test]

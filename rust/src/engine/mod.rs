@@ -8,10 +8,12 @@
 //! data so that shape is config, not harness code:
 //!
 //! * [`SolverSpec`] — the solver registry: every variant (Algorithm 1,
-//!   its §IV extensions, all five published baselines, and the full
-//!   distributed coordinator) behind one `build(&graph, alpha, seed)`
-//!   factory and a compact string form (`"mp"`, `"parallel-mp:16"`,
-//!   `"coordinator:async:clocks:const:0.1"`).
+//!   its §IV extensions, all five published baselines, the full
+//!   distributed coordinator, the multi-threaded sharded runtime and the
+//!   dense backend) behind one `build(&graph, alpha, seed)` factory and a
+//!   compact string form (`"mp"`, `"parallel-mp:16"`,
+//!   `"coordinator:async:clocks:const:0.1"`, `"sharded:4:16:block"`,
+//!   `"dense"`).
 //! * [`GraphSpec`] — workload graphs: the paper's ER-threshold model,
 //!   every synthetic family, or edge-list files.
 //! * [`Scenario`] — graph + solvers + experiment shape (steps / stride /
@@ -23,17 +25,23 @@
 //!   renderable as a terminal plot, CSV, or the machine-readable
 //!   `BENCH_scenario.json` perf artifact.
 //!
-//! The Figure-1 harness, the ablations, the CLI `run-scenario`
-//! subcommand, the benches and the examples are all thin layers over
-//! these four types; new workloads (sharded backends, webgraph files,
-//! parameter sweeps) are new `Scenario` values.
+//! * [`Sweep`] — one scenario expanded over a grid (`n`, `alpha`,
+//!   `shards`, `batch`, `latency`, …); per-cell reports merge into the
+//!   single `BENCH_sweep.json` perf trajectory (CLI: `sweep`).
+//!
+//! The Figure-1 harness, the ablations, the CLI `run-scenario` and
+//! `sweep` subcommands, the benches and the examples are all thin layers
+//! over these types; new workloads (webgraph files, new grids) are new
+//! `Scenario`/`Sweep` values.
 
 pub mod graph_spec;
 pub mod report;
 pub mod scenario;
 pub mod solver_spec;
+pub mod sweep;
 
 pub use graph_spec::GraphSpec;
 pub use report::{ScenarioReport, SolverReport};
 pub use scenario::{ReferencePolicy, Scenario};
-pub use solver_spec::{CoordinatorSolver, DynamicSolver, SolverSpec};
+pub use solver_spec::{CoordinatorSolver, DynamicSolver, ShardedSolver, SolverSpec};
+pub use sweep::{Sweep, SweepCell, SweepReport};

@@ -10,6 +10,7 @@ use crate::algo::common::StepStats;
 use crate::harness::experiment::AveragedTrajectory;
 use crate::harness::{plot, report as harness_report};
 use crate::util::json::Json;
+use crate::util::stats;
 
 use super::scenario::Scenario;
 use super::solver_spec::SolverSpec;
@@ -22,13 +23,53 @@ pub struct SolverReport {
     pub trajectory: AveragedTrajectory,
     /// Communication totals summed over all rounds.
     pub total_stats: StepStats,
-    /// Fitted per-activation decay rate of the mean error (0 when the
-    /// trajectory converged below the noise floor too fast to fit).
+    /// Fitted per-activation decay rate of the mean error (see
+    /// [`fitted_decay`]): `NaN` when the trajectory has no fittable
+    /// samples — it diverged to non-finite error or sits exactly at
+    /// zero. NaN sorts last in [`ScenarioReport::rate_ordering`] and
+    /// renders as `null` in the bench JSON.
     pub decay_rate: f64,
     /// Final mean error `(1/N)‖x - x*‖²`.
     pub final_error: f64,
+    /// Candidates dropped by conflict-free packing, summed over rounds —
+    /// nonzero only for the sharded backend (its effective-parallelism
+    /// cost; 0 for every other solver).
+    pub conflicts: u64,
     /// Wall-clock time for all rounds of this solver.
     pub wall: Duration,
+}
+
+/// Fit a per-activation decay rate on the tail of an averaged
+/// trajectory, cutting both the initial transient and the
+/// floating-point noise floor (a converged trajectory flattens near
+/// ~1e-30 and would bias the fit toward 1).
+///
+/// NaN-safe by construction (the fit itself is the shared
+/// [`stats::decay_rate_above`]): non-finite and zero samples never
+/// reach `ln`, and any trajectory with non-finite samples — a diverged
+/// solver — yields `f64::NAN` outright, never a rate that would rank it
+/// "fastest". For fully-finite trajectories whose tail converged below
+/// the floor too fast to leave two fittable points (the dense backend
+/// at small N), the transient from t=0 is fitted instead — that is
+/// where a fast solver's rate lives. Callers sort NaN last and
+/// serialize it as `null`.
+pub fn fitted_decay(mean: &[f64], stride: usize) -> f64 {
+    assert!(stride > 0);
+    if !mean.iter().all(|v| v.is_finite()) {
+        return f64::NAN; // diverged: a finite prefix must not rank it
+    }
+    let tail_fit = fit_above_floor(&mean[mean.len() / 5..], stride);
+    if !tail_fit.is_nan() {
+        return tail_fit;
+    }
+    // Converged-too-fast fallback: fit the transient from t=0.
+    fit_above_floor(mean, stride)
+}
+
+fn fit_above_floor(samples: &[f64], stride: usize) -> f64 {
+    const NOISE_FLOOR: f64 = 1e-26;
+    // NaN.powf(_) stays NaN, so degenerate fits propagate unchanged.
+    stats::decay_rate_above(samples, NOISE_FLOOR).powf(1.0 / stride as f64)
 }
 
 /// Everything a [`Scenario::run`] produces.
@@ -45,14 +86,17 @@ impl ScenarioReport {
     }
 
     /// Solver keys ordered by fitted decay rate, fastest (smallest rate)
-    /// first — the Fig.-1 ordering check.
+    /// first — the Fig.-1 ordering check. `NaN` rates (diverged or
+    /// zero-error trajectories, see [`fitted_decay`]) sort last instead
+    /// of panicking, so one diverged solver cannot spoil the ranking.
     pub fn rate_ordering(&self) -> Vec<(String, f64)> {
         let mut rates: Vec<(String, f64)> = self
             .reports
             .iter()
             .map(|r| (r.spec.key(), r.decay_rate))
             .collect();
-        rates.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("rates are finite"));
+        // total_cmp orders every NaN after +inf, i.e. last.
+        rates.sort_by(|a, b| a.1.total_cmp(&b.1));
         rates
     }
 
@@ -86,15 +130,30 @@ impl ScenarioReport {
                 vec![
                     r.spec.key(),
                     format!("{:.3e}", r.final_error),
-                    format!("{:.6}", r.decay_rate),
+                    if r.decay_rate.is_nan() {
+                        "n/a".to_string()
+                    } else {
+                        format!("{:.6}", r.decay_rate)
+                    },
                     r.total_stats.reads.to_string(),
                     r.total_stats.writes.to_string(),
+                    r.total_stats.activated.to_string(),
+                    r.conflicts.to_string(),
                     format!("{:.0}", r.wall.as_secs_f64() * 1e3),
                 ]
             })
             .collect();
         let table = harness_report::table(
-            &["solver", "final (1/N)|x-x*|²", "rate/step", "reads", "writes", "wall ms"],
+            &[
+                "solver",
+                "final (1/N)|x-x*|²",
+                "rate/step",
+                "reads",
+                "writes",
+                "activated",
+                "conflicts",
+                "wall ms",
+            ],
             &rows,
         );
         format!("{plot}\n{table}")
@@ -107,42 +166,51 @@ impl ScenarioReport {
         harness_report::trajectories_csv(&trajectories)
     }
 
+    /// The per-solver summary objects shared by `BENCH_scenario.json`
+    /// and the merged `BENCH_sweep.json` cells.
+    pub fn solver_summaries_json(&self) -> Json {
+        Json::Array(
+            self.reports
+                .iter()
+                .map(|r| {
+                    let mut s = BTreeMap::new();
+                    s.insert("name".to_string(), Json::String(r.spec.key()));
+                    s.insert("final_error".to_string(), Json::Number(r.final_error));
+                    // NaN renders as null (JSON has no NaN).
+                    s.insert("decay_rate".to_string(), Json::Number(r.decay_rate));
+                    s.insert(
+                        "reads".to_string(),
+                        Json::Number(r.total_stats.reads as f64),
+                    );
+                    s.insert(
+                        "writes".to_string(),
+                        Json::Number(r.total_stats.writes as f64),
+                    );
+                    s.insert(
+                        "activated".to_string(),
+                        Json::Number(r.total_stats.activated as f64),
+                    );
+                    s.insert(
+                        "conflicts".to_string(),
+                        Json::Number(r.conflicts as f64),
+                    );
+                    s.insert(
+                        "wall_ms".to_string(),
+                        Json::Number(r.wall.as_secs_f64() * 1e3),
+                    );
+                    Json::Object(s)
+                })
+                .collect(),
+        )
+    }
+
     /// Machine-readable summary: scenario config plus per-solver final
-    /// error, decay rate, communication totals and wall time.
+    /// error, decay rate, communication totals, conflict drops and wall
+    /// time.
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("scenario".to_string(), self.scenario.to_json());
-        m.insert(
-            "solvers".to_string(),
-            Json::Array(
-                self.reports
-                    .iter()
-                    .map(|r| {
-                        let mut s = BTreeMap::new();
-                        s.insert("name".to_string(), Json::String(r.spec.key()));
-                        s.insert("final_error".to_string(), Json::Number(r.final_error));
-                        s.insert("decay_rate".to_string(), Json::Number(r.decay_rate));
-                        s.insert(
-                            "reads".to_string(),
-                            Json::Number(r.total_stats.reads as f64),
-                        );
-                        s.insert(
-                            "writes".to_string(),
-                            Json::Number(r.total_stats.writes as f64),
-                        );
-                        s.insert(
-                            "activated".to_string(),
-                            Json::Number(r.total_stats.activated as f64),
-                        );
-                        s.insert(
-                            "wall_ms".to_string(),
-                            Json::Number(r.wall.as_secs_f64() * 1e3),
-                        );
-                        Json::Object(s)
-                    })
-                    .collect(),
-            ),
-        );
+        m.insert("solvers".to_string(), self.solver_summaries_json());
         Json::Object(m)
     }
 
@@ -203,7 +271,62 @@ mod tests {
         assert_eq!(solvers[0].get("name").and_then(Json::as_str), Some("mp"));
         assert!(solvers[0].get("final_error").and_then(Json::as_f64).is_some());
         assert!(solvers[0].get("reads").and_then(Json::as_usize).expect("reads") > 0);
+        assert!(solvers[0].get("conflicts").is_some(), "conflicts column missing");
         assert!(parsed.get("scenario").and_then(|s| s.get("graph")).is_some());
+    }
+
+    #[test]
+    fn fitted_decay_recovers_geometric_rate_and_skips_zeros() {
+        let geometric: Vec<f64> = (0..20).map(|i| 0.5f64.powi(i)).collect();
+        assert!((fitted_decay(&geometric, 1) - 0.5).abs() < 1e-9);
+        // A zero sample inside the tail (exactly-converged entry) is
+        // skipped, not fed to ln().
+        let mut with_zero = geometric.clone();
+        with_zero[9] = 0.0;
+        assert!((fitted_decay(&with_zero, 1) - 0.5).abs() < 1e-6);
+        // Stride accounting: stride-th root of the per-record rate.
+        let per_step = fitted_decay(&geometric, 10);
+        assert!((per_step - 0.5f64.powf(0.1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fitted_decay_is_nan_safe_on_degenerate_trajectories() {
+        // All-zero (instant convergence) and all-non-finite (divergence)
+        // must both yield NaN — never 0, which would rank as "fastest".
+        assert!(fitted_decay(&[0.0; 6], 10).is_nan());
+        assert!(fitted_decay(&[f64::INFINITY; 6], 1).is_nan());
+        assert!(fitted_decay(&[f64::NAN; 6], 1).is_nan());
+        // Diverged mid-run: the healthy-looking finite prefix must NOT
+        // ride the transient fallback to a finite rate — a solver that
+        // blew up can never outrank one that converged.
+        let mut diverged = vec![1.0, 0.5, 0.25];
+        diverged.extend(std::iter::repeat(f64::INFINITY).take(12));
+        assert!(fitted_decay(&diverged, 1).is_nan());
+    }
+
+    #[test]
+    fn fitted_decay_fast_convergence_falls_back_to_transient() {
+        // A solver that crosses the noise floor within two records (the
+        // dense backend at small N): the tail holds < 2 fittable points,
+        // but the transient still encodes the rate — 1e-10 per record.
+        let traj = [1.0, 1e-10, 1e-30, 0.0, 0.0];
+        let rate = fitted_decay(&traj, 1);
+        assert!(
+            (rate.log10() + 10.0).abs() < 1e-6,
+            "transient fallback should see rate 1e-10, got {rate}"
+        );
+    }
+
+    #[test]
+    fn rate_ordering_puts_nan_last() {
+        let mut rep = small_report();
+        rep.reports[0].decay_rate = f64::NAN; // pretend mp diverged
+        let rates = rep.rate_ordering();
+        assert_eq!(rates.len(), 2);
+        assert!(rates[0].1.is_finite(), "finite rate must lead");
+        assert!(rates[1].1.is_nan(), "NaN must sort last");
+        // And the render degrades gracefully instead of panicking.
+        assert!(rep.render().contains("n/a"));
     }
 
     #[test]

@@ -17,7 +17,11 @@
 //! sequential zero-latency [`SolverSpec::Coordinator`] replays the
 //! *identical* activation sequence as the matrix-form [`SolverSpec::Mp`]
 //! — the distributed runtime and the matrix form are interchangeable
-//! inside one scenario (bit-for-bit; tested in `tests/engine.rs`).
+//! inside one scenario (bit-for-bit; tested in `tests/engine.rs`). The
+//! multi-threaded sharded backend draws its candidates from the same
+//! stream, so `sharded:1:1` is the same equivalence anchor executed on
+//! a worker thread, and its results are shard-count- and
+//! shard-map-invariant (disjoint batch supports commute).
 
 use std::collections::BTreeMap;
 
@@ -29,11 +33,10 @@ use crate::harness::experiment::{run_rounds_stats, with_stride};
 use crate::linalg::solve::exact_pagerank;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::util::stats;
 
 use super::graph_spec::GraphSpec;
-use super::report::{ScenarioReport, SolverReport};
-use super::solver_spec::{CoordinatorSolver, SolverSpec};
+use super::report::{fitted_decay, ScenarioReport, SolverReport};
+use super::solver_spec::{CoordinatorSolver, ShardedSolver, SolverSpec};
 
 /// How the reference solution `x*` is obtained.
 #[derive(Debug, Clone, PartialEq)]
@@ -157,6 +160,26 @@ impl Scenario {
             ));
         }
         let graph = self.graph.build(self.seed)?;
+        // Dangling pages are fine for the out-link backends (implicit
+        // self-loop guard), but the in-link baselines, the random-walk
+        // estimator and the simulated coordinator would divide by raw
+        // zero out-degrees or walk into the sink — refuse up front with
+        // a usable error instead of poisoning results or panicking.
+        let dangling = graph.dangling();
+        if !dangling.is_empty() {
+            if let Some(bad) = self.solvers.iter().find(|s| !s.supports_dangling()) {
+                return Err(format!(
+                    "scenario {:?}: graph has {} dangling page(s) (e.g. page {}) but solver \
+                     {} requires a repaired graph — repair it (DanglingPolicy) or keep to \
+                     the guarded backends (mp, greedy-mp, parallel-mp, power, google-power, \
+                     dynamic-mp, sharded, dense)",
+                    self.name,
+                    dangling.len(),
+                    dangling[0],
+                    bad.key()
+                ));
+            }
+        }
         let x_star = self.reference_solution(&graph);
         let threads = if self.threads == 0 {
             std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
@@ -171,6 +194,10 @@ impl Scenario {
         let mut reports = Vec::with_capacity(self.solvers.len());
         for spec in &self.solvers {
             let t0 = std::time::Instant::now();
+            // Conflict drops (sharded backend only) summed across rounds;
+            // an atomic because rounds may run on worker threads. u64
+            // addition commutes, so the total stays thread-invariant.
+            let conflicts = std::sync::atomic::AtomicU64::new(0);
             let (avg, total_stats) =
                 run_rounds_stats(&spec.key(), self.rounds, &base, threads, |round_rng| {
                     let mut seed_rng = round_rng;
@@ -190,6 +217,28 @@ impl Scenario {
                             )
                             .expect("spec is a coordinator");
                             coord.record(&x_star, self.steps, self.stride)
+                        }
+                        // Typed build so the runtime's conflict counter
+                        // survives into the report (the boxed trait
+                        // object would hide it). One step = one
+                        // super-step of up to `batch` candidates.
+                        SolverSpec::Sharded { shards, batch, map } => {
+                            let mut sh = ShardedSolver::new(
+                                &graph, self.alpha, *shards, *batch, *map,
+                            );
+                            let mut step_rng = Rng::seeded(solver_seed).fork(1);
+                            let tr = Trajectory::record(
+                                &mut sh,
+                                &x_star,
+                                self.steps,
+                                self.stride,
+                                &mut step_rng,
+                            );
+                            conflicts.fetch_add(
+                                sh.conflicts(),
+                                std::sync::atomic::Ordering::Relaxed,
+                            );
+                            (tr.errors, tr.total_stats)
                         }
                         _ => {
                             let mut solver = spec.build(&graph, self.alpha, solver_seed);
@@ -214,6 +263,7 @@ impl Scenario {
                 total_stats,
                 decay_rate,
                 final_error,
+                conflicts: conflicts.load(std::sync::atomic::Ordering::Relaxed),
                 wall: t0.elapsed(),
             });
         }
@@ -325,22 +375,6 @@ impl Scenario {
     }
 }
 
-/// Fit a per-activation decay rate on the tail of an averaged
-/// trajectory, cutting both the initial transient and the floating-point
-/// noise floor (a converged trajectory flattens near ~1e-30 and would
-/// bias the fit toward 1). Returns 0.0 when the trajectory converged too
-/// fast to fit.
-fn fitted_decay(mean: &[f64], stride: usize) -> f64 {
-    const NOISE_FLOOR: f64 = 1e-26;
-    let tail = &mean[mean.len() / 5..];
-    // decay_rate_above panics below 2 fittable points; guard here.
-    let fittable = tail.iter().position(|&v| v <= NOISE_FLOOR).unwrap_or(tail.len());
-    if fittable < 2 {
-        return 0.0;
-    }
-    stats::decay_rate_above(tail, NOISE_FLOOR).powf(1.0 / stride as f64)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -407,10 +441,40 @@ mod tests {
     }
 
     #[test]
-    fn fitted_decay_handles_instant_convergence() {
-        assert_eq!(fitted_decay(&[0.0, 0.0, 0.0, 0.0, 0.0], 10), 0.0);
-        let geometric: Vec<f64> = (0..20).map(|i| 0.5f64.powi(i)).collect();
-        let rate = fitted_decay(&geometric, 1);
-        assert!((rate - 0.5).abs() < 1e-9);
+    fn dangling_graph_with_unguarded_solver_is_refused_up_front() {
+        let scenario = Scenario::new(
+            "dangling-vs-baseline",
+            GraphSpec::Family { family: "chain".into(), n: 10 },
+        )
+        .with_solvers(vec![SolverSpec::Mp, SolverSpec::MonteCarlo])
+        .with_steps(100)
+        .with_stride(50)
+        .with_rounds(1)
+        .with_threads(1);
+        let err = scenario.run().expect_err("must refuse, not panic/poison");
+        assert!(err.contains("monte-carlo"), "error should name the solver: {err}");
+        assert!(err.contains("dangling"), "error should explain why: {err}");
+    }
+
+    #[test]
+    fn sharded_scenario_records_conflicts_and_converges() {
+        // The dense paper graph forces packing conflicts; the scenario
+        // must surface them in the report and still converge.
+        let report = Scenario::paper("sharded-tiny", 20)
+            .with_solvers(vec![SolverSpec::parse("sharded:2:8").expect("registry")])
+            .with_steps(400)
+            .with_stride(100)
+            .with_rounds(2)
+            .with_threads(1)
+            .with_seed(6)
+            .run()
+            .expect("runs");
+        let r = &report.reports[0];
+        assert!(r.final_error < r.trajectory.mean[0], "no progress");
+        assert!(r.conflicts > 0, "dense graphs must drop candidates");
+        assert!(r.total_stats.activated > 0);
+        // Non-sharded solvers report zero conflicts.
+        let mp = tiny().run().expect("runs");
+        assert_eq!(mp.reports[0].conflicts, 0);
     }
 }

@@ -9,18 +9,22 @@
 //! [`super::Scenario`], so adding a workload to an experiment means
 //! editing config, not harness code.
 //!
-//! Two adapters close the gap between the trait and the non-conforming
-//! runtimes: [`DynamicSolver`] (owns its mutable graph) and
+//! Three adapters close the gap between the trait and the non-conforming
+//! runtimes: [`DynamicSolver`] (owns its mutable graph),
 //! [`CoordinatorSolver`] (drives the full message-passing coordinator one
 //! activation per `step`, so the distributed runtime slots into Fig.-1
-//! style trajectory recording unchanged).
+//! style trajectory recording unchanged) and [`ShardedSolver`] (one
+//! `step` = one conflict-free super-step on the multi-threaded
+//! [`ShardedRuntime`], surfacing its conflict and read/write counters).
 
 use crate::algo::common::{PageRankSolver, StepStats};
 use crate::algo::{
-    dynamic, greedy_mp, ishii_tempo, lei_chen, monte_carlo, mp, parallel_mp, power_iteration,
-    you_tempo_qiu,
+    dense_engine, dynamic, greedy_mp, ishii_tempo, lei_chen, monte_carlo, mp, parallel_mp,
+    power_iteration, you_tempo_qiu,
 };
-use crate::coordinator::{Coordinator, CoordinatorConfig, Mode, RunReport, SamplerKind};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, Mode, RunReport, SamplerKind, ShardMap, ShardedRuntime,
+};
 use crate::graph::Graph;
 use crate::network::LatencyModel;
 use crate::util::rng::Rng;
@@ -56,6 +60,19 @@ pub enum SolverSpec {
         sampler: SamplerKind,
         latency: LatencyModel,
     },
+    /// The real multi-threaded deployment:
+    /// [`crate::coordinator::ShardedRuntime`] with `shards` OS workers,
+    /// conflict-free super-steps of up to `batch` candidates, and a
+    /// pluggable page→shard ownership map.
+    Sharded {
+        shards: usize,
+        batch: usize,
+        map: ShardMap,
+    },
+    /// The dense backend: Jacobi sweeps on a materialized hyperlink
+    /// matrix ([`dense_engine::DenseJacobi`], the host twin of the PJRT
+    /// `jacobi_chunk` artifact).
+    Dense,
 }
 
 fn mode_key(mode: Mode) -> &'static str {
@@ -114,6 +131,10 @@ impl SolverSpec {
                 sampler_key(*sampler),
                 latency_key(*latency)
             ),
+            SolverSpec::Sharded { shards, batch, map } => {
+                format!("sharded:{shards}:{batch}:{}", map.key())
+            }
+            SolverSpec::Dense => "dense".to_string(),
         }
     }
 
@@ -133,6 +154,37 @@ impl SolverSpec {
             SolverSpec::Coordinator { .. } => {
                 "distributed runtime: page agents + samplers + simulated network"
             }
+            SolverSpec::Sharded { .. } => {
+                "sharded runtime: OS worker threads, conflict-free super-steps"
+            }
+            SolverSpec::Dense => "dense backend: Jacobi sweeps on a materialized A (O(N²))",
+        }
+    }
+
+    /// Whether the backend repairs dangling (zero out-degree) pages on
+    /// the fly via the shared implicit self-loop guard of
+    /// [`crate::linalg::sparse::BColumns`] /
+    /// [`crate::linalg::dense::DenseMatrix::hyperlink`]. The in-link
+    /// baselines divide by raw out-degrees of in-neighbours, the
+    /// random-walk estimator steps along out-links, and the simulated
+    /// coordinator counts one reply per out-neighbour — those still
+    /// require an explicitly repaired graph, and
+    /// [`super::Scenario::run`] refuses the combination up front.
+    pub fn supports_dangling(&self) -> bool {
+        match self {
+            SolverSpec::Mp
+            | SolverSpec::GreedyMp
+            | SolverSpec::ParallelMp { .. }
+            | SolverSpec::PowerIteration
+            | SolverSpec::GooglePower
+            | SolverSpec::DynamicMp
+            | SolverSpec::Sharded { .. }
+            | SolverSpec::Dense => true,
+            SolverSpec::IshiiTempo
+            | SolverSpec::YouTempoQiu
+            | SolverSpec::LeiChen
+            | SolverSpec::MonteCarlo
+            | SolverSpec::Coordinator { .. } => false,
         }
     }
 
@@ -159,6 +211,32 @@ impl SolverSpec {
                 Ok(SolverSpec::ParallelMp { batch })
             }
             "power" | "power-iteration" | "jacobi" => Ok(SolverSpec::PowerIteration),
+            "dense" => Ok(SolverSpec::Dense),
+            "sharded" | "sh" => {
+                let shards = match parts.get(1) {
+                    None => 4,
+                    Some(v) => v.parse().map_err(|_| arity_err("sharded:<shards>[:<batch>[:<mod|block>]]"))?,
+                };
+                if shards == 0 {
+                    return Err(arity_err("a shard count >= 1"));
+                }
+                let batch = match parts.get(2) {
+                    None => 8,
+                    Some(v) => v.parse().map_err(|_| arity_err("sharded:<shards>:<batch>[:<mod|block>]"))?,
+                };
+                if batch == 0 {
+                    return Err(arity_err("a batch budget >= 1"));
+                }
+                let map = match parts.get(3) {
+                    None => ShardMap::Modulo,
+                    Some(m) => ShardMap::parse(m)
+                        .ok_or_else(|| format!("bad shard map {m:?} (mod|block)"))?,
+                };
+                if parts.len() > 4 {
+                    return Err(arity_err("sharded:<shards>[:<batch>[:<mod|block>]]"));
+                }
+                Ok(SolverSpec::Sharded { shards, batch, map })
+            }
             "google-power" | "google" => Ok(SolverSpec::GooglePower),
             "ishii-tempo" | "it" => Ok(SolverSpec::IshiiTempo),
             "you-tempo-qiu" | "ytq" => Ok(SolverSpec::YouTempoQiu),
@@ -216,6 +294,8 @@ impl SolverSpec {
             SolverSpec::MonteCarlo,
             SolverSpec::DynamicMp,
             SolverSpec::sequential_coordinator(),
+            SolverSpec::Sharded { shards: 2, batch: 8, map: ShardMap::Modulo },
+            SolverSpec::Dense,
         ]
     }
 
@@ -265,7 +345,94 @@ impl SolverSpec {
             SolverSpec::Coordinator { mode, sampler, latency } => Box::new(
                 CoordinatorSolver::build(graph, alpha, seed, *mode, *sampler, *latency),
             ),
+            SolverSpec::Sharded { shards, batch, map } => {
+                Box::new(ShardedSolver::new(graph, alpha, *shards, *batch, *map))
+            }
+            SolverSpec::Dense => Box::new(dense_engine::DenseJacobi::new(graph, alpha)),
         }
+    }
+}
+
+/// [`PageRankSolver`] adapter over the multi-threaded
+/// [`ShardedRuntime`]: one trait `step` = one conflict-free super-step of
+/// up to `batch` candidate activations, executed on the runtime's worker
+/// threads. The candidate stream comes from the `rng` handed to `step`,
+/// so inside a [`super::Scenario`] a `shards=1, batch=1` run replays the
+/// *identical* activation sequence as [`SolverSpec::Mp`] (packing one
+/// candidate never conflicts) — the backend-equivalence anchor tested in
+/// `tests/engine.rs`.
+///
+/// The runtime owns a clone of the graph (workers need `'static` shared
+/// state), so the adapter is self-contained; worker threads are joined on
+/// drop.
+pub struct ShardedSolver {
+    rt: ShardedRuntime,
+    batch: usize,
+    prev_reads: u64,
+    prev_writes: u64,
+    prev_activations: u64,
+}
+
+impl ShardedSolver {
+    pub fn new(
+        graph: &Graph,
+        alpha: f64,
+        shards: usize,
+        batch: usize,
+        map: ShardMap,
+    ) -> ShardedSolver {
+        assert!(batch >= 1);
+        ShardedSolver {
+            rt: ShardedRuntime::new_with_map(graph.clone(), alpha, shards, map),
+            batch,
+            prev_reads: 0,
+            prev_writes: 0,
+            prev_activations: 0,
+        }
+    }
+
+    /// Candidates dropped by conflict-free packing so far — the
+    /// "conflicts-dropped" column of the scenario report.
+    pub fn conflicts(&self) -> u64 {
+        self.rt.conflicts()
+    }
+
+    /// Typed access to the wrapped runtime.
+    pub fn runtime(&self) -> &ShardedRuntime {
+        &self.rt
+    }
+}
+
+impl PageRankSolver for ShardedSolver {
+    fn n(&self) -> usize {
+        self.rt.n()
+    }
+
+    fn step(&mut self, rng: &mut Rng) -> StepStats {
+        self.rt.run(1, self.batch, rng);
+        let (reads, writes, activations) =
+            (self.rt.logical_reads(), self.rt.logical_writes(), self.rt.activations());
+        let stats = StepStats {
+            reads: (reads - self.prev_reads) as usize,
+            writes: (writes - self.prev_writes) as usize,
+            activated: (activations - self.prev_activations) as usize,
+        };
+        self.prev_reads = reads;
+        self.prev_writes = writes;
+        self.prev_activations = activations;
+        stats
+    }
+
+    fn estimate(&self) -> Vec<f64> {
+        self.rt.estimate()
+    }
+
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        self.rt.error_sq_vs(x_star)
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded runtime (worker threads)"
     }
 }
 
@@ -505,6 +672,72 @@ mod tests {
         assert!(SolverSpec::parse("coordinator:teleport").is_err());
         assert!(SolverSpec::parse("coordinator:async:psychic").is_err());
         assert!(SolverSpec::parse("coordinator:async:clocks:warp:9").is_err());
+        assert!(SolverSpec::parse("sharded:0").is_err());
+        assert!(SolverSpec::parse("sharded:2:0").is_err());
+        assert!(SolverSpec::parse("sharded:2:8:diagonal").is_err());
+        assert!(SolverSpec::parse("sharded:2:8:mod:extra").is_err());
+    }
+
+    #[test]
+    fn sharded_and_dense_specs_parse_with_defaults() {
+        assert_eq!(SolverSpec::parse("dense").expect("ok"), SolverSpec::Dense);
+        assert_eq!(
+            SolverSpec::parse("sharded").expect("ok"),
+            SolverSpec::Sharded { shards: 4, batch: 8, map: ShardMap::Modulo }
+        );
+        assert_eq!(
+            SolverSpec::parse("sharded:2").expect("ok"),
+            SolverSpec::Sharded { shards: 2, batch: 8, map: ShardMap::Modulo }
+        );
+        assert_eq!(
+            SolverSpec::parse("sh:8:32:block").expect("ok"),
+            SolverSpec::Sharded { shards: 8, batch: 32, map: ShardMap::Block }
+        );
+    }
+
+    #[test]
+    fn dangling_supported_backends_stay_finite_on_a_sink_graph() {
+        // supports_dangling must tell the truth: every backend that
+        // claims the guard steps a sink-tailed chain without poisoning
+        // its estimate.
+        let g = generators::chain(10);
+        for spec in SolverSpec::all() {
+            if !spec.supports_dangling() {
+                continue;
+            }
+            let mut solver = spec.build(&g, 0.85, 3);
+            let mut rng = Rng::seeded(4);
+            for _ in 0..50 {
+                solver.step(&mut rng);
+            }
+            assert!(
+                solver.estimate().iter().all(|v| v.is_finite()),
+                "{} poisoned by the sink page",
+                spec.key()
+            );
+        }
+        // And at least the in-link baselines must be flagged unsupported.
+        assert!(!SolverSpec::MonteCarlo.supports_dangling());
+        assert!(!SolverSpec::YouTempoQiu.supports_dangling());
+        assert!(!SolverSpec::sequential_coordinator().supports_dangling());
+    }
+
+    #[test]
+    fn sharded_adapter_reports_batch_stats_and_conflicts() {
+        // Dense paper graph: batches conflict, so the adapter must count
+        // both applied activations and dropped candidates.
+        let g = generators::er_threshold(40, 0.5, 33);
+        let mut sh = ShardedSolver::new(&g, 0.85, 2, 16, ShardMap::Modulo);
+        let mut rng = Rng::seeded(34);
+        let mut activated = 0;
+        for _ in 0..50 {
+            let st = sh.step(&mut rng);
+            assert_eq!(st.reads, st.writes);
+            activated += st.activated;
+        }
+        assert!(activated > 0);
+        assert!(sh.conflicts() > 0, "dense graphs must drop candidates");
+        assert_eq!(sh.runtime().activations(), activated as u64);
     }
 
     #[test]

@@ -1,0 +1,524 @@
+//! Parameter sweeps: one scenario expanded over a grid, merged into one
+//! perf trajectory.
+//!
+//! A [`Sweep`] is a base [`Scenario`] plus named axes (`n`, `alpha`,
+//! `shards`, `batch`, `latency`, `steps`, `stride`, `rounds`, `seed`);
+//! [`Sweep::cells`] expands the cartesian product into fully-formed
+//! per-cell scenarios, and [`SweepReport`] merges the per-cell
+//! [`ScenarioReport`]s into a single machine-readable
+//! `BENCH_sweep.json` — the artifact the CI perf history accumulates.
+//!
+//! JSON form (see `examples/sweep_small.json`):
+//!
+//! ```json
+//! {
+//!   "name": "backend-grid",
+//!   "scenario": { "graph": "paper:30", "solvers": ["mp", "sharded:2:8"] },
+//!   "grid": { "n": [20, 30], "shards": [1, 2] }
+//! }
+//! ```
+//!
+//! Axes are applied to the *relevant* specs: `shards`/`batch` rewrite the
+//! sharded (and, for `batch`, parallel-mp) solver entries, `latency`
+//! rewrites coordinator entries, and naming an axis with no applicable
+//! solver is an error rather than a silent no-op. Axis order is
+//! alphabetical (stable), values keep their listed order, so cell
+//! expansion is deterministic.
+
+use std::collections::BTreeMap;
+
+use crate::network::LatencyModel;
+use crate::util::json::Json;
+
+use super::graph_spec::GraphSpec;
+use super::report::ScenarioReport;
+use super::scenario::Scenario;
+use super::solver_spec::SolverSpec;
+
+/// A declarative parameter sweep: base scenario × named grid axes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sweep {
+    pub name: String,
+    pub base: Scenario,
+    /// `(axis, values)` sorted by axis name; every value combination
+    /// becomes one cell.
+    pub axes: Vec<(String, Vec<Json>)>,
+}
+
+/// The grid axes [`Sweep`] understands.
+pub const SWEEP_AXES: &[&str] = &[
+    "alpha", "batch", "latency", "n", "rounds", "seed", "shards", "steps", "stride",
+];
+
+fn render_param(v: &Json) -> String {
+    match v.as_str() {
+        Some(s) => s.to_string(),
+        None => v.render(),
+    }
+}
+
+/// Apply one axis assignment to a scenario.
+fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), String> {
+    let want_usize = || {
+        value
+            .as_usize()
+            .ok_or_else(|| format!("axis {axis:?}: {} is not a non-negative integer", value.render()))
+    };
+    match axis {
+        "n" => {
+            let n = want_usize()?;
+            // Every generator family is total for n >= 2 except ws
+            // (whose k=4 lattice needs n > 4 — that one surfaces when
+            // the cell's graph builds); n < 2 would panic inside
+            // chain/star asserts instead of erroring.
+            if n < 2 {
+                return Err("axis \"n\": must be >= 2".into());
+            }
+            match &mut scenario.graph {
+                GraphSpec::ErThreshold { n: gn, .. } => *gn = n,
+                GraphSpec::Family { n: gn, .. } => *gn = n,
+                GraphSpec::File { .. } => {
+                    return Err("axis \"n\" cannot resize a file graph".into())
+                }
+            }
+        }
+        "alpha" => {
+            let alpha = value
+                .as_f64()
+                .ok_or_else(|| format!("axis \"alpha\": {} is not a number", value.render()))?;
+            if !(alpha > 0.0 && alpha < 1.0) {
+                return Err(format!("axis \"alpha\": {alpha} out of (0,1)"));
+            }
+            scenario.alpha = alpha;
+        }
+        "steps" => {
+            let v = want_usize()?;
+            if v == 0 {
+                return Err("axis \"steps\": must be >= 1".into());
+            }
+            scenario.steps = v;
+        }
+        "stride" => {
+            let v = want_usize()?;
+            if v == 0 {
+                return Err("axis \"stride\": must be >= 1".into());
+            }
+            scenario.stride = v;
+        }
+        "rounds" => {
+            let v = want_usize()?;
+            if v == 0 {
+                return Err("axis \"rounds\": must be >= 1".into());
+            }
+            scenario.rounds = v;
+        }
+        "seed" => {
+            scenario.seed = want_usize()? as u64;
+        }
+        "shards" => {
+            let shards = want_usize()?;
+            if shards == 0 {
+                return Err("axis \"shards\": must be >= 1".into());
+            }
+            let mut hit = false;
+            for s in &mut scenario.solvers {
+                if let SolverSpec::Sharded { shards: sh, .. } = s {
+                    *sh = shards;
+                    hit = true;
+                }
+            }
+            if !hit {
+                return Err(
+                    "axis \"shards\" needs a sharded solver in the scenario (e.g. \"sharded:2:8\")"
+                        .into(),
+                );
+            }
+        }
+        "batch" => {
+            let batch = want_usize()?;
+            if batch == 0 {
+                return Err("axis \"batch\": must be >= 1".into());
+            }
+            let mut hit = false;
+            for s in &mut scenario.solvers {
+                match s {
+                    SolverSpec::Sharded { batch: b, .. } => {
+                        *b = batch;
+                        hit = true;
+                    }
+                    SolverSpec::ParallelMp { batch: b } => {
+                        *b = batch;
+                        hit = true;
+                    }
+                    _ => {}
+                }
+            }
+            if !hit {
+                return Err(
+                    "axis \"batch\" needs a sharded or parallel-mp solver in the scenario".into(),
+                );
+            }
+        }
+        "latency" => {
+            let spec = value
+                .as_str()
+                .ok_or_else(|| format!("axis \"latency\": {} is not a string", value.render()))?;
+            let latency = LatencyModel::parse(spec).ok_or_else(|| {
+                format!("axis \"latency\": bad model {spec:?} (zero|const:L|uniform:lo:hi|exp:mean)")
+            })?;
+            let mut hit = false;
+            for s in &mut scenario.solvers {
+                if let SolverSpec::Coordinator { latency: l, .. } = s {
+                    *l = latency;
+                    hit = true;
+                }
+            }
+            if !hit {
+                return Err(
+                    "axis \"latency\" needs a coordinator solver in the scenario".into(),
+                );
+            }
+        }
+        other => {
+            return Err(format!(
+                "unknown sweep axis {other:?} — known axes: {}",
+                SWEEP_AXES.join(", ")
+            ))
+        }
+    }
+    Ok(())
+}
+
+impl Sweep {
+    /// Parse from the object form (`name`, `scenario`, `grid`). A bare
+    /// (non-array) grid value is treated as a one-value axis.
+    pub fn from_json(v: &Json) -> Result<Sweep, String> {
+        let base = Scenario::from_json(
+            v.get("scenario").ok_or("sweep needs a \"scenario\" object")?,
+        )?;
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or(&base.name)
+            .to_string();
+        let grid = match v.get("grid") {
+            Some(Json::Object(m)) => m.clone(),
+            Some(_) => return Err("\"grid\" must be an object of axis -> values".into()),
+            None => BTreeMap::new(),
+        };
+        let mut axes = Vec::with_capacity(grid.len());
+        for (axis, values) in grid {
+            let values: Vec<Json> = match values {
+                Json::Array(vs) => vs,
+                single => vec![single],
+            };
+            if values.is_empty() {
+                return Err(format!("axis {axis:?} has no values"));
+            }
+            axes.push((axis, values));
+        }
+        // BTreeMap iteration already sorted; keep the invariant explicit.
+        axes.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(Sweep { name, base, axes })
+    }
+
+    /// Parse from JSON text (the `sweep` CLI path).
+    pub fn from_json_str(text: &str) -> Result<Sweep, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        Sweep::from_json(&v)
+    }
+
+    /// Number of cells the grid expands to.
+    pub fn cell_count(&self) -> usize {
+        self.axes.iter().map(|(_, vs)| vs.len()).product()
+    }
+
+    /// Expand the grid: every cell as `(params, ready-to-run scenario)`.
+    /// Axis application is validated here, so errors surface before any
+    /// cell runs.
+    pub fn cells(&self) -> Result<Vec<(Vec<(String, Json)>, Scenario)>, String> {
+        let total = self.cell_count();
+        let mut cells = Vec::with_capacity(total);
+        // Mixed-radix counter over the axes (first axis slowest, so cells
+        // group by the alphabetically-first axis).
+        for idx in 0..total {
+            let mut rem = idx;
+            let mut radix = total;
+            let mut params = Vec::with_capacity(self.axes.len());
+            let mut scenario = self.base.clone();
+            for (axis, values) in &self.axes {
+                radix /= values.len();
+                let v = &values[rem / radix];
+                rem %= radix;
+                apply_axis(&mut scenario, axis, v)?;
+                params.push((axis.clone(), v.clone()));
+            }
+            let suffix: Vec<String> = params
+                .iter()
+                .map(|(k, v)| format!("{k}={}", render_param(v)))
+                .collect();
+            // Cells are named after the *sweep* (the base scenario is
+            // often an anonymous inline object defaulting to "scenario").
+            scenario.name = if suffix.is_empty() {
+                self.name.clone()
+            } else {
+                format!("{}[{}]", self.name, suffix.join(","))
+            };
+            cells.push((params, scenario));
+        }
+        Ok(cells)
+    }
+
+    /// Run every cell and merge the reports.
+    pub fn run(&self) -> Result<SweepReport, String> {
+        self.run_with_progress(|_, _, _| {})
+    }
+
+    /// Like [`Sweep::run`], reporting `(cell_index, total, cell_name)`
+    /// before each cell runs — the CLI's progress hook, kept here so
+    /// there is exactly one place that assembles a [`SweepReport`].
+    pub fn run_with_progress<F>(&self, mut progress: F) -> Result<SweepReport, String>
+    where
+        F: FnMut(usize, usize, &str),
+    {
+        let cells = self.cells()?;
+        let total = cells.len();
+        let mut done = Vec::with_capacity(total);
+        for (i, (params, scenario)) in cells.into_iter().enumerate() {
+            progress(i + 1, total, &scenario.name);
+            let report = scenario.run()?;
+            done.push(SweepCell { params, report });
+        }
+        Ok(SweepReport {
+            name: self.name.clone(),
+            base: self.base.clone(),
+            axes: self.axes.clone(),
+            cells: done,
+        })
+    }
+}
+
+/// One grid cell's outcome.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    /// The axis assignment that produced this cell, in axis order.
+    pub params: Vec<(String, Json)>,
+    pub report: ScenarioReport,
+}
+
+/// Everything a sweep produces — renderable as a summary table and
+/// serializable as the merged `BENCH_sweep.json` perf artifact.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub name: String,
+    pub base: Scenario,
+    pub axes: Vec<(String, Vec<Json>)>,
+    pub cells: Vec<SweepCell>,
+}
+
+impl SweepReport {
+    /// Summary table: one row per (cell, solver).
+    pub fn render(&self) -> String {
+        let mut rows: Vec<Vec<String>> = Vec::new();
+        for cell in &self.cells {
+            let params: Vec<String> = cell
+                .params
+                .iter()
+                .map(|(k, v)| format!("{k}={}", render_param(v)))
+                .collect();
+            let params = params.join(",");
+            for r in &cell.report.reports {
+                rows.push(vec![
+                    params.clone(),
+                    r.spec.key(),
+                    format!("{:.3e}", r.final_error),
+                    if r.decay_rate.is_nan() {
+                        "n/a".to_string()
+                    } else {
+                        format!("{:.6}", r.decay_rate)
+                    },
+                    r.conflicts.to_string(),
+                    format!("{:.0}", r.wall.as_secs_f64() * 1e3),
+                ]);
+            }
+        }
+        let table = crate::harness::report::table(
+            &["cell", "solver", "final (1/N)|x-x*|²", "rate/step", "conflicts", "wall ms"],
+            &rows,
+        );
+        format!(
+            "sweep {:?}: {} cells × {} solvers\n{table}",
+            self.name,
+            self.cells.len(),
+            self.base.solvers.len()
+        )
+    }
+
+    /// The merged perf trajectory: sweep config plus, per cell, the axis
+    /// assignment and the same per-solver summaries as
+    /// `BENCH_scenario.json`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("sweep".to_string(), Json::String(self.name.clone()));
+        m.insert("base".to_string(), self.base.to_json());
+        let mut grid = BTreeMap::new();
+        for (axis, values) in &self.axes {
+            grid.insert(axis.clone(), Json::Array(values.clone()));
+        }
+        m.insert("grid".to_string(), Json::Object(grid));
+        m.insert(
+            "cells".to_string(),
+            Json::Array(
+                self.cells
+                    .iter()
+                    .map(|cell| {
+                        let mut c = BTreeMap::new();
+                        let mut params = BTreeMap::new();
+                        for (k, v) in &cell.params {
+                            params.insert(k.clone(), v.clone());
+                        }
+                        c.insert("params".to_string(), Json::Object(params));
+                        c.insert(
+                            "name".to_string(),
+                            Json::String(cell.report.scenario.name.clone()),
+                        );
+                        c.insert(
+                            "solvers".to_string(),
+                            cell.report.solver_summaries_json(),
+                        );
+                        Json::Object(c)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Object(m)
+    }
+
+    /// Dump [`SweepReport::to_json`] to disk (`BENCH_sweep.json` at the
+    /// repo root by convention).
+    pub fn write_bench_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        crate::harness::report::write_file(path, &self.to_json().render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ShardMap;
+
+    fn base_json(grid: &str) -> String {
+        format!(
+            r#"{{
+              "name": "grid-test",
+              "scenario": {{
+                "graph": "paper:15",
+                "solvers": ["mp", "sharded:2:4"],
+                "steps": 200, "stride": 100, "rounds": 2, "threads": 1, "seed": 3
+              }},
+              "grid": {grid}
+            }}"#
+        )
+    }
+
+    #[test]
+    fn grid_expands_cartesian_product_in_axis_order() {
+        let sweep = Sweep::from_json_str(&base_json(r#"{"n": [10, 15], "shards": [1, 2]}"#))
+            .expect("parses");
+        assert_eq!(sweep.cell_count(), 4);
+        let cells = sweep.cells().expect("expands");
+        assert_eq!(cells.len(), 4);
+        // axes sorted: n before shards; first axis slowest.
+        let names: Vec<&str> = cells.iter().map(|(_, s)| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "grid-test[n=10,shards=1]",
+                "grid-test[n=10,shards=2]",
+                "grid-test[n=15,shards=1]",
+                "grid-test[n=15,shards=2]",
+            ]
+        );
+        // the assignment really lands in the scenario
+        let (_, last) = &cells[3];
+        assert_eq!(last.graph, GraphSpec::ErThreshold { n: 15, threshold: 0.5 });
+        assert!(last.solvers.iter().any(|s| matches!(
+            s,
+            SolverSpec::Sharded { shards: 2, batch: 4, map: ShardMap::Modulo }
+        )));
+    }
+
+    #[test]
+    fn scalar_axis_values_and_alpha_apply() {
+        let sweep = Sweep::from_json_str(&base_json(r#"{"alpha": 0.6}"#)).expect("parses");
+        let cells = sweep.cells().expect("expands");
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].1.alpha, 0.6);
+    }
+
+    #[test]
+    fn invalid_axes_rejected_before_running() {
+        for (grid, what) in [
+            (r#"{"banana": [1]}"#, "unknown axis"),
+            (r#"{"alpha": [1.5]}"#, "alpha out of range"),
+            (r#"{"n": [0]}"#, "n zero"),
+            (r#"{"n": [1]}"#, "n below the generator families' minimum"),
+            (r#"{"shards": []}"#, "empty axis"),
+            (r#"{"latency": ["const:0.1"]}"#, "latency without coordinator"),
+        ] {
+            let sweep = Sweep::from_json_str(&base_json(grid));
+            let failed = match sweep {
+                Err(_) => true,
+                Ok(s) => s.cells().is_err(),
+            };
+            assert!(failed, "{what}: grid {grid} should be rejected");
+        }
+    }
+
+    #[test]
+    fn shards_axis_requires_a_sharded_solver() {
+        let text = r#"{
+          "scenario": {"graph": "paper:10", "solvers": ["mp"]},
+          "grid": {"shards": [2]}
+        }"#;
+        let sweep = Sweep::from_json_str(text).expect("parses");
+        let err = sweep.cells().expect_err("must fail");
+        assert!(err.contains("sharded"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn run_merges_cells_into_valid_bench_json() {
+        let sweep = Sweep::from_json_str(&base_json(r#"{"n": [10, 12], "shards": [1, 2]}"#))
+            .expect("parses");
+        let report = sweep.run().expect("runs");
+        assert_eq!(report.cells.len(), 4);
+        let text = report.to_json().render();
+        let parsed = Json::parse(&text).expect("valid json");
+        let cells = parsed.get("cells").and_then(Json::as_array).expect("cells");
+        assert_eq!(cells.len(), 4);
+        for cell in cells {
+            let solvers = cell.get("solvers").and_then(Json::as_array).expect("solvers");
+            assert_eq!(solvers.len(), 2);
+            assert!(cell.get("params").and_then(|p| p.get("n")).is_some());
+            assert!(solvers[0].get("conflicts").is_some());
+        }
+        // The summary table mentions every cell once per solver.
+        let rendered = report.render();
+        assert!(rendered.contains("n=10,shards=2"));
+        assert!(rendered.contains("sharded:2:4:mod"));
+    }
+
+    #[test]
+    fn batch_axis_rewrites_sharded_and_parallel_mp() {
+        let text = r#"{
+          "scenario": {"graph": "paper:10", "solvers": ["parallel-mp:2", "sharded:2:2"]},
+          "grid": {"batch": [16]}
+        }"#;
+        let sweep = Sweep::from_json_str(text).expect("parses");
+        let cells = sweep.cells().expect("expands");
+        let solvers = &cells[0].1.solvers;
+        assert!(solvers.contains(&SolverSpec::ParallelMp { batch: 16 }));
+        assert!(solvers
+            .iter()
+            .any(|s| matches!(s, SolverSpec::Sharded { batch: 16, .. })));
+    }
+}

@@ -157,6 +157,17 @@ pub fn complete(n: usize) -> Graph {
     b.build().expect("complete cannot dangle")
 }
 
+/// Directed chain `0 → 1 → … → n-1` whose tail page keeps its **zero
+/// out-degree** — the one family that deliberately ships a dangling page
+/// (a crawl's sink page). Solvers repair it on the fly with the implicit
+/// self-loop guard of [`crate::linalg::sparse::BColumns`]; use this
+/// family to exercise that path end to end.
+pub fn chain(n: usize) -> Graph {
+    assert!(n >= 2);
+    let edges: Vec<(u32, u32)> = (0..n - 1).map(|i| (i as u32, i as u32 + 1)).collect();
+    Graph::from_sorted_edges(n, &edges)
+}
+
 /// Dispatch a generator by name — used by the CLI and the benches.
 /// `spec` examples: `er100` is not parsed here; pass name and params
 /// explicitly.
@@ -170,6 +181,7 @@ pub fn by_name(name: &str, n: usize, seed: u64) -> Option<Graph> {
         "ring" => Some(ring(n)),
         "star" => Some(star(n)),
         "complete" => Some(complete(n)),
+        "chain" => Some(chain(n)),
         _ => None,
     }
 }
@@ -278,6 +290,16 @@ mod tests {
     fn by_name_dispatch() {
         assert!(by_name("paper", 20, 1).is_some());
         assert!(by_name("ba", 20, 1).is_some());
+        assert!(by_name("chain", 20, 1).is_some());
         assert!(by_name("nope", 20, 1).is_none());
+    }
+
+    #[test]
+    fn chain_keeps_its_dangling_tail() {
+        let g = chain(6);
+        assert_eq!(g.n(), 6);
+        assert_eq!(g.m(), 5);
+        assert_eq!(g.out(2), &[3]);
+        assert_eq!(g.dangling(), vec![5], "the tail must stay dangling");
     }
 }

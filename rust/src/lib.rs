@@ -28,11 +28,15 @@
 //!   paper's two scalars per page, activation samplers (uniform /
 //!   exponential clocks / residual-weighted), message protocol, metrics.
 //! * [`engine`] — the declarative experiment API: [`engine::SolverSpec`]
-//!   (a string registry over every solver variant with one uniform
-//!   factory), [`engine::GraphSpec`], and [`engine::Scenario`] — graph +
-//!   solvers + experiment shape as one JSON-round-trippable value whose
-//!   `run()` yields trajectories, decay rates and communication totals.
-//!   Every harness, bench, example and the CLI build on it.
+//!   (a string registry over every solver variant — including the
+//!   multi-threaded `sharded:<W>` runtime and the `dense` backend — with
+//!   one uniform factory), [`engine::GraphSpec`], [`engine::Scenario`]
+//!   (graph + solvers + experiment shape as one JSON-round-trippable
+//!   value whose `run()` yields trajectories, decay rates, communication
+//!   totals and conflict drops) and [`engine::Sweep`] (one scenario
+//!   expanded over a parameter grid, merged into `BENCH_sweep.json`).
+//!   Every harness, bench, example and the CLI build on it — see
+//!   docs/ENGINE.md.
 //! * [`network`] — deterministic discrete-event message network with
 //!   latency models and congestion accounting (the simulated substrate —
 //!   see DESIGN.md §6).

@@ -46,13 +46,19 @@ impl DenseMatrix {
     }
 
     /// The column-stochastic hyperlink matrix `A` of the graph:
-    /// `A[i][j] = 1/N_j` iff `j` links to `i` (paper §I).
+    /// `A[i][j] = 1/N_j` iff `j` links to `i` (paper §I). Dangling pages
+    /// get the implicit self-loop repair `A[j][j] = 1` — the same
+    /// convention as [`crate::linalg::sparse::BColumns`], so dense
+    /// references and the sparse column ops describe one operator.
     pub fn hyperlink(g: &Graph) -> DenseMatrix {
         let n = g.n();
         let mut m = DenseMatrix::zeros(n, n);
         for j in 0..n {
             let deg = g.out_degree(j);
-            assert!(deg > 0, "dangling page {j}: repair the graph first");
+            if deg == 0 {
+                m.set(j, j, 1.0);
+                continue;
+            }
             let w = 1.0 / deg as f64;
             for &i in g.out(j) {
                 m.set(i as usize, j, w);
@@ -212,6 +218,18 @@ mod tests {
         let g = generators::er_threshold(60, 0.5, 3);
         let a = DenseMatrix::hyperlink(&g);
         assert!(a.is_column_stochastic(1e-12));
+    }
+
+    #[test]
+    fn hyperlink_dangling_column_is_self_loop() {
+        let g = crate::graph::Graph::from_sorted_edges(3, &[(0, 1), (0, 2), (1, 0)]);
+        let a = DenseMatrix::hyperlink(&g); // page 2 is a sink
+        assert!(a.is_column_stochastic(1e-12));
+        assert_eq!(a.get(2, 2), 1.0);
+        assert_eq!(a.get(0, 2), 0.0);
+        // exact reference stays finite and well-defined
+        let x = crate::linalg::solve::exact_pagerank(&g, 0.85);
+        assert!(x.iter().all(|v| v.is_finite() && *v > 0.0));
     }
 
     #[test]

@@ -101,8 +101,9 @@ impl Lu {
 }
 
 /// The exact scaled PageRank vector `x* = (1-α)(I-αA)⁻¹𝟙` (Prop. 1).
-/// Panics on dangling pages (repair the graph first); `I-αA` is always
-/// invertible for α ∈ (0,1) by Gershgorin (paper's Prop. 1 proof).
+/// Dangling pages take the implicit self-loop repair (see
+/// [`DenseMatrix::hyperlink`]); `I-αA` is always invertible for
+/// α ∈ (0,1) by Gershgorin (paper's Prop. 1 proof).
 pub fn exact_pagerank(g: &Graph, alpha: f64) -> Vec<f64> {
     let b = DenseMatrix::b_matrix(g, alpha);
     let lu = Lu::factor(&b).expect("I - alpha A is provably invertible");

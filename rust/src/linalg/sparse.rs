@@ -11,6 +11,18 @@
 //! exposes exactly those three operations at `O(N_k)` cost with zero
 //! allocation, which is what the matrix-form solver and the page agents
 //! share.
+//!
+//! ## Dangling pages
+//!
+//! The paper assumes no dangling (zero out-degree) pages; real crawls
+//! have them, and an unguarded `α/N_k` with `N_k = 0` poisons every
+//! residual with NaN/inf. This module is the **one shared guard**: a
+//! dangling page is treated as carrying an implicit self-loop
+//! (`N_k = 1`, `out(k) = {k}`, `A_kk = 1`) — the same local repair as
+//! [`crate::graph::DanglingPolicy::SelfLoop`], applied on the fly so
+//! every solver built on these column ops (matrix-form MP, greedy,
+//! parallel batches, the sharded runtime) agrees on one operator without
+//! rebuilding the graph.
 
 use crate::graph::Graph;
 
@@ -24,6 +36,9 @@ pub struct BColumns {
     inv_out_deg: Vec<f64>,
     /// whether k links to itself (A_kk = 1/N_k).
     self_loop: Vec<bool>,
+    /// whether k is dangling and carries the implicit self-loop repair
+    /// (its column support is {k} although `graph.out(k)` is empty).
+    dangling: Vec<bool>,
 }
 
 impl BColumns {
@@ -33,21 +48,29 @@ impl BColumns {
         let mut norms_sq = Vec::with_capacity(n);
         let mut inv_out_deg = Vec::with_capacity(n);
         let mut self_loop = Vec::with_capacity(n);
+        let mut dangling = Vec::with_capacity(n);
         for k in 0..n {
             let deg = g.out_degree(k);
-            assert!(deg > 0, "dangling page {k}: repair the graph first");
-            let nk = deg as f64;
-            let akk = if g.has_self_loop(k) { 1.0 / nk } else { 0.0 };
+            // Dangling guard: repair with an implicit self-loop
+            // (N_k = 1, A_kk = 1), so the column is B(:,k) = (1-α)e_k.
+            let (nk, akk) = if deg == 0 {
+                (1.0, 1.0)
+            } else {
+                let nk = deg as f64;
+                (nk, if g.has_self_loop(k) { 1.0 / nk } else { 0.0 })
+            };
             // ‖B(:,k)‖² = 1 - 2 α A_kk + α²/N_k  (§II-D)
             norms_sq.push(1.0 - 2.0 * alpha * akk + alpha * alpha / nk);
             inv_out_deg.push(1.0 / nk);
             self_loop.push(akk > 0.0);
+            dangling.push(deg == 0);
         }
         BColumns {
             alpha,
             norms_sq,
             inv_out_deg,
             self_loop,
+            dangling,
         }
     }
 
@@ -72,6 +95,19 @@ impl BColumns {
         self.self_loop[k]
     }
 
+    /// `1/N_k` — O(1). `1.0` for dangling pages (implicit self-loop).
+    #[inline]
+    pub fn inv_out_degree(&self, k: usize) -> f64 {
+        self.inv_out_deg[k]
+    }
+
+    /// Whether page `k` had no out-links and carries the implicit
+    /// self-loop repair (see the module docs).
+    #[inline]
+    pub fn is_dangling(&self, k: usize) -> bool {
+        self.dangling[k]
+    }
+
     /// `B(:,k)ᵀ r` given the residual vector — O(N_k): one read per
     /// out-neighbour, exactly the paper's communication count.
     #[inline]
@@ -79,6 +115,10 @@ impl BColumns {
         let mut s = 0.0;
         for &j in g.out(k) {
             s += r[j as usize];
+        }
+        if self.dangling[k] {
+            // implicit self-loop: the only "out-neighbour" is k itself
+            s += r[k];
         }
         r[k] - self.alpha * self.inv_out_deg[k] * s
     }
@@ -98,6 +138,10 @@ impl BColumns {
         for &j in g.out(k) {
             r[j as usize] += w;
         }
+        if self.dangling[k] {
+            // implicit self-loop: k is its own (only) out-neighbour
+            r[k] += w;
+        }
         // Diagonal entry of B(:,k) is 1 - αA_kk; the self-loop case already
         // received its +w above, so subtracting coef·1 completes
         // coef·(1 - α/N_k) for it and coef·1 for the non-loop case.
@@ -111,6 +155,9 @@ impl BColumns {
         let w = self.alpha * self.inv_out_deg[k];
         for &j in g.out(k) {
             col[j as usize] -= w;
+        }
+        if self.dangling[k] {
+            col[k] -= w;
         }
         col
     }
@@ -198,9 +245,59 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn rejects_dangling() {
+    fn dangling_column_is_implicit_self_loop() {
+        // Page 1 has no out-links: its column must equal the SelfLoop
+        // repair's column, (1-α)e_1, and match the dense B of the
+        // explicitly repaired graph everywhere.
+        let alpha = 0.85;
         let g = crate::graph::Graph::from_sorted_edges(2, &[(0, 1)]);
-        BColumns::new(&g, 0.85);
+        let cols = BColumns::new(&g, alpha);
+        assert!(cols.is_dangling(1));
+        assert!(!cols.is_dangling(0));
+        assert!((cols.norm_sq(1) - (1.0 - alpha) * (1.0 - alpha)).abs() < 1e-15);
+        assert_eq!(cols.inv_out_degree(1), 1.0);
+
+        let mut b = crate::graph::GraphBuilder::new(2)
+            .dangling_policy(crate::graph::DanglingPolicy::SelfLoop);
+        b.add_edge(0, 1);
+        let repaired = b.build().expect("builds");
+        let rcols = BColumns::new(&repaired, alpha);
+        let r = [0.3, -1.7];
+        for k in 0..2 {
+            assert!((cols.norm_sq(k) - rcols.norm_sq(k)).abs() < 1e-15);
+            assert!(
+                (cols.col_dot(&g, k, &r) - rcols.col_dot(&repaired, k, &r)).abs() < 1e-15,
+                "col_dot mismatch at {k}"
+            );
+            let (mut a, mut bq) = (r.to_vec(), r.to_vec());
+            cols.sub_scaled_col(&g, k, 0.41, &mut a);
+            rcols.sub_scaled_col(&repaired, k, 0.41, &mut bq);
+            assert_eq!(a, bq, "residual update mismatch at {k}");
+            assert_eq!(cols.dense_col(&g, k), rcols.dense_col(&repaired, k));
+        }
+    }
+
+    #[test]
+    fn dangling_guard_keeps_mp_finite_and_convergent() {
+        // Regression for the α/N_k division by zero: a graph with a sink
+        // page must run Algorithm 1 to convergence with finite errors.
+        let g = crate::graph::Graph::from_sorted_edges(
+            4,
+            &[(0, 1), (0, 2), (1, 3), (2, 0), (2, 3)], // page 3 is a sink
+        );
+        assert_eq!(g.dangling(), vec![3]);
+        let x_star = crate::linalg::solve::exact_pagerank(&g, 0.85);
+        assert!(x_star.iter().all(|v| v.is_finite()));
+        let mut mp = crate::algo::mp::MatchingPursuit::new(&g, 0.85);
+        let mut rng = Rng::seeded(77);
+        for _ in 0..20_000 {
+            crate::algo::common::PageRankSolver::step(&mut mp, &mut rng);
+        }
+        let est = crate::algo::common::PageRankSolver::estimate(&mp);
+        assert!(est.iter().all(|v| v.is_finite()), "estimate poisoned: {est:?}");
+        assert!(
+            vector::dist_inf(&est, &x_star) < 1e-8,
+            "did not converge: {est:?} vs {x_star:?}"
+        );
     }
 }

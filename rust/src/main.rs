@@ -6,6 +6,9 @@
 //! * `run-scenario` — run a declarative experiment from a JSON file
 //!                  (the engine API: any graphs × any solvers), dumping
 //!                  the machine-readable `BENCH_scenario.json`.
+//! * `sweep`      — expand one scenario over a parameter grid (n, α,
+//!                  shards, batch, latency, …), run every cell, and merge
+//!                  the reports into `BENCH_sweep.json`.
 //! * `list-solvers` — print the engine's solver registry.
 //! * `rank`       — compute PageRank for a graph (generated or from file)
 //!                  with a chosen engine (sparse matrix-form, distributed
@@ -23,7 +26,7 @@ use pagerank_mp::algo::power_iteration::JacobiPowerIteration;
 use pagerank_mp::algo::size_estimation::SizeEstimator;
 use pagerank_mp::algo::stopping::RankingCertifier;
 use pagerank_mp::coordinator::{Coordinator, CoordinatorConfig, Mode, SamplerKind};
-use pagerank_mp::engine::{Scenario, SolverSpec};
+use pagerank_mp::engine::{Scenario, SolverSpec, Sweep};
 use pagerank_mp::graph::{generators, io as graph_io, DanglingPolicy, Graph};
 use pagerank_mp::harness::{ablation, fig1, fig2, report};
 use pagerank_mp::linalg::solve::exact_pagerank;
@@ -85,6 +88,37 @@ fn cmd_run_scenario(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.get("file").map(str::to_string))
+        .ok_or("usage: pagerank-mp sweep <sweep.json> [--bench-out BENCH_sweep.json] [--threads T]")?;
+    let text = std::fs::read_to_string(&path).map_err(|e| format!("reading {path}: {e}"))?;
+    let mut sweep = Sweep::from_json_str(&text).map_err(|e| format!("{path}: {e}"))?;
+    if let Some(t) = args.get("threads") {
+        sweep.base.threads = t.parse().map_err(|_| format!("bad --threads {t:?}"))?;
+    }
+    eprintln!(
+        "sweep {:?}: {} cells over axes [{}], solvers [{}]",
+        sweep.name,
+        sweep.cell_count(),
+        sweep.axes.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>().join(", "),
+        sweep.base.solvers.iter().map(|s| s.key()).collect::<Vec<_>>().join(", "),
+    );
+    let report = sweep.run_with_progress(|i, total, name| {
+        eprintln!("  cell {i}/{total}: {name} …");
+    })?;
+    println!("{}", report.render());
+    let bench_out = args.get_str("bench-out", "BENCH_sweep.json");
+    report
+        .write_bench_json(std::path::Path::new(&bench_out))
+        .map_err(|e| format!("writing {bench_out}: {e}"))?;
+    println!("\nwrote {bench_out}");
+    Ok(())
+}
+
 fn cmd_list_solvers(_args: &Args) -> Result<(), String> {
     println!("solver registry (engine::SolverSpec) — use these names in scenario JSON:\n");
     for spec in SolverSpec::all() {
@@ -92,6 +126,7 @@ fn cmd_list_solvers(_args: &Args) -> Result<(), String> {
     }
     println!(
         "\nparameterized forms: parallel-mp:<batch>, \
+         sharded:<shards>[:<batch>[:<mod|block>]], \
          coordinator:<sequential|async>:<uniform|clocks|weighted>:<zero|const:L|uniform:lo:hi|exp:mean>"
     );
     Ok(())
@@ -380,6 +415,10 @@ COMMANDS:
   run-scenario run a declarative experiment from JSON
               <scenario.json> [--bench-out BENCH_scenario.json --csv out.csv --threads T]
               (see examples/fig1_scenario.json; solver names via `list-solvers`)
+  sweep       expand one scenario over a grid and merge the reports
+              <sweep.json> [--bench-out BENCH_sweep.json --threads T]
+              (axes: n, alpha, steps, stride, rounds, seed, shards, batch, latency;
+               see examples/sweep_small.json)
   list-solvers print the engine's solver registry
   rank        compute PageRank        --graph paper|ba|ws|.. --n 100 --engine sparse|coordinator|dense|power
               [--alpha 0.85 --steps 100000 --seed S --top 10 --latency zero|const:L --mode sequential|async --sampler uniform|clocks|weighted]
@@ -395,6 +434,7 @@ fn main() {
     let args = Args::from_env();
     let result = match args.command.as_deref() {
         Some("run-scenario") => cmd_run_scenario(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("list-solvers") => cmd_list_solvers(&args),
         Some("rank") => cmd_rank(&args),
         Some("fig1") => cmd_fig1(&args),

@@ -252,7 +252,11 @@ impl Json {
             Json::Null => "null".into(),
             Json::Bool(b) => b.to_string(),
             Json::Number(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/inf literal; degrade to null so the
+                    // output always re-parses (NaN decay rates etc.).
+                    "null".into()
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     format!("{}", *n as i64)
                 } else {
                     format!("{n}")
@@ -350,6 +354,18 @@ mod tests {
         let v = Json::parse(src).expect("ok");
         let rendered = v.render();
         assert_eq!(Json::parse(&rendered).expect("ok"), v);
+    }
+
+    #[test]
+    fn non_finite_numbers_render_as_null() {
+        assert_eq!(Json::Number(f64::NAN).render(), "null");
+        assert_eq!(Json::Number(f64::INFINITY).render(), "null");
+        assert_eq!(Json::Number(f64::NEG_INFINITY).render(), "null");
+        // The rendered document must stay parseable.
+        let mut m = BTreeMap::new();
+        m.insert("decay_rate".to_string(), Json::Number(f64::NAN));
+        let doc = Json::Object(m).render();
+        assert!(Json::parse(&doc).is_ok(), "bad doc: {doc}");
     }
 
     #[test]

@@ -107,27 +107,40 @@ pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
 /// Fit an exponential decay `y_t ≈ C ρ^t` on the positive entries of a
 /// trajectory and return the per-step rate `ρ` (log-linear OLS). This is
 /// how the harness extracts the measured contraction factor compared with
-/// the paper's predicted `1 - σ²(B̂)/N`.
+/// the paper's predicted `1 - σ²(B̂)/N`. NaN-safe: see
+/// [`decay_rate_above`] (this is the `floor = 0` case).
 pub fn decay_rate(traj: &[f64]) -> f64 {
-    let pts: Vec<(f64, f64)> = traj
-        .iter()
-        .enumerate()
-        .filter(|(_, &v)| v > 0.0 && v.is_finite())
-        .map(|(t, &v)| (t as f64, v.ln()))
-        .collect();
-    assert!(pts.len() >= 2, "not enough positive points for a decay fit");
-    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
-    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
-    let (_, slope) = linear_fit(&xs, &ys);
-    slope.exp()
+    decay_rate_above(traj, 0.0)
 }
 
 /// Like [`decay_rate`] but fits only the prefix that stays above
 /// `floor` — trajectories that reach the floating-point noise floor
 /// flatten out and would bias the fit toward 1.
+///
+/// NaN-safe (the one shared fitter for the harnesses and the engine):
+/// non-finite and non-positive samples are *skipped* (`ln` is undefined
+/// there), the fit *stops* at the first positive sample at/below
+/// `floor`, and `f64::NAN` is returned when fewer than two fittable
+/// samples remain — degenerate trajectories (all-zero, diverged) must
+/// never panic the fit or masquerade as a rate.
 pub fn decay_rate_above(traj: &[f64], floor: f64) -> f64 {
-    let end = traj.iter().position(|&v| v <= floor).unwrap_or(traj.len());
-    decay_rate(&traj[..end.max(2)])
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for (t, &v) in traj.iter().enumerate() {
+        if !v.is_finite() || v <= 0.0 {
+            continue; // log-undefined sample: skip, keep scanning
+        }
+        if v <= floor {
+            break; // noise floor reached: flat from here on
+        }
+        xs.push(t as f64);
+        ys.push(v.ln());
+    }
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let (_, slope) = linear_fit(&xs, &ys);
+    slope.exp()
 }
 
 /// Kendall-tau-style pairwise ranking agreement between two score vectors:
@@ -231,6 +244,19 @@ mod tests {
         traj[3] = 0.0; // e.g. an exactly-converged entry
         let got = decay_rate(&traj);
         assert!((got - rho).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decay_rate_nan_on_degenerate_input() {
+        // Fewer than two fittable samples must yield NaN, not a panic.
+        assert!(decay_rate(&[]).is_nan());
+        assert!(decay_rate(&[1.0]).is_nan());
+        assert!(decay_rate(&[0.0, 0.0, 0.0]).is_nan());
+        assert!(decay_rate(&[f64::INFINITY, f64::NAN, 1.0]).is_nan());
+        // And the floor cuts before fitting flat noise.
+        let traj = [1.0, 1e-2, 1e-30, 1e-30, 1e-30];
+        let got = decay_rate_above(&traj, 1e-26);
+        assert!((got - 1e-2).abs() < 1e-9, "got {got}");
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Engine-level integration tests: the solver registry, scenario JSON
-//! round-trips, determinism, and the distributed-vs-matrix-form
-//! equivalence through the declarative API.
+//! round-trips, determinism, backend equivalences (matrix vs
+//! coordinator vs sharded vs dense), dangling-node safety, and the
+//! sweep grid through the declarative API.
 
 use pagerank_mp::engine::{
-    CoordinatorSolver, GraphSpec, ReferencePolicy, Scenario, ScenarioReport, SolverSpec,
+    CoordinatorSolver, GraphSpec, ReferencePolicy, Scenario, ScenarioReport, SolverSpec, Sweep,
 };
 use pagerank_mp::util::json::Json;
 
@@ -205,6 +206,192 @@ fn async_coordinator_scenario_keeps_overlap_and_converges() {
     );
     // Each round completes at least its budget (drain may add a few).
     assert!(r.total_stats.activated >= 2 * 600);
+}
+
+#[test]
+fn one_shard_sharded_scenario_matches_matrix_mp() {
+    // Backend equivalence anchor: shards=1, batch=1 packs exactly one
+    // uniform candidate per super-step from the same Scenario rng stream
+    // as the matrix form, and the shared BColumns arithmetic makes the
+    // two backends replay identical activation sequences.
+    let report = small(
+        "sharded-vs-mp",
+        vec![
+            SolverSpec::Mp,
+            SolverSpec::parse("sharded:1:1").expect("registry"),
+        ],
+    )
+    .run()
+    .expect("runs");
+    let mp = report.get("mp").expect("mp ran");
+    let sh = report.get("sharded:1:1:mod").expect("sharded ran");
+    assert_eq!(
+        mp.total_stats, sh.total_stats,
+        "identical activation sequences must cost the same"
+    );
+    for (a, b) in mp.trajectory.mean.iter().zip(&sh.trajectory.mean) {
+        assert!(
+            (a - b).abs() <= 1e-9 * a.abs() + 1e-30,
+            "trajectories diverged: {a} vs {b}"
+        );
+    }
+    assert_eq!(sh.conflicts, 0, "a single candidate can never conflict");
+}
+
+#[test]
+fn dense_backend_matches_power_iteration() {
+    // Same Jacobi iteration on two substrates (dense matvec vs CSR
+    // scatter): sweep-for-sweep the trajectories must agree to fp noise,
+    // far below the 1e-10 acceptance bar.
+    let report = Scenario::paper("dense-vs-power", 25)
+        .with_solvers(vec![SolverSpec::Dense, SolverSpec::PowerIteration])
+        .with_steps(60)
+        .with_stride(20)
+        .with_rounds(1)
+        .with_threads(1)
+        .with_seed(13)
+        .run()
+        .expect("runs");
+    let dense = report.get("dense").expect("dense ran");
+    let power = report.get("power").expect("power ran");
+    for (a, b) in dense.trajectory.mean.iter().zip(&power.trajectory.mean) {
+        assert!((a - b).abs() < 1e-10, "dense {a} vs power {b}");
+    }
+}
+
+#[test]
+fn three_backend_race_completes_and_ranks_all() {
+    // The acceptance shape of examples/smoke_scenario.json at test
+    // scale: one scenario racing the sequential matrix form, the
+    // 4-shard runtime and the dense backend, producing one report that
+    // ranks all three.
+    let report = Scenario::paper("three-backends", 20)
+        .with_solvers(vec![
+            SolverSpec::Mp,
+            SolverSpec::parse("sharded:4:8").expect("registry"),
+            SolverSpec::Dense,
+        ])
+        .with_steps(300)
+        .with_stride(100)
+        .with_rounds(2)
+        .with_threads(1)
+        .with_seed(19)
+        .run()
+        .expect("runs");
+    assert_eq!(report.reports.len(), 3);
+    for r in &report.reports {
+        assert!(r.trajectory.mean.iter().all(|v| v.is_finite()), "{}", r.spec.key());
+        assert!(r.final_error < r.trajectory.mean[0], "{}", r.spec.key());
+    }
+    let ordering = report.rate_ordering();
+    assert_eq!(ordering.len(), 3, "every backend appears in the ranking");
+    // The dense backend sweeps the whole graph per step: it must lead.
+    assert_eq!(ordering[0].0, "dense");
+}
+
+#[test]
+fn dangling_graph_runs_every_backend_to_finite_convergence() {
+    // The chain family keeps a genuine sink page; the shared implicit
+    // self-loop guard must carry every backend through it with finite,
+    // shrinking errors (regression for the α/0 residual poisoning).
+    let scenario = Scenario::new(
+        "dangling-chain",
+        GraphSpec::Family { family: "chain".into(), n: 20 },
+    )
+    .with_solvers(vec![
+        SolverSpec::Mp,
+        SolverSpec::GreedyMp,
+        SolverSpec::ParallelMp { batch: 4 },
+        SolverSpec::parse("sharded:2:4").expect("registry"),
+        SolverSpec::Dense,
+        SolverSpec::PowerIteration,
+    ])
+    .with_steps(2_000)
+    .with_stride(500)
+    .with_rounds(2)
+    .with_threads(2)
+    .with_seed(29);
+    let report = scenario.run().expect("dangling graph must run");
+    for r in &report.reports {
+        assert!(
+            r.trajectory.mean.iter().all(|v| v.is_finite()),
+            "{}: trajectory poisoned by the dangling page",
+            r.spec.key()
+        );
+        assert!(
+            r.final_error < r.trajectory.mean[0],
+            "{}: no progress on the dangling graph ({} -> {})",
+            r.spec.key(),
+            r.trajectory.mean[0],
+            r.final_error
+        );
+    }
+}
+
+#[test]
+fn sweep_expands_grid_and_merges_bench_json() {
+    let text = r#"{
+      "name": "it-sweep",
+      "scenario": {
+        "graph": "paper:12",
+        "solvers": ["mp", "sharded:2:4"],
+        "steps": 200, "stride": 100, "rounds": 2, "threads": 1, "seed": 5
+      },
+      "grid": {"n": [10, 12], "shards": [1, 2]}
+    }"#;
+    let sweep = Sweep::from_json_str(text).expect("sweep parses");
+    assert_eq!(sweep.cell_count(), 4);
+    let report = sweep.run().expect("sweep runs");
+    assert_eq!(report.cells.len(), 4);
+
+    let dir = std::env::temp_dir().join(format!("prmp_sweep_{}", std::process::id()));
+    let path = dir.join("BENCH_sweep.json");
+    report.write_bench_json(&path).expect("writes");
+    let parsed = Json::parse(&std::fs::read_to_string(&path).expect("readable"))
+        .expect("valid JSON on disk");
+    assert_eq!(parsed.get("sweep").and_then(Json::as_str), Some("it-sweep"));
+    let cells = parsed.get("cells").and_then(Json::as_array).expect("cells");
+    assert_eq!(cells.len(), 4);
+    for cell in cells {
+        let solvers = cell.get("solvers").and_then(Json::as_array).expect("solvers");
+        assert_eq!(solvers.len(), 2, "every cell carries every solver");
+        for s in solvers {
+            assert!(s.get("final_error").and_then(Json::as_f64).is_some());
+            assert!(s.get("conflicts").is_some());
+            assert!(s.get("wall_ms").is_some());
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shipped_sweep_and_smoke_files_parse() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package sits inside the repo")
+        .to_path_buf();
+    let smoke = std::fs::read_to_string(root.join("examples/smoke_scenario.json"))
+        .expect("smoke scenario readable");
+    let scenario = Scenario::from_json_str(&smoke).expect("smoke scenario parses");
+    for required in ["mp", "dense"] {
+        assert!(
+            scenario.solvers.iter().any(|s| s.key() == required),
+            "smoke scenario must race {required}"
+        );
+    }
+    assert!(
+        scenario
+            .solvers
+            .iter()
+            .any(|s| matches!(s, SolverSpec::Sharded { .. })),
+        "smoke scenario must include a sharded backend"
+    );
+
+    let sweep_text = std::fs::read_to_string(root.join("examples/sweep_small.json"))
+        .expect("sweep example readable");
+    let sweep = Sweep::from_json_str(&sweep_text).expect("sweep example parses");
+    assert!(sweep.cell_count() >= 4, "the shipped sweep must be a real >=2x2 grid");
+    sweep.cells().expect("every cell must be expandable");
 }
 
 #[test]

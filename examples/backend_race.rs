@@ -1,8 +1,11 @@
 //! Race every execution backend on one scenario axis: the sequential
 //! matrix form, the multi-threaded sharded runtime at two shard counts
-//! (and both shard maps), and the dense backend — the comparison the
-//! related work (Ishii–Tempo; Das Sarma et al.) frames as "convergence
-//! per unit of parallel work".
+//! (both shard maps, and the serial-leader vs worker-side packers at 8
+//! shards — the centralization the distributed-randomized line of work
+//! argues away), and the dense backend — the comparison the related
+//! work (Ishii–Tempo; Das Sarma et al.) frames as "convergence per unit
+//! of parallel work". The wall-ms column is where the worker packer's
+//! win shows: same convergence law, no serial leader on the hot path.
 //!
 //! Run with: `cargo run --release --example backend_race`
 
@@ -18,6 +21,8 @@ fn main() {
         SolverSpec::parse("sharded:2:8").expect("registry"),
         SolverSpec::parse("sharded:4:8").expect("registry"),
         SolverSpec::parse("sharded:4:8:block").expect("registry"),
+        SolverSpec::parse("sharded:8:64:mod:leader").expect("registry"),
+        SolverSpec::parse("sharded:8:64:mod:worker").expect("registry"),
         SolverSpec::Dense,
     ])
     .with_steps(4_000)

@@ -3,20 +3,122 @@
 //! * matrix-form Algorithm 1 (the in-process production path),
 //! * the distributed coordinator (sequential and async, with latency),
 //! * centralized power-iteration sweeps,
-//! * batch throughput of the parallel extension.
+//! * batch throughput of the parallel extension,
+//! * **leader-saturation**: the sharded runtime swept over shards ∈
+//!   {1,2,4,8,16,32} under both packing policies, recording applied
+//!   activations/s into the machine-readable `BENCH_throughput.json`
+//!   (the leader packer flattens once its serial sample+scan+route loop
+//!   saturates; the worker packer keeps scaling).
 //!
 //! All solvers are named and built through the engine registry — the
 //! bench measures exactly what a `Scenario` would run.
 //!
-//! `cargo bench --bench throughput`
+//! `cargo bench --bench throughput`. Env knobs:
+//! `PAGERANK_BENCH_QUICK=1` shrinks every section to a CI smoke size;
+//! `THROUGHPUT_ONLY=sharded-sweep` runs only the leader-saturation
+//! section (what CI does on every push to keep the `bench-json`
+//! artifact fed).
+
+use std::collections::BTreeMap;
 
 use pagerank_mp::algo::common::PageRankSolver;
-use pagerank_mp::engine::{CoordinatorSolver, SolverSpec};
+use pagerank_mp::coordinator::{Packer, ShardMap};
+use pagerank_mp::engine::{CoordinatorSolver, ShardedSolver, SolverSpec};
 use pagerank_mp::graph::generators;
 use pagerank_mp::util::bench;
+use pagerank_mp::util::json::Json;
 use pagerank_mp::util::rng::Rng;
 
+/// One timed cell of the leader-saturation sweep: warm up, then time
+/// `super_steps` super-steps and report *applied* activations per second
+/// (the honest number — conflicts thin the budget).
+fn sharded_sweep_cell(
+    g: &pagerank_mp::graph::Graph,
+    shards: usize,
+    batch: usize,
+    packer: Packer,
+    super_steps: usize,
+) -> Json {
+    let spec_key = format!("sharded:{shards}:{batch}:mod:{}", packer.key());
+    let mut sh = ShardedSolver::new(g, 0.85, shards, batch, ShardMap::Modulo, packer);
+    let mut rng = Rng::seeded(13);
+    for _ in 0..super_steps / 4 {
+        sh.step(&mut rng); // warm-up: fault pages, fill buffer pools
+    }
+    // Snapshot both counters so every reported number covers exactly the
+    // timed window (the warm-up above also activates and conflicts).
+    let act0 = sh.runtime().activations();
+    let conf0 = sh.conflicts();
+    let t0 = std::time::Instant::now();
+    for _ in 0..super_steps {
+        std::hint::black_box(sh.step(&mut rng));
+    }
+    let wall = t0.elapsed();
+    let applied = sh.runtime().activations() - act0;
+    let conflicts = sh.conflicts() - conf0;
+    let acts_per_sec = applied as f64 / wall.as_secs_f64();
+    println!(
+        "{spec_key:<28} {super_steps:>5} super-steps  applied {applied:>8}  \
+         conflicts {conflicts:>8}  {:>10}/s",
+        bench::format_count(acts_per_sec),
+    );
+    let mut cell = BTreeMap::new();
+    cell.insert("spec".to_string(), Json::String(spec_key));
+    cell.insert("shards".to_string(), Json::Number(shards as f64));
+    cell.insert("packer".to_string(), Json::String(packer.key().to_string()));
+    cell.insert("super_steps".to_string(), Json::Number(super_steps as f64));
+    cell.insert("activations".to_string(), Json::Number(applied as f64));
+    cell.insert("conflicts".to_string(), Json::Number(conflicts as f64));
+    cell.insert("wall_ms".to_string(), Json::Number(wall.as_secs_f64() * 1e3));
+    cell.insert("acts_per_sec".to_string(), Json::Number(acts_per_sec));
+    Json::Object(cell)
+}
+
+/// The leader-saturation measurement (ROADMAP "measure leader-bound
+/// throughput at 16+ shards"): sweep shards × packer on a sparse graph
+/// big enough that activations are real work, dump
+/// `BENCH_throughput.json` for the CI artifact and `scripts/bench_diff`.
+fn sharded_saturation_sweep(quick: bool) {
+    println!("\n=== leader-saturation: sharded packer × shards sweep ===");
+    let (n, batch, super_steps) = if quick {
+        (20_000usize, 256usize, 24usize)
+    } else {
+        (200_000, 1024, 48)
+    };
+    let g = generators::erdos_renyi(n, 8.0 / n as f64, 12);
+    let graph_key = format!("er-sparse N={n} deg~8");
+    let mut cells = Vec::new();
+    for packer in [Packer::Leader, Packer::Worker] {
+        for shards in [1usize, 2, 4, 8, 16, 32] {
+            cells.push(sharded_sweep_cell(&g, shards, batch, packer, super_steps));
+        }
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert(
+        "bench".to_string(),
+        Json::String("throughput.sharded_sweep".to_string()),
+    );
+    doc.insert("graph".to_string(), Json::String(graph_key));
+    doc.insert("batch".to_string(), Json::Number(batch as f64));
+    doc.insert("cells".to_string(), Json::Array(cells));
+    // Anchor at the repo root (the bench binary's cwd is the package
+    // dir, rust/), so CI's artifact upload and bench_diff find the file
+    // next to BENCH_scenario.json / BENCH_sweep.json.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package sits inside the repo")
+        .join("BENCH_throughput.json");
+    pagerank_mp::harness::report::write_file(&out, &Json::Object(doc).render())
+        .expect("write BENCH_throughput.json");
+    println!("wrote {}", out.display());
+}
+
 fn main() {
+    let quick = bench::quick_mode();
+    if std::env::var("THROUGHPUT_ONLY").as_deref() == Ok("sharded-sweep") {
+        sharded_saturation_sweep(quick);
+        return;
+    }
     let mut b = bench::standard();
     println!("=== PERF-L3: matrix-form MP activations/s ===");
     for (name, g) in [
@@ -104,6 +206,8 @@ fn main() {
             std::hint::black_box(pmp.step(&mut rng));
         });
     }
+
+    sharded_saturation_sweep(quick);
 
     println!("\n{}", b.to_csv());
     pagerank_mp::harness::report::write_file(

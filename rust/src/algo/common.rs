@@ -50,6 +50,14 @@ pub trait PageRankSolver {
         false
     }
 
+    /// Candidates dropped by conflict-free packing so far — nonzero only
+    /// for backends that thin a batched candidate stream (the sharded
+    /// runtime overrides this); every other solver activates exactly
+    /// what it samples.
+    fn conflicts(&self) -> u64 {
+        0
+    }
+
     /// Squared l2 distance `‖x̂_t - x*‖²` of the current estimate from a
     /// reference vector — the quantity Fig. 1 plots (before its 1/N
     /// scaling). The default routes through [`PageRankSolver::estimate`]

@@ -1,0 +1,336 @@
+//! `bench_diff` — diff two perf artifacts and flag regressions.
+//!
+//! Compares a baseline and a candidate `BENCH_scenario.json`,
+//! `BENCH_sweep.json` or `BENCH_throughput.json` (the three artifacts CI
+//! uploads as `bench-json` on every push) and prints one line per metric
+//! that moved past the threshold. Exit code 1 when a regression is
+//! found, 0 otherwise — the CI step runs it advisory
+//! (`continue-on-error`), humans run it via `scripts/bench_diff`.
+//!
+//! ```text
+//! bench_diff old/BENCH_sweep.json BENCH_sweep.json --threshold 0.15
+//! ```
+//!
+//! Metrics and their direction (the threshold always means "worsened by
+//! more than this fraction *of the baseline*", so 0.15 fires at the same
+//! severity for every metric; keep it < 1 — losing an entire decay gap
+//! caps that metric's worsening at 1.0):
+//!
+//! * `decay_rate`   — smaller is better (per-step error contraction);
+//!   compared on `1 - rate` (the *gap to stagnation*), because rates sit
+//!   near 1 and a relative test on the rate itself would never fire.
+//! * `final_error`  — smaller is better.
+//! * `acts_per_sec` — larger is better (throughput sweep cells).
+//!
+//! `wall_ms` is deliberately ignored (CI runner noise); `null` decay
+//! rates (diverged/instant-converged trajectories, see docs/ENGINE.md)
+//! are skipped on either side, but a rate that *became* null is itself
+//! reported as a regression. Entries present on only one side are
+//! listed informationally and never fail the diff.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use pagerank_mp::util::json::Json;
+
+/// One comparable row extracted from an artifact: a stable key plus the
+/// metrics we track.
+#[derive(Debug, Default, Clone)]
+struct Row {
+    decay_rate: Option<f64>,
+    final_error: Option<f64>,
+    acts_per_sec: Option<f64>,
+}
+
+fn finite(v: Option<&Json>) -> Option<f64> {
+    v.and_then(Json::as_f64).filter(|x| x.is_finite())
+}
+
+/// Flatten a solver-summary object (the shared shape of
+/// `BENCH_scenario.json` solvers and `BENCH_sweep.json` cell solvers).
+fn solver_row(s: &Json) -> Row {
+    Row {
+        decay_rate: finite(s.get("decay_rate")),
+        final_error: finite(s.get("final_error")),
+        acts_per_sec: finite(s.get("acts_per_sec")),
+    }
+}
+
+/// Extract `key -> Row` from any of the three artifact kinds.
+fn extract(doc: &Json) -> Result<BTreeMap<String, Row>, String> {
+    let mut rows = BTreeMap::new();
+    if doc.get("cells").is_some() {
+        // BENCH_sweep.json (cells have "solvers") or
+        // BENCH_throughput.json (cells have "spec" + "acts_per_sec").
+        for cell in doc.get("cells").and_then(Json::as_array).unwrap_or(&[]) {
+            if let Some(solvers) = cell.get("solvers").and_then(Json::as_array) {
+                let name = cell.get("name").and_then(Json::as_str).unwrap_or("cell");
+                for s in solvers {
+                    let solver = s.get("name").and_then(Json::as_str).unwrap_or("?");
+                    rows.insert(format!("{name} :: {solver}"), solver_row(s));
+                }
+            } else if let Some(spec) = cell.get("spec").and_then(Json::as_str) {
+                rows.insert(spec.to_string(), solver_row(cell));
+            }
+        }
+    } else if let Some(solvers) = doc.get("solvers").and_then(Json::as_array) {
+        // BENCH_scenario.json
+        let name = doc
+            .get("scenario")
+            .and_then(|s| s.get("name"))
+            .and_then(Json::as_str)
+            .unwrap_or("scenario");
+        for s in solvers {
+            let solver = s.get("name").and_then(Json::as_str).unwrap_or("?");
+            rows.insert(format!("{name} :: {solver}"), solver_row(s));
+        }
+    } else {
+        return Err("unrecognized artifact: expected \"cells\" or \"solvers\"".into());
+    }
+    if rows.is_empty() {
+        return Err("artifact contains no comparable entries".into());
+    }
+    Ok(rows)
+}
+
+/// Relative worsening of a lower-is-better metric (`new` vs `old`),
+/// measured against the baseline: `(new - old) / old`.
+fn rel_increase(old: f64, new: f64) -> f64 {
+    if old.abs() < f64::MIN_POSITIVE {
+        if new.abs() < f64::MIN_POSITIVE {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (new - old) / old.abs()
+    }
+}
+
+/// Fraction of a higher-is-better baseline value lost: `(old - new) /
+/// old`. Keeps every metric's threshold on the same scale — "lost X% of
+/// the baseline" — rather than silently tightening for drops.
+fn rel_drop(old: f64, new: f64) -> f64 {
+    if old.abs() < f64::MIN_POSITIVE {
+        0.0 // no baseline to lose
+    } else {
+        (old - new) / old.abs()
+    }
+}
+
+/// Compare one metric; returns a description when it regressed past the
+/// threshold.
+fn check(
+    key: &str,
+    metric: &str,
+    old: Option<f64>,
+    new: Option<f64>,
+    threshold: f64,
+    lower_is_better: bool,
+) -> Option<String> {
+    let (old, new) = match (old, new) {
+        (Some(o), Some(n)) => (o, n),
+        // A metric that *disappeared* (e.g. decay_rate fitted before,
+        // null now: the solver stopped converging cleanly) is a
+        // regression in its own right.
+        (Some(o), None) if metric == "decay_rate" => {
+            return Some(format!(
+                "REGRESSION {key} :: {metric}: {o:.6} -> null (trajectory no longer fittable)"
+            ))
+        }
+        _ => return None,
+    };
+    let worsening = if metric == "decay_rate" {
+        // Rates live just below 1; compare the contraction gap 1-rate
+        // (shrinking gap = slower convergence; losing the whole gap
+        // caps the worsening at 1.0, so keep thresholds < 1).
+        rel_drop(1.0 - old.min(1.0), 1.0 - new.min(1.0))
+    } else if lower_is_better {
+        rel_increase(old, new)
+    } else {
+        rel_drop(old, new)
+    };
+    if worsening > threshold {
+        Some(format!(
+            "REGRESSION {key} :: {metric}: {old:.6e} -> {new:.6e} ({:+.1}% worse)",
+            worsening * 100.0
+        ))
+    } else {
+        None
+    }
+}
+
+fn run(old_path: &str, new_path: &str, threshold: f64) -> Result<Vec<String>, String> {
+    let load = |p: &str| -> Result<BTreeMap<String, Row>, String> {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("reading {p}: {e}"))?;
+        extract(&Json::parse(&text).map_err(|e| format!("{p}: {e}"))?)
+            .map_err(|e| format!("{p}: {e}"))
+    };
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    let mut findings = Vec::new();
+    let mut compared = 0usize;
+    for (key, o) in &old {
+        let Some(n) = new.get(key) else {
+            println!("note: {key} only in baseline (grid changed?)");
+            continue;
+        };
+        compared += 1;
+        for f in [
+            check(key, "decay_rate", o.decay_rate, n.decay_rate, threshold, true),
+            check(key, "final_error", o.final_error, n.final_error, threshold, true),
+            check(key, "acts_per_sec", o.acts_per_sec, n.acts_per_sec, threshold, false),
+        ]
+        .into_iter()
+        .flatten()
+        {
+            findings.push(f);
+        }
+    }
+    for key in new.keys() {
+        if !old.contains_key(key) {
+            println!("note: {key} only in candidate (new cell)");
+        }
+    }
+    println!(
+        "compared {compared} entr{} at threshold {:.0}%: {} regression(s)",
+        if compared == 1 { "y" } else { "ies" },
+        threshold * 100.0,
+        findings.len()
+    );
+    Ok(findings)
+}
+
+const USAGE: &str = "usage: bench_diff <old.json> <new.json> [--threshold 0.15]";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut threshold = 0.15f64;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--threshold" | "-t" => {
+                threshold = match it.next().map(|v| v.parse::<f64>()) {
+                    Some(Ok(t)) if t > 0.0 => t,
+                    _ => {
+                        eprintln!("bad --threshold\n{USAGE}");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            _ => paths.push(a.clone()),
+        }
+    }
+    let [old_path, new_path] = paths.as_slice() else {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    };
+    match run(old_path, new_path, threshold) {
+        Ok(findings) if findings.is_empty() => ExitCode::SUCCESS,
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scenario_doc(rate: f64, err: f64) -> String {
+        format!(
+            r#"{{"scenario": {{"name": "s"}}, "solvers": [
+                 {{"name": "mp", "decay_rate": {rate}, "final_error": {err},
+                  "reads": 10, "writes": 10, "activated": 5, "conflicts": 0,
+                  "wall_ms": 1.0}}]}}"#
+        )
+    }
+
+    #[test]
+    fn extract_handles_all_three_artifact_shapes() {
+        let scenario = Json::parse(&scenario_doc(0.999, 1e-9)).expect("json");
+        let rows = extract(&scenario).expect("scenario shape");
+        assert!(rows.contains_key("s :: mp"));
+
+        let sweep = Json::parse(
+            r#"{"sweep": "g", "cells": [
+                 {"name": "g[n=10]", "params": {"n": 10},
+                  "solvers": [{"name": "mp", "decay_rate": 0.99,
+                               "final_error": 1e-8}]}]}"#,
+        )
+        .expect("json");
+        let rows = extract(&sweep).expect("sweep shape");
+        assert!(rows.contains_key("g[n=10] :: mp"));
+
+        let thr = Json::parse(
+            r#"{"bench": "throughput.sharded_sweep", "cells": [
+                 {"spec": "sharded:8:64:mod:worker", "acts_per_sec": 1e6}]}"#,
+        )
+        .expect("json");
+        let rows = extract(&thr).expect("throughput shape");
+        assert_eq!(
+            rows["sharded:8:64:mod:worker"].acts_per_sec,
+            Some(1e6)
+        );
+
+        assert!(extract(&Json::parse("{}").expect("json")).is_err());
+    }
+
+    #[test]
+    fn flags_decay_and_throughput_regressions_but_not_noise() {
+        // decay gap 1-0.99=1e-2 shrinking to 1-0.999=1e-3 means 10x
+        // slower convergence — a regression; the reverse is a win.
+        let worse = check("k", "decay_rate", Some(0.99), Some(0.999), 0.15, true);
+        assert!(worse.is_some(), "gap shrank 10x: must flag");
+        let better = check("k", "decay_rate", Some(0.999), Some(0.99), 0.15, true);
+        assert!(better.is_none(), "improvements never flag");
+        let gone = check("k", "decay_rate", Some(0.99), None, 0.15, true);
+        assert!(gone.expect("flagged").contains("null"));
+
+        let slow = check("k", "acts_per_sec", Some(1e6), Some(7e5), 0.15, false);
+        assert!(slow.is_some(), "30% throughput drop must flag");
+        let noise = check("k", "acts_per_sec", Some(1e6), Some(0.95e6), 0.15, false);
+        assert!(noise.is_none(), "5% jitter within threshold");
+
+        let err_up = check("k", "final_error", Some(1e-9), Some(1e-7), 0.15, true);
+        assert!(err_up.is_some());
+    }
+
+    #[test]
+    fn run_end_to_end_on_disk() {
+        let dir = std::env::temp_dir().join(format!("bench_diff_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let old = dir.join("old.json");
+        let new = dir.join("new.json");
+        std::fs::write(&old, scenario_doc(0.99, 1e-9)).expect("write");
+        std::fs::write(&new, scenario_doc(0.999, 1e-9)).expect("write");
+        let findings = run(
+            old.to_str().expect("utf8"),
+            new.to_str().expect("utf8"),
+            0.15,
+        )
+        .expect("runs");
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        // Identical artifacts diff clean.
+        let clean = run(
+            old.to_str().expect("utf8"),
+            old.to_str().expect("utf8"),
+            0.15,
+        )
+        .expect("runs");
+        assert!(clean.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -4,22 +4,56 @@
 //!
 //! Correctness argument (same as [`crate::algo::parallel_mp`]): an
 //! activation of page `k` reads and writes only `supp B(:,k) = {k} ∪
-//! out(k)`. The leader packs batches whose closed neighbourhoods are
-//! pairwise disjoint, so the activations of one batch touch disjoint
-//! memory and can run on worker threads with **no ordering between
-//! them** — the result equals any sequential execution of the same
-//! multiset. Residuals and estimates live in shared `AtomicU64` cells
-//! (f64 bit-cast, relaxed ordering): within a batch every cell is touched
-//! by at most one worker, and the per-batch channel round-trip provides
-//! the inter-batch happens-before edge.
+//! out(k)`. Every super-step executes a set of activations whose closed
+//! neighbourhoods are pairwise disjoint, so they touch disjoint memory
+//! and can run on worker threads with **no ordering between them** — the
+//! result equals any sequential execution of the same multiset.
+//! Residuals and estimates live in shared `AtomicU64` cells (f64
+//! bit-cast, relaxed ordering): within a super-step every cell is touched
+//! by at most one worker, and the per-step synchronization with the
+//! leader provides the inter-step happens-before edge.
 //!
-//! Topology: one leader (sampling + packing + dispatch) and `W` persistent
-//! workers connected by mpsc channels; each activation is routed to the
-//! worker owning page `k` via a pluggable [`ShardMap`] (modulo or block
-//! ownership). Routing never changes results — batch supports are
-//! disjoint — only load balance: modulo spreads consecutive ids,
-//! block keeps cache-friendly contiguous ranges but concentrates the
-//! hub-heavy low-id prefix of generator graphs on shard 0.
+//! Two [`Packer`] policies decide *who* finds that disjoint set:
+//!
+//! * [`Packer::Leader`] — the leader samples uniform candidates and
+//!   resolves conflicts serially against a generation-stamped `mark`
+//!   array, then routes accepted pages to their owner shard. One thread
+//!   does all sampling, conflict detection and routing: simple, exactly
+//!   the paper's thinned-uniform law, but a serial bottleneck that caps
+//!   batch throughput once the per-candidate `out(k)` scans outweigh the
+//!   workers' activation cost (measured in `benches/throughput.rs`).
+//! * [`Packer::Worker`] — each worker samples candidates *from its own
+//!   shard* and claims the closed neighbourhood `{k} ∪ out(k)` in a
+//!   shared generation-stamped atomic claim array (`fetch_max` of a
+//!   priority word). After a barrier, a candidate survives iff it holds
+//!   *every* page of its neighbourhood; survivors are activated by the
+//!   worker that sampled them — no routing, no per-batch allocation, and
+//!   the leader degenerates to a barrier + counter aggregator. The claim
+//!   word is `(generation << CLAIM_SLOT_BITS) | (mask - claim_id)`, so a
+//!   fresh generation always outranks stale stamps (the array is never
+//!   cleared) and, within a generation, the survivors are exactly the
+//!   candidates whose priority wins every page they claimed — a
+//!   deterministic, timing-independent subset of the serial greedy pack
+//!   (a loser's stamps still stand, so candidates overlapping only a
+//!   loser are rejected too; every rejection is counted), which keeps
+//!   seeded runs reproducible.
+//!
+//! Rejected candidates are **counted as conflicts under both packers**,
+//! preserving the thinned activation law of the async coordinator. Under
+//! worker packing the candidate law is uniform *per shard* (each worker
+//! draws uniformly from the pages it owns); with one shard that is the
+//! global uniform law, and worker 0 inherits the caller's exact rng
+//! stream, so `sharded:1:1:*:worker` replays the matrix form bit for bit
+//! (tested below and in `tests/engine.rs`).
+//!
+//! Topology: one leader and `W` persistent workers connected by mpsc
+//! channels plus (for worker packing) a `std::sync::Barrier` separating
+//! the claim and verify/execute phases of a super-step. Page → shard
+//! ownership is a pluggable [`ShardMap`] (modulo or block). Under leader
+//! packing, ownership only routes work (batch supports are disjoint), so
+//! both maps produce identical estimates; under worker packing the map
+//! also shapes the candidate law, so different maps are different (but
+//! individually deterministic) sampling policies.
 //!
 //! Dangling pages are repaired on the fly by the shared implicit
 //! self-loop guard of [`BColumns`] (no `α/0` poisoning — see that
@@ -28,7 +62,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 
 use crate::graph::Graph;
 use crate::linalg::sparse::BColumns;
@@ -113,9 +147,11 @@ fn activate(graph: &Graph, cols: &BColumns, state: &SharedState, k: usize, alpha
 /// low-id range (BA preferential attachment, the star family), where
 /// block ownership would hand one shard all the expensive activations.
 /// `Block` assigns contiguous ranges of `⌈n/W⌉` pages — cache-friendly
-/// contiguous state per worker when degrees are uniform. Ownership only
-/// routes work (batch supports are disjoint), so both maps produce
-/// identical estimates; only the per-shard load differs.
+/// contiguous state per worker when degrees are uniform. Under
+/// [`Packer::Leader`] ownership only routes work (batch supports are
+/// disjoint), so both maps produce identical estimates; under
+/// [`Packer::Worker`] the map additionally defines each worker's local
+/// candidate pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardMap {
     /// `owner(k) = k % W`.
@@ -150,13 +186,205 @@ impl ShardMap {
             ShardMap::Block => k / n.div_ceil(shards),
         }
     }
+
+    /// How many pages of an `n`-page graph shard `w` owns.
+    #[inline]
+    pub fn owned_count(&self, w: usize, n: usize, shards: usize) -> usize {
+        match self {
+            ShardMap::Modulo => n.saturating_sub(w).div_ceil(shards),
+            ShardMap::Block => {
+                let chunk = n.div_ceil(shards);
+                n.saturating_sub(w * chunk).min(chunk)
+            }
+        }
+    }
+
+    /// The `i`-th page owned by shard `w` (`i < owned_count`).
+    #[inline]
+    pub fn owned_page(&self, w: usize, i: usize, n: usize, shards: usize) -> usize {
+        match self {
+            ShardMap::Modulo => w + i * shards,
+            ShardMap::Block => w * n.div_ceil(shards) + i,
+        }
+    }
+}
+
+/// Who packs conflict-free super-steps: the serial leader (`mark`-array
+/// scan + routing) or the workers themselves (shared atomic claim array,
+/// no routing). See the module docs for the trade-off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Packer {
+    /// Leader samples, conflict-checks and routes serially.
+    Leader,
+    /// Workers sample their own shard and claim neighbourhoods via the
+    /// shared atomic claim array; the leader only aggregates counters.
+    Worker,
+}
+
+impl Packer {
+    /// Registry string used by `SolverSpec` (`"leader"` / `"worker"`).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Packer::Leader => "leader",
+            Packer::Worker => "worker",
+        }
+    }
+
+    /// Parse the registry string.
+    pub fn parse(s: &str) -> Option<Packer> {
+        match s {
+            "leader" => Some(Packer::Leader),
+            "worker" => Some(Packer::Worker),
+            _ => None,
+        }
+    }
+}
+
+/// Low bits of a claim word hold the inverted candidate priority; high
+/// bits hold the super-step generation, so `fetch_max` lets fresh claims
+/// always outrank stale stamps and the claim array never needs clearing.
+const CLAIM_SLOT_BITS: u32 = 20;
+const CLAIM_SLOT_MASK: u64 = (1 << CLAIM_SLOT_BITS) - 1;
+
+/// Largest per-super-step batch budget the claim-word priority field can
+/// encode for a given shard count (claim ids run up to
+/// `budget + shards - 1`). `SolverSpec::parse` refuses bigger budgets up
+/// front; [`ShardedRuntime::run`] asserts it as a backstop.
+pub fn max_batch_budget(shards: usize) -> usize {
+    (CLAIM_SLOT_MASK as usize).saturating_sub(shards)
+}
+
+#[inline]
+fn claim_word(gen: u64, claim_id: u64) -> u64 {
+    debug_assert!(claim_id < CLAIM_SLOT_MASK);
+    // Invert the id so that *smaller* claim ids produce *larger* words:
+    // fetch_max then implements "earlier candidate wins" per page. Note
+    // this thins slightly *more* than the leader's serial scan at the
+    // same priority order: a losing candidate's stamps still stand, so
+    // a later candidate overlapping only the loser is rejected too
+    // (counted as a conflict), where serial greedy would accept it.
+    (gen << CLAIM_SLOT_BITS) | (CLAIM_SLOT_MASK - claim_id)
 }
 
 enum Job {
-    /// Pages to activate (all owned by this worker, supports disjoint from
-    /// every other in-flight job).
+    /// Pages to activate, routed by the leader packer (all owned by this
+    /// worker, supports disjoint from every other in-flight job).
     Batch(Vec<u32>),
+    /// Seed the worker's local candidate stream (sent once, before the
+    /// first worker-packed super-step).
+    Seed(Rng),
+    /// One worker-packed super-step: sample `share` candidates from the
+    /// own shard, claim, cross the barrier, then activate the winners.
+    Pack { gen: u64, share: usize },
     Shutdown,
+}
+
+/// Per-super-step outcome a worker reports back to the leader. In leader
+/// mode only `applied`/`buf` are meaningful (the leader tallies
+/// conflicts and logical traffic while packing); in worker mode the
+/// worker owns all four counters and there is no buffer to return.
+#[derive(Default)]
+struct Done {
+    applied: u64,
+    conflicts: u64,
+    reads: u64,
+    writes: u64,
+    /// Leader-mode batch buffer, returned for reuse (the allocation-free
+    /// steady state: buffers cycle leader → worker → leader forever).
+    buf: Option<Vec<u32>>,
+}
+
+/// Everything a worker thread needs; kept in a struct so the spawn loop
+/// below stays readable.
+struct WorkerCtx {
+    w: usize,
+    shards: usize,
+    alpha: f64,
+    map: ShardMap,
+    graph: Arc<Graph>,
+    cols: Arc<BColumns>,
+    state: Arc<SharedState>,
+    claims: Arc<Vec<AtomicU64>>,
+    barrier: Arc<Barrier>,
+    done: Sender<Done>,
+}
+
+fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>) {
+    let n = ctx.graph.n();
+    let owned = ctx.map.owned_count(ctx.w, n, ctx.shards);
+    // Worker-packing locals, allocated once per thread: the candidate
+    // stream and the (page, claim word) queue of the current super-step.
+    let mut rng: Option<Rng> = None;
+    let mut cands: Vec<(u32, u64)> = Vec::new();
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Batch(mut pages) => {
+                let count = pages.len() as u64;
+                for &k in &pages {
+                    activate(&ctx.graph, &ctx.cols, &ctx.state, k as usize, ctx.alpha);
+                }
+                pages.clear();
+                let done = Done { applied: count, buf: Some(pages), ..Done::default() };
+                if ctx.done.send(done).is_err() {
+                    return;
+                }
+            }
+            Job::Seed(stream) => rng = Some(stream),
+            Job::Pack { gen, share } => {
+                // Claim phase: sample locally, stamp every page of the
+                // closed neighbourhood with this candidate's priority
+                // word. fetch_max is commutative, so the post-barrier
+                // claim state is independent of thread timing.
+                cands.clear();
+                if owned > 0 && share > 0 {
+                    let rng = rng.as_mut().expect("worker stream seeded before packing");
+                    cands.reserve(share);
+                    for slot in 0..share {
+                        let k = ctx.map.owned_page(ctx.w, rng.below(owned), n, ctx.shards);
+                        // Interleave priorities across workers (slot-major)
+                        // so no shard's whole batch outranks another's.
+                        let word = claim_word(gen, (slot * ctx.shards + ctx.w) as u64);
+                        ctx.claims[k].fetch_max(word, Ordering::Relaxed);
+                        for &j in ctx.graph.out(k) {
+                            ctx.claims[j as usize].fetch_max(word, Ordering::Relaxed);
+                        }
+                        cands.push((k as u32, word));
+                    }
+                }
+                // All claims visible to all workers from here on.
+                ctx.barrier.wait();
+                // Verify + execute phase: a candidate survives iff its
+                // word won every page of its neighbourhood. Survivors
+                // are pairwise disjoint (each page names one winner) and
+                // the set is deterministic. The leader's recv loop keeps
+                // super-steps from overlapping, so no later generation
+                // can overwrite a claim before it is verified.
+                let mut d = Done::default();
+                for &(k, word) in &cands {
+                    let k = k as usize;
+                    let wins = ctx.claims[k].load(Ordering::Relaxed) == word
+                        && ctx
+                            .graph
+                            .out(k)
+                            .iter()
+                            .all(|&j| ctx.claims[j as usize].load(Ordering::Relaxed) == word);
+                    if wins {
+                        activate(&ctx.graph, &ctx.cols, &ctx.state, k, ctx.alpha);
+                        let deg = ctx.graph.out_degree(k) as u64;
+                        d.applied += 1;
+                        d.reads += deg;
+                        d.writes += deg;
+                    } else {
+                        d.conflicts += 1;
+                    }
+                }
+                if ctx.done.send(d).is_err() {
+                    return;
+                }
+            }
+            Job::Shutdown => return,
+        }
+    }
 }
 
 /// The sharded runtime handle.
@@ -165,15 +393,27 @@ pub struct ShardedRuntime {
     state: Arc<SharedState>,
     workers: Vec<std::thread::JoinHandle<()>>,
     to_workers: Vec<Sender<Job>>,
-    done_rx: Receiver<usize>,
+    done_rx: Receiver<Done>,
     shards: usize,
     map: ShardMap,
-    /// Scratch: generation-tagged marks for conflict-free packing.
+    packer: Packer,
+    /// Scratch: generation-tagged marks for leader-side packing.
     mark: Vec<u64>,
     generation: u64,
+    /// Whether the workers' candidate streams have been seeded (worker
+    /// packing; derived from the first `run` call's rng).
+    streams_seeded: bool,
+    /// Leader-mode routing buffers, one per shard, refilled in place
+    /// every super-step (never reallocated in steady state).
+    route: Vec<Vec<u32>>,
+    /// Recycled batch buffers returned by the workers.
+    spare: Vec<Vec<u32>>,
+    /// Accepted count of the previous super-step — pre-sizes replacement
+    /// buffers so even the warm-up batches allocate right-sized.
+    prev_yield: usize,
     /// Total activations applied.
     activations: u64,
-    /// Candidates dropped due to conflicts (batch packing).
+    /// Candidates dropped due to conflicts (both packers count them).
     conflicts: u64,
     /// Residual reads issued by applied activations (§II-D accounting:
     /// one per out-neighbour — a dangling page's implicit self-read is
@@ -184,53 +424,74 @@ pub struct ShardedRuntime {
 }
 
 impl ShardedRuntime {
-    /// Spin up `shards` worker threads with the default modulo shard map.
+    /// Spin up `shards` worker threads with the default modulo shard map
+    /// and leader-side packing.
     pub fn new(graph: Graph, alpha: f64, shards: usize) -> ShardedRuntime {
         ShardedRuntime::new_with_map(graph, alpha, shards, ShardMap::Modulo)
     }
 
-    /// Spin up `shards` worker threads with an explicit [`ShardMap`].
+    /// Spin up `shards` worker threads with an explicit [`ShardMap`] and
+    /// leader-side packing.
     pub fn new_with_map(
         graph: Graph,
         alpha: f64,
         shards: usize,
         map: ShardMap,
     ) -> ShardedRuntime {
+        ShardedRuntime::new_with_packer(graph, alpha, shards, map, Packer::Leader)
+    }
+
+    /// Spin up `shards` worker threads with an explicit [`ShardMap`] and
+    /// [`Packer`] policy.
+    pub fn new_with_packer(
+        graph: Graph,
+        alpha: f64,
+        shards: usize,
+        map: ShardMap,
+        packer: Packer,
+    ) -> ShardedRuntime {
         assert!(shards >= 1);
         let n = graph.n();
         let graph = Arc::new(graph);
         let cols = Arc::new(BColumns::new(&graph, alpha));
         let state = Arc::new(SharedState::new(n, 1.0 - alpha));
-        let (done_tx, done_rx) = channel::<usize>();
+        // Each packer's scratch is O(n); only materialize the one in use
+        // (claims for worker packing, the mark array for leader packing).
+        let claims: Arc<Vec<AtomicU64>> = Arc::new(match packer {
+            Packer::Worker => (0..n).map(|_| AtomicU64::new(0)).collect(),
+            Packer::Leader => Vec::new(),
+        });
+        let barrier = Arc::new(Barrier::new(shards));
+        let (done_tx, done_rx) = channel::<Done>();
         let mut workers = Vec::with_capacity(shards);
         let mut to_workers = Vec::with_capacity(shards);
-        for _ in 0..shards {
+        for w in 0..shards {
             let (tx, rx) = channel::<Job>();
             to_workers.push(tx);
-            let graph = Arc::clone(&graph);
-            let cols = Arc::clone(&cols);
-            let state = Arc::clone(&state);
-            let done = done_tx.clone();
-            workers.push(std::thread::spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    match job {
-                        Job::Batch(pages) => {
-                            let count = pages.len();
-                            for k in pages {
-                                activate(&graph, &cols, &state, k as usize, alpha);
-                            }
-                            if done.send(count).is_err() {
-                                return;
-                            }
-                        }
-                        Job::Shutdown => return,
-                    }
-                }
-            }));
+            let ctx = WorkerCtx {
+                w,
+                shards,
+                alpha,
+                map,
+                graph: Arc::clone(&graph),
+                cols: Arc::clone(&cols),
+                state: Arc::clone(&state),
+                claims: Arc::clone(&claims),
+                barrier: Arc::clone(&barrier),
+                done: done_tx.clone(),
+            };
+            workers.push(std::thread::spawn(move || worker_loop(ctx, rx)));
         }
         ShardedRuntime {
-            mark: vec![0; n],
+            mark: match packer {
+                Packer::Leader => vec![0; n],
+                Packer::Worker => Vec::new(),
+            },
             generation: 0,
+            streams_seeded: false,
+            route: (0..shards).map(|_| Vec::new()).collect(),
+            spare: Vec::new(),
+            prev_yield: 0,
             graph,
             state,
             workers,
@@ -238,6 +499,7 @@ impl ShardedRuntime {
             done_rx,
             shards,
             map,
+            packer,
             activations: 0,
             conflicts: 0,
             logical_reads: 0,
@@ -245,65 +507,134 @@ impl ShardedRuntime {
         }
     }
 
-    /// Pack a conflict-free batch of up to `budget` uniform candidates
-    /// (first-come-first-kept; rejected candidates are counted, preserving
-    /// the thinned-uniform activation law of the async coordinator).
-    fn pack(&mut self, budget: usize, rng: &mut Rng) -> Vec<u32> {
-        self.generation += 1;
-        let gen = self.generation;
-        let mut accepted = Vec::with_capacity(budget);
-        'cand: for _ in 0..budget {
-            let k = rng.below(self.graph.n());
-            if self.mark[k] == gen {
-                self.conflicts += 1;
-                continue;
-            }
-            for &j in self.graph.out(k) {
-                if self.mark[j as usize] == gen {
-                    self.conflicts += 1;
-                    continue 'cand;
-                }
-            }
-            self.mark[k] = gen;
-            for &j in self.graph.out(k) {
-                self.mark[j as usize] = gen;
-            }
-            accepted.push(k as u32);
-        }
-        accepted
-    }
-
     /// Run `batches` super-steps of up to `batch_budget` candidate
     /// activations each. Returns activations applied.
+    ///
+    /// Under [`Packer::Leader`] the rng drives the leader's global
+    /// uniform candidate stream. Under [`Packer::Worker`] it seeds the
+    /// per-worker streams on the first call (worker 0 *clones* it, so a
+    /// 1-shard run replays the caller's stream exactly; workers `w > 0`
+    /// fork decorrelated streams) and is left untouched afterwards —
+    /// sampling has moved into the workers.
     pub fn run(&mut self, batches: usize, batch_budget: usize, rng: &mut Rng) -> u64 {
+        match self.packer {
+            Packer::Leader => self.run_leader_packed(batches, batch_budget, rng),
+            Packer::Worker => self.run_worker_packed(batches, batch_budget, rng),
+        }
+    }
+
+    /// Leader-side packing: serial sample + `mark`-scan + routing, with
+    /// activations fanned out to the owner shards. Buffers cycle between
+    /// leader and workers, so the steady state allocates nothing.
+    fn run_leader_packed(&mut self, batches: usize, budget: usize, rng: &mut Rng) -> u64 {
         let n = self.graph.n();
         let mut applied = 0u64;
         for _ in 0..batches {
-            let batch = self.pack(batch_budget, rng);
-            if batch.is_empty() {
-                continue;
-            }
-            // Route each activation to the owner shard.
-            let mut per_shard: Vec<Vec<u32>> = vec![Vec::new(); self.shards];
-            for k in batch {
-                let deg = self.graph.out_degree(k as usize) as u64;
-                self.logical_reads += deg;
-                self.logical_writes += deg;
-                per_shard[self.map.owner(k as usize, n, self.shards)].push(k);
-            }
-            let mut outstanding = 0usize;
-            for (w, pages) in per_shard.into_iter().enumerate() {
-                if pages.is_empty() {
+            self.generation += 1;
+            let gen = self.generation;
+            // Pack straight into the per-shard route buffers
+            // (first-come-first-kept; rejected candidates are counted,
+            // preserving the thinned-uniform activation law of the async
+            // coordinator).
+            let mut accepted = 0usize;
+            'cand: for _ in 0..budget {
+                let k = rng.below(n);
+                if self.mark[k] == gen {
+                    self.conflicts += 1;
                     continue;
                 }
-                applied += pages.len() as u64;
-                self.to_workers[w].send(Job::Batch(pages)).expect("worker alive");
+                for &j in self.graph.out(k) {
+                    if self.mark[j as usize] == gen {
+                        self.conflicts += 1;
+                        continue 'cand;
+                    }
+                }
+                self.mark[k] = gen;
+                for &j in self.graph.out(k) {
+                    self.mark[j as usize] = gen;
+                }
+                let deg = self.graph.out_degree(k) as u64;
+                self.logical_reads += deg;
+                self.logical_writes += deg;
+                let owner = self.map.owner(k, n, self.shards);
+                self.route[owner].push(k as u32);
+                accepted += 1;
+            }
+            if accepted == 0 {
+                continue;
+            }
+            let mut outstanding = 0usize;
+            for w in 0..self.shards {
+                if self.route[w].is_empty() {
+                    continue;
+                }
+                // Hand the filled buffer to the worker; replace it from
+                // the recycle pool (or, while the pool warms up, a fresh
+                // vec pre-sized from the previous super-step's yield).
+                let replacement = self.spare.pop().unwrap_or_else(|| {
+                    Vec::with_capacity(self.prev_yield.div_ceil(self.shards).max(1))
+                });
+                let buf = std::mem::replace(&mut self.route[w], replacement);
+                applied += buf.len() as u64;
+                self.to_workers[w].send(Job::Batch(buf)).expect("worker alive");
                 outstanding += 1;
             }
-            // Barrier: wait for all shards of this super-step (provides the
-            // inter-batch happens-before edge).
+            self.prev_yield = accepted;
+            // Barrier: wait for all shards of this super-step (provides
+            // the inter-batch happens-before edge) and recover their
+            // buffers.
             for _ in 0..outstanding {
-                self.done_rx.recv().expect("worker alive");
+                let done = self.done_rx.recv().expect("worker alive");
+                if let Some(buf) = done.buf {
+                    self.spare.push(buf);
+                }
+            }
+        }
+        self.activations += applied;
+        applied
+    }
+
+    /// Worker-side packing: the leader only hands out the generation
+    /// number and per-shard budget shares, then aggregates counters —
+    /// sampling, conflict detection and activation all run shard-local.
+    fn run_worker_packed(&mut self, batches: usize, budget: usize, rng: &mut Rng) -> u64 {
+        assert!(
+            budget <= max_batch_budget(self.shards),
+            "batch budget {budget} too large for the claim-word priority field \
+             (max {} at {} shards)",
+            max_batch_budget(self.shards),
+            self.shards
+        );
+        if !self.streams_seeded {
+            for (w, tx) in self.to_workers.iter().enumerate() {
+                // Worker 0 inherits the caller's stream verbatim (this is
+                // what pins `sharded:1:1:*:worker` bit-identical to the
+                // matrix form); the rest fork decorrelated streams.
+                let stream = if w == 0 { rng.clone() } else { rng.fork(w as u64) };
+                tx.send(Job::Seed(stream)).expect("worker alive");
+            }
+            self.streams_seeded = true;
+        }
+        let per = budget / self.shards;
+        let extra = budget % self.shards;
+        let mut applied = 0u64;
+        for _ in 0..batches {
+            self.generation += 1;
+            let gen = self.generation;
+            for (w, tx) in self.to_workers.iter().enumerate() {
+                let share = per + usize::from(w < extra);
+                tx.send(Job::Pack { gen, share }).expect("worker alive");
+            }
+            // Leader-as-aggregator: every worker reports exactly once
+            // per super-step (even with an empty share — it still has to
+            // cross the claim barrier), and the recv loop keeps
+            // generations from overlapping.
+            for _ in 0..self.shards {
+                let d = self.done_rx.recv().expect("worker alive");
+                applied += d.applied;
+                self.conflicts += d.conflicts;
+                self.logical_reads += d.reads;
+                self.logical_writes += d.writes;
             }
         }
         self.activations += applied;
@@ -360,6 +691,10 @@ impl ShardedRuntime {
     pub fn shard_map(&self) -> ShardMap {
         self.map
     }
+
+    pub fn packer(&self) -> Packer {
+        self.packer
+    }
 }
 
 impl Drop for ShardedRuntime {
@@ -387,6 +722,28 @@ mod tests {
         let alpha = 0.85;
         let mut rt = ShardedRuntime::new(g.clone(), alpha, 4);
         let mut rng = Rng::seeded(1);
+        rt.run(200, 16, &mut rng);
+        assert!(rt.activations() > 0);
+        let b = DenseMatrix::b_matrix(&g, alpha);
+        let bx = b.matvec(&rt.estimate());
+        for (i, (v, r)) in bx.iter().zip(rt.residual()).enumerate() {
+            assert!(
+                (v + r - (1.0 - alpha)).abs() < 1e-10,
+                "conservation broken at page {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn conservation_holds_under_worker_packing() {
+        // Same invariant when the workers pack for themselves: survivors
+        // of the claim phase are disjoint, so B·x + r stays an exact
+        // telescoping of (1-α)·1.
+        let g = generators::erdos_renyi(300, 0.01, 2101);
+        let alpha = 0.85;
+        let mut rt =
+            ShardedRuntime::new_with_packer(g.clone(), alpha, 4, ShardMap::Modulo, Packer::Worker);
+        let mut rng = Rng::seeded(2);
         rt.run(200, 16, &mut rng);
         assert!(rt.activations() > 0);
         let b = DenseMatrix::b_matrix(&g, alpha);
@@ -429,6 +786,21 @@ mod tests {
     }
 
     #[test]
+    fn worker_packing_converges_to_exact_pagerank() {
+        // Per-shard uniform sampling still activates every page
+        // infinitely often, so the residual telescopes to the same fixed
+        // point the leader packer reaches.
+        let g = generators::erdos_renyi(150, 0.03, 2103);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut rt =
+            ShardedRuntime::new_with_packer(g, 0.85, 4, ShardMap::Modulo, Packer::Worker);
+        let mut rng = Rng::seeded(10);
+        rt.run(60_000, 8, &mut rng);
+        let err = vector::dist_inf(&rt.estimate(), &x_star);
+        assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
     fn conflicts_counted_on_dense_graphs() {
         let g = generators::er_threshold(60, 0.5, 2004);
         let mut rt = ShardedRuntime::new(g, 0.85, 2);
@@ -438,21 +810,51 @@ mod tests {
     }
 
     #[test]
+    fn worker_packing_counts_conflicts_on_dense_graphs() {
+        // The thinned law survives the move into the workers: losing
+        // claimants are counted, not silently dropped.
+        let g = generators::er_threshold(60, 0.5, 2104);
+        let mut rt =
+            ShardedRuntime::new_with_packer(g, 0.85, 2, ShardMap::Modulo, Packer::Worker);
+        let mut rng = Rng::seeded(12);
+        rt.run(50, 16, &mut rng);
+        assert!(rt.conflicts() > 0, "dense graphs must produce claim conflicts");
+    }
+
+    #[test]
     fn single_shard_single_candidate_equals_matrix_form() {
         use crate::algo::mp::MatchingPursuit;
         let g = generators::er_threshold(40, 0.5, 2005);
-        let mut rt = ShardedRuntime::new(g.clone(), 0.85, 1);
-        let mut rng1 = Rng::seeded(13);
-        rt.run(500, 1, &mut rng1);
-        // Matrix form replaying the same sampler stream (batch=1 packing
-        // draws exactly one page per super-step and never conflicts).
-        let mut mp = MatchingPursuit::new(&g, 0.85);
-        let mut rng2 = Rng::seeded(13);
-        for _ in 0..500 {
-            let k = rng2.below(40);
-            mp.step_at(k);
+        // Both packers: 1 shard × batch 1 draws exactly one page per
+        // super-step from the caller's stream (worker 0 clones it) and
+        // never conflicts — bit-identical to the matrix form.
+        for packer in [Packer::Leader, Packer::Worker] {
+            let mut rt = ShardedRuntime::new_with_packer(
+                g.clone(),
+                0.85,
+                1,
+                ShardMap::Modulo,
+                packer,
+            );
+            let mut rng1 = Rng::seeded(13);
+            rt.run(500, 1, &mut rng1);
+            // Matrix form replaying the same sampler stream.
+            let mut mp = MatchingPursuit::new(&g, 0.85);
+            let mut rng2 = Rng::seeded(13);
+            for _ in 0..500 {
+                let k = rng2.below(40);
+                mp.step_at(k);
+            }
+            assert!(
+                vector::dist_inf(
+                    &rt.estimate(),
+                    &crate::algo::common::PageRankSolver::estimate(&mp)
+                ) < 1e-13,
+                "{packer:?} packer diverged from the matrix form"
+            );
+            assert_eq!(rt.activations(), 500, "{packer:?}: one activation per super-step");
+            assert_eq!(rt.conflicts(), 0, "{packer:?}: a single candidate can never conflict");
         }
-        assert!(vector::dist_inf(&rt.estimate(), &crate::algo::common::PageRankSolver::estimate(&mp)) < 1e-13);
     }
 
     #[test]
@@ -474,6 +876,41 @@ mod tests {
     }
 
     #[test]
+    fn worker_packing_is_deterministic_across_runs() {
+        // The priority claim resolution is commutative, so the survivor
+        // set — and with it every counter and the estimate — is a pure
+        // function of the seed, independent of thread scheduling.
+        let g = generators::er_threshold(80, 0.3, 2007);
+        let run = || {
+            let mut rt = ShardedRuntime::new_with_packer(
+                g.clone(),
+                0.85,
+                4,
+                ShardMap::Modulo,
+                Packer::Worker,
+            );
+            let mut rng = Rng::seeded(31);
+            rt.run(200, 16, &mut rng);
+            (
+                rt.estimate(),
+                rt.activations(),
+                rt.conflicts(),
+                rt.logical_reads(),
+                rt.logical_writes(),
+            )
+        };
+        let (xa, aa, ca, ra, wa) = run();
+        let (xb, ab, cb, rb, wb) = run();
+        assert_eq!(xa, xb, "estimates must be bit-identical across runs");
+        assert_eq!(aa, ab);
+        assert_eq!(ca, cb);
+        assert_eq!(ra, rb);
+        assert_eq!(wa, wb);
+        assert_eq!(ra, wa, "§II-D: every read pairs with a write");
+        assert!(ca > 0, "a dense-ish graph at budget 16 must see claim conflicts");
+    }
+
+    #[test]
     fn shard_map_owners_in_range_and_round_trip() {
         for (n, shards) in [(5usize, 8usize), (100, 4), (101, 4), (1, 1)] {
             for map in [ShardMap::Modulo, ShardMap::Block] {
@@ -485,23 +922,52 @@ mod tests {
             }
         }
         assert_eq!(ShardMap::parse("diagonal"), None);
+        assert_eq!(Packer::parse("leader"), Some(Packer::Leader));
+        assert_eq!(Packer::parse("worker"), Some(Packer::Worker));
+        assert_eq!(Packer::parse("boss"), None);
+    }
+
+    #[test]
+    fn owned_pages_partition_the_graph() {
+        // owner / owned_count / owned_page must agree: the owned pages of
+        // all shards tile [0, n) exactly, under both maps, including the
+        // shards > n and non-divisible cases.
+        for (n, shards) in [(5usize, 8usize), (100, 4), (101, 4), (1, 1), (30, 7)] {
+            for map in [ShardMap::Modulo, ShardMap::Block] {
+                let mut seen = vec![false; n];
+                for w in 0..shards {
+                    let count = map.owned_count(w, n, shards);
+                    for i in 0..count {
+                        let k = map.owned_page(w, i, n, shards);
+                        assert!(k < n, "{map:?} owned_page({w},{i},{n},{shards}) = {k}");
+                        assert_eq!(map.owner(k, n, shards), w, "{map:?} owner mismatch");
+                        assert!(!seen[k], "{map:?} page {k} owned twice");
+                        seen[k] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "{map:?} ({n},{shards}) pages unowned");
+            }
+        }
     }
 
     #[test]
     fn dangling_node_runs_to_convergence_with_finite_residuals() {
         // Regression: activate() used to compute α/out_degree with no
-        // guard, so any sink page produced NaN/inf residuals.
-        let g = generators::chain(30); // page 29 is a genuine sink
-        assert_eq!(g.dangling(), vec![29]);
-        let x_star = exact_pagerank(&g, 0.85);
-        let mut rt = ShardedRuntime::new(g, 0.85, 3);
-        let mut rng = Rng::seeded(23);
-        rt.run(40_000, 4, &mut rng);
-        for (i, r) in rt.residual().into_iter().enumerate() {
-            assert!(r.is_finite(), "residual at page {i} poisoned: {r}");
+        // guard, so any sink page produced NaN/inf residuals. Both
+        // packers must route through the shared BColumns guard.
+        for packer in [Packer::Leader, Packer::Worker] {
+            let g = generators::chain(30); // page 29 is a genuine sink
+            assert_eq!(g.dangling(), vec![29]);
+            let x_star = exact_pagerank(&g, 0.85);
+            let mut rt = ShardedRuntime::new_with_packer(g, 0.85, 3, ShardMap::Modulo, packer);
+            let mut rng = Rng::seeded(23);
+            rt.run(40_000, 4, &mut rng);
+            for (i, r) in rt.residual().into_iter().enumerate() {
+                assert!(r.is_finite(), "{packer:?}: residual at page {i} poisoned: {r}");
+            }
+            let err = vector::dist_inf(&rt.estimate(), &x_star);
+            assert!(err < 1e-6, "{packer:?}: err={err}");
         }
-        let err = vector::dist_inf(&rt.estimate(), &x_star);
-        assert!(err < 1e-6, "err={err}");
     }
 
     #[test]
@@ -520,12 +986,43 @@ mod tests {
     #[test]
     fn shards_survive_empty_batches() {
         // star graph: hub conflicts with everything; batch budget 4 packs
-        // at most 1 activation, sometimes 0 after dedup.
-        let g = generators::star(20);
-        let mut rt = ShardedRuntime::new(g, 0.85, 3);
-        let mut rng = Rng::seeded(17);
-        let applied = rt.run(200, 4, &mut rng);
-        assert!(applied > 0);
-        assert_eq!(rt.activations(), applied);
+        // at most 1 activation, sometimes 0 after dedup. Both packers
+        // must keep cycling through (near-)empty super-steps.
+        for packer in [Packer::Leader, Packer::Worker] {
+            let g = generators::star(20);
+            let mut rt = ShardedRuntime::new_with_packer(g, 0.85, 3, ShardMap::Modulo, packer);
+            let mut rng = Rng::seeded(17);
+            let applied = rt.run(200, 4, &mut rng);
+            assert!(applied > 0, "{packer:?}");
+            assert_eq!(rt.activations(), applied, "{packer:?}");
+        }
+    }
+
+    #[test]
+    fn worker_packing_with_more_shards_than_pages() {
+        // Degenerate split: some workers own zero pages and zero-share
+        // super-steps; the barrier must still cycle and the runtime
+        // still converge on the pages that exist.
+        let g = generators::er_threshold(5, 0.5, 2009);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut rt =
+            ShardedRuntime::new_with_packer(g, 0.85, 8, ShardMap::Block, Packer::Worker);
+        let mut rng = Rng::seeded(19);
+        rt.run(20_000, 8, &mut rng);
+        let err = vector::dist_inf(&rt.estimate(), &x_star);
+        assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
+    fn claim_words_rank_generation_over_priority() {
+        // A fresh generation must outrank any stale stamp, and within a
+        // generation a smaller claim id must win fetch_max.
+        let newer = claim_word(7, 0);
+        let older_best = claim_word(6, 0);
+        assert!(newer > older_best, "new generations must beat stale claims");
+        assert!(
+            claim_word(7, 3) > claim_word(7, 12),
+            "earlier candidates (smaller ids) must win within a generation"
+        );
     }
 }

@@ -19,9 +19,13 @@
 //! — the distributed runtime and the matrix form are interchangeable
 //! inside one scenario (bit-for-bit; tested in `tests/engine.rs`). The
 //! multi-threaded sharded backend draws its candidates from the same
-//! stream, so `sharded:1:1` is the same equivalence anchor executed on
-//! a worker thread, and its results are shard-count- and
-//! shard-map-invariant (disjoint batch supports commute).
+//! stream (under worker packing, worker 0 clones it and the remaining
+//! shards fork decorrelated streams), so `sharded:1:1` is the same
+//! equivalence anchor executed on a worker thread under **either**
+//! packer. Leader-packed results are shard-count- and
+//! shard-map-invariant (disjoint batch supports commute); worker-packed
+//! results additionally depend on the shard layout — each worker
+//! samples its own shard — but stay deterministic per seed.
 
 use std::collections::BTreeMap;
 
@@ -36,7 +40,7 @@ use crate::util::rng::Rng;
 
 use super::graph_spec::GraphSpec;
 use super::report::{fitted_decay, ScenarioReport, SolverReport};
-use super::solver_spec::{CoordinatorSolver, ShardedSolver, SolverSpec};
+use super::solver_spec::{CoordinatorSolver, SolverSpec};
 
 /// How the reference solution `x*` is obtained.
 #[derive(Debug, Clone, PartialEq)]
@@ -218,28 +222,6 @@ impl Scenario {
                             .expect("spec is a coordinator");
                             coord.record(&x_star, self.steps, self.stride)
                         }
-                        // Typed build so the runtime's conflict counter
-                        // survives into the report (the boxed trait
-                        // object would hide it). One step = one
-                        // super-step of up to `batch` candidates.
-                        SolverSpec::Sharded { shards, batch, map } => {
-                            let mut sh = ShardedSolver::new(
-                                &graph, self.alpha, *shards, *batch, *map,
-                            );
-                            let mut step_rng = Rng::seeded(solver_seed).fork(1);
-                            let tr = Trajectory::record(
-                                &mut sh,
-                                &x_star,
-                                self.steps,
-                                self.stride,
-                                &mut step_rng,
-                            );
-                            conflicts.fetch_add(
-                                sh.conflicts(),
-                                std::sync::atomic::Ordering::Relaxed,
-                            );
-                            (tr.errors, tr.total_stats)
-                        }
                         _ => {
                             let mut solver = spec.build(&graph, self.alpha, solver_seed);
                             let mut step_rng = Rng::seeded(solver_seed).fork(1);
@@ -249,6 +231,12 @@ impl Scenario {
                                 self.steps,
                                 self.stride,
                                 &mut step_rng,
+                            );
+                            // Packer-dropped candidates (sharded backend;
+                            // 0 everywhere else) summed across rounds.
+                            conflicts.fetch_add(
+                                solver.conflicts(),
+                                std::sync::atomic::Ordering::Relaxed,
                             );
                             (tr.errors, tr.total_stats)
                         }

@@ -23,7 +23,8 @@ use crate::algo::{
     power_iteration, you_tempo_qiu,
 };
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, Mode, RunReport, SamplerKind, ShardMap, ShardedRuntime,
+    Coordinator, CoordinatorConfig, Mode, Packer, RunReport, SamplerKind, ShardMap,
+    ShardedRuntime,
 };
 use crate::graph::Graph;
 use crate::network::LatencyModel;
@@ -62,12 +63,15 @@ pub enum SolverSpec {
     },
     /// The real multi-threaded deployment:
     /// [`crate::coordinator::ShardedRuntime`] with `shards` OS workers,
-    /// conflict-free super-steps of up to `batch` candidates, and a
-    /// pluggable page→shard ownership map.
+    /// conflict-free super-steps of up to `batch` candidates, a
+    /// pluggable page→shard ownership map, and a pluggable packing
+    /// policy (`leader` = serial leader-side packing, `worker` =
+    /// decentralized claim-array packing in the workers).
     Sharded {
         shards: usize,
         batch: usize,
         map: ShardMap,
+        packer: Packer,
     },
     /// The dense backend: Jacobi sweeps on a materialized hyperlink
     /// matrix ([`dense_engine::DenseJacobi`], the host twin of the PJRT
@@ -131,8 +135,8 @@ impl SolverSpec {
                 sampler_key(*sampler),
                 latency_key(*latency)
             ),
-            SolverSpec::Sharded { shards, batch, map } => {
-                format!("sharded:{shards}:{batch}:{}", map.key())
+            SolverSpec::Sharded { shards, batch, map, packer } => {
+                format!("sharded:{shards}:{batch}:{}:{}", map.key(), packer.key())
             }
             SolverSpec::Dense => "dense".to_string(),
         }
@@ -154,8 +158,11 @@ impl SolverSpec {
             SolverSpec::Coordinator { .. } => {
                 "distributed runtime: page agents + samplers + simulated network"
             }
-            SolverSpec::Sharded { .. } => {
-                "sharded runtime: OS worker threads, conflict-free super-steps"
+            SolverSpec::Sharded { packer: Packer::Leader, .. } => {
+                "sharded runtime: OS worker threads, leader-packed super-steps"
+            }
+            SolverSpec::Sharded { packer: Packer::Worker, .. } => {
+                "sharded runtime: OS worker threads, worker-packed (atomic claim array)"
             }
             SolverSpec::Dense => "dense backend: Jacobi sweeps on a materialized A (O(N²))",
         }
@@ -213,16 +220,17 @@ impl SolverSpec {
             "power" | "power-iteration" | "jacobi" => Ok(SolverSpec::PowerIteration),
             "dense" => Ok(SolverSpec::Dense),
             "sharded" | "sh" => {
+                let grammar = "sharded:<shards>[:<batch>[:<mod|block>[:<leader|worker>]]]";
                 let shards = match parts.get(1) {
                     None => 4,
-                    Some(v) => v.parse().map_err(|_| arity_err("sharded:<shards>[:<batch>[:<mod|block>]]"))?,
+                    Some(v) => v.parse().map_err(|_| arity_err(grammar))?,
                 };
                 if shards == 0 {
                     return Err(arity_err("a shard count >= 1"));
                 }
                 let batch = match parts.get(2) {
                     None => 8,
-                    Some(v) => v.parse().map_err(|_| arity_err("sharded:<shards>:<batch>[:<mod|block>]"))?,
+                    Some(v) => v.parse().map_err(|_| arity_err(grammar))?,
                 };
                 if batch == 0 {
                     return Err(arity_err("a batch budget >= 1"));
@@ -232,10 +240,25 @@ impl SolverSpec {
                     Some(m) => ShardMap::parse(m)
                         .ok_or_else(|| format!("bad shard map {m:?} (mod|block)"))?,
                 };
-                if parts.len() > 4 {
-                    return Err(arity_err("sharded:<shards>[:<batch>[:<mod|block>]]"));
+                let packer = match parts.get(4) {
+                    None => Packer::Leader,
+                    Some(p) => Packer::parse(p)
+                        .ok_or_else(|| format!("bad packer {p:?} (leader|worker)"))?,
+                };
+                if parts.len() > 5 {
+                    return Err(arity_err(grammar));
                 }
-                Ok(SolverSpec::Sharded { shards, batch, map })
+                // Bound the budget the worker packer's claim words can
+                // encode (uniform across packers so a spec stays valid
+                // when only its packer segment changes).
+                let max = crate::coordinator::sharded::max_batch_budget(shards);
+                if batch > max {
+                    return Err(format!(
+                        "solver spec {s:?}: batch {batch} exceeds the packable \
+                         maximum {max} at {shards} shard(s)"
+                    ));
+                }
+                Ok(SolverSpec::Sharded { shards, batch, map, packer })
             }
             "google-power" | "google" => Ok(SolverSpec::GooglePower),
             "ishii-tempo" | "it" => Ok(SolverSpec::IshiiTempo),
@@ -294,7 +317,18 @@ impl SolverSpec {
             SolverSpec::MonteCarlo,
             SolverSpec::DynamicMp,
             SolverSpec::sequential_coordinator(),
-            SolverSpec::Sharded { shards: 2, batch: 8, map: ShardMap::Modulo },
+            SolverSpec::Sharded {
+                shards: 2,
+                batch: 8,
+                map: ShardMap::Modulo,
+                packer: Packer::Leader,
+            },
+            SolverSpec::Sharded {
+                shards: 2,
+                batch: 8,
+                map: ShardMap::Modulo,
+                packer: Packer::Worker,
+            },
             SolverSpec::Dense,
         ]
     }
@@ -345,8 +379,8 @@ impl SolverSpec {
             SolverSpec::Coordinator { mode, sampler, latency } => Box::new(
                 CoordinatorSolver::build(graph, alpha, seed, *mode, *sampler, *latency),
             ),
-            SolverSpec::Sharded { shards, batch, map } => {
-                Box::new(ShardedSolver::new(graph, alpha, *shards, *batch, *map))
+            SolverSpec::Sharded { shards, batch, map, packer } => {
+                Box::new(ShardedSolver::new(graph, alpha, *shards, *batch, *map, *packer))
             }
             SolverSpec::Dense => Box::new(dense_engine::DenseJacobi::new(graph, alpha)),
         }
@@ -356,10 +390,12 @@ impl SolverSpec {
 /// [`PageRankSolver`] adapter over the multi-threaded
 /// [`ShardedRuntime`]: one trait `step` = one conflict-free super-step of
 /// up to `batch` candidate activations, executed on the runtime's worker
-/// threads. The candidate stream comes from the `rng` handed to `step`,
-/// so inside a [`super::Scenario`] a `shards=1, batch=1` run replays the
-/// *identical* activation sequence as [`SolverSpec::Mp`] (packing one
-/// candidate never conflicts) — the backend-equivalence anchor tested in
+/// threads. The candidate stream comes from the `rng` handed to `step`
+/// (under worker packing it seeds the per-worker streams on the first
+/// step, worker 0 cloning it verbatim), so inside a [`super::Scenario`] a
+/// `shards=1, batch=1` run replays the *identical* activation sequence
+/// as [`SolverSpec::Mp`] under **either** packer (packing one candidate
+/// never conflicts) — the backend-equivalence anchor tested in
 /// `tests/engine.rs`.
 ///
 /// The runtime owns a clone of the graph (workers need `'static` shared
@@ -380,21 +416,16 @@ impl ShardedSolver {
         shards: usize,
         batch: usize,
         map: ShardMap,
+        packer: Packer,
     ) -> ShardedSolver {
         assert!(batch >= 1);
         ShardedSolver {
-            rt: ShardedRuntime::new_with_map(graph.clone(), alpha, shards, map),
+            rt: ShardedRuntime::new_with_packer(graph.clone(), alpha, shards, map, packer),
             batch,
             prev_reads: 0,
             prev_writes: 0,
             prev_activations: 0,
         }
-    }
-
-    /// Candidates dropped by conflict-free packing so far — the
-    /// "conflicts-dropped" column of the scenario report.
-    pub fn conflicts(&self) -> u64 {
-        self.rt.conflicts()
     }
 
     /// Typed access to the wrapped runtime.
@@ -431,8 +462,17 @@ impl PageRankSolver for ShardedSolver {
         self.rt.error_sq_vs(x_star)
     }
 
+    /// The "conflicts dropped" column of the scenario report — candidates
+    /// the runtime's packer rejected (thinned-uniform accounting).
+    fn conflicts(&self) -> u64 {
+        self.rt.conflicts()
+    }
+
     fn name(&self) -> &'static str {
-        "sharded runtime (worker threads)"
+        match self.rt.packer() {
+            Packer::Leader => "sharded runtime (leader-packed)",
+            Packer::Worker => "sharded runtime (worker-packed)",
+        }
     }
 }
 
@@ -675,7 +715,14 @@ mod tests {
         assert!(SolverSpec::parse("sharded:0").is_err());
         assert!(SolverSpec::parse("sharded:2:0").is_err());
         assert!(SolverSpec::parse("sharded:2:8:diagonal").is_err());
-        assert!(SolverSpec::parse("sharded:2:8:mod:extra").is_err());
+        assert!(SolverSpec::parse("sharded:2:8:mod:boss").is_err());
+        assert!(SolverSpec::parse("sharded:2:8:mod:worker:extra").is_err());
+        // Budget beyond the claim-word priority field is refused at parse
+        // time (for either packer) instead of panicking mid-run.
+        assert!(SolverSpec::parse("sharded:2:2000000:mod:worker").is_err());
+        assert!(SolverSpec::parse("sharded:2:2000000").is_err());
+        let max = crate::coordinator::sharded::max_batch_budget(2);
+        assert!(SolverSpec::parse(&format!("sharded:2:{max}:mod:worker")).is_ok());
     }
 
     #[test]
@@ -683,15 +730,43 @@ mod tests {
         assert_eq!(SolverSpec::parse("dense").expect("ok"), SolverSpec::Dense);
         assert_eq!(
             SolverSpec::parse("sharded").expect("ok"),
-            SolverSpec::Sharded { shards: 4, batch: 8, map: ShardMap::Modulo }
+            SolverSpec::Sharded {
+                shards: 4,
+                batch: 8,
+                map: ShardMap::Modulo,
+                packer: Packer::Leader,
+            }
         );
         assert_eq!(
             SolverSpec::parse("sharded:2").expect("ok"),
-            SolverSpec::Sharded { shards: 2, batch: 8, map: ShardMap::Modulo }
+            SolverSpec::Sharded {
+                shards: 2,
+                batch: 8,
+                map: ShardMap::Modulo,
+                packer: Packer::Leader,
+            }
         );
         assert_eq!(
             SolverSpec::parse("sh:8:32:block").expect("ok"),
-            SolverSpec::Sharded { shards: 8, batch: 32, map: ShardMap::Block }
+            SolverSpec::Sharded {
+                shards: 8,
+                batch: 32,
+                map: ShardMap::Block,
+                packer: Packer::Leader,
+            }
+        );
+        assert_eq!(
+            SolverSpec::parse("sharded:8:64:mod:worker").expect("ok"),
+            SolverSpec::Sharded {
+                shards: 8,
+                batch: 64,
+                map: ShardMap::Modulo,
+                packer: Packer::Worker,
+            }
+        );
+        assert_eq!(
+            SolverSpec::parse("sharded:8:64:mod:worker").expect("ok").key(),
+            "sharded:8:64:mod:worker"
         );
     }
 
@@ -725,19 +800,22 @@ mod tests {
     #[test]
     fn sharded_adapter_reports_batch_stats_and_conflicts() {
         // Dense paper graph: batches conflict, so the adapter must count
-        // both applied activations and dropped candidates.
-        let g = generators::er_threshold(40, 0.5, 33);
-        let mut sh = ShardedSolver::new(&g, 0.85, 2, 16, ShardMap::Modulo);
-        let mut rng = Rng::seeded(34);
-        let mut activated = 0;
-        for _ in 0..50 {
-            let st = sh.step(&mut rng);
-            assert_eq!(st.reads, st.writes);
-            activated += st.activated;
+        // both applied activations and dropped candidates — under either
+        // packing policy.
+        for packer in [Packer::Leader, Packer::Worker] {
+            let g = generators::er_threshold(40, 0.5, 33);
+            let mut sh = ShardedSolver::new(&g, 0.85, 2, 16, ShardMap::Modulo, packer);
+            let mut rng = Rng::seeded(34);
+            let mut activated = 0;
+            for _ in 0..50 {
+                let st = sh.step(&mut rng);
+                assert_eq!(st.reads, st.writes, "{packer:?}");
+                activated += st.activated;
+            }
+            assert!(activated > 0, "{packer:?}");
+            assert!(sh.conflicts() > 0, "{packer:?}: dense graphs must drop candidates");
+            assert_eq!(sh.runtime().activations(), activated as u64, "{packer:?}");
         }
-        assert!(activated > 0);
-        assert!(sh.conflicts() > 0, "dense graphs must drop candidates");
-        assert_eq!(sh.runtime().activations(), activated as u64);
     }
 
     #[test]

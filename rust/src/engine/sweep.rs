@@ -18,10 +18,10 @@
 //! }
 //! ```
 //!
-//! Axes are applied to the *relevant* specs: `shards`/`batch` rewrite the
-//! sharded (and, for `batch`, parallel-mp) solver entries, `latency`
-//! rewrites coordinator entries, and naming an axis with no applicable
-//! solver is an error rather than a silent no-op. Axis order is
+//! Axes are applied to the *relevant* specs: `shards`/`batch`/`packer`
+//! rewrite the sharded (and, for `batch`, parallel-mp) solver entries,
+//! `latency` rewrites coordinator entries, and naming an axis with no
+//! applicable solver is an error rather than a silent no-op. Axis order is
 //! alphabetical (stable), values keep their listed order, so cell
 //! expansion is deterministic.
 
@@ -47,7 +47,7 @@ pub struct Sweep {
 
 /// The grid axes [`Sweep`] understands.
 pub const SWEEP_AXES: &[&str] = &[
-    "alpha", "batch", "latency", "n", "rounds", "seed", "shards", "steps", "stride",
+    "alpha", "batch", "latency", "n", "packer", "rounds", "seed", "shards", "steps", "stride",
 ];
 
 fn render_param(v: &Json) -> String {
@@ -122,7 +122,16 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
             }
             let mut hit = false;
             for s in &mut scenario.solvers {
-                if let SolverSpec::Sharded { shards: sh, .. } = s {
+                if let SolverSpec::Sharded { shards: sh, batch, .. } = s {
+                    // Keep the parse-time claim-word bound: an axis must
+                    // not assemble a cell the runtime would panic on.
+                    let max = crate::coordinator::sharded::max_batch_budget(shards);
+                    if *batch > max {
+                        return Err(format!(
+                            "axis \"shards\": {shards} shard(s) cap the packable batch \
+                             at {max}, but the solver batch is {batch}"
+                        ));
+                    }
                     *sh = shards;
                     hit = true;
                 }
@@ -142,7 +151,14 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
             let mut hit = false;
             for s in &mut scenario.solvers {
                 match s {
-                    SolverSpec::Sharded { batch: b, .. } => {
+                    SolverSpec::Sharded { shards, batch: b, .. } => {
+                        let max = crate::coordinator::sharded::max_batch_budget(*shards);
+                        if batch > max {
+                            return Err(format!(
+                                "axis \"batch\": {batch} exceeds the packable maximum \
+                                 {max} at {shards} shard(s)"
+                            ));
+                        }
                         *b = batch;
                         hit = true;
                     }
@@ -156,6 +172,26 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
             if !hit {
                 return Err(
                     "axis \"batch\" needs a sharded or parallel-mp solver in the scenario".into(),
+                );
+            }
+        }
+        "packer" => {
+            let spec = value
+                .as_str()
+                .ok_or_else(|| format!("axis \"packer\": {} is not a string", value.render()))?;
+            let packer = crate::coordinator::Packer::parse(spec)
+                .ok_or_else(|| format!("axis \"packer\": bad policy {spec:?} (leader|worker)"))?;
+            let mut hit = false;
+            for s in &mut scenario.solvers {
+                if let SolverSpec::Sharded { packer: p, .. } = s {
+                    *p = packer;
+                    hit = true;
+                }
+            }
+            if !hit {
+                return Err(
+                    "axis \"packer\" needs a sharded solver in the scenario (e.g. \"sharded:2:8\")"
+                        .into(),
                 );
             }
         }
@@ -443,8 +479,33 @@ mod tests {
         assert_eq!(last.graph, GraphSpec::ErThreshold { n: 15, threshold: 0.5 });
         assert!(last.solvers.iter().any(|s| matches!(
             s,
-            SolverSpec::Sharded { shards: 2, batch: 4, map: ShardMap::Modulo }
+            SolverSpec::Sharded { shards: 2, batch: 4, map: ShardMap::Modulo, .. }
         )));
+    }
+
+    #[test]
+    fn packer_axis_rewrites_sharded_entries() {
+        use crate::coordinator::Packer;
+        let sweep = Sweep::from_json_str(&base_json(r#"{"packer": ["leader", "worker"]}"#))
+            .expect("parses");
+        let cells = sweep.cells().expect("expands");
+        assert_eq!(cells.len(), 2);
+        assert!(cells[0].1.solvers.iter().any(
+            |s| matches!(s, SolverSpec::Sharded { packer: Packer::Leader, .. })
+        ));
+        assert!(cells[1].1.solvers.iter().any(
+            |s| matches!(s, SolverSpec::Sharded { packer: Packer::Worker, .. })
+        ));
+        assert_eq!(cells[1].1.name, "grid-test[packer=worker]");
+        // Bad values and packer-less scenarios are rejected up front.
+        let bad = Sweep::from_json_str(&base_json(r#"{"packer": ["boss"]}"#)).expect("parses");
+        assert!(bad.cells().is_err());
+        let no_sharded = r#"{
+          "scenario": {"graph": "paper:10", "solvers": ["mp"]},
+          "grid": {"packer": ["worker"]}
+        }"#;
+        let sweep = Sweep::from_json_str(no_sharded).expect("parses");
+        assert!(sweep.cells().expect_err("must fail").contains("sharded"));
     }
 
     #[test]
@@ -464,6 +525,7 @@ mod tests {
             (r#"{"n": [1]}"#, "n below the generator families' minimum"),
             (r#"{"shards": []}"#, "empty axis"),
             (r#"{"latency": ["const:0.1"]}"#, "latency without coordinator"),
+            (r#"{"batch": [2000000]}"#, "batch beyond the claim-word bound"),
         ] {
             let sweep = Sweep::from_json_str(&base_json(grid));
             let failed = match sweep {

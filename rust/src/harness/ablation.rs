@@ -63,7 +63,14 @@ pub fn rate_study(n: usize, alpha: f64, rounds: usize, steps: usize, seed: u64) 
             let skip = avg.len() / 5;
             let measured = stats::decay_rate(&avg[skip..]).powf(1.0 / stride as f64);
             let bound = spectral::mp_contraction_rate(&g, alpha);
-            let tightness = (1.0 - measured).max(1e-15) / (1.0 - bound).max(1e-15);
+            // An unfittable tail (decay_rate = NaN) must surface as NaN,
+            // not ride f64::max's NaN-swallowing into a bogus ~1e-15
+            // "tighter than the bound" ratio.
+            let tightness = if measured.is_nan() {
+                f64::NAN
+            } else {
+                (1.0 - measured).max(1e-15) / (1.0 - bound).max(1e-15)
+            };
             RateRow {
                 family,
                 n: g.n(),

@@ -126,7 +126,7 @@ fn cmd_list_solvers(_args: &Args) -> Result<(), String> {
     }
     println!(
         "\nparameterized forms: parallel-mp:<batch>, \
-         sharded:<shards>[:<batch>[:<mod|block>]], \
+         sharded:<shards>[:<batch>[:<mod|block>[:<leader|worker>]]], \
          coordinator:<sequential|async>:<uniform|clocks|weighted>:<zero|const:L|uniform:lo:hi|exp:mean>"
     );
     Ok(())
@@ -417,7 +417,7 @@ COMMANDS:
               (see examples/fig1_scenario.json; solver names via `list-solvers`)
   sweep       expand one scenario over a grid and merge the reports
               <sweep.json> [--bench-out BENCH_sweep.json --threads T]
-              (axes: n, alpha, steps, stride, rounds, seed, shards, batch, latency;
+              (axes: n, alpha, steps, stride, rounds, seed, shards, batch, packer, latency;
                see examples/sweep_small.json)
   list-solvers print the engine's solver registry
   rank        compute PageRank        --graph paper|ba|ws|.. --n 100 --engine sparse|coordinator|dense|power

@@ -3,10 +3,16 @@
 //! coordinator vs sharded vs dense), dangling-node safety, and the
 //! sweep grid through the declarative API.
 
+use pagerank_mp::algo::common::PageRankSolver;
+use pagerank_mp::coordinator::{Packer, ShardMap};
 use pagerank_mp::engine::{
-    CoordinatorSolver, GraphSpec, ReferencePolicy, Scenario, ScenarioReport, SolverSpec, Sweep,
+    CoordinatorSolver, GraphSpec, ReferencePolicy, Scenario, ScenarioReport, ShardedSolver,
+    SolverSpec, Sweep,
 };
+use pagerank_mp::graph::generators;
+use pagerank_mp::linalg::solve::exact_pagerank;
 use pagerank_mp::util::json::Json;
+use pagerank_mp::util::rng::Rng;
 
 fn small(name: &str, solvers: Vec<SolverSpec>) -> Scenario {
     Scenario::paper(name, 25)
@@ -210,32 +216,104 @@ fn async_coordinator_scenario_keeps_overlap_and_converges() {
 
 #[test]
 fn one_shard_sharded_scenario_matches_matrix_mp() {
-    // Backend equivalence anchor: shards=1, batch=1 packs exactly one
-    // uniform candidate per super-step from the same Scenario rng stream
-    // as the matrix form, and the shared BColumns arithmetic makes the
-    // two backends replay identical activation sequences.
+    // Backend equivalence anchor, pinned for BOTH packers: shards=1,
+    // batch=1 packs exactly one uniform candidate per super-step from
+    // the same Scenario rng stream as the matrix form (the worker packer
+    // clones that stream into worker 0), and the shared BColumns
+    // arithmetic makes all three backends replay identical activation
+    // sequences.
     let report = small(
         "sharded-vs-mp",
         vec![
             SolverSpec::Mp,
             SolverSpec::parse("sharded:1:1").expect("registry"),
+            SolverSpec::parse("sharded:1:1:mod:worker").expect("registry"),
         ],
     )
     .run()
     .expect("runs");
     let mp = report.get("mp").expect("mp ran");
-    let sh = report.get("sharded:1:1:mod").expect("sharded ran");
-    assert_eq!(
-        mp.total_stats, sh.total_stats,
-        "identical activation sequences must cost the same"
-    );
-    for (a, b) in mp.trajectory.mean.iter().zip(&sh.trajectory.mean) {
-        assert!(
-            (a - b).abs() <= 1e-9 * a.abs() + 1e-30,
-            "trajectories diverged: {a} vs {b}"
+    for key in ["sharded:1:1:mod:leader", "sharded:1:1:mod:worker"] {
+        let sh = report.get(key).expect("sharded ran");
+        assert_eq!(
+            mp.total_stats, sh.total_stats,
+            "{key}: identical activation sequences must cost the same"
         );
+        for (a, b) in mp.trajectory.mean.iter().zip(&sh.trajectory.mean) {
+            assert!(
+                (a - b).abs() <= 1e-9 * a.abs() + 1e-30,
+                "{key}: trajectories diverged: {a} vs {b}"
+            );
+        }
+        assert_eq!(sh.conflicts, 0, "{key}: a single candidate can never conflict");
     }
-    assert_eq!(sh.conflicts, 0, "a single candidate can never conflict");
+}
+
+#[test]
+fn both_packers_reach_the_exact_fixed_point_on_every_family() {
+    // ER (homogeneous), BA (hub-heavy), chain (genuine dangling sink):
+    // leader- and worker-packed runs must both converge to the same
+    // exact_pagerank fixed point, count their dropped candidates, and
+    // keep the §II-D read/write parity.
+    for (family, g, steps) in [
+        ("er", generators::erdos_renyi(120, 0.05, 71), 30_000usize),
+        ("ba", generators::barabasi_albert(120, 4, 72), 30_000),
+        ("chain", generators::chain(40), 50_000),
+    ] {
+        let x_star = exact_pagerank(&g, 0.85);
+        for packer in [Packer::Leader, Packer::Worker] {
+            let mut sh = ShardedSolver::new(&g, 0.85, 3, 8, ShardMap::Modulo, packer);
+            let mut rng = Rng::seeded(73);
+            let (mut reads, mut writes) = (0usize, 0usize);
+            for _ in 0..steps {
+                let st = sh.step(&mut rng);
+                reads += st.reads;
+                writes += st.writes;
+            }
+            let err = sh.error_sq_vs(&x_star);
+            assert!(err < 1e-10, "{family}/{packer:?}: ‖x-x*‖² = {err}");
+            assert_eq!(reads, writes, "{family}/{packer:?}: §II-D parity broken");
+            assert!(
+                sh.conflicts() > 0,
+                "{family}/{packer:?}: batched candidates on a connected graph must collide"
+            );
+        }
+    }
+}
+
+#[test]
+fn packer_counters_are_deterministic_in_the_seed() {
+    // Same seed, same packer => bit-identical estimate and identical
+    // activation/read/write/conflict totals, for both packing policies
+    // (the worker packer's priority claims are timing-invariant).
+    let g = generators::er_threshold(60, 0.4, 74);
+    for packer in [Packer::Leader, Packer::Worker] {
+        let run = || {
+            let mut sh = ShardedSolver::new(&g, 0.85, 4, 16, ShardMap::Modulo, packer);
+            let mut rng = Rng::seeded(75);
+            let mut activated = 0usize;
+            for _ in 0..2_000 {
+                activated += sh.step(&mut rng).activated;
+            }
+            let rt = sh.runtime();
+            (
+                sh.estimate(),
+                activated as u64,
+                rt.conflicts(),
+                rt.logical_reads(),
+                rt.logical_writes(),
+            )
+        };
+        let (xa, aa, ca, ra, wa) = run();
+        let (xb, ab, cb, rb, wb) = run();
+        assert_eq!(xa, xb, "{packer:?}: estimates must be bit-identical");
+        assert_eq!(aa, ab, "{packer:?}: activations");
+        assert_eq!(ca, cb, "{packer:?}: conflicts");
+        assert_eq!((ra, wa), (rb, wb), "{packer:?}: logical traffic");
+        assert_eq!(ra, wa, "{packer:?}: reads must pair with writes");
+        assert!(ra >= aa, "{packer:?}: dense pages read at least once per activation");
+        assert!(ca > 0, "{packer:?}: the dense paper graph must conflict at budget 16");
+    }
 }
 
 #[test]

@@ -32,7 +32,7 @@ fn main() {
 
     eprintln!(
         "racing [{}] on {} …",
-        scenario.solvers.iter().map(|s| s.key()).collect::<Vec<_>>().join(", "),
+        scenario.experiment.run_keys().join(", "),
         scenario.graph.key()
     );
     let report = scenario.run().expect("scenario runs");
@@ -44,7 +44,7 @@ fn main() {
     }
 
     println!("\nparallel-work accounting:");
-    for r in &report.reports {
+    for r in report.solver_reports() {
         println!(
             "  {:<24} activated {:<8} conflicts dropped {:<6} wall {:>6.0} ms",
             r.spec.key(),

@@ -8,6 +8,7 @@
 //! Run with: `cargo run --release --example size_estimation`
 
 use pagerank_mp::algo::size_estimation::{SizeEstimationError, SizeEstimator};
+use pagerank_mp::engine::{EstimatorSpec, GraphSpec, Scenario};
 use pagerank_mp::graph::{generators, GraphBuilder};
 use pagerank_mp::util::rng::Rng;
 
@@ -59,5 +60,23 @@ fn main() {
     }
     println!("ring-50: error {:.2e} -> {:.2e}", e0, est.error_sq());
     assert!(est.error_sq() < 1e-6 * e0);
+
+    // --- the same experiment, declaratively: race the site policies -----
+    // (this is the `run-scenario examples/fig2_scenario.json` shape)
+    let report = Scenario::new("size-race", GraphSpec::paper(40))
+        .with_estimators(EstimatorSpec::all())
+        .with_steps(40_000)
+        .with_stride(2_000)
+        .with_rounds(10)
+        .with_seed(2017)
+        .run()
+        .expect("estimator race runs");
+    println!("\ndecay-rate ordering (fastest first):");
+    for (i, (key, rate)) in report.rate_ordering().into_iter().enumerate() {
+        println!("  #{} {:<10} rate/step {rate:.6}", i + 1, key);
+    }
+    for r in report.estimator_reports() {
+        assert!(r.final_size_rel_err < 1e-2, "{} failed to recover N", r.spec.key());
+    }
     println!("size_estimation OK");
 }

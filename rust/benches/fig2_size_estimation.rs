@@ -4,6 +4,7 @@
 //! `cargo bench --bench fig2_size_estimation`
 
 use pagerank_mp::algo::size_estimation::SizeEstimator;
+use pagerank_mp::engine::{EstimatorSpec, GraphSpec, Scenario};
 use pagerank_mp::graph::generators;
 use pagerank_mp::harness::fig2;
 use pagerank_mp::util::bench;
@@ -29,6 +30,25 @@ fn main() {
         &res.to_csv(),
     )
     .expect("write fig2 csv");
+
+    // The engine's estimator race: Algorithm 2's uniform sites vs the
+    // degree-weighted and random-walk baselines, through run-scenario's
+    // exact code path (the examples/fig2_scenario.json shape).
+    println!("=== estimator race: kaczmarz vs degree vs walk ===");
+    let race = Scenario::new("fig2-race", GraphSpec::paper(if quick { 40 } else { 100 }))
+        .with_estimators(EstimatorSpec::all())
+        .with_steps(if quick { 6_000 } else { 20_000 })
+        .with_stride(if quick { 100 } else { 200 })
+        .with_rounds(if quick { 20 } else { 200 })
+        .with_seed(2017)
+        .run()
+        .expect("estimator race runs");
+    println!("{}", race.render());
+    println!("decay-rate ordering (fastest first):");
+    for (i, (key, rate)) in race.rate_ordering().into_iter().enumerate() {
+        println!("  #{} {:<12} rate/step {rate:.6}", i + 1, key);
+    }
+    println!();
 
     println!("=== Algorithm 2 step cost across topologies ===");
     let mut b = bench::standard();

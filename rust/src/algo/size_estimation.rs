@@ -122,6 +122,18 @@ impl<'g> SizeEstimator<'g> {
         StepStats { reads: deg, writes: deg, activated: 1 }
     }
 
+    /// One update at a site drawn by `sampler`. With
+    /// [`SiteSelection::Uniform`] this consumes the rng stream exactly
+    /// like [`SizeEstimator::step`] (one `below(n)` draw), so the two
+    /// are interchangeable bit-for-bit — the engine's `kaczmarz`
+    /// estimator relies on that.
+    pub fn step_with(&mut self, sampler: &mut SiteSampler, rng: &mut Rng) -> StepStats {
+        let k = sampler.next(self.graph, rng);
+        let deg = self.graph.out_degree(k);
+        self.step_at(k);
+        StepStats { reads: deg, writes: deg, activated: 1 }
+    }
+
     /// Current iterate `s_t`.
     pub fn s(&self) -> &[f64] {
         &self.s
@@ -144,8 +156,99 @@ impl<'g> SizeEstimator<'g> {
         }
     }
 
+    /// Mean relative size error `|N̂_i - N| / N` over the pages whose
+    /// local estimate is currently positive (early iterations leave some
+    /// pages undefined). `NaN` while no page has a positive estimate —
+    /// serialized as `null` in bench JSON, like degenerate decay rates.
+    pub fn mean_rel_size_error(&self) -> f64 {
+        let n = self.graph.n() as f64;
+        let mut sum = 0.0;
+        let mut count = 0usize;
+        for i in 0..self.graph.n() {
+            if let Some(nd) = self.estimate_at(i) {
+                sum += (nd - n).abs() / n;
+                count += 1;
+            }
+        }
+        if count == 0 {
+            f64::NAN
+        } else {
+            sum / count as f64
+        }
+    }
+
     pub fn steps(&self) -> u64 {
         self.t
+    }
+}
+
+/// How the eq.-14 update site `k` is chosen each step.
+///
+/// `Uniform` is the paper's iteration (every page holds an equal-rate
+/// activation clock). The other two are the engine's racing baselines:
+/// the same row projection, driven by site streams a deployment might
+/// actually have on hand — a uniformly random *edge* (degree-biased) or
+/// a token walking the graph (no global sampling primitive at all). All
+/// three visit every row infinitely often on a strongly connected graph,
+/// so all three converge to `s = 𝟙/N`; the rates differ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SiteSelection {
+    /// `k ~ Uniform{0..N}` — Algorithm 2 as published.
+    Uniform,
+    /// `k ∝ out-degree(k)`: the source of a uniformly random edge.
+    DegreeWeighted,
+    /// `k` follows a random walk along out-links, starting at page 0.
+    RandomWalk,
+}
+
+/// Stateful site chooser for [`SizeEstimator::step_with`].
+#[derive(Debug, Clone)]
+pub struct SiteSampler {
+    selection: SiteSelection,
+    /// Cumulative out-degrees (`cum[k]` = first edge index owned by page
+    /// `k`); built only for degree-weighted selection.
+    cum: Vec<usize>,
+    /// Current walker position (random-walk selection).
+    at: usize,
+}
+
+impl SiteSampler {
+    pub fn new(g: &Graph, selection: SiteSelection) -> SiteSampler {
+        let cum = match selection {
+            SiteSelection::DegreeWeighted => {
+                let mut cum = Vec::with_capacity(g.n() + 1);
+                let mut acc = 0usize;
+                cum.push(0);
+                for k in 0..g.n() {
+                    acc += g.out_degree(k);
+                    cum.push(acc);
+                }
+                assert!(acc > 0, "degree-weighted site selection needs edges");
+                cum
+            }
+            _ => Vec::new(),
+        };
+        SiteSampler { selection, cum, at: 0 }
+    }
+
+    /// Draw the next update site, advancing internal state.
+    pub fn next(&mut self, g: &Graph, rng: &mut Rng) -> usize {
+        match self.selection {
+            SiteSelection::Uniform => rng.below(g.n()),
+            SiteSelection::DegreeWeighted => {
+                let e = rng.below(*self.cum.last().expect("built for degree selection"));
+                // First page whose edge range ends past `e`; skips
+                // zero-degree pages (their cum entries repeat).
+                self.cum.partition_point(|&c| c <= e) - 1
+            }
+            SiteSelection::RandomWalk => {
+                let k = self.at;
+                let out = g.out(k);
+                assert!(!out.is_empty(), "random walk stuck at dangling page {k}");
+                self.at = out[rng.below(out.len())] as usize;
+                k
+            }
+        }
     }
 }
 
@@ -254,5 +357,89 @@ mod tests {
             est.step(&mut rng);
         }
         assert!(est.error_sq() < 1e-10);
+    }
+
+    #[test]
+    fn uniform_sampler_is_bit_identical_to_plain_step() {
+        let g = generators::er_threshold(25, 0.5, 40);
+        let mut a = SizeEstimator::new(&g).expect("connected");
+        let mut b = SizeEstimator::new(&g).expect("connected");
+        let mut sampler = SiteSampler::new(&g, SiteSelection::Uniform);
+        let mut rng_a = Rng::seeded(41);
+        let mut rng_b = Rng::seeded(41);
+        for _ in 0..300 {
+            let sa = a.step(&mut rng_a);
+            let sb = b.step_with(&mut sampler, &mut rng_b);
+            assert_eq!(sa, sb);
+        }
+        assert_eq!(a.s(), b.s(), "same rng consumption, same iterate");
+    }
+
+    #[test]
+    fn degree_and_walk_selections_also_converge_to_uniform() {
+        // Non-uniform site streams visit the least-likely row less often,
+        // so the rate is below Algorithm 2's — give them a generous step
+        // budget and a bound several decades under e0 ≈ 1.
+        let g = generators::er_threshold(30, 0.5, 42);
+        for sel in [SiteSelection::DegreeWeighted, SiteSelection::RandomWalk] {
+            let mut est = SizeEstimator::new(&g).expect("connected");
+            let mut sampler = SiteSampler::new(&g, sel);
+            let mut rng = Rng::seeded(43);
+            for _ in 0..40_000 {
+                est.step_with(&mut sampler, &mut rng);
+            }
+            assert!(est.error_sq() < 1e-6, "{sel:?}: error {}", est.error_sq());
+            assert!(
+                est.mean_rel_size_error() < 1e-2,
+                "{sel:?}: rel err {}",
+                est.mean_rel_size_error()
+            );
+        }
+    }
+
+    #[test]
+    fn degree_weighted_sampler_respects_edge_measure() {
+        // star: page 0 owns n-1 out-edges, each leaf owns 1 — page 0
+        // must be drawn roughly half the time.
+        let g = generators::star(9);
+        let mut sampler = SiteSampler::new(&g, SiteSelection::DegreeWeighted);
+        let mut rng = Rng::seeded(44);
+        let mut hub = 0usize;
+        let draws = 4_000;
+        for _ in 0..draws {
+            if sampler.next(&g, &mut rng) == 0 {
+                hub += 1;
+            }
+        }
+        let frac = hub as f64 / draws as f64;
+        assert!((frac - 0.5).abs() < 0.05, "hub drawn {frac} of the time");
+    }
+
+    #[test]
+    fn walk_sampler_visits_only_out_neighbours() {
+        let g = generators::ring(8);
+        let mut sampler = SiteSampler::new(&g, SiteSelection::RandomWalk);
+        let mut rng = Rng::seeded(45);
+        let mut prev = sampler.next(&g, &mut rng); // starts at 0
+        assert_eq!(prev, 0);
+        for _ in 0..32 {
+            let k = sampler.next(&g, &mut rng);
+            assert_eq!(k, (prev + 1) % 8, "ring walk must follow the single out-link");
+            prev = k;
+        }
+    }
+
+    #[test]
+    fn rel_size_error_shrinks_and_starts_defined() {
+        let g = generators::er_threshold(20, 0.5, 46);
+        let mut est = SizeEstimator::new(&g).expect("connected");
+        // s_0 = e_1: page 0 estimates N̂ = 1, everyone else undefined.
+        let e0 = est.mean_rel_size_error();
+        assert!((e0 - 19.0 / 20.0).abs() < 1e-12, "initial rel err {e0}");
+        let mut rng = Rng::seeded(47);
+        for _ in 0..10_000 {
+            est.step(&mut rng);
+        }
+        assert!(est.mean_rel_size_error() < 1e-4);
     }
 }

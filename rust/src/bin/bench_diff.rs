@@ -20,6 +20,8 @@
 //!   compared on `1 - rate` (the *gap to stagnation*), because rates sit
 //!   near 1 and a relative test on the rate itself would never fire.
 //! * `final_error`  — smaller is better.
+//! * `final_size_rel_err` — smaller is better (size-estimation runs:
+//!   the mean relative error of the per-page network-size estimates).
 //! * `acts_per_sec` — larger is better (throughput sweep cells).
 //!
 //! `wall_ms` is deliberately ignored (CI runner noise); `null` decay
@@ -39,6 +41,7 @@ use pagerank_mp::util::json::Json;
 struct Row {
     decay_rate: Option<f64>,
     final_error: Option<f64>,
+    final_size_rel_err: Option<f64>,
     acts_per_sec: Option<f64>,
 }
 
@@ -46,46 +49,58 @@ fn finite(v: Option<&Json>) -> Option<f64> {
     v.and_then(Json::as_f64).filter(|x| x.is_finite())
 }
 
-/// Flatten a solver-summary object (the shared shape of
-/// `BENCH_scenario.json` solvers and `BENCH_sweep.json` cell solvers).
-fn solver_row(s: &Json) -> Row {
+/// Flatten a run-summary object (the shared shape of
+/// `BENCH_scenario.json` solvers/estimators and `BENCH_sweep.json` cell
+/// entries).
+fn run_row(s: &Json) -> Row {
     Row {
         decay_rate: finite(s.get("decay_rate")),
         final_error: finite(s.get("final_error")),
+        final_size_rel_err: finite(s.get("final_size_rel_err")),
         acts_per_sec: finite(s.get("acts_per_sec")),
     }
 }
 
-/// Extract `key -> Row` from any of the three artifact kinds.
+/// The run-summary array of a scenario-shaped object: `"solvers"` for
+/// PageRank runs, `"estimators"` for size-estimation runs.
+fn runs_of(obj: &Json) -> Option<&[Json]> {
+    obj.get("solvers")
+        .or_else(|| obj.get("estimators"))
+        .and_then(Json::as_array)
+}
+
+/// Extract `key -> Row` from any of the artifact kinds.
 fn extract(doc: &Json) -> Result<BTreeMap<String, Row>, String> {
     let mut rows = BTreeMap::new();
     if doc.get("cells").is_some() {
-        // BENCH_sweep.json (cells have "solvers") or
+        // BENCH_sweep.json (cells have "solvers"/"estimators") or
         // BENCH_throughput.json (cells have "spec" + "acts_per_sec").
         for cell in doc.get("cells").and_then(Json::as_array).unwrap_or(&[]) {
-            if let Some(solvers) = cell.get("solvers").and_then(Json::as_array) {
+            if let Some(runs) = runs_of(cell) {
                 let name = cell.get("name").and_then(Json::as_str).unwrap_or("cell");
-                for s in solvers {
-                    let solver = s.get("name").and_then(Json::as_str).unwrap_or("?");
-                    rows.insert(format!("{name} :: {solver}"), solver_row(s));
+                for s in runs {
+                    let run = s.get("name").and_then(Json::as_str).unwrap_or("?");
+                    rows.insert(format!("{name} :: {run}"), run_row(s));
                 }
             } else if let Some(spec) = cell.get("spec").and_then(Json::as_str) {
-                rows.insert(spec.to_string(), solver_row(cell));
+                rows.insert(spec.to_string(), run_row(cell));
             }
         }
-    } else if let Some(solvers) = doc.get("solvers").and_then(Json::as_array) {
-        // BENCH_scenario.json
+    } else if let Some(runs) = runs_of(doc) {
+        // BENCH_scenario.json (PageRank or size-estimation experiment)
         let name = doc
             .get("scenario")
             .and_then(|s| s.get("name"))
             .and_then(Json::as_str)
             .unwrap_or("scenario");
-        for s in solvers {
-            let solver = s.get("name").and_then(Json::as_str).unwrap_or("?");
-            rows.insert(format!("{name} :: {solver}"), solver_row(s));
+        for s in runs {
+            let run = s.get("name").and_then(Json::as_str).unwrap_or("?");
+            rows.insert(format!("{name} :: {run}"), run_row(s));
         }
     } else {
-        return Err("unrecognized artifact: expected \"cells\" or \"solvers\"".into());
+        return Err(
+            "unrecognized artifact: expected \"cells\", \"solvers\" or \"estimators\"".into(),
+        );
     }
     if rows.is_empty() {
         return Err("artifact contains no comparable entries".into());
@@ -179,6 +194,14 @@ fn run(old_path: &str, new_path: &str, threshold: f64) -> Result<Vec<String>, St
         for f in [
             check(key, "decay_rate", o.decay_rate, n.decay_rate, threshold, true),
             check(key, "final_error", o.final_error, n.final_error, threshold, true),
+            check(
+                key,
+                "final_size_rel_err",
+                o.final_size_rel_err,
+                n.final_size_rel_err,
+                threshold,
+                true,
+            ),
             check(key, "acts_per_sec", o.acts_per_sec, n.acts_per_sec, threshold, false),
         ]
         .into_iter()
@@ -286,6 +309,41 @@ mod tests {
         );
 
         assert!(extract(&Json::parse("{}").expect("json")).is_err());
+    }
+
+    #[test]
+    fn extract_handles_size_estimation_artifacts() {
+        // BENCH_scenario.json from a size-estimation experiment.
+        let scenario = Json::parse(
+            r#"{"scenario": {"name": "fig2"}, "estimators": [
+                 {"name": "kaczmarz", "decay_rate": 0.997, "final_error": 1e-20,
+                  "final_size_rel_err": 1e-8, "reads": 10, "writes": 10,
+                  "activated": 5, "wall_ms": 1.0}]}"#,
+        )
+        .expect("json");
+        let rows = extract(&scenario).expect("estimator scenario shape");
+        assert_eq!(rows["fig2 :: kaczmarz"].final_size_rel_err, Some(1e-8));
+
+        // A sweep whose cells carry estimators.
+        let sweep = Json::parse(
+            r#"{"sweep": "se", "cells": [
+                 {"name": "se[n=10]", "params": {"n": 10},
+                  "estimators": [{"name": "walk", "decay_rate": 0.99,
+                                  "final_error": 1e-12, "final_size_rel_err": 1e-5}]}]}"#,
+        )
+        .expect("json");
+        let rows = extract(&sweep).expect("estimator sweep shape");
+        assert_eq!(rows["se[n=10] :: walk"].final_size_rel_err, Some(1e-5));
+    }
+
+    #[test]
+    fn size_rel_err_regressions_flagged() {
+        let worse = check("k", "final_size_rel_err", Some(1e-8), Some(1e-6), 0.15, true);
+        assert!(worse.is_some(), "100x worse size recovery must flag");
+        let better = check("k", "final_size_rel_err", Some(1e-6), Some(1e-8), 0.15, true);
+        assert!(better.is_none(), "improvements never flag");
+        let absent = check("k", "final_size_rel_err", None, None, 0.15, true);
+        assert!(absent.is_none(), "PageRank rows have no size metric");
     }
 
     #[test]

@@ -1,0 +1,371 @@
+//! The experiment-kind registry: *what a scenario runs*, as data.
+//!
+//! The paper's evaluation has two experiment shapes — racing PageRank
+//! solvers against a reference solution (Fig. 1) and racing distributed
+//! size estimators toward the uniform vector `s = 𝟙/N` (Fig. 2,
+//! Appendix). [`ExperimentSpec`] names the shape plus its kind-specific
+//! participants, while the shared shape (graph, steps, stride, rounds,
+//! threads, seed) stays on [`super::Scenario`]; adding a third
+//! experiment kind means a new variant here plus a run arm in
+//! `Scenario::run`, not a new harness.
+//!
+//! [`EstimatorSpec`] is the estimator counterpart of
+//! [`super::SolverSpec`]: a compact string registry
+//! (`"kaczmarz"`, `"degree"`, `"walk"`) over the
+//! [`crate::algo::size_estimation`] iteration with pluggable site
+//! selection, behind one `build(&graph)` factory yielding a runnable
+//! [`EstimatorRun`].
+
+use std::collections::BTreeMap;
+
+use crate::algo::common::StepStats;
+use crate::algo::size_estimation::{SiteSampler, SiteSelection, SizeEstimator};
+use crate::graph::Graph;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::solver_spec::SolverSpec;
+
+/// A serializable description of a size-estimation iteration: Algorithm
+/// 2's row projection plus the update-site policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstimatorSpec {
+    /// Algorithm 2 (Appendix) as published: uniform site sampling. The
+    /// engine's `kaczmarz` runs are bit-identical to
+    /// [`SizeEstimator::step`] driven directly.
+    Kaczmarz,
+    /// Same iteration, sites drawn ∝ out-degree (the source of a
+    /// uniformly random edge) — hubs project often, leaves rarely.
+    DegreeWeighted,
+    /// Same iteration, sites visited by a token random-walking the
+    /// out-links — fully local, no global sampling primitive at all.
+    RandomWalk,
+}
+
+impl EstimatorSpec {
+    /// Canonical registry string (inverse of [`EstimatorSpec::parse`]).
+    pub fn key(&self) -> String {
+        match self {
+            EstimatorSpec::Kaczmarz => "kaczmarz".to_string(),
+            EstimatorSpec::DegreeWeighted => "degree".to_string(),
+            EstimatorSpec::RandomWalk => "walk".to_string(),
+        }
+    }
+
+    /// One-line description for `pagerank-mp list-solvers` and reports.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            EstimatorSpec::Kaczmarz => {
+                "Algorithm 2: randomized Kaczmarz on C=(I-A)ᵀ, uniform sites"
+            }
+            EstimatorSpec::DegreeWeighted => {
+                "Algorithm 2 iteration, sites ∝ out-degree (random edge source)"
+            }
+            EstimatorSpec::RandomWalk => {
+                "Algorithm 2 iteration, sites from a random walk along out-links"
+            }
+        }
+    }
+
+    /// Parse a registry string (canonical keys plus aliases).
+    pub fn parse(s: &str) -> Result<EstimatorSpec, String> {
+        match s {
+            "kaczmarz" | "size" | "algorithm-2" | "alg2" => Ok(EstimatorSpec::Kaczmarz),
+            "degree" | "degree-weighted" => Ok(EstimatorSpec::DegreeWeighted),
+            "walk" | "random-walk" => Ok(EstimatorSpec::RandomWalk),
+            other => Err(format!(
+                "unknown estimator {other:?} — try one of: {}",
+                EstimatorSpec::all()
+                    .iter()
+                    .map(EstimatorSpec::key)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )),
+        }
+    }
+
+    /// Every variant — the registry listing.
+    pub fn all() -> Vec<EstimatorSpec> {
+        vec![
+            EstimatorSpec::Kaczmarz,
+            EstimatorSpec::DegreeWeighted,
+            EstimatorSpec::RandomWalk,
+        ]
+    }
+
+    /// The site policy this spec names.
+    pub fn selection(&self) -> SiteSelection {
+        match self {
+            EstimatorSpec::Kaczmarz => SiteSelection::Uniform,
+            EstimatorSpec::DegreeWeighted => SiteSelection::DegreeWeighted,
+            EstimatorSpec::RandomWalk => SiteSelection::RandomWalk,
+        }
+    }
+
+    /// Uniform factory: a runnable estimator over `graph`. Fails (with
+    /// the algorithm's own message) on empty or not-strongly-connected
+    /// graphs — the Appendix assumption.
+    pub fn build<'g>(&self, graph: &'g Graph) -> Result<EstimatorRun<'g>, String> {
+        let est = SizeEstimator::new(graph).map_err(|e| format!("estimator {}: {e}", self.key()))?;
+        Ok(EstimatorRun { sampler: SiteSampler::new(graph, self.selection()), est })
+    }
+}
+
+/// A runnable size-estimation iteration: [`SizeEstimator`] plus its site
+/// sampler, stepped like a solver but measured on Fig.-2 axes.
+pub struct EstimatorRun<'g> {
+    est: SizeEstimator<'g>,
+    sampler: SiteSampler,
+}
+
+impl<'g> EstimatorRun<'g> {
+    /// One eq.-14 update at the next sampled site.
+    pub fn step(&mut self, rng: &mut Rng) -> StepStats {
+        self.est.step_with(&mut self.sampler, rng)
+    }
+
+    /// `‖s_t - 𝟙/N‖²` — the Fig.-2 y-axis.
+    pub fn error_sq(&self) -> f64 {
+        self.est.error_sq()
+    }
+
+    /// Mean relative size error `|N̂_i - N|/N` over defined pages.
+    pub fn mean_rel_size_error(&self) -> f64 {
+        self.est.mean_rel_size_error()
+    }
+
+    /// The wrapped Algorithm-2 state.
+    pub fn estimator(&self) -> &SizeEstimator<'g> {
+        &self.est
+    }
+}
+
+/// What a [`super::Scenario`] runs: the experiment kind plus its
+/// kind-specific participants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExperimentSpec {
+    /// Fig.-1 shape: race PageRank solvers against a reference `x*`.
+    PageRank { solvers: Vec<SolverSpec> },
+    /// Fig.-2 shape: race size estimators toward `s = 𝟙/N`.
+    SizeEstimation { estimators: Vec<EstimatorSpec> },
+}
+
+impl ExperimentSpec {
+    pub fn pagerank(solvers: Vec<SolverSpec>) -> ExperimentSpec {
+        ExperimentSpec::PageRank { solvers }
+    }
+
+    pub fn size_estimation(estimators: Vec<EstimatorSpec>) -> ExperimentSpec {
+        ExperimentSpec::SizeEstimation { estimators }
+    }
+
+    /// The kind's registry name (the JSON `"kind"` value).
+    pub fn kind_key(&self) -> &'static str {
+        match self {
+            ExperimentSpec::PageRank { .. } => "pagerank",
+            ExperimentSpec::SizeEstimation { .. } => "size-estimation",
+        }
+    }
+
+    /// Registry keys of every run in the experiment, in run order.
+    pub fn run_keys(&self) -> Vec<String> {
+        match self {
+            ExperimentSpec::PageRank { solvers } => {
+                solvers.iter().map(SolverSpec::key).collect()
+            }
+            ExperimentSpec::SizeEstimation { estimators } => {
+                estimators.iter().map(EstimatorSpec::key).collect()
+            }
+        }
+    }
+
+    /// Number of runs (solvers or estimators).
+    pub fn len(&self) -> usize {
+        match self {
+            ExperimentSpec::PageRank { solvers } => solvers.len(),
+            ExperimentSpec::SizeEstimation { estimators } => estimators.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// JSON object form: `{"kind": "...", "solvers"|"estimators": [...]}`.
+    ///
+    /// Note [`super::Scenario::to_json`] serializes the PageRank kind as
+    /// a bare top-level `"solvers"` array instead (the pre-experiment
+    /// schema), so existing scenario files and BENCH consumers keep
+    /// working; this form is what non-default kinds embed under the
+    /// scenario's `"experiment"` key.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), Json::String(self.kind_key().into()));
+        let (field, keys) = match self {
+            ExperimentSpec::PageRank { .. } => ("solvers", self.run_keys()),
+            ExperimentSpec::SizeEstimation { .. } => ("estimators", self.run_keys()),
+        };
+        m.insert(
+            field.to_string(),
+            Json::Array(keys.into_iter().map(Json::String).collect()),
+        );
+        Json::Object(m)
+    }
+
+    /// Parse from a string (`"pagerank"`, `"size-estimation"` — default
+    /// participants) or the object form of [`ExperimentSpec::to_json`].
+    pub fn from_json(v: &Json) -> Result<ExperimentSpec, String> {
+        let kind = match v.as_str() {
+            Some(k) => k.to_string(),
+            None => v
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or("experiment needs a \"kind\" string (pagerank | size-estimation)")?
+                .to_string(),
+        };
+        let keys = |field: &str| -> Result<Option<Vec<String>>, String> {
+            match v.get(field) {
+                None => Ok(None),
+                Some(Json::Array(arr)) => {
+                    let mut keys = Vec::with_capacity(arr.len());
+                    for s in arr {
+                        keys.push(
+                            s.as_str()
+                                .ok_or_else(|| {
+                                    format!("\"{field}\" must be an array of registry strings")
+                                })?
+                                .to_string(),
+                        );
+                    }
+                    Ok(Some(keys))
+                }
+                Some(_) => Err(format!("\"{field}\" must be an array of registry strings")),
+            }
+        };
+        match kind.as_str() {
+            "pagerank" => {
+                if v.get("estimators").is_some() {
+                    return Err("a pagerank experiment takes \"solvers\", not \"estimators\"".into());
+                }
+                let solvers = match keys("solvers")? {
+                    None => vec![SolverSpec::Mp],
+                    Some(keys) => {
+                        let mut solvers = Vec::with_capacity(keys.len());
+                        for k in keys {
+                            solvers.push(SolverSpec::parse(&k)?);
+                        }
+                        solvers
+                    }
+                };
+                Ok(ExperimentSpec::PageRank { solvers })
+            }
+            "size-estimation" | "size" | "fig2" => {
+                if v.get("solvers").is_some() {
+                    return Err(
+                        "a size-estimation experiment takes \"estimators\", not \"solvers\"".into(),
+                    );
+                }
+                let estimators = match keys("estimators")? {
+                    None => vec![EstimatorSpec::Kaczmarz],
+                    Some(keys) => {
+                        let mut estimators = Vec::with_capacity(keys.len());
+                        for k in keys {
+                            estimators.push(EstimatorSpec::parse(&k)?);
+                        }
+                        estimators
+                    }
+                };
+                Ok(ExperimentSpec::SizeEstimation { estimators })
+            }
+            other => Err(format!(
+                "unknown experiment kind {other:?} (pagerank | size-estimation)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn estimator_registry_round_trips() {
+        for spec in EstimatorSpec::all() {
+            let key = spec.key();
+            assert_eq!(EstimatorSpec::parse(&key).expect("canonical key parses"), spec);
+        }
+        assert_eq!(EstimatorSpec::parse("size").expect("alias"), EstimatorSpec::Kaczmarz);
+        assert_eq!(
+            EstimatorSpec::parse("random-walk").expect("alias"),
+            EstimatorSpec::RandomWalk
+        );
+        assert!(EstimatorSpec::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn every_estimator_builds_and_converges() {
+        let g = generators::er_threshold(25, 0.5, 50);
+        for spec in EstimatorSpec::all() {
+            let mut run = spec.build(&g).expect("ER-threshold graphs are connected");
+            let mut rng = Rng::seeded(51);
+            let e0 = run.error_sq();
+            let mut stats = StepStats::default();
+            // Budget sized for the slower non-uniform site streams too.
+            for _ in 0..30_000 {
+                stats.accumulate(run.step(&mut rng));
+            }
+            assert!(run.error_sq() < 1e-6 * e0.max(1.0), "{}: {}", spec.key(), run.error_sq());
+            assert!(run.mean_rel_size_error() < 1e-2, "{}", spec.key());
+            assert_eq!(stats.activated, 30_000, "{}", spec.key());
+            assert_eq!(stats.reads, stats.writes, "{}: eq. 14 touches out(k) twice", spec.key());
+        }
+    }
+
+    #[test]
+    fn build_rejects_disconnected_graphs_with_the_algorithm_error() {
+        let mut b = crate::graph::GraphBuilder::new(4)
+            .dangling_policy(crate::graph::DanglingPolicy::SelfLoop);
+        b.add_edge(0, 1).add_edge(1, 0).add_edge(2, 3).add_edge(3, 2);
+        let g = b.build().expect("builds");
+        let err = EstimatorSpec::Kaczmarz.build(&g).expect_err("must refuse");
+        assert!(err.contains("strongly connected"), "{err}");
+        assert!(err.contains("kaczmarz"), "error names the spec: {err}");
+    }
+
+    #[test]
+    fn experiment_spec_json_round_trips() {
+        for spec in [
+            ExperimentSpec::pagerank(vec![SolverSpec::Mp, SolverSpec::Dense]),
+            ExperimentSpec::size_estimation(EstimatorSpec::all()),
+        ] {
+            let text = spec.to_json().render();
+            let back = ExperimentSpec::from_json(&Json::parse(&text).expect("valid json"))
+                .expect("round trips");
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn experiment_spec_string_forms_and_defaults() {
+        let pr = ExperimentSpec::from_json(&Json::String("pagerank".into())).expect("parses");
+        assert_eq!(pr, ExperimentSpec::pagerank(vec![SolverSpec::Mp]));
+        let se = ExperimentSpec::from_json(&Json::String("size-estimation".into())).expect("parses");
+        assert_eq!(se, ExperimentSpec::size_estimation(vec![EstimatorSpec::Kaczmarz]));
+        assert_eq!(se.kind_key(), "size-estimation");
+        assert_eq!(se.run_keys(), vec!["kaczmarz".to_string()]);
+    }
+
+    #[test]
+    fn experiment_spec_rejects_mismatched_fields() {
+        let bad = Json::parse(r#"{"kind": "size-estimation", "solvers": ["mp"]}"#).expect("json");
+        assert!(ExperimentSpec::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"kind": "pagerank", "estimators": ["kaczmarz"]}"#).expect("json");
+        assert!(ExperimentSpec::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"kind": "teleport"}"#).expect("json");
+        assert!(ExperimentSpec::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"kind": "size-estimation", "estimators": ["bogus"]}"#)
+            .expect("json");
+        assert!(ExperimentSpec::from_json(&bad).is_err());
+    }
+}

@@ -14,34 +14,45 @@
 //!   compact string form (`"mp"`, `"parallel-mp:16"`,
 //!   `"coordinator:async:clocks:const:0.1"`, `"sharded:4:16:block"`,
 //!   `"dense"`).
+//! * [`EstimatorSpec`] — the size-estimation counterpart: Algorithm 2's
+//!   randomized Kaczmarz iteration with pluggable site selection
+//!   (`"kaczmarz"`, `"degree"`, `"walk"`) behind one `build(&graph)`
+//!   factory.
 //! * [`GraphSpec`] — workload graphs: the paper's ER-threshold model,
 //!   every synthetic family, or edge-list files.
-//! * [`Scenario`] — graph + solvers + experiment shape (steps / stride /
+//! * [`ExperimentSpec`] — what a scenario runs: PageRank solvers racing
+//!   a reference solution (Fig. 1) or size estimators racing toward
+//!   `𝟙/N` (Fig. 2). Adding an experiment kind is a variant here plus a
+//!   run arm, not a new harness.
+//! * [`Scenario`] — graph + experiment + shared shape (steps / stride /
 //!   rounds / threads / α / seed / reference policy), JSON round-trip
 //!   included. [`Scenario::run`] drives the multi-round experiment
 //!   runner uniformly and yields a [`ScenarioReport`].
-//! * [`ScenarioReport`] — per-solver [`SolverReport`]s: averaged
-//!   trajectories, fitted decay rates, read/write totals, wall time;
-//!   renderable as a terminal plot, CSV, or the machine-readable
+//! * [`ScenarioReport`] — polymorphic per-run reports
+//!   ([`SolverReport`]s or [`EstimatorReport`]s): averaged trajectories,
+//!   fitted decay rates, read/write totals, kind-specific metrics, wall
+//!   time; renderable as a terminal plot, CSV, or the machine-readable
 //!   `BENCH_scenario.json` perf artifact.
 //!
-//! * [`Sweep`] — one scenario expanded over a grid (`n`, `alpha`,
-//!   `shards`, `batch`, `latency`, …); per-cell reports merge into the
-//!   single `BENCH_sweep.json` perf trajectory (CLI: `sweep`).
+//! * [`Sweep`] — one scenario expanded over a grid (`graph`, `n`,
+//!   `alpha`, `shards`, `batch`, `latency`, …); per-cell reports merge
+//!   into the single `BENCH_sweep.json` perf trajectory (CLI: `sweep`).
 //!
-//! The Figure-1 harness, the ablations, the CLI `run-scenario` and
-//! `sweep` subcommands, the benches and the examples are all thin layers
-//! over these types; new workloads (webgraph files, new grids) are new
-//! `Scenario`/`Sweep` values.
+//! The Figure-1/Figure-2 harnesses, the ablations, the CLI
+//! `run-scenario` and `sweep` subcommands, the benches and the examples
+//! are all thin layers over these types; new workloads (webgraph files,
+//! new grids, new experiment kinds) are new `Scenario`/`Sweep` values.
 
+pub mod experiment_spec;
 pub mod graph_spec;
 pub mod report;
 pub mod scenario;
 pub mod solver_spec;
 pub mod sweep;
 
+pub use experiment_spec::{EstimatorRun, EstimatorSpec, ExperimentSpec};
 pub use graph_spec::GraphSpec;
-pub use report::{ScenarioReport, SolverReport};
+pub use report::{EstimatorReport, ExperimentReports, ScenarioReport, SolverReport};
 pub use scenario::{ReferencePolicy, Scenario};
 pub use solver_spec::{CoordinatorSolver, DynamicSolver, ShardedSolver, SolverSpec};
 pub use sweep::{Sweep, SweepCell, SweepReport};

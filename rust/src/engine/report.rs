@@ -1,7 +1,13 @@
-//! Scenario results: per-solver averaged trajectories, fitted decay
-//! rates, communication totals and wall time — renderable for terminals,
-//! CSV for plotting, and machine-readable JSON for the perf trajectory
+//! Scenario results: per-run averaged trajectories, fitted decay rates,
+//! communication totals and wall time — renderable for terminals, CSV
+//! for plotting, and machine-readable JSON for the perf trajectory
 //! (`BENCH_scenario.json`).
+//!
+//! The report is polymorphic over the experiment kind: a PageRank
+//! scenario yields [`SolverReport`]s (error vs `x*`, conflicts), a
+//! size-estimation scenario yields [`EstimatorReport`]s (error vs
+//! `𝟙/N` plus the relative-size-error trajectory); both share the
+//! graph/seed/shape metadata, wall clocks and the rendering surfaces.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -12,6 +18,7 @@ use crate::harness::{plot, report as harness_report};
 use crate::util::json::Json;
 use crate::util::stats;
 
+use super::experiment_spec::EstimatorSpec;
 use super::scenario::Scenario;
 use super::solver_spec::SolverSpec;
 
@@ -72,145 +79,304 @@ fn fit_above_floor(samples: &[f64], stride: usize) -> f64 {
     stats::decay_rate_above(samples, NOISE_FLOOR).powf(1.0 / stride as f64)
 }
 
+/// Table spelling of a fitted decay rate; NaN (unfittable, see
+/// [`fitted_decay`]) renders as "n/a". Shared by the scenario and sweep
+/// summary tables so the convention cannot drift between them.
+pub(crate) fn render_rate(rate: f64) -> String {
+    if rate.is_nan() {
+        "n/a".to_string()
+    } else {
+        format!("{rate:.6}")
+    }
+}
+
+/// The summary fields every run kind shares in the BENCH JSON.
+fn summary_common(
+    key: &str,
+    final_error: f64,
+    decay_rate: f64,
+    total_stats: StepStats,
+    wall: Duration,
+) -> BTreeMap<String, Json> {
+    let mut s = BTreeMap::new();
+    s.insert("name".to_string(), Json::String(key.to_string()));
+    s.insert("final_error".to_string(), Json::Number(final_error));
+    // NaN renders as null (JSON has no NaN).
+    s.insert("decay_rate".to_string(), Json::Number(decay_rate));
+    s.insert("reads".to_string(), Json::Number(total_stats.reads as f64));
+    s.insert("writes".to_string(), Json::Number(total_stats.writes as f64));
+    s.insert(
+        "activated".to_string(),
+        Json::Number(total_stats.activated as f64),
+    );
+    s.insert("wall_ms".to_string(), Json::Number(wall.as_secs_f64() * 1e3));
+    s
+}
+
+/// One estimator's result inside a size-estimation scenario run.
+#[derive(Debug, Clone)]
+pub struct EstimatorReport {
+    pub spec: EstimatorSpec,
+    /// Cross-round averaged `‖s_t - 𝟙/N‖²` trajectory (Fig.-2 axis).
+    pub trajectory: AveragedTrajectory,
+    /// Cross-round averaged mean relative size error `|N̂_i - N|/N`,
+    /// sampled on the same stride — the metric estimators race on.
+    pub size_rel_err: AveragedTrajectory,
+    /// Communication totals summed over all rounds.
+    pub total_stats: StepStats,
+    /// Fitted per-activation decay rate of the mean squared error (same
+    /// semantics as [`SolverReport::decay_rate`]).
+    pub decay_rate: f64,
+    /// Final mean `‖s - 𝟙/N‖²`.
+    pub final_error: f64,
+    /// Final mean relative size error — the headline Fig.-2 number and
+    /// the metric `bench_diff` tracks for estimation runs.
+    pub final_size_rel_err: f64,
+    /// Wall-clock time for all rounds of this estimator.
+    pub wall: Duration,
+}
+
+/// The kind-specific half of a [`ScenarioReport`].
+#[derive(Debug, Clone)]
+pub enum ExperimentReports {
+    PageRank(Vec<SolverReport>),
+    SizeEstimation(Vec<EstimatorReport>),
+}
+
 /// Everything a [`Scenario::run`] produces.
 #[derive(Debug, Clone)]
 pub struct ScenarioReport {
     pub scenario: Scenario,
-    pub reports: Vec<SolverReport>,
+    pub runs: ExperimentReports,
 }
 
 impl ScenarioReport {
-    /// Look up a solver's report by registry key.
-    pub fn get(&self, key: &str) -> Option<&SolverReport> {
-        self.reports.iter().find(|r| r.spec.key() == key)
+    /// Number of runs (solvers or estimators) in the report.
+    pub fn len(&self) -> usize {
+        match &self.runs {
+            ExperimentReports::PageRank(v) => v.len(),
+            ExperimentReports::SizeEstimation(v) => v.len(),
+        }
     }
 
-    /// Solver keys ordered by fitted decay rate, fastest (smallest rate)
-    /// first — the Fig.-1 ordering check. `NaN` rates (diverged or
-    /// zero-error trajectories, see [`fitted_decay`]) sort last instead
-    /// of panicking, so one diverged solver cannot spoil the ranking.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The PageRank solver reports (empty slice for other kinds).
+    pub fn solver_reports(&self) -> &[SolverReport] {
+        match &self.runs {
+            ExperimentReports::PageRank(v) => v,
+            ExperimentReports::SizeEstimation(_) => &[],
+        }
+    }
+
+    /// The size-estimator reports (empty slice for other kinds).
+    pub fn estimator_reports(&self) -> &[EstimatorReport] {
+        match &self.runs {
+            ExperimentReports::SizeEstimation(v) => v,
+            ExperimentReports::PageRank(_) => &[],
+        }
+    }
+
+    /// Look up a solver's report by registry key.
+    pub fn get(&self, key: &str) -> Option<&SolverReport> {
+        self.solver_reports().iter().find(|r| r.spec.key() == key)
+    }
+
+    /// Look up an estimator's report by registry key.
+    pub fn get_estimator(&self, key: &str) -> Option<&EstimatorReport> {
+        self.estimator_reports().iter().find(|r| r.spec.key() == key)
+    }
+
+    /// Run keys ordered by fitted decay rate, fastest (smallest rate)
+    /// first — the Fig.-1 ordering check, equally meaningful for the
+    /// Fig.-2 estimator race. `NaN` rates (diverged or zero-error
+    /// trajectories, see [`fitted_decay`]) sort last instead of
+    /// panicking, so one diverged run cannot spoil the ranking.
     pub fn rate_ordering(&self) -> Vec<(String, f64)> {
-        let mut rates: Vec<(String, f64)> = self
-            .reports
-            .iter()
-            .map(|r| (r.spec.key(), r.decay_rate))
-            .collect();
+        let mut rates: Vec<(String, f64)> = match &self.runs {
+            ExperimentReports::PageRank(v) => {
+                v.iter().map(|r| (r.spec.key(), r.decay_rate)).collect()
+            }
+            ExperimentReports::SizeEstimation(v) => {
+                v.iter().map(|r| (r.spec.key(), r.decay_rate)).collect()
+            }
+        };
         // total_cmp orders every NaN after +inf, i.e. last.
         rates.sort_by(|a, b| a.1.total_cmp(&b.1));
         rates
     }
 
     /// Terminal rendering: semilogy plot of every trajectory plus a
-    /// per-solver summary table.
+    /// per-run summary table with kind-specific columns.
     pub fn render(&self) -> String {
         let glyphs = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
-        let series: Vec<plot::Series> = self
-            .reports
-            .iter()
-            .enumerate()
-            .map(|(i, r)| plot::Series {
-                label: r.trajectory.name.clone(),
-                xs: r.trajectory.ts.iter().map(|&t| t as f64).collect(),
-                ys: r.trajectory.mean.clone(),
-                glyph: glyphs[i % glyphs.len()],
-            })
-            .collect();
-        let title = format!(
-            "{} — (1/N)‖x_t - x*‖² on {}, α={}, {} rounds",
-            self.scenario.name,
-            self.scenario.graph.key(),
-            self.scenario.alpha,
-            self.scenario.rounds
-        );
-        let plot = plot::semilogy(&series, 72, 20, &title);
-        let rows: Vec<Vec<String>> = self
-            .reports
-            .iter()
-            .map(|r| {
-                vec![
-                    r.spec.key(),
-                    format!("{:.3e}", r.final_error),
-                    if r.decay_rate.is_nan() {
-                        "n/a".to_string()
-                    } else {
-                        format!("{:.6}", r.decay_rate)
-                    },
-                    r.total_stats.reads.to_string(),
-                    r.total_stats.writes.to_string(),
-                    r.total_stats.activated.to_string(),
-                    r.conflicts.to_string(),
-                    format!("{:.0}", r.wall.as_secs_f64() * 1e3),
-                ]
-            })
-            .collect();
-        let table = harness_report::table(
-            &[
-                "solver",
-                "final (1/N)|x-x*|²",
-                "rate/step",
-                "reads",
-                "writes",
-                "activated",
-                "conflicts",
-                "wall ms",
-            ],
-            &rows,
-        );
-        format!("{plot}\n{table}")
+        let mk_series = |i: usize, tr: &AveragedTrajectory| plot::Series {
+            label: tr.name.clone(),
+            xs: tr.ts.iter().map(|&t| t as f64).collect(),
+            ys: tr.mean.clone(),
+            glyph: glyphs[i % glyphs.len()],
+        };
+        match &self.runs {
+            ExperimentReports::PageRank(reports) => {
+                let series: Vec<plot::Series> = reports
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| mk_series(i, &r.trajectory))
+                    .collect();
+                let title = format!(
+                    "{} — (1/N)‖x_t - x*‖² on {}, α={}, {} rounds",
+                    self.scenario.name,
+                    self.scenario.graph.key(),
+                    self.scenario.alpha,
+                    self.scenario.rounds
+                );
+                let plot = plot::semilogy(&series, 72, 20, &title);
+                let rows: Vec<Vec<String>> = reports
+                    .iter()
+                    .map(|r| {
+                        vec![
+                            r.spec.key(),
+                            format!("{:.3e}", r.final_error),
+                            render_rate(r.decay_rate),
+                            r.total_stats.reads.to_string(),
+                            r.total_stats.writes.to_string(),
+                            r.total_stats.activated.to_string(),
+                            r.conflicts.to_string(),
+                            format!("{:.0}", r.wall.as_secs_f64() * 1e3),
+                        ]
+                    })
+                    .collect();
+                let table = harness_report::table(
+                    &[
+                        "solver",
+                        "final (1/N)|x-x*|²",
+                        "rate/step",
+                        "reads",
+                        "writes",
+                        "activated",
+                        "conflicts",
+                        "wall ms",
+                    ],
+                    &rows,
+                );
+                format!("{plot}\n{table}")
+            }
+            ExperimentReports::SizeEstimation(reports) => {
+                let series: Vec<plot::Series> = reports
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| mk_series(i, &r.trajectory))
+                    .collect();
+                let title = format!(
+                    "{} — ‖s_t - 𝟙/N‖² on {}, {} rounds",
+                    self.scenario.name,
+                    self.scenario.graph.key(),
+                    self.scenario.rounds
+                );
+                let plot = plot::semilogy(&series, 72, 20, &title);
+                let rows: Vec<Vec<String>> = reports
+                    .iter()
+                    .map(|r| {
+                        vec![
+                            r.spec.key(),
+                            format!("{:.3e}", r.final_error),
+                            render_rate(r.decay_rate),
+                            format!("{:.3e}", r.final_size_rel_err),
+                            r.total_stats.reads.to_string(),
+                            r.total_stats.writes.to_string(),
+                            r.total_stats.activated.to_string(),
+                            format!("{:.0}", r.wall.as_secs_f64() * 1e3),
+                        ]
+                    })
+                    .collect();
+                let table = harness_report::table(
+                    &[
+                        "estimator",
+                        "final |s-1/N|²",
+                        "rate/step",
+                        "rel size err",
+                        "reads",
+                        "writes",
+                        "activated",
+                        "wall ms",
+                    ],
+                    &rows,
+                );
+                format!("{plot}\n{table}")
+            }
+        }
     }
 
-    /// CSV of every averaged trajectory (same shape as the Fig.-1 CSV).
+    /// CSV of every averaged trajectory (same shape as the Fig.-1 CSV;
+    /// size-estimation scenarios append the relative-size-error
+    /// trajectories after the error trajectories).
     pub fn to_csv(&self) -> String {
-        let trajectories: Vec<AveragedTrajectory> =
-            self.reports.iter().map(|r| r.trajectory.clone()).collect();
+        let trajectories: Vec<AveragedTrajectory> = match &self.runs {
+            ExperimentReports::PageRank(v) => v.iter().map(|r| r.trajectory.clone()).collect(),
+            ExperimentReports::SizeEstimation(v) => v
+                .iter()
+                .map(|r| r.trajectory.clone())
+                .chain(v.iter().map(|r| r.size_rel_err.clone()))
+                .collect(),
+        };
         harness_report::trajectories_csv(&trajectories)
     }
 
-    /// The per-solver summary objects shared by `BENCH_scenario.json`
-    /// and the merged `BENCH_sweep.json` cells.
-    pub fn solver_summaries_json(&self) -> Json {
-        Json::Array(
-            self.reports
-                .iter()
-                .map(|r| {
-                    let mut s = BTreeMap::new();
-                    s.insert("name".to_string(), Json::String(r.spec.key()));
-                    s.insert("final_error".to_string(), Json::Number(r.final_error));
-                    // NaN renders as null (JSON has no NaN).
-                    s.insert("decay_rate".to_string(), Json::Number(r.decay_rate));
-                    s.insert(
-                        "reads".to_string(),
-                        Json::Number(r.total_stats.reads as f64),
-                    );
-                    s.insert(
-                        "writes".to_string(),
-                        Json::Number(r.total_stats.writes as f64),
-                    );
-                    s.insert(
-                        "activated".to_string(),
-                        Json::Number(r.total_stats.activated as f64),
-                    );
-                    s.insert(
-                        "conflicts".to_string(),
-                        Json::Number(r.conflicts as f64),
-                    );
-                    s.insert(
-                        "wall_ms".to_string(),
-                        Json::Number(r.wall.as_secs_f64() * 1e3),
-                    );
-                    Json::Object(s)
-                })
-                .collect(),
-        )
+    /// The per-run summary array shared by `BENCH_scenario.json` and the
+    /// merged `BENCH_sweep.json` cells, with the JSON field it belongs
+    /// under (`"solvers"` or `"estimators"`).
+    pub fn run_summaries(&self) -> (&'static str, Json) {
+        match &self.runs {
+            ExperimentReports::PageRank(reports) => {
+                let arr = reports
+                    .iter()
+                    .map(|r| {
+                        let mut s = summary_common(
+                            &r.spec.key(),
+                            r.final_error,
+                            r.decay_rate,
+                            r.total_stats,
+                            r.wall,
+                        );
+                        s.insert("conflicts".to_string(), Json::Number(r.conflicts as f64));
+                        Json::Object(s)
+                    })
+                    .collect();
+                ("solvers", Json::Array(arr))
+            }
+            ExperimentReports::SizeEstimation(reports) => {
+                let arr = reports
+                    .iter()
+                    .map(|r| {
+                        let mut s = summary_common(
+                            &r.spec.key(),
+                            r.final_error,
+                            r.decay_rate,
+                            r.total_stats,
+                            r.wall,
+                        );
+                        s.insert(
+                            "final_size_rel_err".to_string(),
+                            Json::Number(r.final_size_rel_err),
+                        );
+                        Json::Object(s)
+                    })
+                    .collect();
+                ("estimators", Json::Array(arr))
+            }
+        }
     }
 
-    /// Machine-readable summary: scenario config plus per-solver final
-    /// error, decay rate, communication totals, conflict drops and wall
-    /// time.
+    /// Machine-readable summary: scenario config plus per-run final
+    /// error, decay rate, communication totals, kind-specific metrics
+    /// and wall time.
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("scenario".to_string(), self.scenario.to_json());
-        m.insert("solvers".to_string(), self.solver_summaries_json());
+        let (field, summaries) = self.run_summaries();
+        m.insert(field.to_string(), summaries);
         Json::Object(m)
     }
 
@@ -320,13 +486,44 @@ mod tests {
     #[test]
     fn rate_ordering_puts_nan_last() {
         let mut rep = small_report();
-        rep.reports[0].decay_rate = f64::NAN; // pretend mp diverged
+        if let ExperimentReports::PageRank(reports) = &mut rep.runs {
+            reports[0].decay_rate = f64::NAN; // pretend mp diverged
+        }
         let rates = rep.rate_ordering();
         assert_eq!(rates.len(), 2);
         assert!(rates[0].1.is_finite(), "finite rate must lead");
         assert!(rates[1].1.is_nan(), "NaN must sort last");
         // And the render degrades gracefully instead of panicking.
         assert!(rep.render().contains("n/a"));
+    }
+
+    #[test]
+    fn size_estimation_report_renders_and_serializes() {
+        let rep = Scenario::new("se-report", GraphSpec::paper(15))
+            .with_estimators(vec![EstimatorSpec::Kaczmarz, EstimatorSpec::RandomWalk])
+            .with_steps(600)
+            .with_stride(200)
+            .with_rounds(2)
+            .with_threads(1)
+            .with_seed(4)
+            .run()
+            .expect("size-estimation scenario runs");
+        assert!(rep.get_estimator("kaczmarz").is_some());
+        assert!(rep.get_estimator("degree").is_none());
+        assert!(rep.get("mp").is_none(), "no solver reports in a Fig.-2 run");
+        let txt = rep.render();
+        assert!(txt.contains("se-report"));
+        assert!(txt.contains("rel size err"));
+        let csv = rep.to_csv();
+        assert!(csv.starts_with("t,kaczmarz_mean"), "{csv}");
+        assert!(csv.contains("kaczmarz_relerr_mean"), "rel-err trajectory in the CSV");
+
+        let parsed = Json::parse(&rep.to_json().render()).expect("valid json");
+        let ests = parsed.get("estimators").and_then(Json::as_array).expect("estimators");
+        assert_eq!(ests.len(), 2);
+        assert_eq!(ests[0].get("name").and_then(Json::as_str), Some("kaczmarz"));
+        assert!(ests[0].get("final_size_rel_err").and_then(Json::as_f64).is_some());
+        assert!(parsed.get("solvers").is_none(), "no solvers key in estimation BENCH");
     }
 
     #[test]

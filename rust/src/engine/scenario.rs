@@ -1,11 +1,14 @@
-//! The declarative experiment: graph + solvers + shape, as one value.
+//! The declarative experiment: graph + experiment kind + shape, as one
+//! value.
 //!
 //! A [`Scenario`] is the single entry point for every experiment in the
-//! repository: it names a [`GraphSpec`], a list of [`SolverSpec`]s and
-//! the experiment shape (steps, stride, rounds, threads, seed, reference
-//! policy), round-trips through JSON, and [`Scenario::run`] drives
+//! repository: it names a [`GraphSpec`], an [`ExperimentSpec`] (PageRank
+//! solvers racing a reference solution, or size estimators racing
+//! toward `𝟙/N`) and the shared experiment shape (steps, stride,
+//! rounds, threads, seed, reference policy), round-trips through JSON,
+//! and [`Scenario::run`] drives
 //! [`crate::harness::experiment::run_rounds_stats`] uniformly for every
-//! solver — the Fig.-1/Fig.-2 harnesses, the CLI `run-scenario`
+//! run — the Fig.-1/Fig.-2 harnesses, the CLI `run-scenario`
 //! subcommand, the benches and the examples are all thin layers over it.
 //!
 //! ## Determinism contract
@@ -29,17 +32,21 @@
 
 use std::collections::BTreeMap;
 
-use crate::algo::common::Trajectory;
+use crate::algo::common::{StepStats, Trajectory};
 use crate::algo::power_iteration::JacobiPowerIteration;
+use crate::algo::size_estimation::SizeEstimator;
 use crate::algo::PageRankSolver;
 use crate::graph::Graph;
-use crate::harness::experiment::{run_rounds_stats, with_stride};
+use crate::harness::experiment::{run_rounds_stats, split_concat, with_stride};
 use crate::linalg::solve::exact_pagerank;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+use super::experiment_spec::{EstimatorSpec, ExperimentSpec};
 use super::graph_spec::GraphSpec;
-use super::report::{fitted_decay, ScenarioReport, SolverReport};
+use super::report::{
+    fitted_decay, EstimatorReport, ExperimentReports, ScenarioReport, SolverReport,
+};
 use super::solver_spec::{CoordinatorSolver, SolverSpec};
 
 /// How the reference solution `x*` is obtained.
@@ -58,7 +65,11 @@ pub enum ReferencePolicy {
 pub struct Scenario {
     pub name: String,
     pub graph: GraphSpec,
-    pub solvers: Vec<SolverSpec>,
+    /// What runs: PageRank solvers (Fig.-1 shape) or size estimators
+    /// (Fig.-2 shape). The shape fields below are shared by every kind.
+    pub experiment: ExperimentSpec,
+    /// Damping factor — PageRank experiments only (Algorithm 2 works on
+    /// `C = (I-A)ᵀ`, the α = 1 analogue).
     pub alpha: f64,
     /// Activations per round.
     pub steps: usize,
@@ -81,7 +92,7 @@ impl Scenario {
         Scenario {
             name: name.to_string(),
             graph,
-            solvers: vec![SolverSpec::Mp],
+            experiment: ExperimentSpec::pagerank(vec![SolverSpec::Mp]),
             alpha: crate::DEFAULT_ALPHA,
             steps: 60_000,
             stride: 500,
@@ -97,9 +108,40 @@ impl Scenario {
         Scenario::new(name, GraphSpec::paper(n))
     }
 
+    /// Run a PageRank race over these solvers (sets the experiment kind).
     pub fn with_solvers(mut self, solvers: Vec<SolverSpec>) -> Scenario {
-        self.solvers = solvers;
+        self.experiment = ExperimentSpec::pagerank(solvers);
         self
+    }
+
+    /// Run a size-estimation race over these estimators (sets the
+    /// experiment kind).
+    pub fn with_estimators(mut self, estimators: Vec<EstimatorSpec>) -> Scenario {
+        self.experiment = ExperimentSpec::size_estimation(estimators);
+        self
+    }
+
+    pub fn with_experiment(mut self, experiment: ExperimentSpec) -> Scenario {
+        self.experiment = experiment;
+        self
+    }
+
+    /// The PageRank solvers, if that is the experiment kind (empty slice
+    /// otherwise).
+    pub fn solvers(&self) -> &[SolverSpec] {
+        match &self.experiment {
+            ExperimentSpec::PageRank { solvers } => solvers,
+            ExperimentSpec::SizeEstimation { .. } => &[],
+        }
+    }
+
+    /// The size estimators, if that is the experiment kind (empty slice
+    /// otherwise).
+    pub fn estimators(&self) -> &[EstimatorSpec] {
+        match &self.experiment {
+            ExperimentSpec::SizeEstimation { estimators } => estimators,
+            ExperimentSpec::PageRank { .. } => &[],
+        }
     }
 
     pub fn with_alpha(mut self, alpha: f64) -> Scenario {
@@ -150,12 +192,19 @@ impl Scenario {
         }
     }
 
-    /// Run every solver through the uniform multi-round experiment
-    /// runner and collect trajectories, communication totals and fitted
-    /// decay rates.
+    /// Run every solver or estimator through the uniform multi-round
+    /// experiment runner and collect trajectories, communication totals
+    /// and fitted decay rates.
     pub fn run(&self) -> Result<ScenarioReport, String> {
-        if self.solvers.is_empty() {
-            return Err(format!("scenario {:?} has no solvers", self.name));
+        if self.experiment.is_empty() {
+            return Err(format!(
+                "scenario {:?} has no {} to run",
+                self.name,
+                match self.experiment {
+                    ExperimentSpec::PageRank { .. } => "solvers",
+                    ExperimentSpec::SizeEstimation { .. } => "estimators",
+                }
+            ));
         }
         if self.steps == 0 || self.stride == 0 || self.rounds == 0 {
             return Err(format!(
@@ -164,6 +213,35 @@ impl Scenario {
             ));
         }
         let graph = self.graph.build(self.seed)?;
+        let threads = if self.threads == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
+        } else {
+            self.threads
+        };
+        // One base stream shared by all runs: round i of run A and round
+        // i of run B see the same derived seed, which is what makes
+        // cross-run replay comparisons exact.
+        let base = Rng::seeded(self.seed ^ 0x5CE9_A810);
+        let runs = match &self.experiment {
+            ExperimentSpec::PageRank { solvers } => {
+                ExperimentReports::PageRank(self.run_pagerank(&graph, solvers, threads, &base)?)
+            }
+            ExperimentSpec::SizeEstimation { estimators } => ExperimentReports::SizeEstimation(
+                self.run_size_estimation(&graph, estimators, threads, &base)?,
+            ),
+        };
+        Ok(ScenarioReport { scenario: self.clone(), runs })
+    }
+
+    /// The Fig.-1 experiment shape: every solver races the reference
+    /// solution over averaged rounds.
+    fn run_pagerank(
+        &self,
+        graph: &Graph,
+        solvers: &[SolverSpec],
+        threads: usize,
+        base: &Rng,
+    ) -> Result<Vec<SolverReport>, String> {
         // Dangling pages are fine for the out-link backends (implicit
         // self-loop guard), but the in-link baselines, the random-walk
         // estimator and the simulated coordinator would divide by raw
@@ -171,7 +249,7 @@ impl Scenario {
         // a usable error instead of poisoning results or panicking.
         let dangling = graph.dangling();
         if !dangling.is_empty() {
-            if let Some(bad) = self.solvers.iter().find(|s| !s.supports_dangling()) {
+            if let Some(bad) = solvers.iter().find(|s| !s.supports_dangling()) {
                 return Err(format!(
                     "scenario {:?}: graph has {} dangling page(s) (e.g. page {}) but solver \
                      {} requires a repaired graph — repair it (DanglingPolicy) or keep to \
@@ -184,26 +262,17 @@ impl Scenario {
                 ));
             }
         }
-        let x_star = self.reference_solution(&graph);
-        let threads = if self.threads == 0 {
-            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
-        } else {
-            self.threads
-        };
-        // One base stream shared by all solvers: round i of solver A and
-        // round i of solver B see the same derived seed, which is what
-        // makes cross-solver replay comparisons exact.
-        let base = Rng::seeded(self.seed ^ 0x5CE9_A810);
+        let x_star = self.reference_solution(graph);
 
-        let mut reports = Vec::with_capacity(self.solvers.len());
-        for spec in &self.solvers {
+        let mut reports = Vec::with_capacity(solvers.len());
+        for spec in solvers {
             let t0 = std::time::Instant::now();
             // Conflict drops (sharded backend only) summed across rounds;
             // an atomic because rounds may run on worker threads. u64
             // addition commutes, so the total stays thread-invariant.
             let conflicts = std::sync::atomic::AtomicU64::new(0);
             let (avg, total_stats) =
-                run_rounds_stats(&spec.key(), self.rounds, &base, threads, |round_rng| {
+                run_rounds_stats(&spec.key(), self.rounds, base, threads, |round_rng| {
                     let mut seed_rng = round_rng;
                     let solver_seed = seed_rng.next_u64();
                     match spec {
@@ -214,7 +283,7 @@ impl Scenario {
                         // and serialize async runs).
                         SolverSpec::Coordinator { .. } => {
                             let mut coord = CoordinatorSolver::from_spec(
-                                &graph,
+                                graph,
                                 self.alpha,
                                 solver_seed,
                                 spec,
@@ -223,7 +292,7 @@ impl Scenario {
                             coord.record(&x_star, self.steps, self.stride)
                         }
                         _ => {
-                            let mut solver = spec.build(&graph, self.alpha, solver_seed);
+                            let mut solver = spec.build(graph, self.alpha, solver_seed);
                             let mut step_rng = Rng::seeded(solver_seed).fork(1);
                             let tr = Trajectory::record(
                                 &mut *solver,
@@ -255,18 +324,109 @@ impl Scenario {
                 wall: t0.elapsed(),
             });
         }
-        Ok(ScenarioReport { scenario: self.clone(), reports })
+        Ok(reports)
     }
 
-    /// JSON object form (see `examples/fig1_scenario.json`).
+    /// The Fig.-2 experiment shape: every estimator races toward the
+    /// uniform vector `𝟙/N`, recording both the squared error (the
+    /// Fig.-2 axis) and the mean relative size error per stride in one
+    /// pass.
+    fn run_size_estimation(
+        &self,
+        graph: &Graph,
+        estimators: &[EstimatorSpec],
+        threads: usize,
+        base: &Rng,
+    ) -> Result<Vec<EstimatorReport>, String> {
+        // Algorithm 2's row norms need positive out-degrees and its
+        // fixed point needs strong connectivity — validate once, with
+        // the scenario named in the error, instead of panicking on a
+        // round worker thread.
+        let dangling = graph.dangling();
+        if !dangling.is_empty() {
+            return Err(format!(
+                "scenario {:?}: graph has {} dangling page(s) (e.g. page {}) but Algorithm 2 \
+                 needs positive out-degrees — repair the graph (DanglingPolicy) first",
+                self.name,
+                dangling.len(),
+                dangling[0]
+            ));
+        }
+        if let Err(e) = SizeEstimator::new(graph) {
+            return Err(format!("scenario {:?}: {e}", self.name));
+        }
+        let samples = self.steps / self.stride + 1;
+
+        let mut reports = Vec::with_capacity(estimators.len());
+        for spec in estimators {
+            let t0 = std::time::Instant::now();
+            let (avg, total_stats) =
+                run_rounds_stats(&spec.key(), self.rounds, base, threads, |round_rng| {
+                    // Same per-round seed protocol as the PageRank kind,
+                    // so estimator rounds are replay-comparable with
+                    // solver rounds under one scenario seed.
+                    let mut seed_rng = round_rng;
+                    let solver_seed = seed_rng.next_u64();
+                    let mut run = spec.build(graph).expect("validated before the rounds");
+                    let mut step_rng = Rng::seeded(solver_seed).fork(1);
+                    let mut stats = StepStats::default();
+                    let mut errs = Vec::with_capacity(2 * samples);
+                    let mut rels = Vec::with_capacity(samples);
+                    errs.push(run.error_sq());
+                    rels.push(run.mean_rel_size_error());
+                    for t in 1..=self.steps {
+                        stats.accumulate(run.step(&mut step_rng));
+                        if t % self.stride == 0 {
+                            errs.push(run.error_sq());
+                            rels.push(run.mean_rel_size_error());
+                        }
+                    }
+                    // Both metrics ride one round vector; split after
+                    // averaging (element-wise, so the halves stay exact).
+                    errs.extend(rels);
+                    (errs, stats)
+                });
+            let (err_avg, rel_avg) =
+                split_concat(avg, samples, &format!("{}_relerr", spec.key()));
+            let trajectory = with_stride(err_avg, self.stride);
+            let size_rel_err = with_stride(rel_avg, self.stride);
+            let decay_rate = fitted_decay(&trajectory.mean, self.stride);
+            reports.push(EstimatorReport {
+                spec: *spec,
+                decay_rate,
+                final_error: trajectory.final_mean(),
+                final_size_rel_err: size_rel_err.final_mean(),
+                trajectory,
+                size_rel_err,
+                total_stats,
+                wall: t0.elapsed(),
+            });
+        }
+        Ok(reports)
+    }
+
+    /// JSON object form (see `examples/fig1_scenario.json` and
+    /// `examples/fig2_scenario.json`). The PageRank kind serializes as a
+    /// bare top-level `"solvers"` array — the pre-experiment schema — so
+    /// existing scenario files and BENCH consumers keep working; other
+    /// kinds serialize under `"experiment"`.
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("name".to_string(), Json::String(self.name.clone()));
         m.insert("graph".to_string(), self.graph.to_json());
-        m.insert(
-            "solvers".to_string(),
-            Json::Array(self.solvers.iter().map(|s| Json::String(s.key())).collect()),
-        );
+        match &self.experiment {
+            ExperimentSpec::PageRank { .. } => {
+                m.insert(
+                    "solvers".to_string(),
+                    Json::Array(
+                        self.experiment.run_keys().into_iter().map(Json::String).collect(),
+                    ),
+                );
+            }
+            other => {
+                m.insert("experiment".to_string(), other.to_json());
+            }
+        }
         m.insert("alpha".to_string(), Json::Number(self.alpha));
         m.insert("steps".to_string(), Json::Number(self.steps as f64));
         m.insert("stride".to_string(), Json::Number(self.stride as f64));
@@ -289,20 +449,51 @@ impl Scenario {
     }
 
     /// Parse from the object form. Only `graph` is mandatory; everything
-    /// else falls back to the paper defaults of [`Scenario::new`].
+    /// else falls back to the paper defaults of [`Scenario::new`]. A
+    /// bare top-level `"solvers"` array still means the PageRank kind —
+    /// the pre-experiment schema — while an `"experiment"` key selects
+    /// the kind explicitly (the two together are rejected as ambiguous).
     pub fn from_json(v: &Json) -> Result<Scenario, String> {
         let graph = GraphSpec::from_json(v.get("graph").ok_or("scenario needs a \"graph\"")?)?;
         let mut scenario =
             Scenario::new(v.get("name").and_then(Json::as_str).unwrap_or("scenario"), graph);
-        if let Some(arr) = v.get("solvers").and_then(Json::as_array) {
-            let mut solvers = Vec::with_capacity(arr.len());
-            for s in arr {
-                let key = s
-                    .as_str()
-                    .ok_or("\"solvers\" must be an array of registry strings")?;
-                solvers.push(SolverSpec::parse(key)?);
+        if v.get("estimators").is_some() {
+            // Without this guard a mirrored-legacy spelling would fall
+            // through to the default mp race and run the wrong experiment
+            // without a word.
+            return Err(
+                "scenario has a top-level \"estimators\" key — estimators belong inside the \
+                 experiment object: \"experiment\": {\"kind\": \"size-estimation\", \
+                 \"estimators\": [...]}"
+                    .into(),
+            );
+        }
+        match (v.get("experiment"), v.get("solvers")) {
+            (Some(_), Some(_)) => {
+                return Err(
+                    "scenario has both \"experiment\" and a top-level \"solvers\" — put the \
+                     solvers inside the experiment object (or drop the \"experiment\" key for \
+                     a plain PageRank race)"
+                        .into(),
+                )
             }
-            scenario.solvers = solvers;
+            (Some(exp), None) => {
+                scenario.experiment = ExperimentSpec::from_json(exp)?;
+            }
+            (None, Some(arr)) => {
+                let arr = arr
+                    .as_array()
+                    .ok_or("\"solvers\" must be an array of registry strings")?;
+                let mut solvers = Vec::with_capacity(arr.len());
+                for s in arr {
+                    let key = s
+                        .as_str()
+                        .ok_or("\"solvers\" must be an array of registry strings")?;
+                    solvers.push(SolverSpec::parse(key)?);
+                }
+                scenario.experiment = ExperimentSpec::pagerank(solvers);
+            }
+            (None, None) => {}
         }
         if let Some(alpha) = v.get("alpha").and_then(Json::as_f64) {
             if !(alpha > 0.0 && alpha < 1.0) {
@@ -380,8 +571,8 @@ mod tests {
     #[test]
     fn run_produces_one_report_per_solver() {
         let report = tiny().run().expect("runs");
-        assert_eq!(report.reports.len(), 2);
-        let mp = &report.reports[0];
+        assert_eq!(report.solver_reports().len(), 2);
+        let mp = &report.solver_reports()[0];
         assert_eq!(mp.trajectory.name, "mp");
         assert_eq!(mp.trajectory.mean.len(), 7); // t = 0,100,…,600
         assert_eq!(mp.trajectory.ts[1], 100);
@@ -394,9 +585,10 @@ mod tests {
     fn deterministic_and_thread_invariant() {
         let a = tiny().run().expect("runs");
         let b = tiny().with_threads(1).run().expect("runs");
-        assert_eq!(a.reports[0].trajectory.mean, b.reports[0].trajectory.mean);
-        assert_eq!(a.reports[1].trajectory.variance, b.reports[1].trajectory.variance);
-        assert_eq!(a.reports[0].total_stats, b.reports[0].total_stats);
+        let (a, b) = (a.solver_reports(), b.solver_reports());
+        assert_eq!(a[0].trajectory.mean, b[0].trajectory.mean);
+        assert_eq!(a[1].trajectory.variance, b[1].trajectory.variance);
+        assert_eq!(a[0].total_stats, b[0].total_stats);
     }
 
     #[test]
@@ -411,7 +603,7 @@ mod tests {
     fn from_json_applies_paper_defaults() {
         let s = Scenario::from_json_str(r#"{"graph": "paper:40"}"#).expect("parses");
         assert_eq!(s.graph, GraphSpec::ErThreshold { n: 40, threshold: 0.5 });
-        assert_eq!(s.solvers, vec![SolverSpec::Mp]);
+        assert_eq!(s.solvers(), &[SolverSpec::Mp]);
         assert_eq!(s.rounds, 100);
         assert_eq!(s.alpha, crate::DEFAULT_ALPHA);
         assert_eq!(s.reference, ReferencePolicy::Exact);
@@ -457,12 +649,124 @@ mod tests {
             .with_seed(6)
             .run()
             .expect("runs");
-        let r = &report.reports[0];
+        let r = &report.solver_reports()[0];
         assert!(r.final_error < r.trajectory.mean[0], "no progress");
         assert!(r.conflicts > 0, "dense graphs must drop candidates");
         assert!(r.total_stats.activated > 0);
         // Non-sharded solvers report zero conflicts.
         let mp = tiny().run().expect("runs");
-        assert_eq!(mp.reports[0].conflicts, 0);
+        assert_eq!(mp.solver_reports()[0].conflicts, 0);
+    }
+
+    fn tiny_size_est() -> Scenario {
+        Scenario::paper("tiny-se", 20)
+            .with_estimators(EstimatorSpec::all())
+            .with_steps(2_000)
+            .with_stride(500)
+            .with_rounds(3)
+            .with_threads(2)
+            .with_seed(8)
+    }
+
+    #[test]
+    fn size_estimation_scenario_races_every_estimator() {
+        let report = tiny_size_est().run().expect("runs");
+        assert!(report.solver_reports().is_empty(), "no PageRank runs in a Fig.-2 scenario");
+        let ests = report.estimator_reports();
+        assert_eq!(ests.len(), 3);
+        for r in ests {
+            assert_eq!(r.trajectory.mean.len(), 5, "{}: t = 0,500,…,2000", r.spec.key());
+            assert_eq!(r.size_rel_err.mean.len(), 5, "{}", r.spec.key());
+            assert!(
+                r.final_error < r.trajectory.mean[0],
+                "{} must contract toward 1/N",
+                r.spec.key()
+            );
+            assert!(
+                r.final_size_rel_err < r.size_rel_err.mean[0],
+                "{}: size estimates must sharpen",
+                r.spec.key()
+            );
+            assert!(r.total_stats.activated == 3 * 2_000, "{}", r.spec.key());
+            assert_eq!(r.total_stats.reads, r.total_stats.writes, "{}", r.spec.key());
+        }
+        // The rate ordering covers estimators, too.
+        assert_eq!(report.rate_ordering().len(), 3);
+    }
+
+    #[test]
+    fn size_estimation_scenario_is_deterministic_and_thread_invariant() {
+        let a = tiny_size_est().run().expect("runs");
+        let b = tiny_size_est().with_threads(1).run().expect("runs");
+        for (ra, rb) in a.estimator_reports().iter().zip(b.estimator_reports()) {
+            assert_eq!(ra.trajectory.mean, rb.trajectory.mean, "{}", ra.spec.key());
+            assert_eq!(ra.size_rel_err.mean, rb.size_rel_err.mean, "{}", ra.spec.key());
+            assert_eq!(ra.total_stats, rb.total_stats, "{}", ra.spec.key());
+        }
+    }
+
+    #[test]
+    fn size_estimation_json_round_trips_and_bare_solvers_stay_pagerank() {
+        let s = tiny_size_est();
+        let text = s.to_json().render();
+        assert!(text.contains("\"experiment\""), "non-default kinds serialize explicitly");
+        assert!(!text.contains("\"solvers\""), "no stray solvers key: {text}");
+        let back = Scenario::from_json_str(&text).expect("round trips");
+        assert_eq!(back, s);
+
+        // The pre-experiment schema still parses as the PageRank kind.
+        let legacy = Scenario::from_json_str(
+            r#"{"graph": "paper:10", "solvers": ["mp", "dense"]}"#,
+        )
+        .expect("parses");
+        assert_eq!(
+            legacy.experiment,
+            ExperimentSpec::pagerank(vec![SolverSpec::Mp, SolverSpec::Dense])
+        );
+        // And the PageRank kind keeps serializing in that schema.
+        let round = legacy.to_json().render();
+        assert!(round.contains("\"solvers\""));
+        assert!(!round.contains("\"experiment\""));
+
+        // String and default forms of the experiment key.
+        let s = Scenario::from_json_str(
+            r#"{"graph": "paper:10", "experiment": "size-estimation"}"#,
+        )
+        .expect("parses");
+        assert_eq!(s.estimators(), &[EstimatorSpec::Kaczmarz]);
+
+        // Ambiguous combinations are rejected loudly.
+        let err = Scenario::from_json_str(
+            r#"{"graph": "paper:10", "experiment": "size-estimation", "solvers": ["mp"]}"#,
+        )
+        .expect_err("must reject");
+        assert!(err.contains("experiment"), "{err}");
+        // A mirrored-legacy top-level "estimators" must not silently run
+        // the default mp race.
+        let err = Scenario::from_json_str(
+            r#"{"graph": "paper:10", "estimators": ["kaczmarz"]}"#,
+        )
+        .expect_err("must reject");
+        assert!(err.contains("estimators"), "{err}");
+        assert!(err.contains("experiment"), "error points at the right key: {err}");
+    }
+
+    #[test]
+    fn size_estimation_refuses_unsuitable_graphs() {
+        // The chain family ships a genuine sink: Algorithm 2's row norms
+        // would assert on the zero out-degree — refuse with a message
+        // naming the scenario instead.
+        let err = Scenario::new("se-dangling", GraphSpec::Family { family: "chain".into(), n: 8 })
+            .with_estimators(vec![EstimatorSpec::Kaczmarz])
+            .with_steps(100)
+            .with_stride(50)
+            .with_rounds(1)
+            .with_threads(1)
+            .run()
+            .expect_err("dangling sink must be refused");
+        assert!(err.contains("dangling"), "{err}");
+        assert!(err.contains("se-dangling"), "{err}");
+        // And no estimators at all is an error, like no solvers.
+        assert!(tiny_size_est().with_estimators(vec![]).run().is_err());
     }
 }

@@ -7,7 +7,9 @@
 //! (`SolverSpec::parse("mp")`, `"parallel-mp:16"`,
 //! `"coordinator:async:clocks:const:0.1"`) is the JSON form used by
 //! [`super::Scenario`], so adding a workload to an experiment means
-//! editing config, not harness code.
+//! editing config, not harness code. (Its size-estimation counterpart,
+//! [`super::experiment_spec::EstimatorSpec`], follows the same pattern
+//! for the Fig.-2 experiment kind.)
 //!
 //! Three adapters close the gap between the trait and the non-conforming
 //! runtimes: [`DynamicSolver`] (owns its mutable graph),

@@ -18,18 +18,23 @@
 //! }
 //! ```
 //!
-//! Axes are applied to the *relevant* specs: `shards`/`batch`/`packer`
-//! rewrite the sharded (and, for `batch`, parallel-mp) solver entries,
-//! `latency` rewrites coordinator entries, and naming an axis with no
-//! applicable solver is an error rather than a silent no-op. Axis order is
-//! alphabetical (stable), values keep their listed order, so cell
-//! expansion is deterministic.
+//! Axes are applied to the *relevant* specs and are experiment-aware:
+//! `shards`/`batch`/`packer` rewrite the sharded (and, for `batch`,
+//! parallel-mp) solver entries, `latency` rewrites coordinator entries,
+//! `graph` swaps the whole graph spec (a registry string or object, so a
+//! sweep can range over graph *families*), and naming an axis with no
+//! applicable solver — or a solver-only axis on a size-estimation
+//! scenario, or `n` on a file graph — is an error rather than a silent
+//! no-op. Axis order is alphabetical (stable), values keep their listed
+//! order, so cell expansion is deterministic; note `graph` sorts before
+//! `n`, so a size axis re-sizes whatever family the cell's `graph` chose.
 
 use std::collections::BTreeMap;
 
 use crate::network::LatencyModel;
 use crate::util::json::Json;
 
+use super::experiment_spec::ExperimentSpec;
 use super::graph_spec::GraphSpec;
 use super::report::ScenarioReport;
 use super::scenario::Scenario;
@@ -47,13 +52,30 @@ pub struct Sweep {
 
 /// The grid axes [`Sweep`] understands.
 pub const SWEEP_AXES: &[&str] = &[
-    "alpha", "batch", "latency", "n", "packer", "rounds", "seed", "shards", "steps", "stride",
+    "alpha", "batch", "graph", "latency", "n", "packer", "rounds", "seed", "shards", "steps",
+    "stride",
 ];
 
 fn render_param(v: &Json) -> String {
     match v.as_str() {
         Some(s) => s.to_string(),
         None => v.render(),
+    }
+}
+
+/// The solver list of a PageRank scenario, or a loud error for axes that
+/// only make sense there (a size-estimation run has no shards, batches,
+/// latencies or α to sweep).
+fn pagerank_solvers<'a>(
+    scenario: &'a mut Scenario,
+    axis: &str,
+) -> Result<&'a mut Vec<SolverSpec>, String> {
+    match &mut scenario.experiment {
+        ExperimentSpec::PageRank { solvers } => Ok(solvers),
+        other => Err(format!(
+            "axis {axis:?} applies to PageRank solvers, but the scenario runs a {} experiment",
+            other.kind_key()
+        )),
     }
 }
 
@@ -65,6 +87,14 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
             .ok_or_else(|| format!("axis {axis:?}: {} is not a non-negative integer", value.render()))
     };
     match axis {
+        "graph" => {
+            // A registry string ("ba:100") or a graph object — the axis
+            // that sweeps over graph *families*. Applied before "n"
+            // (alphabetical order), so an n axis re-sizes the family
+            // this cell picked.
+            scenario.graph = GraphSpec::from_json(value)
+                .map_err(|e| format!("axis \"graph\": {e}"))?;
+        }
         "n" => {
             let n = want_usize()?;
             // Every generator family is total for n >= 2 except ws
@@ -77,12 +107,24 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
             match &mut scenario.graph {
                 GraphSpec::ErThreshold { n: gn, .. } => *gn = n,
                 GraphSpec::Family { n: gn, .. } => *gn = n,
-                GraphSpec::File { .. } => {
-                    return Err("axis \"n\" cannot resize a file graph".into())
+                // A silent no-op here would run every "cell" on the same
+                // file and report them as different sizes — refuse.
+                GraphSpec::File { path } => {
+                    return Err(format!(
+                        "axis \"n\" cannot resize the file graph {path:?} — drop the axis or \
+                         sweep generated families via the \"graph\" axis instead"
+                    ))
                 }
             }
         }
         "alpha" => {
+            if !matches!(scenario.experiment, ExperimentSpec::PageRank { .. }) {
+                return Err(
+                    "axis \"alpha\": size estimation runs on C = (I-A)ᵀ (the α = 1 analogue); \
+                     the axis applies only to PageRank experiments"
+                        .into(),
+                );
+            }
             let alpha = value
                 .as_f64()
                 .ok_or_else(|| format!("axis \"alpha\": {} is not a number", value.render()))?;
@@ -121,7 +163,7 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
                 return Err("axis \"shards\": must be >= 1".into());
             }
             let mut hit = false;
-            for s in &mut scenario.solvers {
+            for s in pagerank_solvers(scenario, axis)? {
                 if let SolverSpec::Sharded { shards: sh, batch, .. } = s {
                     // Keep the parse-time claim-word bound: an axis must
                     // not assemble a cell the runtime would panic on.
@@ -149,7 +191,7 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
                 return Err("axis \"batch\": must be >= 1".into());
             }
             let mut hit = false;
-            for s in &mut scenario.solvers {
+            for s in pagerank_solvers(scenario, axis)? {
                 match s {
                     SolverSpec::Sharded { shards, batch: b, .. } => {
                         let max = crate::coordinator::sharded::max_batch_budget(*shards);
@@ -182,7 +224,7 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
             let packer = crate::coordinator::Packer::parse(spec)
                 .ok_or_else(|| format!("axis \"packer\": bad policy {spec:?} (leader|worker)"))?;
             let mut hit = false;
-            for s in &mut scenario.solvers {
+            for s in pagerank_solvers(scenario, axis)? {
                 if let SolverSpec::Sharded { packer: p, .. } = s {
                     *p = packer;
                     hit = true;
@@ -203,7 +245,7 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
                 format!("axis \"latency\": bad model {spec:?} (zero|const:L|uniform:lo:hi|exp:mean)")
             })?;
             let mut hit = false;
-            for s in &mut scenario.solvers {
+            for s in pagerank_solvers(scenario, axis)? {
                 if let SolverSpec::Coordinator { latency: l, .. } = s {
                     *l = latency;
                     hit = true;
@@ -353,8 +395,11 @@ pub struct SweepReport {
 }
 
 impl SweepReport {
-    /// Summary table: one row per (cell, solver).
+    /// Summary table: one row per (cell, run). The `conflicts` column
+    /// doubles as the kind-specific metric slot — packing drops for
+    /// solvers, final relative size error for estimators.
     pub fn render(&self) -> String {
+        let fmt_rate = super::report::render_rate;
         let mut rows: Vec<Vec<String>> = Vec::new();
         for cell in &self.cells {
             let params: Vec<String> = cell
@@ -363,30 +408,36 @@ impl SweepReport {
                 .map(|(k, v)| format!("{k}={}", render_param(v)))
                 .collect();
             let params = params.join(",");
-            for r in &cell.report.reports {
+            for r in cell.report.solver_reports() {
                 rows.push(vec![
                     params.clone(),
                     r.spec.key(),
                     format!("{:.3e}", r.final_error),
-                    if r.decay_rate.is_nan() {
-                        "n/a".to_string()
-                    } else {
-                        format!("{:.6}", r.decay_rate)
-                    },
+                    fmt_rate(r.decay_rate),
                     r.conflicts.to_string(),
+                    format!("{:.0}", r.wall.as_secs_f64() * 1e3),
+                ]);
+            }
+            for r in cell.report.estimator_reports() {
+                rows.push(vec![
+                    params.clone(),
+                    r.spec.key(),
+                    format!("{:.3e}", r.final_error),
+                    fmt_rate(r.decay_rate),
+                    format!("relerr {:.2e}", r.final_size_rel_err),
                     format!("{:.0}", r.wall.as_secs_f64() * 1e3),
                 ]);
             }
         }
         let table = crate::harness::report::table(
-            &["cell", "solver", "final (1/N)|x-x*|²", "rate/step", "conflicts", "wall ms"],
+            &["cell", "run", "final error", "rate/step", "conflicts", "wall ms"],
             &rows,
         );
         format!(
-            "sweep {:?}: {} cells × {} solvers\n{table}",
+            "sweep {:?}: {} cells × {} runs\n{table}",
             self.name,
             self.cells.len(),
-            self.base.solvers.len()
+            self.base.experiment.len()
         )
     }
 
@@ -418,10 +469,11 @@ impl SweepReport {
                             "name".to_string(),
                             Json::String(cell.report.scenario.name.clone()),
                         );
-                        c.insert(
-                            "solvers".to_string(),
-                            cell.report.solver_summaries_json(),
-                        );
+                        // "solvers" for PageRank cells, "estimators" for
+                        // size-estimation cells — same shape bench_diff
+                        // consumes from BENCH_scenario.json.
+                        let (field, summaries) = cell.report.run_summaries();
+                        c.insert(field.to_string(), summaries);
                         Json::Object(c)
                     })
                     .collect(),
@@ -477,7 +529,7 @@ mod tests {
         // the assignment really lands in the scenario
         let (_, last) = &cells[3];
         assert_eq!(last.graph, GraphSpec::ErThreshold { n: 15, threshold: 0.5 });
-        assert!(last.solvers.iter().any(|s| matches!(
+        assert!(last.solvers().iter().any(|s| matches!(
             s,
             SolverSpec::Sharded { shards: 2, batch: 4, map: ShardMap::Modulo, .. }
         )));
@@ -490,10 +542,10 @@ mod tests {
             .expect("parses");
         let cells = sweep.cells().expect("expands");
         assert_eq!(cells.len(), 2);
-        assert!(cells[0].1.solvers.iter().any(
+        assert!(cells[0].1.solvers().iter().any(
             |s| matches!(s, SolverSpec::Sharded { packer: Packer::Leader, .. })
         ));
-        assert!(cells[1].1.solvers.iter().any(
+        assert!(cells[1].1.solvers().iter().any(
             |s| matches!(s, SolverSpec::Sharded { packer: Packer::Worker, .. })
         ));
         assert_eq!(cells[1].1.name, "grid-test[packer=worker]");
@@ -577,10 +629,121 @@ mod tests {
         }"#;
         let sweep = Sweep::from_json_str(text).expect("parses");
         let cells = sweep.cells().expect("expands");
-        let solvers = &cells[0].1.solvers;
+        let solvers = cells[0].1.solvers();
         assert!(solvers.contains(&SolverSpec::ParallelMp { batch: 16 }));
         assert!(solvers
             .iter()
             .any(|s| matches!(s, SolverSpec::Sharded { batch: 16, .. })));
+    }
+
+    #[test]
+    fn graph_axis_sweeps_over_families_and_composes_with_n() {
+        let text = r#"{
+          "name": "family-grid",
+          "scenario": {
+            "graph": "paper:12", "solvers": ["mp"],
+            "steps": 200, "stride": 100, "rounds": 2, "threads": 1, "seed": 3
+          },
+          "grid": {"graph": ["paper:12", "ba:12", "ring:12"], "n": [10, 14]}
+        }"#;
+        let sweep = Sweep::from_json_str(text).expect("parses");
+        let cells = sweep.cells().expect("expands");
+        assert_eq!(cells.len(), 6);
+        // graph sorts before n: the n axis resizes whatever family the
+        // cell's graph value picked.
+        assert_eq!(cells[0].1.graph, GraphSpec::ErThreshold { n: 10, threshold: 0.5 });
+        assert_eq!(cells[3].1.graph, GraphSpec::Family { family: "ba".into(), n: 14 });
+        assert_eq!(cells[4].1.graph, GraphSpec::Family { family: "ring".into(), n: 10 });
+        assert_eq!(cells[4].1.name, "family-grid[graph=ring:12,n=10]");
+        // Bad family values fail at expansion, not mid-run.
+        let bad = r#"{
+          "scenario": {"graph": "paper:10", "solvers": ["mp"]},
+          "grid": {"graph": ["banana:10"]}
+        }"#;
+        assert!(Sweep::from_json_str(bad).expect("parses").cells().is_err());
+    }
+
+    #[test]
+    fn graph_axis_cells_run_end_to_end() {
+        let text = r#"{
+          "name": "family-run",
+          "scenario": {
+            "graph": "paper:10", "solvers": ["mp"],
+            "steps": 200, "stride": 100, "rounds": 2, "threads": 1, "seed": 5
+          },
+          "grid": {"graph": ["paper:10", "ring:10"]}
+        }"#;
+        let report = Sweep::from_json_str(text).expect("parses").run().expect("runs");
+        assert_eq!(report.cells.len(), 2);
+        for cell in &report.cells {
+            let r = &cell.report.solver_reports()[0];
+            assert!(r.final_error < r.trajectory.mean[0], "{}", cell.report.scenario.name);
+        }
+        assert!(report.render().contains("graph=ring:10"));
+    }
+
+    #[test]
+    fn n_axis_on_a_file_graph_is_a_loud_error() {
+        let text = r#"{
+          "scenario": {
+            "graph": {"kind": "file", "path": "web/crawl.txt"},
+            "solvers": ["mp"]
+          },
+          "grid": {"n": [10, 20]}
+        }"#;
+        let sweep = Sweep::from_json_str(text).expect("parses");
+        let err = sweep.cells().expect_err("must refuse, not silently no-op");
+        assert!(err.contains("file graph"), "{err}");
+        assert!(err.contains("crawl.txt"), "error names the file: {err}");
+        assert!(err.contains("\"graph\""), "error points at the graph axis: {err}");
+    }
+
+    #[test]
+    fn solver_axes_on_size_estimation_scenarios_are_rejected() {
+        for (grid, axis) in [
+            (r#"{"shards": [2]}"#, "shards"),
+            (r#"{"batch": [4]}"#, "batch"),
+            (r#"{"packer": ["worker"]}"#, "packer"),
+            (r#"{"latency": ["const:0.1"]}"#, "latency"),
+            (r#"{"alpha": [0.5]}"#, "alpha"),
+        ] {
+            let text = format!(
+                r#"{{
+                  "scenario": {{
+                    "graph": "paper:10",
+                    "experiment": {{"kind": "size-estimation", "estimators": ["kaczmarz"]}}
+                  }},
+                  "grid": {grid}
+                }}"#
+            );
+            let sweep = Sweep::from_json_str(&text).expect("parses");
+            let err = sweep.cells().expect_err("solver axis must be rejected");
+            assert!(err.contains(axis), "axis {axis}: {err}");
+        }
+    }
+
+    #[test]
+    fn size_estimation_sweep_runs_and_merges() {
+        let text = r#"{
+          "name": "se-grid",
+          "scenario": {
+            "graph": "paper:10",
+            "experiment": {"kind": "size-estimation", "estimators": ["kaczmarz", "walk"]},
+            "steps": 400, "stride": 200, "rounds": 2, "threads": 1, "seed": 9
+          },
+          "grid": {"n": [10, 12]}
+        }"#;
+        let sweep = Sweep::from_json_str(text).expect("parses");
+        let report = sweep.run().expect("runs");
+        assert_eq!(report.cells.len(), 2);
+        let parsed = Json::parse(&report.to_json().render()).expect("valid json");
+        let cells = parsed.get("cells").and_then(Json::as_array).expect("cells");
+        for cell in cells {
+            let ests = cell.get("estimators").and_then(Json::as_array).expect("estimators");
+            assert_eq!(ests.len(), 2);
+            assert!(ests[0].get("final_size_rel_err").is_some());
+            assert!(cell.get("solvers").is_none());
+        }
+        assert!(report.render().contains("kaczmarz"));
     }
 }

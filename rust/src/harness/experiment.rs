@@ -126,6 +126,47 @@ pub fn with_stride(mut tr: AveragedTrajectory, stride: usize) -> AveragedTraject
     tr
 }
 
+/// Split an averaged trajectory whose rounds recorded two metrics
+/// back-to-back (`[metric_a(t0..), metric_b(t0..)]`) at index `at`: the
+/// head keeps the name, the tail takes `tail_name`. Averaging is
+/// element-wise, so the mean/variance of the concatenation is the
+/// concatenation of the means/variances — one [`run_rounds_stats`] pass
+/// yields both trajectories (the size-estimation scenarios record the
+/// Fig.-2 error and the relative size error this way).
+pub fn split_concat(
+    tr: AveragedTrajectory,
+    at: usize,
+    tail_name: &str,
+) -> (AveragedTrajectory, AveragedTrajectory) {
+    assert!(at <= tr.mean.len(), "split point {at} past {} samples", tr.mean.len());
+    let (head_mean, tail_mean) = tr.mean.split_at(at);
+    let (head_var, tail_var) = tr.variance.split_at(at);
+    let split_rounds = |take_head: bool| -> Vec<Vec<f64>> {
+        tr.sample_rounds
+            .iter()
+            .map(|r| {
+                let (h, t) = r.split_at(at.min(r.len()));
+                (if take_head { h } else { t }).to_vec()
+            })
+            .collect()
+    };
+    let head = AveragedTrajectory {
+        name: tr.name.clone(),
+        ts: (0..head_mean.len()).collect(),
+        mean: head_mean.to_vec(),
+        variance: head_var.to_vec(),
+        sample_rounds: split_rounds(true),
+    };
+    let tail = AveragedTrajectory {
+        name: tail_name.to_string(),
+        ts: (0..tail_mean.len()).collect(),
+        mean: tail_mean.to_vec(),
+        variance: tail_var.to_vec(),
+        sample_rounds: split_rounds(false),
+    };
+    (head, tail)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,5 +228,32 @@ mod tests {
         let base = Rng::seeded(102);
         let tr = run_rounds("x", 10, &base, 3, geometric_round);
         assert!(tr.variance[0] > 0.0);
+    }
+
+    #[test]
+    fn split_concat_separates_two_metrics() {
+        let base = Rng::seeded(104);
+        // Each round records metric A (geometric) then metric B (its
+        // negation), concatenated.
+        let tr = run_rounds("ab", 6, &base, 2, |rng| {
+            let a = geometric_round(rng);
+            let b: Vec<f64> = a.iter().map(|v| -v).collect();
+            let mut both = a;
+            both.extend(b);
+            both
+        });
+        let plain = run_rounds("ab", 6, &base, 2, geometric_round);
+        let (a, b) = split_concat(tr, 20, "ab_relerr");
+        assert_eq!(a.name, "ab");
+        assert_eq!(b.name, "ab_relerr");
+        assert_eq!(a.mean, plain.mean, "head must equal a single-metric run");
+        assert_eq!(a.variance, plain.variance);
+        for (x, y) in a.mean.iter().zip(&b.mean) {
+            assert_eq!(*y, -x, "tail is the negated metric");
+        }
+        assert_eq!(a.sample_rounds.len(), b.sample_rounds.len());
+        assert_eq!(a.sample_rounds[0].len(), 20);
+        assert_eq!(b.sample_rounds[0].len(), 20);
+        assert_eq!(a.ts.len(), 20);
     }
 }

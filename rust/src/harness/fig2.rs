@@ -1,15 +1,20 @@
-//! **FIG2** — the paper's Figure 2 (Appendix experiment).
+//! **FIG2** — the paper's Figure 2 (Appendix experiment), as a thin
+//! layer over the engine.
 //!
 //! Same §III graph model; Algorithm 2 run 1000 times; trajectories of
 //! `‖s_t - s‖²` with the thick average line decaying exponentially in
 //! the mean.
+//!
+//! All construction goes through [`crate::engine::Scenario`] with the
+//! size-estimation experiment kind — this file contains no estimator
+//! wiring, only the figure's claim checking; the same experiment is
+//! runnable from config via
+//! `pagerank-mp run-scenario examples/fig2_scenario.json` (which also
+//! races the degree-weighted and random-walk site baselines).
 
-use crate::algo::size_estimation::SizeEstimator;
-use crate::engine::GraphSpec;
-use crate::util::rng::Rng;
-use crate::util::stats;
+use crate::engine::{EstimatorSpec, GraphSpec, Scenario};
 
-use super::experiment::{run_rounds, with_stride, AveragedTrajectory};
+use super::experiment::AveragedTrajectory;
 
 /// Experiment parameters (defaults = the paper's).
 #[derive(Debug, Clone)]
@@ -37,6 +42,21 @@ impl Default for Fig2Config {
     }
 }
 
+impl Fig2Config {
+    /// The equivalent declarative scenario (the engine value `run`
+    /// drives; `examples/fig2_scenario.json` serializes the same shape
+    /// with the baseline estimators added).
+    pub fn scenario(&self) -> Scenario {
+        Scenario::new("fig2", GraphSpec::ErThreshold { n: self.n, threshold: self.threshold })
+            .with_estimators(vec![EstimatorSpec::Kaczmarz])
+            .with_steps(self.steps)
+            .with_stride(self.stride)
+            .with_rounds(self.rounds)
+            .with_threads(self.threads)
+            .with_seed(self.seed)
+    }
+}
+
 /// Figure-2 result: the averaged error trajectory plus rate checks.
 #[derive(Debug, Clone)]
 pub struct Fig2Result {
@@ -46,61 +66,30 @@ pub struct Fig2Result {
     pub rate: f64,
     /// The Appendix bound 1 - σ₂(Ĉ)/N.
     pub predicted_bound: f64,
-    /// Mean relative error of per-page size estimates 1/s_i at the end of
-    /// round 0.
+    /// Mean relative error of per-page size estimates 1/s_i at the end
+    /// of the run, averaged across rounds.
     pub final_size_rel_err: f64,
 }
 
-/// Run the Figure-2 experiment. The graph comes from the engine's
-/// [`GraphSpec`] so Fig. 2 names the same workload substrate as every
-/// scenario; the size estimator itself is not a PageRank solver and
-/// keeps its own recording loop.
+/// Run the Figure-2 experiment through the engine.
 pub fn run(cfg: &Fig2Config) -> Fig2Result {
-    let g = GraphSpec::ErThreshold { n: cfg.n, threshold: cfg.threshold }
-        .build(cfg.seed)
-        .expect("paper graph builds");
-    let base = Rng::seeded(cfg.seed ^ 0xF162);
+    let scenario = cfg.scenario();
+    let report = scenario.run().expect("the fig2 scenario is well-formed");
+    let est = report.get_estimator("kaczmarz").expect("Algorithm 2 ran").clone();
 
-    let avg = with_stride(
-        run_rounds("size_est", cfg.rounds, &base, cfg.threads, |mut rng| {
-            let mut est = SizeEstimator::new(&g).expect("ER-threshold graphs are connected");
-            let mut traj = Vec::with_capacity(cfg.steps / cfg.stride + 1);
-            traj.push(est.error_sq());
-            for t in 1..=cfg.steps {
-                est.step(&mut rng);
-                if t % cfg.stride == 0 {
-                    traj.push(est.error_sq());
-                }
-            }
-            traj
-        }),
-        cfg.stride,
-    );
+    let graph = scenario.graph.build(cfg.seed).expect("paper graph builds");
+    let predicted_bound = crate::linalg::spectral::size_est_contraction_rate(&graph);
 
-    let skip = avg.mean.len() / 5;
-    // Fit only above the f64 noise floor: a converged trajectory flattens
-    // near ~1e-30 and would bias the fitted rate toward 1.
-    let rate = stats::decay_rate_above(&avg.mean[skip..], 1e-26).powf(1.0 / cfg.stride as f64);
-    let predicted_bound = crate::linalg::spectral::size_est_contraction_rate(&g);
-
-    // Size recovery on a fresh full-length run.
-    let mut est = SizeEstimator::new(&g).expect("connected");
-    let mut rng = base.fork(0);
-    for _ in 0..cfg.steps {
-        est.step(&mut rng);
-    }
-    let rel_errs: Vec<f64> = (0..g.n())
-        .filter_map(|i| est.estimate_at(i))
-        .map(|nd| (nd - g.n() as f64).abs() / g.n() as f64)
-        .collect();
-    let final_size_rel_err = stats::mean(&rel_errs);
+    // Historical trajectory name, pinned by the fig2 CSV column headers.
+    let mut avg = est.trajectory;
+    avg.name = "size_est".to_string();
 
     Fig2Result {
         config: cfg.clone(),
         avg,
-        rate,
+        rate: est.decay_rate,
         predicted_bound,
-        final_size_rel_err,
+        final_size_rel_err: est.final_size_rel_err,
     }
 }
 
@@ -207,5 +196,37 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(run(&cfg).avg.mean, run(&cfg).avg.mean);
+    }
+
+    #[test]
+    fn config_scenario_json_round_trips() {
+        let cfg = Fig2Config { n: 25, rounds: 7, ..Default::default() };
+        let scenario = cfg.scenario();
+        let text = scenario.to_json().render();
+        let back = Scenario::from_json_str(&text).expect("round trips");
+        assert_eq!(back, scenario);
+    }
+
+    #[test]
+    fn harness_is_a_thin_preset_over_the_engine() {
+        // The fig2 harness and a hand-built size-estimation scenario with
+        // the same shape must produce the identical trajectory — fig2 is
+        // a preset, not a second code path.
+        let cfg = Fig2Config {
+            n: 15,
+            rounds: 3,
+            steps: 600,
+            stride: 100,
+            seed: 11,
+            threads: 2,
+            ..Default::default()
+        };
+        let via_harness = run(&cfg);
+        let via_engine = cfg.scenario().run().expect("runs");
+        let kacz = via_engine.get_estimator("kaczmarz").expect("ran");
+        assert_eq!(via_harness.avg.mean, kacz.trajectory.mean);
+        assert_eq!(via_harness.avg.variance, kacz.trajectory.variance);
+        assert_eq!(via_harness.final_size_rel_err, kacz.final_size_rel_err);
+        assert_eq!(via_harness.rate, kacz.decay_rate);
     }
 }

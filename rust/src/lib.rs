@@ -30,13 +30,16 @@
 //! * [`engine`] — the declarative experiment API: [`engine::SolverSpec`]
 //!   (a string registry over every solver variant — including the
 //!   multi-threaded `sharded:<W>` runtime and the `dense` backend — with
-//!   one uniform factory), [`engine::GraphSpec`], [`engine::Scenario`]
-//!   (graph + solvers + experiment shape as one JSON-round-trippable
-//!   value whose `run()` yields trajectories, decay rates, communication
-//!   totals and conflict drops) and [`engine::Sweep`] (one scenario
-//!   expanded over a parameter grid, merged into `BENCH_sweep.json`).
-//!   Every harness, bench, example and the CLI build on it — see
-//!   docs/ENGINE.md.
+//!   one uniform factory), [`engine::EstimatorSpec`] (the same for
+//!   Algorithm-2 size estimators), [`engine::GraphSpec`],
+//!   [`engine::ExperimentSpec`] (PageRank race or size-estimation race),
+//!   [`engine::Scenario`] (graph + experiment + shape as one
+//!   JSON-round-trippable value whose `run()` yields trajectories, decay
+//!   rates, communication totals and kind-specific metrics) and
+//!   [`engine::Sweep`] (one scenario expanded over a parameter grid —
+//!   including a `graph` axis over families — merged into
+//!   `BENCH_sweep.json`). Every harness, bench, example and the CLI
+//!   build on it — see docs/ENGINE.md.
 //! * [`network`] — deterministic discrete-event message network with
 //!   latency models and congestion accounting (the simulated substrate —
 //!   see DESIGN.md §6).
@@ -63,7 +66,7 @@
 //!     .with_rounds(100);
 //! let report = scenario.run().expect("scenario runs");
 //! println!("{}", report.render());
-//! for r in &report.reports {
+//! for r in report.solver_reports() {
 //!     println!("{:<16} rate/step {:.6}  final {:.3e}", r.spec.key(), r.decay_rate, r.final_error);
 //! }
 //! ```

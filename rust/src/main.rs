@@ -4,12 +4,13 @@
 //! Subcommands:
 //!
 //! * `run-scenario` — run a declarative experiment from a JSON file
-//!                  (the engine API: any graphs × any solvers), dumping
-//!                  the machine-readable `BENCH_scenario.json`.
-//! * `sweep`      — expand one scenario over a parameter grid (n, α,
-//!                  shards, batch, latency, …), run every cell, and merge
-//!                  the reports into `BENCH_sweep.json`.
-//! * `list-solvers` — print the engine's solver registry.
+//!                  (the engine API: any graphs × any solvers or size
+//!                  estimators), dumping the machine-readable
+//!                  `BENCH_scenario.json`.
+//! * `sweep`      — expand one scenario over a parameter grid (graph, n,
+//!                  α, shards, batch, latency, …), run every cell, and
+//!                  merge the reports into `BENCH_sweep.json`.
+//! * `list-solvers` — print the engine's solver and estimator registries.
 //! * `rank`       — compute PageRank for a graph (generated or from file)
 //!                  with a chosen engine (sparse matrix-form, distributed
 //!                  coordinator, dense PJRT, power iteration).
@@ -26,7 +27,7 @@ use pagerank_mp::algo::power_iteration::JacobiPowerIteration;
 use pagerank_mp::algo::size_estimation::SizeEstimator;
 use pagerank_mp::algo::stopping::RankingCertifier;
 use pagerank_mp::coordinator::{Coordinator, CoordinatorConfig, Mode, SamplerKind};
-use pagerank_mp::engine::{Scenario, SolverSpec, Sweep};
+use pagerank_mp::engine::{EstimatorSpec, Scenario, SolverSpec, Sweep};
 use pagerank_mp::graph::{generators, io as graph_io, DanglingPolicy, Graph};
 use pagerank_mp::harness::{ablation, fig1, fig2, report};
 use pagerank_mp::linalg::solve::exact_pagerank;
@@ -59,10 +60,11 @@ fn cmd_run_scenario(args: &Args) -> Result<(), String> {
         scenario.threads = t.parse().map_err(|_| format!("bad --threads {t:?}"))?;
     }
     eprintln!(
-        "running scenario {:?}: graph {}, solvers [{}], {} steps x {} rounds …",
+        "running scenario {:?}: graph {}, {} experiment [{}], {} steps x {} rounds …",
         scenario.name,
         scenario.graph.key(),
-        scenario.solvers.iter().map(|s| s.key()).collect::<Vec<_>>().join(", "),
+        scenario.experiment.kind_key(),
+        scenario.experiment.run_keys().join(", "),
         scenario.steps,
         scenario.rounds,
     );
@@ -101,11 +103,12 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         sweep.base.threads = t.parse().map_err(|_| format!("bad --threads {t:?}"))?;
     }
     eprintln!(
-        "sweep {:?}: {} cells over axes [{}], solvers [{}]",
+        "sweep {:?}: {} cells over axes [{}], {} experiment [{}]",
         sweep.name,
         sweep.cell_count(),
         sweep.axes.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>().join(", "),
-        sweep.base.solvers.iter().map(|s| s.key()).collect::<Vec<_>>().join(", "),
+        sweep.base.experiment.kind_key(),
+        sweep.base.experiment.run_keys().join(", "),
     );
     let report = sweep.run_with_progress(|i, total, name| {
         eprintln!("  cell {i}/{total}: {name} …");
@@ -129,6 +132,13 @@ fn cmd_list_solvers(_args: &Args) -> Result<(), String> {
          sharded:<shards>[:<batch>[:<mod|block>[:<leader|worker>]]], \
          coordinator:<sequential|async>:<uniform|clocks|weighted>:<zero|const:L|uniform:lo:hi|exp:mean>"
     );
+    println!(
+        "\nestimator registry (engine::EstimatorSpec) — \
+         \"experiment\": {{\"kind\": \"size-estimation\", \"estimators\": [...]}}:\n"
+    );
+    for spec in EstimatorSpec::all() {
+        println!("  {:<44} {}", spec.key(), spec.describe());
+    }
     Ok(())
 }
 
@@ -414,12 +424,13 @@ USAGE: pagerank-mp <command> [options]
 COMMANDS:
   run-scenario run a declarative experiment from JSON
               <scenario.json> [--bench-out BENCH_scenario.json --csv out.csv --threads T]
-              (see examples/fig1_scenario.json; solver names via `list-solvers`)
+              (PageRank races: examples/fig1_scenario.json; size-estimation races:
+               examples/fig2_scenario.json; run names via `list-solvers`)
   sweep       expand one scenario over a grid and merge the reports
               <sweep.json> [--bench-out BENCH_sweep.json --threads T]
-              (axes: n, alpha, steps, stride, rounds, seed, shards, batch, packer, latency;
-               see examples/sweep_small.json)
-  list-solvers print the engine's solver registry
+              (axes: graph, n, alpha, steps, stride, rounds, seed, shards, batch,
+               packer, latency; see examples/sweep_small.json)
+  list-solvers print the engine's solver and estimator registries
   rank        compute PageRank        --graph paper|ba|ws|.. --n 100 --engine sparse|coordinator|dense|power
               [--alpha 0.85 --steps 100000 --seed S --top 10 --latency zero|const:L --mode sequential|async --sampler uniform|clocks|weighted]
   fig1        reproduce Figure 1      [--n 100 --rounds 100 --steps 60000 --stride 500 --out reports/fig1.csv]

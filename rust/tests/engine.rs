@@ -6,10 +6,11 @@
 use pagerank_mp::algo::common::PageRankSolver;
 use pagerank_mp::coordinator::{Packer, ShardMap};
 use pagerank_mp::engine::{
-    CoordinatorSolver, GraphSpec, ReferencePolicy, Scenario, ScenarioReport, ShardedSolver,
-    SolverSpec, Sweep,
+    CoordinatorSolver, EstimatorSpec, GraphSpec, ReferencePolicy, Scenario, ScenarioReport,
+    ShardedSolver, SolverSpec, Sweep,
 };
 use pagerank_mp::graph::generators;
+use pagerank_mp::harness::fig2;
 use pagerank_mp::linalg::solve::exact_pagerank;
 use pagerank_mp::util::json::Json;
 use pagerank_mp::util::rng::Rng;
@@ -49,8 +50,8 @@ fn scenario_json_serialize_deserialize_run_is_deterministic() {
 
     let a = scenario.run().expect("original runs");
     let b = reparsed.run().expect("reparsed runs");
-    assert_eq!(a.reports.len(), b.reports.len());
-    for (ra, rb) in a.reports.iter().zip(&b.reports) {
+    assert_eq!(a.solver_reports().len(), b.solver_reports().len());
+    for (ra, rb) in a.solver_reports().iter().zip(b.solver_reports()) {
         assert_eq!(ra.spec, rb.spec);
         // Same seed ⇒ identical mean trajectory, bit for bit.
         assert_eq!(ra.trajectory.mean, rb.trajectory.mean);
@@ -95,7 +96,12 @@ fn reference_policies_agree() {
     let b = power.run().expect("power runs");
     // Same solver stream, near-identical reference ⇒ near-identical
     // trajectories.
-    for (ea, eb) in a.reports[0].trajectory.mean.iter().zip(&b.reports[0].trajectory.mean) {
+    for (ea, eb) in a.solver_reports()[0]
+        .trajectory
+        .mean
+        .iter()
+        .zip(&b.solver_reports()[0].trajectory.mean)
+    {
         assert!((ea - eb).abs() < 1e-9, "{ea} vs {eb}");
     }
 }
@@ -110,8 +116,8 @@ fn every_registry_solver_runs_inside_a_scenario() {
         .with_threads(2)
         .with_seed(9);
     let report = scenario.run().expect("every registered solver must run");
-    assert_eq!(report.reports.len(), SolverSpec::all().len());
-    for r in &report.reports {
+    assert_eq!(report.solver_reports().len(), SolverSpec::all().len());
+    for r in report.solver_reports() {
         assert_eq!(r.trajectory.mean.len(), 4, "{}: t = 0,40,80,120", r.spec.key());
         assert!(
             r.trajectory.mean.iter().all(|v| v.is_finite()),
@@ -135,7 +141,7 @@ fn shipped_fig1_scenario_file_parses_and_names_the_paper_setup() {
     assert_eq!(scenario.alpha, 0.85);
     for required in ["mp", "ishii-tempo", "lei-chen"] {
         assert!(
-            scenario.solvers.iter().any(|s| s.key() == required),
+            scenario.solvers().iter().any(|s| s.key() == required),
             "fig1 scenario must include {required}"
         );
     }
@@ -204,7 +210,7 @@ fn async_coordinator_scenario_keeps_overlap_and_converges() {
         .with_threads(1)
         .with_seed(17);
     let report = scenario.run().expect("runs");
-    let r = &report.reports[0];
+    let r = &report.solver_reports()[0];
     assert_eq!(r.trajectory.mean.len(), 4); // t = 0,200,400,600
     assert!(
         r.final_error < r.trajectory.mean[0],
@@ -356,8 +362,8 @@ fn three_backend_race_completes_and_ranks_all() {
         .with_seed(19)
         .run()
         .expect("runs");
-    assert_eq!(report.reports.len(), 3);
-    for r in &report.reports {
+    assert_eq!(report.solver_reports().len(), 3);
+    for r in report.solver_reports() {
         assert!(r.trajectory.mean.iter().all(|v| v.is_finite()), "{}", r.spec.key());
         assert!(r.final_error < r.trajectory.mean[0], "{}", r.spec.key());
     }
@@ -390,7 +396,7 @@ fn dangling_graph_runs_every_backend_to_finite_convergence() {
     .with_threads(2)
     .with_seed(29);
     let report = scenario.run().expect("dangling graph must run");
-    for r in &report.reports {
+    for r in report.solver_reports() {
         assert!(
             r.trajectory.mean.iter().all(|v| v.is_finite()),
             "{}: trajectory poisoned by the dangling page",
@@ -453,13 +459,13 @@ fn shipped_sweep_and_smoke_files_parse() {
     let scenario = Scenario::from_json_str(&smoke).expect("smoke scenario parses");
     for required in ["mp", "dense"] {
         assert!(
-            scenario.solvers.iter().any(|s| s.key() == required),
+            scenario.solvers().iter().any(|s| s.key() == required),
             "smoke scenario must race {required}"
         );
     }
     assert!(
         scenario
-            .solvers
+            .solvers()
             .iter()
             .any(|s| matches!(s, SolverSpec::Sharded { .. })),
         "smoke scenario must include a sharded backend"
@@ -470,6 +476,118 @@ fn shipped_sweep_and_smoke_files_parse() {
     let sweep = Sweep::from_json_str(&sweep_text).expect("sweep example parses");
     assert!(sweep.cell_count() >= 4, "the shipped sweep must be a real >=2x2 grid");
     sweep.cells().expect("every cell must be expandable");
+}
+
+#[test]
+fn shipped_fig2_scenario_reproduces_the_fig2_harness_bit_for_bit() {
+    // The acceptance pin: `run-scenario examples/fig2_scenario.json`
+    // must carry the legacy `harness::fig2` trajectory exactly — the
+    // harness is a preset over the same engine path, and the presence of
+    // the baseline estimators must not perturb the kaczmarz stream.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package sits inside the repo")
+        .join("examples/fig2_scenario.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let scenario = Scenario::from_json_str(&text).expect("shipped fig2 scenario parses");
+    assert_eq!(scenario.graph, GraphSpec::ErThreshold { n: 60, threshold: 0.5 });
+    for required in [
+        EstimatorSpec::Kaczmarz,
+        EstimatorSpec::DegreeWeighted,
+        EstimatorSpec::RandomWalk,
+    ] {
+        assert!(
+            scenario.estimators().contains(&required),
+            "fig2 scenario must race {}",
+            required.key()
+        );
+    }
+
+    let report = scenario.run().expect("runs on paper:60");
+    assert_eq!(report.estimator_reports().len(), 3);
+    let kacz = report.get_estimator("kaczmarz").expect("Algorithm 2 ran");
+
+    let legacy = fig2::run(&fig2::Fig2Config {
+        n: 60,
+        threshold: 0.5,
+        rounds: scenario.rounds,
+        steps: scenario.steps,
+        stride: scenario.stride,
+        seed: scenario.seed,
+        threads: 2,
+    });
+    assert_eq!(
+        kacz.trajectory.mean, legacy.avg.mean,
+        "engine and fig2 harness must produce the identical trajectory"
+    );
+    assert_eq!(kacz.trajectory.variance, legacy.avg.variance);
+    assert_eq!(kacz.final_size_rel_err, legacy.final_size_rel_err);
+    assert_eq!(kacz.decay_rate, legacy.rate);
+    // And the race is meaningful: Algorithm 2 contracts by decades, and
+    // even the slower non-uniform site baselines contract clearly.
+    assert!(kacz.final_error < 1e-2 * kacz.trajectory.mean[0], "{}", kacz.final_error);
+    for r in report.estimator_reports() {
+        assert!(
+            r.final_error < 0.1 * r.trajectory.mean[0],
+            "{} barely converged: {}",
+            r.spec.key(),
+            r.final_error
+        );
+    }
+}
+
+#[test]
+fn file_graph_scenario_matches_the_in_memory_graph() {
+    // Close the untested GraphSpec::File engine path: write a generated
+    // graph to disk, run the identical scenario from the file, and pin
+    // that the reports agree bit-for-bit with the in-memory run.
+    let seed = 77u64;
+    let g = generators::er_threshold(30, 0.5, seed);
+    let dir = std::env::temp_dir().join(format!("prmp_filegraph_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let path = dir.join("er30.txt");
+    pagerank_mp::graph::io::save(&g, &path).expect("writes the edge list");
+
+    let mk = |graph: GraphSpec| {
+        Scenario::new("file-vs-mem", graph)
+            .with_solvers(vec![SolverSpec::Mp, SolverSpec::Dense])
+            .with_steps(400)
+            .with_stride(100)
+            .with_rounds(2)
+            .with_threads(1)
+            .with_seed(seed)
+    };
+    let mem = mk(GraphSpec::ErThreshold { n: 30, threshold: 0.5 }).run().expect("mem runs");
+    let file = mk(GraphSpec::File { path: path.to_str().expect("utf8").to_string() })
+        .run()
+        .expect("file runs");
+    assert_eq!(mem.solver_reports().len(), file.solver_reports().len());
+    for (a, b) in mem.solver_reports().iter().zip(file.solver_reports()) {
+        assert_eq!(a.spec, b.spec);
+        assert_eq!(
+            a.trajectory.mean, b.trajectory.mean,
+            "{}: the loaded graph must replay the generated graph exactly",
+            a.spec.key()
+        );
+        assert_eq!(a.total_stats, b.total_stats, "{}", a.spec.key());
+    }
+    // Size estimation over the file path, too (the loaded ER graph is
+    // strongly connected).
+    let se = Scenario::new("file-se", GraphSpec::File {
+        path: path.to_str().expect("utf8").to_string(),
+    })
+    .with_estimators(vec![EstimatorSpec::Kaczmarz])
+    .with_steps(400)
+    .with_stride(200)
+    .with_rounds(2)
+    .with_threads(1)
+    .with_seed(seed)
+    .run()
+    .expect("size estimation runs from a file graph");
+    let r = &se.estimator_reports()[0];
+    assert!(r.final_error < r.trajectory.mean[0]);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

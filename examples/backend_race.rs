@@ -1,11 +1,13 @@
 //! Race every execution backend on one scenario axis: the sequential
-//! matrix form, the multi-threaded sharded runtime at two shard counts
-//! (both shard maps, and the serial-leader vs worker-side packers at 8
-//! shards — the centralization the distributed-randomized line of work
-//! argues away), and the dense backend — the comparison the related
-//! work (Ishii–Tempo; Das Sarma et al.) frames as "convergence per unit
-//! of parallel work". The wall-ms column is where the worker packer's
-//! win shows: same convergence law, no serial leader on the hot path.
+//! matrix form (uniform and residual-weighted sampling), the
+//! multi-threaded sharded runtime at two shard counts (both shard maps,
+//! the serial-leader vs worker-side packers at 8 shards — the
+//! centralization the distributed-randomized line of work argues away —
+//! and the residual sampling policy), and the dense backend — the
+//! comparison the related work (Ishii–Tempo; Das Sarma et al.) frames
+//! as "convergence per unit of parallel work". The wall-ms column is
+//! where the worker packer's win shows; the error column is where
+//! residual weighting's activations-to-ε win shows.
 //!
 //! Run with: `cargo run --release --example backend_race`
 
@@ -18,11 +20,13 @@ fn main() {
     )
     .with_solvers(vec![
         SolverSpec::Mp,
+        SolverSpec::parse("mp:residual").expect("registry"),
         SolverSpec::parse("sharded:2:8").expect("registry"),
         SolverSpec::parse("sharded:4:8").expect("registry"),
         SolverSpec::parse("sharded:4:8:block").expect("registry"),
         SolverSpec::parse("sharded:8:64:mod:leader").expect("registry"),
         SolverSpec::parse("sharded:8:64:mod:worker").expect("registry"),
+        SolverSpec::parse("sharded:8:64:mod:worker:residual").expect("registry"),
         SolverSpec::Dense,
     ])
     .with_steps(4_000)

@@ -5,10 +5,12 @@
 //! * centralized power-iteration sweeps,
 //! * batch throughput of the parallel extension,
 //! * **leader-saturation**: the sharded runtime swept over shards ∈
-//!   {1,2,4,8,16,32} under both packing policies, recording applied
+//!   {1,2,4,8,16,32} under both packing policies × both sampling
+//!   policies (uniform and residual-weighted), recording applied
 //!   activations/s into the machine-readable `BENCH_throughput.json`
 //!   (the leader packer flattens once its serial sample+scan+route loop
-//!   saturates; the worker packer keeps scaling).
+//!   saturates; the worker packer keeps scaling; residual sampling pays
+//!   the weight-tree refresh for fewer activations to a given error).
 //!
 //! All solvers are named and built through the engine registry — the
 //! bench measures exactly what a `Scenario` would run.
@@ -22,7 +24,7 @@
 use std::collections::BTreeMap;
 
 use pagerank_mp::algo::common::PageRankSolver;
-use pagerank_mp::coordinator::{Packer, ShardMap};
+use pagerank_mp::coordinator::{Packer, Sampling, ShardMap};
 use pagerank_mp::engine::{CoordinatorSolver, ShardedSolver, SolverSpec};
 use pagerank_mp::graph::generators;
 use pagerank_mp::util::bench;
@@ -37,10 +39,18 @@ fn sharded_sweep_cell(
     shards: usize,
     batch: usize,
     packer: Packer,
+    sampling: Sampling,
     super_steps: usize,
 ) -> Json {
-    let spec_key = format!("sharded:{shards}:{batch}:mod:{}", packer.key());
-    let mut sh = ShardedSolver::new(g, 0.85, shards, batch, ShardMap::Modulo, packer);
+    // Uniform cells keep their PR-3 era spec keys (no sampling segment),
+    // so bench_diff can compare across the policy's introduction.
+    let spec_key = match sampling {
+        Sampling::Uniform => format!("sharded:{shards}:{batch}:mod:{}", packer.key()),
+        Sampling::Residual => {
+            format!("sharded:{shards}:{batch}:mod:{}:residual", packer.key())
+        }
+    };
+    let mut sh = ShardedSolver::new(g, 0.85, shards, batch, ShardMap::Modulo, packer, sampling);
     let mut rng = Rng::seeded(13);
     for _ in 0..super_steps / 4 {
         sh.step(&mut rng); // warm-up: fault pages, fill buffer pools
@@ -66,6 +76,7 @@ fn sharded_sweep_cell(
     cell.insert("spec".to_string(), Json::String(spec_key));
     cell.insert("shards".to_string(), Json::Number(shards as f64));
     cell.insert("packer".to_string(), Json::String(packer.key().to_string()));
+    cell.insert("sampling".to_string(), Json::String(sampling.key().to_string()));
     cell.insert("super_steps".to_string(), Json::Number(super_steps as f64));
     cell.insert("activations".to_string(), Json::Number(applied as f64));
     cell.insert("conflicts".to_string(), Json::Number(conflicts as f64));
@@ -79,7 +90,7 @@ fn sharded_sweep_cell(
 /// big enough that activations are real work, dump
 /// `BENCH_throughput.json` for the CI artifact and `scripts/bench_diff`.
 fn sharded_saturation_sweep(quick: bool) {
-    println!("\n=== leader-saturation: sharded packer × shards sweep ===");
+    println!("\n=== leader-saturation: sharded (packer × sampling) × shards sweep ===");
     let (n, batch, super_steps) = if quick {
         (20_000usize, 256usize, 24usize)
     } else {
@@ -88,9 +99,14 @@ fn sharded_saturation_sweep(quick: bool) {
     let g = generators::erdos_renyi(n, 8.0 / n as f64, 12);
     let graph_key = format!("er-sparse N={n} deg~8");
     let mut cells = Vec::new();
-    for packer in [Packer::Leader, Packer::Worker] {
+    for (packer, sampling) in [
+        (Packer::Leader, Sampling::Uniform),
+        (Packer::Worker, Sampling::Uniform),
+        (Packer::Leader, Sampling::Residual),
+        (Packer::Worker, Sampling::Residual),
+    ] {
         for shards in [1usize, 2, 4, 8, 16, 32] {
-            cells.push(sharded_sweep_cell(&g, shards, batch, packer, super_steps));
+            cells.push(sharded_sweep_cell(&g, shards, batch, packer, sampling, super_steps));
         }
     }
     let mut doc = BTreeMap::new();

@@ -18,8 +18,15 @@
 //! The message-level (page-agent) realization of the same update lives in
 //! [`crate::coordinator`]; both share this module's arithmetic through
 //! [`crate::linalg::sparse::BColumns`].
+//!
+//! [`ResidualMatchingPursuit`] is the §IV future-work-3 variant: the
+//! same `step_at` primitive driven by a residual-weighted sampler
+//! (`k ∝ max(r_k², floor)`) over the shared Fenwick
+//! [`crate::linalg::select::WeightTree`] — O(log N) per draw and per
+//! touched-coordinate weight refresh.
 
 use crate::graph::Graph;
+use crate::linalg::select::{DEFAULT_WEIGHT_FLOOR, WeightTree};
 use crate::linalg::sparse::BColumns;
 use crate::util::rng::Rng;
 
@@ -104,6 +111,110 @@ impl<'g> MatchingPursuit<'g> {
         &self.cols
     }
 
+}
+
+/// Matrix-form Algorithm 1 with residual-weighted activation
+/// (§IV future-work 3): draw `k ∝ max(r_k², floor)` from a Fenwick
+/// [`WeightTree`], apply the eq. 7/8 projection, and refresh the weights
+/// of the touched coordinates `{k} ∪ out(k)` — O(log N) per draw and per
+/// refresh, so the importance sampler costs the same asymptotics as the
+/// uniform one.
+///
+/// `floor > 0` keeps every page's activation probability positive (the
+/// chain stays irreducible), so the residual contracts in expectation
+/// exactly as in Prop. 2 — the weighting only re-allocates activations
+/// toward pages that currently carry residual mass. Registry key:
+/// `mp:residual[:<floor>]`.
+///
+/// Weight refreshes walk the touched set in ascending page order; the
+/// sharded runtime's residual policies do the same, which is what makes
+/// `sharded:1:1:*:*:residual` replay this solver bit for bit (tested in
+/// `tests/engine.rs`).
+#[derive(Debug, Clone)]
+pub struct ResidualMatchingPursuit<'g> {
+    inner: MatchingPursuit<'g>,
+    tree: WeightTree,
+    floor: f64,
+    /// Recycled touched-coordinate buffer (sorted before weight
+    /// refresh — deterministic Fenwick arithmetic).
+    touched: Vec<u32>,
+}
+
+impl<'g> ResidualMatchingPursuit<'g> {
+    pub fn new(graph: &'g Graph, alpha: f64, floor: f64) -> Self {
+        assert!(floor > 0.0, "floor must be > 0 to keep every page live");
+        let y = 1.0 - alpha;
+        let w0 = (y * y).max(floor);
+        let tree = WeightTree::new(&vec![w0; graph.n()]);
+        ResidualMatchingPursuit {
+            inner: MatchingPursuit::new(graph, alpha),
+            tree,
+            floor,
+            touched: Vec::new(),
+        }
+    }
+
+    /// The default-floor variant (`mp:residual`).
+    pub fn with_default_floor(graph: &'g Graph, alpha: f64) -> Self {
+        ResidualMatchingPursuit::new(graph, alpha, DEFAULT_WEIGHT_FLOOR)
+    }
+
+    pub fn floor(&self) -> f64 {
+        self.floor
+    }
+
+    /// The wrapped matrix-form solver (residual access, step counters).
+    pub fn inner(&self) -> &MatchingPursuit<'g> {
+        &self.inner
+    }
+
+    pub fn residual_norm_sq(&self) -> f64 {
+        self.inner.residual_norm_sq()
+    }
+}
+
+impl<'g> PageRankSolver for ResidualMatchingPursuit<'g> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn step(&mut self, rng: &mut Rng) -> StepStats {
+        let k = self.tree.sample(rng);
+        let graph = self.inner.graph;
+        let deg = graph.out_degree(k);
+        self.inner.step_at(k);
+        // Residual support of the projection: {k} ∪ out(k) (a dangling
+        // k's implicit self-loop touches only k). Sorted ascending so
+        // the Fenwick update order — and with it every internal partial
+        // sum — is a pure function of the activation sequence.
+        self.touched.clear();
+        self.touched.push(k as u32);
+        self.touched.extend_from_slice(graph.out(k));
+        self.touched.sort_unstable();
+        self.touched.dedup();
+        let r = self.inner.residual();
+        for &j in &self.touched {
+            let rj = r[j as usize];
+            self.tree.update(j as usize, (rj * rj).max(self.floor));
+        }
+        StepStats {
+            reads: deg,
+            writes: deg,
+            activated: 1,
+        }
+    }
+
+    fn estimate(&self) -> Vec<f64> {
+        PageRankSolver::estimate(&self.inner)
+    }
+
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        self.inner.error_sq_vs(x_star)
+    }
+
+    fn name(&self) -> &'static str {
+        "mp (residual-weighted, Fenwick-sampled)"
+    }
 }
 
 impl<'g> PageRankSolver for MatchingPursuit<'g> {
@@ -277,5 +388,95 @@ mod tests {
         let g = generators::ring(4);
         let mp = MatchingPursuit::new(&g, 0.85);
         assert!(!mp.requires_in_links());
+    }
+
+    #[test]
+    fn residual_weighted_converges_to_exact_pagerank() {
+        // ER (dense paper graph), BA (hub-heavy) and chain (genuine
+        // dangling sink): the floor keeps every page live, so the
+        // importance sampler reaches the same fixed point as uniform.
+        for (family, g, steps) in [
+            ("er", generators::er_threshold(30, 0.5, 7), 60_000usize),
+            ("ba", generators::barabasi_albert(40, 3, 7), 80_000),
+            ("chain", generators::chain(20), 60_000),
+        ] {
+            let x_star = exact_pagerank(&g, 0.85);
+            let mut rmp = ResidualMatchingPursuit::with_default_floor(&g, 0.85);
+            let mut rng = Rng::seeded(8);
+            for _ in 0..steps {
+                rmp.step(&mut rng);
+            }
+            let err = vector::dist_inf(&PageRankSolver::estimate(&rmp), &x_star);
+            assert!(err < 1e-8, "{family}: err={err}");
+        }
+    }
+
+    #[test]
+    fn residual_weighted_conserves_eq_11() {
+        // B x_t + r_t = y must survive the non-uniform activation order.
+        let g = generators::er_threshold(40, 0.5, 9);
+        let alpha = 0.85;
+        let mut rmp = ResidualMatchingPursuit::with_default_floor(&g, alpha);
+        let mut rng = Rng::seeded(10);
+        for _ in 0..500 {
+            rmp.step(&mut rng);
+        }
+        let b = DenseMatrix::b_matrix(&g, alpha);
+        let bx = b.matvec(&PageRankSolver::estimate(&rmp));
+        for (i, v) in bx.iter().enumerate() {
+            let lhs = v + rmp.inner().residual()[i];
+            assert!((lhs - (1.0 - alpha)).abs() < 1e-10, "page {i}: {lhs}");
+        }
+    }
+
+    #[test]
+    fn residual_weighting_beats_uniform_in_activations_to_epsilon() {
+        // §IV future-work 3: sampling ∝ r² allocates activations where
+        // the residual mass sits, so at a fixed budget the weighted
+        // error is smaller. Averaged over rounds for stability (the
+        // coordinator's sampler ablation pins the same ordering).
+        let g = generators::er_threshold(30, 0.5, 12);
+        let x_star = exact_pagerank(&g, 0.85);
+        let rounds = 5;
+        let steps = 3_000;
+        let (mut uni, mut wei) = (0.0, 0.0);
+        for round in 0..rounds {
+            let mut mp = MatchingPursuit::new(&g, 0.85);
+            let mut rmp = ResidualMatchingPursuit::with_default_floor(&g, 0.85);
+            let mut rng1 = Rng::seeded(40 + round);
+            let mut rng2 = Rng::seeded(40 + round);
+            for _ in 0..steps {
+                mp.step(&mut rng1);
+                rmp.step(&mut rng2);
+            }
+            uni += mp.error_sq_vs(&x_star);
+            wei += rmp.error_sq_vs(&x_star);
+        }
+        assert!(
+            wei < uni,
+            "residual weighting must win on average: weighted {wei} vs uniform {uni}"
+        );
+    }
+
+    #[test]
+    fn residual_weights_track_the_residual() {
+        let g = generators::er_threshold(20, 0.5, 13);
+        let mut rmp = ResidualMatchingPursuit::with_default_floor(&g, 0.85);
+        let mut rng = Rng::seeded(14);
+        for _ in 0..2_000 {
+            rmp.step(&mut rng);
+        }
+        let r = rmp.inner().residual().to_vec();
+        for (j, &rj) in r.iter().enumerate() {
+            let want = (rj * rj).max(rmp.floor());
+            assert_eq!(rmp.tree.weight(j), want, "stale weight at {j}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn residual_weighted_rejects_zero_floor() {
+        let g = generators::ring(4);
+        ResidualMatchingPursuit::new(&g, 0.85, 0.0);
     }
 }

@@ -74,8 +74,16 @@ fn extract(doc: &Json) -> Result<BTreeMap<String, Row>, String> {
     let mut rows = BTreeMap::new();
     if doc.get("cells").is_some() {
         // BENCH_sweep.json (cells have "solvers"/"estimators") or
-        // BENCH_throughput.json (cells have "spec" + "acts_per_sec").
-        for cell in doc.get("cells").and_then(Json::as_array).unwrap_or(&[]) {
+        // BENCH_throughput.json (cells have "spec" + "acts_per_sec" —
+        // keyed by the full registry spec, so new cell kinds like the
+        // sampling-policy sweep land in the diff automatically).
+        for (i, cell) in doc
+            .get("cells")
+            .and_then(Json::as_array)
+            .unwrap_or(&[])
+            .iter()
+            .enumerate()
+        {
             if let Some(runs) = runs_of(cell) {
                 let name = cell.get("name").and_then(Json::as_str).unwrap_or("cell");
                 for s in runs {
@@ -84,6 +92,15 @@ fn extract(doc: &Json) -> Result<BTreeMap<String, Row>, String> {
                 }
             } else if let Some(spec) = cell.get("spec").and_then(Json::as_str) {
                 rows.insert(spec.to_string(), run_row(cell));
+            } else {
+                // A cell this tool cannot key would silently fall out of
+                // the regression diff — refuse instead, so schema drift
+                // surfaces as a loud parse error, never as a metric that
+                // quietly stopped being compared.
+                return Err(format!(
+                    "cell #{i} has neither \"solvers\"/\"estimators\" nor \"spec\" — \
+                     unknown cell shape, refusing to silently skip it"
+                ));
             }
         }
     } else if let Some(runs) = runs_of(doc) {
@@ -309,6 +326,46 @@ mod tests {
         );
 
         assert!(extract(&Json::parse("{}").expect("json")).is_err());
+    }
+
+    #[test]
+    fn throughput_sampling_policy_cells_are_compared_not_skipped() {
+        // The sampling-policy sweep keys its cells by the full registry
+        // spec (":residual" suffix), so uniform and residual cells diff
+        // independently…
+        let doc = |uni: f64, res: f64| {
+            format!(
+                r#"{{"bench": "throughput.sharded_sweep", "cells": [
+                     {{"spec": "sharded:8:1024:mod:worker", "packer": "worker",
+                       "sampling": "uniform", "acts_per_sec": {uni}}},
+                     {{"spec": "sharded:8:1024:mod:worker:residual", "packer": "worker",
+                       "sampling": "residual", "acts_per_sec": {res}}}]}}"#
+            )
+        };
+        let old = Json::parse(&doc(1e6, 5e5)).expect("json");
+        let new = Json::parse(&doc(1e6, 3e5)).expect("json");
+        let old_rows = extract(&old).expect("extracts");
+        let new_rows = extract(&new).expect("extracts");
+        assert_eq!(old_rows.len(), 2);
+        let key = "sharded:8:1024:mod:worker:residual";
+        let flagged = check(
+            key,
+            "acts_per_sec",
+            old_rows[key].acts_per_sec,
+            new_rows[key].acts_per_sec,
+            0.15,
+            false,
+        );
+        assert!(flagged.is_some(), "residual-cell throughput drop must flag");
+
+        // …and a cell shape the tool cannot key is a loud error instead
+        // of a silent skip.
+        let unknown = Json::parse(
+            r#"{"bench": "x", "cells": [{"mystery": 1, "acts_per_sec": 1e6}]}"#,
+        )
+        .expect("json");
+        let err = extract(&unknown).expect_err("unknown cell shape must refuse");
+        assert!(err.contains("cell #0"), "{err}");
     }
 
     #[test]

@@ -36,4 +36,4 @@ pub mod sharded;
 pub use config::{CoordinatorConfig, Mode};
 pub use leader::{Coordinator, RunReport};
 pub use sampler::SamplerKind;
-pub use sharded::{Packer, ShardMap, ShardedRuntime};
+pub use sharded::{Packer, Sampling, ShardMap, ShardedRuntime};

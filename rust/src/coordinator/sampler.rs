@@ -7,11 +7,18 @@
 //!   physical, enabling the async overlap analysis.
 //! * [`SamplerKind::ResidualWeighted`] — §IV future-work 3: sample page
 //!   `k` proportionally to `r_k²` (an idealized importance sampler; a
-//!   real deployment would gossip weight summaries). Implemented with a
-//!   Fenwick tree for O(log N) updates/draws.
+//!   real deployment would gossip weight summaries). Implemented with
+//!   the shared Fenwick [`WeightTree`] for O(log N) updates/draws.
+//!
+//! The [`WeightTree`] itself lives in [`crate::linalg::select`] (the
+//! indexed selection engine) so the matrix-form `mp:residual` solver and
+//! the sharded runtime's per-shard samplers share one implementation —
+//! re-exported here for the existing `coordinator::sampler` path.
 
 use crate::network::events::EventQueue;
 use crate::util::rng::Rng;
+
+pub use crate::linalg::select::WeightTree;
 
 /// Which sampling strategy the coordinator uses.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -21,78 +28,6 @@ pub enum SamplerKind {
     /// Weight each page by `max(r_k², floor)`; `floor > 0` keeps the
     /// chain irreducible (every page retains positive probability).
     ResidualWeighted { floor: f64 },
-}
-
-/// Fenwick (binary indexed) tree over non-negative weights, supporting
-/// point updates and sampling proportional to weight in O(log N).
-#[derive(Debug, Clone)]
-pub struct WeightTree {
-    tree: Vec<f64>,
-    weights: Vec<f64>,
-}
-
-impl WeightTree {
-    pub fn new(weights: &[f64]) -> WeightTree {
-        let n = weights.len();
-        let mut t = WeightTree {
-            tree: vec![0.0; n + 1],
-            weights: vec![0.0; n],
-        };
-        for (i, &w) in weights.iter().enumerate() {
-            t.update(i, w);
-        }
-        t
-    }
-
-    pub fn total(&self) -> f64 {
-        self.prefix_sum(self.weights.len())
-    }
-
-    /// Sum of weights `[0, end)`.
-    fn prefix_sum(&self, end: usize) -> f64 {
-        let mut i = end;
-        let mut s = 0.0;
-        while i > 0 {
-            s += self.tree[i];
-            i -= i & i.wrapping_neg();
-        }
-        s
-    }
-
-    /// Set weight of index `i`.
-    pub fn update(&mut self, i: usize, w: f64) {
-        assert!(w >= 0.0, "negative weight");
-        let delta = w - self.weights[i];
-        self.weights[i] = w;
-        let mut j = i + 1;
-        while j < self.tree.len() {
-            self.tree[j] += delta;
-            j += j & j.wrapping_neg();
-        }
-    }
-
-    pub fn weight(&self, i: usize) -> f64 {
-        self.weights[i]
-    }
-
-    /// Sample an index proportional to weight.
-    pub fn sample(&self, rng: &mut Rng) -> usize {
-        let total = self.total();
-        assert!(total > 0.0, "cannot sample from zero mass");
-        let mut target = rng.uniform() * total;
-        // Descend the implicit Fenwick structure.
-        let mut pos = 0usize;
-        let mut mask = self.tree.len().next_power_of_two() >> 1;
-        while mask > 0 {
-            let next = pos + mask;
-            if next < self.tree.len() && self.tree[next] < target {
-                target -= self.tree[next];
-                pos = next;
-            }
-            mask >>= 1;
-        }
-        pos.min(self.weights.len() - 1)
-    }
 }
 
 /// A sampler instance: produces `(fire_time, page)` pairs.
@@ -161,38 +96,6 @@ impl Sampler {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn weight_tree_prefix_and_total() {
-        let t = WeightTree::new(&[1.0, 2.0, 3.0, 4.0]);
-        assert_eq!(t.total(), 10.0);
-        assert_eq!(t.prefix_sum(2), 3.0);
-        assert_eq!(t.weight(2), 3.0);
-    }
-
-    #[test]
-    fn weight_tree_update() {
-        let mut t = WeightTree::new(&[1.0, 1.0, 1.0]);
-        t.update(1, 5.0);
-        assert_eq!(t.total(), 7.0);
-        assert_eq!(t.weight(1), 5.0);
-    }
-
-    #[test]
-    fn weight_tree_sampling_proportional() {
-        let t = WeightTree::new(&[1.0, 0.0, 3.0, 6.0]);
-        let mut rng = Rng::seeded(151);
-        let mut counts = [0usize; 4];
-        let draws = 100_000;
-        for _ in 0..draws {
-            counts[t.sample(&mut rng)] += 1;
-        }
-        assert_eq!(counts[1], 0);
-        let f3 = counts[3] as f64 / draws as f64;
-        assert!((f3 - 0.6).abs() < 0.01, "f3={f3}");
-        let f0 = counts[0] as f64 / draws as f64;
-        assert!((f0 - 0.1).abs() < 0.01, "f0={f0}");
-    }
 
     #[test]
     fn uniform_sampler_is_uniform() {

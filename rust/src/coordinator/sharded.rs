@@ -46,6 +46,25 @@
 //! stream, so `sharded:1:1:*:worker` replays the matrix form bit for bit
 //! (tested below and in `tests/engine.rs`).
 //!
+//! An orthogonal [`Sampling`] policy decides *how* candidates are drawn
+//! (§IV future-work 3): `uniform` (the above, the default) or
+//! `residual` — candidates weighted by `max(r_k², floor)` over the
+//! shared Fenwick [`WeightTree`]. Under leader packing one global tree
+//! lives on the leader and is refreshed serially from the accepted
+//! activations' neighbourhoods after every super-step. Under worker
+//! packing each worker keeps a tree over its *owned* pages; because an
+//! activation can write residuals owned by other shards, survivors
+//! publish their page id to a shared [`Winners`] list and a second
+//! barrier separates execution from a weight-refresh phase in which
+//! every worker updates the owned pages inside any winner's
+//! neighbourhood (winners are pairwise disjoint, so each page refreshes
+//! at most once; updates apply in ascending page order, so the Fenwick
+//! arithmetic — and with it every future draw — is independent of
+//! thread timing). The refresh costs O(Σ winner degrees) index scans
+//! per worker per super-step, proportional to the activation work
+//! itself. With one shard, both packers' residual paths replay the
+//! matrix-form `mp:residual` bit for bit (tested in `tests/engine.rs`).
+//!
 //! Topology: one leader and `W` persistent workers connected by mpsc
 //! channels plus (for worker packing) a `std::sync::Barrier` separating
 //! the claim and verify/execute phases of a super-step. Page → shard
@@ -60,11 +79,12 @@
 //! module's docs); [`activate`] consults the column constants instead of
 //! dividing by the raw out-degree.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier};
 
 use crate::graph::Graph;
+use crate::linalg::select::{DEFAULT_WEIGHT_FLOOR, WeightTree};
 use crate::linalg::sparse::BColumns;
 use crate::util::rng::Rng;
 
@@ -207,6 +227,18 @@ impl ShardMap {
             ShardMap::Block => w * n.div_ceil(shards) + i,
         }
     }
+
+    /// Inverse of [`ShardMap::owned_page`]: page `k`'s index within its
+    /// owner's page list. Monotone in `k` for both maps, so sorting
+    /// global ids sorts local indices too (the residual samplers rely on
+    /// this for deterministic weight-update order).
+    #[inline]
+    pub fn local_index(&self, k: usize, n: usize, shards: usize) -> usize {
+        match self {
+            ShardMap::Modulo => k / shards,
+            ShardMap::Block => k % n.div_ceil(shards),
+        }
+    }
 }
 
 /// Who packs conflict-free super-steps: the serial leader (`mark`-array
@@ -238,6 +270,51 @@ impl Packer {
             _ => None,
         }
     }
+}
+
+/// How candidates are drawn (§IV future-work 3): uniform (the paper's
+/// law, the default) or residual-weighted — `k ∝ max(r_k², floor)` over
+/// a Fenwick [`WeightTree`]. Under [`Packer::Leader`] one global tree
+/// lives on the leader; under [`Packer::Worker`] every worker keeps a
+/// local tree over the pages it owns, refreshed from the published
+/// winner set after each super-step (see the module docs of
+/// [`crate::linalg::select`] for the floor/irreducibility argument).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sampling {
+    /// Uniform candidates (global under leader packing, per-shard under
+    /// worker packing) — PR-3 behaviour, bit-for-bit.
+    Uniform,
+    /// Residual-weighted candidates with the shared default floor.
+    Residual,
+}
+
+impl Sampling {
+    /// Registry string used by `SolverSpec` (`"uniform"` / `"residual"`).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Sampling::Uniform => "uniform",
+            Sampling::Residual => "residual",
+        }
+    }
+
+    /// Parse the registry string.
+    pub fn parse(s: &str) -> Option<Sampling> {
+        match s {
+            "uniform" => Some(Sampling::Uniform),
+            "residual" => Some(Sampling::Residual),
+            _ => None,
+        }
+    }
+}
+
+/// Winner exchange for worker-packed residual sampling: survivors of the
+/// claim phase publish their page id here so every worker can refresh
+/// the weights of its owned pages in the winners' neighbourhoods.
+/// Winners hold pairwise-disjoint neighbourhoods, so at most `n` entries
+/// are ever live; the leader resets `count` between super-steps.
+struct Winners {
+    count: AtomicUsize,
+    pages: Vec<AtomicU64>,
 }
 
 /// Low bits of a claim word hold the inverted candidate priority; high
@@ -301,10 +378,12 @@ struct WorkerCtx {
     shards: usize,
     alpha: f64,
     map: ShardMap,
+    sampling: Sampling,
     graph: Arc<Graph>,
     cols: Arc<BColumns>,
     state: Arc<SharedState>,
     claims: Arc<Vec<AtomicU64>>,
+    winners: Arc<Winners>,
     barrier: Arc<Barrier>,
     done: Sender<Done>,
 }
@@ -312,10 +391,14 @@ struct WorkerCtx {
 fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>) {
     let n = ctx.graph.n();
     let owned = ctx.map.owned_count(ctx.w, n, ctx.shards);
+    let residual = ctx.sampling == Sampling::Residual;
     // Worker-packing locals, allocated once per thread: the candidate
-    // stream and the (page, claim word) queue of the current super-step.
+    // stream, the (page, claim word) queue of the current super-step,
+    // the per-shard residual weight tree and its update scratch.
     let mut rng: Option<Rng> = None;
     let mut cands: Vec<(u32, u64)> = Vec::new();
+    let mut wtree: Option<WeightTree> = None;
+    let mut wscratch: Vec<u32> = Vec::new();
     while let Ok(job) = rx.recv() {
         match job {
             Job::Batch(mut pages) => {
@@ -329,7 +412,19 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>) {
                     return;
                 }
             }
-            Job::Seed(stream) => rng = Some(stream),
+            Job::Seed(stream) => {
+                rng = Some(stream);
+                // Residual sampling: the local tree over the owned pages
+                // starts at the uniform initial residual (1-α)² — built
+                // here (not lazily at first draw) so weight refreshes
+                // never miss updates from super-steps this worker only
+                // observed.
+                if residual && owned > 0 {
+                    let y = 1.0 - ctx.alpha;
+                    let w0 = (y * y).max(DEFAULT_WEIGHT_FLOOR);
+                    wtree = Some(WeightTree::new(&vec![w0; owned]));
+                }
+            }
             Job::Pack { gen, share } => {
                 // Claim phase: sample locally, stamp every page of the
                 // closed neighbourhood with this candidate's priority
@@ -340,7 +435,13 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>) {
                     let rng = rng.as_mut().expect("worker stream seeded before packing");
                     cands.reserve(share);
                     for slot in 0..share {
-                        let k = ctx.map.owned_page(ctx.w, rng.below(owned), n, ctx.shards);
+                        // Uniform or residual-weighted local draw — both
+                        // O(log owned) at worst, both one stream value.
+                        let li = match wtree.as_ref() {
+                            Some(tree) => tree.sample(rng),
+                            None => rng.below(owned),
+                        };
+                        let k = ctx.map.owned_page(ctx.w, li, n, ctx.shards);
                         // Interleave priorities across workers (slot-major)
                         // so no shard's whole batch outranks another's.
                         let word = claim_word(gen, (slot * ctx.shards + ctx.w) as u64);
@@ -374,8 +475,51 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>) {
                         d.applied += 1;
                         d.reads += deg;
                         d.writes += deg;
+                        if residual {
+                            // Publish for the weight-refresh phase below.
+                            let slot = ctx.winners.count.fetch_add(1, Ordering::Relaxed);
+                            ctx.winners.pages[slot].store(k as u64, Ordering::Relaxed);
+                        }
                     } else {
                         d.conflicts += 1;
+                    }
+                }
+                if residual {
+                    // Weight-refresh phase: wait until every worker has
+                    // activated and published its winners (the barrier
+                    // provides the happens-before edge for both the
+                    // residual stores and the winner list), then refresh
+                    // the weights of owned pages inside any winner's
+                    // neighbourhood. Winners are pairwise disjoint, so
+                    // each page is refreshed at most once; updates are
+                    // applied in ascending page order, making the
+                    // Fenwick arithmetic independent of publication
+                    // order (and of thread timing).
+                    ctx.barrier.wait();
+                    if let Some(tree) = wtree.as_mut() {
+                        let wins_n = ctx.winners.count.load(Ordering::Relaxed);
+                        wscratch.clear();
+                        for slot in 0..wins_n {
+                            let k = ctx.winners.pages[slot].load(Ordering::Relaxed) as usize;
+                            if ctx.map.owner(k, n, ctx.shards) == ctx.w {
+                                wscratch.push(k as u32);
+                            }
+                            for &j in ctx.graph.out(k) {
+                                if ctx.map.owner(j as usize, n, ctx.shards) == ctx.w {
+                                    wscratch.push(j);
+                                }
+                            }
+                        }
+                        wscratch.sort_unstable();
+                        wscratch.dedup();
+                        for &j in &wscratch {
+                            let j = j as usize;
+                            let r = ctx.state.load_r(j);
+                            tree.update(
+                                ctx.map.local_index(j, n, ctx.shards),
+                                (r * r).max(DEFAULT_WEIGHT_FLOOR),
+                            );
+                        }
                     }
                 }
                 if ctx.done.send(d).is_err() {
@@ -397,8 +541,20 @@ pub struct ShardedRuntime {
     shards: usize,
     map: ShardMap,
     packer: Packer,
+    sampling: Sampling,
     /// Scratch: generation-tagged marks for leader-side packing.
     mark: Vec<u64>,
+    /// Leader-side global residual weight tree (residual sampling under
+    /// leader packing only).
+    ltree: Option<WeightTree>,
+    /// Scratch: pages accepted this super-step (leader residual
+    /// sampling — drives the post-step weight refresh).
+    packed: Vec<u32>,
+    /// Scratch: sorted touched-page buffer for weight refreshes.
+    wscratch: Vec<u32>,
+    /// Winner exchange for worker-packed residual sampling (empty
+    /// otherwise).
+    winners: Arc<Winners>,
     generation: u64,
     /// Whether the workers' candidate streams have been seeded (worker
     /// packing; derived from the first `run` call's rng).
@@ -442,7 +598,7 @@ impl ShardedRuntime {
     }
 
     /// Spin up `shards` worker threads with an explicit [`ShardMap`] and
-    /// [`Packer`] policy.
+    /// [`Packer`] policy (uniform candidate sampling).
     pub fn new_with_packer(
         graph: Graph,
         alpha: f64,
@@ -450,16 +606,41 @@ impl ShardedRuntime {
         map: ShardMap,
         packer: Packer,
     ) -> ShardedRuntime {
+        ShardedRuntime::new_with_sampling(graph, alpha, shards, map, packer, Sampling::Uniform)
+    }
+
+    /// Spin up `shards` worker threads with explicit [`ShardMap`],
+    /// [`Packer`] and [`Sampling`] policies.
+    pub fn new_with_sampling(
+        graph: Graph,
+        alpha: f64,
+        shards: usize,
+        map: ShardMap,
+        packer: Packer,
+        sampling: Sampling,
+    ) -> ShardedRuntime {
         assert!(shards >= 1);
         let n = graph.n();
         let graph = Arc::new(graph);
         let cols = Arc::new(BColumns::new(&graph, alpha));
         let state = Arc::new(SharedState::new(n, 1.0 - alpha));
         // Each packer's scratch is O(n); only materialize the one in use
-        // (claims for worker packing, the mark array for leader packing).
+        // (claims for worker packing, the mark array for leader packing,
+        // the winner exchange for worker-packed residual sampling).
         let claims: Arc<Vec<AtomicU64>> = Arc::new(match packer {
             Packer::Worker => (0..n).map(|_| AtomicU64::new(0)).collect(),
             Packer::Leader => Vec::new(),
+        });
+        let winners = Arc::new(Winners {
+            count: AtomicUsize::new(0),
+            pages: match (packer, sampling) {
+                // Winners hold pairwise-disjoint neighbourhoods, so at
+                // most n can survive one super-step.
+                (Packer::Worker, Sampling::Residual) => {
+                    (0..n).map(|_| AtomicU64::new(0)).collect()
+                }
+                _ => Vec::new(),
+            },
         });
         let barrier = Arc::new(Barrier::new(shards));
         let (done_tx, done_rx) = channel::<Done>();
@@ -473,10 +654,12 @@ impl ShardedRuntime {
                 shards,
                 alpha,
                 map,
+                sampling,
                 graph: Arc::clone(&graph),
                 cols: Arc::clone(&cols),
                 state: Arc::clone(&state),
                 claims: Arc::clone(&claims),
+                winners: Arc::clone(&winners),
                 barrier: Arc::clone(&barrier),
                 done: done_tx.clone(),
             };
@@ -487,6 +670,16 @@ impl ShardedRuntime {
                 Packer::Leader => vec![0; n],
                 Packer::Worker => Vec::new(),
             },
+            ltree: match (packer, sampling) {
+                (Packer::Leader, Sampling::Residual) => {
+                    let y = 1.0 - alpha;
+                    Some(WeightTree::new(&vec![(y * y).max(DEFAULT_WEIGHT_FLOOR); n]))
+                }
+                _ => None,
+            },
+            packed: Vec::new(),
+            wscratch: Vec::new(),
+            winners,
             generation: 0,
             streams_seeded: false,
             route: (0..shards).map(|_| Vec::new()).collect(),
@@ -500,6 +693,7 @@ impl ShardedRuntime {
             shards,
             map,
             packer,
+            sampling,
             activations: 0,
             conflicts: 0,
             logical_reads: 0,
@@ -538,7 +732,13 @@ impl ShardedRuntime {
             // coordinator).
             let mut accepted = 0usize;
             'cand: for _ in 0..budget {
-                let k = rng.below(n);
+                // Uniform or residual-weighted global draw — one stream
+                // value either way, so the sampling policy never skews
+                // the candidate count.
+                let k = match self.ltree.as_ref() {
+                    Some(tree) => tree.sample(rng),
+                    None => rng.below(n),
+                };
                 if self.mark[k] == gen {
                     self.conflicts += 1;
                     continue;
@@ -558,6 +758,9 @@ impl ShardedRuntime {
                 self.logical_writes += deg;
                 let owner = self.map.owner(k, n, self.shards);
                 self.route[owner].push(k as u32);
+                if self.ltree.is_some() {
+                    self.packed.push(k as u32);
+                }
                 accepted += 1;
             }
             if accepted == 0 {
@@ -588,6 +791,27 @@ impl ShardedRuntime {
                 if let Some(buf) = done.buf {
                     self.spare.push(buf);
                 }
+            }
+            // Residual sampling: refresh the weights of every page the
+            // accepted activations touched ({k} ∪ out(k) per winner —
+            // disjoint across winners). The recv loop above published
+            // the workers' residual writes; updates apply in ascending
+            // page order, the same deterministic walk the matrix-form
+            // `mp:residual` and the worker packer use.
+            if let Some(tree) = self.ltree.as_mut() {
+                self.wscratch.clear();
+                for &k in &self.packed {
+                    self.wscratch.push(k);
+                    self.wscratch.extend_from_slice(self.graph.out(k as usize));
+                }
+                self.wscratch.sort_unstable();
+                self.wscratch.dedup();
+                for &j in &self.wscratch {
+                    let j = j as usize;
+                    let r = self.state.load_r(j);
+                    tree.update(j, (r * r).max(DEFAULT_WEIGHT_FLOOR));
+                }
+                self.packed.clear();
             }
         }
         self.activations += applied;
@@ -635,6 +859,11 @@ impl ShardedRuntime {
                 self.conflicts += d.conflicts;
                 self.logical_reads += d.reads;
                 self.logical_writes += d.writes;
+            }
+            // Reset the winner exchange for the next super-step; the
+            // Pack sends below publish the store to the workers.
+            if self.sampling == Sampling::Residual {
+                self.winners.count.store(0, Ordering::Relaxed);
             }
         }
         self.activations += applied;
@@ -694,6 +923,10 @@ impl ShardedRuntime {
 
     pub fn packer(&self) -> Packer {
         self.packer
+    }
+
+    pub fn sampling(&self) -> Sampling {
+        self.sampling
     }
 }
 
@@ -931,7 +1164,8 @@ mod tests {
     fn owned_pages_partition_the_graph() {
         // owner / owned_count / owned_page must agree: the owned pages of
         // all shards tile [0, n) exactly, under both maps, including the
-        // shards > n and non-divisible cases.
+        // shards > n and non-divisible cases. local_index must invert
+        // owned_page.
         for (n, shards) in [(5usize, 8usize), (100, 4), (101, 4), (1, 1), (30, 7)] {
             for map in [ShardMap::Modulo, ShardMap::Block] {
                 let mut seen = vec![false; n];
@@ -941,12 +1175,139 @@ mod tests {
                         let k = map.owned_page(w, i, n, shards);
                         assert!(k < n, "{map:?} owned_page({w},{i},{n},{shards}) = {k}");
                         assert_eq!(map.owner(k, n, shards), w, "{map:?} owner mismatch");
+                        assert_eq!(
+                            map.local_index(k, n, shards),
+                            i,
+                            "{map:?} local_index must invert owned_page"
+                        );
                         assert!(!seen[k], "{map:?} page {k} owned twice");
                         seen[k] = true;
                     }
                 }
                 assert!(seen.iter().all(|&s| s), "{map:?} ({n},{shards}) pages unowned");
             }
+        }
+    }
+
+    #[test]
+    fn residual_sampling_converges_under_both_packers() {
+        // The floor keeps every page's candidate probability positive,
+        // so residual-weighted packing reaches the same fixed point —
+        // including across shard boundaries (cross-shard residual writes
+        // must reach the owners' weight trees).
+        let g = generators::erdos_renyi(150, 0.03, 2203);
+        let x_star = exact_pagerank(&g, 0.85);
+        for packer in [Packer::Leader, Packer::Worker] {
+            let mut rt = ShardedRuntime::new_with_sampling(
+                g.clone(),
+                0.85,
+                4,
+                ShardMap::Modulo,
+                packer,
+                Sampling::Residual,
+            );
+            let mut rng = Rng::seeded(24);
+            rt.run(60_000, 8, &mut rng);
+            let err = vector::dist_inf(&rt.estimate(), &x_star);
+            assert!(err < 1e-6, "{packer:?}: err={err}");
+            assert_eq!(rt.sampling(), Sampling::Residual);
+        }
+    }
+
+    #[test]
+    fn residual_sampling_conserves_eq_11() {
+        // B·x + r = (1-α)·1 must survive weighted candidate selection:
+        // the weights only choose *who* activates, never the arithmetic.
+        let g = generators::erdos_renyi(300, 0.01, 2204);
+        let alpha = 0.85;
+        for packer in [Packer::Leader, Packer::Worker] {
+            let mut rt = ShardedRuntime::new_with_sampling(
+                g.clone(),
+                alpha,
+                4,
+                ShardMap::Modulo,
+                packer,
+                Sampling::Residual,
+            );
+            let mut rng = Rng::seeded(25);
+            rt.run(200, 16, &mut rng);
+            assert!(rt.activations() > 0, "{packer:?}");
+            let b = DenseMatrix::b_matrix(&g, alpha);
+            let bx = b.matvec(&rt.estimate());
+            for (i, (v, r)) in bx.iter().zip(rt.residual()).enumerate() {
+                assert!(
+                    (v + r - (1.0 - alpha)).abs() < 1e-10,
+                    "{packer:?}: conservation broken at page {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn worker_residual_sampling_is_deterministic_across_runs() {
+        // The weight-refresh phase applies updates in ascending page
+        // order, so the per-shard Fenwick trees — and every draw they
+        // produce — are a pure function of the seed, independent of
+        // winner-publication timing.
+        let g = generators::er_threshold(80, 0.3, 2207);
+        let run = || {
+            let mut rt = ShardedRuntime::new_with_sampling(
+                g.clone(),
+                0.85,
+                4,
+                ShardMap::Modulo,
+                Packer::Worker,
+                Sampling::Residual,
+            );
+            let mut rng = Rng::seeded(32);
+            rt.run(200, 16, &mut rng);
+            (
+                rt.estimate(),
+                rt.activations(),
+                rt.conflicts(),
+                rt.logical_reads(),
+                rt.logical_writes(),
+            )
+        };
+        let (xa, aa, ca, ra, wa) = run();
+        let (xb, ab, cb, rb, wb) = run();
+        assert_eq!(xa, xb, "estimates must be bit-identical across runs");
+        assert_eq!((aa, ca, ra, wa), (ab, cb, rb, wb), "counters must replay");
+        assert!(ca > 0, "a dense-ish graph at budget 16 must see claim conflicts");
+    }
+
+    #[test]
+    fn residual_sampling_handles_dangling_pages() {
+        // A sink's residual support is itself (implicit self-loop); its
+        // weight must still refresh and the run stay finite.
+        for packer in [Packer::Leader, Packer::Worker] {
+            let g = generators::chain(30);
+            let x_star = exact_pagerank(&g, 0.85);
+            let mut rt = ShardedRuntime::new_with_sampling(
+                g,
+                0.85,
+                3,
+                ShardMap::Modulo,
+                packer,
+                Sampling::Residual,
+            );
+            let mut rng = Rng::seeded(26);
+            rt.run(40_000, 4, &mut rng);
+            for (i, r) in rt.residual().into_iter().enumerate() {
+                assert!(r.is_finite(), "{packer:?}: residual at page {i} poisoned: {r}");
+            }
+            let err = vector::dist_inf(&rt.estimate(), &x_star);
+            assert!(err < 1e-6, "{packer:?}: err={err}");
+        }
+    }
+
+    #[test]
+    fn sampling_registry_round_trips() {
+        assert_eq!(Sampling::parse("uniform"), Some(Sampling::Uniform));
+        assert_eq!(Sampling::parse("residual"), Some(Sampling::Residual));
+        assert_eq!(Sampling::parse("importance"), None);
+        for s in [Sampling::Uniform, Sampling::Residual] {
+            assert_eq!(Sampling::parse(s.key()), Some(s));
         }
     }
 

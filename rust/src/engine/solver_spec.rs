@@ -25,10 +25,11 @@ use crate::algo::{
     power_iteration, you_tempo_qiu,
 };
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, Mode, Packer, RunReport, SamplerKind, ShardMap,
+    Coordinator, CoordinatorConfig, Mode, Packer, RunReport, SamplerKind, Sampling, ShardMap,
     ShardedRuntime,
 };
 use crate::graph::Graph;
+use crate::linalg::select::DEFAULT_WEIGHT_FLOOR;
 use crate::network::LatencyModel;
 use crate::util::rng::Rng;
 
@@ -37,6 +38,10 @@ use crate::util::rng::Rng;
 pub enum SolverSpec {
     /// Algorithm 1 — randomized Matching Pursuit (matrix form).
     Mp,
+    /// Algorithm 1 with §IV-3 residual-weighted activation: `k ∝
+    /// max(r_k², floor)` over the shared Fenwick tree
+    /// (`mp:residual[:<floor>]`; `floor > 0` keeps every page live).
+    MpResidual { floor: f64 },
     /// Original best-atom MP (centralized argmax selection).
     GreedyMp,
     /// §IV-1 conflict-free parallel activation with a requested batch.
@@ -66,14 +71,17 @@ pub enum SolverSpec {
     /// The real multi-threaded deployment:
     /// [`crate::coordinator::ShardedRuntime`] with `shards` OS workers,
     /// conflict-free super-steps of up to `batch` candidates, a
-    /// pluggable page→shard ownership map, and a pluggable packing
-    /// policy (`leader` = serial leader-side packing, `worker` =
-    /// decentralized claim-array packing in the workers).
+    /// pluggable page→shard ownership map, a pluggable packing policy
+    /// (`leader` = serial leader-side packing, `worker` = decentralized
+    /// claim-array packing in the workers) and a pluggable candidate
+    /// sampling policy (`uniform` = the paper's law, `residual` =
+    /// residual-weighted local trees).
     Sharded {
         shards: usize,
         batch: usize,
         map: ShardMap,
         packer: Packer,
+        sampling: Sampling,
     },
     /// The dense backend: Jacobi sweeps on a materialized hyperlink
     /// matrix ([`dense_engine::DenseJacobi`], the host twin of the PJRT
@@ -122,6 +130,13 @@ impl SolverSpec {
     pub fn key(&self) -> String {
         match self {
             SolverSpec::Mp => "mp".to_string(),
+            SolverSpec::MpResidual { floor } => {
+                if *floor == DEFAULT_WEIGHT_FLOOR {
+                    "mp:residual".to_string()
+                } else {
+                    format!("mp:residual:{floor}")
+                }
+            }
             SolverSpec::GreedyMp => "greedy-mp".to_string(),
             SolverSpec::ParallelMp { batch } => format!("parallel-mp:{batch}"),
             SolverSpec::PowerIteration => "power".to_string(),
@@ -137,8 +152,15 @@ impl SolverSpec {
                 sampler_key(*sampler),
                 latency_key(*latency)
             ),
-            SolverSpec::Sharded { shards, batch, map, packer } => {
-                format!("sharded:{shards}:{batch}:{}:{}", map.key(), packer.key())
+            SolverSpec::Sharded { shards, batch, map, packer, sampling } => {
+                // The sampling segment is omitted when default, so PR-3
+                // era keys (and the BENCH cell names built from them)
+                // are unchanged.
+                let base = format!("sharded:{shards}:{batch}:{}:{}", map.key(), packer.key());
+                match sampling {
+                    Sampling::Uniform => base,
+                    Sampling::Residual => format!("{base}:residual"),
+                }
             }
             SolverSpec::Dense => "dense".to_string(),
         }
@@ -148,6 +170,9 @@ impl SolverSpec {
     pub fn describe(&self) -> &'static str {
         match self {
             SolverSpec::Mp => "Algorithm 1: randomized Matching Pursuit (out-links only)",
+            SolverSpec::MpResidual { .. } => {
+                "Algorithm 1 with §IV-3 residual-weighted activation (Fenwick-sampled)"
+            }
             SolverSpec::GreedyMp => "best-atom MP [2]: centralized argmax selection",
             SolverSpec::ParallelMp { .. } => "§IV-1 conflict-free batched activation",
             SolverSpec::PowerIteration => "centralized Jacobi sweeps on (I-αA)x = (1-α)1",
@@ -182,6 +207,7 @@ impl SolverSpec {
     pub fn supports_dangling(&self) -> bool {
         match self {
             SolverSpec::Mp
+            | SolverSpec::MpResidual { .. }
             | SolverSpec::GreedyMp
             | SolverSpec::ParallelMp { .. }
             | SolverSpec::PowerIteration
@@ -205,7 +231,28 @@ impl SolverSpec {
         let head = *parts.first().ok_or("empty solver spec")?;
         let arity_err = |want: &str| format!("solver spec {s:?}: expected {want}");
         match head {
-            "mp" | "matching-pursuit" => Ok(SolverSpec::Mp),
+            "mp" | "matching-pursuit" => match parts.get(1) {
+                None => Ok(SolverSpec::Mp),
+                Some(&"residual") => {
+                    let floor = match parts.get(2) {
+                        None => DEFAULT_WEIGHT_FLOOR,
+                        Some(f) => {
+                            let floor: f64 = f
+                                .parse()
+                                .map_err(|_| arity_err("mp:residual[:<floor>]"))?;
+                            if !(floor > 0.0 && floor.is_finite()) {
+                                return Err(arity_err("a floor > 0 (keeps every page live)"));
+                            }
+                            floor
+                        }
+                    };
+                    if parts.len() > 3 {
+                        return Err(arity_err("mp:residual[:<floor>]"));
+                    }
+                    Ok(SolverSpec::MpResidual { floor })
+                }
+                Some(m) => Err(format!("bad mp variant {m:?} (mp | mp:residual[:<floor>])")),
+            },
             "greedy-mp" | "greedy" => Ok(SolverSpec::GreedyMp),
             "parallel-mp" | "pmp" => {
                 let batch = match parts.get(1) {
@@ -222,7 +269,8 @@ impl SolverSpec {
             "power" | "power-iteration" | "jacobi" => Ok(SolverSpec::PowerIteration),
             "dense" => Ok(SolverSpec::Dense),
             "sharded" | "sh" => {
-                let grammar = "sharded:<shards>[:<batch>[:<mod|block>[:<leader|worker>]]]";
+                let grammar =
+                    "sharded:<shards>[:<batch>[:<mod|block>[:<leader|worker>[:<uniform|residual>]]]]";
                 let shards = match parts.get(1) {
                     None => 4,
                     Some(v) => v.parse().map_err(|_| arity_err(grammar))?,
@@ -247,7 +295,12 @@ impl SolverSpec {
                     Some(p) => Packer::parse(p)
                         .ok_or_else(|| format!("bad packer {p:?} (leader|worker)"))?,
                 };
-                if parts.len() > 5 {
+                let sampling = match parts.get(5) {
+                    None => Sampling::Uniform,
+                    Some(p) => Sampling::parse(p)
+                        .ok_or_else(|| format!("bad sampling policy {p:?} (uniform|residual)"))?,
+                };
+                if parts.len() > 6 {
                     return Err(arity_err(grammar));
                 }
                 // Bound the budget the worker packer's claim words can
@@ -260,7 +313,7 @@ impl SolverSpec {
                          maximum {max} at {shards} shard(s)"
                     ));
                 }
-                Ok(SolverSpec::Sharded { shards, batch, map, packer })
+                Ok(SolverSpec::Sharded { shards, batch, map, packer, sampling })
             }
             "google-power" | "google" => Ok(SolverSpec::GooglePower),
             "ishii-tempo" | "it" => Ok(SolverSpec::IshiiTempo),
@@ -309,6 +362,7 @@ impl SolverSpec {
     pub fn all() -> Vec<SolverSpec> {
         vec![
             SolverSpec::Mp,
+            SolverSpec::MpResidual { floor: DEFAULT_WEIGHT_FLOOR },
             SolverSpec::GreedyMp,
             SolverSpec::ParallelMp { batch: 8 },
             SolverSpec::PowerIteration,
@@ -324,12 +378,21 @@ impl SolverSpec {
                 batch: 8,
                 map: ShardMap::Modulo,
                 packer: Packer::Leader,
+                sampling: Sampling::Uniform,
             },
             SolverSpec::Sharded {
                 shards: 2,
                 batch: 8,
                 map: ShardMap::Modulo,
                 packer: Packer::Worker,
+                sampling: Sampling::Uniform,
+            },
+            SolverSpec::Sharded {
+                shards: 2,
+                batch: 8,
+                map: ShardMap::Modulo,
+                packer: Packer::Worker,
+                sampling: Sampling::Residual,
             },
             SolverSpec::Dense,
         ]
@@ -363,6 +426,9 @@ impl SolverSpec {
     ) -> Box<dyn PageRankSolver + 'g> {
         match self {
             SolverSpec::Mp => Box::new(mp::MatchingPursuit::new(graph, alpha)),
+            SolverSpec::MpResidual { floor } => {
+                Box::new(mp::ResidualMatchingPursuit::new(graph, alpha, *floor))
+            }
             SolverSpec::GreedyMp => Box::new(greedy_mp::GreedyMatchingPursuit::new(graph, alpha)),
             SolverSpec::ParallelMp { batch } => {
                 Box::new(parallel_mp::ParallelMatchingPursuit::new(graph, alpha, *batch))
@@ -381,9 +447,9 @@ impl SolverSpec {
             SolverSpec::Coordinator { mode, sampler, latency } => Box::new(
                 CoordinatorSolver::build(graph, alpha, seed, *mode, *sampler, *latency),
             ),
-            SolverSpec::Sharded { shards, batch, map, packer } => {
-                Box::new(ShardedSolver::new(graph, alpha, *shards, *batch, *map, *packer))
-            }
+            SolverSpec::Sharded { shards, batch, map, packer, sampling } => Box::new(
+                ShardedSolver::new(graph, alpha, *shards, *batch, *map, *packer, *sampling),
+            ),
             SolverSpec::Dense => Box::new(dense_engine::DenseJacobi::new(graph, alpha)),
         }
     }
@@ -412,6 +478,7 @@ pub struct ShardedSolver {
 }
 
 impl ShardedSolver {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         graph: &Graph,
         alpha: f64,
@@ -419,10 +486,18 @@ impl ShardedSolver {
         batch: usize,
         map: ShardMap,
         packer: Packer,
+        sampling: Sampling,
     ) -> ShardedSolver {
         assert!(batch >= 1);
         ShardedSolver {
-            rt: ShardedRuntime::new_with_packer(graph.clone(), alpha, shards, map, packer),
+            rt: ShardedRuntime::new_with_sampling(
+                graph.clone(),
+                alpha,
+                shards,
+                map,
+                packer,
+                sampling,
+            ),
             batch,
             prev_reads: 0,
             prev_writes: 0,
@@ -471,9 +546,15 @@ impl PageRankSolver for ShardedSolver {
     }
 
     fn name(&self) -> &'static str {
-        match self.rt.packer() {
-            Packer::Leader => "sharded runtime (leader-packed)",
-            Packer::Worker => "sharded runtime (worker-packed)",
+        match (self.rt.packer(), self.rt.sampling()) {
+            (Packer::Leader, Sampling::Uniform) => "sharded runtime (leader-packed)",
+            (Packer::Worker, Sampling::Uniform) => "sharded runtime (worker-packed)",
+            (Packer::Leader, Sampling::Residual) => {
+                "sharded runtime (leader-packed, residual-weighted)"
+            }
+            (Packer::Worker, Sampling::Residual) => {
+                "sharded runtime (worker-packed, residual-weighted)"
+            }
         }
     }
 }
@@ -708,8 +789,51 @@ mod tests {
     }
 
     #[test]
+    fn residual_specs_parse_and_round_trip() {
+        assert_eq!(
+            SolverSpec::parse("mp:residual").expect("ok"),
+            SolverSpec::MpResidual { floor: DEFAULT_WEIGHT_FLOOR }
+        );
+        assert_eq!(SolverSpec::parse("mp:residual").expect("ok").key(), "mp:residual");
+        let custom = SolverSpec::MpResidual { floor: 1e-6 };
+        assert_eq!(SolverSpec::parse(&custom.key()).expect("ok"), custom);
+        assert_eq!(
+            SolverSpec::parse("sharded:2:8:mod:worker:residual").expect("ok"),
+            SolverSpec::Sharded {
+                shards: 2,
+                batch: 8,
+                map: ShardMap::Modulo,
+                packer: Packer::Worker,
+                sampling: Sampling::Residual,
+            }
+        );
+        assert_eq!(
+            SolverSpec::parse("sharded:2:8:mod:worker:residual").expect("ok").key(),
+            "sharded:2:8:mod:worker:residual"
+        );
+        // The explicit uniform segment is the PR-3 default — same spec,
+        // same canonical key, so the new segment cannot perturb existing
+        // scenarios or their determinism pins.
+        assert_eq!(
+            SolverSpec::parse("sharded:1:1:mod:worker:uniform").expect("ok"),
+            SolverSpec::parse("sharded:1:1:mod:worker").expect("ok")
+        );
+        assert_eq!(
+            SolverSpec::parse("sharded:1:1:mod:worker:uniform").expect("ok").key(),
+            "sharded:1:1:mod:worker"
+        );
+    }
+
+    #[test]
     fn bad_specs_rejected() {
         assert!(SolverSpec::parse("bogus").is_err());
+        assert!(SolverSpec::parse("mp:bogus").is_err());
+        assert!(SolverSpec::parse("mp:residual:0").is_err());
+        assert!(SolverSpec::parse("mp:residual:-1e-9").is_err());
+        assert!(SolverSpec::parse("mp:residual:nan").is_err());
+        assert!(SolverSpec::parse("mp:residual:1e-9:extra").is_err());
+        assert!(SolverSpec::parse("sharded:2:8:mod:worker:importance").is_err());
+        assert!(SolverSpec::parse("sharded:2:8:mod:worker:residual:extra").is_err());
         assert!(SolverSpec::parse("parallel-mp:0").is_err());
         assert!(SolverSpec::parse("coordinator:teleport").is_err());
         assert!(SolverSpec::parse("coordinator:async:psychic").is_err());
@@ -737,6 +861,7 @@ mod tests {
                 batch: 8,
                 map: ShardMap::Modulo,
                 packer: Packer::Leader,
+                sampling: Sampling::Uniform,
             }
         );
         assert_eq!(
@@ -746,6 +871,7 @@ mod tests {
                 batch: 8,
                 map: ShardMap::Modulo,
                 packer: Packer::Leader,
+                sampling: Sampling::Uniform,
             }
         );
         assert_eq!(
@@ -755,6 +881,7 @@ mod tests {
                 batch: 32,
                 map: ShardMap::Block,
                 packer: Packer::Leader,
+                sampling: Sampling::Uniform,
             }
         );
         assert_eq!(
@@ -764,6 +891,7 @@ mod tests {
                 batch: 64,
                 map: ShardMap::Modulo,
                 packer: Packer::Worker,
+                sampling: Sampling::Uniform,
             }
         );
         assert_eq!(
@@ -806,7 +934,8 @@ mod tests {
         // packing policy.
         for packer in [Packer::Leader, Packer::Worker] {
             let g = generators::er_threshold(40, 0.5, 33);
-            let mut sh = ShardedSolver::new(&g, 0.85, 2, 16, ShardMap::Modulo, packer);
+            let mut sh =
+                ShardedSolver::new(&g, 0.85, 2, 16, ShardMap::Modulo, packer, Sampling::Uniform);
             let mut rng = Rng::seeded(34);
             let mut activated = 0;
             for _ in 0..50 {

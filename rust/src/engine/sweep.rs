@@ -19,8 +19,9 @@
 //! ```
 //!
 //! Axes are applied to the *relevant* specs and are experiment-aware:
-//! `shards`/`batch`/`packer` rewrite the sharded (and, for `batch`,
-//! parallel-mp) solver entries, `latency` rewrites coordinator entries,
+//! `shards`/`batch`/`packer`/`sampling` rewrite the sharded (and, for
+//! `batch`, parallel-mp) solver entries, `latency` rewrites coordinator
+//! entries,
 //! `graph` swaps the whole graph spec (a registry string or object, so a
 //! sweep can range over graph *families*), and naming an axis with no
 //! applicable solver — or a solver-only axis on a size-estimation
@@ -52,8 +53,8 @@ pub struct Sweep {
 
 /// The grid axes [`Sweep`] understands.
 pub const SWEEP_AXES: &[&str] = &[
-    "alpha", "batch", "graph", "latency", "n", "packer", "rounds", "seed", "shards", "steps",
-    "stride",
+    "alpha", "batch", "graph", "latency", "n", "packer", "rounds", "sampling", "seed", "shards",
+    "steps", "stride",
 ];
 
 fn render_param(v: &Json) -> String {
@@ -233,6 +234,28 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
             if !hit {
                 return Err(
                     "axis \"packer\" needs a sharded solver in the scenario (e.g. \"sharded:2:8\")"
+                        .into(),
+                );
+            }
+        }
+        "sampling" => {
+            let spec = value
+                .as_str()
+                .ok_or_else(|| format!("axis \"sampling\": {} is not a string", value.render()))?;
+            let sampling = crate::coordinator::Sampling::parse(spec).ok_or_else(|| {
+                format!("axis \"sampling\": bad policy {spec:?} (uniform|residual)")
+            })?;
+            let mut hit = false;
+            for s in pagerank_solvers(scenario, axis)? {
+                if let SolverSpec::Sharded { sampling: sm, .. } = s {
+                    *sm = sampling;
+                    hit = true;
+                }
+            }
+            if !hit {
+                return Err(
+                    "axis \"sampling\" needs a sharded solver in the scenario (e.g. \
+                     \"sharded:2:8\")"
                         .into(),
                 );
             }
@@ -558,6 +581,43 @@ mod tests {
         }"#;
         let sweep = Sweep::from_json_str(no_sharded).expect("parses");
         assert!(sweep.cells().expect_err("must fail").contains("sharded"));
+    }
+
+    #[test]
+    fn sampling_axis_rewrites_sharded_entries() {
+        use crate::coordinator::Sampling;
+        let sweep = Sweep::from_json_str(&base_json(r#"{"sampling": ["uniform", "residual"]}"#))
+            .expect("parses");
+        let cells = sweep.cells().expect("expands");
+        assert_eq!(cells.len(), 2);
+        assert!(cells[0].1.solvers().iter().any(
+            |s| matches!(s, SolverSpec::Sharded { sampling: Sampling::Uniform, .. })
+        ));
+        assert!(cells[1].1.solvers().iter().any(
+            |s| matches!(s, SolverSpec::Sharded { sampling: Sampling::Residual, .. })
+        ));
+        assert_eq!(cells[1].1.name, "grid-test[sampling=residual]");
+        // Bad values and sharded-less scenarios are rejected up front.
+        let bad =
+            Sweep::from_json_str(&base_json(r#"{"sampling": ["importance"]}"#)).expect("parses");
+        assert!(bad.cells().is_err());
+        let no_sharded = r#"{
+          "scenario": {"graph": "paper:10", "solvers": ["mp"]},
+          "grid": {"sampling": ["residual"]}
+        }"#;
+        let sweep = Sweep::from_json_str(no_sharded).expect("parses");
+        assert!(sweep.cells().expect_err("must fail").contains("sharded"));
+        // And it is refused on size-estimation scenarios like the other
+        // solver-only axes.
+        let se = r#"{
+          "scenario": {
+            "graph": "paper:10",
+            "experiment": {"kind": "size-estimation", "estimators": ["kaczmarz"]}
+          },
+          "grid": {"sampling": ["residual"]}
+        }"#;
+        let err = Sweep::from_json_str(se).expect("parses").cells().expect_err("must fail");
+        assert!(err.contains("sampling"), "{err}");
     }
 
     #[test]

@@ -173,6 +173,54 @@ pub struct GreedyRow {
     pub total_reads: usize,
 }
 
+/// The ABL-GREEDY-SCALE result: greedy-MP at webgraph-ish sizes, where
+/// the seed implementation's O(N) per-step argmax scan made the ablation
+/// unusable. With the tree-backed selection engine the per-step cost is
+/// the touched-neighbourhood rescan, reported here straight from the
+/// counters [`GreedyMatchingPursuit::step_at`] returns.
+#[derive(Debug, Clone)]
+pub struct GreedyScaleRow {
+    pub n: usize,
+    pub steps: usize,
+    /// Σ rescanned pages (== Σ per-step selection maintenance cost).
+    pub total_rescans: u64,
+    /// Largest single-step rescan (bounded by the largest touched
+    /// closed in/out neighbourhood, NOT by N).
+    pub max_step_rescans: usize,
+    pub mean_step_rescans: f64,
+    pub final_residual_sq: f64,
+    pub wall_ms: f64,
+}
+
+/// ABL-GREEDY-SCALE: run best-atom MP on a sparse ER graph (mean degree
+/// ~8) at size `n` and record the per-step selection cost distribution.
+/// No exact reference is computed (O(N³) would dwarf the run); progress
+/// is measured by the residual norm, which best-atom MP drives down
+/// monotonically.
+pub fn greedy_scale_study(n: usize, alpha: f64, steps: usize, seed: u64) -> GreedyScaleRow {
+    use crate::algo::greedy_mp::GreedyMatchingPursuit;
+    let g = generators::erdos_renyi(n, (8.0 / n as f64).min(1.0), seed);
+    let t0 = std::time::Instant::now();
+    let mut gmp = GreedyMatchingPursuit::new(&g, alpha);
+    let mut total = 0u64;
+    let mut max_step = 0usize;
+    for _ in 0..steps {
+        let k = gmp.best_atom();
+        let (_touched, rescanned) = gmp.step_at(k);
+        total += rescanned as u64;
+        max_step = max_step.max(rescanned);
+    }
+    GreedyScaleRow {
+        n,
+        steps,
+        total_rescans: total,
+        max_step_rescans: max_step,
+        mean_step_rescans: total as f64 / steps as f64,
+        final_residual_sq: gmp.residual_norm_sq(),
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
 /// ABL-GREEDY: randomized vs best-atom MP at a fixed iteration budget.
 pub fn greedy_study(n: usize, alpha: f64, iterations: usize, seed: u64) -> Vec<GreedyRow> {
     let g = generators::er_threshold(n, 0.5, seed);
@@ -248,7 +296,39 @@ mod tests {
         let greedy = &rows[1];
         // Greedy is at least as good per iteration…
         assert!(greedy.final_error <= rand.final_error * 1.5);
-        // …but pays more reads (argmax scans).
+        // …but pays more reads (the in-neighbourhood rescans that keep
+        // the cached correlations exact).
         assert!(greedy.total_reads > rand.total_reads);
+    }
+
+    #[test]
+    fn greedy_scale_selection_cost_is_neighbourhood_bounded() {
+        // The acceptance check for the tree-backed argmax, at a size a
+        // unit test can afford: per-step selection cost must be bounded
+        // by the touched neighbourhood (mean degree ~8 → tens of pages),
+        // never by N. The seed implementation's scan cost N per step.
+        let n = 2_000;
+        let steps = 500;
+        let row = greedy_scale_study(n, 0.85, steps, 15);
+        assert_eq!(row.n, n);
+        assert!(
+            row.max_step_rescans < n / 2,
+            "selection cost must not scale with N: max {} on n={n}",
+            row.max_step_rescans
+        );
+        assert!(
+            row.mean_step_rescans < 400.0,
+            "mean rescan {} far above the ~deg² neighbourhood size",
+            row.mean_step_rescans
+        );
+        assert!(
+            row.total_rescans < (steps as u64) * (n as u64) / 10,
+            "aggregate cost {} looks like the old O(N)-per-step scan",
+            row.total_rescans
+        );
+        // And the run must still be best-atom MP: residual strictly
+        // below its starting value (1-α)²·n.
+        let r0 = (1.0 - 0.85f64).powi(2) * n as f64;
+        assert!(row.final_residual_sq < r0 * 0.5, "no progress: {}", row.final_residual_sq);
     }
 }

@@ -5,6 +5,10 @@
 //! * [`sparse`] — the sparse column view of `B` that the matrix-form MP
 //!   solver iterates on (`O(N_k)` per activation, the paper's cost model).
 //! * [`vector`] — dot/axpy/norm primitives shared by every algorithm.
+//! * [`select`] — the indexed selection engine: O(log N) argmax
+//!   ([`select::MaxScoreTree`]) and weighted sampling
+//!   ([`select::WeightTree`]) shared by greedy-MP, the residual-weighted
+//!   matrix-form solver and the sharded runtime's sampling policies.
 //! * [`solve`] — LU decomposition with partial pivoting: produces the
 //!   exact scaled-PageRank reference `x*` of Proposition 1.
 //! * [`spectral`] — symmetric (Jacobi-rotation) eigensolver to obtain
@@ -12,10 +16,12 @@
 //!   convergence rates (Prop. 2 and the Appendix bound).
 
 pub mod dense;
+pub mod select;
 pub mod solve;
 pub mod sparse;
 pub mod spectral;
 pub mod vector;
 
 pub use dense::DenseMatrix;
+pub use select::{MaxScoreTree, WeightTree};
 pub use sparse::BColumns;

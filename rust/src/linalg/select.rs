@@ -1,0 +1,382 @@
+//! Indexed selection: O(log N) argmax and weighted sampling over a
+//! score vector that changes in few coordinates per step.
+//!
+//! Per-step selection over N pages shows up three times in this
+//! repository, and all three are the same access pattern — a score
+//! vector updated only on `{k} ∪ in(out(k))` after an activation at `k`:
+//!
+//! * the greedy-MP ablation's best-atom rule (Mallat–Zhang §II-B) needs
+//!   `argmax_k |B(:,k)ᵀr|/‖B(:,k)‖` every step — [`MaxScoreTree`];
+//! * the §IV-3 residual-weighted matrix-form solver samples
+//!   `k ∝ max(r_k², floor)` — [`WeightTree`];
+//! * the sharded runtime's per-shard residual samplers do the same over
+//!   each worker's owned pages — [`WeightTree`] again.
+//!
+//! A linear scan makes each of these O(N) per step; both trees make
+//! them O(log N) per update/query, which is what lets the greedy
+//! ablation and the residual policies run at 10⁵⁺ pages.
+//!
+//! ## Floating-point discipline
+//!
+//! [`MaxScoreTree`] stores scores exactly and recomputes internal nodes
+//! as `max` of their children — `max` introduces no rounding, so the
+//! tree can never drift from the leaves and needs no rebuild.
+//!
+//! [`WeightTree`] accumulates *sums*, and its point update adds a
+//! `new - old` delta into O(log N) nodes: after many updates the
+//! internal partial sums drift away from the exact weights by
+//! accumulated rounding, which can push `total()` slightly negative and
+//! break sampling (the PR-5 regression). The tree therefore counts
+//! updates and rebuilds its internal nodes *exactly* from the stored
+//! weights every [`WeightTree::rebuild_every`] updates, bounding the
+//! drift to what O(n) fresh additions can produce.
+
+use crate::util::rng::Rng;
+
+/// Default weight floor for residual-weighted sampling: weighting pages
+/// by `max(r_k², floor)` with `floor > 0` keeps every page's activation
+/// probability positive, so the residual still contracts in expectation
+/// (every coordinate is visited infinitely often — see
+/// docs/ENGINE.md). Shared by `mp:residual`, the sharded `residual`
+/// sampling policy and the simulated coordinator's weighted sampler.
+pub const DEFAULT_WEIGHT_FLOOR: f64 = 1e-12;
+
+/// Segment tree over scores: O(log N) point update, O(log N) argmax
+/// (leftmost index on ties, matching a first-wins linear scan).
+#[derive(Debug, Clone)]
+pub struct MaxScoreTree {
+    /// Number of leaves (next power of two ≥ `n`).
+    size: usize,
+    /// Number of live scores.
+    n: usize,
+    /// `2*size` slots; root at 1, leaf `i` at `size + i`, padding leaves
+    /// hold `-∞` so they never win the argmax.
+    tree: Vec<f64>,
+}
+
+impl MaxScoreTree {
+    pub fn new(scores: &[f64]) -> MaxScoreTree {
+        let n = scores.len();
+        assert!(n > 0, "empty score set");
+        let size = n.next_power_of_two();
+        let mut tree = vec![f64::NEG_INFINITY; 2 * size];
+        tree[size..size + n].copy_from_slice(scores);
+        for i in (1..size).rev() {
+            tree[i] = tree[2 * i].max(tree[2 * i + 1]);
+        }
+        MaxScoreTree { size, n, tree }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Current score of index `i` — O(1).
+    #[inline]
+    pub fn score(&self, i: usize) -> f64 {
+        self.tree[self.size + i]
+    }
+
+    /// The maximum score — O(1).
+    #[inline]
+    pub fn max_score(&self) -> f64 {
+        self.tree[1]
+    }
+
+    /// Set the score of index `i` — O(log N), early-exits once an
+    /// ancestor's max is unchanged.
+    pub fn update(&mut self, i: usize, score: f64) {
+        assert!(i < self.n, "index {i} out of range {}", self.n);
+        debug_assert!(!score.is_nan(), "NaN score would poison the argmax");
+        let mut node = self.size + i;
+        self.tree[node] = score;
+        node >>= 1;
+        while node >= 1 {
+            let m = self.tree[2 * node].max(self.tree[2 * node + 1]);
+            if self.tree[node] == m {
+                break; // invariant holds here, hence on every ancestor
+            }
+            self.tree[node] = m;
+            node >>= 1;
+        }
+    }
+
+    /// Index of the maximum score — O(log N); ties resolve to the
+    /// lowest index (the same winner a first-wins linear scan picks).
+    pub fn argmax(&self) -> usize {
+        let mut node = 1usize;
+        while node < self.size {
+            node = if self.tree[2 * node] >= self.tree[2 * node + 1] {
+                2 * node
+            } else {
+                2 * node + 1
+            };
+        }
+        node - self.size
+    }
+}
+
+/// Fenwick (binary indexed) tree over non-negative weights, supporting
+/// point updates and sampling proportional to weight in O(log N), with
+/// a counted exact rebuild that cancels floating-point drift (see the
+/// module docs).
+#[derive(Debug, Clone)]
+pub struct WeightTree {
+    tree: Vec<f64>,
+    weights: Vec<f64>,
+    /// Point updates since the last exact rebuild.
+    updates: u64,
+    /// Rebuild period; scales with n so the amortized rebuild cost per
+    /// update stays O(1).
+    rebuild_every: u64,
+}
+
+impl WeightTree {
+    pub fn new(weights: &[f64]) -> WeightTree {
+        let n = weights.len();
+        for (i, &w) in weights.iter().enumerate() {
+            assert!(w >= 0.0, "negative weight {w} at {i}");
+        }
+        let mut t = WeightTree {
+            tree: vec![0.0; n + 1],
+            weights: weights.to_vec(),
+            updates: 0,
+            rebuild_every: (4 * n as u64).max(4096),
+        };
+        t.rebuild();
+        t
+    }
+
+    /// Override the rebuild period (tests exercise drift with a tiny
+    /// period; production code keeps the default).
+    pub fn with_rebuild_every(mut self, every: u64) -> WeightTree {
+        assert!(every > 0);
+        self.rebuild_every = every;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.prefix_sum(self.weights.len())
+    }
+
+    /// Sum of weights `[0, end)`.
+    pub fn prefix_sum(&self, end: usize) -> f64 {
+        let mut i = end;
+        let mut s = 0.0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+
+    /// Recompute every internal node exactly from the stored weights —
+    /// O(n). Called automatically every `rebuild_every` updates, so
+    /// delta-update rounding can never accumulate past one fresh
+    /// summation's worth of error.
+    pub fn rebuild(&mut self) {
+        let n = self.weights.len();
+        for (i, &w) in self.weights.iter().enumerate() {
+            self.tree[i + 1] = w;
+        }
+        // Classic O(n) Fenwick construction: fold each node into its
+        // parent range.
+        for i in 1..=n {
+            let j = i + (i & i.wrapping_neg());
+            if j <= n {
+                self.tree[j] += self.tree[i];
+            }
+        }
+        self.updates = 0;
+    }
+
+    /// Set weight of index `i`.
+    pub fn update(&mut self, i: usize, w: f64) {
+        assert!(w >= 0.0, "negative weight");
+        let delta = w - self.weights[i];
+        self.weights[i] = w;
+        let mut j = i + 1;
+        while j < self.tree.len() {
+            self.tree[j] += delta;
+            j += j & j.wrapping_neg();
+        }
+        self.updates += 1;
+        if self.updates >= self.rebuild_every {
+            self.rebuild();
+        }
+    }
+
+    pub fn weight(&self, i: usize) -> f64 {
+        self.weights[i]
+    }
+
+    /// Sample an index proportional to weight.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let total = self.total();
+        assert!(total > 0.0, "cannot sample from zero mass");
+        let mut target = rng.uniform() * total;
+        // Descend the implicit Fenwick structure.
+        let mut pos = 0usize;
+        let mut mask = self.tree.len().next_power_of_two() >> 1;
+        while mask > 0 {
+            let next = pos + mask;
+            if next < self.tree.len() && self.tree[next] < target {
+                target -= self.tree[next];
+                pos = next;
+            }
+            mask >>= 1;
+        }
+        pos.min(self.weights.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_tree_matches_linear_scan_under_updates() {
+        let mut rng = Rng::seeded(301);
+        for case in 0..20u64 {
+            let n = 1 + (case as usize * 7) % 70;
+            let mut scores: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+            let mut tree = MaxScoreTree::new(&scores);
+            for _ in 0..200 {
+                let i = rng.below(n);
+                let s = rng.uniform() * 10.0 - 5.0;
+                scores[i] = s;
+                tree.update(i, s);
+                // linear first-wins argmax
+                let mut best = 0usize;
+                for (j, &v) in scores.iter().enumerate() {
+                    if v > scores[best] {
+                        best = j;
+                    }
+                }
+                assert_eq!(tree.argmax(), best, "case {case}, n={n}");
+                assert_eq!(tree.max_score(), scores[best]);
+                assert_eq!(tree.score(i), s);
+            }
+        }
+    }
+
+    #[test]
+    fn max_tree_ties_resolve_to_lowest_index() {
+        let mut tree = MaxScoreTree::new(&[1.0, 3.0, 3.0, 2.0, 3.0]);
+        assert_eq!(tree.argmax(), 1);
+        tree.update(1, 0.0);
+        assert_eq!(tree.argmax(), 2);
+        tree.update(0, 3.0);
+        assert_eq!(tree.argmax(), 0, "equal score at a lower index wins");
+    }
+
+    #[test]
+    fn max_tree_single_leaf_and_padding() {
+        let tree = MaxScoreTree::new(&[0.25]);
+        assert_eq!(tree.argmax(), 0);
+        assert_eq!(tree.max_score(), 0.25);
+        // Non-power-of-two n: padding leaves (-inf) must never win.
+        let mut tree = MaxScoreTree::new(&[-7.0, -9.0, -8.0]);
+        assert_eq!(tree.argmax(), 0);
+        tree.update(0, -10.0);
+        assert_eq!(tree.argmax(), 2);
+    }
+
+    #[test]
+    fn weight_tree_prefix_and_total() {
+        let t = WeightTree::new(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.total(), 10.0);
+        assert_eq!(t.prefix_sum(2), 3.0);
+        assert_eq!(t.weight(2), 3.0);
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn weight_tree_update() {
+        let mut t = WeightTree::new(&[1.0, 1.0, 1.0]);
+        t.update(1, 5.0);
+        assert_eq!(t.total(), 7.0);
+        assert_eq!(t.weight(1), 5.0);
+    }
+
+    #[test]
+    fn weight_tree_sampling_proportional() {
+        let t = WeightTree::new(&[1.0, 0.0, 3.0, 6.0]);
+        let mut rng = Rng::seeded(151);
+        let mut counts = [0usize; 4];
+        let draws = 100_000;
+        for _ in 0..draws {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let f3 = counts[3] as f64 / draws as f64;
+        assert!((f3 - 0.6).abs() < 0.01, "f3={f3}");
+        let f0 = counts[0] as f64 / draws as f64;
+        assert!((f0 - 0.1).abs() < 0.01, "f0={f0}");
+    }
+
+    #[test]
+    fn weight_tree_rebuild_is_exact() {
+        let mut rng = Rng::seeded(302);
+        let weights: Vec<f64> = (0..37).map(|_| rng.uniform() * 5.0).collect();
+        let mut t = WeightTree::new(&weights);
+        let before: Vec<f64> = (0..=37).map(|i| t.prefix_sum(i)).collect();
+        t.rebuild();
+        // The exact build must agree with fresh summation of the weights.
+        for (end, b) in before.iter().enumerate() {
+            let exact: f64 = weights[..end].iter().sum();
+            assert!((t.prefix_sum(end) - exact).abs() < 1e-12);
+            assert!((b - exact).abs() < 1e-9, "pre-rebuild sums already close");
+        }
+    }
+
+    #[test]
+    fn weight_tree_drift_regression_under_hammering() {
+        // PR-5 regression: repeated large-magnitude update/draw cycles
+        // used to drift the Fenwick partial sums (total() could go
+        // slightly negative and break sampling). The counted rebuild
+        // bounds the drift; hammer the worst case — large cancelling
+        // deltas — and check total() stays glued to the exact sum.
+        let n = 8;
+        let mut weights = vec![1.0; n];
+        let mut t = WeightTree::new(&weights).with_rebuild_every(64);
+        let mut rng = Rng::seeded(303);
+        for round in 0..200_000u64 {
+            let i = rng.below(n);
+            let w = if round % 2 == 0 { 1e16 * rng.uniform() } else { 1e-16 * rng.uniform() };
+            weights[i] = w;
+            t.update(i, w);
+            let _ = t.sample(&mut rng); // must never hit the zero-mass assert
+            if round % 4096 == 0 {
+                let exact: f64 = weights.iter().sum();
+                let err = (t.total() - exact).abs();
+                assert!(
+                    err <= 1e-9 * exact.max(1.0),
+                    "round {round}: drift {err} vs exact {exact}"
+                );
+            }
+        }
+        let exact: f64 = weights.iter().sum();
+        assert!((t.total() - exact).abs() <= 1e-9 * exact.max(1.0));
+        assert!(t.total() >= 0.0, "total must never go negative");
+    }
+
+    #[test]
+    #[should_panic]
+    fn weight_tree_rejects_negative_weights() {
+        let mut t = WeightTree::new(&[1.0, 1.0]);
+        t.update(0, -0.5);
+    }
+}

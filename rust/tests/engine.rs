@@ -4,7 +4,7 @@
 //! sweep grid through the declarative API.
 
 use pagerank_mp::algo::common::PageRankSolver;
-use pagerank_mp::coordinator::{Packer, ShardMap};
+use pagerank_mp::coordinator::{Packer, Sampling, ShardMap};
 use pagerank_mp::engine::{
     CoordinatorSolver, EstimatorSpec, GraphSpec, ReferencePolicy, Scenario, ScenarioReport,
     ShardedSolver, SolverSpec, Sweep,
@@ -256,6 +256,85 @@ fn one_shard_sharded_scenario_matches_matrix_mp() {
 }
 
 #[test]
+fn one_shard_residual_sharded_matches_matrix_residual_mp() {
+    // The residual-sampling equivalence anchor, pinned for BOTH packers:
+    // at shards=1 batch=1, the global and per-shard weight trees are the
+    // same tree over the same stream (worker 0 clones the Scenario rng),
+    // weight refreshes walk the same ascending-page order, and the
+    // BColumns arithmetic is shared — so both sharded residual policies
+    // replay `mp:residual` exactly.
+    let report = small(
+        "sharded-residual-vs-mp",
+        vec![
+            SolverSpec::parse("mp:residual").expect("registry"),
+            SolverSpec::parse("sharded:1:1:mod:leader:residual").expect("registry"),
+            SolverSpec::parse("sharded:1:1:mod:worker:residual").expect("registry"),
+        ],
+    )
+    .run()
+    .expect("runs");
+    let rmp = report.get("mp:residual").expect("mp:residual ran");
+    for key in [
+        "sharded:1:1:mod:leader:residual",
+        "sharded:1:1:mod:worker:residual",
+    ] {
+        let sh = report.get(key).expect("sharded residual ran");
+        assert_eq!(
+            rmp.total_stats, sh.total_stats,
+            "{key}: identical activation sequences must cost the same"
+        );
+        for (a, b) in rmp.trajectory.mean.iter().zip(&sh.trajectory.mean) {
+            assert!(
+                (a - b).abs() <= 1e-9 * a.abs() + 1e-30,
+                "{key}: trajectories diverged: {a} vs {b}"
+            );
+        }
+        assert_eq!(sh.conflicts, 0, "{key}: a single candidate can never conflict");
+    }
+}
+
+#[test]
+fn residual_mp_reaches_the_exact_fixed_point_on_every_family() {
+    // ER (homogeneous), BA (hub-heavy — where importance sampling pays),
+    // chain (genuine dangling sink): the floored residual weighting must
+    // converge to the same exact_pagerank fixed point as uniform mp.
+    for (family, g, steps) in [
+        ("er", generators::erdos_renyi(60, 0.1, 81), 180_000usize),
+        ("ba", generators::barabasi_albert(60, 4, 82), 180_000),
+        ("chain", generators::chain(30), 90_000),
+    ] {
+        let x_star = exact_pagerank(&g, 0.85);
+        let spec = SolverSpec::parse("mp:residual").expect("registry");
+        let mut solver = spec.build(&g, 0.85, 83);
+        let mut rng = Rng::seeded(84);
+        for _ in 0..steps {
+            solver.step(&mut rng);
+        }
+        let err = solver.error_sq_vs(&x_star);
+        assert!(err < 1e-10, "{family}: ‖x-x*‖² = {err}");
+    }
+}
+
+#[test]
+fn residual_sharded_converges_and_races_in_a_scenario() {
+    // The multi-shard residual policy inside the declarative API: it
+    // must converge, count conflicts on a dense graph, and report the
+    // same deterministic totals across thread counts.
+    let scenario = small(
+        "sharded-residual",
+        vec![SolverSpec::parse("sharded:2:8:mod:worker:residual").expect("registry")],
+    );
+    let a = scenario.run().expect("runs");
+    let b = scenario.clone().with_threads(1).run().expect("runs");
+    let (ra, rb) = (&a.solver_reports()[0], &b.solver_reports()[0]);
+    assert!(ra.final_error < ra.trajectory.mean[0], "no progress");
+    assert!(ra.conflicts > 0, "dense paper graph must drop candidates");
+    assert_eq!(ra.trajectory.mean, rb.trajectory.mean, "thread-count invariance");
+    assert_eq!(ra.total_stats, rb.total_stats);
+    assert_eq!(ra.conflicts, rb.conflicts);
+}
+
+#[test]
 fn both_packers_reach_the_exact_fixed_point_on_every_family() {
     // ER (homogeneous), BA (hub-heavy), chain (genuine dangling sink):
     // leader- and worker-packed runs must both converge to the same
@@ -268,7 +347,8 @@ fn both_packers_reach_the_exact_fixed_point_on_every_family() {
     ] {
         let x_star = exact_pagerank(&g, 0.85);
         for packer in [Packer::Leader, Packer::Worker] {
-            let mut sh = ShardedSolver::new(&g, 0.85, 3, 8, ShardMap::Modulo, packer);
+            let mut sh =
+                ShardedSolver::new(&g, 0.85, 3, 8, ShardMap::Modulo, packer, Sampling::Uniform);
             let mut rng = Rng::seeded(73);
             let (mut reads, mut writes) = (0usize, 0usize);
             for _ in 0..steps {
@@ -295,7 +375,8 @@ fn packer_counters_are_deterministic_in_the_seed() {
     let g = generators::er_threshold(60, 0.4, 74);
     for packer in [Packer::Leader, Packer::Worker] {
         let run = || {
-            let mut sh = ShardedSolver::new(&g, 0.85, 4, 16, ShardMap::Modulo, packer);
+            let mut sh =
+                ShardedSolver::new(&g, 0.85, 4, 16, ShardMap::Modulo, packer, Sampling::Uniform);
             let mut rng = Rng::seeded(75);
             let mut activated = 0usize;
             for _ in 0..2_000 {

@@ -10,7 +10,13 @@
 //!   activations/s into the machine-readable `BENCH_throughput.json`
 //!   (the leader packer flattens once its serial sample+scan+route loop
 //!   saturates; the worker packer keeps scaling; residual sampling pays
-//!   the weight-tree refresh for fewer activations to a given error).
+//!   the weight-tree refresh for fewer activations to a given error),
+//! * **msgpass-sweep**: the message-passing backend raced to a fixed
+//!   residual ε against the shared-memory worker packer on the same
+//!   {1,2,4,8}-shard grid, recording messages sent, bytes on the wire,
+//!   peak queue depth and virtual-time-to-ε into `BENCH_network.json`
+//!   (the communication-cost ledger the sharded runtime, reading shared
+//!   memory for free, cannot produce).
 //!
 //! All solvers are named and built through the engine registry — the
 //! bench measures exactly what a `Scenario` would run.
@@ -18,15 +24,17 @@
 //! `cargo bench --bench throughput`. Env knobs:
 //! `PAGERANK_BENCH_QUICK=1` shrinks every section to a CI smoke size;
 //! `THROUGHPUT_ONLY=sharded-sweep` runs only the leader-saturation
-//! section (what CI does on every push to keep the `bench-json`
-//! artifact fed).
+//! section, `THROUGHPUT_ONLY=network-sweep` only the msgpass race (CI
+//! runs both on every push to keep the `bench-json` artifact fed).
 
 use std::collections::BTreeMap;
 
 use pagerank_mp::algo::common::PageRankSolver;
-use pagerank_mp::coordinator::{Packer, Sampling, ShardMap};
+use pagerank_mp::coordinator::{MsgpassRuntime, Packer, Sampling, ShardMap};
 use pagerank_mp::engine::{CoordinatorSolver, ShardedSolver, SolverSpec};
 use pagerank_mp::graph::generators;
+use pagerank_mp::linalg::vector;
+use pagerank_mp::network::LatencyModel;
 use pagerank_mp::util::bench;
 use pagerank_mp::util::json::Json;
 use pagerank_mp::util::rng::Rng;
@@ -129,10 +137,179 @@ fn sharded_saturation_sweep(quick: bool) {
     println!("wrote {}", out.display());
 }
 
+/// One msgpass cell of the network race: run to the scaled residual
+/// target `(1/N)‖r‖² ≤ eps` and report the communication ledger alongside
+/// throughput. `spec_key` carries a `+exp0.1`-style suffix for non-zero
+/// latency variants (an artifact key, not a registry key — the registry
+/// always builds msgpass at zero latency).
+fn msgpass_race_cell(
+    g: &pagerank_mp::graph::Graph,
+    shards: usize,
+    batch: usize,
+    latency: LatencyModel,
+    latency_key: &str,
+    eps: f64,
+    max_super_steps: usize,
+) -> Json {
+    let spec_key = if matches!(latency, LatencyModel::Zero) {
+        format!("msgpass:{shards}:{batch}:mod")
+    } else {
+        format!("msgpass:{shards}:{batch}:mod+{latency_key}")
+    };
+    let mut rt = MsgpassRuntime::new(g.clone(), 0.85, shards, batch, ShardMap::Modulo, 8, latency);
+    let mut rng = Rng::seeded(17);
+    let t0 = std::time::Instant::now();
+    let super_steps = rt.run_to_residual(eps, max_super_steps, &mut rng);
+    let wall = t0.elapsed();
+    let converged = rt.residual_norm_sq() / g.n() as f64 <= eps;
+    if !converged {
+        println!("  WARNING: {spec_key} hit the {max_super_steps}-super-step cap before eps");
+    }
+    let acts_per_sec = rt.activations() as f64 / wall.as_secs_f64();
+    println!(
+        "{spec_key:<30} {super_steps:>6} super-steps  msgs {:>9}  bytes {:>11}  \
+         vtime {:>9.1}  {:>10}/s",
+        rt.messages_sent(),
+        rt.bytes_on_wire(),
+        rt.virtual_time(),
+        bench::format_count(acts_per_sec),
+    );
+    let mut cell = BTreeMap::new();
+    cell.insert("spec".to_string(), Json::String(spec_key));
+    cell.insert("backend".to_string(), Json::String("msgpass".to_string()));
+    cell.insert("shards".to_string(), Json::Number(shards as f64));
+    cell.insert("batch".to_string(), Json::Number(batch as f64));
+    cell.insert("latency".to_string(), Json::String(latency_key.to_string()));
+    cell.insert("eps".to_string(), Json::Number(eps));
+    cell.insert("converged".to_string(), Json::Bool(converged));
+    cell.insert("super_steps".to_string(), Json::Number(super_steps as f64));
+    cell.insert("activations".to_string(), Json::Number(rt.activations() as f64));
+    cell.insert("wall_ms".to_string(), Json::Number(wall.as_secs_f64() * 1e3));
+    cell.insert("acts_per_sec".to_string(), Json::Number(acts_per_sec));
+    cell.insert("messages_sent".to_string(), Json::Number(rt.messages_sent() as f64));
+    cell.insert("bytes_on_wire".to_string(), Json::Number(rt.bytes_on_wire() as f64));
+    cell.insert("vtime_to_eps".to_string(), Json::Number(rt.virtual_time()));
+    cell.insert("peak_queue_depth".to_string(), Json::Number(rt.peak_queue_depth() as f64));
+    cell.insert("peak_in_flight".to_string(), Json::Number(rt.peak_in_flight() as f64));
+    Json::Object(cell)
+}
+
+/// The shared-memory opponent in the network race: the worker-packing
+/// sharded runtime driven to the same residual target. It sends no
+/// messages (shards read each other through shared memory), so its wire
+/// columns are zero and its virtual-time-to-ε is the idealized lockstep
+/// count — one time unit per super-step.
+fn sharded_race_cell(
+    g: &pagerank_mp::graph::Graph,
+    shards: usize,
+    batch: usize,
+    eps: f64,
+    max_super_steps: usize,
+) -> Json {
+    let spec_key = format!("sharded:{shards}:{batch}:mod:worker");
+    let n = g.n() as f64;
+    let (packer, sampling) = (Packer::Worker, Sampling::Uniform);
+    let mut sh = ShardedSolver::new(g, 0.85, shards, batch, ShardMap::Modulo, packer, sampling);
+    let mut rng = Rng::seeded(17);
+    let mut super_steps = 0usize;
+    let t0 = std::time::Instant::now();
+    while super_steps < max_super_steps && vector::norm2_sq(&sh.runtime().residual()) / n > eps {
+        sh.step(&mut rng);
+        super_steps += 1;
+    }
+    let wall = t0.elapsed();
+    let converged = vector::norm2_sq(&sh.runtime().residual()) / n <= eps;
+    if !converged {
+        println!("  WARNING: {spec_key} hit the {max_super_steps}-super-step cap before eps");
+    }
+    let applied = sh.runtime().activations();
+    let acts_per_sec = applied as f64 / wall.as_secs_f64();
+    println!(
+        "{spec_key:<30} {super_steps:>6} super-steps  msgs {:>9}  bytes {:>11}  \
+         vtime {:>9.1}  {:>10}/s",
+        0,
+        0,
+        super_steps as f64,
+        bench::format_count(acts_per_sec),
+    );
+    let mut cell = BTreeMap::new();
+    cell.insert("spec".to_string(), Json::String(spec_key));
+    cell.insert("backend".to_string(), Json::String("sharded".to_string()));
+    cell.insert("shards".to_string(), Json::Number(shards as f64));
+    cell.insert("batch".to_string(), Json::Number(batch as f64));
+    cell.insert("latency".to_string(), Json::String("shared-memory".to_string()));
+    cell.insert("eps".to_string(), Json::Number(eps));
+    cell.insert("converged".to_string(), Json::Bool(converged));
+    cell.insert("super_steps".to_string(), Json::Number(super_steps as f64));
+    cell.insert("activations".to_string(), Json::Number(applied as f64));
+    cell.insert("conflicts".to_string(), Json::Number(sh.conflicts() as f64));
+    cell.insert("wall_ms".to_string(), Json::Number(wall.as_secs_f64() * 1e3));
+    cell.insert("acts_per_sec".to_string(), Json::Number(acts_per_sec));
+    cell.insert("messages_sent".to_string(), Json::Number(0.0));
+    cell.insert("bytes_on_wire".to_string(), Json::Number(0.0));
+    cell.insert("vtime_to_eps".to_string(), Json::Number(super_steps as f64));
+    cell.insert("peak_queue_depth".to_string(), Json::Number(0.0));
+    cell.insert("peak_in_flight".to_string(), Json::Number(0.0));
+    Json::Object(cell)
+}
+
+/// The msgpass-vs-sharded network race (ISSUE 6): both backends driven to
+/// the same scaled residual ε on the same sparse graph over the
+/// {1,2,4,8}-shard grid, plus exponential-latency msgpass variants (at
+/// one shard latency is moot — no messages exist — so the variant is
+/// skipped there). Dumps `BENCH_network.json` for the CI artifact and
+/// `scripts/bench_diff`.
+fn network_msgpass_sweep(quick: bool) {
+    println!("\n=== network race: msgpass vs sharded to residual eps ===");
+    let (n, batch, eps, max_super_steps) = if quick {
+        (2_000usize, 64usize, 1e-6f64, 20_000usize)
+    } else {
+        (20_000, 256, 1e-8, 100_000)
+    };
+    let g = generators::erdos_renyi(n, 8.0 / n as f64, 12);
+    let graph_key = format!("er-sparse N={n} deg~8");
+    let mut cells = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let zero = LatencyModel::Zero;
+        cells.push(msgpass_race_cell(&g, shards, batch, zero, "zero", eps, max_super_steps));
+    }
+    for shards in [2usize, 4, 8] {
+        cells.push(msgpass_race_cell(
+            &g,
+            shards,
+            batch,
+            LatencyModel::Exponential { mean: 0.1 },
+            "exp0.1",
+            eps,
+            max_super_steps,
+        ));
+    }
+    for shards in [1usize, 2, 4, 8] {
+        cells.push(sharded_race_cell(&g, shards, batch, eps, max_super_steps));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::String("throughput.network_sweep".to_string()));
+    doc.insert("graph".to_string(), Json::String(graph_key));
+    doc.insert("batch".to_string(), Json::Number(batch as f64));
+    doc.insert("eps".to_string(), Json::Number(eps));
+    doc.insert("cells".to_string(), Json::Array(cells));
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package sits inside the repo")
+        .join("BENCH_network.json");
+    pagerank_mp::harness::report::write_file(&out, &Json::Object(doc).render())
+        .expect("write BENCH_network.json");
+    println!("wrote {}", out.display());
+}
+
 fn main() {
     let quick = bench::quick_mode();
     if std::env::var("THROUGHPUT_ONLY").as_deref() == Ok("sharded-sweep") {
         sharded_saturation_sweep(quick);
+        return;
+    }
+    if std::env::var("THROUGHPUT_ONLY").as_deref() == Ok("network-sweep") {
+        network_msgpass_sweep(quick);
         return;
     }
     let mut b = bench::standard();
@@ -224,6 +401,7 @@ fn main() {
     }
 
     sharded_saturation_sweep(quick);
+    network_msgpass_sweep(quick);
 
     println!("\n{}", b.to_csv());
     pagerank_mp::harness::report::write_file(

@@ -74,15 +74,18 @@ impl<'g> IshiiTempo<'g> {
     pub fn step_at(&mut self, i: usize) {
         let g = self.graph;
         let n = g.n();
-        // A_i x: page i distributes its mass to its out-neighbours.
-        let deg = g.out_degree(i) as f64;
-        let share = self.x[i] / deg;
-        let xi = self.x[i];
-        self.x[i] = 0.0;
-        for &j in g.out(i) {
-            self.x[j as usize] += share;
+        // A_i x: page i distributes its mass to its out-neighbours. A
+        // dangling i carries the shared implicit self-loop (the repaired
+        // hyperlink matrix has A_ii = 1, N_i = 1), so its mass stays put
+        // — the link-matrix part is the identity and only damping acts.
+        if g.out_degree(i) > 0 {
+            let deg = g.out_degree(i) as f64;
+            let share = self.x[i] / deg;
+            self.x[i] = 0.0;
+            for &j in g.out(i) {
+                self.x[j as usize] += share;
+            }
         }
-        let _ = xi;
         // Damping toward the scaled teleport direction. Σx is invariant
         // under A_i (column stochastic), and under the full update too.
         let total: f64 = crate::linalg::vector::sum(&self.x);
@@ -244,6 +247,25 @@ mod tests {
         let it = IshiiTempo::new(&g, 0.85);
         let want = 0.15 / (0.85 * 10.0 + 0.15);
         assert!((it.alpha_hat() - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn dangling_chain_stays_finite_and_contracts() {
+        // chain(12) ends in a genuine sink. The implicit self-loop keeps
+        // the link matrix column-stochastic (mass parks at the sink), so
+        // the iterate stays finite and the average still contracts
+        // toward the repaired-matrix fixed point.
+        let g = generators::chain(12);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut it = IshiiTempo::new(&g, 0.85);
+        let mut rng = Rng::seeded(58);
+        let e0 = vector::dist_sq(&it.estimate(), &x_star);
+        for _ in 0..20_000 {
+            it.step(&mut rng);
+        }
+        assert!(it.estimate().iter().all(|v| v.is_finite()), "sink poisoned the iterate");
+        let e1 = vector::dist_sq(&it.estimate(), &x_star);
+        assert!(e1 < 0.5 * e0, "no progress on the sink chain: {e0} -> {e1}");
     }
 
     #[test]

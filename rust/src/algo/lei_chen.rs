@@ -50,6 +50,12 @@ impl<'g> LeiChen<'g> {
         for &j in self.graph.inc(i) {
             s += self.x[j as usize] / self.graph.out_degree(j as usize) as f64;
         }
+        if self.graph.out_degree(i) == 0 {
+            // The shared implicit self-loop of a dangling page (N_i = 1):
+            // its own value feeds the target, absent from the CSR
+            // in-list.
+            s += self.x[i];
+        }
         self.alpha * s + (1.0 - self.alpha)
     }
 
@@ -138,6 +144,29 @@ mod tests {
         assert!(e1 < 0.1 * e0, "no progress {e0} -> {e1}");
         // but far from the exponential floor MP reaches in the same budget
         assert!(e1 > 1e-10, "SA should not be at machine precision");
+    }
+
+    #[test]
+    fn dangling_chain_progresses_toward_the_repaired_fixed_point() {
+        // chain(12)'s sink target folds the implicit self-loop in, so
+        // the repaired x* is stationary and SA contracts toward it.
+        let g = generators::chain(12);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut stationary = LeiChen::new(&g, 0.85);
+        stationary.x = x_star.clone();
+        for i in 0..12 {
+            stationary.step_at(i);
+        }
+        assert!(vector::dist_inf(&stationary.x, &x_star) < 1e-10);
+        let mut lc = LeiChen::new(&g, 0.85);
+        let mut rng = Rng::seeded(75);
+        let e0 = vector::dist_sq(&lc.estimate(), &x_star) / 12.0;
+        for _ in 0..30_000 {
+            lc.step(&mut rng);
+        }
+        let e1 = vector::dist_sq(&lc.estimate(), &x_star) / 12.0;
+        assert!(lc.estimate().iter().all(|v| v.is_finite()));
+        assert!(e1 < 0.1 * e0, "no progress on the sink chain: {e0} -> {e1}");
     }
 
     #[test]

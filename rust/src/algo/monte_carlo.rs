@@ -69,7 +69,11 @@ impl<'g> MonteCarlo<'g> {
             for &p in &frontier {
                 if rng.bernoulli(self.alpha) {
                     let out = self.graph.out(p as usize);
-                    let dst = out[rng.below(out.len())];
+                    // A dangling page carries the shared implicit
+                    // self-loop: the walk parks there (no neighbour
+                    // draw), matching the repaired hyperlink matrix the
+                    // exact reference is computed from.
+                    let dst = if out.is_empty() { p } else { out[rng.below(out.len())] };
                     self.visits[dst as usize] += 1;
                     report.total_hops += 1;
                     next.push(dst);
@@ -214,6 +218,24 @@ mod tests {
         }
         let per_walk = hops as f64 / (rounds * 20) as f64;
         assert!((per_walk - 0.85 / 0.15).abs() < 0.3, "per_walk={per_walk}");
+    }
+
+    #[test]
+    fn dangling_chain_walks_park_at_the_sink() {
+        // chain(12)'s last page has no out-links; the self-loop parks
+        // walkers instead of panicking on an empty neighbour draw, and
+        // the estimate matches the repaired-matrix reference.
+        let g = generators::chain(12);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut mc = MonteCarlo::new(&g, 0.85);
+        let mut rng = Rng::seeded(88);
+        for _ in 0..4000 {
+            mc.round(&mut rng);
+        }
+        let est = mc.estimate();
+        assert!(est.iter().all(|v| v.is_finite()));
+        let err = vector::dist_inf(&est, &x_star);
+        assert!(err < 0.2, "err={err}");
     }
 
     #[test]

@@ -35,12 +35,16 @@ impl<'g> YouTempoQiu<'g> {
         let n = graph.n();
         let mut row_norms_sq = Vec::with_capacity(n);
         for i in 0..n {
-            let aii = if graph.has_self_loop(i) {
+            // A dangling i carries the shared implicit self-loop (N_i =
+            // 1, A_ii = 1); it is not in the CSR, so fold it in here.
+            let aii = if graph.out_degree(i) == 0 {
+                1.0
+            } else if graph.has_self_loop(i) {
                 1.0 / graph.out_degree(i) as f64
             } else {
                 0.0
             };
-            let mut s = 0.0;
+            let mut s = if graph.out_degree(i) == 0 { 1.0 } else { 0.0 };
             for &j in graph.inc(i) {
                 let nj = graph.out_degree(j as usize) as f64;
                 s += 1.0 / (nj * nj);
@@ -56,11 +60,15 @@ impl<'g> YouTempoQiu<'g> {
         }
     }
 
-    /// `B(i,:) x = x_i - α Σ_{j∈in(i)} x_j/N_j` — reads in-neighbours.
+    /// `B(i,:) x = x_i - α Σ_{j∈in(i)} x_j/N_j` — reads in-neighbours
+    /// (plus `i` itself when the implicit dangling self-loop is live).
     fn row_dot(&self, i: usize) -> f64 {
         let mut s = 0.0;
         for &j in self.graph.inc(i) {
             s += self.x[j as usize] / self.graph.out_degree(j as usize) as f64;
+        }
+        if self.graph.out_degree(i) == 0 {
+            s += self.x[i];
         }
         self.x[i] - self.alpha * s
     }
@@ -75,8 +83,13 @@ impl<'g> YouTempoQiu<'g> {
             let nj = self.graph.out_degree(j as usize) as f64;
             self.x[j as usize] -= coef * self.alpha / nj;
         }
-        self.x[i] += coef; // diagonal entry 1 (self-loop already folded in
-                           // via in(i) containing i in that case)
+        self.x[i] += coef; // diagonal entry 1 (explicit self-loops are
+                           // already folded in via in(i) containing i)
+        if self.graph.out_degree(i) == 0 {
+            // The implicit dangling self-loop's -α/N_i = -α share of the
+            // row, absent from the CSR in-list.
+            self.x[i] -= coef * self.alpha;
+        }
         self.t += 1;
         coef
     }
@@ -194,6 +207,41 @@ mod tests {
         let avg = crate::util::stats::average_trajectories(&rounds);
         let rate = crate::util::stats::decay_rate(&avg);
         assert!(rate < 0.95, "should be exponential per record: {rate}");
+    }
+
+    #[test]
+    fn dangling_chain_converges_to_the_repaired_fixed_point() {
+        // chain(12)'s sink row folds the implicit self-loop into the
+        // norm, the row dot and the projection; Kaczmarz then converges
+        // to the same repaired-matrix solution as every other backend.
+        let g = generators::chain(12);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut ytq = YouTempoQiu::new(&g, 0.85);
+        let mut rng = Rng::seeded(69);
+        for _ in 0..60_000 {
+            ytq.step(&mut rng);
+        }
+        assert!(ytq.estimate().iter().all(|v| v.is_finite()));
+        let err = vector::dist_inf(&ytq.estimate(), &x_star);
+        assert!(err < 1e-8, "err={err}");
+    }
+
+    #[test]
+    fn dangling_row_norms_match_dense() {
+        // row_norms_match_dense, but on a graph with a genuine sink —
+        // DenseMatrix::b_matrix applies the same implicit repair.
+        let g = generators::chain(8);
+        let alpha = 0.85;
+        let ytq = YouTempoQiu::new(&g, alpha);
+        let bt = DenseMatrix::b_matrix(&g, alpha).transpose();
+        for i in 0..8 {
+            let want = vector::norm2_sq(bt.col(i));
+            assert!(
+                (ytq.row_norms_sq[i] - want).abs() < 1e-12,
+                "row {i}: {} vs {want}",
+                ytq.row_norms_sq[i]
+            );
+        }
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! `bench_diff` — diff two perf artifacts and flag regressions.
 //!
 //! Compares a baseline and a candidate `BENCH_scenario.json`,
-//! `BENCH_sweep.json` or `BENCH_throughput.json` (the three artifacts CI
-//! uploads as `bench-json` on every push) and prints one line per metric
+//! `BENCH_sweep.json`, `BENCH_throughput.json` or `BENCH_network.json`
+//! (the artifacts CI uploads as `bench-json` on every push) and prints
+//! one line per metric
 //! that moved past the threshold. Exit code 1 when a regression is
 //! found, 0 otherwise — the CI step runs it advisory
 //! (`continue-on-error`), humans run it via `scripts/bench_diff`.
@@ -23,6 +24,12 @@
 //! * `final_size_rel_err` — smaller is better (size-estimation runs:
 //!   the mean relative error of the per-page network-size estimates).
 //! * `acts_per_sec` — larger is better (throughput sweep cells).
+//! * `vtime_to_eps` — smaller is better (network race cells: virtual
+//!   time to drive the scaled residual to the artifact's ε).
+//! * `bytes_on_wire` — smaller is better (network race cells: total
+//!   bytes the msgpass transport metered before reaching ε; fixed at 0
+//!   for the shared-memory sharded opponent, so only msgpass cells can
+//!   regress on it).
 //!
 //! `wall_ms` is deliberately ignored (CI runner noise); `null` decay
 //! rates (diverged/instant-converged trajectories, see docs/ENGINE.md)
@@ -43,6 +50,8 @@ struct Row {
     final_error: Option<f64>,
     final_size_rel_err: Option<f64>,
     acts_per_sec: Option<f64>,
+    vtime_to_eps: Option<f64>,
+    bytes_on_wire: Option<f64>,
 }
 
 fn finite(v: Option<&Json>) -> Option<f64> {
@@ -58,6 +67,8 @@ fn run_row(s: &Json) -> Row {
         final_error: finite(s.get("final_error")),
         final_size_rel_err: finite(s.get("final_size_rel_err")),
         acts_per_sec: finite(s.get("acts_per_sec")),
+        vtime_to_eps: finite(s.get("vtime_to_eps")),
+        bytes_on_wire: finite(s.get("bytes_on_wire")),
     }
 }
 
@@ -74,9 +85,10 @@ fn extract(doc: &Json) -> Result<BTreeMap<String, Row>, String> {
     let mut rows = BTreeMap::new();
     if doc.get("cells").is_some() {
         // BENCH_sweep.json (cells have "solvers"/"estimators") or
-        // BENCH_throughput.json (cells have "spec" + "acts_per_sec" —
-        // keyed by the full registry spec, so new cell kinds like the
-        // sampling-policy sweep land in the diff automatically).
+        // BENCH_throughput.json / BENCH_network.json (cells have "spec"
+        // + metric fields — keyed by the full registry spec, so new
+        // cell kinds like the sampling-policy sweep or the msgpass
+        // network race land in the diff automatically).
         for (i, cell) in doc
             .get("cells")
             .and_then(Json::as_array)
@@ -220,6 +232,8 @@ fn run(old_path: &str, new_path: &str, threshold: f64) -> Result<Vec<String>, St
                 true,
             ),
             check(key, "acts_per_sec", o.acts_per_sec, n.acts_per_sec, threshold, false),
+            check(key, "vtime_to_eps", o.vtime_to_eps, n.vtime_to_eps, threshold, true),
+            check(key, "bytes_on_wire", o.bytes_on_wire, n.bytes_on_wire, threshold, true),
         ]
         .into_iter()
         .flatten()
@@ -421,6 +435,59 @@ mod tests {
 
         let err_up = check("k", "final_error", Some(1e-9), Some(1e-7), 0.15, true);
         assert!(err_up.is_some());
+    }
+
+    /// A trimmed-down `BENCH_network.json` fixture: one msgpass cell
+    /// (with the wire ledger) and its shared-memory sharded opponent.
+    fn network_doc(bytes: f64, vtime: f64) -> String {
+        format!(
+            r#"{{"bench": "throughput.network_sweep", "eps": 1e-6, "cells": [
+                 {{"spec": "msgpass:4:64:mod", "backend": "msgpass", "shards": 4,
+                   "latency": "zero", "converged": true, "super_steps": 900,
+                   "acts_per_sec": 1e6, "messages_sent": 5000,
+                   "bytes_on_wire": {bytes}, "vtime_to_eps": {vtime},
+                   "peak_queue_depth": 12, "peak_in_flight": 3}},
+                 {{"spec": "sharded:4:64:mod:worker", "backend": "sharded", "shards": 4,
+                   "latency": "shared-memory", "converged": true, "super_steps": 900,
+                   "acts_per_sec": 2e6, "messages_sent": 0,
+                   "bytes_on_wire": 0, "vtime_to_eps": 900,
+                   "peak_queue_depth": 0, "peak_in_flight": 0}}]}}"#
+        )
+    }
+
+    #[test]
+    fn network_artifact_diffs_bytes_and_vtime_to_eps() {
+        let dir = std::env::temp_dir().join(format!("bench_diff_net_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let old = dir.join("old.json");
+        let new = dir.join("new.json");
+        std::fs::write(&old, network_doc(8.0e4, 950.0)).expect("write");
+        // Candidate ships 50% more bytes and 30% more virtual time to
+        // the same eps — both lower-is-better metrics must flag.
+        std::fs::write(&new, network_doc(1.2e5, 1235.0)).expect("write");
+        let findings = run(
+            old.to_str().expect("utf8"),
+            new.to_str().expect("utf8"),
+            0.15,
+        )
+        .expect("network shape diffs");
+        assert_eq!(findings.len(), 2, "{findings:?}");
+        assert!(findings.iter().any(|f| f.contains("bytes_on_wire")), "{findings:?}");
+        assert!(findings.iter().any(|f| f.contains("vtime_to_eps")), "{findings:?}");
+        assert!(
+            findings.iter().all(|f| f.contains("msgpass:4:64:mod")),
+            "the zero-byte sharded opponent must not flag: {findings:?}"
+        );
+        // Identical artifacts diff clean (the sharded cell's 0-byte
+        // ledger must not divide by zero into a phantom regression).
+        let clean = run(
+            old.to_str().expect("utf8"),
+            old.to_str().expect("utf8"),
+            0.15,
+        )
+        .expect("runs");
+        assert!(clean.is_empty(), "{clean:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

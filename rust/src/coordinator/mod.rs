@@ -25,15 +25,24 @@
 //!   [`crate::algo::parallel_mp`]), conflicting ones are deferred and
 //!   retried, and the achieved overlap is reported.
 
+//!
+//! A third execution model lives in [`msgpass`]: shards (not pages) as
+//! the unit of distribution, communicating *only* by metered messages
+//! over [`crate::network::transport`] — residual-update fan-out plus
+//! weight-summary gossip — so the wire cost of the algorithm (messages,
+//! bytes, queue depths, virtual time) is measured rather than idealized.
+
 pub mod agents;
 pub mod config;
 pub mod leader;
 pub mod messages;
 pub mod metrics;
+pub mod msgpass;
 pub mod sampler;
 pub mod sharded;
 
 pub use config::{CoordinatorConfig, Mode};
 pub use leader::{Coordinator, RunReport};
+pub use msgpass::MsgpassRuntime;
 pub use sampler::SamplerKind;
 pub use sharded::{Packer, Sampling, ShardMap, ShardedRuntime};

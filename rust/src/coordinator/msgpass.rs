@@ -1,0 +1,699 @@
+//! The message-passing distributed backend: per-shard event loops over
+//! the virtual-time network, communicating **only by messages**.
+//!
+//! Where [`super::sharded`] is a real multi-threaded deployment over
+//! *shared memory* (every worker reads the one residual array, and the
+//! PR-5 residual samplers consult idealized global/per-shard weight
+//! trees), [`MsgpassRuntime`] models what the same algorithm costs on a
+//! wire. Each shard owns a page partition ([`ShardMap`]), keeps a
+//! full-length *replica* of the residual vector, and runs an event loop
+//! over the shared [`Transport`]:
+//!
+//! * **Activation** (a `Wake` event): the shard draws one owned page `k`
+//!   uniformly from its own stream, computes the eq. 7/8 projection
+//!   against its replica (stale for unowned pages under latency), applies
+//!   it locally, and pushes one [`Msg::ResidualUpdate`] per touched page
+//!   `j ∈ {k} ∪ out(k)` to every *subscriber* shard of `j` — the owners
+//!   of `{j} ∪ in(j)`, i.e. exactly the shards that will ever read or
+//!   own `r_j`. This is the paper's §II-D write fan-out aggregated to
+//!   shard granularity.
+//! * **Gossip**: every `gossip` activations a shard broadcasts a
+//!   [`Msg::WeightSummary`] carrying its residual-weight tree total.
+//!   The allocator splits each super-step's `batch` activation slots
+//!   across shards proportionally to the *most recently delivered*
+//!   summaries, decayed toward the floor with a half-life of one gossip
+//!   interval — so cross-shard load follows residual mass using only
+//!   gossiped (stale, metered) information, never a global view.
+//!
+//! Within a shard, page selection stays **uniform** over owned pages:
+//! that is what makes `msgpass:1:1:mod` with zero latency replay
+//! [`crate::algo::mp::MatchingPursuit`] *bit for bit* under the scenario
+//! rng protocol (worker 0 clones the caller's stream verbatim, exactly
+//! like the sharded runtime — pinned in `tests/engine.rs`). The weight
+//! trees and gossip only steer *how many* slots each shard gets when
+//! `shards > 1`.
+//!
+//! Every activation takes one unit of virtual time on its shard's event
+//! loop (shards proceed in parallel), so `virtual_time()` measures the
+//! parallel makespan: more shards ⇒ fewer serial slots per shard ⇒ less
+//! virtual time per super-step, while the transport meters what that
+//! parallelism costs in messages and bytes.
+
+use crate::coordinator::sharded::ShardMap;
+use crate::graph::Graph;
+use crate::linalg::select::{DEFAULT_WEIGHT_FLOOR, WeightTree};
+use crate::linalg::sparse::BColumns;
+use crate::network::latency::LatencyModel;
+use crate::network::transport::{Transport, TransportEvent, WireSized};
+use crate::util::rng::Rng;
+
+/// Default gossip period (activations per shard between
+/// `WeightSummary` broadcasts) — the `msgpass:<shards>:<batch>:<map>`
+/// registry forms without an explicit period use this.
+pub const DEFAULT_GOSSIP_PERIOD: usize = 8;
+
+/// Fixed wire size of a [`Msg::ResidualUpdate`]: 4-byte type tag +
+/// 4-byte page id + 8-byte delta.
+pub const RESIDUAL_UPDATE_BYTES: usize = 16;
+
+/// Fixed wire size of a [`Msg::WeightSummary`]: 4-byte type tag +
+/// 4-byte shard id + 8-byte total + 8-byte timestamp.
+pub const WEIGHT_SUMMARY_BYTES: usize = 24;
+
+/// Virtual time one activation occupies on its shard's event loop.
+const ACTIVATION_TIME: f64 = 1.0;
+
+/// The msgpass wire protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// `r[page] += delta` at the receiver's replica (§II-D write
+    /// fan-out, aggregated to the subscriber shards of `page`).
+    ResidualUpdate { page: u32, delta: f64 },
+    /// Periodic broadcast of the sender's residual-weight tree total;
+    /// drives cross-shard slot allocation.
+    WeightSummary { total: f64 },
+}
+
+impl WireSized for Msg {
+    fn wire_bytes(&self) -> usize {
+        match self {
+            Msg::ResidualUpdate { .. } => RESIDUAL_UPDATE_BYTES,
+            Msg::WeightSummary { .. } => WEIGHT_SUMMARY_BYTES,
+        }
+    }
+}
+
+/// The message-passing runtime (see the module docs).
+#[derive(Debug)]
+pub struct MsgpassRuntime {
+    graph: Graph,
+    cols: BColumns,
+    shards: usize,
+    batch: usize,
+    map: ShardMap,
+    gossip: usize,
+    transport: Transport<Msg>,
+    /// Dedicated stream for latency draws, forked from the seed stream —
+    /// keeps the shard candidate streams identical whatever the latency
+    /// model.
+    net_rng: Rng,
+    /// Per-shard candidate streams; seeded on the first super-step from
+    /// the caller's rng (shard 0 clones it verbatim, the rest fork —
+    /// the same protocol as the sharded runtime's worker packing).
+    streams: Vec<Rng>,
+    streams_seeded: bool,
+    /// Per-shard full-length residual replicas; `views[w][j]` is shard
+    /// `w`'s (possibly stale) knowledge of `r_j`.
+    views: Vec<Vec<f64>>,
+    /// Per-shard residual-weight tree over *owned* pages (local indices)
+    /// — maintained only when `shards > 1` (it only drives allocation).
+    trees: Vec<WeightTree>,
+    /// Pages owned per shard.
+    owned: Vec<usize>,
+    /// Per-shard activation counters (gossip cadence).
+    act_counts: Vec<u64>,
+    /// Most recently *delivered* `WeightSummary` per source shard:
+    /// `(total, receive_time)`.
+    summaries: Vec<(f64, f64)>,
+    /// PageRank estimate; `x[k]` is written only by `k`'s owner.
+    x: Vec<f64>,
+    /// Subscriber shards per page: owners of `{j} ∪ in(j)`, sorted.
+    subs: Vec<Vec<u32>>,
+    activations: u64,
+    logical_reads: u64,
+    logical_writes: u64,
+    /// Scratch: touched pages of the current activation, sorted.
+    touched: Vec<u32>,
+    /// Scratch: pre-update replica values of the touched pages.
+    old_vals: Vec<f64>,
+}
+
+impl MsgpassRuntime {
+    pub fn new(
+        graph: Graph,
+        alpha: f64,
+        shards: usize,
+        batch: usize,
+        map: ShardMap,
+        gossip: usize,
+        latency: LatencyModel,
+    ) -> MsgpassRuntime {
+        assert!(shards >= 1, "need at least one shard");
+        assert!(batch >= 1, "need at least one activation per super-step");
+        assert!(gossip >= 1, "gossip period must be >= 1");
+        let n = graph.n();
+        let cols = BColumns::new(&graph, alpha);
+        let y = 1.0 - alpha;
+        let w0 = (y * y).max(DEFAULT_WEIGHT_FLOOR);
+        let owned: Vec<usize> = (0..shards).map(|w| map.owned_count(w, n, shards)).collect();
+        let trees: Vec<WeightTree> =
+            owned.iter().map(|&cnt| WeightTree::new(&vec![w0; cnt])).collect();
+        let summaries: Vec<(f64, f64)> =
+            owned.iter().map(|&cnt| (cnt as f64 * w0, 0.0)).collect();
+        let mut subs = Vec::with_capacity(n);
+        for j in 0..n {
+            let mut s: Vec<u32> = Vec::with_capacity(1 + graph.inc(j).len());
+            s.push(map.owner(j, n, shards) as u32);
+            for &p in graph.inc(j) {
+                s.push(map.owner(p as usize, n, shards) as u32);
+            }
+            s.sort_unstable();
+            s.dedup();
+            subs.push(s);
+        }
+        MsgpassRuntime {
+            cols,
+            shards,
+            batch,
+            map,
+            gossip,
+            transport: Transport::new(shards, latency),
+            net_rng: Rng::seeded(0),
+            streams: Vec::new(),
+            streams_seeded: false,
+            views: vec![vec![y; n]; shards],
+            trees,
+            owned,
+            act_counts: vec![0; shards],
+            summaries,
+            x: vec![0.0; n],
+            subs,
+            activations: 0,
+            logical_reads: 0,
+            logical_writes: 0,
+            touched: Vec::new(),
+            old_vals: Vec::new(),
+            graph,
+        }
+    }
+
+    /// Run one super-step: allocate `batch` activation slots across the
+    /// shards from the gossiped weight summaries, schedule each shard's
+    /// slots on its event loop, and drain the transport (activations,
+    /// deliveries and gossip interleave in virtual-time order).
+    ///
+    /// `rng` seeds the per-shard candidate streams on the first call
+    /// (shard 0 clones it verbatim — the msgpass ≡ mp anchor) and is
+    /// untouched afterwards.
+    pub fn run_super_step(&mut self, rng: &mut Rng) {
+        if !self.streams_seeded {
+            for w in 0..self.shards {
+                self.streams.push(if w == 0 { rng.clone() } else { rng.fork(w as u64) });
+            }
+            self.net_rng = rng.fork(0x6E65_745F_7374); // "net_st"
+            self.streams_seeded = true;
+        }
+        let slots = self.allocate();
+        let t0 = self.transport.now();
+        for (w, &count) in slots.iter().enumerate() {
+            for slot in 0..count {
+                self.transport.wake_at(w, t0 + (slot + 1) as f64 * ACTIVATION_TIME);
+            }
+        }
+        while let Some(ev) = self.transport.pop() {
+            match ev.event {
+                TransportEvent::Wake { shard } => self.activate_one(shard),
+                TransportEvent::Deliver { src, dst, msg } => self.deliver(src, dst, msg, ev.time),
+            }
+        }
+    }
+
+    /// Drive super-steps until the scaled residual `(1/N)‖r‖²` reaches
+    /// `eps` or `max_super_steps` elapse; returns the super-steps taken.
+    pub fn run_to_residual(&mut self, eps: f64, max_super_steps: usize, rng: &mut Rng) -> usize {
+        for step in 0..max_super_steps {
+            if self.residual_norm_sq() / self.graph.n() as f64 <= eps {
+                return step;
+            }
+            self.run_super_step(rng);
+        }
+        max_super_steps
+    }
+
+    /// Split `batch` slots across shards proportionally to the decayed
+    /// gossiped weight totals (largest-remainder rounding, ties to the
+    /// lower shard id). Single-shard runs take the whole batch; shards
+    /// owning no pages get no slots.
+    fn allocate(&self) -> Vec<usize> {
+        if self.shards == 1 {
+            return vec![self.batch];
+        }
+        let now = self.transport.now();
+        let half_life = self.gossip as f64 * ACTIVATION_TIME;
+        let mut weights = vec![0.0; self.shards];
+        for w in 0..self.shards {
+            if self.owned[w] == 0 {
+                continue;
+            }
+            let (total, t_recv) = self.summaries[w];
+            let age = (now - t_recv).max(0.0);
+            let decayed = total * 0.5f64.powf(age / half_life);
+            weights[w] = decayed.max(self.owned[w] as f64 * DEFAULT_WEIGHT_FLOOR);
+        }
+        let wsum: f64 = weights.iter().sum();
+        let mut slots = vec![0usize; self.shards];
+        if !(wsum > 0.0) || !wsum.is_finite() {
+            // Degenerate summaries: fall back to a static split over the
+            // shards that own pages.
+            let eligible: Vec<usize> =
+                (0..self.shards).filter(|&w| self.owned[w] > 0).collect();
+            let per = self.batch / eligible.len();
+            let extra = self.batch % eligible.len();
+            for (i, &w) in eligible.iter().enumerate() {
+                slots[w] = per + usize::from(i < extra);
+            }
+            return slots;
+        }
+        let mut assigned = 0usize;
+        let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(self.shards);
+        for w in 0..self.shards {
+            let exact = self.batch as f64 * weights[w] / wsum;
+            let fl = exact.floor() as usize;
+            slots[w] = fl;
+            assigned += fl;
+            fracs.push((exact - fl as f64, w));
+        }
+        fracs.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0).expect("weights are finite").then(a.1.cmp(&b.1))
+        });
+        let remainder = self.batch.saturating_sub(assigned);
+        for i in 0..remainder {
+            slots[fracs[i % fracs.len()].1] += 1;
+        }
+        slots
+    }
+
+    /// One activation on shard `w`'s event loop: uniform owned-page
+    /// draw, eq. 7/8 projection against the local replica, residual
+    /// messages to the subscriber shards, gossip on cadence.
+    fn activate_one(&mut self, w: usize) {
+        let n = self.graph.n();
+        let owned = self.owned[w];
+        if owned == 0 {
+            return;
+        }
+        let pick = self.streams[w].below(owned);
+        let k = self.map.owned_page(w, pick, n, self.shards);
+        let deg = self.graph.out_degree(k);
+        let num = self.cols.col_dot(&self.graph, k, &self.views[w]);
+        let coef = num / self.cols.norm_sq(k);
+        self.x[k] += coef;
+        // Residual support of the projection: {k} ∪ out(k), sorted so
+        // message order (and the Fenwick update order downstream) is a
+        // pure function of the activation sequence.
+        self.touched.clear();
+        self.touched.push(k as u32);
+        self.touched.extend_from_slice(self.graph.out(k));
+        self.touched.sort_unstable();
+        self.touched.dedup();
+        self.old_vals.clear();
+        for i in 0..self.touched.len() {
+            self.old_vals.push(self.views[w][self.touched[i] as usize]);
+        }
+        self.cols.sub_scaled_col(&self.graph, k, coef, &mut self.views[w]);
+        for i in 0..self.touched.len() {
+            let j = self.touched[i] as usize;
+            let new = self.views[w][j];
+            // Exact replica delta: a receiver holding the same old value
+            // lands on the bit-identical new value.
+            let delta = new - self.old_vals[i];
+            if self.shards > 1 {
+                for si in 0..self.subs[j].len() {
+                    let s = self.subs[j][si] as usize;
+                    if s != w {
+                        self.transport.send(
+                            w,
+                            s,
+                            Msg::ResidualUpdate { page: j as u32, delta },
+                            &mut self.net_rng,
+                        );
+                    }
+                }
+                if self.map.owner(j, n, self.shards) == w {
+                    let li = self.map.local_index(j, n, self.shards);
+                    self.trees[w].update(li, (new * new).max(DEFAULT_WEIGHT_FLOOR));
+                }
+            }
+        }
+        self.activations += 1;
+        self.logical_reads += deg as u64;
+        self.logical_writes += deg as u64;
+        if self.shards > 1 {
+            self.act_counts[w] += 1;
+            if self.act_counts[w] % self.gossip as u64 == 0 {
+                let total = self.trees[w].total();
+                for s in 0..self.shards {
+                    if s != w {
+                        self.transport.send(
+                            w,
+                            s,
+                            Msg::WeightSummary { total },
+                            &mut self.net_rng,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Apply a delivered message at shard `dst`.
+    fn deliver(&mut self, src: usize, dst: usize, msg: Msg, time: f64) {
+        match msg {
+            Msg::ResidualUpdate { page, delta } => {
+                let j = page as usize;
+                self.views[dst][j] += delta;
+                if self.shards > 1 && self.map.owner(j, self.graph.n(), self.shards) == dst {
+                    let v = self.views[dst][j];
+                    let li = self.map.local_index(j, self.graph.n(), self.shards);
+                    self.trees[dst].update(li, (v * v).max(DEFAULT_WEIGHT_FLOOR));
+                }
+            }
+            Msg::WeightSummary { total } => {
+                self.summaries[src] = (total, time);
+            }
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn gossip_period(&self) -> usize {
+        self.gossip
+    }
+
+    pub fn map(&self) -> ShardMap {
+        self.map
+    }
+
+    pub fn latency(&self) -> LatencyModel {
+        self.transport.latency()
+    }
+
+    /// Current PageRank estimate (owner-written, globally consistent).
+    pub fn estimate(&self) -> Vec<f64> {
+        self.x.clone()
+    }
+
+    pub fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        crate::linalg::vector::dist_sq(&self.x, x_star)
+    }
+
+    /// Owner-authoritative residual: each entry from its owner's
+    /// replica. Exact once the transport is drained at zero latency;
+    /// lags only in-flight foreign deltas otherwise.
+    pub fn residual(&self) -> Vec<f64> {
+        let n = self.graph.n();
+        (0..n).map(|j| self.views[self.map.owner(j, n, self.shards)][j]).collect()
+    }
+
+    pub fn residual_norm_sq(&self) -> f64 {
+        let n = self.graph.n();
+        (0..n)
+            .map(|j| {
+                let r = self.views[self.map.owner(j, n, self.shards)][j];
+                r * r
+            })
+            .sum()
+    }
+
+    pub fn activations(&self) -> u64 {
+        self.activations
+    }
+
+    pub fn logical_reads(&self) -> u64 {
+        self.logical_reads
+    }
+
+    pub fn logical_writes(&self) -> u64 {
+        self.logical_writes
+    }
+
+    /// Metered messages sent so far (residual updates + gossip).
+    pub fn messages_sent(&self) -> u64 {
+        self.transport.messages_sent()
+    }
+
+    /// Bytes charged to the wire so far (fixed per-type encodings).
+    pub fn bytes_on_wire(&self) -> u64 {
+        self.transport.bytes_on_wire()
+    }
+
+    /// Peak messages simultaneously queued for any single shard.
+    pub fn peak_queue_depth(&self) -> u32 {
+        self.transport.peak_queue_depth()
+    }
+
+    /// Peak messages simultaneously in flight network-wide.
+    pub fn peak_in_flight(&self) -> u32 {
+        self.transport.peak_in_flight()
+    }
+
+    /// Virtual time consumed: the parallel makespan of all event loops.
+    pub fn virtual_time(&self) -> f64 {
+        self.transport.now()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::common::PageRankSolver;
+    use crate::algo::mp::MatchingPursuit;
+    use crate::graph::generators;
+    use crate::linalg::dense::DenseMatrix;
+    use crate::linalg::solve::exact_pagerank;
+    use crate::linalg::vector;
+
+    #[test]
+    fn single_shard_batch_one_matches_matrix_mp_bit_for_bit() {
+        // The equivalence anchor: one shard, one slot per super-step,
+        // zero latency — shard 0 clones the caller's stream, samples
+        // below(n) and applies the same BColumns arithmetic, so the
+        // estimate must be bit-identical to matrix-form Algorithm 1.
+        let g = generators::er_threshold(40, 0.5, 2);
+        let mut rt = MsgpassRuntime::new(
+            g.clone(),
+            0.85,
+            1,
+            1,
+            ShardMap::Modulo,
+            DEFAULT_GOSSIP_PERIOD,
+            LatencyModel::Zero,
+        );
+        let mut rng = Rng::seeded(13);
+        for _ in 0..500 {
+            rt.run_super_step(&mut rng);
+        }
+        let mut mp = MatchingPursuit::new(&g, 0.85);
+        let mut rng2 = Rng::seeded(13);
+        for _ in 0..500 {
+            let k = rng2.below(40);
+            mp.step_at(k);
+        }
+        assert_eq!(rt.estimate(), PageRankSolver::estimate(&mp), "not bit-identical");
+        assert_eq!(rt.residual(), mp.residual().to_vec());
+        assert_eq!(rt.activations(), 500);
+        assert_eq!(rt.messages_sent(), 0, "one shard never messages");
+        assert_eq!(rt.bytes_on_wire(), 0);
+    }
+
+    #[test]
+    fn one_super_step_meters_every_wire_byte() {
+        // ring(2), mod map: shard 0 owns page 0, shard 1 owns page 1,
+        // and both shards subscribe to both pages. One activation
+        // touches {k, out(k)} = both pages -> 2 residual updates to the
+        // peer; gossip period 1 adds one summary. Fixed encodings make
+        // the byte count exact.
+        let g = generators::ring(2);
+        let mut rt =
+            MsgpassRuntime::new(g, 0.85, 2, 1, ShardMap::Modulo, 1, LatencyModel::Zero);
+        let mut rng = Rng::seeded(5);
+        rt.run_super_step(&mut rng);
+        assert_eq!(rt.activations(), 1);
+        assert_eq!(rt.messages_sent(), 3);
+        assert_eq!(
+            rt.bytes_on_wire(),
+            (2 * RESIDUAL_UPDATE_BYTES + WEIGHT_SUMMARY_BYTES) as u64
+        );
+        assert!(rt.peak_queue_depth() >= 1);
+    }
+
+    #[test]
+    fn multi_shard_zero_latency_converges_to_exact_pagerank() {
+        let g = generators::er_threshold(20, 0.5, 7);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut rt = MsgpassRuntime::new(
+            g,
+            0.85,
+            4,
+            8,
+            ShardMap::Modulo,
+            4,
+            LatencyModel::Zero,
+        );
+        let mut rng = Rng::seeded(9);
+        for _ in 0..8_000 {
+            rt.run_super_step(&mut rng);
+        }
+        let err = vector::dist_inf(&rt.estimate(), &x_star);
+        assert!(err < 1e-7, "err={err}");
+        assert!(rt.messages_sent() > 0, "multi-shard runs must message");
+        assert!(rt.bytes_on_wire() > rt.messages_sent(), "every message has bytes");
+        assert!(rt.virtual_time() > 0.0);
+    }
+
+    #[test]
+    fn conservation_b_x_plus_r_is_y_at_zero_latency() {
+        // eq. 11 survives sharding: activations apply exact additive
+        // column updates, so after a full drain the owner-gathered
+        // residual satisfies B x + r = (1-α)1.
+        let g = generators::er_threshold(30, 0.5, 11);
+        let alpha = 0.85;
+        let mut rt = MsgpassRuntime::new(
+            g.clone(),
+            alpha,
+            3,
+            8,
+            ShardMap::Block,
+            4,
+            LatencyModel::Zero,
+        );
+        let mut rng = Rng::seeded(12);
+        for _ in 0..200 {
+            rt.run_super_step(&mut rng);
+        }
+        let b = DenseMatrix::b_matrix(&g, alpha);
+        let bx = b.matvec(&rt.estimate());
+        let r = rt.residual();
+        for (i, v) in bx.iter().enumerate() {
+            let lhs = v + r[i];
+            assert!((lhs - (1.0 - alpha)).abs() < 1e-9, "page {i}: {lhs}");
+        }
+    }
+
+    #[test]
+    fn converges_and_meters_under_exponential_latency() {
+        // Stale replicas under a heavy-tailed latency model: the error
+        // must still contract (asynchronous additive updates), and the
+        // congestion tracker must observe genuine in-flight overlap.
+        let g = generators::er_threshold(20, 0.5, 13);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut rt = MsgpassRuntime::new(
+            g,
+            0.85,
+            2,
+            4,
+            ShardMap::Modulo,
+            4,
+            LatencyModel::Exponential { mean: 0.3 },
+        );
+        let mut rng = Rng::seeded(14);
+        let before = rt.error_sq_vs(&x_star);
+        for _ in 0..4_000 {
+            rt.run_super_step(&mut rng);
+        }
+        let after = rt.error_sq_vs(&x_star);
+        assert!(after.is_finite());
+        assert!(after < before / 100.0, "no contraction: {before} -> {after}");
+        assert!(rt.peak_in_flight() >= 2, "latency must create overlap");
+    }
+
+    #[test]
+    fn runs_are_deterministic_per_seed() {
+        let build = || {
+            MsgpassRuntime::new(
+                generators::er_threshold(15, 0.5, 3),
+                0.85,
+                3,
+                6,
+                ShardMap::Modulo,
+                2,
+                LatencyModel::Exponential { mean: 0.5 },
+            )
+        };
+        let (mut a, mut b) = (build(), build());
+        let (mut ra, mut rb) = (Rng::seeded(21), Rng::seeded(21));
+        for _ in 0..300 {
+            a.run_super_step(&mut ra);
+            b.run_super_step(&mut rb);
+        }
+        assert_eq!(a.estimate(), b.estimate());
+        assert_eq!(a.messages_sent(), b.messages_sent());
+        assert_eq!(a.bytes_on_wire(), b.bytes_on_wire());
+        assert_eq!(a.virtual_time(), b.virtual_time());
+    }
+
+    #[test]
+    fn dangling_chain_converges_via_the_shared_guard() {
+        // chain(20) ends in a genuine sink; the BColumns implicit
+        // self-loop keeps every replica finite and the fixed point
+        // matches the dense reference.
+        let g = generators::chain(20);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut rt = MsgpassRuntime::new(
+            g,
+            0.85,
+            2,
+            4,
+            ShardMap::Modulo,
+            DEFAULT_GOSSIP_PERIOD,
+            LatencyModel::Zero,
+        );
+        let mut rng = Rng::seeded(17);
+        for _ in 0..15_000 {
+            rt.run_super_step(&mut rng);
+        }
+        assert!(rt.estimate().iter().all(|v| v.is_finite()));
+        let err = vector::dist_inf(&rt.estimate(), &x_star);
+        assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
+    fn shards_without_pages_get_no_slots() {
+        // More shards than pages: the empty shards must be skipped by
+        // the allocator, not sampled (below(0) is UB in release).
+        let g = generators::ring(3);
+        let mut rt = MsgpassRuntime::new(
+            g,
+            0.85,
+            8,
+            8,
+            ShardMap::Modulo,
+            DEFAULT_GOSSIP_PERIOD,
+            LatencyModel::Zero,
+        );
+        let mut rng = Rng::seeded(19);
+        for _ in 0..50 {
+            rt.run_super_step(&mut rng);
+        }
+        assert_eq!(rt.activations(), 50 * 8, "every slot lands on a live shard");
+        assert!(rt.estimate().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn run_to_residual_stops_at_epsilon() {
+        let g = generators::er_threshold(15, 0.5, 23);
+        let mut rt = MsgpassRuntime::new(
+            g,
+            0.85,
+            2,
+            8,
+            ShardMap::Modulo,
+            DEFAULT_GOSSIP_PERIOD,
+            LatencyModel::Zero,
+        );
+        let mut rng = Rng::seeded(24);
+        let steps = rt.run_to_residual(1e-10, 100_000, &mut rng);
+        assert!(steps < 100_000, "must reach epsilon before the cap");
+        assert!(rt.residual_norm_sq() / rt.n() as f64 <= 1e-10);
+    }
+}

@@ -9,11 +9,12 @@
 //!
 //! * [`SolverSpec`] — the solver registry: every variant (Algorithm 1,
 //!   its §IV extensions, all five published baselines, the full
-//!   distributed coordinator, the multi-threaded sharded runtime and the
-//!   dense backend) behind one `build(&graph, alpha, seed)` factory and a
-//!   compact string form (`"mp"`, `"parallel-mp:16"`,
+//!   distributed coordinator, the multi-threaded sharded runtime, the
+//!   message-passing msgpass backend and the dense backend) behind one
+//!   `build(&graph, alpha, seed)` factory and a compact string form
+//!   (`"mp"`, `"parallel-mp:16"`,
 //!   `"coordinator:async:clocks:const:0.1"`, `"sharded:4:16:block"`,
-//!   `"dense"`).
+//!   `"msgpass:4:8:mod"`, `"dense"`).
 //! * [`EstimatorSpec`] — the size-estimation counterpart: Algorithm 2's
 //!   randomized Kaczmarz iteration with pluggable site selection
 //!   (`"kaczmarz"`, `"degree"`, `"walk"`) behind one `build(&graph)`
@@ -54,5 +55,7 @@ pub use experiment_spec::{EstimatorRun, EstimatorSpec, ExperimentSpec};
 pub use graph_spec::GraphSpec;
 pub use report::{EstimatorReport, ExperimentReports, ScenarioReport, SolverReport};
 pub use scenario::{ReferencePolicy, Scenario};
-pub use solver_spec::{CoordinatorSolver, DynamicSolver, ShardedSolver, SolverSpec};
+pub use solver_spec::{
+    CoordinatorSolver, DynamicSolver, MsgpassSolver, ShardedSolver, SolverSpec,
+};
 pub use sweep::{Sweep, SweepCell, SweepReport};

@@ -242,19 +242,20 @@ impl Scenario {
         threads: usize,
         base: &Rng,
     ) -> Result<Vec<SolverReport>, String> {
-        // Dangling pages are fine for the out-link backends (implicit
-        // self-loop guard), but the in-link baselines, the random-walk
-        // estimator and the simulated coordinator would divide by raw
-        // zero out-degrees or walk into the sink — refuse up front with
-        // a usable error instead of poisoning results or panicking.
+        // Dangling pages are fine for every registry backend carrying
+        // the shared implicit self-loop guard (as of PR-6 that includes
+        // the in-link baselines and the random-walk estimator), but the
+        // simulated coordinator's per-page agents still count one wire
+        // reply per raw out-neighbour — refuse that combination up
+        // front with a usable error instead of poisoning results.
         let dangling = graph.dangling();
         if !dangling.is_empty() {
             if let Some(bad) = solvers.iter().find(|s| !s.supports_dangling()) {
                 return Err(format!(
                     "scenario {:?}: graph has {} dangling page(s) (e.g. page {}) but solver \
-                     {} requires a repaired graph — repair it (DanglingPolicy) or keep to \
-                     the guarded backends (mp, greedy-mp, parallel-mp, power, google-power, \
-                     dynamic-mp, sharded, dense)",
+                     {} requires a repaired graph — repair it (DanglingPolicy) or drop the \
+                     simulated coordinator (every other registry backend carries the \
+                     implicit self-loop guard)",
                     self.name,
                     dangling.len(),
                     dangling[0],
@@ -626,13 +627,13 @@ mod tests {
             "dangling-vs-baseline",
             GraphSpec::Family { family: "chain".into(), n: 10 },
         )
-        .with_solvers(vec![SolverSpec::Mp, SolverSpec::MonteCarlo])
+        .with_solvers(vec![SolverSpec::Mp, SolverSpec::sequential_coordinator()])
         .with_steps(100)
         .with_stride(50)
         .with_rounds(1)
         .with_threads(1);
         let err = scenario.run().expect_err("must refuse, not panic/poison");
-        assert!(err.contains("monte-carlo"), "error should name the solver: {err}");
+        assert!(err.contains("coordinator"), "error should name the solver: {err}");
         assert!(err.contains("dangling"), "error should explain why: {err}");
     }
 

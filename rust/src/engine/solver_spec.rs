@@ -24,9 +24,10 @@ use crate::algo::{
     dense_engine, dynamic, greedy_mp, ishii_tempo, lei_chen, monte_carlo, mp, parallel_mp,
     power_iteration, you_tempo_qiu,
 };
+use crate::coordinator::msgpass::DEFAULT_GOSSIP_PERIOD;
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, Mode, Packer, RunReport, SamplerKind, Sampling, ShardMap,
-    ShardedRuntime,
+    Coordinator, CoordinatorConfig, Mode, MsgpassRuntime, Packer, RunReport, SamplerKind,
+    Sampling, ShardMap, ShardedRuntime,
 };
 use crate::graph::Graph;
 use crate::linalg::select::DEFAULT_WEIGHT_FLOOR;
@@ -82,6 +83,17 @@ pub enum SolverSpec {
         map: ShardMap,
         packer: Packer,
         sampling: Sampling,
+    },
+    /// The message-passing distributed backend:
+    /// [`crate::coordinator::MsgpassRuntime`] — per-shard event loops
+    /// over the virtual-time network, communicating only by metered
+    /// `ResidualUpdate` / `WeightSummary` messages. `gossip` is the
+    /// activations-per-shard between weight-summary broadcasts.
+    Msgpass {
+        shards: usize,
+        batch: usize,
+        map: ShardMap,
+        gossip: usize,
     },
     /// The dense backend: Jacobi sweeps on a materialized hyperlink
     /// matrix ([`dense_engine::DenseJacobi`], the host twin of the PJRT
@@ -162,6 +174,16 @@ impl SolverSpec {
                     Sampling::Residual => format!("{base}:residual"),
                 }
             }
+            SolverSpec::Msgpass { shards, batch, map, gossip } => {
+                // The gossip segment is omitted when default, mirroring
+                // the sharded sampling-segment convention.
+                let base = format!("msgpass:{shards}:{batch}:{}", map.key());
+                if *gossip == DEFAULT_GOSSIP_PERIOD {
+                    base
+                } else {
+                    format!("{base}:{gossip}")
+                }
+            }
             SolverSpec::Dense => "dense".to_string(),
         }
     }
@@ -191,6 +213,9 @@ impl SolverSpec {
             SolverSpec::Sharded { packer: Packer::Worker, .. } => {
                 "sharded runtime: OS worker threads, worker-packed (atomic claim array)"
             }
+            SolverSpec::Msgpass { .. } => {
+                "msgpass runtime: per-shard event loops, metered residual + gossip messages"
+            }
             SolverSpec::Dense => "dense backend: Jacobi sweeps on a materialized A (O(N²))",
         }
     }
@@ -198,29 +223,16 @@ impl SolverSpec {
     /// Whether the backend repairs dangling (zero out-degree) pages on
     /// the fly via the shared implicit self-loop guard of
     /// [`crate::linalg::sparse::BColumns`] /
-    /// [`crate::linalg::dense::DenseMatrix::hyperlink`]. The in-link
-    /// baselines divide by raw out-degrees of in-neighbours, the
-    /// random-walk estimator steps along out-links, and the simulated
-    /// coordinator counts one reply per out-neighbour — those still
-    /// require an explicitly repaired graph, and
-    /// [`super::Scenario::run`] refuses the combination up front.
+    /// [`crate::linalg::dense::DenseMatrix::hyperlink`]. As of PR-6 the
+    /// in-link baselines (`ishii-tempo`, `you-tempo-qiu`, `lei-chen`)
+    /// and the random-walk estimator carry the same guard (a sink keeps
+    /// its mass / parks the walk — the self-loop semantics), so every
+    /// registry backend handles sinks except the simulated coordinator,
+    /// whose per-page agents count one wire reply per out-neighbour and
+    /// still require an explicitly repaired graph;
+    /// [`super::Scenario::run`] refuses that combination up front.
     pub fn supports_dangling(&self) -> bool {
-        match self {
-            SolverSpec::Mp
-            | SolverSpec::MpResidual { .. }
-            | SolverSpec::GreedyMp
-            | SolverSpec::ParallelMp { .. }
-            | SolverSpec::PowerIteration
-            | SolverSpec::GooglePower
-            | SolverSpec::DynamicMp
-            | SolverSpec::Sharded { .. }
-            | SolverSpec::Dense => true,
-            SolverSpec::IshiiTempo
-            | SolverSpec::YouTempoQiu
-            | SolverSpec::LeiChen
-            | SolverSpec::MonteCarlo
-            | SolverSpec::Coordinator { .. } => false,
-        }
+        !matches!(self, SolverSpec::Coordinator { .. })
     }
 
     /// Parse a registry string. Accepts the canonical keys plus short
@@ -315,6 +327,39 @@ impl SolverSpec {
                 }
                 Ok(SolverSpec::Sharded { shards, batch, map, packer, sampling })
             }
+            "msgpass" | "msg" => {
+                let grammar = "msgpass:<shards>[:<batch>[:<mod|block>[:<gossip-period>]]]";
+                let shards = match parts.get(1) {
+                    None => 4,
+                    Some(v) => v.parse().map_err(|_| arity_err(grammar))?,
+                };
+                if shards == 0 {
+                    return Err(arity_err("a shard count >= 1"));
+                }
+                let batch = match parts.get(2) {
+                    None => 8,
+                    Some(v) => v.parse().map_err(|_| arity_err(grammar))?,
+                };
+                if batch == 0 {
+                    return Err(arity_err("a batch size >= 1"));
+                }
+                let map = match parts.get(3) {
+                    None => ShardMap::Modulo,
+                    Some(m) => ShardMap::parse(m)
+                        .ok_or_else(|| format!("bad shard map {m:?} (mod|block)"))?,
+                };
+                let gossip = match parts.get(4) {
+                    None => DEFAULT_GOSSIP_PERIOD,
+                    Some(v) => v.parse().map_err(|_| arity_err(grammar))?,
+                };
+                if gossip == 0 {
+                    return Err(arity_err("a gossip period >= 1"));
+                }
+                if parts.len() > 5 {
+                    return Err(arity_err(grammar));
+                }
+                Ok(SolverSpec::Msgpass { shards, batch, map, gossip })
+            }
             "google-power" | "google" => Ok(SolverSpec::GooglePower),
             "ishii-tempo" | "it" => Ok(SolverSpec::IshiiTempo),
             "you-tempo-qiu" | "ytq" => Ok(SolverSpec::YouTempoQiu),
@@ -394,6 +439,12 @@ impl SolverSpec {
                 packer: Packer::Worker,
                 sampling: Sampling::Residual,
             },
+            SolverSpec::Msgpass {
+                shards: 2,
+                batch: 4,
+                map: ShardMap::Modulo,
+                gossip: DEFAULT_GOSSIP_PERIOD,
+            },
             SolverSpec::Dense,
         ]
     }
@@ -450,8 +501,94 @@ impl SolverSpec {
             SolverSpec::Sharded { shards, batch, map, packer, sampling } => Box::new(
                 ShardedSolver::new(graph, alpha, *shards, *batch, *map, *packer, *sampling),
             ),
+            SolverSpec::Msgpass { shards, batch, map, gossip } => Box::new(MsgpassSolver::new(
+                graph,
+                alpha,
+                *shards,
+                *batch,
+                *map,
+                *gossip,
+                LatencyModel::Zero,
+            )),
             SolverSpec::Dense => Box::new(dense_engine::DenseJacobi::new(graph, alpha)),
         }
+    }
+}
+
+/// [`PageRankSolver`] adapter over the message-passing
+/// [`MsgpassRuntime`]: one trait `step` = one super-step of up to
+/// `batch` activations distributed across the shard event loops, with
+/// all resulting messages drained. The candidate streams seed from the
+/// `rng` handed to the first `step` (shard 0 clones it verbatim —
+/// exactly the sharded worker-packing protocol), so inside a
+/// [`super::Scenario`] a `msgpass:1:1:mod` run at zero latency replays
+/// the *identical* activation sequence as [`SolverSpec::Mp`] — the
+/// equivalence anchor tested in `tests/engine.rs`.
+///
+/// The runtime owns a clone of the graph; the registry builds it with
+/// zero link latency (latency sweeps drive [`MsgpassRuntime`] directly,
+/// as `benches/throughput.rs` does).
+pub struct MsgpassSolver {
+    rt: MsgpassRuntime,
+    prev_reads: u64,
+    prev_writes: u64,
+    prev_activations: u64,
+}
+
+impl MsgpassSolver {
+    pub fn new(
+        graph: &Graph,
+        alpha: f64,
+        shards: usize,
+        batch: usize,
+        map: ShardMap,
+        gossip: usize,
+        latency: LatencyModel,
+    ) -> MsgpassSolver {
+        MsgpassSolver {
+            rt: MsgpassRuntime::new(graph.clone(), alpha, shards, batch, map, gossip, latency),
+            prev_reads: 0,
+            prev_writes: 0,
+            prev_activations: 0,
+        }
+    }
+
+    /// Typed access to the wrapped runtime (message/byte/queue meters).
+    pub fn runtime(&self) -> &MsgpassRuntime {
+        &self.rt
+    }
+}
+
+impl PageRankSolver for MsgpassSolver {
+    fn n(&self) -> usize {
+        self.rt.n()
+    }
+
+    fn step(&mut self, rng: &mut Rng) -> StepStats {
+        self.rt.run_super_step(rng);
+        let (reads, writes, activations) =
+            (self.rt.logical_reads(), self.rt.logical_writes(), self.rt.activations());
+        let stats = StepStats {
+            reads: (reads - self.prev_reads) as usize,
+            writes: (writes - self.prev_writes) as usize,
+            activated: (activations - self.prev_activations) as usize,
+        };
+        self.prev_reads = reads;
+        self.prev_writes = writes;
+        self.prev_activations = activations;
+        stats
+    }
+
+    fn estimate(&self) -> Vec<f64> {
+        self.rt.estimate()
+    }
+
+    fn error_sq_vs(&self, x_star: &[f64]) -> f64 {
+        self.rt.error_sq_vs(x_star)
+    }
+
+    fn name(&self) -> &'static str {
+        "msgpass runtime (per-shard event loops)"
     }
 }
 
@@ -825,6 +962,49 @@ mod tests {
     }
 
     #[test]
+    fn msgpass_specs_parse_and_round_trip() {
+        assert_eq!(
+            SolverSpec::parse("msgpass").expect("ok"),
+            SolverSpec::Msgpass {
+                shards: 4,
+                batch: 8,
+                map: ShardMap::Modulo,
+                gossip: DEFAULT_GOSSIP_PERIOD,
+            }
+        );
+        assert_eq!(
+            SolverSpec::parse("msg:2:4:block:16").expect("ok"),
+            SolverSpec::Msgpass { shards: 2, batch: 4, map: ShardMap::Block, gossip: 16 }
+        );
+        assert_eq!(
+            SolverSpec::parse("msg:2:4:block:16").expect("ok").key(),
+            "msgpass:2:4:block:16"
+        );
+        // The gossip segment is omitted when default — explicit and
+        // implicit forms are the same spec with the same canonical key.
+        assert_eq!(
+            SolverSpec::parse(&format!("msgpass:1:1:mod:{DEFAULT_GOSSIP_PERIOD}")).expect("ok"),
+            SolverSpec::parse("msgpass:1:1:mod").expect("ok")
+        );
+        assert_eq!(
+            SolverSpec::parse(&format!("msgpass:1:1:mod:{DEFAULT_GOSSIP_PERIOD}"))
+                .expect("ok")
+                .key(),
+            "msgpass:1:1:mod"
+        );
+    }
+
+    #[test]
+    fn bad_msgpass_specs_rejected() {
+        assert!(SolverSpec::parse("msgpass:0").is_err());
+        assert!(SolverSpec::parse("msgpass:2:0").is_err());
+        assert!(SolverSpec::parse("msgpass:2:4:diagonal").is_err());
+        assert!(SolverSpec::parse("msgpass:2:4:mod:0").is_err());
+        assert!(SolverSpec::parse("msgpass:2:4:mod:8:extra").is_err());
+        assert!(SolverSpec::parse("msgpass:2:4:mod:eight").is_err());
+    }
+
+    #[test]
     fn bad_specs_rejected() {
         assert!(SolverSpec::parse("bogus").is_err());
         assert!(SolverSpec::parse("mp:bogus").is_err());
@@ -921,9 +1101,13 @@ mod tests {
                 spec.key()
             );
         }
-        // And at least the in-link baselines must be flagged unsupported.
-        assert!(!SolverSpec::MonteCarlo.supports_dangling());
-        assert!(!SolverSpec::YouTempoQiu.supports_dangling());
+        // PR-6 extended the guard to the in-link baselines and the
+        // random-walk estimator; only the simulated coordinator still
+        // needs an explicitly repaired graph.
+        assert!(SolverSpec::MonteCarlo.supports_dangling());
+        assert!(SolverSpec::YouTempoQiu.supports_dangling());
+        assert!(SolverSpec::IshiiTempo.supports_dangling());
+        assert!(SolverSpec::LeiChen.supports_dangling());
         assert!(!SolverSpec::sequential_coordinator().supports_dangling());
     }
 

@@ -19,9 +19,10 @@
 //! ```
 //!
 //! Axes are applied to the *relevant* specs and are experiment-aware:
-//! `shards`/`batch`/`packer`/`sampling` rewrite the sharded (and, for
-//! `batch`, parallel-mp) solver entries, `latency` rewrites coordinator
-//! entries,
+//! `shards`/`batch` rewrite the sharded and msgpass (and, for `batch`,
+//! parallel-mp) solver entries, `packer`/`sampling` rewrite the sharded
+//! entries, `gossip` rewrites msgpass entries, `latency` rewrites
+//! coordinator entries,
 //! `graph` swaps the whole graph spec (a registry string or object, so a
 //! sweep can range over graph *families*), and naming an axis with no
 //! applicable solver — or a solver-only axis on a size-estimation
@@ -53,8 +54,8 @@ pub struct Sweep {
 
 /// The grid axes [`Sweep`] understands.
 pub const SWEEP_AXES: &[&str] = &[
-    "alpha", "batch", "graph", "latency", "n", "packer", "rounds", "sampling", "seed", "shards",
-    "steps", "stride",
+    "alpha", "batch", "gossip", "graph", "latency", "n", "packer", "rounds", "sampling", "seed",
+    "shards", "steps", "stride",
 ];
 
 fn render_param(v: &Json) -> String {
@@ -165,23 +166,31 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
             }
             let mut hit = false;
             for s in pagerank_solvers(scenario, axis)? {
-                if let SolverSpec::Sharded { shards: sh, batch, .. } = s {
-                    // Keep the parse-time claim-word bound: an axis must
-                    // not assemble a cell the runtime would panic on.
-                    let max = crate::coordinator::sharded::max_batch_budget(shards);
-                    if *batch > max {
-                        return Err(format!(
-                            "axis \"shards\": {shards} shard(s) cap the packable batch \
-                             at {max}, but the solver batch is {batch}"
-                        ));
+                match s {
+                    SolverSpec::Sharded { shards: sh, batch, .. } => {
+                        // Keep the parse-time claim-word bound: an axis must
+                        // not assemble a cell the runtime would panic on.
+                        let max = crate::coordinator::sharded::max_batch_budget(shards);
+                        if *batch > max {
+                            return Err(format!(
+                                "axis \"shards\": {shards} shard(s) cap the packable batch \
+                                 at {max}, but the solver batch is {batch}"
+                            ));
+                        }
+                        *sh = shards;
+                        hit = true;
                     }
-                    *sh = shards;
-                    hit = true;
+                    SolverSpec::Msgpass { shards: sh, .. } => {
+                        *sh = shards;
+                        hit = true;
+                    }
+                    _ => {}
                 }
             }
             if !hit {
                 return Err(
-                    "axis \"shards\" needs a sharded solver in the scenario (e.g. \"sharded:2:8\")"
+                    "axis \"shards\" needs a sharded or msgpass solver in the scenario \
+                     (e.g. \"sharded:2:8\", \"msgpass:2:8\")"
                         .into(),
                 );
             }
@@ -205,6 +214,10 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
                         *b = batch;
                         hit = true;
                     }
+                    SolverSpec::Msgpass { batch: b, .. } => {
+                        *b = batch;
+                        hit = true;
+                    }
                     SolverSpec::ParallelMp { batch: b } => {
                         *b = batch;
                         hit = true;
@@ -214,7 +227,29 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
             }
             if !hit {
                 return Err(
-                    "axis \"batch\" needs a sharded or parallel-mp solver in the scenario".into(),
+                    "axis \"batch\" needs a sharded, msgpass or parallel-mp solver in the \
+                     scenario"
+                        .into(),
+                );
+            }
+        }
+        "gossip" => {
+            let gossip = want_usize()?;
+            if gossip == 0 {
+                return Err("axis \"gossip\": must be >= 1".into());
+            }
+            let mut hit = false;
+            for s in pagerank_solvers(scenario, axis)? {
+                if let SolverSpec::Msgpass { gossip: g, .. } = s {
+                    *g = gossip;
+                    hit = true;
+                }
+            }
+            if !hit {
+                return Err(
+                    "axis \"gossip\" needs a msgpass solver in the scenario (e.g. \
+                     \"msgpass:2:8\")"
+                        .into(),
                 );
             }
         }
@@ -621,6 +656,40 @@ mod tests {
     }
 
     #[test]
+    fn shards_batch_and_gossip_axes_rewrite_msgpass_entries() {
+        let text = r#"{
+          "name": "msgpass-grid",
+          "scenario": {
+            "graph": "paper:12", "solvers": ["msgpass:2:4:mod"],
+            "steps": 100, "stride": 50, "rounds": 1, "threads": 1, "seed": 3
+          },
+          "grid": {"batch": [16], "gossip": [2], "shards": [4]}
+        }"#;
+        let sweep = Sweep::from_json_str(text).expect("parses");
+        let cells = sweep.cells().expect("expands");
+        assert_eq!(cells.len(), 1);
+        assert!(cells[0].1.solvers().contains(&SolverSpec::Msgpass {
+            shards: 4,
+            batch: 16,
+            map: ShardMap::Modulo,
+            gossip: 2,
+        }));
+        // gossip is a msgpass-only axis: loud error without one.
+        let no_msgpass = r#"{
+          "scenario": {"graph": "paper:10", "solvers": ["mp", "sharded:2:4"]},
+          "grid": {"gossip": [4]}
+        }"#;
+        let sweep = Sweep::from_json_str(no_msgpass).expect("parses");
+        assert!(sweep.cells().expect_err("must fail").contains("msgpass"));
+        // And gossip=0 is rejected up front.
+        let zero = r#"{
+          "scenario": {"graph": "paper:10", "solvers": ["msgpass:2:4"]},
+          "grid": {"gossip": [0]}
+        }"#;
+        assert!(Sweep::from_json_str(zero).expect("parses").cells().is_err());
+    }
+
+    #[test]
     fn scalar_axis_values_and_alpha_apply() {
         let sweep = Sweep::from_json_str(&base_json(r#"{"alpha": 0.6}"#)).expect("parses");
         let cells = sweep.cells().expect("expands");
@@ -764,6 +833,7 @@ mod tests {
             (r#"{"shards": [2]}"#, "shards"),
             (r#"{"batch": [4]}"#, "batch"),
             (r#"{"packer": ["worker"]}"#, "packer"),
+            (r#"{"gossip": [4]}"#, "gossip"),
             (r#"{"latency": ["const:0.1"]}"#, "latency"),
             (r#"{"alpha": [0.5]}"#, "alpha"),
         ] {

@@ -24,9 +24,12 @@
 //!   centralized power iteration) and the §IV future-work extensions
 //!   (parallel activation, dynamic graphs, non-uniform sampling, stopping
 //!   certification).
-//! * [`coordinator`] — the distributed runtime: page agents holding the
+//! * [`coordinator`] — the distributed runtimes: page agents holding the
 //!   paper's two scalars per page, activation samplers (uniform /
-//!   exponential clocks / residual-weighted), message protocol, metrics.
+//!   exponential clocks / residual-weighted), message protocol, metrics;
+//!   the multi-threaded `sharded` runtime; and the message-passing
+//!   [`coordinator::msgpass`] backend, whose shards communicate *only*
+//!   through the metered [`network`] transport.
 //! * [`engine`] — the declarative experiment API: [`engine::SolverSpec`]
 //!   (a string registry over every solver variant — including the
 //!   multi-threaded `sharded:<W>` runtime and the `dense` backend — with
@@ -41,8 +44,11 @@
 //!   `BENCH_sweep.json`). Every harness, bench, example and the CLI
 //!   build on it — see docs/ENGINE.md.
 //! * [`network`] — deterministic discrete-event message network with
-//!   latency models and congestion accounting (the simulated substrate —
-//!   see DESIGN.md §6).
+//!   latency models, congestion accounting and the metered
+//!   [`network::transport`] layer (message counts, bytes on the wire,
+//!   queue depths) that carries every cross-shard message of the
+//!   `msgpass:*` backend — load-bearing since the msgpass subsystem,
+//!   not a decorative simulation.
 //! * [`runtime`] — PJRT executor loading the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) for the dense-batched engine.
 //! * [`harness`] — experiment drivers that regenerate the paper's

@@ -130,6 +130,7 @@ fn cmd_list_solvers(_args: &Args) -> Result<(), String> {
     println!(
         "\nparameterized forms: mp:residual[:<floor>], parallel-mp:<batch>, \
          sharded:<shards>[:<batch>[:<mod|block>[:<leader|worker>[:<uniform|residual>]]]], \
+         msgpass:<shards>[:<batch>[:<mod|block>[:<gossip-period>]]], \
          coordinator:<sequential|async>:<uniform|clocks|weighted>:<zero|const:L|uniform:lo:hi|exp:mean>"
     );
     println!(
@@ -429,7 +430,7 @@ COMMANDS:
   sweep       expand one scenario over a grid and merge the reports
               <sweep.json> [--bench-out BENCH_sweep.json --threads T]
               (axes: graph, n, alpha, steps, stride, rounds, seed, shards, batch,
-               packer, sampling, latency; see examples/sweep_small.json)
+               packer, sampling, latency, gossip; see examples/sweep_small.json)
   list-solvers print the engine's solver and estimator registries
   rank        compute PageRank        --graph paper|ba|ws|.. --n 100 --engine sparse|coordinator|dense|power
               [--alpha 0.85 --steps 100000 --seed S --top 10 --latency zero|const:L --mode sequential|async --sampler uniform|clocks|weighted]

@@ -9,17 +9,27 @@
 //!   tie-breaking (same seed ⇒ bit-identical runs);
 //! * [`latency`] — pluggable link-latency models (zero / constant /
 //!   uniform / exponential);
-//! * [`congestion`] — per-page queueing accounting (peak in-flight load,
-//!   used to contrast MP's O(N_k) traffic against the Monte-Carlo
-//!   baseline's walk congestion).
+//! * [`congestion`] — per-destination queueing accounting (peak in-flight
+//!   load, used to contrast MP's O(N_k) traffic against the Monte-Carlo
+//!   baseline's walk congestion);
+//! * [`transport`] — the metered shard-to-shard message layer: latency
+//!   draws, congestion tracking and bytes-on-the-wire accounting behind a
+//!   single `send`/`pop` interface.
 //!
-//! See DESIGN.md §6: the paper used no physical testbed; this simulated
-//! network preserves the communication pattern (which pages talk to which
-//! and how often) — the property the paper's claims are about.
+//! As of the msgpass backend ([`crate::coordinator::msgpass`]) this
+//! substrate is load-bearing, not decorative: every cross-shard residual
+//! update and weight-summary gossip message rides [`transport`], so the
+//! reported message counts, byte totals, queue depths and virtual
+//! time-to-ε are produced by this module's accounting. (The paper used no
+//! physical testbed either; the simulation preserves the communication
+//! pattern — which pages talk to which and how often — the property the
+//! paper's claims are about.)
 
 pub mod congestion;
 pub mod events;
 pub mod latency;
+pub mod transport;
 
 pub use events::{EventQueue, Timed};
 pub use latency::LatencyModel;
+pub use transport::{Transport, TransportEvent, WireSized};

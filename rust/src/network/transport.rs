@@ -1,0 +1,256 @@
+//! Metered shard-to-shard message transport over the virtual-time
+//! [`EventQueue`].
+//!
+//! The msgpass backend ([`crate::coordinator::msgpass`]) communicates
+//! *only* through this layer: every cross-shard payload goes through
+//! [`Transport::send`], which samples a link latency from the configured
+//! [`LatencyModel`], meters the message through the
+//! [`CongestionTracker`] (peak per-shard queue depth, peak total
+//! in-flight) and charges its fixed wire encoding size to the
+//! bytes-on-the-wire counter. Local shard wake-ups
+//! ([`Transport::wake_at`] / [`Transport::wake_in`]) ride the same queue
+//! for deterministic interleaving but are free — they model a shard's
+//! own event loop timer, not network traffic.
+//!
+//! Determinism: the queue breaks time ties FIFO and every latency draw
+//! comes from the caller-supplied [`Rng`], so a run is a pure function
+//! of (graph, seed, latency model) — the same contract the rest of the
+//! simulated network keeps.
+
+use crate::network::congestion::CongestionTracker;
+use crate::network::events::{EventQueue, Timed};
+use crate::network::latency::LatencyModel;
+use crate::util::rng::Rng;
+
+/// Fixed wire encoding size of a message, in bytes. Implementations
+/// return the size of the message's serialized form under the fixed
+/// per-type encoding documented in docs/ENGINE.md (no dynamic parts —
+/// the accounting must be replayable from the message counts alone).
+pub trait WireSized {
+    fn wire_bytes(&self) -> usize;
+}
+
+/// What the transport's event loop yields.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransportEvent<M> {
+    /// A metered shard-to-shard message arriving at `dst`.
+    Deliver { src: usize, dst: usize, msg: M },
+    /// An unmetered local timer on `shard`'s own event loop.
+    Wake { shard: usize },
+}
+
+/// The metered transport: event queue + latency model + congestion and
+/// byte accounting, indexed by *shard* (the unit of distribution in the
+/// msgpass backend — per-page accounting lives in the coordinator's
+/// agent runtime).
+#[derive(Debug)]
+pub struct Transport<M: PartialEq + WireSized> {
+    queue: EventQueue<TransportEvent<M>>,
+    latency: LatencyModel,
+    congestion: CongestionTracker,
+    bytes: u64,
+}
+
+impl<M: PartialEq + WireSized> Transport<M> {
+    pub fn new(shards: usize, latency: LatencyModel) -> Transport<M> {
+        assert!(shards >= 1, "a transport needs at least one shard");
+        Transport {
+            queue: EventQueue::new(),
+            latency,
+            congestion: CongestionTracker::new(shards),
+            bytes: 0,
+        }
+    }
+
+    /// Number of shards the congestion tracker is indexed by.
+    pub fn shards(&self) -> usize {
+        self.congestion.peaks().len()
+    }
+
+    pub fn latency(&self) -> LatencyModel {
+        self.latency
+    }
+
+    /// Send `msg` from shard `src` to shard `dst`: draws one latency
+    /// sample (zero/constant models consume no rng), meters the message
+    /// and schedules its delivery.
+    pub fn send(&mut self, src: usize, dst: usize, msg: M, rng: &mut Rng) {
+        debug_assert!(src != dst, "a shard does not message itself");
+        self.bytes += msg.wire_bytes() as u64;
+        self.congestion.on_send(dst);
+        let delay = self.latency.sample(rng);
+        self.queue.schedule_in(delay, TransportEvent::Deliver { src, dst, msg });
+    }
+
+    /// Schedule an unmetered local wake-up for `shard` at absolute
+    /// virtual time `at`.
+    pub fn wake_at(&mut self, shard: usize, at: f64) {
+        self.queue.schedule(at, TransportEvent::Wake { shard });
+    }
+
+    /// Schedule an unmetered local wake-up for `shard` after `delay`.
+    pub fn wake_in(&mut self, shard: usize, delay: f64) {
+        self.queue.schedule_in(delay, TransportEvent::Wake { shard });
+    }
+
+    /// Pop the earliest event, advancing virtual time; deliveries are
+    /// drained from the congestion tracker here, so peak depths reflect
+    /// genuine in-flight overlap under the latency model.
+    pub fn pop(&mut self) -> Option<Timed<TransportEvent<M>>> {
+        let ev = self.queue.pop();
+        if let Some(t) = &ev {
+            if let TransportEvent::Deliver { dst, .. } = &t.event {
+                self.congestion.on_deliver(*dst);
+            }
+        }
+        ev
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.queue.now()
+    }
+
+    /// Total metered messages sent so far.
+    pub fn messages_sent(&self) -> u64 {
+        self.congestion.total_messages()
+    }
+
+    /// Total bytes charged to the wire so far (fixed per-type encoding).
+    pub fn bytes_on_wire(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Peak number of messages simultaneously queued for any single
+    /// shard over the run.
+    pub fn peak_queue_depth(&self) -> u32 {
+        self.congestion.peak_page_load()
+    }
+
+    /// Peak number of messages simultaneously in flight network-wide.
+    pub fn peak_in_flight(&self) -> u32 {
+        self.congestion.peak_total()
+    }
+
+    /// Per-shard peak queue depths (hotspot reports).
+    pub fn peak_depths(&self) -> &[u32] {
+        self.congestion.peaks()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Clone, PartialEq)]
+    struct Ping(u32);
+
+    impl WireSized for Ping {
+        fn wire_bytes(&self) -> usize {
+            12
+        }
+    }
+
+    #[test]
+    fn meters_messages_and_bytes() {
+        let mut t: Transport<Ping> = Transport::new(3, LatencyModel::Zero);
+        let mut rng = Rng::seeded(1);
+        t.send(0, 1, Ping(7), &mut rng);
+        t.send(0, 2, Ping(8), &mut rng);
+        t.send(1, 2, Ping(9), &mut rng);
+        assert_eq!(t.messages_sent(), 3);
+        assert_eq!(t.bytes_on_wire(), 36);
+        assert_eq!(t.len(), 3);
+        // Wakes ride the queue but are free.
+        t.wake_in(0, 0.0);
+        assert_eq!(t.messages_sent(), 3);
+        assert_eq!(t.bytes_on_wire(), 36);
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn zero_latency_delivers_fifo_and_draws_no_rng() {
+        let mut t: Transport<Ping> = Transport::new(2, LatencyModel::Zero);
+        let mut rng = Rng::seeded(2);
+        let mut witness = rng.clone();
+        for i in 0..5 {
+            t.send(0, 1, Ping(i), &mut rng);
+        }
+        // Zero (and constant) latency must not consume the stream.
+        assert_eq!(rng.next_u64(), witness.next_u64());
+        for i in 0..5 {
+            let ev = t.pop().expect("delivery");
+            assert_eq!(ev.time, 0.0);
+            match ev.event {
+                TransportEvent::Deliver { src, dst, msg } => {
+                    assert_eq!((src, dst), (0, 1));
+                    assert_eq!(msg, Ping(i), "same-time deliveries must pop FIFO");
+                }
+                TransportEvent::Wake { .. } => panic!("no wakes scheduled"),
+            }
+        }
+        assert!(t.pop().is_none());
+    }
+
+    #[test]
+    fn constant_latency_orders_wakes_and_deliveries_by_time() {
+        let mut t: Transport<Ping> = Transport::new(2, LatencyModel::Constant(2.0));
+        let mut rng = Rng::seeded(3);
+        t.wake_at(1, 1.0);
+        t.send(0, 1, Ping(0), &mut rng); // delivers at 2.0
+        t.wake_at(1, 3.0);
+        let order: Vec<f64> = std::iter::from_fn(|| t.pop()).map(|e| e.time).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn peak_in_flight_under_exponential_latency() {
+        // Burst-send under the exponential model: every message is in
+        // flight until popped, so the peaks must reflect the burst, then
+        // drain back to a sticky maximum.
+        let mut t: Transport<Ping> = Transport::new(4, LatencyModel::Exponential { mean: 1.0 });
+        let mut rng = Rng::seeded(4);
+        for i in 0..8 {
+            t.send(0, 1 + (i % 3) as usize, Ping(i), &mut rng);
+        }
+        assert_eq!(t.peak_in_flight(), 8, "burst of 8 all in flight");
+        assert!(t.peak_queue_depth() >= 3, "8 messages over 3 shards");
+        assert!(t.peak_queue_depth() <= 8);
+        let mut last = f64::NEG_INFINITY;
+        let mut delivered = 0;
+        while let Some(ev) = t.pop() {
+            assert!(ev.time >= last, "deliveries advance virtual time");
+            assert!(ev.time > 0.0, "exponential latency is a.s. positive");
+            last = ev.time;
+            delivered += 1;
+        }
+        assert_eq!(delivered, 8);
+        // Draining never lowers the sticky peaks.
+        assert_eq!(t.peak_in_flight(), 8);
+        assert_eq!(t.messages_sent(), 8);
+        assert_eq!(t.bytes_on_wire(), 96);
+    }
+
+    #[test]
+    fn exponential_latency_is_deterministic_per_seed() {
+        let times = |seed: u64| -> Vec<f64> {
+            let mut t: Transport<Ping> =
+                Transport::new(2, LatencyModel::Exponential { mean: 0.5 });
+            let mut rng = Rng::seeded(seed);
+            for i in 0..6 {
+                t.send(0, 1, Ping(i), &mut rng);
+            }
+            std::iter::from_fn(|| t.pop()).map(|e| e.time).collect()
+        };
+        assert_eq!(times(7), times(7));
+        assert_ne!(times(7), times(8));
+    }
+}

@@ -256,6 +256,37 @@ fn one_shard_sharded_scenario_matches_matrix_mp() {
 }
 
 #[test]
+fn one_shard_msgpass_scenario_matches_matrix_mp() {
+    // The message-passing equivalence anchor: msgpass:1:1:mod at zero
+    // latency runs one activation per super-step on a single shard whose
+    // candidate stream is a verbatim clone of the Scenario rng (the same
+    // protocol as the sharded worker packer), and one shard never sends
+    // a message — so the trajectory must replay `mp` bit for bit.
+    let report = small(
+        "msgpass-vs-mp",
+        vec![
+            SolverSpec::Mp,
+            SolverSpec::parse("msgpass:1:1:mod").expect("registry"),
+        ],
+    )
+    .run()
+    .expect("runs");
+    let mp = report.get("mp").expect("mp ran");
+    let msg = report.get("msgpass:1:1:mod").expect("msgpass ran");
+    assert_eq!(
+        mp.total_stats, msg.total_stats,
+        "identical activation sequences must cost the same"
+    );
+    for (a, b) in mp.trajectory.mean.iter().zip(&msg.trajectory.mean) {
+        assert!(
+            (a - b).abs() <= 1e-9 * a.abs() + 1e-30,
+            "trajectories diverged: {a} vs {b}"
+        );
+    }
+    assert_eq!(msg.conflicts, 0, "msgpass owners never conflict");
+}
+
+#[test]
 fn one_shard_residual_sharded_matches_matrix_residual_mp() {
     // The residual-sampling equivalence anchor, pinned for BOTH packers:
     // at shards=1 batch=1, the global and per-shard weight trees are the
@@ -468,8 +499,15 @@ fn dangling_graph_runs_every_backend_to_finite_convergence() {
         SolverSpec::GreedyMp,
         SolverSpec::ParallelMp { batch: 4 },
         SolverSpec::parse("sharded:2:4").expect("registry"),
+        SolverSpec::parse("msgpass:2:4:mod").expect("registry"),
         SolverSpec::Dense,
         SolverSpec::PowerIteration,
+        // The PR-6 guard extensions: in-link baselines and the
+        // random-walk estimator on a genuine sink graph.
+        SolverSpec::IshiiTempo,
+        SolverSpec::YouTempoQiu,
+        SolverSpec::LeiChen,
+        SolverSpec::MonteCarlo,
     ])
     .with_steps(2_000)
     .with_stride(500)
@@ -550,6 +588,13 @@ fn shipped_sweep_and_smoke_files_parse() {
             .iter()
             .any(|s| matches!(s, SolverSpec::Sharded { .. })),
         "smoke scenario must include a sharded backend"
+    );
+    assert!(
+        scenario
+            .solvers()
+            .iter()
+            .any(|s| matches!(s, SolverSpec::Msgpass { .. })),
+        "smoke scenario must include a msgpass backend"
     );
 
     let sweep_text = std::fs::read_to_string(root.join("examples/sweep_small.json"))

@@ -21,18 +21,26 @@
 //! All solvers are named and built through the engine registry — the
 //! bench measures exactly what a `Scenario` would run.
 //!
+//! * **webgraph**: the corpus-scale pipeline — generate (or reuse) a
+//!   million-page synthetic webgraph on disk, measure streaming text
+//!   ingest vs the `.csrbin` binary cache (`load_ms`, `graph_bytes`,
+//!   `peak_rss_bytes`), then race mp:residual (in-link-free graph), the
+//!   sharded worker runtime and the message-passing backend on it,
+//!   merging cells into `BENCH_throughput.json`.
+//!
 //! `cargo bench --bench throughput`. Env knobs:
 //! `PAGERANK_BENCH_QUICK=1` shrinks every section to a CI smoke size;
 //! `THROUGHPUT_ONLY=sharded-sweep` runs only the leader-saturation
-//! section, `THROUGHPUT_ONLY=network-sweep` only the msgpass race (CI
-//! runs both on every push to keep the `bench-json` artifact fed).
+//! section, `THROUGHPUT_ONLY=network-sweep` only the msgpass race,
+//! `THROUGHPUT_ONLY=webgraph` only the corpus pipeline (CI runs all
+//! three on every push to keep the `bench-json` artifact fed).
 
 use std::collections::BTreeMap;
 
 use pagerank_mp::algo::common::PageRankSolver;
 use pagerank_mp::coordinator::{MsgpassRuntime, Packer, Sampling, ShardMap};
 use pagerank_mp::engine::{CoordinatorSolver, ShardedSolver, SolverSpec};
-use pagerank_mp::graph::generators;
+use pagerank_mp::graph::{generators, io as graph_io, DanglingPolicy, LoadOptions};
 use pagerank_mp::linalg::vector;
 use pagerank_mp::network::LatencyModel;
 use pagerank_mp::util::bench;
@@ -302,6 +310,217 @@ fn network_msgpass_sweep(quick: bool) {
     println!("wrote {}", out.display());
 }
 
+/// Peak resident set size (`VmHWM` from `/proc/self/status`) in bytes;
+/// 0.0 on platforms without procfs — the column is then absent-as-zero
+/// rather than fabricated.
+fn peak_rss_bytes() -> f64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find_map(|l| l.strip_prefix("VmHWM:"))
+                .and_then(|rest| rest.trim().trim_end_matches("kB").trim().parse::<f64>().ok())
+        })
+        .map(|kb| kb * 1024.0)
+        .unwrap_or(0.0)
+}
+
+/// The repo root (the bench binary's package dir is `rust/`).
+fn repo_root() -> &'static std::path::Path {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package sits inside the repo")
+}
+
+/// Merge webgraph cells into `BENCH_throughput.json` without clobbering
+/// the leader-saturation section: stale `webgraph*` cells are replaced,
+/// everything else in the artifact is preserved. (The sharded sweep
+/// still rewrites the file wholesale, so CI runs it before this
+/// section.)
+fn merge_webgraph_cells(new_cells: Vec<Json>) {
+    let out = repo_root().join("BENCH_throughput.json");
+    let mut doc: BTreeMap<String, Json> = match std::fs::read_to_string(&out)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+    {
+        Some(Json::Object(m)) => m,
+        _ => {
+            let mut m = BTreeMap::new();
+            m.insert("bench".to_string(), Json::String("throughput.webgraph".to_string()));
+            m
+        }
+    };
+    let mut cells: Vec<Json> = match doc.remove("cells") {
+        Some(Json::Array(a)) => a,
+        _ => Vec::new(),
+    };
+    cells.retain(|c| {
+        c.get("spec")
+            .and_then(Json::as_str)
+            .map(|s| !s.starts_with("webgraph"))
+            .unwrap_or(true)
+    });
+    cells.extend(new_cells);
+    doc.insert("cells".to_string(), Json::Array(cells));
+    pagerank_mp::harness::report::write_file(&out, &Json::Object(doc).render())
+        .expect("write BENCH_throughput.json");
+    println!("wrote {}", out.display());
+}
+
+fn webgraph_load_cell(spec: &str, n: usize, m: usize, load_ms: f64, graph_bytes: usize) -> Json {
+    println!(
+        "{spec:<30} {n:>9} pages  {m:>10} edges  load {load_ms:>8.1} ms  \
+         graph {:>7} B  rss {:>7} B",
+        bench::format_count(graph_bytes as f64),
+        bench::format_count(peak_rss_bytes()),
+    );
+    let mut cell = BTreeMap::new();
+    cell.insert("spec".to_string(), Json::String(spec.to_string()));
+    cell.insert("n".to_string(), Json::Number(n as f64));
+    cell.insert("edges".to_string(), Json::Number(m as f64));
+    cell.insert("load_ms".to_string(), Json::Number(load_ms));
+    cell.insert("graph_bytes".to_string(), Json::Number(graph_bytes as f64));
+    cell.insert("peak_rss_bytes".to_string(), Json::Number(peak_rss_bytes()));
+    Json::Object(cell)
+}
+
+fn webgraph_race_cell(
+    spec: &str,
+    activations: u64,
+    wall: std::time::Duration,
+    graph_bytes: usize,
+) -> Json {
+    let acts_per_sec = activations as f64 / wall.as_secs_f64();
+    println!(
+        "{spec:<30} {activations:>9} acts  {:>8.1} ms  {:>10}/s  graph {:>7} B",
+        wall.as_secs_f64() * 1e3,
+        bench::format_count(acts_per_sec),
+        bench::format_count(graph_bytes as f64),
+    );
+    let mut cell = BTreeMap::new();
+    cell.insert("spec".to_string(), Json::String(spec.to_string()));
+    cell.insert("activations".to_string(), Json::Number(activations as f64));
+    cell.insert("wall_ms".to_string(), Json::Number(wall.as_secs_f64() * 1e3));
+    cell.insert("acts_per_sec".to_string(), Json::Number(acts_per_sec));
+    cell.insert("graph_bytes".to_string(), Json::Number(graph_bytes as f64));
+    cell.insert("peak_rss_bytes".to_string(), Json::Number(peak_rss_bytes()));
+    Json::Object(cell)
+}
+
+/// The corpus-scale webgraph pipeline (ISSUE 7): generate (or reuse) a
+/// million-page synthetic corpus on disk, measure streaming text ingest
+/// vs the `.csrbin` binary cache, then race mp:residual (on an
+/// in-link-free graph — the lean-storage payoff), the sharded worker
+/// runtime and the message-passing backend (which pays for the lazy
+/// transpose) on it. Cells merge into `BENCH_throughput.json` next to
+/// the leader-saturation sweep. Quick mode shrinks the corpus to 50k
+/// pages for the CI smoke gate.
+fn webgraph_bench(quick: bool) {
+    println!("\n=== webgraph corpus: streaming ingest + corpus-scale race ===");
+    let (n, mp_acts, sharded_steps, msgpass_steps) = if quick {
+        (50_000usize, 100_000u64, 32usize, 8usize)
+    } else {
+        (1_000_000, 1_000_000, 64, 16)
+    };
+    let seed = 2017u64;
+    let corpus_dir = repo_root().join("corpus");
+    let path = corpus_dir.join(format!("webgraph_{n}_{seed}.txt"));
+    if !path.exists() {
+        std::fs::create_dir_all(&corpus_dir).expect("create corpus dir");
+        let t0 = std::time::Instant::now();
+        let f = std::fs::File::create(&path).expect("create corpus file");
+        generators::write_webgraph_corpus(n, seed, std::io::BufWriter::new(f))
+            .expect("stream corpus to disk");
+        println!(
+            "generated {} in {:.1}s",
+            path.display(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    // SelfLoop, NOT the LinkAll default: at 10⁶ pages LinkAll would
+    // materialize n-1 repair edges per dangling page (~1.8% of the
+    // corpus) — an OOM, not a policy.
+    let opts = LoadOptions::new(DanglingPolicy::SelfLoop);
+    let mut cells = Vec::new();
+
+    // ---- streaming text ingest (two passes, straight into CSR) ----
+    let t0 = std::time::Instant::now();
+    let g = graph_io::load_with(&path, &opts).expect("corpus loads");
+    let text_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(g.n(), n);
+    cells.push(webgraph_load_cell("webgraph-load:text", n, g.m(), text_ms, g.memory_bytes()));
+
+    // ---- .csrbin binary cache ----
+    let bin = graph_io::csrbin_path(&path);
+    graph_io::write_csrbin(&g, &bin, &opts).expect("write csrbin");
+    let t0 = std::time::Instant::now();
+    let (gbin, bin_opts) = graph_io::read_csrbin(&bin).expect("csrbin loads");
+    let bin_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(gbin, g, "csrbin must round-trip the corpus exactly");
+    assert_eq!(bin_opts.dangling, opts.dangling);
+    cells.push(webgraph_load_cell("webgraph-load:csrbin", n, gbin.m(), bin_ms, gbin.memory_bytes()));
+    drop(gbin);
+
+    // ---- race: residual-weighted MP on an in-link-free graph ----
+    let lean = g.clone().without_in_links();
+    let lean_bytes = lean.memory_bytes();
+    let mut mp = SolverSpec::parse("mp:residual").expect("registry").build(&lean, 0.85, 21);
+    let mut rng = Rng::seeded(21);
+    let t0 = std::time::Instant::now();
+    for _ in 0..mp_acts {
+        std::hint::black_box(mp.step(&mut rng));
+    }
+    let wall = t0.elapsed();
+    assert!(!lean.in_links_built(), "MP must never touch the transpose");
+    cells.push(webgraph_race_cell("webgraph:mp:residual", mp_acts, wall, lean_bytes));
+    drop(mp);
+    drop(lean);
+
+    // ---- race: sharded worker runtime (out-links only, too) ----
+    let batch = 256usize;
+    let mut sh =
+        ShardedSolver::new(&g, 0.85, 4, batch, ShardMap::Modulo, Packer::Worker, Sampling::Uniform);
+    let mut rng = Rng::seeded(22);
+    for _ in 0..4 {
+        sh.step(&mut rng); // warm-up
+    }
+    let act0 = sh.runtime().activations();
+    let t0 = std::time::Instant::now();
+    for _ in 0..sharded_steps {
+        std::hint::black_box(sh.step(&mut rng));
+    }
+    let wall = t0.elapsed();
+    let applied = sh.runtime().activations() - act0;
+    cells.push(webgraph_race_cell(
+        &format!("webgraph:sharded:4:{batch}:mod:worker"),
+        applied,
+        wall,
+        g.memory_bytes(),
+    ));
+    drop(sh);
+    assert!(!g.in_links_built(), "the sharded runtime is out-link only");
+
+    // ---- race: message-passing backend (pays the lazy transpose) ----
+    let mut rt =
+        MsgpassRuntime::new(g.clone(), 0.85, 2, batch, ShardMap::Modulo, 8, LatencyModel::Zero);
+    let mut rng = Rng::seeded(23);
+    let t0 = std::time::Instant::now();
+    // eps far below reach: the super-step cap governs the budget.
+    rt.run_to_residual(1e-300, msgpass_steps, &mut rng);
+    let wall = t0.elapsed();
+    // Materialize the transpose on the shared graph to report what an
+    // in-link consumer actually holds in memory.
+    let _ = g.inc(0);
+    cells.push(webgraph_race_cell(
+        &format!("webgraph:msgpass:2:{batch}:mod"),
+        rt.activations(),
+        wall,
+        g.memory_bytes(),
+    ));
+
+    merge_webgraph_cells(cells);
+}
+
 fn main() {
     let quick = bench::quick_mode();
     if std::env::var("THROUGHPUT_ONLY").as_deref() == Ok("sharded-sweep") {
@@ -310,6 +529,10 @@ fn main() {
     }
     if std::env::var("THROUGHPUT_ONLY").as_deref() == Ok("network-sweep") {
         network_msgpass_sweep(quick);
+        return;
+    }
+    if std::env::var("THROUGHPUT_ONLY").as_deref() == Ok("webgraph") {
+        webgraph_bench(quick);
         return;
     }
     let mut b = bench::standard();
@@ -402,6 +625,7 @@ fn main() {
 
     sharded_saturation_sweep(quick);
     network_msgpass_sweep(quick);
+    webgraph_bench(quick);
 
     println!("\n{}", b.to_csv());
     pagerank_mp::harness::report::write_file(

@@ -52,6 +52,7 @@ struct Row {
     acts_per_sec: Option<f64>,
     vtime_to_eps: Option<f64>,
     bytes_on_wire: Option<f64>,
+    load_ms: Option<f64>,
 }
 
 fn finite(v: Option<&Json>) -> Option<f64> {
@@ -69,6 +70,7 @@ fn run_row(s: &Json) -> Row {
         acts_per_sec: finite(s.get("acts_per_sec")),
         vtime_to_eps: finite(s.get("vtime_to_eps")),
         bytes_on_wire: finite(s.get("bytes_on_wire")),
+        load_ms: finite(s.get("load_ms")),
     }
 }
 
@@ -234,6 +236,7 @@ fn run(old_path: &str, new_path: &str, threshold: f64) -> Result<Vec<String>, St
             check(key, "acts_per_sec", o.acts_per_sec, n.acts_per_sec, threshold, false),
             check(key, "vtime_to_eps", o.vtime_to_eps, n.vtime_to_eps, threshold, true),
             check(key, "bytes_on_wire", o.bytes_on_wire, n.bytes_on_wire, threshold, true),
+            check(key, "load_ms", o.load_ms, n.load_ms, threshold, true),
         ]
         .into_iter()
         .flatten()
@@ -380,6 +383,27 @@ mod tests {
         .expect("json");
         let err = extract(&unknown).expect_err("unknown cell shape must refuse");
         assert!(err.contains("cell #0"), "{err}");
+    }
+
+    #[test]
+    fn webgraph_load_time_regressions_are_flagged() {
+        // The webgraph section reports corpus load times keyed like any
+        // other throughput cell; load_ms is a lower-is-better metric.
+        let doc = |ms: f64| {
+            format!(
+                r#"{{"bench": "throughput.sharded_sweep", "cells": [
+                     {{"spec": "webgraph-load:text", "load_ms": {ms},
+                       "peak_rss_bytes": 123456.0}}]}}"#
+            )
+        };
+        let old = extract(&Json::parse(&doc(1000.0)).expect("json")).expect("extracts");
+        let new = extract(&Json::parse(&doc(1600.0)).expect("json")).expect("extracts");
+        let key = "webgraph-load:text";
+        assert_eq!(old[key].load_ms, Some(1000.0));
+        let flagged = check(key, "load_ms", old[key].load_ms, new[key].load_ms, 0.15, true);
+        assert!(flagged.is_some(), "a 60% slower corpus load must flag");
+        let quiet = check(key, "load_ms", old[key].load_ms, Some(1050.0), 0.15, true);
+        assert!(quiet.is_none(), "5% load-time jitter stays quiet");
     }
 
     #[test]

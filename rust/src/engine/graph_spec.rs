@@ -5,13 +5,38 @@
 //! [`crate::graph::generators::by_name`] synthetic families, or an
 //! edge-list file on disk. Specs are pure data — they parse from compact
 //! registry strings (`"er-threshold:100:0.5"`, `"ba:1000"`,
-//! `"file:web.txt"`), round-trip through [`crate::util::json::Json`], and
-//! build deterministically from a seed.
+//! `"file:web.txt"`, `"file:web.txt:selfloop"`), round-trip through
+//! [`crate::util::json::Json`], and build deterministically from a seed.
+//!
+//! [`GraphSpec::build_cached`] adds a per-process cache keyed by
+//! `(spec key, seed)` so a sweep over solvers does not reload a
+//! 10⁷-edge corpus once per cell.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::graph::{generators, io as graph_io, DanglingPolicy, Graph};
+use crate::graph::{generators, io as graph_io, DanglingPolicy, Graph, LoadOptions};
 use crate::util::json::Json;
+
+/// Registry string for a dangling policy (`file:` spec suffix and the
+/// JSON `"dangling"` key).
+pub fn dangling_key(p: DanglingPolicy) -> &'static str {
+    match p {
+        DanglingPolicy::Error => "error",
+        DanglingPolicy::SelfLoop => "selfloop",
+        DanglingPolicy::LinkAll => "linkall",
+    }
+}
+
+/// Inverse of [`dangling_key`].
+pub fn dangling_from_key(s: &str) -> Option<DanglingPolicy> {
+    match s {
+        "error" => Some(DanglingPolicy::Error),
+        "selfloop" => Some(DanglingPolicy::SelfLoop),
+        "linkall" => Some(DanglingPolicy::LinkAll),
+        _ => None,
+    }
+}
 
 /// A serializable description of a workload graph.
 #[derive(Debug, Clone, PartialEq)]
@@ -19,14 +44,26 @@ pub enum GraphSpec {
     /// The paper's §III model: N×N iid U\[0,1\] entries thresholded.
     ErThreshold { n: usize, threshold: f64 },
     /// Any family registered in [`generators::by_name`] (`"ba"`, `"ws"`,
-    /// `"er-sparse"`, `"sbm"`, `"ring"`, `"star"`, `"complete"`, and
-    /// `"chain"` — the one family that deliberately keeps a dangling
-    /// tail page, for exercising the solvers' implicit self-loop guard).
+    /// `"er-sparse"`, `"sbm"`, `"ring"`, `"star"`, `"complete"`,
+    /// `"webgraph"` — the deterministic corpus model — and `"chain"`;
+    /// chain and webgraph deliberately keep dangling pages, for
+    /// exercising the solvers' implicit self-loop guard).
     Family { family: String, n: usize },
-    /// A plain-text edge list loaded from disk (dangling pages repaired
-    /// with the LinkAll policy, as the CLI does).
-    File { path: String },
+    /// A plain-text edge list loaded from disk via the streaming
+    /// loader. `dangling` selects the repair policy (default LinkAll —
+    /// the behaviour file specs have always had; use `selfloop` for
+    /// corpus-scale files, where LinkAll would materialize n-1 edges
+    /// per sink page).
+    File { path: String, dangling: DanglingPolicy },
 }
+
+/// Bounded per-process graph cache: most-recently-used at the back.
+fn graph_cache() -> &'static Mutex<Vec<((String, u64), Arc<Graph>)>> {
+    static CACHE: OnceLock<Mutex<Vec<((String, u64), Arc<Graph>)>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+const GRAPH_CACHE_CAP: usize = 4;
 
 impl GraphSpec {
     /// The paper's experiment graph at size `n`.
@@ -34,20 +71,32 @@ impl GraphSpec {
         GraphSpec::ErThreshold { n, threshold: 0.5 }
     }
 
+    /// A file spec with the default (LinkAll) dangling policy.
+    pub fn file<S: Into<String>>(path: S) -> GraphSpec {
+        GraphSpec::File { path: path.into(), dangling: DanglingPolicy::LinkAll }
+    }
+
     /// Canonical registry string (inverse of [`GraphSpec::parse`]).
+    /// File specs with the default LinkAll policy render bare
+    /// (`file:<path>`), so pre-existing keys are unchanged.
     pub fn key(&self) -> String {
         match self {
             GraphSpec::ErThreshold { n, threshold } => format!("er-threshold:{n}:{threshold}"),
             GraphSpec::Family { family, n } => format!("{family}:{n}"),
-            GraphSpec::File { path } => format!("file:{path}"),
+            GraphSpec::File { path, dangling: DanglingPolicy::LinkAll } => format!("file:{path}"),
+            GraphSpec::File { path, dangling } => {
+                format!("file:{path}:{}", dangling_key(*dangling))
+            }
         }
     }
 
     /// Parse a registry string: `er-threshold:<n>[:<threshold>]`,
-    /// `paper:<n>`, `<family>:<n>`, or `file:<path>`.
+    /// `paper:<n>`, `<family>:<n>`, or
+    /// `file:<path>[:<error|selfloop|linkall>]`.
     pub fn parse(s: &str) -> Result<GraphSpec, String> {
         let parts: Vec<&str> = s.split(':').collect();
-        let usage = "graph spec: er-threshold:<n>[:<thr>] | <family>:<n> | file:<path>";
+        let usage = "graph spec: er-threshold:<n>[:<thr>] | <family>:<n> | \
+                     file:<path>[:<error|selfloop|linkall>]";
         match parts.as_slice() {
             ["er-threshold", n] | ["paper", n] => Ok(GraphSpec::ErThreshold {
                 n: n.parse().map_err(|_| format!("bad n in {s:?}"))?,
@@ -59,12 +108,21 @@ impl GraphSpec {
             }),
             ["file"] => Err(usage.to_string()),
             ["file", ..] => {
-                // Re-join: file paths may themselves contain ':'.
-                let path = s["file:".len()..].to_string();
+                // Re-join: file paths may themselves contain ':'. A
+                // trailing segment is treated as the dangling policy
+                // only when it is exactly a policy name.
+                let rest = &s["file:".len()..];
+                let (path, dangling) = match rest.rsplit_once(':') {
+                    Some((head, tail)) if !head.is_empty() => match dangling_from_key(tail) {
+                        Some(p) => (head.to_string(), p),
+                        None => (rest.to_string(), DanglingPolicy::LinkAll),
+                    },
+                    _ => (rest.to_string(), DanglingPolicy::LinkAll),
+                };
                 if path.is_empty() {
                     return Err(usage.to_string());
                 }
-                Ok(GraphSpec::File { path })
+                Ok(GraphSpec::File { path, dangling })
             }
             [family, n] => {
                 let n: usize = n.parse().map_err(|_| format!("bad n in {s:?}"))?;
@@ -100,13 +158,43 @@ impl GraphSpec {
             }
             GraphSpec::Family { family, n } => generators::by_name(family, *n, seed)
                 .ok_or_else(|| format!("unknown graph family {family:?}")),
-            GraphSpec::File { path } => graph_io::load(path, DanglingPolicy::LinkAll)
-                .map_err(|e| format!("loading graph {path:?}: {e}")),
+            GraphSpec::File { path, dangling } => {
+                graph_io::load_with(path, &LoadOptions::new(*dangling))
+                    .map_err(|e| format!("loading graph {path:?}: {e}"))
+            }
         }
     }
 
+    /// [`GraphSpec::build`] through the bounded per-process cache keyed
+    /// by `(spec key, seed)` — a sweep racing many solvers on one
+    /// 10⁷-edge corpus loads it once, not once per cell. The shared
+    /// [`Graph`] is immutable (its lazy in-CSR is thread-safe), so
+    /// handing the same `Arc` to every cell is sound.
+    pub fn build_cached(&self, seed: u64) -> Result<Arc<Graph>, String> {
+        let key = (self.key(), seed);
+        if let Ok(mut cache) = graph_cache().lock() {
+            if let Some(pos) = cache.iter().position(|(k, _)| *k == key) {
+                let entry = cache.remove(pos);
+                let g = Arc::clone(&entry.1);
+                cache.push(entry); // refresh LRU position
+                return Ok(g);
+            }
+        }
+        let g = Arc::new(self.build(seed)?);
+        if let Ok(mut cache) = graph_cache().lock() {
+            if cache.len() >= GRAPH_CACHE_CAP {
+                cache.remove(0);
+            }
+            cache.push((key, Arc::clone(&g)));
+        }
+        Ok(g)
+    }
+
     /// JSON object form: `{"kind": "er-threshold", "n": 100, "threshold": 0.5}`,
-    /// `{"kind": "ba", "n": 1000}`, `{"kind": "file", "path": "web.txt"}`.
+    /// `{"kind": "ba", "n": 1000}`,
+    /// `{"kind": "file", "path": "web.txt", "dangling": "selfloop"}`
+    /// (the `"dangling"` key is omitted for the default LinkAll, so
+    /// pre-existing scenario files serialize unchanged).
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         match self {
@@ -119,9 +207,15 @@ impl GraphSpec {
                 m.insert("kind".to_string(), Json::String(family.clone()));
                 m.insert("n".to_string(), Json::Number(*n as f64));
             }
-            GraphSpec::File { path } => {
+            GraphSpec::File { path, dangling } => {
                 m.insert("kind".to_string(), Json::String("file".into()));
                 m.insert("path".to_string(), Json::String(path.clone()));
+                if *dangling != DanglingPolicy::LinkAll {
+                    m.insert(
+                        "dangling".to_string(),
+                        Json::String(dangling_key(*dangling).into()),
+                    );
+                }
             }
         }
         Json::Object(m)
@@ -151,7 +245,18 @@ impl GraphSpec {
                     .get("path")
                     .and_then(Json::as_str)
                     .ok_or("file graph needs a \"path\" string")?;
-                Ok(GraphSpec::File { path: path.to_string() })
+                let dangling = match v.get("dangling") {
+                    None => DanglingPolicy::LinkAll,
+                    Some(d) => {
+                        let key = d.as_str().ok_or("\"dangling\" must be a string")?;
+                        dangling_from_key(key).ok_or_else(|| {
+                            format!(
+                                "unknown dangling policy {key:?} (error | selfloop | linkall)"
+                            )
+                        })?
+                    }
+                };
+                Ok(GraphSpec::File { path: path.to_string(), dangling })
             }
             family => {
                 let n = v
@@ -173,7 +278,15 @@ mod tests {
 
     #[test]
     fn parse_and_key_round_trip() {
-        for s in ["er-threshold:40:0.5", "ba:100", "ring:12", "file:graphs/web.txt"] {
+        for s in [
+            "er-threshold:40:0.5",
+            "ba:100",
+            "ring:12",
+            "webgraph:64",
+            "file:graphs/web.txt",
+            "file:graphs/web.txt:selfloop",
+            "file:graphs/web.txt:error",
+        ] {
             let spec = GraphSpec::parse(s).expect("parses");
             assert_eq!(
                 GraphSpec::parse(&spec.key()).expect("key re-parses"),
@@ -189,6 +302,27 @@ mod tests {
             GraphSpec::parse("paper:100").expect("parses"),
             GraphSpec::ErThreshold { n: 100, threshold: 0.5 }
         );
+    }
+
+    #[test]
+    fn file_spec_policy_suffix_grammar() {
+        // Bare form: LinkAll, and the key stays bare (back-compat).
+        let bare = GraphSpec::parse("file:web.txt").expect("parses");
+        assert_eq!(bare, GraphSpec::file("web.txt"));
+        assert_eq!(bare.key(), "file:web.txt");
+
+        // Policy suffix.
+        let sl = GraphSpec::parse("file:web.txt:selfloop").expect("parses");
+        assert_eq!(
+            sl,
+            GraphSpec::File { path: "web.txt".into(), dangling: DanglingPolicy::SelfLoop }
+        );
+        assert_eq!(sl.key(), "file:web.txt:selfloop");
+
+        // A trailing segment that is NOT a policy name stays in the path
+        // (paths may contain ':').
+        let windowsy = GraphSpec::parse("file:C:/graphs/web.txt").expect("parses");
+        assert_eq!(windowsy, GraphSpec::file("C:/graphs/web.txt"));
     }
 
     #[test]
@@ -215,11 +349,23 @@ mod tests {
     }
 
     #[test]
+    fn build_cached_shares_one_graph_per_spec_and_seed() {
+        let spec = GraphSpec::paper(23);
+        let a = spec.build_cached(911).expect("builds");
+        let b = spec.build_cached(911).expect("builds");
+        assert!(Arc::ptr_eq(&a, &b), "same (spec, seed) must share one graph");
+        let c = spec.build_cached(912).expect("builds");
+        assert!(!Arc::ptr_eq(&a, &c), "a different seed is a different graph");
+        assert_eq!(*a, spec.build(911).expect("builds"));
+    }
+
+    #[test]
     fn json_round_trip() {
         for spec in [
             GraphSpec::ErThreshold { n: 30, threshold: 0.4 },
             GraphSpec::Family { family: "ba".into(), n: 50 },
-            GraphSpec::File { path: "x/y.txt".into() },
+            GraphSpec::file("x/y.txt"),
+            GraphSpec::File { path: "x/y.txt".into(), dangling: DanglingPolicy::SelfLoop },
         ] {
             let j = spec.to_json();
             let text = j.render();
@@ -227,6 +373,23 @@ mod tests {
                 .expect("round trips");
             assert_eq!(back, spec);
         }
+        // The default policy serializes without a "dangling" key — the
+        // pre-existing schema.
+        let rendered = GraphSpec::file("x/y.txt").to_json().render();
+        assert!(!rendered.contains("dangling"), "{rendered}");
+    }
+
+    #[test]
+    fn json_dangling_key_parsed_and_validated() {
+        let v = Json::parse(r#"{"kind": "file", "path": "w.txt", "dangling": "error"}"#)
+            .expect("json");
+        assert_eq!(
+            GraphSpec::from_json(&v).expect("parses"),
+            GraphSpec::File { path: "w.txt".into(), dangling: DanglingPolicy::Error }
+        );
+        let bad = Json::parse(r#"{"kind": "file", "path": "w.txt", "dangling": "nope"}"#)
+            .expect("json");
+        assert!(GraphSpec::from_json(&bad).is_err());
     }
 
     #[test]

@@ -49,6 +49,13 @@ use super::report::{
 };
 use super::solver_spec::{CoordinatorSolver, SolverSpec};
 
+/// Largest graph the dense/quadratic paths (the dense Jacobi backend's
+/// n×n hyperlink matrix, the exact reference's O(n³) elimination) will
+/// accept before [`Scenario::run`] refuses with a named error: 20k pages
+/// is already a 3.2 GB dense matrix, and a corpus-scale run would be an
+/// allocator abort, not a slow experiment.
+pub const DENSE_MAX_N: usize = 20_000;
+
 /// How the reference solution `x*` is obtained.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ReferencePolicy {
@@ -212,7 +219,10 @@ impl Scenario {
                 self.name
             ));
         }
-        let graph = self.graph.build(self.seed)?;
+        // Per-process cache: racing many solvers (or re-running a spec
+        // under a sweep) against one corpus-scale file loads it once.
+        let graph_arc = self.graph.build_cached(self.seed)?;
+        let graph: &Graph = &graph_arc;
         let threads = if self.threads == 0 {
             std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
         } else {
@@ -224,10 +234,10 @@ impl Scenario {
         let base = Rng::seeded(self.seed ^ 0x5CE9_A810);
         let runs = match &self.experiment {
             ExperimentSpec::PageRank { solvers } => {
-                ExperimentReports::PageRank(self.run_pagerank(&graph, solvers, threads, &base)?)
+                ExperimentReports::PageRank(self.run_pagerank(graph, solvers, threads, &base)?)
             }
             ExperimentSpec::SizeEstimation { estimators } => ExperimentReports::SizeEstimation(
-                self.run_size_estimation(&graph, estimators, threads, &base)?,
+                self.run_size_estimation(graph, estimators, threads, &base)?,
             ),
         };
         Ok(ScenarioReport { scenario: self.clone(), runs })
@@ -260,6 +270,46 @@ impl Scenario {
                     dangling.len(),
                     dangling[0],
                     bad.key()
+                ));
+            }
+        }
+        // A graph built without its in-link adjacency (corpus-scale
+        // out-only loads) cannot serve the transpose-reading backends —
+        // refuse with a named error instead of the deep in-CSR panic.
+        if !graph.in_links_available() {
+            if let Some(bad) = solvers.iter().find(|s| s.needs_in_links()) {
+                return Err(format!(
+                    "scenario {:?}: solver {} reads in-links, but the graph was built \
+                     without its in-link adjacency (Graph::without_in_links) — rebuild the \
+                     graph with in-links or drop the in-link backends (greedy-mp, \
+                     you-tempo-qiu, lei-chen, msgpass)",
+                    self.name,
+                    bad.key()
+                ));
+            }
+        }
+        // Dense/quadratic paths materialize n×n state (the dense Jacobi
+        // backend) or run O(n³) elimination (the exact reference) — at
+        // corpus scale that is an OOM/forever, not a slow run. Refuse by
+        // name instead of letting the allocator abort.
+        if graph.n() > DENSE_MAX_N {
+            if let Some(bad) = solvers.iter().find(|s| matches!(s, SolverSpec::Dense)) {
+                return Err(format!(
+                    "scenario {:?}: solver {} materializes a dense {n}×{n} matrix but the \
+                     graph has {n} pages (limit {DENSE_MAX_N}) — use a sparse backend for \
+                     corpus-scale graphs",
+                    self.name,
+                    bad.key(),
+                    n = graph.n(),
+                ));
+            }
+            if matches!(self.reference, ReferencePolicy::Exact) {
+                return Err(format!(
+                    "scenario {:?}: the exact (dense elimination) reference is limited to \
+                     {DENSE_MAX_N} pages but the graph has {} — use the \"power\" reference \
+                     policy for corpus-scale graphs",
+                    self.name,
+                    graph.n(),
                 ));
             }
         }
@@ -635,6 +685,46 @@ mod tests {
         let err = scenario.run().expect_err("must refuse, not panic/poison");
         assert!(err.contains("coordinator"), "error should name the solver: {err}");
         assert!(err.contains("dangling"), "error should explain why: {err}");
+    }
+
+    #[test]
+    fn in_link_free_graph_with_transpose_solver_is_refused_up_front() {
+        let s = tiny(); // races Mp and LeiChen — the latter reads in-links
+        let g = crate::graph::generators::er_threshold(15, 0.5, 5).without_in_links();
+        let base = Rng::seeded(1);
+        let err = s
+            .run_pagerank(&g, s.solvers(), 1, &base)
+            .expect_err("must refuse, not hit the in-CSR panic");
+        assert!(err.contains("lei-chen"), "error should name the solver: {err}");
+        assert!(err.contains("in-link"), "error should explain why: {err}");
+        // The in-link-free half of the same scenario still runs.
+        assert!(s.run_pagerank(&g, &[SolverSpec::Mp], 1, &base).is_ok());
+    }
+
+    #[test]
+    fn corpus_scale_dense_paths_are_refused_by_name() {
+        // chain is O(n) to build, so crossing DENSE_MAX_N is cheap here;
+        // what must NOT happen is the n×n allocation.
+        let base = Scenario::new(
+            "corpus",
+            GraphSpec::Family { family: "chain".into(), n: DENSE_MAX_N + 1 },
+        )
+        .with_steps(10)
+        .with_stride(5)
+        .with_rounds(1)
+        .with_threads(1);
+        let err = base
+            .clone()
+            .with_solvers(vec![SolverSpec::Dense])
+            .run()
+            .expect_err("dense backend must be refused at corpus scale");
+        assert!(err.contains("dense"), "{err}");
+        let err = base
+            .with_solvers(vec![SolverSpec::Mp])
+            .run()
+            .expect_err("exact reference must be refused at corpus scale");
+        assert!(err.contains("exact"), "{err}");
+        assert!(err.contains("power"), "the error should point at the fix: {err}");
     }
 
     #[test]

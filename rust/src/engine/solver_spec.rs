@@ -235,6 +235,25 @@ impl SolverSpec {
         !matches!(self, SolverSpec::Coordinator { .. })
     }
 
+    /// Whether the backend reads the in-link adjacency (`Graph::inc` /
+    /// `Graph::in_degree`): the original best-atom MP scans in-links of
+    /// the activated page to update residual norms, the baselines
+    /// \[12\]/\[15\] are built on in-neighbour reads, and the
+    /// message-passing runtime precomputes per-page subscriber lists
+    /// from the transpose. A graph built with
+    /// [`Graph::without_in_links`](crate::graph::Graph::without_in_links)
+    /// cannot serve these backends; [`super::Scenario::run`] refuses
+    /// the combination up front instead of panicking mid-solve.
+    pub fn needs_in_links(&self) -> bool {
+        matches!(
+            self,
+            SolverSpec::GreedyMp
+                | SolverSpec::YouTempoQiu
+                | SolverSpec::LeiChen
+                | SolverSpec::Msgpass { .. }
+        )
+    }
+
     /// Parse a registry string. Accepts the canonical keys plus short
     /// aliases (`"ytq"`, `"it"`, `"mc"`, `"jacobi"`, `"greedy"`,
     /// `"pmp:<batch>"`, `"coord:…"`).
@@ -1109,6 +1128,36 @@ mod tests {
         assert!(SolverSpec::IshiiTempo.supports_dangling());
         assert!(SolverSpec::LeiChen.supports_dangling());
         assert!(!SolverSpec::sequential_coordinator().supports_dangling());
+    }
+
+    #[test]
+    fn in_link_free_backends_run_without_the_transpose() {
+        // needs_in_links must tell the truth in both directions: every
+        // backend that claims to be in-link-free must step a graph whose
+        // in-CSR is disabled (it would panic loudly otherwise), and the
+        // four transpose readers must declare themselves.
+        let g = generators::ring(12).without_in_links();
+        for spec in SolverSpec::all() {
+            if spec.needs_in_links() {
+                continue;
+            }
+            let mut solver = spec.build(&g, 0.85, 3);
+            let mut rng = Rng::seeded(9);
+            for _ in 0..30 {
+                solver.step(&mut rng);
+            }
+            assert!(
+                solver.estimate().iter().all(|v| v.is_finite()),
+                "{} should run in-link-free",
+                spec.key()
+            );
+        }
+        assert!(SolverSpec::GreedyMp.needs_in_links());
+        assert!(SolverSpec::YouTempoQiu.needs_in_links());
+        assert!(SolverSpec::LeiChen.needs_in_links());
+        assert!(SolverSpec::parse("msgpass:2:8:mod").expect("ok").needs_in_links());
+        assert!(!SolverSpec::Mp.needs_in_links());
+        assert!(!SolverSpec::IshiiTempo.needs_in_links());
     }
 
     #[test]

@@ -111,7 +111,7 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
                 GraphSpec::Family { n: gn, .. } => *gn = n,
                 // A silent no-op here would run every "cell" on the same
                 // file and report them as different sizes — refuse.
-                GraphSpec::File { path } => {
+                GraphSpec::File { path, .. } => {
                     return Err(format!(
                         "axis \"n\" cannot resize the file graph {path:?} — drop the axis or \
                          sweep generated families via the \"graph\" axis instead"

@@ -1,28 +1,59 @@
 //! Compressed sparse row graph storage.
 //!
-//! [`Graph`] stores both directions of adjacency:
+//! [`Graph`] always stores the out-CSR (`out_offsets`/`out_targets`) —
+//! the set `N_k` the paper's Algorithm 1 reads residuals from and writes
+//! residuals to. The in-CSR (the transpose adjacency) is **lazy**: it is
+//! built on the first [`Graph::inc`]/[`Graph::in_degree`] call and only
+//! then occupies memory. Only the in-link baselines ([6], [12], [15])
+//! and the msgpass subscriber precompute pull from incoming neighbours,
+//! so the MP/sharded hot paths never pay the 2× graph memory — which is
+//! what makes 10⁶–10⁷-page corpus graphs affordable.
 //!
-//! * out-CSR (`out_offsets`/`out_targets`) — the set `N_k` the paper's
-//!   Algorithm 1 reads residuals from and writes residuals to;
-//! * in-CSR (`in_offsets`/`in_sources`) — needed only by the baselines
-//!   ([6], [12], [15]) whose updates pull from incoming neighbours, and by
-//!   transpose-direction linear algebra.
+//! [`Graph::without_in_links`] additionally *disables* in-link queries:
+//! any later `inc()` is a loud panic naming the misuse instead of a
+//! silent rebuild, so corpus pipelines that promised "out-only memory"
+//! can trust the bound. The engine refuses in-link solvers on such
+//! graphs up front (`SolverSpec::needs_in_links`).
 //!
 //! Out-edges of each node are stored sorted; the structure is immutable
 //! after construction (the dynamic-network extension rebuilds via
 //! [`crate::graph::GraphBuilder`], mirroring the paper's §IV-2 future-work
 //! discussion where topology changes are events, not steady state).
 
+use std::sync::OnceLock;
+
+/// The transpose adjacency, built on demand from the out-CSR.
+#[derive(Debug, Clone)]
+struct InCsr {
+    offsets: Vec<usize>,
+    sources: Vec<u32>,
+}
+
 /// An immutable directed graph with no dangling (zero out-degree) nodes
 /// permitted at PageRank time (the builder repairs or rejects them).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone)]
 pub struct Graph {
     n: usize,
     out_offsets: Vec<usize>,
     out_targets: Vec<u32>,
-    in_offsets: Vec<usize>,
-    in_sources: Vec<u32>,
+    /// When false, in-link queries panic instead of lazily building the
+    /// transpose — the corpus pipelines' memory guarantee.
+    in_enabled: bool,
+    in_csr: OnceLock<InCsr>,
 }
+
+/// Equality is over topology (n + out-CSR) only: the in-CSR is derived
+/// data and whether it happens to be materialized is not part of the
+/// graph's identity.
+impl PartialEq for Graph {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.out_offsets == other.out_offsets
+            && self.out_targets == other.out_targets
+    }
+}
+
+impl Eq for Graph {}
 
 impl Graph {
     /// Build from a sorted, deduplicated edge list. Prefer
@@ -32,34 +63,100 @@ impl Graph {
     pub fn from_sorted_edges(n: usize, edges: &[(u32, u32)]) -> Graph {
         debug_assert!(edges.windows(2).all(|w| w[0] <= w[1]), "edges not sorted");
         let mut out_offsets = vec![0usize; n + 1];
-        let mut in_degree = vec![0usize; n];
         for &(s, d) in edges {
             assert!((s as usize) < n && (d as usize) < n, "edge ({s},{d}) out of range");
             out_offsets[s as usize + 1] += 1;
-            in_degree[d as usize] += 1;
         }
         for i in 0..n {
             out_offsets[i + 1] += out_offsets[i];
         }
         let out_targets: Vec<u32> = edges.iter().map(|&(_, d)| d).collect();
+        Graph::from_csr_parts(n, out_offsets, out_targets)
+    }
 
-        let mut in_offsets = vec![0usize; n + 1];
-        for i in 0..n {
-            in_offsets[i + 1] = in_offsets[i] + in_degree[i];
-        }
-        let mut cursor = in_offsets.clone();
-        let mut in_sources = vec![0u32; edges.len()];
-        for &(s, d) in edges {
-            in_sources[cursor[d as usize]] = s;
-            cursor[d as usize] += 1;
-        }
+    /// Assemble a graph directly from prebuilt CSR arrays — the zero-copy
+    /// entry point for the streaming loader and the `.csrbin` cache.
+    /// Each row of `out_targets` must be sorted and deduplicated.
+    pub fn from_csr_parts(n: usize, out_offsets: Vec<usize>, out_targets: Vec<u32>) -> Graph {
+        assert_eq!(out_offsets.len(), n + 1, "offsets must have n+1 entries");
+        assert_eq!(
+            *out_offsets.last().expect("n+1 >= 1 entries"),
+            out_targets.len(),
+            "last offset must equal the target count"
+        );
+        debug_assert_eq!(out_offsets[0], 0);
+        debug_assert!(out_offsets.windows(2).all(|w| w[0] <= w[1]), "offsets not monotone");
+        debug_assert!(out_targets.iter().all(|&d| (d as usize) < n), "target out of range");
+        debug_assert!((0..n).all(|k| {
+            out_targets[out_offsets[k]..out_offsets[k + 1]].windows(2).all(|w| w[0] < w[1])
+        }), "rows must be sorted and deduplicated");
         Graph {
             n,
             out_offsets,
             out_targets,
-            in_offsets,
-            in_sources,
+            in_enabled: true,
+            in_csr: OnceLock::new(),
         }
+    }
+
+    /// Disable in-link queries: any later [`Graph::inc`]/
+    /// [`Graph::in_degree`] panics loudly instead of materializing the
+    /// transpose. Use for corpus-scale runs whose solvers are out-only.
+    pub fn without_in_links(mut self) -> Graph {
+        self.in_enabled = false;
+        self.in_csr = OnceLock::new();
+        self
+    }
+
+    /// Whether in-link queries are permitted on this graph.
+    #[inline]
+    pub fn in_links_available(&self) -> bool {
+        self.in_enabled
+    }
+
+    /// Whether the lazy in-CSR has actually been materialized.
+    #[inline]
+    pub fn in_links_built(&self) -> bool {
+        self.in_csr.get().is_some()
+    }
+
+    /// Bytes held by the CSR arrays (out-CSR plus the in-CSR if it has
+    /// been materialized) — the number the corpus bench tracks.
+    pub fn memory_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let mut bytes = self.out_offsets.len() * size_of::<usize>()
+            + self.out_targets.len() * size_of::<u32>();
+        if let Some(ic) = self.in_csr.get() {
+            bytes += ic.offsets.len() * size_of::<usize>() + ic.sources.len() * size_of::<u32>();
+        }
+        bytes
+    }
+
+    /// The lazily-built transpose adjacency.
+    fn in_csr(&self) -> &InCsr {
+        assert!(
+            self.in_enabled,
+            "in-link adjacency is disabled for this graph (built via \
+             Graph::without_in_links); in-link solvers must be refused up front"
+        );
+        self.in_csr.get_or_init(|| {
+            let mut offsets = vec![0usize; self.n + 1];
+            for &d in &self.out_targets {
+                offsets[d as usize + 1] += 1;
+            }
+            for i in 0..self.n {
+                offsets[i + 1] += offsets[i];
+            }
+            let mut cursor = offsets.clone();
+            let mut sources = vec![0u32; self.out_targets.len()];
+            for s in 0..self.n {
+                for &d in &self.out_targets[self.out_offsets[s]..self.out_offsets[s + 1]] {
+                    sources[cursor[d as usize]] = s as u32;
+                    cursor[d as usize] += 1;
+                }
+            }
+            InCsr { offsets, sources }
+        })
     }
 
     /// Number of pages.
@@ -80,10 +177,12 @@ impl Graph {
         &self.out_targets[self.out_offsets[k]..self.out_offsets[k + 1]]
     }
 
-    /// In-neighbours of `k` (pages linking to `k`).
+    /// In-neighbours of `k` (pages linking to `k`). Builds the lazy
+    /// in-CSR on first use; panics if in-links were disabled.
     #[inline]
     pub fn inc(&self, k: usize) -> &[u32] {
-        &self.in_sources[self.in_offsets[k]..self.in_offsets[k + 1]]
+        let ic = self.in_csr();
+        &ic.sources[ic.offsets[k]..ic.offsets[k + 1]]
     }
 
     /// Out-degree `N_k`.
@@ -92,10 +191,24 @@ impl Graph {
         self.out_offsets[k + 1] - self.out_offsets[k]
     }
 
-    /// In-degree.
+    /// In-degree. Builds the lazy in-CSR on first use; panics if
+    /// in-links were disabled.
     #[inline]
     pub fn in_degree(&self, k: usize) -> usize {
-        self.in_offsets[k + 1] - self.in_offsets[k]
+        let ic = self.in_csr();
+        ic.offsets[k + 1] - ic.offsets[k]
+    }
+
+    /// The raw out-CSR row offsets (for serialization).
+    #[inline]
+    pub fn out_offsets(&self) -> &[usize] {
+        &self.out_offsets
+    }
+
+    /// The raw out-CSR target array (for serialization).
+    #[inline]
+    pub fn out_targets(&self) -> &[u32] {
+        &self.out_targets
     }
 
     /// Whether page `k` links to itself (`A_kk = 1/N_k` in the paper's
@@ -174,6 +287,53 @@ mod tests {
         in2.sort_unstable();
         assert_eq!(in2, vec![0, 1, 2]);
         assert_eq!(g.in_degree(2), 3);
+    }
+
+    #[test]
+    fn in_csr_is_lazy_and_counted_by_memory_bytes() {
+        let g = tiny();
+        assert!(g.in_links_available());
+        assert!(!g.in_links_built(), "in-CSR must not exist before first use");
+        let out_only = g.memory_bytes();
+        assert_eq!(g.inc(0), &[2]);
+        assert!(g.in_links_built());
+        assert!(
+            g.memory_bytes() > out_only,
+            "materializing the transpose must grow the accounted bytes"
+        );
+    }
+
+    #[test]
+    fn disabled_in_links_report_unavailable() {
+        let g = tiny().without_in_links();
+        assert!(!g.in_links_available());
+        assert!(!g.in_links_built());
+        // Out-side queries are unaffected.
+        assert_eq!(g.out(0), &[1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "in-link adjacency is disabled")]
+    fn disabled_in_links_panic_loudly_on_inc() {
+        let g = tiny().without_in_links();
+        let _ = g.inc(0);
+    }
+
+    #[test]
+    fn equality_ignores_in_csr_materialization() {
+        let a = tiny();
+        let b = tiny();
+        let _ = a.inc(2); // materialize one side only
+        assert_eq!(a, b);
+        assert_eq!(b, a.clone().without_in_links());
+    }
+
+    #[test]
+    fn from_csr_parts_matches_from_sorted_edges() {
+        let g = tiny();
+        let g2 = Graph::from_csr_parts(3, g.out_offsets().to_vec(), g.out_targets().to_vec());
+        assert_eq!(g, g2);
+        assert_eq!(g2.inc(2), g.inc(2));
     }
 
     #[test]

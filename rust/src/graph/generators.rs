@@ -168,6 +168,78 @@ pub fn chain(n: usize) -> Graph {
     Graph::from_sorted_edges(n, &edges)
 }
 
+/// One page's out-links in the synthetic webgraph model — shared by
+/// [`webgraph`] and [`write_webgraph_corpus`] so the in-memory graph and
+/// the written corpus text are the *same* graph, page for page.
+///
+/// The model mimics a crawl at corpus scale: ~1.8% of pages are dangling
+/// (sink pages a crawler saw but never fetched), out-degrees follow a
+/// capped Pareto draw with mean ≈ 10, and targets are drawn as
+/// `floor(n·u³)` so low-id pages collect Zipf-like heavy in-degrees.
+fn webgraph_row(page: usize, n: usize, rng: &mut Rng, row: &mut Vec<u32>) {
+    row.clear();
+    if rng.bernoulli(0.018) {
+        return; // dangling sink page
+    }
+    let u = rng.uniform().max(1e-12);
+    let deg = (1.0 + 4.0 * u.powf(-0.55)) as usize;
+    let deg = deg.min(n - 1).min(10_000);
+    for _ in 0..deg {
+        let v = rng.uniform();
+        let mut t = (n as f64 * v * v * v) as usize;
+        if t >= n {
+            t = n - 1;
+        }
+        if t == page {
+            t = (t + 1) % n;
+        }
+        row.push(t as u32);
+    }
+    row.sort_unstable();
+    row.dedup();
+}
+
+/// Deterministic webgraph-like corpus graph: power-law in/out degrees
+/// and genuine dangling pages, built straight into CSR arrays (no edge
+/// buffering) so 10⁶–10⁷-page instances are affordable. Dangling pages
+/// are **kept** (like [`chain`]); callers choose the repair policy.
+pub fn webgraph(n: usize, seed: u64) -> Graph {
+    assert!(n >= 2, "webgraph needs at least 2 pages");
+    let mut rng = Rng::seeded(seed);
+    let mut offsets = Vec::with_capacity(n + 1);
+    offsets.push(0usize);
+    let mut targets: Vec<u32> = Vec::new();
+    let mut row = Vec::new();
+    for page in 0..n {
+        webgraph_row(page, n, &mut rng, &mut row);
+        targets.extend_from_slice(&row);
+        offsets.push(targets.len());
+    }
+    Graph::from_csr_parts(n, offsets, targets)
+}
+
+/// Stream the webgraph corpus as edge-list text (with a `# nodes:`
+/// header pinning the dangling tail pages). Page-for-page identical to
+/// [`webgraph`] at the same `(n, seed)`.
+pub fn write_webgraph_corpus<W: std::io::Write>(
+    n: usize,
+    seed: u64,
+    mut w: W,
+) -> std::io::Result<()> {
+    assert!(n >= 2, "webgraph needs at least 2 pages");
+    writeln!(w, "# synthetic webgraph corpus (deterministic): n={n} seed={seed}")?;
+    writeln!(w, "# nodes: {n}")?;
+    let mut rng = Rng::seeded(seed);
+    let mut row = Vec::new();
+    for page in 0..n {
+        webgraph_row(page, n, &mut rng, &mut row);
+        for &d in &row {
+            writeln!(w, "{page} {d}")?;
+        }
+    }
+    Ok(())
+}
+
 /// Dispatch a generator by name — used by the CLI and the benches.
 /// `spec` examples: `er100` is not parsed here; pass name and params
 /// explicitly.
@@ -182,6 +254,7 @@ pub fn by_name(name: &str, n: usize, seed: u64) -> Option<Graph> {
         "star" => Some(star(n)),
         "complete" => Some(complete(n)),
         "chain" => Some(chain(n)),
+        "webgraph" => Some(webgraph(n, seed)),
         _ => None,
     }
 }
@@ -291,7 +364,48 @@ mod tests {
         assert!(by_name("paper", 20, 1).is_some());
         assert!(by_name("ba", 20, 1).is_some());
         assert!(by_name("chain", 20, 1).is_some());
+        assert!(by_name("webgraph", 10, 1).is_some()); // the registry probe size
         assert!(by_name("nope", 20, 1).is_none());
+    }
+
+    #[test]
+    fn webgraph_is_deterministic_heavy_tailed_and_keeps_danglers() {
+        let g = webgraph(5_000, 42);
+        assert_eq!(g, webgraph(5_000, 42));
+        assert_ne!(g, webgraph(5_000, 43));
+        // Mean out-degree ≈ 10 (capped Pareto draw).
+        let mean = g.m() as f64 / g.n() as f64;
+        assert!((4.0..30.0).contains(&mean), "mean out-degree {mean}");
+        // A real dangling fraction near 1.8%.
+        let dangling = g.dangling().len() as f64 / g.n() as f64;
+        assert!((0.005..0.05).contains(&dangling), "dangling fraction {dangling}");
+        // Zipf-ish in-degree skew: low ids collect far more than average.
+        let mut in_deg = vec![0usize; g.n()];
+        for (_, d) in g.edges() {
+            in_deg[d as usize] += 1;
+        }
+        let max_in = *in_deg.iter().max().expect("nonempty");
+        assert!(
+            max_in as f64 > 20.0 * mean,
+            "max in-degree {max_in} not heavy-tailed vs mean {mean}"
+        );
+    }
+
+    #[test]
+    fn webgraph_corpus_text_replays_the_generator_graph() {
+        use crate::graph::io;
+        let (n, seed) = (800, 7);
+        let g = webgraph(n, seed);
+        let mut text = Vec::new();
+        write_webgraph_corpus(n, seed, &mut text).expect("writes");
+        // Loading the corpus with self-loop repair must equal the
+        // generator graph repaired the same way.
+        let loaded = io::read_edge_list(text.as_slice(), DanglingPolicy::SelfLoop)
+            .expect("corpus parses");
+        let mut b = GraphBuilder::new(n).dangling_policy(DanglingPolicy::SelfLoop);
+        b.extend(g.edges().iter().map(|&(s, d)| (s as usize, d as usize)));
+        let repaired = b.build().expect("builds");
+        assert_eq!(loaded, repaired, "corpus text and generator graph diverged");
     }
 
     #[test]

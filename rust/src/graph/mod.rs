@@ -7,13 +7,16 @@
 //! the simulated network topology — is derived from the [`Graph`] type
 //! defined here.
 //!
-//! * [`csr`] — compressed sparse row storage with both out- and
-//!   in-adjacency (MP needs only out-links; the baselines [6]/[12]/[15]
-//!   need in-links, which is exactly the paper's critique of them).
+//! * [`csr`] — compressed sparse row storage: the out-CSR always, the
+//!   in-adjacency built lazily on first use (MP needs only out-links;
+//!   the baselines [6]/[12]/[15] need in-links, which is exactly the
+//!   paper's critique of them — so corpus-scale out-only runs never pay
+//!   the transpose's memory).
 //! * [`builder`] — edge accumulation, dedup, dangling-page repair.
 //! * [`generators`] — synthetic families including the paper §III
-//!   ER-threshold model.
-//! * [`io`] — plain-text edge-list reading/writing.
+//!   ER-threshold model and the corpus-scale `webgraph` family.
+//! * [`io`] — streaming edge-list ingest (two-pass, straight into CSR),
+//!   plain-text writing, and the `.csrbin` binary cache.
 //! * [`stats`] — degree summaries.
 //! * [`scc`] — Tarjan strongly-connected components (Algorithm 2 assumes
 //!   strong connectivity).
@@ -27,3 +30,4 @@ pub mod stats;
 
 pub use builder::{DanglingPolicy, GraphBuilder};
 pub use csr::Graph;
+pub use io::LoadOptions;

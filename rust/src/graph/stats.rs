@@ -29,9 +29,18 @@ impl DegreeStats {
         let mut max_in = 0;
         let mut self_loops = 0;
         let mut dangling = 0;
+        // In-degrees via a counting scan over the out-CSR: stats must not
+        // force (or trip over) the lazy in-CSR — `graph-info` on an
+        // in-link-free corpus graph stays out-only.
+        let mut in_deg = vec![0usize; n];
+        for k in 0..n {
+            for &d in g.out(k) {
+                in_deg[d as usize] += 1;
+            }
+        }
         for k in 0..n {
             let od = g.out_degree(k);
-            let id = g.in_degree(k);
+            let id = in_deg[k];
             min_out = min_out.min(od);
             max_out = max_out.max(od);
             min_in = min_in.min(id);
@@ -144,6 +153,15 @@ mod tests {
         assert_eq!(h[0], 8); // eight leaves with degree 1
         assert_eq!(*h.last().expect("nonempty"), 1); // hub in [8,16)
         assert_eq!(h.len(), 4);
+    }
+
+    #[test]
+    fn stats_never_touch_the_lazy_in_csr() {
+        let g = generators::star(5).without_in_links();
+        let s = DegreeStats::compute(&g);
+        assert_eq!(s.max_in, 4); // hub receives a link from every leaf
+        assert_eq!(s.min_in, 1);
+        assert!(!g.in_links_built());
     }
 
     #[test]

@@ -17,12 +17,29 @@ pub struct DenseMatrix {
     data: Vec<f64>,
 }
 
+/// Hard ceiling on dense allocations: 20k×20k f64 (3.2 GB) — the same
+/// boundary [`crate::engine::scenario::DENSE_MAX_N`] enforces with a
+/// `Result` at the engine layer. Past it, a dense matrix is an OOM
+/// abort, not a slow reference computation; this assert turns that
+/// abort into a named panic for programmatic misuse that bypasses the
+/// engine.
+pub const DENSE_ELEMS_MAX: usize = 400_000_000;
+
 impl DenseMatrix {
     pub fn zeros(rows: usize, cols: usize) -> DenseMatrix {
+        let elems = rows
+            .checked_mul(cols)
+            .expect("dense matrix dimensions overflow usize");
+        assert!(
+            elems <= DENSE_ELEMS_MAX,
+            "refusing to allocate a dense {rows}×{cols} matrix ({elems} elements > \
+             DENSE_ELEMS_MAX = {DENSE_ELEMS_MAX}): dense matrices are reference-scale \
+             only — corpus-scale graphs must stay on the sparse/streaming paths"
+        );
         DenseMatrix {
             rows,
             cols,
-            data: vec![0.0; rows * cols],
+            data: vec![0.0; elems],
         }
     }
 
@@ -284,6 +301,12 @@ mod tests {
         let a = DenseMatrix::hyperlink(&g);
         let i = DenseMatrix::identity(10);
         assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    #[should_panic(expected = "refusing to allocate a dense")]
+    fn corpus_scale_dense_allocation_panics_by_name() {
+        let _ = DenseMatrix::zeros(1_000_000, 1_000_000);
     }
 
     #[test]

@@ -19,6 +19,8 @@
 //! * `ablation`   — run the DESIGN.md §4 ablation studies.
 //! * `size`       — Algorithm 2 network-size estimation demo.
 //! * `graph-info` — degree/SCC statistics for a graph.
+//! * `gen-corpus` — stream a deterministic synthetic webgraph corpus to
+//!                  disk (the offline fallback of `scripts/fetch_webgraph`).
 //! * `artifacts`  — inspect the AOT artifact manifest.
 
 use pagerank_mp::algo::common::PageRankSolver;
@@ -35,9 +37,24 @@ use pagerank_mp::network::LatencyModel;
 use pagerank_mp::util::cli::Args;
 use pagerank_mp::util::rng::Rng;
 
+fn parse_dangling(s: &str) -> Result<DanglingPolicy, String> {
+    pagerank_mp::engine::graph_spec::dangling_from_key(s)
+        .ok_or_else(|| format!("bad --dangling {s:?} (error | selfloop | linkall)"))
+}
+
 fn load_graph(args: &Args) -> Result<Graph, String> {
     if let Some(path) = args.get("graph-file") {
-        return graph_io::load(path, DanglingPolicy::LinkAll).map_err(|e| e.to_string());
+        let path = path.to_string();
+        let policy = parse_dangling(&args.get_str("dangling", "linkall"))?;
+        let opts = graph_io::LoadOptions::new(policy).remap_ids(args.flag("remap-ids"));
+        // --cache keeps a validated `.csrbin` sidecar next to the text
+        // file, so repeat corpus runs skip the parse entirely.
+        return if args.flag("cache") {
+            graph_io::load_cached(&path, &opts)
+        } else {
+            graph_io::load_with(&path, &opts)
+        }
+        .map_err(|e| e.to_string());
     }
     let name = args.get_str("graph", "paper");
     let n = args.get_parse("n", 100usize).map_err(|e| e.to_string())?;
@@ -383,6 +400,30 @@ fn cmd_size(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_gen_corpus(args: &Args) -> Result<(), String> {
+    let n = args.get_parse("n", 1_000_000usize).map_err(|e| e.to_string())?;
+    let seed = args.get_parse("seed", 2017u64).map_err(|e| e.to_string())?;
+    let out = args.get_str("out", "corpus/webgraph.txt");
+    if n < 2 {
+        return Err("gen-corpus needs --n >= 2".into());
+    }
+    let path = std::path::Path::new(&out);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let f = std::fs::File::create(path).map_err(|e| format!("creating {out}: {e}"))?;
+    // The generator streams rows straight to the writer: peak memory is
+    // one row, independent of n.
+    generators::write_webgraph_corpus(n, seed, std::io::BufWriter::new(f))
+        .map_err(|e| format!("writing {out}: {e}"))?;
+    println!("wrote {out}: {n} pages (seed {seed}) in {:?}", t0.elapsed());
+    println!("load it with: --graph-file {out} --dangling selfloop  (or file:{out}:selfloop in a scenario)");
+    Ok(())
+}
+
 fn cmd_graph_info(args: &Args) -> Result<(), String> {
     let g = load_graph(args)?;
     let stats = pagerank_mp::graph::stats::DegreeStats::compute(&g);
@@ -439,7 +480,16 @@ COMMANDS:
   ablation    DESIGN.md §4 studies    [--n 100 --seed S]
   size        Algorithm 2 demo        [--graph paper --n 100 --steps 20000]
   graph-info  graph statistics        [--graph paper --n 100 | --graph-file edges.txt]
+  gen-corpus  write a deterministic synthetic webgraph corpus (streaming; SNAP-style text)
+              [--n 1000000 --seed 2017 --out corpus/webgraph.txt]
   artifacts   inspect AOT manifest
+
+GRAPH INPUT (rank, size, graph-info):
+  --graph-file edges.txt      SNAP-style edge list (streaming two-pass loader)
+  --dangling error|selfloop|linkall   sink repair policy (default linkall;
+                              use selfloop for corpus-scale files)
+  --remap-ids                 compact non-contiguous ids (SNAP dumps)
+  --cache                     keep/reuse a validated .csrbin sidecar
 ";
 
 fn main() {
@@ -454,6 +504,7 @@ fn main() {
         Some("ablation") => cmd_ablation(&args),
         Some("size") => cmd_size(&args),
         Some("graph-info") => cmd_graph_info(&args),
+        Some("gen-corpus") => cmd_gen_corpus(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("help") | None => {
             println!("{USAGE}");

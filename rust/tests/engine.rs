@@ -685,7 +685,7 @@ fn file_graph_scenario_matches_the_in_memory_graph() {
             .with_seed(seed)
     };
     let mem = mk(GraphSpec::ErThreshold { n: 30, threshold: 0.5 }).run().expect("mem runs");
-    let file = mk(GraphSpec::File { path: path.to_str().expect("utf8").to_string() })
+    let file = mk(GraphSpec::file(path.to_str().expect("utf8")))
         .run()
         .expect("file runs");
     assert_eq!(mem.solver_reports().len(), file.solver_reports().len());
@@ -700,9 +700,7 @@ fn file_graph_scenario_matches_the_in_memory_graph() {
     }
     // Size estimation over the file path, too (the loaded ER graph is
     // strongly connected).
-    let se = Scenario::new("file-se", GraphSpec::File {
-        path: path.to_str().expect("utf8").to_string(),
-    })
+    let se = Scenario::new("file-se", GraphSpec::file(path.to_str().expect("utf8")))
     .with_estimators(vec![EstimatorSpec::Kaczmarz])
     .with_steps(400)
     .with_stride(200)
@@ -713,6 +711,36 @@ fn file_graph_scenario_matches_the_in_memory_graph() {
     .expect("size estimation runs from a file graph");
     let r = &se.estimator_reports()[0];
     assert!(r.final_error < r.trajectory.mean[0]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn file_graph_dangling_policy_flows_from_the_spec() {
+    // A chain graph has one sink; the `file:<path>:<policy>` suffix must
+    // select how the loader repairs it.
+    let g = generators::chain(6);
+    let dir = std::env::temp_dir().join(format!("prmp_filepolicy_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let path = dir.join("chain6.txt");
+    pagerank_mp::graph::io::save(&g, &path).expect("writes the edge list");
+    let p = path.to_str().expect("utf8");
+
+    let err = GraphSpec::parse(&format!("file:{p}:error"))
+        .expect("parses")
+        .build(0)
+        .expect_err("the error policy must surface the sink");
+    assert!(err.contains("dangling"), "{err}");
+
+    let selfloop = GraphSpec::parse(&format!("file:{p}:selfloop"))
+        .expect("parses")
+        .build(0)
+        .expect("selfloop repair");
+    assert!(selfloop.dangling().is_empty());
+    assert_eq!(selfloop.out(5), &[5], "the sink should link only to itself");
+
+    // Bare form keeps the historical LinkAll default.
+    let linkall = GraphSpec::parse(&format!("file:{p}")).expect("parses").build(0).expect("loads");
+    assert_eq!(linkall.out_degree(5), 5, "LinkAll links the sink to every other page");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -7,7 +7,9 @@ use pagerank_mp::algo::mp::MatchingPursuit;
 use pagerank_mp::algo::parallel_mp::ParallelMatchingPursuit;
 use pagerank_mp::algo::size_estimation::SizeEstimator;
 use pagerank_mp::coordinator::sampler::WeightTree;
-use pagerank_mp::graph::{generators, DanglingPolicy, GraphBuilder};
+use pagerank_mp::graph::builder::BuildError;
+use pagerank_mp::graph::io::{self as graph_io, IoError};
+use pagerank_mp::graph::{generators, DanglingPolicy, GraphBuilder, LoadOptions};
 use pagerank_mp::linalg::dense::DenseMatrix;
 use pagerank_mp::linalg::solve::{exact_pagerank, Lu};
 use pagerank_mp::linalg::sparse::BColumns;
@@ -283,5 +285,161 @@ fn prop_ranking_agreement_axioms() {
         let ba = pagerank_mp::util::stats::ranking_agreement(&b, &a);
         assert!((ab - ba).abs() < 1e-15, "case {case}: asymmetric");
         assert!((0.0..=1.0).contains(&ab));
+    }
+}
+
+/// Random edge-list text exercising the SNAP quirks the streaming
+/// loader must absorb: header variants, `#`/`%` comments (also in the
+/// middle of the file), tab and space separators, blank lines,
+/// duplicate edges, self-loops, and pages with no out-links. Returns
+/// `(n, edges, text)` where `edges` is the logical edge set the text
+/// encodes against a declared node count of `n`.
+fn random_edge_list_text(rng: &mut Rng) -> (usize, Vec<(usize, usize)>, String) {
+    let n = rng.range(3, 40);
+    let m = rng.range(0, 4 * n);
+    let mut edges: Vec<(usize, usize)> = Vec::with_capacity(m);
+    for _ in 0..m {
+        edges.push((rng.below(n), rng.below(n)));
+    }
+    // Duplicate a slice of the edges verbatim — dedup is the loader's job.
+    if !edges.is_empty() && rng.bernoulli(0.5) {
+        let k = rng.below(edges.len());
+        let dup = edges[k];
+        edges.push(dup);
+    }
+    let mut text = String::new();
+    match rng.below(3) {
+        0 => text.push_str(&format!("# nodes: {n}\n")),
+        1 => text.push_str(&format!("# Nodes: {n} Edges: {}\n", edges.len())),
+        _ => text.push_str(&format!("# NODES: {n}\n")),
+    }
+    text.push_str("% matrix-market style comment\n");
+    for (i, &(s, d)) in edges.iter().enumerate() {
+        if rng.bernoulli(0.1) {
+            text.push_str("# interior comment\n");
+        }
+        if rng.bernoulli(0.1) {
+            text.push('\n');
+        }
+        let sep = if i % 2 == 0 { '\t' } else { ' ' };
+        text.push_str(&format!("{s}{sep}{d}\n"));
+    }
+    (n, edges, text)
+}
+
+/// PROPERTY: the streaming two-pass loader and the buffer-everything
+/// GraphBuilder are the same function — identical graphs on success and
+/// identical first-dangler diagnostics on [`DanglingPolicy::Error`] —
+/// across duplicates, self-loops, header variants, and all 3 policies.
+#[test]
+fn prop_streaming_loader_matches_builder_under_all_policies() {
+    let policies = [
+        DanglingPolicy::Error,
+        DanglingPolicy::SelfLoop,
+        DanglingPolicy::LinkAll,
+    ];
+    for case in 0..30u64 {
+        let mut rng = Rng::seeded(10_100 + case);
+        let (n, edges, text) = random_edge_list_text(&mut rng);
+        for policy in policies {
+            let streamed = graph_io::read_edge_list_streaming(
+                std::io::Cursor::new(text.as_bytes()),
+                &LoadOptions::new(policy),
+            );
+            let mut b = GraphBuilder::new(n).dangling_policy(policy);
+            for &(s, d) in &edges {
+                b.add_edge(s, d);
+            }
+            match (b.build(), streamed) {
+                (Ok(want), Ok(got)) => {
+                    assert_eq!(got, want, "case {case}: {policy:?} graphs diverge");
+                }
+                (Err(BuildError::Dangling(want)), Err(IoError::Build(BuildError::Dangling(got)))) => {
+                    assert_eq!(got, want, "case {case}: first dangler diverges");
+                }
+                (want, got) => {
+                    panic!("case {case}: {policy:?} outcomes diverge: builder {want:?} vs streaming {got:?}")
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: write_edge_list → read_edge_list reproduces the graph
+/// exactly (the header pins `n`, so trailing dangling pages survive).
+#[test]
+fn prop_save_load_round_trips() {
+    for case in 0..30u64 {
+        let mut rng = Rng::seeded(10_200 + case);
+        let g = random_graph(&mut rng);
+        let mut bytes = Vec::new();
+        graph_io::write_edge_list(&g, &mut bytes).expect("write to Vec");
+        let back = graph_io::read_edge_list(std::io::Cursor::new(bytes), DanglingPolicy::SelfLoop)
+            .unwrap_or_else(|e| panic!("case {case}: reload failed: {e:?}"));
+        assert_eq!(back, g, "case {case}: text round trip changed the graph");
+    }
+}
+
+/// PROPERTY: the `.csrbin` binary cache round-trips random graphs
+/// bit-exactly and preserves the ingest options.
+#[test]
+fn prop_csrbin_round_trips_random_graphs() {
+    let dir = std::env::temp_dir().join(format!("prmp_propcsrbin_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    for case in 0..30u64 {
+        let mut rng = Rng::seeded(10_300 + case);
+        let g = random_graph(&mut rng);
+        let opts = LoadOptions::new(DanglingPolicy::SelfLoop).remap_ids(case % 2 == 0);
+        let path = dir.join(format!("case_{case}.csrbin"));
+        graph_io::write_csrbin(&g, &path, &opts).expect("write csrbin");
+        let (back, back_opts) = graph_io::read_csrbin(&path)
+            .unwrap_or_else(|e| panic!("case {case}: csrbin read failed: {e:?}"));
+        assert_eq!(back, g, "case {case}: csrbin round trip changed the graph");
+        assert_eq!(back_opts.dangling, opts.dangling, "case {case}: policy lost");
+        assert_eq!(back_opts.remap_ids, opts.remap_ids, "case {case}: remap flag lost");
+        let _ = std::fs::remove_file(&path);
+    }
+    let _ = std::fs::remove_dir(&dir);
+}
+
+/// PROPERTY: `remap_ids` compacts sparse/gappy ids to first-seen order —
+/// the same graph as manually renumbering ids in line order (src before
+/// dst) and feeding the builder.
+#[test]
+fn prop_remap_matches_first_seen_compaction() {
+    for case in 0..30u64 {
+        let mut rng = Rng::seeded(10_400 + case);
+        let n = rng.range(3, 30);
+        let offset = rng.below(1_000_000);
+        let stride = 1 + rng.below(997);
+        let m = rng.range(1, 4 * n);
+        let sparse: Vec<(usize, usize)> = (0..m)
+            .map(|_| (offset + stride * rng.below(n), offset + stride * rng.below(n)))
+            .collect();
+        let mut text = String::new();
+        for &(s, d) in &sparse {
+            text.push_str(&format!("{s} {d}\n"));
+        }
+        let streamed = graph_io::read_edge_list_streaming(
+            std::io::Cursor::new(text.as_bytes()),
+            &LoadOptions::new(DanglingPolicy::SelfLoop).remap_ids(true),
+        )
+        .unwrap_or_else(|e| panic!("case {case}: remap load failed: {e:?}"));
+        // Emulate pass 1's first-seen numbering: src then dst, line order.
+        let mut seen: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+        let mut compact: Vec<(usize, usize)> = Vec::with_capacity(sparse.len());
+        for &(s, d) in &sparse {
+            let next = seen.len();
+            let cs = *seen.entry(s).or_insert(next);
+            let next = seen.len();
+            let cd = *seen.entry(d).or_insert(next);
+            compact.push((cs, cd));
+        }
+        let mut b = GraphBuilder::new(seen.len()).dangling_policy(DanglingPolicy::SelfLoop);
+        for (s, d) in compact {
+            b.add_edge(s, d);
+        }
+        let want = b.build().expect("compacted graph builds");
+        assert_eq!(streamed, want, "case {case}: remap diverges from first-seen compaction");
     }
 }

@@ -28,21 +28,29 @@
 //!   sharded worker runtime and the message-passing backend on it,
 //!   merging cells into `BENCH_throughput.json`.
 //!
+//! * **faults**: the degradation curve — msgpass driven to a fixed ε
+//!   under per-link drop ∈ {0, 0.01, 0.05, 0.2} × {raw, rel} delivery
+//!   plus a drop+mid-run-crash pair, recording vtime-to-ε,
+//!   bytes-on-wire and the fault ledger into `BENCH_faults.json` (the
+//!   reliable protocol's overhead vs the raw wire's honest stall).
+//!
 //! `cargo bench --bench throughput`. Env knobs:
 //! `PAGERANK_BENCH_QUICK=1` shrinks every section to a CI smoke size;
 //! `THROUGHPUT_ONLY=sharded-sweep` runs only the leader-saturation
 //! section, `THROUGHPUT_ONLY=network-sweep` only the msgpass race,
-//! `THROUGHPUT_ONLY=webgraph` only the corpus pipeline (CI runs all
-//! three on every push to keep the `bench-json` artifact fed).
+//! `THROUGHPUT_ONLY=webgraph` only the corpus pipeline,
+//! `THROUGHPUT_ONLY=faults` only the degradation curve (CI runs all
+//! four on every push to keep the `bench-json` artifact fed).
 
 use std::collections::BTreeMap;
 
 use pagerank_mp::algo::common::PageRankSolver;
-use pagerank_mp::coordinator::{MsgpassRuntime, Packer, Sampling, ShardMap};
+use pagerank_mp::coordinator::msgpass::DEFAULT_GOSSIP_PERIOD;
+use pagerank_mp::coordinator::{MsgpassConfig, MsgpassRuntime, Packer, Sampling, ShardMap};
 use pagerank_mp::engine::{CoordinatorSolver, ShardedSolver, SolverSpec};
 use pagerank_mp::graph::{generators, io as graph_io, DanglingPolicy, LoadOptions};
 use pagerank_mp::linalg::vector;
-use pagerank_mp::network::LatencyModel;
+use pagerank_mp::network::{CrashWindow, FaultPlan, LatencyModel};
 use pagerank_mp::util::bench;
 use pagerank_mp::util::json::Json;
 use pagerank_mp::util::rng::Rng;
@@ -167,10 +175,18 @@ fn msgpass_race_cell(
     let mut rt = MsgpassRuntime::new(g.clone(), 0.85, shards, batch, ShardMap::Modulo, 8, latency);
     let mut rng = Rng::seeded(17);
     let t0 = std::time::Instant::now();
-    let super_steps = rt.run_to_residual(eps, max_super_steps, &mut rng);
+    // A drain failure (possible only under a fault plan; these cells run
+    // fault-free) is reported as an honest non-converged cell, not a
+    // bench abort.
+    let (super_steps, error) = match rt.run_to_residual(eps, max_super_steps, &mut rng) {
+        Ok(steps) => (steps, None),
+        Err(e) => (max_super_steps, Some(format!("{e:#}"))),
+    };
     let wall = t0.elapsed();
-    let converged = rt.residual_norm_sq() / g.n() as f64 <= eps;
-    if !converged {
+    let converged = error.is_none() && rt.residual_norm_sq() / g.n() as f64 <= eps;
+    if let Some(e) = &error {
+        println!("  WARNING: {spec_key} failed to drain: {e}");
+    } else if !converged {
         println!("  WARNING: {spec_key} hit the {max_super_steps}-super-step cap before eps");
     }
     let acts_per_sec = rt.activations() as f64 / wall.as_secs_f64();
@@ -199,6 +215,9 @@ fn msgpass_race_cell(
     cell.insert("vtime_to_eps".to_string(), Json::Number(rt.virtual_time()));
     cell.insert("peak_queue_depth".to_string(), Json::Number(rt.peak_queue_depth() as f64));
     cell.insert("peak_in_flight".to_string(), Json::Number(rt.peak_in_flight() as f64));
+    if let Some(e) = error {
+        cell.insert("error".to_string(), Json::String(e));
+    }
     Json::Object(cell)
 }
 
@@ -307,6 +326,145 @@ fn network_msgpass_sweep(quick: bool) {
         .join("BENCH_network.json");
     pagerank_mp::harness::report::write_file(&out, &Json::Object(doc).render())
         .expect("write BENCH_network.json");
+    println!("wrote {}", out.display());
+}
+
+/// One cell of the fault-degradation curve: the msgpass backend under a
+/// seeded [`FaultPlan`], raced to the scaled residual target in one
+/// reliability mode. The spec key is the canonical registry key
+/// (`msgpass:4:256:mod:drop0.05:crash1@400+200:rel`), so `bench_diff`
+/// tracks each (plan, mode) cell across commits and a scenario could
+/// re-run the exact same configuration.
+fn faults_race_cell(
+    g: &pagerank_mp::graph::Graph,
+    shards: usize,
+    batch: usize,
+    plan: FaultPlan,
+    reliable: bool,
+    eps: f64,
+    max_super_steps: usize,
+) -> Json {
+    let spec = SolverSpec::Msgpass {
+        shards,
+        batch,
+        map: ShardMap::Modulo,
+        gossip: DEFAULT_GOSSIP_PERIOD,
+        drop: plan.drop,
+        crash: plan.crashes.first().copied(),
+        reliable,
+    };
+    let spec_key = spec.key();
+    let mut cfg =
+        MsgpassConfig::new(shards, batch, ShardMap::Modulo, DEFAULT_GOSSIP_PERIOD, LatencyModel::Zero)
+            .with_faults(plan.clone());
+    if reliable {
+        cfg = cfg.reliable();
+    }
+    let mut rt = MsgpassRuntime::with_config(g.clone(), 0.85, cfg);
+    let mut rng = Rng::seeded(17);
+    let t0 = std::time::Instant::now();
+    // An undrainable queue (pathological plan) is an honest failed cell,
+    // not a bench abort — the degradation curve must show it.
+    let (super_steps, error) = match rt.run_to_residual(eps, max_super_steps, &mut rng) {
+        Ok(steps) => (steps, None),
+        Err(e) => (max_super_steps, Some(format!("{e:#}"))),
+    };
+    let wall = t0.elapsed();
+    let final_residual = rt.residual_norm_sq() / g.n() as f64;
+    let converged = error.is_none() && final_residual <= eps;
+    if let Some(e) = &error {
+        println!("  WARNING: {spec_key} failed to drain: {e}");
+    } else if !converged {
+        // Expected for raw mode under loss: the honest degradation.
+        println!("  note: {spec_key} stopped at residual {final_residual:.3e} (eps {eps:.0e})");
+    }
+    let f = rt.fault_counters();
+    println!(
+        "{spec_key:<48} {super_steps:>6} super-steps  vtime {:>9.1}  bytes {:>11}  \
+         drop {:>7}  retx {:>6}  dedup {:>6}",
+        rt.virtual_time(),
+        rt.bytes_on_wire(),
+        f.messages_dropped,
+        f.retransmits,
+        f.duplicates_suppressed,
+    );
+    let mut cell = BTreeMap::new();
+    cell.insert("spec".to_string(), Json::String(spec_key));
+    cell.insert("mode".to_string(), Json::String(if reliable { "rel" } else { "raw" }.into()));
+    cell.insert("drop".to_string(), Json::Number(plan.drop));
+    cell.insert("crashed".to_string(), Json::Bool(!plan.crashes.is_empty()));
+    cell.insert("shards".to_string(), Json::Number(shards as f64));
+    cell.insert("batch".to_string(), Json::Number(batch as f64));
+    cell.insert("eps".to_string(), Json::Number(eps));
+    cell.insert("converged".to_string(), Json::Bool(converged));
+    cell.insert("final_residual".to_string(), Json::Number(final_residual));
+    cell.insert("super_steps".to_string(), Json::Number(super_steps as f64));
+    cell.insert("vtime_to_eps".to_string(), Json::Number(rt.virtual_time()));
+    cell.insert("messages_sent".to_string(), Json::Number(rt.messages_sent() as f64));
+    cell.insert("bytes_on_wire".to_string(), Json::Number(rt.bytes_on_wire() as f64));
+    cell.insert("messages_dropped".to_string(), Json::Number(f.messages_dropped as f64));
+    cell.insert(
+        "duplicates_suppressed".to_string(),
+        Json::Number(f.duplicates_suppressed as f64),
+    );
+    cell.insert("retransmits".to_string(), Json::Number(f.retransmits as f64));
+    cell.insert("recoveries".to_string(), Json::Number(f.recoveries as f64));
+    cell.insert(
+        "residual_divergence_at_crash".to_string(),
+        Json::Number(f.residual_divergence_at_crash),
+    );
+    cell.insert("abandoned".to_string(), Json::Number(rt.abandoned_messages() as f64));
+    cell.insert("wall_ms".to_string(), Json::Number(wall.as_secs_f64() * 1e3));
+    if let Some(e) = error {
+        cell.insert("error".to_string(), Json::String(e));
+    }
+    Json::Object(cell)
+}
+
+/// The fault-degradation curve (ISSUE 8): the msgpass backend driven to
+/// a fixed scaled residual ε under drop ∈ {0, 0.01, 0.05, 0.2} × mode ∈
+/// {raw, rel}, plus a drop+mid-run-crash pair — vtime-to-ε and
+/// bytes-on-wire degrade with loss, `rel` pays wire overhead to keep
+/// converging, `raw` reports its stall honestly (`converged: false`,
+/// `final_residual` at the cap). Dumps `BENCH_faults.json` for the CI
+/// artifact and `scripts/bench_diff`.
+fn faults_degradation_sweep(quick: bool) {
+    println!("\n=== fault degradation: msgpass raw vs reliable under lossy links ===");
+    // Raw lossy cells run to the cap by design (conservation is broken,
+    // the residual floors), so the cap bounds this section's wall time.
+    let (n, batch, eps, max_super_steps) = if quick {
+        (2_000usize, 64usize, 1e-6f64, 10_000usize)
+    } else {
+        (20_000, 256, 1e-8, 40_000)
+    };
+    let g = generators::erdos_renyi(n, 8.0 / n as f64, 12);
+    let graph_key = format!("er-sparse N={n} deg~8");
+    let shards = 4usize;
+    let mut cells = Vec::new();
+    for reliable in [false, true] {
+        for drop in [0.0, 0.01, 0.05, 0.2] {
+            let plan = FaultPlan::default().with_drop(drop);
+            cells.push(faults_race_cell(&g, shards, batch, plan, reliable, eps, max_super_steps));
+        }
+    }
+    // The recovery pair: 5% loss plus one mid-run crash (vtime advances
+    // ~batch/shards per super-step, so [400, 600) lands a few dozen
+    // super-steps in — after real residual mass is in flight).
+    let crash = CrashWindow { shard: 1, at: 400.0, down_for: 200.0 };
+    for reliable in [false, true] {
+        let plan = FaultPlan::default().with_drop(0.05).with_crash(crash);
+        cells.push(faults_race_cell(&g, shards, batch, plan, reliable, eps, max_super_steps));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::String("throughput.faults".to_string()));
+    doc.insert("graph".to_string(), Json::String(graph_key));
+    doc.insert("shards".to_string(), Json::Number(shards as f64));
+    doc.insert("batch".to_string(), Json::Number(batch as f64));
+    doc.insert("eps".to_string(), Json::Number(eps));
+    doc.insert("cells".to_string(), Json::Array(cells));
+    let out = repo_root().join("BENCH_faults.json");
+    pagerank_mp::harness::report::write_file(&out, &Json::Object(doc).render())
+        .expect("write BENCH_faults.json");
     println!("wrote {}", out.display());
 }
 
@@ -506,7 +664,8 @@ fn webgraph_bench(quick: bool) {
     let mut rng = Rng::seeded(23);
     let t0 = std::time::Instant::now();
     // eps far below reach: the super-step cap governs the budget.
-    rt.run_to_residual(1e-300, msgpass_steps, &mut rng);
+    rt.run_to_residual(1e-300, msgpass_steps, &mut rng)
+        .expect("fault-free msgpass runs drain");
     let wall = t0.elapsed();
     // Materialize the transpose on the shared graph to report what an
     // in-link consumer actually holds in memory.
@@ -533,6 +692,10 @@ fn main() {
     }
     if std::env::var("THROUGHPUT_ONLY").as_deref() == Ok("webgraph") {
         webgraph_bench(quick);
+        return;
+    }
+    if std::env::var("THROUGHPUT_ONLY").as_deref() == Ok("faults") {
+        faults_degradation_sweep(quick);
         return;
     }
     let mut b = bench::standard();
@@ -626,6 +789,7 @@ fn main() {
     sharded_saturation_sweep(quick);
     network_msgpass_sweep(quick);
     webgraph_bench(quick);
+    faults_degradation_sweep(quick);
 
     println!("\n{}", b.to_csv());
     pagerank_mp::harness::report::write_file(

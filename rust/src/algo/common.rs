@@ -58,6 +58,13 @@ pub trait PageRankSolver {
         0
     }
 
+    /// Fault-injection ledger — nonzero only for backends running over
+    /// a faulted network (the msgpass runtime overrides this); every
+    /// other solver computes on an ideal machine.
+    fn fault_counters(&self) -> crate::network::FaultCounters {
+        crate::network::FaultCounters::default()
+    }
+
     /// Squared l2 distance `‖x̂_t - x*‖²` of the current estimate from a
     /// reference vector — the quantity Fig. 1 plots (before its 1/N
     /// scaling). The default routes through [`PageRankSolver::estimate`]

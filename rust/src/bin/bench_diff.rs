@@ -1,7 +1,8 @@
 //! `bench_diff` — diff two perf artifacts and flag regressions.
 //!
 //! Compares a baseline and a candidate `BENCH_scenario.json`,
-//! `BENCH_sweep.json`, `BENCH_throughput.json` or `BENCH_network.json`
+//! `BENCH_sweep.json`, `BENCH_throughput.json`, `BENCH_network.json` or
+//! `BENCH_faults.json`
 //! (the artifacts CI uploads as `bench-json` on every push) and prints
 //! one line per metric
 //! that moved past the threshold. Exit code 1 when a regression is
@@ -512,6 +513,50 @@ mod tests {
         .expect("runs");
         assert!(clean.is_empty(), "{clean:?}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn faults_artifact_cells_are_keyed_by_their_full_fault_spec() {
+        // BENCH_faults.json keys each (plan, mode) cell by the canonical
+        // registry spec — drop/crash/rel segments and all — so raw and
+        // reliable cells under the same plan diff independently, and the
+        // wire metrics ride the existing lower-is-better machinery.
+        let doc = |vtime: f64, bytes: f64| {
+            format!(
+                r#"{{"bench": "throughput.faults", "eps": 1e-6, "shards": 4, "cells": [
+                     {{"spec": "msgpass:4:64:mod:drop0.05:rel", "mode": "rel",
+                       "drop": 0.05, "converged": true, "final_residual": 9e-7,
+                       "vtime_to_eps": {vtime}, "bytes_on_wire": {bytes},
+                       "messages_dropped": 400, "duplicates_suppressed": 0,
+                       "retransmits": 410, "recoveries": 0,
+                       "residual_divergence_at_crash": 0.0, "abandoned": 0,
+                       "wall_ms": 10.0}},
+                     {{"spec": "msgpass:4:64:mod:drop0.05", "mode": "raw",
+                       "drop": 0.05, "converged": false, "final_residual": 3e-3,
+                       "vtime_to_eps": 9000, "bytes_on_wire": 5.0e5,
+                       "messages_dropped": 420, "duplicates_suppressed": 0,
+                       "retransmits": 0, "recoveries": 0,
+                       "residual_divergence_at_crash": 0.0, "abandoned": 0,
+                       "wall_ms": 10.0}}]}}"#
+            )
+        };
+        let old = extract(&Json::parse(&doc(1500.0, 1.0e5)).expect("json")).expect("extracts");
+        assert_eq!(old.len(), 2);
+        assert_eq!(old["msgpass:4:64:mod:drop0.05:rel"].vtime_to_eps, Some(1500.0));
+        assert_eq!(old["msgpass:4:64:mod:drop0.05"].bytes_on_wire, Some(5.0e5));
+        // The reliable cell taking 40% more vtime (or wire bytes) to the
+        // same eps is a protocol regression and must flag.
+        let new = extract(&Json::parse(&doc(2100.0, 1.0e5)).expect("json")).expect("extracts");
+        let key = "msgpass:4:64:mod:drop0.05:rel";
+        let flagged = check(
+            key,
+            "vtime_to_eps",
+            old[key].vtime_to_eps,
+            new[key].vtime_to_eps,
+            0.15,
+            true,
+        );
+        assert!(flagged.is_some(), "reliable-mode vtime regression must flag");
     }
 
     #[test]

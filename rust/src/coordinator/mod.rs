@@ -43,6 +43,6 @@ pub mod sharded;
 
 pub use config::{CoordinatorConfig, Mode};
 pub use leader::{Coordinator, RunReport};
-pub use msgpass::MsgpassRuntime;
+pub use msgpass::{MsgpassConfig, MsgpassRuntime};
 pub use sampler::SamplerKind;
 pub use sharded::{Packer, Sampling, ShardMap, ShardedRuntime};

@@ -38,13 +38,48 @@
 //! parallel makespan: more shards ⇒ fewer serial slots per shard ⇒ less
 //! virtual time per super-step, while the transport meters what that
 //! parallelism costs in messages and bytes.
+//!
+//! ## Faults, crashes and recovery
+//!
+//! A [`MsgpassConfig`] composes a seeded
+//! [`FaultPlan`](crate::network::FaultPlan) and a reliability mode onto
+//! the wire (see [`crate::network::faults`]). Drop/duplicate/jitter are
+//! entirely the transport's business; the runtime interprets **crash
+//! windows**:
+//!
+//! * **down** (`[at, at+down_for)`): the shard's `Wake` events are
+//!   discarded (it activates nothing) and every frame delivered to it
+//!   is lost with its queue — the transport enforces both.
+//! * **crash instant**: the shard's replica memory of *unowned* pages
+//!   is lost (zeroed). Its owned `(x_k, r_k)` pairs survive — they are
+//!   the durable two-scalars-per-page checkpoint the paper's protocol
+//!   needs anyway — as do the protocol's sequence/dedup tables (modeled
+//!   as stable storage). The `residual_divergence_at_crash` gauge
+//!   records `(1/N)·Σ_j (r_owner_j − (y−Bx)_j)²` at that instant.
+//! * **restart**: peers re-sync — each page's owner pushes one
+//!   [`Msg::ResidualSync`] (absolute value, not a delta) to the
+//!   restarted shard for every page it subscribes to. Syncs are
+//!   ordinary metered traffic: sequence-numbered in `rel` mode,
+//!   droppable in `raw`.
+//!
+//! Correctness under faults is owner-authoritative: conservation
+//! `Bx + r = (1−α)𝟙` needs every `ResidualUpdate` applied to its
+//! *owner* exactly once. `rel` mode guarantees that (retransmission
+//! past drops and crash windows, dedup past duplicates) as long as no
+//! retry budget is exhausted — pinned by the conservation tests — while
+//! `raw` mode loses owner deltas and degrades honestly. Replica entries
+//! for *unowned* pages may double-apply a re-synced in-flight delta;
+//! that only staleness-perturbs future projections (convergence rate),
+//! never the invariant.
 
 use crate::coordinator::sharded::ShardMap;
 use crate::graph::Graph;
 use crate::linalg::select::{DEFAULT_WEIGHT_FLOOR, WeightTree};
 use crate::linalg::sparse::BColumns;
+use crate::network::faults::{CrashWindow, FaultCounters, FaultPlan, NetProfile, Reliability};
 use crate::network::latency::LatencyModel;
 use crate::network::transport::{Transport, TransportEvent, WireSized};
+use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
 
 /// Default gossip period (activations per shard between
@@ -60,6 +95,10 @@ pub const RESIDUAL_UPDATE_BYTES: usize = 16;
 /// 4-byte shard id + 8-byte total + 8-byte timestamp.
 pub const WEIGHT_SUMMARY_BYTES: usize = 24;
 
+/// Fixed wire size of a [`Msg::ResidualSync`]: 4-byte type tag +
+/// 4-byte page id + 8-byte value.
+pub const RESIDUAL_SYNC_BYTES: usize = 16;
+
 /// Virtual time one activation occupies on its shard's event loop.
 const ACTIVATION_TIME: f64 = 1.0;
 
@@ -72,6 +111,10 @@ pub enum Msg {
     /// Periodic broadcast of the sender's residual-weight tree total;
     /// drives cross-shard slot allocation.
     WeightSummary { total: f64 },
+    /// Post-restart re-sync: `r[page] = value` at the receiver's
+    /// replica — the owner's authoritative value, sent to a recovering
+    /// subscriber (never to the page's own owner).
+    ResidualSync { page: u32, value: f64 },
 }
 
 impl WireSized for Msg {
@@ -79,7 +122,56 @@ impl WireSized for Msg {
         match self {
             Msg::ResidualUpdate { .. } => RESIDUAL_UPDATE_BYTES,
             Msg::WeightSummary { .. } => WEIGHT_SUMMARY_BYTES,
+            Msg::ResidualSync { .. } => RESIDUAL_SYNC_BYTES,
         }
+    }
+}
+
+/// Construction parameters of a [`MsgpassRuntime`] beyond the graph and
+/// α: topology (shards/map), scheduling (batch/gossip), the latency
+/// model, and the fault/reliability profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MsgpassConfig {
+    pub shards: usize,
+    pub batch: usize,
+    pub map: ShardMap,
+    pub gossip: usize,
+    pub latency: LatencyModel,
+    /// Injected wire faults; `None` (or an empty plan — normalized at
+    /// construction) is the exact PR-6 wire.
+    pub faults: Option<FaultPlan>,
+    pub reliability: Reliability,
+}
+
+impl MsgpassConfig {
+    pub fn new(
+        shards: usize,
+        batch: usize,
+        map: ShardMap,
+        gossip: usize,
+        latency: LatencyModel,
+    ) -> MsgpassConfig {
+        MsgpassConfig {
+            shards,
+            batch,
+            map,
+            gossip,
+            latency,
+            faults: None,
+            reliability: Reliability::Raw,
+        }
+    }
+
+    /// Compose a fault plan (an empty plan is normalized to `None`).
+    pub fn with_faults(mut self, plan: FaultPlan) -> MsgpassConfig {
+        self.faults = if plan.is_empty() { None } else { Some(plan) };
+        self
+    }
+
+    /// Switch on the reliable-delivery protocol.
+    pub fn reliable(mut self) -> MsgpassConfig {
+        self.reliability = Reliability::Reliable;
+        self
     }
 }
 
@@ -88,6 +180,7 @@ impl WireSized for Msg {
 pub struct MsgpassRuntime {
     graph: Graph,
     cols: BColumns,
+    alpha: f64,
     shards: usize,
     batch: usize,
     map: ShardMap,
@@ -126,9 +219,26 @@ pub struct MsgpassRuntime {
     touched: Vec<u32>,
     /// Scratch: pre-update replica values of the touched pages.
     old_vals: Vec<f64>,
+    /// Crash windows from the fault plan (construction order) with
+    /// onset/recovery progress flags, ticked against event times.
+    crashes: Vec<CrashWindow>,
+    crash_started: Vec<bool>,
+    crash_recovered: Vec<bool>,
+    /// Completed restarts (checkpoint restore + peer re-sync issued).
+    recoveries: u64,
+    /// Max over crash instants of the owner-residual's squared
+    /// divergence from the true residual, scaled by 1/N.
+    fault_divergence: f64,
+    /// Largest `|{k} ∪ out(k)|` over pages — sizes the per-super-step
+    /// event budget.
+    max_fanout: usize,
+    /// Test hook: forces the event budget ([`Self::set_event_budget`]).
+    budget_override: Option<u64>,
 }
 
 impl MsgpassRuntime {
+    /// The fault-free PR-6 constructor (raw wire, no plan) — delegates
+    /// to [`MsgpassRuntime::with_config`].
     pub fn new(
         graph: Graph,
         alpha: f64,
@@ -138,9 +248,24 @@ impl MsgpassRuntime {
         gossip: usize,
         latency: LatencyModel,
     ) -> MsgpassRuntime {
+        MsgpassRuntime::with_config(
+            graph,
+            alpha,
+            MsgpassConfig::new(shards, batch, map, gossip, latency),
+        )
+    }
+
+    pub fn with_config(graph: Graph, alpha: f64, cfg: MsgpassConfig) -> MsgpassRuntime {
+        let MsgpassConfig { shards, batch, map, gossip, latency, faults, reliability } = cfg;
         assert!(shards >= 1, "need at least one shard");
         assert!(batch >= 1, "need at least one activation per super-step");
         assert!(gossip >= 1, "gossip period must be >= 1");
+        let faults = faults.filter(|p| !p.is_empty());
+        let crashes: Vec<CrashWindow> =
+            faults.as_ref().map(|p| p.crashes.clone()).unwrap_or_default();
+        for c in &crashes {
+            assert!(c.shard < shards, "crash window names shard {} of {shards}", c.shard);
+        }
         let n = graph.n();
         let cols = BColumns::new(&graph, alpha);
         let y = 1.0 - alpha;
@@ -161,13 +286,21 @@ impl MsgpassRuntime {
             s.dedup();
             subs.push(s);
         }
+        let max_fanout =
+            (0..n).map(|k| 1 + graph.out(k).len()).max().unwrap_or(1);
+        let crash_count = crashes.len();
         MsgpassRuntime {
             cols,
+            alpha,
             shards,
             batch,
             map,
             gossip,
-            transport: Transport::new(shards, latency),
+            transport: Transport::with_profile(
+                shards,
+                latency,
+                NetProfile { faults, reliability },
+            ),
             net_rng: Rng::seeded(0),
             streams: Vec::new(),
             streams_seeded: false,
@@ -183,19 +316,39 @@ impl MsgpassRuntime {
             logical_writes: 0,
             touched: Vec::new(),
             old_vals: Vec::new(),
+            crashes,
+            crash_started: vec![false; crash_count],
+            crash_recovered: vec![false; crash_count],
+            recoveries: 0,
+            fault_divergence: 0.0,
+            max_fanout,
+            budget_override: None,
             graph,
         }
+    }
+
+    /// Run one super-step, panicking if it cannot drain — the
+    /// infallible wrapper over [`MsgpassRuntime::try_run_super_step`]
+    /// for fault-free callers.
+    pub fn run_super_step(&mut self, rng: &mut Rng) {
+        self.try_run_super_step(rng).expect("msgpass super-step failed to drain");
     }
 
     /// Run one super-step: allocate `batch` activation slots across the
     /// shards from the gossiped weight summaries, schedule each shard's
     /// slots on its event loop, and drain the transport (activations,
-    /// deliveries and gossip interleave in virtual-time order).
+    /// deliveries, gossip, crash/recovery ticks and the reliability
+    /// protocol interleave in virtual-time order).
+    ///
+    /// Fails loudly — a named error instead of a spin — if the drain
+    /// surfaces more events than the structural budget allows, which
+    /// can only mean the queue will never drain (a pathological fault
+    /// plan or a protocol bug).
     ///
     /// `rng` seeds the per-shard candidate streams on the first call
     /// (shard 0 clones it verbatim — the msgpass ≡ mp anchor) and is
     /// untouched afterwards.
-    pub fn run_super_step(&mut self, rng: &mut Rng) {
+    pub fn try_run_super_step(&mut self, rng: &mut Rng) -> Result<()> {
         if !self.streams_seeded {
             for w in 0..self.shards {
                 self.streams.push(if w == 0 { rng.clone() } else { rng.fork(w as u64) });
@@ -203,6 +356,7 @@ impl MsgpassRuntime {
             self.net_rng = rng.fork(0x6E65_745F_7374); // "net_st"
             self.streams_seeded = true;
         }
+        let budget = self.budget_override.unwrap_or_else(|| self.event_budget());
         let slots = self.allocate();
         let t0 = self.transport.now();
         for (w, &count) in slots.iter().enumerate() {
@@ -210,24 +364,141 @@ impl MsgpassRuntime {
                 self.transport.wake_at(w, t0 + (slot + 1) as f64 * ACTIVATION_TIME);
             }
         }
+        let mut surfaced: u64 = 0;
         while let Some(ev) = self.transport.pop() {
+            surfaced += 1;
+            if surfaced > budget {
+                return Err(crate::anyhow!(
+                    "msgpass super-step event budget exhausted: {surfaced} events surfaced \
+                     (budget {budget}, {} still queued at vtime {}) — the event queue cannot \
+                     drain; the fault plan or reliability protocol is generating unbounded \
+                     traffic",
+                    self.transport.len(),
+                    self.transport.now(),
+                ));
+            }
+            self.tick_crashes(ev.time);
             match ev.event {
-                TransportEvent::Wake { shard } => self.activate_one(shard),
+                TransportEvent::Wake { shard } => {
+                    // A crashed shard's event loop is dead: its slots
+                    // are simply lost capacity.
+                    if !self.transport.is_down(shard, ev.time) {
+                        self.activate_one(shard);
+                    }
+                }
                 TransportEvent::Deliver { src, dst, msg } => self.deliver(src, dst, msg, ev.time),
+            }
+        }
+        Ok(())
+    }
+
+    /// Structural upper bound on the events one super-step can surface:
+    /// the transport consumes protocol frames and suppressed deliveries
+    /// internally, so what reaches the runtime is at most the wakes,
+    /// each send's deliveries (×2 for duplication), re-sync fan-in
+    /// after recoveries, and whatever was carried over in the queue.
+    /// Exceeding it is impossible for a draining queue by construction.
+    fn event_budget(&self) -> u64 {
+        let n = self.graph.n() as u64;
+        let per_act = (self.max_fanout as u64 + 2) * self.shards as u64 * 4;
+        let carry = self.transport.len() as u64;
+        (self.batch as u64 + carry) * per_act
+            + (self.crashes.len() as u64 + 1) * 4 * n
+            + 1024
+    }
+
+    /// Test hook: force the super-step event budget to exercise the
+    /// named cannot-drain error.
+    #[cfg(test)]
+    fn set_event_budget(&mut self, budget: u64) {
+        self.budget_override = Some(budget);
+    }
+
+    /// Drive super-steps until the scaled residual `(1/N)‖r‖²` reaches
+    /// `eps` or `max_super_steps` elapse; returns the super-steps taken
+    /// (the cap itself if `eps` was not reached), or the named
+    /// cannot-drain error from [`MsgpassRuntime::try_run_super_step`].
+    pub fn run_to_residual(
+        &mut self,
+        eps: f64,
+        max_super_steps: usize,
+        rng: &mut Rng,
+    ) -> Result<usize> {
+        for step in 0..max_super_steps {
+            if self.residual_norm_sq() / self.graph.n() as f64 <= eps {
+                return Ok(step);
+            }
+            self.try_run_super_step(rng)
+                .with_context(|| format!("msgpass run_to_residual at super-step {step}"))?;
+        }
+        Ok(max_super_steps)
+    }
+
+    /// Advance the crash/recovery state machine to `now`: fire every
+    /// onset (divergence gauge + replica wipe) and recovery (counter +
+    /// peer re-sync) whose instant has passed. Windows fire in
+    /// event-time order because this is called per popped event.
+    fn tick_crashes(&mut self, now: f64) {
+        for i in 0..self.crashes.len() {
+            let c = self.crashes[i];
+            if !self.crash_started[i] && now >= c.at {
+                self.crash_started[i] = true;
+                self.on_crash(c.shard);
+            }
+            if self.crash_started[i] && !self.crash_recovered[i] && now >= c.restart_at() {
+                self.crash_recovered[i] = true;
+                self.on_recover(c.shard);
             }
         }
     }
 
-    /// Drive super-steps until the scaled residual `(1/N)‖r‖²` reaches
-    /// `eps` or `max_super_steps` elapse; returns the super-steps taken.
-    pub fn run_to_residual(&mut self, eps: f64, max_super_steps: usize, rng: &mut Rng) -> usize {
-        for step in 0..max_super_steps {
-            if self.residual_norm_sq() / self.graph.n() as f64 <= eps {
-                return step;
+    /// Crash instant: gauge how far the owner-authoritative residual
+    /// had diverged from the true `y − Bx` (in-flight and lost mass),
+    /// then drop the shard's replica memory of unowned pages. The owned
+    /// `(x_k, r_k)` pairs are the durable two-scalars-per-page
+    /// checkpoint and survive.
+    fn on_crash(&mut self, w: usize) {
+        let n = self.graph.n();
+        let y = 1.0 - self.alpha;
+        let mut truth = vec![y; n];
+        for k in 0..n {
+            if self.x[k] != 0.0 {
+                self.cols.sub_scaled_col(&self.graph, k, self.x[k], &mut truth);
             }
-            self.run_super_step(rng);
         }
-        max_super_steps
+        let mut div = 0.0;
+        for (j, t) in truth.iter().enumerate() {
+            let d = self.views[self.map.owner(j, n, self.shards)][j] - t;
+            div += d * d;
+        }
+        self.fault_divergence = self.fault_divergence.max(div / n as f64);
+        for j in 0..n {
+            if self.map.owner(j, n, self.shards) != w {
+                self.views[w][j] = 0.0;
+            }
+        }
+    }
+
+    /// Restart: peers re-sync the wiped replica — each page's owner
+    /// pushes its authoritative value to the restarted shard for every
+    /// page it subscribes to (metered, faultable traffic like any
+    /// other).
+    fn on_recover(&mut self, w: usize) {
+        self.recoveries += 1;
+        let n = self.graph.n();
+        for j in 0..n {
+            let o = self.map.owner(j, n, self.shards);
+            if o == w || self.subs[j].binary_search(&(w as u32)).is_err() {
+                continue;
+            }
+            let value = self.views[o][j];
+            self.transport.send(
+                o,
+                w,
+                Msg::ResidualSync { page: j as u32, value },
+                &mut self.net_rng,
+            );
+        }
     }
 
     /// Split `batch` slots across shards proportionally to the decayed
@@ -371,6 +642,11 @@ impl MsgpassRuntime {
             Msg::WeightSummary { total } => {
                 self.summaries[src] = (total, time);
             }
+            Msg::ResidualSync { page, value } => {
+                // Absolute owner value for a recovering replica; never
+                // targets the page's owner, so no tree update.
+                self.views[dst][page as usize] = value;
+            }
         }
     }
 
@@ -396,6 +672,32 @@ impl MsgpassRuntime {
 
     pub fn latency(&self) -> LatencyModel {
         self.transport.latency()
+    }
+
+    /// The composed fault plan, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.transport.fault_plan()
+    }
+
+    /// Whether the reliable-delivery protocol is on.
+    pub fn is_reliable(&self) -> bool {
+        self.transport.is_reliable()
+    }
+
+    /// The merged fault ledger: the transport's wire counters plus the
+    /// runtime's recovery count and crash-divergence gauge.
+    pub fn fault_counters(&self) -> FaultCounters {
+        let mut c = self.transport.fault_counters();
+        c.recoveries = self.recoveries;
+        c.residual_divergence_at_crash = self.fault_divergence;
+        c
+    }
+
+    /// Messages the reliable sender gave up on after the retry budget —
+    /// nonzero means even `rel` mode lost deltas and conservation may
+    /// not hold exactly.
+    pub fn abandoned_messages(&self) -> u64 {
+        self.transport.abandoned()
     }
 
     /// Current PageRank estimate (owner-written, globally consistent).
@@ -692,8 +994,286 @@ mod tests {
             LatencyModel::Zero,
         );
         let mut rng = Rng::seeded(24);
-        let steps = rt.run_to_residual(1e-10, 100_000, &mut rng);
+        let steps =
+            rt.run_to_residual(1e-10, 100_000, &mut rng).expect("fault-free runs drain");
         assert!(steps < 100_000, "must reach epsilon before the cap");
         assert!(rt.residual_norm_sq() / rt.n() as f64 <= 1e-10);
+    }
+
+    fn faulted(
+        graph: crate::graph::Graph,
+        shards: usize,
+        latency: LatencyModel,
+        plan: FaultPlan,
+        reliable: bool,
+    ) -> MsgpassRuntime {
+        let mut cfg = MsgpassConfig::new(shards, batch_for(shards), ShardMap::Modulo, 4, latency)
+            .with_faults(plan);
+        if reliable {
+            cfg = cfg.reliable();
+        }
+        MsgpassRuntime::with_config(graph, 0.85, cfg)
+    }
+
+    fn batch_for(shards: usize) -> usize {
+        2 * shards
+    }
+
+    fn max_conservation_violation(rt: &MsgpassRuntime, g: &crate::graph::Graph) -> f64 {
+        let b = DenseMatrix::b_matrix(g, 0.85);
+        let bx = b.matvec(&rt.estimate());
+        let r = rt.residual();
+        bx.iter()
+            .zip(&r)
+            .map(|(v, rj)| (v + rj - 0.15).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn empty_fault_plan_raw_mode_is_bit_identical_to_the_plain_backend() {
+        // The PR-6 compatibility pin: composing an all-zero plan in raw
+        // mode must change nothing — same estimate, bytes, messages and
+        // virtual time, event for event.
+        let g = generators::er_threshold(25, 0.5, 31);
+        let mut plain = MsgpassRuntime::new(
+            g.clone(),
+            0.85,
+            3,
+            6,
+            ShardMap::Modulo,
+            4,
+            LatencyModel::Exponential { mean: 0.4 },
+        );
+        let cfg = MsgpassConfig::new(
+            3,
+            6,
+            ShardMap::Modulo,
+            4,
+            LatencyModel::Exponential { mean: 0.4 },
+        )
+        .with_faults(FaultPlan::default());
+        let mut composed = MsgpassRuntime::with_config(g, 0.85, cfg);
+        let (mut ra, mut rb) = (Rng::seeded(42), Rng::seeded(42));
+        for _ in 0..300 {
+            plain.run_super_step(&mut ra);
+            composed.run_super_step(&mut rb);
+        }
+        assert_eq!(plain.estimate(), composed.estimate());
+        assert_eq!(plain.messages_sent(), composed.messages_sent());
+        assert_eq!(plain.bytes_on_wire(), composed.bytes_on_wire());
+        assert_eq!(plain.virtual_time(), composed.virtual_time());
+        assert!(!composed.fault_counters().any());
+    }
+
+    #[test]
+    fn reliable_mode_without_faults_converges_and_meters_its_overhead() {
+        let g = generators::er_threshold(20, 0.5, 7);
+        let x_star = exact_pagerank(&g, 0.85);
+        let build = |reliable: bool| {
+            let mut cfg =
+                MsgpassConfig::new(2, 4, ShardMap::Modulo, 4, LatencyModel::Zero);
+            if reliable {
+                cfg = cfg.reliable();
+            }
+            MsgpassRuntime::with_config(g.clone(), 0.85, cfg)
+        };
+        let (mut raw, mut rel) = (build(false), build(true));
+        let (mut ra, mut rb) = (Rng::seeded(33), Rng::seeded(33));
+        for _ in 0..4_000 {
+            raw.run_super_step(&mut ra);
+            rel.run_super_step(&mut rb);
+        }
+        assert!(vector::dist_inf(&rel.estimate(), &x_star) < 1e-7);
+        assert_eq!(rel.abandoned_messages(), 0);
+        assert_eq!(rel.fault_counters().retransmits, 0, "no faults, no retransmits");
+        assert!(
+            rel.bytes_on_wire() > raw.bytes_on_wire(),
+            "seq headers and acks must cost bytes: rel={} raw={}",
+            rel.bytes_on_wire(),
+            raw.bytes_on_wire()
+        );
+        assert!(max_conservation_violation(&rel, &g) < 1e-9);
+    }
+
+    #[test]
+    fn conservation_holds_after_drain_under_every_fault_plan_in_reliable_mode() {
+        // The tentpole invariant: drop, duplicate, reorder jitter and a
+        // crash window each (and combined) leave Bx + r = (1-α)1 exact
+        // after the queue drains, because the reliable protocol applies
+        // every owner delta exactly once and retransmits across the
+        // crash window. Gated on a clean retry ledger.
+        let plans: Vec<(&str, FaultPlan)> = vec![
+            ("drop", FaultPlan::default().with_drop(0.2)),
+            ("dup", FaultPlan::default().with_duplicate(0.3)),
+            ("reorder", FaultPlan::default().with_jitter(3.0)),
+            (
+                "crash",
+                FaultPlan::default().with_crash(CrashWindow {
+                    shard: 1,
+                    at: 40.0,
+                    down_for: 20.0,
+                }),
+            ),
+            (
+                "combined",
+                FaultPlan::default()
+                    .with_drop(0.1)
+                    .with_duplicate(0.1)
+                    .with_jitter(1.5)
+                    .with_crash(CrashWindow { shard: 2, at: 30.0, down_for: 15.0 }),
+            ),
+        ];
+        for (name, plan) in plans {
+            let g = generators::er_threshold(24, 0.5, 11);
+            let mut rt = faulted(g.clone(), 3, LatencyModel::Zero, plan, true);
+            let mut rng = Rng::seeded(55);
+            for _ in 0..400 {
+                rt.run_super_step(&mut rng);
+            }
+            assert_eq!(
+                rt.abandoned_messages(),
+                0,
+                "{name}: retry budget must cover the plan"
+            );
+            let viol = max_conservation_violation(&rt, &g);
+            assert!(viol < 1e-9, "{name}: conservation violated by {viol}");
+        }
+    }
+
+    #[test]
+    fn pinned_drop_plus_crash_reliable_run_reaches_the_fault_free_epsilon() {
+        // The acceptance pin: a seeded plan with 5% drop and one
+        // mid-run shard crash must not stop `rel` mode from reaching
+        // the same (1/N)·‖r‖² ≤ ε as the fault-free run.
+        let eps = 1e-8;
+        let cap = 60_000;
+        let g = generators::er_threshold(30, 0.5, 2);
+        let mut clean = MsgpassRuntime::new(
+            g.clone(),
+            0.85,
+            4,
+            8,
+            ShardMap::Modulo,
+            DEFAULT_GOSSIP_PERIOD,
+            LatencyModel::Zero,
+        );
+        let mut rng = Rng::seeded(77);
+        let clean_steps = clean.run_to_residual(eps, cap, &mut rng).expect("drains");
+        assert!(clean_steps < cap, "fault-free run must converge");
+
+        let plan = FaultPlan::default()
+            .with_drop(0.05)
+            .with_crash(CrashWindow { shard: 1, at: 50.0, down_for: 25.0 });
+        let cfg = MsgpassConfig::new(
+            4,
+            8,
+            ShardMap::Modulo,
+            DEFAULT_GOSSIP_PERIOD,
+            LatencyModel::Zero,
+        )
+        .with_faults(plan)
+        .reliable();
+        let mut rt = MsgpassRuntime::with_config(g, 0.85, cfg);
+        let mut rng = Rng::seeded(77);
+        let steps = rt.run_to_residual(eps, cap, &mut rng).expect("drains");
+        assert!(steps < cap, "rel mode under 5% drop + crash must still converge");
+        assert!(rt.residual_norm_sq() / rt.n() as f64 <= eps);
+        let c = rt.fault_counters();
+        assert!(c.messages_dropped > 0, "the plan must have actually dropped frames");
+        assert!(c.retransmits > 0, "recovery must have gone through retransmission");
+        assert_eq!(c.recoveries, 1, "exactly one scheduled restart");
+        assert!(c.residual_divergence_at_crash.is_finite());
+        assert_eq!(rt.abandoned_messages(), 0);
+    }
+
+    #[test]
+    fn raw_mode_under_drops_degrades_honestly() {
+        // Fire-and-forget under 30% drop: lost owner deltas must break
+        // conservation (that is the point of measuring it), and the
+        // ledger must say how much was lost.
+        let g = generators::er_threshold(24, 0.5, 11);
+        let mut rt =
+            faulted(g.clone(), 3, LatencyModel::Zero, FaultPlan::default().with_drop(0.3), false);
+        let mut rng = Rng::seeded(55);
+        for _ in 0..400 {
+            rt.run_super_step(&mut rng);
+        }
+        let c = rt.fault_counters();
+        assert!(c.messages_dropped > 100, "expected heavy loss, got {}", c.messages_dropped);
+        assert_eq!(c.retransmits, 0, "raw mode never retransmits");
+        let viol = max_conservation_violation(&rt, &g);
+        assert!(viol > 1e-9, "dropped deltas must show up as a conservation gap");
+    }
+
+    #[test]
+    fn crash_recovery_restores_the_replica_and_is_deterministic() {
+        let run = || {
+            let g = generators::er_threshold(20, 0.5, 13);
+            let plan = FaultPlan::default().with_crash(CrashWindow {
+                shard: 0,
+                at: 25.0,
+                down_for: 10.0,
+            });
+            let mut rt = faulted(g, 2, LatencyModel::Exponential { mean: 0.3 }, plan, true);
+            let mut rng = Rng::seeded(88);
+            for _ in 0..600 {
+                rt.run_super_step(&mut rng);
+            }
+            rt
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.estimate(), b.estimate(), "faulted runs are deterministic per seed");
+        assert_eq!(a.bytes_on_wire(), b.bytes_on_wire());
+        let c = a.fault_counters();
+        assert_eq!(c.recoveries, 1);
+        assert!(c.residual_divergence_at_crash >= 0.0);
+        assert!(a.estimate().iter().all(|v| v.is_finite()));
+        // The wiped replica was re-synced: the restarted shard's view of
+        // unowned pages matches the owners' (both drained, zero in-flight).
+        let n = a.n();
+        for j in 0..n {
+            let owner = a.map().owner(j, n, 2);
+            if owner != 0 && a.subs[j].binary_search(&0).is_ok() {
+                assert!(
+                    a.views[0][j].is_finite(),
+                    "page {j}: replica must be restored, not poisoned"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exhausted_event_budget_is_a_named_error_not_a_spin() {
+        let g = generators::er_threshold(20, 0.5, 7);
+        let mut rt = MsgpassRuntime::new(
+            g,
+            0.85,
+            2,
+            8,
+            ShardMap::Modulo,
+            DEFAULT_GOSSIP_PERIOD,
+            LatencyModel::Zero,
+        );
+        rt.set_event_budget(3);
+        let mut rng = Rng::seeded(91);
+        let err = rt.try_run_super_step(&mut rng).expect_err("budget of 3 must trip");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("event budget exhausted"),
+            "error must name the failure: {msg}"
+        );
+        // And run_to_residual propagates it instead of spinning.
+        let mut rt2 = MsgpassRuntime::new(
+            generators::er_threshold(20, 0.5, 7),
+            0.85,
+            2,
+            8,
+            ShardMap::Modulo,
+            DEFAULT_GOSSIP_PERIOD,
+            LatencyModel::Zero,
+        );
+        rt2.set_event_budget(3);
+        let mut rng = Rng::seeded(91);
+        assert!(rt2.run_to_residual(1e-12, 100, &mut rng).is_err());
     }
 }

@@ -42,6 +42,10 @@ pub struct SolverReport {
     /// nonzero only for the sharded backend (its effective-parallelism
     /// cost; 0 for every other solver).
     pub conflicts: u64,
+    /// Fault-injection ledger absorbed over rounds — counters sum, the
+    /// crash-divergence gauge maxes; all-zero for every solver that ran
+    /// on an ideal network (and omitted from the bench JSON then).
+    pub faults: crate::network::FaultCounters,
     /// Wall-clock time for all rounds of this solver.
     pub wall: Duration,
 }
@@ -341,6 +345,32 @@ impl ScenarioReport {
                             r.wall,
                         );
                         s.insert("conflicts".to_string(), Json::Number(r.conflicts as f64));
+                        // Fault fields appear only for runs that saw (or
+                        // could have seen) faults, so ideal-network BENCH
+                        // documents keep their exact historical shape.
+                        if r.faults.any() {
+                            let f = &r.faults;
+                            s.insert(
+                                "messages_dropped".to_string(),
+                                Json::Number(f.messages_dropped as f64),
+                            );
+                            s.insert(
+                                "duplicates_suppressed".to_string(),
+                                Json::Number(f.duplicates_suppressed as f64),
+                            );
+                            s.insert(
+                                "retransmits".to_string(),
+                                Json::Number(f.retransmits as f64),
+                            );
+                            s.insert(
+                                "recoveries".to_string(),
+                                Json::Number(f.recoveries as f64),
+                            );
+                            s.insert(
+                                "residual_divergence_at_crash".to_string(),
+                                Json::Number(f.residual_divergence_at_crash),
+                            );
+                        }
                         Json::Object(s)
                     })
                     .collect();
@@ -439,6 +469,52 @@ mod tests {
         assert!(solvers[0].get("reads").and_then(Json::as_usize).expect("reads") > 0);
         assert!(solvers[0].get("conflicts").is_some(), "conflicts column missing");
         assert!(parsed.get("scenario").and_then(|s| s.get("graph")).is_some());
+    }
+
+    #[test]
+    fn bench_json_gains_fault_fields_only_for_faulted_runs() {
+        let rep = Scenario::new("fault-report", GraphSpec::paper(12))
+            .with_solvers(vec![
+                SolverSpec::parse("msgpass:2:4").expect("plain msgpass"),
+                SolverSpec::parse("msgpass:2:4:mod:drop0.3:rel").expect("faulted msgpass"),
+            ])
+            .with_steps(200)
+            .with_stride(100)
+            .with_rounds(1)
+            .with_threads(1)
+            .with_seed(9)
+            .run()
+            .expect("fault scenario runs");
+        let parsed = Json::parse(&rep.to_json().render()).expect("valid json");
+        let solvers = parsed.get("solvers").and_then(Json::as_array).expect("solvers");
+        assert_eq!(solvers.len(), 2);
+        let plain = &solvers[0];
+        let faulted = &solvers[1];
+        assert_eq!(plain.get("name").and_then(Json::as_str), Some("msgpass:2:4"));
+        assert!(
+            plain.get("messages_dropped").is_none(),
+            "ideal-network runs keep the historical summary shape"
+        );
+        assert_eq!(
+            faulted.get("name").and_then(Json::as_str),
+            Some("msgpass:2:4:mod:drop0.3:rel")
+        );
+        for field in [
+            "messages_dropped",
+            "duplicates_suppressed",
+            "retransmits",
+            "recoveries",
+            "residual_divergence_at_crash",
+        ] {
+            assert!(
+                faulted.get(field).and_then(Json::as_f64).is_some(),
+                "faulted run missing {field}"
+            );
+        }
+        assert!(
+            faulted.get("messages_dropped").and_then(Json::as_usize).expect("dropped") > 0,
+            "a 30% drop plan must drop something"
+        );
     }
 
     #[test]

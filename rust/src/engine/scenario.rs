@@ -322,6 +322,9 @@ impl Scenario {
             // an atomic because rounds may run on worker threads. u64
             // addition commutes, so the total stays thread-invariant.
             let conflicts = std::sync::atomic::AtomicU64::new(0);
+            // Fault ledgers (msgpass backend only) absorbed across rounds
+            // — counters sum, the divergence gauge maxes, both commute.
+            let faults = std::sync::Mutex::new(crate::network::FaultCounters::default());
             let (avg, total_stats) =
                 run_rounds_stats(&spec.key(), self.rounds, base, threads, |round_rng| {
                     let mut seed_rng = round_rng;
@@ -358,6 +361,10 @@ impl Scenario {
                                 solver.conflicts(),
                                 std::sync::atomic::Ordering::Relaxed,
                             );
+                            faults
+                                .lock()
+                                .expect("fault ledger lock")
+                                .absorb(&solver.fault_counters());
                             (tr.errors, tr.total_stats)
                         }
                     }
@@ -372,6 +379,7 @@ impl Scenario {
                 decay_rate,
                 final_error,
                 conflicts: conflicts.load(std::sync::atomic::Ordering::Relaxed),
+                faults: faults.into_inner().expect("fault ledger lock"),
                 wall: t0.elapsed(),
             });
         }

@@ -26,12 +26,13 @@ use crate::algo::{
 };
 use crate::coordinator::msgpass::DEFAULT_GOSSIP_PERIOD;
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, Mode, MsgpassRuntime, Packer, RunReport, SamplerKind,
-    Sampling, ShardMap, ShardedRuntime,
+    Coordinator, CoordinatorConfig, Mode, MsgpassConfig, MsgpassRuntime, Packer, RunReport,
+    SamplerKind, Sampling, ShardMap, ShardedRuntime,
 };
 use crate::graph::Graph;
 use crate::linalg::select::DEFAULT_WEIGHT_FLOOR;
-use crate::network::LatencyModel;
+use crate::network::faults::{CrashWindow, FaultPlan};
+use crate::network::{FaultCounters, LatencyModel};
 use crate::util::rng::Rng;
 
 /// A serializable description of any solver variant in the repository.
@@ -89,11 +90,19 @@ pub enum SolverSpec {
     /// over the virtual-time network, communicating only by metered
     /// `ResidualUpdate` / `WeightSummary` messages. `gossip` is the
     /// activations-per-shard between weight-summary broadcasts.
+    /// `drop`/`crash` compose a seeded fault plan onto the wire
+    /// (`drop<p>` = per-frame loss probability, `crash<w>@<t>+<d>` =
+    /// one shard down-window), and `reliable` switches on the
+    /// sequence-number/ack/retransmit protocol (`:rel`; fire-and-forget
+    /// `:raw` is the default and is omitted from the key).
     Msgpass {
         shards: usize,
         batch: usize,
         map: ShardMap,
         gossip: usize,
+        drop: f64,
+        crash: Option<CrashWindow>,
+        reliable: bool,
     },
     /// The dense backend: Jacobi sweeps on a materialized hyperlink
     /// matrix ([`dense_engine::DenseJacobi`], the host twin of the PJRT
@@ -174,15 +183,25 @@ impl SolverSpec {
                     Sampling::Residual => format!("{base}:residual"),
                 }
             }
-            SolverSpec::Msgpass { shards, batch, map, gossip } => {
-                // The gossip segment is omitted when default, mirroring
-                // the sharded sampling-segment convention.
-                let base = format!("msgpass:{shards}:{batch}:{}", map.key());
-                if *gossip == DEFAULT_GOSSIP_PERIOD {
-                    base
-                } else {
-                    format!("{base}:{gossip}")
+            SolverSpec::Msgpass { shards, batch, map, gossip, drop, crash, reliable } => {
+                // Segments are omitted when default (gossip, drop=0,
+                // no crash, raw), mirroring the sharded
+                // sampling-segment convention — PR-6 era keys and the
+                // BENCH cell names built from them are unchanged.
+                let mut key = format!("msgpass:{shards}:{batch}:{}", map.key());
+                if *gossip != DEFAULT_GOSSIP_PERIOD {
+                    key.push_str(&format!(":{gossip}"));
                 }
+                if *drop > 0.0 {
+                    key.push_str(&format!(":drop{drop}"));
+                }
+                if let Some(c) = crash {
+                    key.push_str(&format!(":crash{}", c.key()));
+                }
+                if *reliable {
+                    key.push_str(":rel");
+                }
+                key
             }
             SolverSpec::Dense => "dense".to_string(),
         }
@@ -347,37 +366,87 @@ impl SolverSpec {
                 Ok(SolverSpec::Sharded { shards, batch, map, packer, sampling })
             }
             "msgpass" | "msg" => {
-                let grammar = "msgpass:<shards>[:<batch>[:<mod|block>[:<gossip-period>]]]";
-                let shards = match parts.get(1) {
+                let grammar = "msgpass:<shards>[:<batch>[:<mod|block>[:<gossip-period>]]]\
+                               [:drop<p>][:crash<shard>@<at>+<down-for>][:rel|raw]";
+                // Positional prefix runs until the first tagged fault/
+                // reliability segment; everything after must be tagged.
+                let is_tagged = |p: &str| {
+                    p.starts_with("drop")
+                        || p.starts_with("crash")
+                        || matches!(p, "rel" | "reliable" | "raw")
+                };
+                let mut pos: Vec<&str> = Vec::new();
+                let mut tail_start = parts.len();
+                for (i, p) in parts.iter().enumerate().skip(1) {
+                    if is_tagged(p) {
+                        tail_start = i;
+                        break;
+                    }
+                    pos.push(p);
+                }
+                if pos.len() > 4 {
+                    return Err(arity_err(grammar));
+                }
+                let shards = match pos.first() {
                     None => 4,
                     Some(v) => v.parse().map_err(|_| arity_err(grammar))?,
                 };
                 if shards == 0 {
                     return Err(arity_err("a shard count >= 1"));
                 }
-                let batch = match parts.get(2) {
+                let batch = match pos.get(1) {
                     None => 8,
                     Some(v) => v.parse().map_err(|_| arity_err(grammar))?,
                 };
                 if batch == 0 {
                     return Err(arity_err("a batch size >= 1"));
                 }
-                let map = match parts.get(3) {
+                let map = match pos.get(2) {
                     None => ShardMap::Modulo,
                     Some(m) => ShardMap::parse(m)
                         .ok_or_else(|| format!("bad shard map {m:?} (mod|block)"))?,
                 };
-                let gossip = match parts.get(4) {
+                let gossip = match pos.get(3) {
                     None => DEFAULT_GOSSIP_PERIOD,
                     Some(v) => v.parse().map_err(|_| arity_err(grammar))?,
                 };
                 if gossip == 0 {
                     return Err(arity_err("a gossip period >= 1"));
                 }
-                if parts.len() > 5 {
-                    return Err(arity_err(grammar));
+                let mut drop = 0.0;
+                let mut crash = None;
+                let mut reliable = false;
+                for p in &parts[tail_start..] {
+                    if let Some(body) = p.strip_prefix("drop") {
+                        let v: f64 = body.parse().map_err(|_| {
+                            format!("bad drop probability {body:?} ({grammar})")
+                        })?;
+                        if !(0.0..1.0).contains(&v) {
+                            return Err(format!(
+                                "drop probability must be in [0, 1), got {v}"
+                            ));
+                        }
+                        drop = v;
+                    } else if let Some(body) = p.strip_prefix("crash") {
+                        let c = CrashWindow::parse(body)
+                            .map_err(|e| format!("solver spec {s:?}: {e}"))?;
+                        if c.shard >= shards {
+                            return Err(format!(
+                                "crash window names shard {} but the spec has {shards} \
+                                 shard(s)",
+                                c.shard
+                            ));
+                        }
+                        crash = Some(c);
+                    } else if matches!(*p, "rel" | "reliable") {
+                        reliable = true;
+                    } else if *p == "raw" {
+                        reliable = false;
+                    } else {
+                        return Err(format!("bad msgpass segment {p:?} ({grammar})"));
+                    }
                 }
-                Ok(SolverSpec::Msgpass { shards, batch, map, gossip })
+                Ok(SolverSpec::Msgpass { shards, batch, map, gossip, drop, crash, reliable })
             }
             "google-power" | "google" => Ok(SolverSpec::GooglePower),
             "ishii-tempo" | "it" => Ok(SolverSpec::IshiiTempo),
@@ -463,6 +532,9 @@ impl SolverSpec {
                 batch: 4,
                 map: ShardMap::Modulo,
                 gossip: DEFAULT_GOSSIP_PERIOD,
+                drop: 0.0,
+                crash: None,
+                reliable: false,
             },
             SolverSpec::Dense,
         ]
@@ -520,15 +592,22 @@ impl SolverSpec {
             SolverSpec::Sharded { shards, batch, map, packer, sampling } => Box::new(
                 ShardedSolver::new(graph, alpha, *shards, *batch, *map, *packer, *sampling),
             ),
-            SolverSpec::Msgpass { shards, batch, map, gossip } => Box::new(MsgpassSolver::new(
-                graph,
-                alpha,
-                *shards,
-                *batch,
-                *map,
-                *gossip,
-                LatencyModel::Zero,
-            )),
+            SolverSpec::Msgpass { shards, batch, map, gossip, drop, crash, reliable } => {
+                let mut cfg =
+                    MsgpassConfig::new(*shards, *batch, *map, *gossip, LatencyModel::Zero);
+                let mut plan = FaultPlan::default();
+                if *drop > 0.0 {
+                    plan = plan.with_drop(*drop);
+                }
+                if let Some(c) = crash {
+                    plan = plan.with_crash(*c);
+                }
+                cfg = cfg.with_faults(plan);
+                if *reliable {
+                    cfg = cfg.reliable();
+                }
+                Box::new(MsgpassSolver::new(graph, alpha, cfg))
+            }
             SolverSpec::Dense => Box::new(dense_engine::DenseJacobi::new(graph, alpha)),
         }
     }
@@ -546,7 +625,8 @@ impl SolverSpec {
 ///
 /// The runtime owns a clone of the graph; the registry builds it with
 /// zero link latency (latency sweeps drive [`MsgpassRuntime`] directly,
-/// as `benches/throughput.rs` does).
+/// as `benches/throughput.rs` does), composing whatever fault plan and
+/// reliability mode the spec's `drop`/`crash`/`rel` segments describe.
 pub struct MsgpassSolver {
     rt: MsgpassRuntime,
     prev_reads: u64,
@@ -555,17 +635,9 @@ pub struct MsgpassSolver {
 }
 
 impl MsgpassSolver {
-    pub fn new(
-        graph: &Graph,
-        alpha: f64,
-        shards: usize,
-        batch: usize,
-        map: ShardMap,
-        gossip: usize,
-        latency: LatencyModel,
-    ) -> MsgpassSolver {
+    pub fn new(graph: &Graph, alpha: f64, cfg: MsgpassConfig) -> MsgpassSolver {
         MsgpassSolver {
-            rt: MsgpassRuntime::new(graph.clone(), alpha, shards, batch, map, gossip, latency),
+            rt: MsgpassRuntime::with_config(graph.clone(), alpha, cfg),
             prev_reads: 0,
             prev_writes: 0,
             prev_activations: 0,
@@ -606,6 +678,10 @@ impl PageRankSolver for MsgpassSolver {
         self.rt.error_sq_vs(x_star)
     }
 
+    fn fault_counters(&self) -> FaultCounters {
+        self.rt.fault_counters()
+    }
+
     fn name(&self) -> &'static str {
         "msgpass runtime (per-shard event loops)"
     }
@@ -634,7 +710,6 @@ pub struct ShardedSolver {
 }
 
 impl ShardedSolver {
-    #[allow(clippy::too_many_arguments)]
     pub fn new(
         graph: &Graph,
         alpha: f64,
@@ -989,11 +1064,22 @@ mod tests {
                 batch: 8,
                 map: ShardMap::Modulo,
                 gossip: DEFAULT_GOSSIP_PERIOD,
+                drop: 0.0,
+                crash: None,
+                reliable: false,
             }
         );
         assert_eq!(
             SolverSpec::parse("msg:2:4:block:16").expect("ok"),
-            SolverSpec::Msgpass { shards: 2, batch: 4, map: ShardMap::Block, gossip: 16 }
+            SolverSpec::Msgpass {
+                shards: 2,
+                batch: 4,
+                map: ShardMap::Block,
+                gossip: 16,
+                drop: 0.0,
+                crash: None,
+                reliable: false,
+            }
         );
         assert_eq!(
             SolverSpec::parse("msg:2:4:block:16").expect("ok").key(),
@@ -1014,6 +1100,41 @@ mod tests {
     }
 
     #[test]
+    fn msgpass_fault_segments_parse_and_round_trip() {
+        let full = SolverSpec::parse("msgpass:4:8:mod:drop0.05:crash1@64+32:rel").expect("ok");
+        assert_eq!(
+            full,
+            SolverSpec::Msgpass {
+                shards: 4,
+                batch: 8,
+                map: ShardMap::Modulo,
+                gossip: DEFAULT_GOSSIP_PERIOD,
+                drop: 0.05,
+                crash: Some(CrashWindow { shard: 1, at: 64.0, down_for: 32.0 }),
+                reliable: true,
+            }
+        );
+        assert_eq!(full.key(), "msgpass:4:8:mod:drop0.05:crash1@64+32:rel");
+        assert_eq!(SolverSpec::parse(&full.key()).expect("ok"), full);
+        // Tags compose with an explicit gossip segment.
+        let gossiped = SolverSpec::parse("msgpass:2:4:block:16:drop0.2").expect("ok");
+        assert_eq!(gossiped.key(), "msgpass:2:4:block:16:drop0.2");
+        assert_eq!(SolverSpec::parse(&gossiped.key()).expect("ok"), gossiped);
+        // Explicit raw is the default — same spec, same canonical key
+        // as no tag at all, so existing pins and BENCH cells are safe.
+        assert_eq!(
+            SolverSpec::parse("msgpass:2:4:mod:raw").expect("ok"),
+            SolverSpec::parse("msgpass:2:4:mod").expect("ok")
+        );
+        assert_eq!(SolverSpec::parse("msgpass:2:4:mod:raw").expect("ok").key(), "msgpass:2:4:mod");
+        // `reliable` is accepted as an alias but canonicalizes to `rel`.
+        assert_eq!(
+            SolverSpec::parse("msgpass:2:4:mod:reliable").expect("ok").key(),
+            "msgpass:2:4:mod:rel"
+        );
+    }
+
+    #[test]
     fn bad_msgpass_specs_rejected() {
         assert!(SolverSpec::parse("msgpass:0").is_err());
         assert!(SolverSpec::parse("msgpass:2:0").is_err());
@@ -1021,6 +1142,14 @@ mod tests {
         assert!(SolverSpec::parse("msgpass:2:4:mod:0").is_err());
         assert!(SolverSpec::parse("msgpass:2:4:mod:8:extra").is_err());
         assert!(SolverSpec::parse("msgpass:2:4:mod:eight").is_err());
+        // Fault segments: range, grammar and topology checks are loud.
+        assert!(SolverSpec::parse("msgpass:2:4:mod:drop1.5").is_err());
+        assert!(SolverSpec::parse("msgpass:2:4:mod:drop-0.1").is_err());
+        assert!(SolverSpec::parse("msgpass:2:4:mod:dropx").is_err());
+        assert!(SolverSpec::parse("msgpass:2:4:mod:crash1@64").is_err());
+        assert!(SolverSpec::parse("msgpass:2:4:mod:crash9@64+32").is_err(), "shard 9 of 2");
+        assert!(SolverSpec::parse("msgpass:2:4:mod:rel:extra").is_err());
+        assert!(SolverSpec::parse("msgpass:2:4:mod:drop0.1:8").is_err(), "gossip after a tag");
     }
 
     #[test]

@@ -54,8 +54,8 @@ pub struct Sweep {
 
 /// The grid axes [`Sweep`] understands.
 pub const SWEEP_AXES: &[&str] = &[
-    "alpha", "batch", "gossip", "graph", "latency", "n", "packer", "rounds", "sampling", "seed",
-    "shards", "steps", "stride",
+    "alpha", "batch", "crash", "drop", "gossip", "graph", "latency", "n", "packer", "rounds",
+    "sampling", "seed", "shards", "steps", "stride",
 ];
 
 fn render_param(v: &Json) -> String {
@@ -249,6 +249,67 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
                 return Err(
                     "axis \"gossip\" needs a msgpass solver in the scenario (e.g. \
                      \"msgpass:2:8\")"
+                        .into(),
+                );
+            }
+        }
+        "drop" => {
+            let p = value
+                .as_f64()
+                .ok_or_else(|| format!("axis \"drop\": {} is not a number", value.render()))?;
+            if !(0.0..1.0).contains(&p) {
+                return Err(format!("axis \"drop\": probability {p} out of [0, 1)"));
+            }
+            let mut hit = false;
+            for s in pagerank_solvers(scenario, axis)? {
+                if let SolverSpec::Msgpass { drop: d, .. } = s {
+                    *d = p;
+                    hit = true;
+                }
+            }
+            if !hit {
+                return Err(
+                    "axis \"drop\" needs a msgpass solver in the scenario (e.g. \
+                     \"msgpass:2:8:mod:rel\")"
+                        .into(),
+                );
+            }
+        }
+        "crash" => {
+            // A crash-window string ("1@64+32") or "none" to clear the
+            // window for this cell — so a sweep can race crashed
+            // against crash-free runs on one grid.
+            let spec = value
+                .as_str()
+                .ok_or_else(|| format!("axis \"crash\": {} is not a string", value.render()))?;
+            let window = if spec == "none" {
+                None
+            } else {
+                Some(
+                    crate::network::CrashWindow::parse(spec)
+                        .map_err(|e| format!("axis \"crash\": {e}"))?,
+                )
+            };
+            let mut hit = false;
+            for s in pagerank_solvers(scenario, axis)? {
+                if let SolverSpec::Msgpass { shards, crash: c, .. } = s {
+                    if let Some(w) = &window {
+                        if w.shard >= *shards {
+                            return Err(format!(
+                                "axis \"crash\": window names shard {} but the solver has \
+                                 {shards} shard(s)",
+                                w.shard
+                            ));
+                        }
+                    }
+                    *c = window;
+                    hit = true;
+                }
+            }
+            if !hit {
+                return Err(
+                    "axis \"crash\" needs a msgpass solver in the scenario (e.g. \
+                     \"msgpass:2:8:mod:rel\")"
                         .into(),
                 );
             }
@@ -673,6 +734,9 @@ mod tests {
             batch: 16,
             map: ShardMap::Modulo,
             gossip: 2,
+            drop: 0.0,
+            crash: None,
+            reliable: false,
         }));
         // gossip is a msgpass-only axis: loud error without one.
         let no_msgpass = r#"{
@@ -687,6 +751,61 @@ mod tests {
           "grid": {"gossip": [0]}
         }"#;
         assert!(Sweep::from_json_str(zero).expect("parses").cells().is_err());
+    }
+
+    #[test]
+    fn drop_and_crash_axes_rewrite_msgpass_fault_fields() {
+        use crate::network::CrashWindow;
+        let text = r#"{
+          "name": "fault-grid",
+          "scenario": {
+            "graph": "paper:12", "solvers": ["msgpass:4:8:mod:rel"],
+            "steps": 100, "stride": 50, "rounds": 1, "threads": 1, "seed": 3
+          },
+          "grid": {"crash": ["1@64+32", "none"], "drop": [0.05, 0.0]}
+        }"#;
+        let sweep = Sweep::from_json_str(text).expect("parses");
+        let cells = sweep.cells().expect("expands");
+        assert_eq!(cells.len(), 4);
+        let specs: Vec<SolverSpec> =
+            cells.iter().map(|(_, s)| s.solvers()[0].clone()).collect();
+        assert!(specs.contains(&SolverSpec::Msgpass {
+            shards: 4,
+            batch: 8,
+            map: ShardMap::Modulo,
+            gossip: crate::coordinator::msgpass::DEFAULT_GOSSIP_PERIOD,
+            drop: 0.05,
+            crash: Some(CrashWindow { shard: 1, at: 64.0, down_for: 32.0 }),
+            reliable: true,
+        }));
+        // "none" clears the window so one grid races crashed vs crash-free.
+        assert!(specs.iter().any(|s| matches!(
+            s,
+            SolverSpec::Msgpass { drop, crash: None, .. } if *drop == 0.0
+        )));
+        // Both axes are msgpass-only: loud error without one.
+        for grid in [r#"{"drop": [0.1]}"#, r#"{"crash": ["0@10+5"]}"#] {
+            let text = format!(
+                r#"{{"scenario": {{"graph": "paper:10", "solvers": ["mp"]}}, "grid": {grid}}}"#
+            );
+            let sweep = Sweep::from_json_str(&text).expect("parses");
+            assert!(sweep.cells().expect_err("must fail").contains("msgpass"));
+        }
+        // Out-of-range probability, malformed window, and a window naming
+        // a shard the solver does not have are all rejected up front.
+        for grid in [
+            r#"{"drop": [1.0]}"#,
+            r#"{"drop": [-0.1]}"#,
+            r#"{"crash": ["1@64"]}"#,
+            r#"{"crash": ["9@64+32"]}"#,
+        ] {
+            let text = format!(
+                r#"{{"scenario": {{"graph": "paper:10", "solvers": ["msgpass:2:4"]}},
+                     "grid": {grid}}}"#
+            );
+            let sweep = Sweep::from_json_str(&text).expect("parses");
+            assert!(sweep.cells().is_err(), "grid {grid} should be rejected");
+        }
     }
 
     #[test]

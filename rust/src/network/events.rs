@@ -19,6 +19,13 @@ impl<E> Timed<E> {
     fn key(&self) -> (f64, u64) {
         (self.time, self.seq)
     }
+
+    /// A surfaced event outside any queue — the transport re-wraps the
+    /// popped timestamp around the public payload. The tie-break
+    /// sequence is meaningless off-queue and zeroed.
+    pub(crate) fn at(time: f64, event: E) -> Timed<E> {
+        Timed { time, seq: 0, event }
+    }
 }
 
 impl<E: PartialEq> Eq for Timed<E> {}
@@ -106,6 +113,20 @@ impl<E: PartialEq> EventQueue<E> {
         self.heap.peek().map(|t| t.time)
     }
 
+    /// Earliest scheduled event without popping (and without advancing
+    /// virtual time).
+    pub fn peek_event(&self) -> Option<&E> {
+        self.heap.peek().map(|t| &t.event)
+    }
+
+    /// Drop the earliest event **without advancing virtual time** — for
+    /// cancelled timers (an acked message's pending retransmit check)
+    /// whose firing would otherwise inflate the clock. Returns whether
+    /// anything was discarded.
+    pub fn discard_head(&mut self) -> bool {
+        self.heap.pop().is_some()
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -167,6 +188,21 @@ mod tests {
     fn rejects_nan() {
         let mut q: EventQueue<u32> = EventQueue::new();
         q.schedule(f64::NAN, 1);
+    }
+
+    #[test]
+    fn discard_head_does_not_advance_time() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "keep");
+        q.pop();
+        q.schedule(7.0, "dead-timer");
+        q.schedule(9.0, "live");
+        assert_eq!(q.peek_event(), Some(&"dead-timer"));
+        assert!(q.discard_head());
+        assert_eq!(q.now(), 1.0, "discarding must not move the clock");
+        let live = q.pop().expect("live event");
+        assert_eq!((live.time, live.event), (9.0, "live"));
+        assert!(!q.discard_head(), "empty queue discards nothing");
     }
 
     #[test]

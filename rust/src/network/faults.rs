@@ -1,0 +1,347 @@
+//! Fault injection for the virtual-time network: a seeded [`FaultPlan`]
+//! composed with [`crate::network::Transport`].
+//!
+//! The plan describes what the simulated wire does to traffic —
+//! per-transmission **drop** probability, **duplication** probability,
+//! adversarial **reordering** (extra latency jitter drawn per frame) and
+//! scheduled **shard crash/restart windows** — plus the seed of the
+//! dedicated fault stream, so identical plans replay identical fault
+//! realizations whatever the run seed or reliability mode. The plan is
+//! pure data; the transport owns the stream and makes the per-frame
+//! decisions, and [`crate::coordinator::msgpass::MsgpassRuntime`]
+//! interprets the crash windows (queue discard, checkpoint restore,
+//! peer re-sync).
+//!
+//! [`Reliability`] selects what the transport layers on top of that
+//! wire: `raw` is the PR-6 fire-and-forget semantics (drops lose
+//! deltas, duplicates double-apply), `rel` adds sequence numbers,
+//! receiver-side dedup and ack/retransmit with exponential backoff —
+//! the same runtime raced honestly vs robustly under one plan.
+//!
+//! [`FaultCounters`] is the cross-layer ledger threaded into
+//! [`crate::engine::report::SolverReport`] and `BENCH_faults.json`.
+
+use std::fmt;
+
+/// Default seed of the dedicated fault stream: registry-built plans use
+/// it so a spec string alone pins the fault realization.
+pub const DEFAULT_FAULT_SEED: u64 = 0xFA01_5EED;
+
+/// Delivery semantics of a [`crate::network::Transport`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Reliability {
+    /// Fire-and-forget (the PR-6 wire): whatever the fault plan drops
+    /// or duplicates is applied as-is.
+    #[default]
+    Raw,
+    /// Sequence-numbered links with receiver dedup, acks and
+    /// exponential-backoff retransmission under a retry budget.
+    Reliable,
+}
+
+impl Reliability {
+    /// Registry segment (`raw` | `rel`).
+    pub fn key(self) -> &'static str {
+        match self {
+            Reliability::Raw => "raw",
+            Reliability::Reliable => "rel",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Reliability> {
+        match s {
+            "raw" => Some(Reliability::Raw),
+            "rel" | "reliable" => Some(Reliability::Reliable),
+            _ => None,
+        }
+    }
+}
+
+/// A scheduled crash/restart window for one shard: the shard is down on
+/// `[at, at + down_for)` in virtual time. While down it activates
+/// nothing and every frame delivered to it is lost with its queue; at
+/// `at` its replica memory of *unowned* pages is lost (the owned
+/// `(x_k, r_k)` pairs are the durable two-scalars-per-page checkpoint),
+/// and at restart the peers re-sync the lost entries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashWindow {
+    pub shard: usize,
+    /// Virtual time of the crash.
+    pub at: f64,
+    /// How long the shard stays down; it restarts at `at + down_for`.
+    pub down_for: f64,
+}
+
+impl CrashWindow {
+    pub fn restart_at(&self) -> f64 {
+        self.at + self.down_for
+    }
+
+    /// Parse the `<shard>@<at>+<down_for>` segment body (the part after
+    /// the `crash` tag), e.g. `1@64+32`.
+    pub fn parse(s: &str) -> Result<CrashWindow, String> {
+        let grammar = "crash<shard>@<at>+<down-for>, e.g. crash1@64+32";
+        let (shard, rest) = s
+            .split_once('@')
+            .ok_or_else(|| format!("bad crash spec {s:?} ({grammar})"))?;
+        let (at, down_for) = rest
+            .split_once('+')
+            .ok_or_else(|| format!("bad crash spec {s:?} ({grammar})"))?;
+        let shard: usize = shard
+            .parse()
+            .map_err(|_| format!("bad crash shard {shard:?} ({grammar})"))?;
+        let at: f64 = at
+            .parse()
+            .map_err(|_| format!("bad crash time {at:?} ({grammar})"))?;
+        let down_for: f64 = down_for
+            .parse()
+            .map_err(|_| format!("bad crash duration {down_for:?} ({grammar})"))?;
+        if !(at.is_finite() && at >= 0.0) {
+            return Err(format!("crash time must be finite and >= 0, got {at}"));
+        }
+        if !(down_for.is_finite() && down_for > 0.0) {
+            return Err(format!("crash duration must be finite and > 0, got {down_for}"));
+        }
+        Ok(CrashWindow { shard, at, down_for })
+    }
+
+    /// Canonical segment body (inverse of [`CrashWindow::parse`]).
+    pub fn key(&self) -> String {
+        format!("{}@{}+{}", self.shard, self.at, self.down_for)
+    }
+}
+
+impl fmt::Display for CrashWindow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "shard {} down on [{}, {})", self.shard, self.at, self.restart_at())
+    }
+}
+
+/// A seeded fault plan — pure data describing the injected wire faults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Per-transmission drop probability in `[0, 1)`.
+    pub drop: f64,
+    /// Per-transmission duplication probability in `[0, 1)` (the
+    /// duplicate is its own metered frame with its own latency draw).
+    pub duplicate: f64,
+    /// Adversarial reordering: extra latency drawn uniformly from
+    /// `[0, jitter]` per frame, on top of the latency model.
+    pub jitter: f64,
+    /// Scheduled crash/restart windows.
+    pub crashes: Vec<CrashWindow>,
+    /// Seed of the dedicated fault stream (drop/duplicate/jitter
+    /// decisions) — independent of the run seed, so `raw` and `rel` are
+    /// raced under the *identical* plan.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            drop: 0.0,
+            duplicate: 0.0,
+            jitter: 0.0,
+            crashes: Vec::new(),
+            seed: DEFAULT_FAULT_SEED,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Whether the plan injects anything at all. An empty plan composed
+    /// with a transport is normalized away, keeping the no-fault path
+    /// bit-identical to the PR-6 wire.
+    pub fn is_empty(&self) -> bool {
+        self.drop == 0.0
+            && self.duplicate == 0.0
+            && self.jitter == 0.0
+            && self.crashes.is_empty()
+    }
+
+    pub fn with_drop(mut self, p: f64) -> Self {
+        assert!((0.0..1.0).contains(&p), "drop probability out of [0,1): {p}");
+        self.drop = p;
+        self
+    }
+
+    pub fn with_duplicate(mut self, p: f64) -> Self {
+        assert!((0.0..1.0).contains(&p), "duplicate probability out of [0,1): {p}");
+        self.duplicate = p;
+        self
+    }
+
+    pub fn with_jitter(mut self, jitter: f64) -> Self {
+        assert!(jitter >= 0.0 && jitter.is_finite(), "jitter must be finite and >= 0");
+        self.jitter = jitter;
+        self
+    }
+
+    pub fn with_crash(mut self, crash: CrashWindow) -> Self {
+        self.crashes.push(crash);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Whether `shard` is inside one of its crash windows at `time`.
+    pub fn is_down(&self, shard: usize, time: f64) -> bool {
+        self.crashes
+            .iter()
+            .any(|c| c.shard == shard && time >= c.at && time < c.restart_at())
+    }
+}
+
+/// What a [`crate::network::Transport`] composes on the plain wire: an
+/// optional fault plan plus the delivery semantics. The default profile
+/// (no plan, raw) *is* the PR-6 wire.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct NetProfile {
+    pub faults: Option<FaultPlan>,
+    pub reliability: Reliability,
+}
+
+impl NetProfile {
+    /// A raw wire with `plan` injected.
+    pub fn faulty(plan: FaultPlan) -> Self {
+        NetProfile { faults: Some(plan), reliability: Reliability::Raw }
+    }
+
+    /// Switch to reliable delivery (builder-style).
+    pub fn reliable(mut self) -> Self {
+        self.reliability = Reliability::Reliable;
+        self
+    }
+}
+
+/// The fault-injection ledger: what the wire did to the traffic and
+/// what the recovery machinery had to repair. Transport-level fields
+/// (drops, dedup suppressions, retransmissions) and runtime-level
+/// fields (recoveries, divergence gauge) merge into one record per
+/// solver in [`crate::engine::report::SolverReport`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultCounters {
+    /// Frames lost: dropped on the wire by the plan, or delivered into
+    /// a crashed shard's discarded queue.
+    pub messages_dropped: u64,
+    /// Frames the reliable receiver discarded as already-seen sequence
+    /// numbers (wire duplicates and spurious retransmissions).
+    pub duplicates_suppressed: u64,
+    /// Retransmission attempts by the reliable sender.
+    pub retransmits: u64,
+    /// Shard restarts completed (checkpoint restore + peer re-sync).
+    pub recoveries: u64,
+    /// Max over crash instants of `(1/N)·Σ_j (r_view_j − (y − Bx)_j)²`
+    /// — how far the owner-authoritative residual had diverged from the
+    /// true residual when the crash hit (in-flight and lost mass).
+    pub residual_divergence_at_crash: f64,
+}
+
+impl FaultCounters {
+    /// Whether anything at all was recorded.
+    pub fn any(&self) -> bool {
+        *self != FaultCounters::default()
+    }
+
+    /// Merge another ledger: event counters add, the divergence gauge
+    /// takes the max — both commute, so cross-round accumulation is
+    /// thread-invariant.
+    pub fn absorb(&mut self, other: &FaultCounters) {
+        self.messages_dropped += other.messages_dropped;
+        self.duplicates_suppressed += other.duplicates_suppressed;
+        self.retransmits += other.retransmits;
+        self.recoveries += other.recoveries;
+        self.residual_divergence_at_crash =
+            self.residual_divergence_at_crash.max(other.residual_divergence_at_crash);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_window_parses_and_round_trips() {
+        let c = CrashWindow::parse("1@64+32").expect("parses");
+        assert_eq!(c, CrashWindow { shard: 1, at: 64.0, down_for: 32.0 });
+        assert_eq!(c.key(), "1@64+32");
+        assert_eq!(c.restart_at(), 96.0);
+        let c = CrashWindow::parse("0@12.5+0.5").expect("parses");
+        assert_eq!(c.key(), "0@12.5+0.5");
+        assert_eq!(CrashWindow::parse(&c.key()).expect("round-trips"), c);
+    }
+
+    #[test]
+    fn bad_crash_specs_are_loud() {
+        for bad in ["", "1", "1@64", "x@1+2", "1@x+2", "1@1+x", "1@-3+2", "1@3+0", "1@3+-1"] {
+            assert!(CrashWindow::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn down_windows_are_half_open() {
+        let plan = FaultPlan::default().with_crash(CrashWindow {
+            shard: 2,
+            at: 10.0,
+            down_for: 5.0,
+        });
+        assert!(!plan.is_down(2, 9.999));
+        assert!(plan.is_down(2, 10.0));
+        assert!(plan.is_down(2, 14.999));
+        assert!(!plan.is_down(2, 15.0), "restart instant is up");
+        assert!(!plan.is_down(1, 12.0), "other shards unaffected");
+    }
+
+    #[test]
+    fn empty_plan_detection() {
+        assert!(FaultPlan::default().is_empty());
+        assert!(!FaultPlan::default().with_drop(0.1).is_empty());
+        assert!(!FaultPlan::default().with_duplicate(0.1).is_empty());
+        assert!(!FaultPlan::default().with_jitter(1.0).is_empty());
+        assert!(
+            !FaultPlan::default()
+                .with_crash(CrashWindow { shard: 0, at: 1.0, down_for: 1.0 })
+                .is_empty()
+        );
+    }
+
+    #[test]
+    fn counters_absorb_sums_and_maxes() {
+        let mut a = FaultCounters {
+            messages_dropped: 3,
+            duplicates_suppressed: 1,
+            retransmits: 5,
+            recoveries: 1,
+            residual_divergence_at_crash: 0.25,
+        };
+        let b = FaultCounters {
+            messages_dropped: 2,
+            duplicates_suppressed: 0,
+            retransmits: 1,
+            recoveries: 0,
+            residual_divergence_at_crash: 0.5,
+        };
+        a.absorb(&b);
+        assert_eq!(a.messages_dropped, 5);
+        assert_eq!(a.duplicates_suppressed, 1);
+        assert_eq!(a.retransmits, 6);
+        assert_eq!(a.recoveries, 1);
+        assert_eq!(a.residual_divergence_at_crash, 0.5);
+        assert!(a.any());
+        assert!(!FaultCounters::default().any());
+    }
+
+    #[test]
+    fn reliability_keys_round_trip() {
+        assert_eq!(Reliability::parse("raw"), Some(Reliability::Raw));
+        assert_eq!(Reliability::parse("rel"), Some(Reliability::Reliable));
+        assert_eq!(Reliability::parse("reliable"), Some(Reliability::Reliable));
+        assert_eq!(Reliability::parse("bogus"), None);
+        assert_eq!(Reliability::Raw.key(), "raw");
+        assert_eq!(Reliability::Reliable.key(), "rel");
+        assert_eq!(Reliability::default(), Reliability::Raw);
+    }
+}

@@ -14,7 +14,10 @@
 //!   baseline's walk congestion);
 //! * [`transport`] — the metered shard-to-shard message layer: latency
 //!   draws, congestion tracking and bytes-on-the-wire accounting behind a
-//!   single `send`/`pop` interface.
+//!   single `send`/`pop` interface;
+//! * [`faults`] — seeded fault plans (drop / duplicate / reorder jitter /
+//!   crash windows) composed with the transport, the `raw`/`rel`
+//!   reliability modes, and the fault ledger threaded into reports.
 //!
 //! As of the msgpass backend ([`crate::coordinator::msgpass`]) this
 //! substrate is load-bearing, not decorative: every cross-shard residual
@@ -27,9 +30,11 @@
 
 pub mod congestion;
 pub mod events;
+pub mod faults;
 pub mod latency;
 pub mod transport;
 
 pub use events::{EventQueue, Timed};
+pub use faults::{CrashWindow, FaultCounters, FaultPlan, NetProfile, Reliability};
 pub use latency::LatencyModel;
 pub use transport::{Transport, TransportEvent, WireSized};

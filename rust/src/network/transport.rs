@@ -1,5 +1,5 @@
 //! Metered shard-to-shard message transport over the virtual-time
-//! [`EventQueue`].
+//! [`EventQueue`], with optional fault injection and reliable delivery.
 //!
 //! The msgpass backend ([`crate::coordinator::msgpass`]) communicates
 //! *only* through this layer: every cross-shard payload goes through
@@ -12,13 +12,39 @@
 //! for deterministic interleaving but are free — they model a shard's
 //! own event loop timer, not network traffic.
 //!
+//! A [`NetProfile`] composes two optional layers on the PR-6 wire:
+//!
+//! * a seeded [`FaultPlan`] — per-transmission drop and duplication
+//!   probabilities, reorder jitter, and crash windows (a frame delivered
+//!   inside a receiver's down window is lost with its queue). Fault
+//!   decisions draw from the plan's own stream, so a plan replays the
+//!   identical realization whatever the run seed or reliability mode.
+//! * [`Reliability::Reliable`] — per-(src,dst) sequence numbers, an ack
+//!   per received data frame, receiver-side dedup (a watermark plus the
+//!   out-of-order set), and retransmission with exponential backoff
+//!   ([`RETX_RTO`] doubling per attempt) under a [`RETX_BUDGET`]. Acks
+//!   and retransmissions are metered wire traffic and cross the same
+//!   faulty links. Protocol state (sequence counters, unacked buffers,
+//!   dedup watermarks) models stable storage: it survives the owner's
+//!   crash window, while a crashed shard's *queue* is discarded — the
+//!   split that lets retransmission replay exactly the deltas a crash
+//!   swallowed. Cancelled retransmit timers (their seq already acked)
+//!   are discarded without advancing virtual time, so the protocol's
+//!   timers never inflate the makespan of a healthy run.
+//!
+//! With the default profile (no plan, `raw`) every code path, byte
+//! charge and rng draw is identical to the PR-6 wire — the msgpass
+//! bit-identity pins hold unperturbed.
+//!
 //! Determinism: the queue breaks time ties FIFO and every latency draw
-//! comes from the caller-supplied [`Rng`], so a run is a pure function
-//! of (graph, seed, latency model) — the same contract the rest of the
+//! comes from the caller-supplied [`Rng`] (protocol frames use a stream
+//! derived from the plan seed), so a run is a pure function of (graph,
+//! seed, latency model, fault plan) — the same contract the rest of the
 //! simulated network keeps.
 
 use crate::network::congestion::CongestionTracker;
 use crate::network::events::{EventQueue, Timed};
+use crate::network::faults::{FaultCounters, FaultPlan, NetProfile, Reliability};
 use crate::network::latency::LatencyModel;
 use crate::util::rng::Rng;
 
@@ -30,6 +56,23 @@ pub trait WireSized {
     fn wire_bytes(&self) -> usize;
 }
 
+/// Wire bytes of a reliable-mode ack frame: 4-byte type tag + 8-byte
+/// sequence number.
+pub const ACK_BYTES: usize = 12;
+
+/// Extra header a reliable-mode data frame carries on the wire: its
+/// 8-byte sequence number.
+pub const SEQ_BYTES: usize = 8;
+
+/// Initial retransmit timeout in virtual time; doubles per attempt
+/// (exponential backoff).
+pub const RETX_RTO: f64 = 4.0;
+
+/// Retransmission attempts per message before the sender gives up —
+/// with the doubling backoff this spans `RETX_RTO · 2^12` ≈ 16k virtual
+/// time units, comfortably outlasting any scheduled crash window.
+pub const RETX_BUDGET: u32 = 12;
+
 /// What the transport's event loop yields.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TransportEvent<M> {
@@ -39,71 +82,389 @@ pub enum TransportEvent<M> {
     Wake { shard: usize },
 }
 
+/// Internal queue payload: the public events plus the reliability
+/// protocol's frames and timers. Data frames carry their sequence
+/// number (`None` in raw mode); `Retx` is the sender's local
+/// retransmit-check timer, not wire traffic.
+#[derive(Debug, Clone, PartialEq)]
+enum Wire<M> {
+    Deliver { src: usize, dst: usize, msg: M, seq: Option<u64> },
+    Ack { src: usize, dst: usize, seq: u64 },
+    Retx { src: usize, dst: usize, seq: u64, attempt: u32 },
+    Wake { shard: usize },
+}
+
+/// Fault-plan runtime state: the plan, its dedicated decision stream
+/// and the drop ledger.
+#[derive(Debug)]
+struct FaultState {
+    plan: FaultPlan,
+    rng: Rng,
+    dropped: u64,
+}
+
+/// One (src,dst) link's protocol state — sender side (`next_seq`,
+/// `unacked`) and receiver side (`contiguous` watermark + sorted
+/// `ahead` set) share the record since both ends live in one process
+/// here. Models stable storage: crash windows do not reset it.
+#[derive(Debug, Clone, Default)]
+struct LinkState<M> {
+    next_seq: u64,
+    /// In-flight (seq, payload) awaiting ack — retransmit candidates.
+    unacked: Vec<(u64, M)>,
+    /// Receiver: every seq below this has been applied.
+    contiguous: u64,
+    /// Receiver: applied seqs at/above the watermark, sorted.
+    ahead: Vec<u64>,
+}
+
+/// Reliable-delivery state across all links.
+#[derive(Debug)]
+struct ReliableState<M> {
+    /// Indexed `src * shards + dst`.
+    links: Vec<LinkState<M>>,
+    /// Latency draws for protocol frames (acks, retransmissions) — a
+    /// stream derived from the plan seed, so enabling reliability never
+    /// perturbs the caller's latency stream.
+    rng: Rng,
+    retransmits: u64,
+    duplicates_suppressed: u64,
+    /// Messages abandoned after the retry budget.
+    abandoned: u64,
+}
+
 /// The metered transport: event queue + latency model + congestion and
 /// byte accounting, indexed by *shard* (the unit of distribution in the
 /// msgpass backend — per-page accounting lives in the coordinator's
 /// agent runtime).
 #[derive(Debug)]
-pub struct Transport<M: PartialEq + WireSized> {
-    queue: EventQueue<TransportEvent<M>>,
+pub struct Transport<M: Clone + PartialEq + WireSized> {
+    queue: EventQueue<Wire<M>>,
     latency: LatencyModel,
     congestion: CongestionTracker,
     bytes: u64,
+    shards: usize,
+    faults: Option<FaultState>,
+    reliable: Option<ReliableState<M>>,
 }
 
-impl<M: PartialEq + WireSized> Transport<M> {
+impl<M: Clone + PartialEq + WireSized> Transport<M> {
+    /// The PR-6 wire: no fault plan, fire-and-forget delivery.
     pub fn new(shards: usize, latency: LatencyModel) -> Transport<M> {
+        Transport::with_profile(shards, latency, NetProfile::default())
+    }
+
+    /// A wire with an optional fault plan and a reliability mode. An
+    /// empty plan is normalized away, so composing `FaultPlan::default()`
+    /// in raw mode *is* [`Transport::new`] — same paths, same draws.
+    pub fn with_profile(
+        shards: usize,
+        latency: LatencyModel,
+        profile: NetProfile,
+    ) -> Transport<M> {
         assert!(shards >= 1, "a transport needs at least one shard");
+        let seed = profile
+            .faults
+            .as_ref()
+            .map_or(crate::network::faults::DEFAULT_FAULT_SEED, |p| p.seed);
+        let faults = profile.faults.filter(|p| !p.is_empty()).map(|plan| FaultState {
+            rng: Rng::seeded(plan.seed),
+            plan,
+            dropped: 0,
+        });
+        let reliable = match profile.reliability {
+            Reliability::Raw => None,
+            Reliability::Reliable => Some(ReliableState {
+                links: vec![LinkState::default(); shards * shards],
+                rng: Rng::seeded(seed ^ 0x70_726F_746F), // "proto"
+                retransmits: 0,
+                duplicates_suppressed: 0,
+                abandoned: 0,
+            }),
+        };
         Transport {
             queue: EventQueue::new(),
             latency,
             congestion: CongestionTracker::new(shards),
             bytes: 0,
+            shards,
+            faults,
+            reliable,
         }
     }
 
     /// Number of shards the congestion tracker is indexed by.
     pub fn shards(&self) -> usize {
-        self.congestion.peaks().len()
+        self.shards
     }
 
     pub fn latency(&self) -> LatencyModel {
         self.latency
     }
 
+    /// The composed fault plan, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref().map(|f| &f.plan)
+    }
+
+    /// Whether delivery is sequence-numbered/acked/retransmitted.
+    pub fn is_reliable(&self) -> bool {
+        self.reliable.is_some()
+    }
+
+    /// Whether `shard` sits inside a scheduled crash window at `time`.
+    pub fn is_down(&self, shard: usize, time: f64) -> bool {
+        self.faults.as_ref().is_some_and(|f| f.plan.is_down(shard, time))
+    }
+
     /// Send `msg` from shard `src` to shard `dst`: draws one latency
     /// sample (zero/constant models consume no rng), meters the message
-    /// and schedules its delivery.
+    /// and schedules its delivery. In reliable mode the frame carries a
+    /// sequence number, is buffered for retransmission and gets a
+    /// retransmit-check timer [`RETX_RTO`] ahead.
     pub fn send(&mut self, src: usize, dst: usize, msg: M, rng: &mut Rng) {
         debug_assert!(src != dst, "a shard does not message itself");
-        self.bytes += msg.wire_bytes() as u64;
+        let seq = match &mut self.reliable {
+            Some(rel) => {
+                let link = &mut rel.links[src * self.shards + dst];
+                let s = link.next_seq;
+                link.next_seq += 1;
+                link.unacked.push((s, msg.clone()));
+                Some(s)
+            }
+            None => None,
+        };
+        self.transmit(src, dst, msg, seq, rng);
+        if let Some(s) = seq {
+            self.queue
+                .schedule_in(rto_after(1), Wire::Retx { src, dst, seq: s, attempt: 1 });
+        }
+    }
+
+    /// One physical transmission attempt: charge bytes, meter
+    /// congestion, apply the fault plan (drop / duplicate / jitter) and
+    /// schedule whatever survives.
+    fn transmit(&mut self, src: usize, dst: usize, msg: M, seq: Option<u64>, rng: &mut Rng) {
+        let head = if seq.is_some() { SEQ_BYTES } else { 0 };
+        self.bytes += (msg.wire_bytes() + head) as u64;
         self.congestion.on_send(dst);
-        let delay = self.latency.sample(rng);
-        self.queue.schedule_in(delay, TransportEvent::Deliver { src, dst, msg });
+        let Some(f) = &mut self.faults else {
+            let delay = self.latency.sample(rng);
+            self.queue.schedule_in(delay, Wire::Deliver { src, dst, msg, seq });
+            return;
+        };
+        if f.plan.drop > 0.0 && f.rng.bernoulli(f.plan.drop) {
+            f.dropped += 1;
+            // Lost on the wire: balance the congestion ledger now — the
+            // frame never occupies the receiver's queue.
+            self.congestion.on_deliver(dst);
+            return;
+        }
+        let dup = f.plan.duplicate > 0.0 && f.rng.bernoulli(f.plan.duplicate);
+        let jit = if f.plan.jitter > 0.0 { f.rng.uniform() * f.plan.jitter } else { 0.0 };
+        let jit2 = if dup && f.plan.jitter > 0.0 { f.rng.uniform() * f.plan.jitter } else { 0.0 };
+        let delay = self.latency.sample(rng) + jit;
+        if dup {
+            self.queue
+                .schedule_in(delay, Wire::Deliver { src, dst, msg: msg.clone(), seq });
+            // The duplicate is its own metered frame with its own delay.
+            self.bytes += (msg.wire_bytes() + head) as u64;
+            self.congestion.on_send(dst);
+            let delay2 = self.latency.sample(rng) + jit2;
+            self.queue.schedule_in(delay2, Wire::Deliver { src, dst, msg, seq });
+        } else {
+            self.queue.schedule_in(delay, Wire::Deliver { src, dst, msg, seq });
+        }
+    }
+
+    /// Ack `seq` of the (data_src → data_dst) link, travelling back
+    /// dst → src. Metered, and subject to the plan's drop/jitter like
+    /// any frame (a lost ack provokes a retransmission, which the
+    /// receiver dedups).
+    fn send_ack(&mut self, data_src: usize, data_dst: usize, seq: u64) {
+        self.bytes += ACK_BYTES as u64;
+        self.congestion.on_send(data_src);
+        let mut extra = 0.0;
+        if let Some(f) = &mut self.faults {
+            if f.plan.drop > 0.0 && f.rng.bernoulli(f.plan.drop) {
+                f.dropped += 1;
+                self.congestion.on_deliver(data_src);
+                return;
+            }
+            if f.plan.jitter > 0.0 {
+                extra = f.rng.uniform() * f.plan.jitter;
+            }
+        }
+        let delay = {
+            let rel = self.reliable.as_mut().expect("acks exist only in reliable mode");
+            self.latency.sample(&mut rel.rng) + extra
+        };
+        self.queue
+            .schedule_in(delay, Wire::Ack { src: data_src, dst: data_dst, seq });
+    }
+
+    /// Whether a retransmit timer still guards an unacked message.
+    fn retx_live(&self, src: usize, dst: usize, seq: u64) -> bool {
+        match &self.reliable {
+            Some(rel) => rel.links[src * self.shards + dst]
+                .unacked
+                .iter()
+                .any(|(s, _)| *s == seq),
+            None => false,
+        }
+    }
+
+    /// Discard retransmit timers whose message was acked meanwhile —
+    /// without advancing virtual time, so cancelled timers never
+    /// inflate the makespan.
+    fn discard_dead_timers(&mut self) {
+        while let Some(Wire::Retx { src, dst, seq, .. }) = self.queue.peek_event() {
+            let (src, dst, seq) = (*src, *dst, *seq);
+            if self.retx_live(src, dst, seq) {
+                break;
+            }
+            self.queue.discard_head();
+        }
+    }
+
+    /// Receiver-side dedup: record `seq` on the (src,dst) link; `true`
+    /// if it was fresh (apply it), `false` if already seen (suppress).
+    fn mark_seen(&mut self, src: usize, dst: usize, seq: u64) -> bool {
+        let shards = self.shards;
+        let rel = self.reliable.as_mut().expect("dedup exists only in reliable mode");
+        let link = &mut rel.links[src * shards + dst];
+        if seq < link.contiguous {
+            return false;
+        }
+        match link.ahead.binary_search(&seq) {
+            Ok(_) => false,
+            Err(i) => {
+                link.ahead.insert(i, seq);
+                while link.ahead.first() == Some(&link.contiguous) {
+                    link.ahead.remove(0);
+                    link.contiguous += 1;
+                }
+                true
+            }
+        }
     }
 
     /// Schedule an unmetered local wake-up for `shard` at absolute
     /// virtual time `at`.
     pub fn wake_at(&mut self, shard: usize, at: f64) {
-        self.queue.schedule(at, TransportEvent::Wake { shard });
+        self.queue.schedule(at, Wire::Wake { shard });
     }
 
     /// Schedule an unmetered local wake-up for `shard` after `delay`.
     pub fn wake_in(&mut self, shard: usize, delay: f64) {
-        self.queue.schedule_in(delay, TransportEvent::Wake { shard });
+        self.queue.schedule_in(delay, Wire::Wake { shard });
     }
 
-    /// Pop the earliest event, advancing virtual time; deliveries are
-    /// drained from the congestion tracker here, so peak depths reflect
-    /// genuine in-flight overlap under the latency model.
+    /// Pop the earliest surfaced event, advancing virtual time;
+    /// deliveries are drained from the congestion tracker here, so peak
+    /// depths reflect genuine in-flight overlap under the latency model.
+    /// Protocol frames (acks, retransmit timers) and suppressed frames
+    /// (duplicates, deliveries into a crashed shard's discarded queue)
+    /// are consumed internally — the caller only ever sees `Deliver`
+    /// and `Wake`.
     pub fn pop(&mut self) -> Option<Timed<TransportEvent<M>>> {
-        let ev = self.queue.pop();
-        if let Some(t) = &ev {
-            if let TransportEvent::Deliver { dst, .. } = &t.event {
-                self.congestion.on_deliver(*dst);
+        loop {
+            self.discard_dead_timers();
+            let ev = self.queue.pop()?;
+            let time = ev.time;
+            match ev.event {
+                Wire::Wake { shard } => {
+                    return Some(Timed::at(time, TransportEvent::Wake { shard }));
+                }
+                Wire::Deliver { src, dst, msg, seq } => {
+                    self.congestion.on_deliver(dst);
+                    if self.is_down(dst, time) {
+                        // The crashed shard's queue is discarded — the
+                        // frame is lost (reliable senders retransmit it
+                        // past the window).
+                        if let Some(f) = &mut self.faults {
+                            f.dropped += 1;
+                        }
+                        continue;
+                    }
+                    if let Some(s) = seq {
+                        // Re-ack every arrival (covers a lost first
+                        // ack), then apply at most once.
+                        self.send_ack(src, dst, s);
+                        if !self.mark_seen(src, dst, s) {
+                            let rel =
+                                self.reliable.as_mut().expect("seq frames are reliable-mode");
+                            rel.duplicates_suppressed += 1;
+                            continue;
+                        }
+                    }
+                    return Some(Timed::at(time, TransportEvent::Deliver { src, dst, msg }));
+                }
+                Wire::Ack { src, dst, seq } => {
+                    self.congestion.on_deliver(src);
+                    if self.is_down(src, time) {
+                        // Acks into a down window are lost like any
+                        // frame; the paused sender re-acks on resume.
+                        if let Some(f) = &mut self.faults {
+                            f.dropped += 1;
+                        }
+                        continue;
+                    }
+                    let shards = self.shards;
+                    if let Some(rel) = &mut self.reliable {
+                        let link = &mut rel.links[src * shards + dst];
+                        if let Some(i) = link.unacked.iter().position(|(s, _)| *s == seq) {
+                            link.unacked.remove(i);
+                        }
+                    }
+                    continue;
+                }
+                Wire::Retx { src, dst, seq, attempt } => {
+                    if !self.retx_live(src, dst, seq) {
+                        continue;
+                    }
+                    if self.is_down(src, time) {
+                        // A crashed sender's retransmit daemon is
+                        // paused: re-check one timeout later without
+                        // consuming budget, resuming after restart.
+                        self.queue
+                            .schedule_in(rto_after(attempt), Wire::Retx { src, dst, seq, attempt });
+                        continue;
+                    }
+                    if attempt > RETX_BUDGET {
+                        let shards = self.shards;
+                        let rel = self.reliable.as_mut().expect("retx is reliable-mode");
+                        let link = &mut rel.links[src * shards + dst];
+                        if let Some(i) = link.unacked.iter().position(|(s, _)| *s == seq) {
+                            link.unacked.remove(i);
+                        }
+                        rel.abandoned += 1;
+                        continue;
+                    }
+                    let (msg, mut proto_rng) = {
+                        let shards = self.shards;
+                        let rel = self.reliable.as_mut().expect("retx is reliable-mode");
+                        rel.retransmits += 1;
+                        let link = &rel.links[src * shards + dst];
+                        let msg = link
+                            .unacked
+                            .iter()
+                            .find(|(s, _)| *s == seq)
+                            .expect("live retx has a payload")
+                            .1
+                            .clone();
+                        (msg, std::mem::replace(&mut rel.rng, Rng::seeded(0)))
+                    };
+                    self.transmit(src, dst, msg, Some(seq), &mut proto_rng);
+                    self.reliable.as_mut().expect("retx is reliable-mode").rng = proto_rng;
+                    self.queue.schedule_in(
+                        rto_after(attempt + 1),
+                        Wire::Retx { src, dst, seq, attempt: attempt + 1 },
+                    );
+                    continue;
+                }
             }
         }
-        ev
     }
 
     /// Current virtual time (time of the last popped event).
@@ -111,14 +472,38 @@ impl<M: PartialEq + WireSized> Transport<M> {
         self.queue.now()
     }
 
-    /// Total metered messages sent so far.
+    /// Total metered frames sent so far (data, duplicates and acks).
     pub fn messages_sent(&self) -> u64 {
         self.congestion.total_messages()
     }
 
-    /// Total bytes charged to the wire so far (fixed per-type encoding).
+    /// Total bytes charged to the wire so far (fixed per-type encoding,
+    /// plus seq/ack overhead in reliable mode).
     pub fn bytes_on_wire(&self) -> u64 {
         self.bytes
+    }
+
+    /// The transport's slice of the fault ledger: drops, dedup
+    /// suppressions and retransmissions (the runtime adds recoveries
+    /// and the crash-divergence gauge).
+    pub fn fault_counters(&self) -> FaultCounters {
+        FaultCounters {
+            messages_dropped: self.faults.as_ref().map_or(0, |f| f.dropped),
+            duplicates_suppressed: self
+                .reliable
+                .as_ref()
+                .map_or(0, |r| r.duplicates_suppressed),
+            retransmits: self.reliable.as_ref().map_or(0, |r| r.retransmits),
+            recoveries: 0,
+            residual_divergence_at_crash: 0.0,
+        }
+    }
+
+    /// Messages the reliable sender abandoned after the retry budget —
+    /// nonzero means even `rel` mode lost data (the conservation tests
+    /// gate on this).
+    pub fn abandoned(&self) -> u64 {
+        self.reliable.as_ref().map_or(0, |r| r.abandoned)
     }
 
     /// Peak number of messages simultaneously queued for any single
@@ -146,9 +531,16 @@ impl<M: PartialEq + WireSized> Transport<M> {
     }
 }
 
+/// Backoff schedule: the check for attempt `a` fires `RETX_RTO · 2^(a-1)`
+/// after the previous transmission.
+fn rto_after(attempt: u32) -> f64 {
+    RETX_RTO * f64::powi(2.0, (attempt.saturating_sub(1)).min(20) as i32)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::network::faults::CrashWindow;
 
     #[derive(Debug, Clone, PartialEq)]
     struct Ping(u32);
@@ -157,6 +549,16 @@ mod tests {
         fn wire_bytes(&self) -> usize {
             12
         }
+    }
+
+    fn drain(t: &mut Transport<Ping>) -> Vec<(f64, usize, usize, Ping)> {
+        let mut out = Vec::new();
+        while let Some(ev) = t.pop() {
+            if let TransportEvent::Deliver { src, dst, msg } = ev.event {
+                out.push((ev.time, src, dst, msg));
+            }
+        }
+        out
     }
 
     #[test]
@@ -252,5 +654,162 @@ mod tests {
         };
         assert_eq!(times(7), times(7));
         assert_ne!(times(7), times(8));
+    }
+
+    #[test]
+    fn empty_plan_raw_profile_is_the_plain_wire() {
+        // Composing an all-zero plan in raw mode must be normalized away:
+        // identical deliveries, bytes and rng consumption as Transport::new.
+        let run = |profile: NetProfile| {
+            let mut t: Transport<Ping> =
+                Transport::with_profile(3, LatencyModel::Exponential { mean: 0.7 }, profile);
+            let mut rng = Rng::seeded(11);
+            for i in 0..10 {
+                t.send(i as usize % 2, 2, Ping(i), &mut rng);
+            }
+            let seen = drain(&mut t);
+            (seen, t.bytes_on_wire(), rng.next_u64())
+        };
+        let plain = run(NetProfile::default());
+        let composed = run(NetProfile { faults: Some(FaultPlan::default()), ..Default::default() });
+        assert_eq!(plain, composed);
+    }
+
+    #[test]
+    fn drops_are_counted_and_balance_the_congestion_ledger() {
+        let plan = FaultPlan::default().with_drop(0.5).with_seed(77);
+        let mut t: Transport<Ping> =
+            Transport::with_profile(2, LatencyModel::Zero, NetProfile::faulty(plan));
+        let mut rng = Rng::seeded(5);
+        for i in 0..200 {
+            t.send(0, 1, Ping(i), &mut rng);
+        }
+        let seen = drain(&mut t);
+        let dropped = t.fault_counters().messages_dropped;
+        assert!(dropped > 50 && dropped < 150, "~half drop, got {dropped}");
+        assert_eq!(seen.len() as u64 + dropped, 200, "every frame lands or is counted lost");
+        // All 200 sends were metered even though some never arrived.
+        assert_eq!(t.messages_sent(), 200);
+        assert_eq!(t.bytes_on_wire(), 200 * 12);
+    }
+
+    #[test]
+    fn raw_duplication_double_delivers_and_reliable_suppresses_it() {
+        let plan = || FaultPlan::default().with_duplicate(0.4).with_seed(9);
+        let mut raw: Transport<Ping> =
+            Transport::with_profile(2, LatencyModel::Zero, NetProfile::faulty(plan()));
+        let mut rng = Rng::seeded(6);
+        for i in 0..100 {
+            raw.send(0, 1, Ping(i), &mut rng);
+        }
+        let raw_seen = drain(&mut raw);
+        assert!(raw_seen.len() > 100, "raw mode must double-apply duplicates");
+
+        let mut rel: Transport<Ping> = Transport::with_profile(
+            2,
+            LatencyModel::Zero,
+            NetProfile::faulty(plan()).reliable(),
+        );
+        let mut rng = Rng::seeded(6);
+        for i in 0..100 {
+            rel.send(0, 1, Ping(i), &mut rng);
+        }
+        let rel_seen = drain(&mut rel);
+        assert_eq!(rel_seen.len(), 100, "dedup applies each seq exactly once");
+        let c = rel.fault_counters();
+        assert_eq!(c.duplicates_suppressed, raw_seen.len() as u64 - 100);
+        assert_eq!(rel.abandoned(), 0);
+    }
+
+    #[test]
+    fn reliable_mode_retransmits_through_drops_to_exactly_once() {
+        let plan = FaultPlan::default().with_drop(0.3).with_seed(123);
+        let mut t: Transport<Ping> = Transport::with_profile(
+            3,
+            LatencyModel::Exponential { mean: 0.4 },
+            NetProfile::faulty(plan).reliable(),
+        );
+        let mut rng = Rng::seeded(8);
+        for i in 0..120 {
+            t.send(i as usize % 3, (i as usize + 1) % 3, Ping(i), &mut rng);
+        }
+        let seen = drain(&mut t);
+        let c = t.fault_counters();
+        assert!(c.messages_dropped > 0, "the plan must actually drop");
+        assert!(c.retransmits > 0, "drops must provoke retransmissions");
+        assert_eq!(t.abandoned(), 0, "budget must cover a 30% drop rate");
+        // Exactly-once: every payload delivered, none twice.
+        assert_eq!(seen.len(), 120);
+        let mut ids: Vec<u32> = seen.iter().map(|(_, _, _, p)| p.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 120);
+    }
+
+    #[test]
+    fn reliable_overhead_is_metered_and_timers_do_not_inflate_time() {
+        // Zero latency, no faults: one data frame (+seq header) and one
+        // ack; the retransmit timer dies unfired, so virtual time stays
+        // at the delivery instant instead of jumping to the RTO.
+        let mut t: Transport<Ping> = Transport::with_profile(
+            2,
+            LatencyModel::Zero,
+            NetProfile::default().reliable(),
+        );
+        let mut rng = Rng::seeded(10);
+        t.send(0, 1, Ping(1), &mut rng);
+        let seen = drain(&mut t);
+        assert_eq!(seen.len(), 1);
+        assert_eq!(t.messages_sent(), 2, "data + ack");
+        assert_eq!(t.bytes_on_wire(), (12 + SEQ_BYTES + ACK_BYTES) as u64);
+        assert_eq!(t.now(), 0.0, "a cancelled retransmit timer must not advance time");
+        assert_eq!(t.fault_counters().retransmits, 0);
+    }
+
+    #[test]
+    fn frames_into_a_crash_window_are_lost_and_retransmitted_after_restart() {
+        let plan = FaultPlan::default().with_crash(CrashWindow {
+            shard: 1,
+            at: 0.0,
+            down_for: 10.0,
+        });
+        let mut t: Transport<Ping> = Transport::with_profile(
+            2,
+            LatencyModel::Constant(0.5),
+            NetProfile::faulty(plan.clone()).reliable(),
+        );
+        let mut rng = Rng::seeded(12);
+        t.send(0, 1, Ping(42), &mut rng);
+        let seen = drain(&mut t);
+        assert_eq!(seen.len(), 1, "the retransmission lands after restart");
+        assert!(seen[0].0 >= 10.0, "delivery only after the window, got t={}", seen[0].0);
+        let c = t.fault_counters();
+        assert!(c.messages_dropped >= 1, "the in-window frame is lost with the queue");
+        assert!(c.retransmits >= 1);
+        assert_eq!(t.abandoned(), 0);
+
+        // Raw mode under the same plan loses the frame for good.
+        let mut raw: Transport<Ping> =
+            Transport::with_profile(2, LatencyModel::Constant(0.5), NetProfile::faulty(plan));
+        let mut rng = Rng::seeded(12);
+        raw.send(0, 1, Ping(42), &mut rng);
+        assert!(drain(&mut raw).is_empty(), "raw mode: lost is lost");
+        assert_eq!(raw.fault_counters().messages_dropped, 1);
+    }
+
+    #[test]
+    fn fault_realization_is_a_function_of_the_plan_seed() {
+        let run = |plan_seed: u64| {
+            let plan = FaultPlan::default().with_drop(0.4).with_seed(plan_seed);
+            let mut t: Transport<Ping> =
+                Transport::with_profile(2, LatencyModel::Zero, NetProfile::faulty(plan));
+            let mut rng = Rng::seeded(999);
+            for i in 0..50 {
+                t.send(0, 1, Ping(i), &mut rng);
+            }
+            drain(&mut t).iter().map(|(_, _, _, p)| p.0).collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(1), "same plan, same realization");
+        assert_ne!(run(1), run(2), "the seed picks the realization");
     }
 }

@@ -602,6 +602,63 @@ fn shipped_sweep_and_smoke_files_parse() {
     let sweep = Sweep::from_json_str(&sweep_text).expect("sweep example parses");
     assert!(sweep.cell_count() >= 4, "the shipped sweep must be a real >=2x2 grid");
     sweep.cells().expect("every cell must be expandable");
+
+    // The fault-smoke sweep CI runs: drop/crash axes over raw and
+    // reliable msgpass on the chain and the paper family.
+    let faults_text = std::fs::read_to_string(root.join("examples/faults_sweep.json"))
+        .expect("faults sweep readable");
+    let faults = Sweep::from_json_str(&faults_text).expect("faults sweep parses");
+    assert!(faults.cell_count() >= 4, "graph × crash must be a real grid");
+    let cells = faults.cells().expect("every fault cell must be expandable");
+    assert!(
+        cells.iter().any(|(_, s)| s
+            .solvers()
+            .iter()
+            .any(|sp| matches!(sp, SolverSpec::Msgpass { drop, crash: Some(_), reliable: true, .. } if *drop > 0.0))),
+        "the fault sweep must exercise drop+crash in reliable mode"
+    );
+    assert!(
+        cells.iter().any(|(_, s)| s
+            .solvers()
+            .iter()
+            .any(|sp| matches!(sp, SolverSpec::Msgpass { reliable: false, drop, .. } if *drop > 0.0))),
+        "the fault sweep must race the raw wire under the same plan"
+    );
+}
+
+#[test]
+fn faulted_msgpass_scenarios_thread_the_fault_ledger_into_reports() {
+    // End-to-end through the engine: a drop+crash plan parsed from the
+    // registry string, run by a Scenario, lands its fault ledger on the
+    // SolverReport — while the fault-free msgpass run in the same race
+    // stays ledger-clean and the reliable run still converges.
+    let scenario = Scenario::paper("fault-ledger", 25)
+        .with_solvers(vec![
+            SolverSpec::parse("msgpass:2:4:mod").expect("plain"),
+            SolverSpec::parse("msgpass:2:4:mod:drop0.1:crash0@30+15:rel").expect("faulted"),
+        ])
+        .with_steps(600)
+        .with_stride(100)
+        .with_rounds(2)
+        .with_threads(1)
+        .with_seed(19);
+    let report = scenario.run().expect("fault scenario runs");
+    let plain = report.get("msgpass:2:4:mod").expect("plain report");
+    assert!(!plain.faults.any(), "ideal-network runs must stay ledger-clean");
+    let faulted = report
+        .get("msgpass:2:4:mod:drop0.1:crash0@30+15:rel")
+        .expect("faulted report");
+    assert!(faulted.faults.messages_dropped > 0, "a 10% plan must drop frames");
+    assert!(faulted.faults.retransmits > 0, "reliable mode must retransmit through drops");
+    assert_eq!(
+        faulted.faults.recoveries, 2,
+        "one crash window per round, two rounds absorbed"
+    );
+    assert!(
+        faulted.final_error < 1e-3,
+        "reliable delivery must keep converging under the plan, got {}",
+        faulted.final_error
+    );
 }
 
 #[test]

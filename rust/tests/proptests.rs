@@ -402,6 +402,66 @@ fn prop_csrbin_round_trips_random_graphs() {
     let _ = std::fs::remove_dir(&dir);
 }
 
+/// PROPERTY: reliable delivery is exactly-once. Under any random fault
+/// plan (drop / duplicate / reorder jitter), the sequence-numbered
+/// receiver never surfaces one payload twice — a double-applied residual
+/// delta would silently break eq. 11 conservation — and, whenever no
+/// message exhausted its retry budget, every payload surfaces exactly
+/// once despite the wire's losses and duplicates.
+#[test]
+fn prop_reliable_transport_never_double_delivers() {
+    use pagerank_mp::network::{
+        FaultPlan, LatencyModel, NetProfile, Transport, TransportEvent, WireSized,
+    };
+
+    #[derive(Debug, Clone, PartialEq)]
+    struct Packet(u32);
+    impl WireSized for Packet {
+        fn wire_bytes(&self) -> usize {
+            8
+        }
+    }
+
+    for case in 0..30u64 {
+        let mut rng = Rng::seeded(10_500 + case);
+        let shards = rng.range(2, 6);
+        let plan = FaultPlan::default()
+            .with_drop(0.4 * rng.uniform())
+            .with_duplicate(0.4 * rng.uniform())
+            .with_jitter(4.0 * rng.uniform())
+            .with_seed(31_000 + case);
+        let latency = LatencyModel::Exponential { mean: 0.5 };
+        let mut tp: Transport<Packet> =
+            Transport::with_profile(shards, latency, NetProfile::faulty(plan).reliable());
+        let sent = rng.range(20, 120);
+        let mut net_rng = rng.fork(7);
+        for i in 0..sent {
+            let src = rng.below(shards);
+            let dst = (src + 1 + rng.below(shards - 1)) % shards;
+            tp.send(src, dst, Packet(i as u32), &mut net_rng);
+        }
+        let mut surfaced = vec![0u32; sent];
+        while let Some(ev) = tp.pop() {
+            if let TransportEvent::Deliver { msg, .. } = ev.event {
+                surfaced[msg.0 as usize] += 1;
+            }
+        }
+        for (i, &count) in surfaced.iter().enumerate() {
+            assert!(
+                count <= 1,
+                "case {case}: payload {i} surfaced {count} times — seq dedup double-applied"
+            );
+        }
+        if tp.abandoned() == 0 {
+            let delivered: u32 = surfaced.iter().sum();
+            assert_eq!(
+                delivered, sent as u32,
+                "case {case}: no message gave up, so every payload must surface exactly once"
+            );
+        }
+    }
+}
+
 /// PROPERTY: `remap_ids` compacts sparse/gappy ids to first-seen order —
 /// the same graph as manually renumbering ids in line order (src before
 /// dst) and feeding the builder.

@@ -34,13 +34,22 @@
 //!   bytes-on-wire and the fault ledger into `BENCH_faults.json` (the
 //!   reliable protocol's overhead vs the raw wire's honest stall).
 //!
+//! * **locality**: the shard-map race — mod/block/cluster/scc on
+//!   clustered (SBM), hub-heavy (webgraph) and homogeneous (ER)
+//!   families, sharded worker cells timing the intra/cross conflict
+//!   split and msgpass cells running to ε for bytes-on-wire and
+//!   subscriber fan-out, into `BENCH_locality.json` (topology-aware
+//!   maps must cut cross-shard traffic where community structure
+//!   exists, and cost nothing where it does not).
+//!
 //! `cargo bench --bench throughput`. Env knobs:
 //! `PAGERANK_BENCH_QUICK=1` shrinks every section to a CI smoke size;
 //! `THROUGHPUT_ONLY=sharded-sweep` runs only the leader-saturation
 //! section, `THROUGHPUT_ONLY=network-sweep` only the msgpass race,
 //! `THROUGHPUT_ONLY=webgraph` only the corpus pipeline,
-//! `THROUGHPUT_ONLY=faults` only the degradation curve (CI runs all
-//! four on every push to keep the `bench-json` artifact fed).
+//! `THROUGHPUT_ONLY=faults` only the degradation curve,
+//! `THROUGHPUT_ONLY=locality` only the shard-map race (CI runs all
+//! five on every push to keep the `bench-json` artifact fed).
 
 use std::collections::BTreeMap;
 
@@ -468,6 +477,189 @@ fn faults_degradation_sweep(quick: bool) {
     println!("wrote {}", out.display());
 }
 
+/// One sharded cell of the locality race: the worker-packed runtime on
+/// one shard map, timed over `super_steps` super-steps. Reports the
+/// intra/cross conflict split (the dynamic cost of shard boundaries
+/// under optimistic packing), the cross-conflict rate per sampled
+/// candidate, and the partition's static cross-edge fraction.
+fn locality_sharded_cell(
+    g: &pagerank_mp::graph::Graph,
+    family: &str,
+    shards: usize,
+    batch: usize,
+    map: ShardMap,
+    super_steps: usize,
+) -> Json {
+    let spec_key = format!("sharded:{shards}:{batch}:{}:worker", map.key());
+    let mut sh = ShardedSolver::new(g, 0.85, shards, batch, map, Packer::Worker, Sampling::Uniform);
+    let mut rng = Rng::seeded(29);
+    let t0 = std::time::Instant::now();
+    for _ in 0..super_steps {
+        std::hint::black_box(sh.step(&mut rng));
+    }
+    let wall = t0.elapsed();
+    let loc = sh.runtime().locality();
+    let applied = sh.runtime().activations();
+    let candidates = applied + sh.conflicts();
+    let cross_rate = if candidates > 0 {
+        loc.cross_conflicts as f64 / candidates as f64
+    } else {
+        0.0
+    };
+    let acts_per_sec = applied as f64 / wall.as_secs_f64();
+    println!(
+        "{family:<9} {spec_key:<32} applied {applied:>8}  intra {:>7}  cross {:>7}  \
+         xrate {cross_rate:>7.4}  xedge {:>6.3}",
+        loc.intra_conflicts, loc.cross_conflicts, loc.cross_edge_fraction,
+    );
+    let mut cell = BTreeMap::new();
+    cell.insert("spec".to_string(), Json::String(spec_key));
+    cell.insert("backend".to_string(), Json::String("sharded".to_string()));
+    cell.insert("family".to_string(), Json::String(family.to_string()));
+    cell.insert("map".to_string(), Json::String(map.key().to_string()));
+    cell.insert("shards".to_string(), Json::Number(shards as f64));
+    cell.insert("batch".to_string(), Json::Number(batch as f64));
+    cell.insert("super_steps".to_string(), Json::Number(super_steps as f64));
+    cell.insert("activations".to_string(), Json::Number(applied as f64));
+    cell.insert("intra_conflicts".to_string(), Json::Number(loc.intra_conflicts as f64));
+    cell.insert("cross_conflicts".to_string(), Json::Number(loc.cross_conflicts as f64));
+    cell.insert("cross_conflict_rate".to_string(), Json::Number(cross_rate));
+    cell.insert(
+        "cross_edge_fraction".to_string(),
+        Json::Number(loc.cross_edge_fraction),
+    );
+    cell.insert("wall_ms".to_string(), Json::Number(wall.as_secs_f64() * 1e3));
+    cell.insert("acts_per_sec".to_string(), Json::Number(acts_per_sec));
+    Json::Object(cell)
+}
+
+/// One msgpass cell of the locality race: the backend on one shard map
+/// run to the scaled residual target, reporting what the map costs on
+/// the wire — cross-shard residual updates, their bytes, and the mean
+/// subscriber fan-out per activation.
+fn locality_msgpass_cell(
+    g: &pagerank_mp::graph::Graph,
+    family: &str,
+    shards: usize,
+    batch: usize,
+    map: ShardMap,
+    eps: f64,
+    max_super_steps: usize,
+) -> Json {
+    let spec_key = format!("msgpass:{shards}:{batch}:{}", map.key());
+    let mut rt = MsgpassRuntime::new(
+        g.clone(),
+        0.85,
+        shards,
+        batch,
+        map,
+        DEFAULT_GOSSIP_PERIOD,
+        LatencyModel::Zero,
+    );
+    let mut rng = Rng::seeded(31);
+    let t0 = std::time::Instant::now();
+    let (super_steps, error) = match rt.run_to_residual(eps, max_super_steps, &mut rng) {
+        Ok(steps) => (steps, None),
+        Err(e) => (max_super_steps, Some(format!("{e:#}"))),
+    };
+    let wall = t0.elapsed();
+    let converged = error.is_none() && rt.residual_norm_sq() / g.n() as f64 <= eps;
+    if let Some(e) = &error {
+        println!("  WARNING: {spec_key} failed to drain: {e}");
+    } else if !converged {
+        println!("  WARNING: {spec_key} hit the {max_super_steps}-super-step cap before eps");
+    }
+    let loc = rt.locality();
+    let acts = rt.activations();
+    let fanout = if acts > 0 {
+        loc.subscriber_shard_sum as f64 / acts as f64
+    } else {
+        0.0
+    };
+    println!(
+        "{family:<9} {spec_key:<32} acts {acts:>9}  xmsgs {:>9}  bytes {:>11}  \
+         fanout {fanout:>5.2}  xedge {:>6.3}",
+        loc.cross_messages,
+        rt.bytes_on_wire(),
+        loc.cross_edge_fraction,
+    );
+    let mut cell = BTreeMap::new();
+    cell.insert("spec".to_string(), Json::String(spec_key));
+    cell.insert("backend".to_string(), Json::String("msgpass".to_string()));
+    cell.insert("family".to_string(), Json::String(family.to_string()));
+    cell.insert("map".to_string(), Json::String(map.key().to_string()));
+    cell.insert("shards".to_string(), Json::Number(shards as f64));
+    cell.insert("batch".to_string(), Json::Number(batch as f64));
+    cell.insert("eps".to_string(), Json::Number(eps));
+    cell.insert("converged".to_string(), Json::Bool(converged));
+    cell.insert("super_steps".to_string(), Json::Number(super_steps as f64));
+    cell.insert("activations".to_string(), Json::Number(acts as f64));
+    cell.insert("cross_messages".to_string(), Json::Number(loc.cross_messages as f64));
+    cell.insert("cross_bytes".to_string(), Json::Number(loc.cross_bytes as f64));
+    cell.insert("bytes_on_wire".to_string(), Json::Number(rt.bytes_on_wire() as f64));
+    cell.insert("subscriber_fanout".to_string(), Json::Number(fanout));
+    cell.insert(
+        "cross_edge_fraction".to_string(),
+        Json::Number(loc.cross_edge_fraction),
+    );
+    cell.insert("vtime_to_eps".to_string(), Json::Number(rt.virtual_time()));
+    cell.insert("wall_ms".to_string(), Json::Number(wall.as_secs_f64() * 1e3));
+    cell.insert(
+        "acts_per_sec".to_string(),
+        Json::Number(acts as f64 / wall.as_secs_f64()),
+    );
+    if let Some(e) = error {
+        cell.insert("error".to_string(), Json::String(e));
+    }
+    Json::Object(cell)
+}
+
+/// The shard-map locality race (ISSUE 9): mod/block/cluster/scc on a
+/// clustered SBM, the hub-heavy synthetic webgraph and a homogeneous
+/// sparse ER graph. Sharded worker cells time the intra/cross conflict
+/// split; msgpass cells run to ε and meter the wire. On the SBM the
+/// topology-aware maps must land a lower cross-conflict rate and fewer
+/// bytes-to-ε than modulo; on the ER graph there is no structure to
+/// exploit and the table maps must simply not lose. Dumps
+/// `BENCH_locality.json` for the CI artifact and `scripts/bench_diff`.
+fn locality_sweep(quick: bool) {
+    println!("\n=== locality: shard-map race (mod/block/cluster/scc) ===");
+    let (n, batch, super_steps, eps, max_super_steps) = if quick {
+        (2_000usize, 64usize, 24usize, 1e-6f64, 20_000usize)
+    } else {
+        (20_000, 256, 48, 1e-8, 100_000)
+    };
+    let shards = 4usize;
+    let families: Vec<(&str, pagerank_mp::graph::Graph)> = vec![
+        // Two planted communities, ~6:1 in:out degree — the structure
+        // cluster packing is built to find.
+        ("sbm", generators::sbm_two_block(n, 12.0 / n as f64, 2.0 / n as f64, 12)),
+        // Hub-heavy synthetic corpus: power-law in-degrees, no planted
+        // cut — the hard case for balance-bounded packing.
+        ("webgraph", generators::webgraph(n, 12)),
+        // Homogeneous sparse ER: nothing to exploit; the control.
+        ("er", generators::erdos_renyi(n, 8.0 / n as f64, 12)),
+    ];
+    let mut cells = Vec::new();
+    for (family, g) in &families {
+        for map in [ShardMap::Modulo, ShardMap::Block, ShardMap::Cluster, ShardMap::Scc] {
+            cells.push(locality_sharded_cell(g, family, shards, batch, map, super_steps));
+            cells.push(locality_msgpass_cell(g, family, shards, batch, map, eps, max_super_steps));
+        }
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::String("throughput.locality".to_string()));
+    doc.insert("n".to_string(), Json::Number(n as f64));
+    doc.insert("shards".to_string(), Json::Number(shards as f64));
+    doc.insert("batch".to_string(), Json::Number(batch as f64));
+    doc.insert("eps".to_string(), Json::Number(eps));
+    doc.insert("cells".to_string(), Json::Array(cells));
+    let out = repo_root().join("BENCH_locality.json");
+    pagerank_mp::harness::report::write_file(&out, &Json::Object(doc).render())
+        .expect("write BENCH_locality.json");
+    println!("wrote {}", out.display());
+}
+
 /// Peak resident set size (`VmHWM` from `/proc/self/status`) in bytes;
 /// 0.0 on platforms without procfs — the column is then absent-as-zero
 /// rather than fabricated.
@@ -698,6 +890,10 @@ fn main() {
         faults_degradation_sweep(quick);
         return;
     }
+    if std::env::var("THROUGHPUT_ONLY").as_deref() == Ok("locality") {
+        locality_sweep(quick);
+        return;
+    }
     let mut b = bench::standard();
     println!("=== PERF-L3: matrix-form MP activations/s ===");
     for (name, g) in [
@@ -790,6 +986,7 @@ fn main() {
     network_msgpass_sweep(quick);
     webgraph_bench(quick);
     faults_degradation_sweep(quick);
+    locality_sweep(quick);
 
     println!("\n{}", b.to_csv());
     pagerank_mp::harness::report::write_file(

@@ -65,6 +65,14 @@ pub trait PageRankSolver {
         crate::network::FaultCounters::default()
     }
 
+    /// Shard-locality ledger — nonzero only for the sharded/msgpass
+    /// backends (which override this with their intra/cross conflict
+    /// split and cross-shard wire counts); every other solver has no
+    /// shard boundary to cross.
+    fn locality(&self) -> crate::coordinator::LocalityCounters {
+        crate::coordinator::LocalityCounters::default()
+    }
+
     /// Squared l2 distance `‖x̂_t - x*‖²` of the current estimate from a
     /// reference vector — the quantity Fig. 1 plots (before its 1/N
     /// scaling). The default routes through [`PageRankSolver::estimate`]

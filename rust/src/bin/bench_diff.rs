@@ -1,8 +1,8 @@
 //! `bench_diff` — diff two perf artifacts and flag regressions.
 //!
 //! Compares a baseline and a candidate `BENCH_scenario.json`,
-//! `BENCH_sweep.json`, `BENCH_throughput.json`, `BENCH_network.json` or
-//! `BENCH_faults.json`
+//! `BENCH_sweep.json`, `BENCH_throughput.json`, `BENCH_network.json`,
+//! `BENCH_faults.json` or `BENCH_locality.json`
 //! (the artifacts CI uploads as `bench-json` on every push) and prints
 //! one line per metric
 //! that moved past the threshold. Exit code 1 when a regression is
@@ -31,6 +31,11 @@
 //!   bytes the msgpass transport metered before reaching ε; fixed at 0
 //!   for the shared-memory sharded opponent, so only msgpass cells can
 //!   regress on it).
+//! * `cross_conflict_rate` — smaller is better (locality race cells:
+//!   the fraction of sampled candidates a *cross-shard* neighbour
+//!   knocked out under optimistic packing — the dynamic price of the
+//!   shard map; `BENCH_locality.json` runs one spec per graph family,
+//!   so those cells are keyed `family :: spec`).
 //!
 //! `wall_ms` is deliberately ignored (CI runner noise); `null` decay
 //! rates (diverged/instant-converged trajectories, see docs/ENGINE.md)
@@ -53,6 +58,7 @@ struct Row {
     acts_per_sec: Option<f64>,
     vtime_to_eps: Option<f64>,
     bytes_on_wire: Option<f64>,
+    cross_conflict_rate: Option<f64>,
     load_ms: Option<f64>,
 }
 
@@ -71,6 +77,7 @@ fn run_row(s: &Json) -> Row {
         acts_per_sec: finite(s.get("acts_per_sec")),
         vtime_to_eps: finite(s.get("vtime_to_eps")),
         bytes_on_wire: finite(s.get("bytes_on_wire")),
+        cross_conflict_rate: finite(s.get("cross_conflict_rate")),
         load_ms: finite(s.get("load_ms")),
     }
 }
@@ -106,7 +113,15 @@ fn extract(doc: &Json) -> Result<BTreeMap<String, Row>, String> {
                     rows.insert(format!("{name} :: {run}"), run_row(s));
                 }
             } else if let Some(spec) = cell.get("spec").and_then(Json::as_str) {
-                rows.insert(spec.to_string(), run_row(cell));
+                // BENCH_locality.json runs the same registry spec once
+                // per graph family — key those cells `family :: spec`
+                // so they diff independently instead of silently
+                // overwriting one another.
+                let key = match cell.get("family").and_then(Json::as_str) {
+                    Some(family) => format!("{family} :: {spec}"),
+                    None => spec.to_string(),
+                };
+                rows.insert(key, run_row(cell));
             } else {
                 // A cell this tool cannot key would silently fall out of
                 // the regression diff — refuse instead, so schema drift
@@ -237,6 +252,14 @@ fn run(old_path: &str, new_path: &str, threshold: f64) -> Result<Vec<String>, St
             check(key, "acts_per_sec", o.acts_per_sec, n.acts_per_sec, threshold, false),
             check(key, "vtime_to_eps", o.vtime_to_eps, n.vtime_to_eps, threshold, true),
             check(key, "bytes_on_wire", o.bytes_on_wire, n.bytes_on_wire, threshold, true),
+            check(
+                key,
+                "cross_conflict_rate",
+                o.cross_conflict_rate,
+                n.cross_conflict_rate,
+                threshold,
+                true,
+            ),
             check(key, "load_ms", o.load_ms, n.load_ms, threshold, true),
         ]
         .into_iter()
@@ -508,6 +531,89 @@ mod tests {
         let clean = run(
             old.to_str().expect("utf8"),
             old.to_str().expect("utf8"),
+            0.15,
+        )
+        .expect("runs");
+        assert!(clean.is_empty(), "{clean:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A trimmed-down `BENCH_locality.json` fixture: the same sharded
+    /// and msgpass specs on two graph families — the shape that forces
+    /// family-qualified keys.
+    fn locality_doc(sbm_rate: f64, sbm_bytes: f64) -> String {
+        format!(
+            r#"{{"bench": "throughput.locality", "eps": 1e-6, "shards": 4, "cells": [
+                 {{"spec": "sharded:4:64:cluster:worker", "backend": "sharded",
+                   "family": "sbm", "map": "cluster", "activations": 50000,
+                   "intra_conflicts": 900, "cross_conflicts": 400,
+                   "cross_conflict_rate": {sbm_rate}, "cross_edge_fraction": 0.08,
+                   "acts_per_sec": 1e6, "wall_ms": 10.0}},
+                 {{"spec": "sharded:4:64:cluster:worker", "backend": "sharded",
+                   "family": "er", "map": "cluster", "activations": 50000,
+                   "intra_conflicts": 700, "cross_conflicts": 2100,
+                   "cross_conflict_rate": 0.040, "cross_edge_fraction": 0.74,
+                   "acts_per_sec": 1e6, "wall_ms": 10.0}},
+                 {{"spec": "msgpass:4:64:cluster", "backend": "msgpass",
+                   "family": "sbm", "map": "cluster", "converged": true,
+                   "cross_messages": 4000, "cross_bytes": 64000,
+                   "bytes_on_wire": {sbm_bytes}, "subscriber_fanout": 1.1,
+                   "cross_edge_fraction": 0.08, "vtime_to_eps": 800.0,
+                   "acts_per_sec": 1e6, "wall_ms": 10.0}}]}}"#
+        )
+    }
+
+    #[test]
+    fn locality_artifact_keys_by_family_and_diffs_cross_conflict_rate() {
+        let old = extract(&Json::parse(&locality_doc(0.008, 9.0e4)).expect("json"))
+            .expect("locality shape extracts");
+        // Same spec, two families: both survive under family-qualified
+        // keys instead of the last one silently winning.
+        assert_eq!(old.len(), 3);
+        assert_eq!(
+            old["sbm :: sharded:4:64:cluster:worker"].cross_conflict_rate,
+            Some(0.008)
+        );
+        assert_eq!(
+            old["er :: sharded:4:64:cluster:worker"].cross_conflict_rate,
+            Some(0.040)
+        );
+        assert_eq!(old["sbm :: msgpass:4:64:cluster"].bytes_on_wire, Some(9.0e4));
+
+        // End to end: the candidate's cluster map crossing 50% more
+        // often (and shipping 40% more bytes to ε) must flag on the
+        // right family-qualified keys, and nothing else moves.
+        let dir = std::env::temp_dir().join(format!("bench_diff_loc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let old_p = dir.join("old.json");
+        let new_p = dir.join("new.json");
+        std::fs::write(&old_p, locality_doc(0.008, 9.0e4)).expect("write");
+        std::fs::write(&new_p, locality_doc(0.012, 1.26e5)).expect("write");
+        let findings = run(
+            old_p.to_str().expect("utf8"),
+            new_p.to_str().expect("utf8"),
+            0.15,
+        )
+        .expect("locality shape diffs");
+        assert_eq!(findings.len(), 2, "{findings:?}");
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.contains("sbm :: sharded:4:64:cluster:worker")
+                    && f.contains("cross_conflict_rate")),
+            "{findings:?}"
+        );
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.contains("sbm :: msgpass:4:64:cluster")
+                    && f.contains("bytes_on_wire")),
+            "{findings:?}"
+        );
+        // Identical artifacts diff clean.
+        let clean = run(
+            old_p.to_str().expect("utf8"),
+            old_p.to_str().expect("utf8"),
             0.15,
         )
         .expect("runs");

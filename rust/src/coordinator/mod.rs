@@ -45,4 +45,4 @@ pub use config::{CoordinatorConfig, Mode};
 pub use leader::{Coordinator, RunReport};
 pub use msgpass::{MsgpassConfig, MsgpassRuntime};
 pub use sampler::SamplerKind;
-pub use sharded::{Packer, Sampling, ShardMap, ShardedRuntime};
+pub use sharded::{LocalityCounters, Packer, ResolvedMap, Sampling, ShardMap, ShardedRuntime};

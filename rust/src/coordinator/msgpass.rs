@@ -5,9 +5,11 @@
 //! *shared memory* (every worker reads the one residual array, and the
 //! PR-5 residual samplers consult idealized global/per-shard weight
 //! trees), [`MsgpassRuntime`] models what the same algorithm costs on a
-//! wire. Each shard owns a page partition ([`ShardMap`]), keeps a
-//! full-length *replica* of the residual vector, and runs an event loop
-//! over the shared [`Transport`]:
+//! wire. Each shard owns a page partition (a [`ShardMap`] — closed-form
+//! `mod`/`block` or the table-backed topology-aware `cluster`/`scc`
+//! maps, resolved once at construction), keeps a full-length *replica*
+//! of the residual vector, and runs an event loop over the shared
+//! [`Transport`]:
 //!
 //! * **Activation** (a `Wake` event): the shard draws one owned page `k`
 //!   uniformly from its own stream, computes the eq. 7/8 projection
@@ -24,6 +26,14 @@
 //!   summaries, decayed toward the floor with a half-life of one gossip
 //!   interval — so cross-shard load follows residual mass using only
 //!   gossiped (stale, metered) information, never a global view.
+//!
+//! Locality is metered alongside the wire: every cross-shard
+//! `ResidualUpdate` is counted (messages and bytes), each activation
+//! records how many *distinct* remote shards its updates fanned out to,
+//! and the resolved map's static cross-edge fraction is reported — the
+//! [`LocalityCounters`] the `locality` bench races across maps. A
+//! cluster map keeps most of `{j} ∪ in(j)` on one shard, so subscriber
+//! sets shrink and the same activation costs fewer wire bytes.
 //!
 //! Within a shard, page selection stays **uniform** over owned pages:
 //! that is what makes `msgpass:1:1:mod` with zero latency replay
@@ -72,7 +82,7 @@
 //! that only staleness-perturbs future projections (convergence rate),
 //! never the invariant.
 
-use crate::coordinator::sharded::ShardMap;
+use crate::coordinator::sharded::{LocalityCounters, ResolvedMap, ShardMap};
 use crate::graph::Graph;
 use crate::linalg::select::{DEFAULT_WEIGHT_FLOOR, WeightTree};
 use crate::linalg::sparse::BColumns;
@@ -184,6 +194,9 @@ pub struct MsgpassRuntime {
     shards: usize,
     batch: usize,
     map: ShardMap,
+    /// The map resolved against this graph (owner table for the
+    /// topology-aware maps) — what every ownership lookup consults.
+    rmap: ResolvedMap,
     gossip: usize,
     transport: Transport<Msg>,
     /// Dedicated stream for latency draws, forked from the seed stream —
@@ -234,6 +247,14 @@ pub struct MsgpassRuntime {
     max_fanout: usize,
     /// Test hook: forces the event budget ([`Self::set_event_budget`]).
     budget_override: Option<u64>,
+    /// Locality ledger: cross-shard residual-update messages/bytes,
+    /// per-activation distinct-peer fan-out, and the resolved map's
+    /// static cross-edge fraction (set at construction).
+    locality: LocalityCounters,
+    /// Scratch: per-shard stamp of the last activation that counted the
+    /// shard as a remote subscriber (dedups the fan-out count without
+    /// allocating per activation).
+    peer_mark: Vec<u64>,
 }
 
 impl MsgpassRuntime {
@@ -270,7 +291,15 @@ impl MsgpassRuntime {
         let cols = BColumns::new(&graph, alpha);
         let y = 1.0 - alpha;
         let w0 = (y * y).max(DEFAULT_WEIGHT_FLOOR);
-        let owned: Vec<usize> = (0..shards).map(|w| map.owned_count(w, n, shards)).collect();
+        // Resolve the map once (table-backed maps run their partition
+        // algorithm here — same fixed internal seed as the sharded
+        // runtime, so both backends place pages identically).
+        let rmap = map.resolve(&graph, shards);
+        let locality = LocalityCounters {
+            cross_edge_fraction: rmap.cross_edge_fraction(&graph),
+            ..LocalityCounters::default()
+        };
+        let owned: Vec<usize> = (0..shards).map(|w| rmap.owned_count(w)).collect();
         let trees: Vec<WeightTree> =
             owned.iter().map(|&cnt| WeightTree::new(&vec![w0; cnt])).collect();
         let summaries: Vec<(f64, f64)> =
@@ -278,9 +307,9 @@ impl MsgpassRuntime {
         let mut subs = Vec::with_capacity(n);
         for j in 0..n {
             let mut s: Vec<u32> = Vec::with_capacity(1 + graph.inc(j).len());
-            s.push(map.owner(j, n, shards) as u32);
+            s.push(rmap.owner(j) as u32);
             for &p in graph.inc(j) {
-                s.push(map.owner(p as usize, n, shards) as u32);
+                s.push(rmap.owner(p as usize) as u32);
             }
             s.sort_unstable();
             s.dedup();
@@ -323,6 +352,9 @@ impl MsgpassRuntime {
             fault_divergence: 0.0,
             max_fanout,
             budget_override: None,
+            locality,
+            peer_mark: vec![0; shards],
+            rmap,
             graph,
         }
     }
@@ -468,12 +500,12 @@ impl MsgpassRuntime {
         }
         let mut div = 0.0;
         for (j, t) in truth.iter().enumerate() {
-            let d = self.views[self.map.owner(j, n, self.shards)][j] - t;
+            let d = self.views[self.rmap.owner(j)][j] - t;
             div += d * d;
         }
         self.fault_divergence = self.fault_divergence.max(div / n as f64);
         for j in 0..n {
-            if self.map.owner(j, n, self.shards) != w {
+            if self.rmap.owner(j) != w {
                 self.views[w][j] = 0.0;
             }
         }
@@ -487,7 +519,7 @@ impl MsgpassRuntime {
         self.recoveries += 1;
         let n = self.graph.n();
         for j in 0..n {
-            let o = self.map.owner(j, n, self.shards);
+            let o = self.rmap.owner(j);
             if o == w || self.subs[j].binary_search(&(w as u32)).is_err() {
                 continue;
             }
@@ -558,13 +590,12 @@ impl MsgpassRuntime {
     /// draw, eq. 7/8 projection against the local replica, residual
     /// messages to the subscriber shards, gossip on cadence.
     fn activate_one(&mut self, w: usize) {
-        let n = self.graph.n();
         let owned = self.owned[w];
         if owned == 0 {
             return;
         }
         let pick = self.streams[w].below(owned);
-        let k = self.map.owned_page(w, pick, n, self.shards);
+        let k = self.rmap.owned_page(w, pick);
         let deg = self.graph.out_degree(k);
         let num = self.cols.col_dot(&self.graph, k, &self.views[w]);
         let coef = num / self.cols.norm_sq(k);
@@ -582,6 +613,10 @@ impl MsgpassRuntime {
             self.old_vals.push(self.views[w][self.touched[i] as usize]);
         }
         self.cols.sub_scaled_col(&self.graph, k, coef, &mut self.views[w]);
+        // Locality ledger stamp: `activations` increments below, so
+        // `activations + 1` is unique per activation — peer_mark dedups
+        // the distinct-remote-shard count without a per-call allocation.
+        let stamp = self.activations + 1;
         for i in 0..self.touched.len() {
             let j = self.touched[i] as usize;
             let new = self.views[w][j];
@@ -598,10 +633,16 @@ impl MsgpassRuntime {
                             Msg::ResidualUpdate { page: j as u32, delta },
                             &mut self.net_rng,
                         );
+                        self.locality.cross_messages += 1;
+                        self.locality.cross_bytes += RESIDUAL_UPDATE_BYTES as u64;
+                        if self.peer_mark[s] != stamp {
+                            self.peer_mark[s] = stamp;
+                            self.locality.subscriber_shard_sum += 1;
+                        }
                     }
                 }
-                if self.map.owner(j, n, self.shards) == w {
-                    let li = self.map.local_index(j, n, self.shards);
+                if self.rmap.owner(j) == w {
+                    let li = self.rmap.local_index(j);
                     self.trees[w].update(li, (new * new).max(DEFAULT_WEIGHT_FLOOR));
                 }
             }
@@ -633,9 +674,9 @@ impl MsgpassRuntime {
             Msg::ResidualUpdate { page, delta } => {
                 let j = page as usize;
                 self.views[dst][j] += delta;
-                if self.shards > 1 && self.map.owner(j, self.graph.n(), self.shards) == dst {
+                if self.shards > 1 && self.rmap.owner(j) == dst {
                     let v = self.views[dst][j];
-                    let li = self.map.local_index(j, self.graph.n(), self.shards);
+                    let li = self.rmap.local_index(j);
                     self.trees[dst].update(li, (v * v).max(DEFAULT_WEIGHT_FLOOR));
                 }
             }
@@ -693,6 +734,21 @@ impl MsgpassRuntime {
         c
     }
 
+    /// The locality ledger: cross-shard residual-update messages and
+    /// bytes, the distinct-remote-subscriber sum (divide by
+    /// [`Self::activations`] for the mean fan-out per activation), and
+    /// the resolved map's static cross-edge fraction. All zeros on
+    /// single-shard runs.
+    pub fn locality(&self) -> LocalityCounters {
+        self.locality
+    }
+
+    /// The shard map resolved against this graph (owner table for the
+    /// `cluster`/`scc` maps).
+    pub fn resolved_map(&self) -> &ResolvedMap {
+        &self.rmap
+    }
+
     /// Messages the reliable sender gave up on after the retry budget —
     /// nonzero means even `rel` mode lost deltas and conservation may
     /// not hold exactly.
@@ -714,14 +770,14 @@ impl MsgpassRuntime {
     /// lags only in-flight foreign deltas otherwise.
     pub fn residual(&self) -> Vec<f64> {
         let n = self.graph.n();
-        (0..n).map(|j| self.views[self.map.owner(j, n, self.shards)][j]).collect()
+        (0..n).map(|j| self.views[self.rmap.owner(j)][j]).collect()
     }
 
     pub fn residual_norm_sq(&self) -> f64 {
         let n = self.graph.n();
         (0..n)
             .map(|j| {
-                let r = self.views[self.map.owner(j, n, self.shards)][j];
+                let r = self.views[self.rmap.owner(j)][j];
                 r * r
             })
             .sum()
@@ -827,6 +883,14 @@ mod tests {
             (2 * RESIDUAL_UPDATE_BYTES + WEIGHT_SUMMARY_BYTES) as u64
         );
         assert!(rt.peak_queue_depth() >= 1);
+        // The locality ledger sees only the residual-update fan-out
+        // (gossip is allocator business, not data locality): 2 cross
+        // messages to 1 distinct remote shard.
+        let loc = rt.locality();
+        assert_eq!(loc.cross_messages, 2);
+        assert_eq!(loc.cross_bytes, (2 * RESIDUAL_UPDATE_BYTES) as u64);
+        assert_eq!(loc.subscriber_shard_sum, 1, "one distinct remote peer");
+        assert!(loc.cross_edge_fraction > 0.0, "ring(2) has only cross edges under mod");
     }
 
     #[test]
@@ -1275,5 +1339,96 @@ mod tests {
         rt2.set_event_budget(3);
         let mut rng = Rng::seeded(91);
         assert!(rt2.run_to_residual(1e-12, 100, &mut rng).is_err());
+    }
+
+    #[test]
+    fn cluster_map_cuts_cross_traffic_and_still_converges() {
+        // The tentpole claim on the wire: on a two-block SBM the cluster
+        // map aligns shards with blocks, so subscriber sets collapse to
+        // (mostly) singletons and the same activation count costs fewer
+        // cross-shard residual updates than the mod interleave — while
+        // both reach the exact fixed point.
+        let g = generators::sbm_two_block(60, 0.3, 0.02, 91);
+        let x_star = exact_pagerank(&g, 0.85);
+        let run = |map: ShardMap| {
+            let mut rt = MsgpassRuntime::new(
+                g.clone(),
+                0.85,
+                2,
+                8,
+                map,
+                DEFAULT_GOSSIP_PERIOD,
+                LatencyModel::Zero,
+            );
+            let mut rng = Rng::seeded(37);
+            for _ in 0..6_000 {
+                rt.run_super_step(&mut rng);
+            }
+            rt
+        };
+        let (modulo, cluster) = (run(ShardMap::Modulo), run(ShardMap::Cluster));
+        assert_eq!(modulo.activations(), cluster.activations(), "same activation budget");
+        let (lm, lc) = (modulo.locality(), cluster.locality());
+        assert!(
+            lc.cross_messages < lm.cross_messages,
+            "cluster must cut cross traffic: cluster={} mod={}",
+            lc.cross_messages,
+            lm.cross_messages
+        );
+        assert!(lc.cross_edge_fraction < lm.cross_edge_fraction);
+        assert!(lc.subscriber_shard_sum < lm.subscriber_shard_sum);
+        assert!(cluster.bytes_on_wire() < modulo.bytes_on_wire());
+        for rt in [&modulo, &cluster] {
+            let err = vector::dist_inf(&rt.estimate(), &x_star);
+            assert!(err < 1e-6, "err={err}");
+        }
+    }
+
+    #[test]
+    fn scc_map_converges_on_a_multi_component_graph() {
+        // chain(20) condenses to 20 singleton SCCs; the scc map packs
+        // them largest-first but must still satisfy the ownership
+        // contract and reach the dense fixed point.
+        let g = generators::chain(20);
+        let x_star = exact_pagerank(&g, 0.85);
+        let mut rt = MsgpassRuntime::new(
+            g,
+            0.85,
+            3,
+            6,
+            ShardMap::Scc,
+            DEFAULT_GOSSIP_PERIOD,
+            LatencyModel::Zero,
+        );
+        let mut rng = Rng::seeded(29);
+        for _ in 0..15_000 {
+            rt.run_super_step(&mut rng);
+        }
+        let err = vector::dist_inf(&rt.estimate(), &x_star);
+        assert!(err < 1e-6, "err={err}");
+        assert!(rt.locality().any(), "multi-shard runs record locality");
+    }
+
+    #[test]
+    fn single_shard_table_maps_record_no_locality() {
+        // One shard: the table map is the identity, nothing crosses a
+        // boundary, and the ledger must stay all-zero so downstream JSON
+        // shapes are unchanged.
+        let g = generators::er_threshold(20, 0.5, 3);
+        let mut rt = MsgpassRuntime::new(
+            g,
+            0.85,
+            1,
+            4,
+            ShardMap::Cluster,
+            DEFAULT_GOSSIP_PERIOD,
+            LatencyModel::Zero,
+        );
+        let mut rng = Rng::seeded(41);
+        for _ in 0..200 {
+            rt.run_super_step(&mut rng);
+        }
+        assert!(!rt.locality().any(), "single-shard runs have no locality story");
+        assert_eq!(rt.messages_sent(), 0);
     }
 }

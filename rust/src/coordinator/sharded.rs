@@ -68,11 +68,21 @@
 //! Topology: one leader and `W` persistent workers connected by mpsc
 //! channels plus (for worker packing) a `std::sync::Barrier` separating
 //! the claim and verify/execute phases of a super-step. Page → shard
-//! ownership is a pluggable [`ShardMap`] (modulo or block). Under leader
-//! packing, ownership only routes work (batch supports are disjoint), so
-//! both maps produce identical estimates; under worker packing the map
-//! also shapes the candidate law, so different maps are different (but
-//! individually deterministic) sampling policies.
+//! ownership is a pluggable [`ShardMap`]: closed-form (`mod`/`block`)
+//! or table-backed topology-aware (`cluster`/`scc`, resolved once per
+//! `(graph, shards)` into a [`ResolvedMap`] by
+//! [`crate::graph::partition`]). Under leader packing, ownership only
+//! routes work (batch supports are disjoint), so all maps produce
+//! identical estimates; under worker packing the map also shapes the
+//! candidate law, so different maps are different (but individually
+//! deterministic) sampling policies.
+//!
+//! Locality is measured, not asserted: the worker packer splits its
+//! conflict count into intra- vs cross-shard claim rejections (the
+//! blocking claim word's id encodes the winning shard), and every
+//! multi-shard runtime reports the static cross-edge fraction of its
+//! resolved map through [`LocalityCounters`] — the quantities the
+//! `locality` bench section races across maps.
 //!
 //! Dangling pages are repaired on the fly by the shared implicit
 //! self-loop guard of [`BColumns`] (no `α/0` poisoning — see that
@@ -83,6 +93,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier};
 
+use crate::graph::partition::{self, OwnerTable};
 use crate::graph::Graph;
 use crate::linalg::select::{DEFAULT_WEIGHT_FLOOR, WeightTree};
 use crate::linalg::sparse::BColumns;
@@ -167,47 +178,98 @@ fn activate(graph: &Graph, cols: &BColumns, state: &SharedState, k: usize, alpha
 /// low-id range (BA preferential attachment, the star family), where
 /// block ownership would hand one shard all the expensive activations.
 /// `Block` assigns contiguous ranges of `⌈n/W⌉` pages — cache-friendly
-/// contiguous state per worker when degrees are uniform. Under
-/// [`Packer::Leader`] ownership only routes work (batch supports are
-/// disjoint), so both maps produce identical estimates; under
+/// contiguous state per worker when degrees are uniform. `Cluster` and
+/// `Scc` are *table-backed* topology-aware maps (ROADMAP "topology-aware
+/// sharding"): seeded label-propagation clusters or Tarjan condensation
+/// components, bin-packed onto shards by a balance-bounded largest-first
+/// greedy — resolved once per `(graph, shards)` into a [`ResolvedMap`]
+/// by [`ShardMap::resolve`] (see [`crate::graph::partition`]).
+///
+/// Under [`Packer::Leader`] ownership only routes work (batch supports
+/// are disjoint), so all maps produce identical estimates; under
 /// [`Packer::Worker`] the map additionally defines each worker's local
-/// candidate pool.
+/// candidate pool, so different maps are different (but individually
+/// deterministic) sampling policies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardMap {
     /// `owner(k) = k % W`.
     Modulo,
     /// `owner(k) = k / ⌈n/W⌉` (contiguous ranges).
     Block,
+    /// Seeded label-propagation clusters, balance-packed (table-backed).
+    Cluster,
+    /// Tarjan SCC condensation components, balance-packed (table-backed).
+    Scc,
 }
 
 impl ShardMap {
-    /// Registry string used by `SolverSpec` (`"mod"` / `"block"`).
+    /// Registry string used by `SolverSpec`
+    /// (`"mod"` / `"block"` / `"cluster"` / `"scc"`).
     pub fn key(&self) -> &'static str {
         match self {
             ShardMap::Modulo => "mod",
             ShardMap::Block => "block",
+            ShardMap::Cluster => "cluster",
+            ShardMap::Scc => "scc",
         }
     }
 
-    /// Parse the registry string.
-    pub fn parse(s: &str) -> Option<ShardMap> {
+    /// Parse the registry string. Unknown names are an error naming the
+    /// valid set, so the spec grammar can position it instead of
+    /// bubbling a silent `None`.
+    pub fn parse(s: &str) -> Result<ShardMap, String> {
         match s {
-            "mod" | "modulo" => Some(ShardMap::Modulo),
-            "block" => Some(ShardMap::Block),
-            _ => None,
+            "mod" | "modulo" => Ok(ShardMap::Modulo),
+            "block" => Ok(ShardMap::Block),
+            "cluster" => Ok(ShardMap::Cluster),
+            "scc" => Ok(ShardMap::Scc),
+            other => Err(format!("bad shard map {other:?} (mod|block|cluster|scc)")),
         }
     }
 
-    /// Which of `shards` workers owns page `k` of an `n`-page graph.
+    /// Whether this map is table-backed (needs [`ShardMap::resolve`]
+    /// against a concrete graph; the closed-form accessors below panic).
+    pub fn table_backed(&self) -> bool {
+        matches!(self, ShardMap::Cluster | ShardMap::Scc)
+    }
+
+    /// Resolve against a concrete graph into the form the runtimes
+    /// consume. Closed-form maps stay arithmetic; the topology-aware
+    /// maps build their owner table here — out-CSR only (so in-link-free
+    /// graphs resolve too) and with a *fixed* internal seed, so both
+    /// runtimes resolve the identical partition for the same
+    /// `(graph, shards)` whatever the run seed.
+    pub fn resolve(&self, graph: &Graph, shards: usize) -> ResolvedMap {
+        match self {
+            ShardMap::Modulo | ShardMap::Block => {
+                ResolvedMap::Closed { map: *self, n: graph.n(), shards }
+            }
+            ShardMap::Cluster => {
+                ResolvedMap::Table(partition::cluster_partition(graph, shards))
+            }
+            ShardMap::Scc => ResolvedMap::Table(partition::scc_partition(graph, shards)),
+        }
+    }
+
+    #[inline]
+    fn no_closed_form(&self) -> ! {
+        panic!("{self:?} is table-backed and has no closed form; use ShardMap::resolve")
+    }
+
+    /// Which of `shards` workers owns page `k` of an `n`-page graph
+    /// (closed-form maps only — table-backed maps answer through their
+    /// [`ResolvedMap`]).
     #[inline]
     pub fn owner(&self, k: usize, n: usize, shards: usize) -> usize {
         match self {
             ShardMap::Modulo => k % shards,
             ShardMap::Block => k / n.div_ceil(shards),
+            ShardMap::Cluster | ShardMap::Scc => self.no_closed_form(),
         }
     }
 
-    /// How many pages of an `n`-page graph shard `w` owns.
+    /// How many pages of an `n`-page graph shard `w` owns (closed-form
+    /// maps only).
     #[inline]
     pub fn owned_count(&self, w: usize, n: usize, shards: usize) -> usize {
         match self {
@@ -216,28 +278,152 @@ impl ShardMap {
                 let chunk = n.div_ceil(shards);
                 n.saturating_sub(w * chunk).min(chunk)
             }
+            ShardMap::Cluster | ShardMap::Scc => self.no_closed_form(),
         }
     }
 
-    /// The `i`-th page owned by shard `w` (`i < owned_count`).
+    /// The `i`-th page owned by shard `w` (`i < owned_count`; closed-form
+    /// maps only).
     #[inline]
     pub fn owned_page(&self, w: usize, i: usize, n: usize, shards: usize) -> usize {
         match self {
             ShardMap::Modulo => w + i * shards,
             ShardMap::Block => w * n.div_ceil(shards) + i,
+            ShardMap::Cluster | ShardMap::Scc => self.no_closed_form(),
         }
     }
 
     /// Inverse of [`ShardMap::owned_page`]: page `k`'s index within its
-    /// owner's page list. Monotone in `k` for both maps, so sorting
-    /// global ids sorts local indices too (the residual samplers rely on
-    /// this for deterministic weight-update order).
+    /// owner's page list (closed-form maps only). Monotone in `k`, so
+    /// sorting global ids sorts local indices too (the residual samplers
+    /// rely on this for deterministic weight-update order).
     #[inline]
     pub fn local_index(&self, k: usize, n: usize, shards: usize) -> usize {
         match self {
             ShardMap::Modulo => k / shards,
             ShardMap::Block => k % n.div_ceil(shards),
+            ShardMap::Cluster | ShardMap::Scc => self.no_closed_form(),
         }
+    }
+}
+
+/// A [`ShardMap`] resolved against a concrete graph — the form every
+/// runtime hot path consumes. Closed-form maps compute ownership
+/// arithmetically; table-backed maps index the shared [`OwnerTable`].
+/// Cheap to clone (the table is all Arcs), so each worker thread holds
+/// its own handle. The partition contract is identical across forms:
+/// every page owned exactly once, `owned_page` ascending in `i`,
+/// `local_index` inverting it.
+#[derive(Debug, Clone)]
+pub enum ResolvedMap {
+    /// `mod`/`block`: ownership from arithmetic on `(n, shards)`.
+    Closed { map: ShardMap, n: usize, shards: usize },
+    /// `cluster`/`scc`: ownership from the resolved owner table.
+    Table(OwnerTable),
+}
+
+impl ResolvedMap {
+    /// Shard that owns page `k`.
+    #[inline]
+    pub fn owner(&self, k: usize) -> usize {
+        match self {
+            ResolvedMap::Closed { map, n, shards } => map.owner(k, *n, *shards),
+            ResolvedMap::Table(t) => t.owner(k),
+        }
+    }
+
+    /// Number of pages shard `w` owns.
+    #[inline]
+    pub fn owned_count(&self, w: usize) -> usize {
+        match self {
+            ResolvedMap::Closed { map, n, shards } => map.owned_count(w, *n, *shards),
+            ResolvedMap::Table(t) => t.owned_count(w),
+        }
+    }
+
+    /// The `i`-th page owned by shard `w` (ascending in `i`).
+    #[inline]
+    pub fn owned_page(&self, w: usize, i: usize) -> usize {
+        match self {
+            ResolvedMap::Closed { map, n, shards } => map.owned_page(w, i, *n, *shards),
+            ResolvedMap::Table(t) => t.owned_page(w, i),
+        }
+    }
+
+    /// Index of page `k` within its owner's page list.
+    #[inline]
+    pub fn local_index(&self, k: usize) -> usize {
+        match self {
+            ResolvedMap::Closed { map, n, shards } => map.local_index(k, *n, *shards),
+            ResolvedMap::Table(t) => t.local_index(k),
+        }
+    }
+
+    /// Number of shards the map partitions onto.
+    pub fn shards(&self) -> usize {
+        match self {
+            ResolvedMap::Closed { shards, .. } => *shards,
+            ResolvedMap::Table(t) => t.shards(),
+        }
+    }
+
+    /// Fraction of out-edges whose endpoints live on different shards —
+    /// the static locality gauge both runtimes surface.
+    pub fn cross_edge_fraction(&self, graph: &Graph) -> f64 {
+        if self.shards() <= 1 {
+            return 0.0;
+        }
+        partition::cross_edge_fraction(graph, |k| self.owner(k))
+    }
+}
+
+/// Placement/locality ledger surfaced through `SolverReport` — how much
+/// of a run's coordination crossed a shard boundary. The sharded worker
+/// packer fills the conflict split (leader-packed conflicts are a serial
+/// mark scan with no claiming shard to attribute), the msgpass backend
+/// fills the wire counters, and both report the static cross-edge
+/// fraction of their resolved map. All zero for every other solver.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LocalityCounters {
+    /// Worker-packed claim rejections whose winning claim came from the
+    /// same shard.
+    pub intra_conflicts: u64,
+    /// Worker-packed claim rejections lost to another shard's claim.
+    pub cross_conflicts: u64,
+    /// Fraction of out-edges `(k → j)` with `owner(k) != owner(j)` — a
+    /// static gauge of the resolved map (max over absorbed runs).
+    pub cross_edge_fraction: f64,
+    /// msgpass `ResidualUpdate` messages sent to another shard.
+    pub cross_messages: u64,
+    /// Wire bytes of those cross-shard residual updates.
+    pub cross_bytes: u64,
+    /// Sum over activations of the number of *distinct* remote shards
+    /// the activation's residual updates fanned out to (the subscriber
+    /// fan-out the cluster maps shrink).
+    pub subscriber_shard_sum: u64,
+}
+
+impl LocalityCounters {
+    /// Whether anything was recorded — gates the report fields so
+    /// single-shard and non-sharded runs keep their historical JSON
+    /// shape (same contract as `FaultCounters::any`).
+    pub fn any(&self) -> bool {
+        self.intra_conflicts > 0
+            || self.cross_conflicts > 0
+            || self.cross_edge_fraction > 0.0
+            || self.cross_messages > 0
+            || self.cross_bytes > 0
+            || self.subscriber_shard_sum > 0
+    }
+
+    /// Fold another ledger in (counts add; the static gauge maxes).
+    pub fn absorb(&mut self, other: &LocalityCounters) {
+        self.intra_conflicts += other.intra_conflicts;
+        self.cross_conflicts += other.cross_conflicts;
+        self.cross_edge_fraction = self.cross_edge_fraction.max(other.cross_edge_fraction);
+        self.cross_messages += other.cross_messages;
+        self.cross_bytes += other.cross_bytes;
+        self.subscriber_shard_sum += other.subscriber_shard_sum;
     }
 }
 
@@ -364,6 +550,9 @@ enum Job {
 struct Done {
     applied: u64,
     conflicts: u64,
+    /// Of `conflicts`, how many were lost to another shard's claim
+    /// (worker packing only — the claim word names the winning shard).
+    cross_conflicts: u64,
     reads: u64,
     writes: u64,
     /// Leader-mode batch buffer, returned for reuse (the allocation-free
@@ -377,7 +566,7 @@ struct WorkerCtx {
     w: usize,
     shards: usize,
     alpha: f64,
-    map: ShardMap,
+    map: ResolvedMap,
     sampling: Sampling,
     graph: Arc<Graph>,
     cols: Arc<BColumns>,
@@ -389,8 +578,7 @@ struct WorkerCtx {
 }
 
 fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>) {
-    let n = ctx.graph.n();
-    let owned = ctx.map.owned_count(ctx.w, n, ctx.shards);
+    let owned = ctx.map.owned_count(ctx.w);
     let residual = ctx.sampling == Sampling::Residual;
     // Worker-packing locals, allocated once per thread: the candidate
     // stream, the (page, claim word) queue of the current super-step,
@@ -441,7 +629,7 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>) {
                             Some(tree) => tree.sample(rng),
                             None => rng.below(owned),
                         };
-                        let k = ctx.map.owned_page(ctx.w, li, n, ctx.shards);
+                        let k = ctx.map.owned_page(ctx.w, li);
                         // Interleave priorities across workers (slot-major)
                         // so no shard's whole batch outranks another's.
                         let word = claim_word(gen, (slot * ctx.shards + ctx.w) as u64);
@@ -463,12 +651,24 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>) {
                 let mut d = Done::default();
                 for &(k, word) in &cands {
                     let k = k as usize;
-                    let wins = ctx.claims[k].load(Ordering::Relaxed) == word
-                        && ctx
-                            .graph
-                            .out(k)
-                            .iter()
-                            .all(|&j| ctx.claims[j as usize].load(Ordering::Relaxed) == word);
+                    // On a loss, capture the blocking word: fetch_max
+                    // means the stored word is ≥ ours, and the leader's
+                    // recv loop keeps generations from overlapping, so
+                    // the blocker is this generation's winner of that
+                    // page — its claim id encodes the winning shard
+                    // (ids interleave slot-major across workers).
+                    let mut blocker = ctx.claims[k].load(Ordering::Relaxed);
+                    let mut wins = blocker == word;
+                    if wins {
+                        for &j in ctx.graph.out(k) {
+                            let stamp = ctx.claims[j as usize].load(Ordering::Relaxed);
+                            if stamp != word {
+                                blocker = stamp;
+                                wins = false;
+                                break;
+                            }
+                        }
+                    }
                     if wins {
                         activate(&ctx.graph, &ctx.cols, &ctx.state, k, ctx.alpha);
                         let deg = ctx.graph.out_degree(k) as u64;
@@ -482,6 +682,10 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>) {
                         }
                     } else {
                         d.conflicts += 1;
+                        let winner_claim = CLAIM_SLOT_MASK - (blocker & CLAIM_SLOT_MASK);
+                        if winner_claim as usize % ctx.shards != ctx.w {
+                            d.cross_conflicts += 1;
+                        }
                     }
                 }
                 if residual {
@@ -501,11 +705,11 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>) {
                         wscratch.clear();
                         for slot in 0..wins_n {
                             let k = ctx.winners.pages[slot].load(Ordering::Relaxed) as usize;
-                            if ctx.map.owner(k, n, ctx.shards) == ctx.w {
+                            if ctx.map.owner(k) == ctx.w {
                                 wscratch.push(k as u32);
                             }
                             for &j in ctx.graph.out(k) {
-                                if ctx.map.owner(j as usize, n, ctx.shards) == ctx.w {
+                                if ctx.map.owner(j as usize) == ctx.w {
                                     wscratch.push(j);
                                 }
                             }
@@ -516,7 +720,7 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>) {
                             let j = j as usize;
                             let r = ctx.state.load_r(j);
                             tree.update(
-                                ctx.map.local_index(j, n, ctx.shards),
+                                ctx.map.local_index(j),
                                 (r * r).max(DEFAULT_WEIGHT_FLOOR),
                             );
                         }
@@ -540,6 +744,9 @@ pub struct ShardedRuntime {
     done_rx: Receiver<Done>,
     shards: usize,
     map: ShardMap,
+    /// The map resolved against this graph (owner table for the
+    /// topology-aware maps) — what the leader's routing consults.
+    rmap: ResolvedMap,
     packer: Packer,
     sampling: Sampling,
     /// Scratch: generation-tagged marks for leader-side packing.
@@ -571,6 +778,13 @@ pub struct ShardedRuntime {
     activations: u64,
     /// Candidates dropped due to conflicts (both packers count them).
     conflicts: u64,
+    /// Of `conflicts`, how many were lost to another shard's claim
+    /// (worker packing only; the leader's serial scan has no claiming
+    /// shard to attribute).
+    cross_conflicts: u64,
+    /// Static fraction of out-edges crossing shard boundaries under the
+    /// resolved map (0 for a single shard).
+    cross_edge_fraction: f64,
     /// Residual reads issued by applied activations (§II-D accounting:
     /// one per out-neighbour — a dangling page's implicit self-read is
     /// local and free, matching the matrix-form counters).
@@ -624,6 +838,10 @@ impl ShardedRuntime {
         let graph = Arc::new(graph);
         let cols = Arc::new(BColumns::new(&graph, alpha));
         let state = Arc::new(SharedState::new(n, 1.0 - alpha));
+        // Resolve the map once (table-backed maps run their partition
+        // algorithm here) and measure its static locality gauge.
+        let rmap = map.resolve(&graph, shards);
+        let cross_edge_fraction = rmap.cross_edge_fraction(&graph);
         // Each packer's scratch is O(n); only materialize the one in use
         // (claims for worker packing, the mark array for leader packing,
         // the winner exchange for worker-packed residual sampling).
@@ -653,7 +871,7 @@ impl ShardedRuntime {
                 w,
                 shards,
                 alpha,
-                map,
+                map: rmap.clone(),
                 sampling,
                 graph: Arc::clone(&graph),
                 cols: Arc::clone(&cols),
@@ -692,10 +910,13 @@ impl ShardedRuntime {
             done_rx,
             shards,
             map,
+            rmap,
             packer,
             sampling,
             activations: 0,
             conflicts: 0,
+            cross_conflicts: 0,
+            cross_edge_fraction,
             logical_reads: 0,
             logical_writes: 0,
         }
@@ -756,7 +977,7 @@ impl ShardedRuntime {
                 let deg = self.graph.out_degree(k) as u64;
                 self.logical_reads += deg;
                 self.logical_writes += deg;
-                let owner = self.map.owner(k, n, self.shards);
+                let owner = self.rmap.owner(k);
                 self.route[owner].push(k as u32);
                 if self.ltree.is_some() {
                     self.packed.push(k as u32);
@@ -857,6 +1078,7 @@ impl ShardedRuntime {
                 let d = self.done_rx.recv().expect("worker alive");
                 applied += d.applied;
                 self.conflicts += d.conflicts;
+                self.cross_conflicts += d.cross_conflicts;
                 self.logical_reads += d.reads;
                 self.logical_writes += d.writes;
             }
@@ -903,6 +1125,33 @@ impl ShardedRuntime {
         self.conflicts
     }
 
+    /// Of [`ShardedRuntime::conflicts`], how many were lost to another
+    /// shard's claim (worker packing only — always 0 under leader
+    /// packing, whose serial scan has no claiming shard to attribute).
+    pub fn cross_conflicts(&self) -> u64 {
+        self.cross_conflicts
+    }
+
+    /// Static fraction of out-edges crossing shard boundaries under the
+    /// resolved map (0 for a single shard).
+    pub fn cross_edge_fraction(&self) -> f64 {
+        self.cross_edge_fraction
+    }
+
+    /// Locality ledger for `SolverReport` (see [`LocalityCounters`]).
+    pub fn locality(&self) -> LocalityCounters {
+        let (intra, cross) = match self.packer {
+            Packer::Worker => (self.conflicts - self.cross_conflicts, self.cross_conflicts),
+            Packer::Leader => (0, 0),
+        };
+        LocalityCounters {
+            intra_conflicts: intra,
+            cross_conflicts: cross,
+            cross_edge_fraction: self.cross_edge_fraction,
+            ..LocalityCounters::default()
+        }
+    }
+
     /// §II-D residual reads issued by applied activations so far.
     pub fn logical_reads(&self) -> u64 {
         self.logical_reads
@@ -919,6 +1168,12 @@ impl ShardedRuntime {
 
     pub fn shard_map(&self) -> ShardMap {
         self.map
+    }
+
+    /// The map resolved against this runtime's graph (the owner table
+    /// for the topology-aware maps).
+    pub fn resolved_map(&self) -> &ResolvedMap {
+        &self.rmap
     }
 
     pub fn packer(&self) -> Packer {
@@ -1091,9 +1346,10 @@ mod tests {
     }
 
     #[test]
-    fn block_and_modulo_maps_give_identical_results() {
-        // Ownership only routes; disjoint supports make the math
-        // placement-invariant.
+    fn all_leader_packed_maps_give_identical_results() {
+        // Ownership only routes under leader packing; disjoint supports
+        // make the math placement-invariant — for the table-backed maps
+        // exactly as for the closed forms.
         let g = generators::erdos_renyi(300, 0.01, 2006);
         let run = |map: ShardMap| {
             let mut rt = ShardedRuntime::new_with_map(g.clone(), 0.85, 4, map);
@@ -1102,10 +1358,12 @@ mod tests {
             (rt.estimate(), rt.residual(), rt.activations())
         };
         let (xm, rm, am) = run(ShardMap::Modulo);
-        let (xb, rb, ab) = run(ShardMap::Block);
-        assert_eq!(am, ab, "same rng stream must pack the same batches");
-        assert!(vector::dist_inf(&xm, &xb) < 1e-13);
-        assert!(vector::dist_inf(&rm, &rb) < 1e-13);
+        for map in [ShardMap::Block, ShardMap::Cluster, ShardMap::Scc] {
+            let (xb, rb, ab) = run(map);
+            assert_eq!(am, ab, "{map:?}: same rng stream must pack the same batches");
+            assert!(vector::dist_inf(&xm, &xb) < 1e-13, "{map:?} estimates diverged");
+            assert!(vector::dist_inf(&rm, &rb) < 1e-13, "{map:?} residuals diverged");
+        }
     }
 
     #[test]
@@ -1151,10 +1409,16 @@ mod tests {
                     let w = map.owner(k, n, shards);
                     assert!(w < shards, "{map:?} owner({k}, {n}, {shards}) = {w}");
                 }
-                assert_eq!(ShardMap::parse(map.key()), Some(map));
+                assert_eq!(ShardMap::parse(map.key()), Ok(map));
             }
         }
-        assert_eq!(ShardMap::parse("diagonal"), None);
+        assert_eq!(ShardMap::parse("cluster"), Ok(ShardMap::Cluster));
+        assert_eq!(ShardMap::parse("scc"), Ok(ShardMap::Scc));
+        let err = ShardMap::parse("diagonal").unwrap_err();
+        assert!(
+            err.contains("mod|block|cluster|scc") && err.contains("diagonal"),
+            "unknown maps must name the valid set: {err}"
+        );
         assert_eq!(Packer::parse("leader"), Some(Packer::Leader));
         assert_eq!(Packer::parse("worker"), Some(Packer::Worker));
         assert_eq!(Packer::parse("boss"), None);
@@ -1187,6 +1451,144 @@ mod tests {
                 assert!(seen.iter().all(|&s| s), "{map:?} ({n},{shards}) pages unowned");
             }
         }
+    }
+
+    #[test]
+    fn resolved_table_maps_satisfy_the_partition_contract() {
+        // The table-backed maps must honour the exact contract the
+        // closed forms do: every page owned exactly once, owned_page
+        // ascending, local_index inverting it.
+        let g = generators::sbm_two_block(40, 0.3, 0.05, 9);
+        for map in [ShardMap::Cluster, ShardMap::Scc] {
+            assert!(map.table_backed());
+            for shards in [1usize, 3] {
+                let rm = map.resolve(&g, shards);
+                assert_eq!(rm.shards(), shards);
+                let mut seen = vec![false; 40];
+                for w in 0..shards {
+                    let mut prev: Option<usize> = None;
+                    for i in 0..rm.owned_count(w) {
+                        let k = rm.owned_page(w, i);
+                        assert_eq!(rm.owner(k), w, "{map:?} owner mismatch");
+                        assert_eq!(rm.local_index(k), i, "{map:?} local_index mismatch");
+                        assert!(!seen[k], "{map:?} page {k} owned twice");
+                        seen[k] = true;
+                        if let Some(p) = prev {
+                            assert!(k > p, "{map:?} pages not ascending in shard {w}");
+                        }
+                        prev = Some(k);
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "{map:?} ({shards}) pages unowned");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "table-backed")]
+    fn table_backed_maps_have_no_closed_form() {
+        ShardMap::Cluster.owner(0, 10, 2);
+    }
+
+    #[test]
+    fn table_maps_converge_and_replay_under_worker_packing() {
+        // A table-backed candidate pool is still a per-shard uniform law
+        // over owned pages: the runtime must reach the exact fixed point
+        // and stay bit-deterministic across runs.
+        let g = generators::sbm_two_block(60, 0.3, 0.05, 2301);
+        let x_star = exact_pagerank(&g, 0.85);
+        let run = |map: ShardMap| {
+            let mut rt =
+                ShardedRuntime::new_with_packer(g.clone(), 0.85, 4, map, Packer::Worker);
+            let mut rng = Rng::seeded(33);
+            rt.run(30_000, 8, &mut rng);
+            (rt.estimate(), rt.activations(), rt.conflicts(), rt.cross_conflicts())
+        };
+        for map in [ShardMap::Cluster, ShardMap::Scc] {
+            let (xa, aa, ca, xca) = run(map);
+            let (xb, ab, cb, xcb) = run(map);
+            assert_eq!(xa, xb, "{map:?} must replay bit-identically");
+            assert_eq!((aa, ca, xca), (ab, cb, xcb), "{map:?} counters must replay");
+            assert!(xca <= ca, "{map:?}: cross conflicts are a subset");
+            let err = vector::dist_inf(&xa, &x_star);
+            assert!(err < 1e-6, "{map:?}: err={err}");
+        }
+    }
+
+    #[test]
+    fn worker_packing_splits_conflicts_by_claiming_shard() {
+        // Modulo on a dense graph interleaves neighbourhoods across
+        // shards, so some rejections must be lost to remote claims; the
+        // split partitions the total and the ledger mirrors it.
+        let g = generators::er_threshold(60, 0.5, 2404);
+        let mut rt =
+            ShardedRuntime::new_with_packer(g, 0.85, 4, ShardMap::Modulo, Packer::Worker);
+        let mut rng = Rng::seeded(34);
+        rt.run(100, 16, &mut rng);
+        assert!(rt.conflicts() > 0);
+        assert!(rt.cross_conflicts() > 0, "dense modulo runs must lose claims remotely");
+        assert!(rt.cross_conflicts() <= rt.conflicts());
+        let loc = rt.locality();
+        assert_eq!(loc.intra_conflicts + loc.cross_conflicts, rt.conflicts());
+        assert!(loc.cross_edge_fraction > 0.0);
+        assert!(loc.any());
+    }
+
+    #[test]
+    fn leader_packing_reports_the_gauge_but_no_split() {
+        // The serial mark scan cannot attribute a rejection to a shard:
+        // the split stays zero while the static gauge is still reported.
+        let g = generators::er_threshold(40, 0.5, 2405);
+        let mut rt = ShardedRuntime::new(g, 0.85, 2);
+        let mut rng = Rng::seeded(35);
+        rt.run(50, 8, &mut rng);
+        assert!(rt.conflicts() > 0);
+        let loc = rt.locality();
+        assert_eq!(loc.intra_conflicts, 0);
+        assert_eq!(loc.cross_conflicts, 0);
+        assert!(loc.cross_edge_fraction > 0.0);
+    }
+
+    #[test]
+    fn single_shard_runs_record_no_locality() {
+        // Gates the report fields: one shard means no boundary to cross,
+        // so the historical JSON shape must not change.
+        let g = generators::er_threshold(30, 0.5, 2406);
+        let mut rt =
+            ShardedRuntime::new_with_packer(g, 0.85, 1, ShardMap::Cluster, Packer::Worker);
+        let mut rng = Rng::seeded(36);
+        rt.run(50, 4, &mut rng);
+        assert!(!rt.locality().any());
+        assert_eq!(rt.cross_edge_fraction(), 0.0);
+    }
+
+    #[test]
+    fn locality_counters_absorb_sums_counts_and_maxes_the_gauge() {
+        let mut a = LocalityCounters {
+            intra_conflicts: 1,
+            cross_conflicts: 2,
+            cross_edge_fraction: 0.5,
+            cross_messages: 3,
+            cross_bytes: 48,
+            subscriber_shard_sum: 4,
+        };
+        let b = LocalityCounters {
+            intra_conflicts: 10,
+            cross_conflicts: 20,
+            cross_edge_fraction: 0.25,
+            cross_messages: 30,
+            cross_bytes: 480,
+            subscriber_shard_sum: 40,
+        };
+        a.absorb(&b);
+        assert_eq!(a.intra_conflicts, 11);
+        assert_eq!(a.cross_conflicts, 22);
+        assert_eq!(a.cross_edge_fraction, 0.5, "gauge maxes, not sums");
+        assert_eq!(a.cross_messages, 33);
+        assert_eq!(a.cross_bytes, 528);
+        assert_eq!(a.subscriber_shard_sum, 44);
+        assert!(a.any());
+        assert!(!LocalityCounters::default().any());
     }
 
     #[test]

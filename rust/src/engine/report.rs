@@ -46,6 +46,12 @@ pub struct SolverReport {
     /// crash-divergence gauge maxes; all-zero for every solver that ran
     /// on an ideal network (and omitted from the bench JSON then).
     pub faults: crate::network::FaultCounters,
+    /// Shard-locality ledger absorbed over rounds — the intra/cross
+    /// conflict split (sharded worker packing), cross-shard wire counts
+    /// (msgpass) and the resolved map's static cross-edge fraction;
+    /// all-zero for single-shard and non-sharded solvers (and omitted
+    /// from the bench JSON then).
+    pub locality: crate::coordinator::LocalityCounters,
     /// Wall-clock time for all rounds of this solver.
     pub wall: Duration,
 }
@@ -371,6 +377,37 @@ impl ScenarioReport {
                                 Json::Number(f.residual_divergence_at_crash),
                             );
                         }
+                        // Locality fields likewise appear only for runs
+                        // with a shard boundary to measure, keeping
+                        // single-shard and non-sharded summaries in
+                        // their historical shape.
+                        if r.locality.any() {
+                            let l = &r.locality;
+                            s.insert(
+                                "intra_conflicts".to_string(),
+                                Json::Number(l.intra_conflicts as f64),
+                            );
+                            s.insert(
+                                "cross_conflicts".to_string(),
+                                Json::Number(l.cross_conflicts as f64),
+                            );
+                            s.insert(
+                                "cross_edge_fraction".to_string(),
+                                Json::Number(l.cross_edge_fraction),
+                            );
+                            s.insert(
+                                "cross_messages".to_string(),
+                                Json::Number(l.cross_messages as f64),
+                            );
+                            s.insert(
+                                "cross_bytes".to_string(),
+                                Json::Number(l.cross_bytes as f64),
+                            );
+                            s.insert(
+                                "subscriber_shard_sum".to_string(),
+                                Json::Number(l.subscriber_shard_sum as f64),
+                            );
+                        }
                         Json::Object(s)
                     })
                     .collect();
@@ -514,6 +551,45 @@ mod tests {
         assert!(
             faulted.get("messages_dropped").and_then(Json::as_usize).expect("dropped") > 0,
             "a 30% drop plan must drop something"
+        );
+    }
+
+    #[test]
+    fn bench_json_gains_locality_fields_only_for_sharded_runs() {
+        let rep = Scenario::new("locality-report", GraphSpec::paper(12))
+            .with_solvers(vec![
+                SolverSpec::Mp,
+                SolverSpec::parse("sharded:2:8:mod:worker").expect("sharded"),
+                SolverSpec::parse("msgpass:2:4:cluster").expect("msgpass"),
+            ])
+            .with_steps(200)
+            .with_stride(100)
+            .with_rounds(1)
+            .with_threads(1)
+            .with_seed(11)
+            .run()
+            .expect("locality scenario runs");
+        let parsed = Json::parse(&rep.to_json().render()).expect("valid json");
+        let solvers = parsed.get("solvers").and_then(Json::as_array).expect("solvers");
+        assert_eq!(solvers.len(), 3);
+        assert!(
+            solvers[0].get("cross_conflicts").is_none(),
+            "mp keeps the historical summary shape"
+        );
+        for (i, fields) in [
+            (1, &["intra_conflicts", "cross_conflicts", "cross_edge_fraction"][..]),
+            (2, &["cross_messages", "cross_bytes", "subscriber_shard_sum"][..]),
+        ] {
+            for field in fields {
+                assert!(
+                    solvers[i].get(field).and_then(Json::as_f64).is_some(),
+                    "solver {i} missing {field}"
+                );
+            }
+        }
+        assert!(
+            solvers[2].get("cross_messages").and_then(Json::as_usize).expect("msgs") > 0,
+            "a 2-shard msgpass run must cross the wire"
         );
     }
 

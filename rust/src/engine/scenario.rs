@@ -325,6 +325,10 @@ impl Scenario {
             // Fault ledgers (msgpass backend only) absorbed across rounds
             // — counters sum, the divergence gauge maxes, both commute.
             let faults = std::sync::Mutex::new(crate::network::FaultCounters::default());
+            // Locality ledgers (sharded/msgpass backends only), same
+            // absorb discipline: counts sum, the static gauge maxes.
+            let locality =
+                std::sync::Mutex::new(crate::coordinator::LocalityCounters::default());
             let (avg, total_stats) =
                 run_rounds_stats(&spec.key(), self.rounds, base, threads, |round_rng| {
                     let mut seed_rng = round_rng;
@@ -365,6 +369,10 @@ impl Scenario {
                                 .lock()
                                 .expect("fault ledger lock")
                                 .absorb(&solver.fault_counters());
+                            locality
+                                .lock()
+                                .expect("locality ledger lock")
+                                .absorb(&solver.locality());
                             (tr.errors, tr.total_stats)
                         }
                     }
@@ -380,6 +388,7 @@ impl Scenario {
                 final_error,
                 conflicts: conflicts.load(std::sync::atomic::Ordering::Relaxed),
                 faults: faults.into_inner().expect("fault ledger lock"),
+                locality: locality.into_inner().expect("locality ledger lock"),
                 wall: t0.elapsed(),
             });
         }
@@ -752,9 +761,61 @@ mod tests {
         assert!(r.final_error < r.trajectory.mean[0], "no progress");
         assert!(r.conflicts > 0, "dense graphs must drop candidates");
         assert!(r.total_stats.activated > 0);
-        // Non-sharded solvers report zero conflicts.
+        // Leader packing reports no conflict split but the resolved
+        // map's static gauge still makes the ledger non-empty.
+        assert_eq!(r.locality.cross_conflicts, 0);
+        assert!(r.locality.cross_edge_fraction > 0.0);
+        assert!(r.locality.any());
+        // Non-sharded solvers report zero conflicts and no locality.
         let mp = tiny().run().expect("runs");
         assert_eq!(mp.solver_reports()[0].conflicts, 0);
+        assert!(!mp.solver_reports()[0].locality.any());
+    }
+
+    #[test]
+    fn worker_packed_scenario_splits_conflicts_by_shard() {
+        // Worker packing on a dense graph: the report's ledger must
+        // carry the intra/cross conflict split the claim words encode.
+        let report = Scenario::paper("sharded-worker-split", 24)
+            .with_solvers(vec![
+                SolverSpec::parse("sharded:4:16:mod:worker").expect("registry")
+            ])
+            .with_steps(800)
+            .with_stride(200)
+            .with_rounds(2)
+            .with_threads(1)
+            .with_seed(7)
+            .run()
+            .expect("runs");
+        let r = &report.solver_reports()[0];
+        assert!(r.conflicts > 0, "dense graphs must drop candidates");
+        assert_eq!(
+            r.locality.intra_conflicts + r.locality.cross_conflicts,
+            r.conflicts,
+            "the split must partition the total"
+        );
+        assert!(r.locality.cross_conflicts > 0, "mod map interleaves neighbours");
+    }
+
+    #[test]
+    fn cluster_map_scenario_converges_like_mod() {
+        // The topology-aware maps are drop-in: a cluster-mapped sharded
+        // race converges on the paper graph just like the closed-form
+        // maps (exactness pins live in tests/engine.rs).
+        let report = Scenario::paper("sharded-cluster", 20)
+            .with_solvers(vec![
+                SolverSpec::parse("sharded:2:8:cluster:worker").expect("registry")
+            ])
+            .with_steps(400)
+            .with_stride(100)
+            .with_rounds(2)
+            .with_threads(1)
+            .with_seed(9)
+            .run()
+            .expect("runs");
+        let r = &report.solver_reports()[0];
+        assert!(r.final_error < r.trajectory.mean[0], "no progress");
+        assert!(r.locality.any(), "multi-shard runs carry a locality ledger");
     }
 
     fn tiny_size_est() -> Scenario {

@@ -26,8 +26,8 @@ use crate::algo::{
 };
 use crate::coordinator::msgpass::DEFAULT_GOSSIP_PERIOD;
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, Mode, MsgpassConfig, MsgpassRuntime, Packer, RunReport,
-    SamplerKind, Sampling, ShardMap, ShardedRuntime,
+    Coordinator, CoordinatorConfig, LocalityCounters, Mode, MsgpassConfig, MsgpassRuntime, Packer,
+    RunReport, SamplerKind, Sampling, ShardMap, ShardedRuntime,
 };
 use crate::graph::Graph;
 use crate::linalg::select::DEFAULT_WEIGHT_FLOOR;
@@ -319,8 +319,8 @@ impl SolverSpec {
             "power" | "power-iteration" | "jacobi" => Ok(SolverSpec::PowerIteration),
             "dense" => Ok(SolverSpec::Dense),
             "sharded" | "sh" => {
-                let grammar =
-                    "sharded:<shards>[:<batch>[:<mod|block>[:<leader|worker>[:<uniform|residual>]]]]";
+                let grammar = "sharded:<shards>[:<batch>[:<mod|block|cluster|scc>\
+                               [:<leader|worker>[:<uniform|residual>]]]]";
                 let shards = match parts.get(1) {
                     None => 4,
                     Some(v) => v.parse().map_err(|_| arity_err(grammar))?,
@@ -337,8 +337,9 @@ impl SolverSpec {
                 }
                 let map = match parts.get(3) {
                     None => ShardMap::Modulo,
-                    Some(m) => ShardMap::parse(m)
-                        .ok_or_else(|| format!("bad shard map {m:?} (mod|block)"))?,
+                    Some(m) => {
+                        ShardMap::parse(m).map_err(|e| format!("solver spec {s:?}: {e}"))?
+                    }
                 };
                 let packer = match parts.get(4) {
                     None => Packer::Leader,
@@ -366,8 +367,9 @@ impl SolverSpec {
                 Ok(SolverSpec::Sharded { shards, batch, map, packer, sampling })
             }
             "msgpass" | "msg" => {
-                let grammar = "msgpass:<shards>[:<batch>[:<mod|block>[:<gossip-period>]]]\
-                               [:drop<p>][:crash<shard>@<at>+<down-for>][:rel|raw]";
+                let grammar =
+                    "msgpass:<shards>[:<batch>[:<mod|block|cluster|scc>[:<gossip-period>]]]\
+                     [:drop<p>][:crash<shard>@<at>+<down-for>][:rel|raw]";
                 // Positional prefix runs until the first tagged fault/
                 // reliability segment; everything after must be tagged.
                 let is_tagged = |p: &str| {
@@ -403,8 +405,9 @@ impl SolverSpec {
                 }
                 let map = match pos.get(2) {
                     None => ShardMap::Modulo,
-                    Some(m) => ShardMap::parse(m)
-                        .ok_or_else(|| format!("bad shard map {m:?} (mod|block)"))?,
+                    Some(m) => {
+                        ShardMap::parse(m).map_err(|e| format!("solver spec {s:?}: {e}"))?
+                    }
                 };
                 let gossip = match pos.get(3) {
                     None => DEFAULT_GOSSIP_PERIOD,
@@ -527,10 +530,26 @@ impl SolverSpec {
                 packer: Packer::Worker,
                 sampling: Sampling::Residual,
             },
+            SolverSpec::Sharded {
+                shards: 2,
+                batch: 8,
+                map: ShardMap::Cluster,
+                packer: Packer::Worker,
+                sampling: Sampling::Uniform,
+            },
             SolverSpec::Msgpass {
                 shards: 2,
                 batch: 4,
                 map: ShardMap::Modulo,
+                gossip: DEFAULT_GOSSIP_PERIOD,
+                drop: 0.0,
+                crash: None,
+                reliable: false,
+            },
+            SolverSpec::Msgpass {
+                shards: 2,
+                batch: 4,
+                map: ShardMap::Scc,
                 gossip: DEFAULT_GOSSIP_PERIOD,
                 drop: 0.0,
                 crash: None,
@@ -682,6 +701,10 @@ impl PageRankSolver for MsgpassSolver {
         self.rt.fault_counters()
     }
 
+    fn locality(&self) -> LocalityCounters {
+        self.rt.locality()
+    }
+
     fn name(&self) -> &'static str {
         "msgpass runtime (per-shard event loops)"
     }
@@ -774,6 +797,10 @@ impl PageRankSolver for ShardedSolver {
     /// the runtime's packer rejected (thinned-uniform accounting).
     fn conflicts(&self) -> u64 {
         self.rt.conflicts()
+    }
+
+    fn locality(&self) -> LocalityCounters {
+        self.rt.locality()
     }
 
     fn name(&self) -> &'static str {
@@ -1150,6 +1177,64 @@ mod tests {
         assert!(SolverSpec::parse("msgpass:2:4:mod:crash9@64+32").is_err(), "shard 9 of 2");
         assert!(SolverSpec::parse("msgpass:2:4:mod:rel:extra").is_err());
         assert!(SolverSpec::parse("msgpass:2:4:mod:drop0.1:8").is_err(), "gossip after a tag");
+    }
+
+    #[test]
+    fn topology_map_specs_parse_and_round_trip() {
+        // The cluster/scc map segment rides the existing grammar slot —
+        // historical mod/block keys are untouched (round-trip pinned in
+        // every_registry_key_round_trips) and the new maps canonicalize
+        // to themselves on both backends.
+        assert_eq!(
+            SolverSpec::parse("sharded:4:16:cluster:worker").expect("ok"),
+            SolverSpec::Sharded {
+                shards: 4,
+                batch: 16,
+                map: ShardMap::Cluster,
+                packer: Packer::Worker,
+                sampling: Sampling::Uniform,
+            }
+        );
+        assert_eq!(
+            SolverSpec::parse("sharded:4:16:cluster:worker").expect("ok").key(),
+            "sharded:4:16:cluster:worker"
+        );
+        assert_eq!(
+            SolverSpec::parse("sharded:2:8:scc").expect("ok").key(),
+            "sharded:2:8:scc:leader"
+        );
+        assert_eq!(
+            SolverSpec::parse("msgpass:2:4:cluster").expect("ok"),
+            SolverSpec::Msgpass {
+                shards: 2,
+                batch: 4,
+                map: ShardMap::Cluster,
+                gossip: DEFAULT_GOSSIP_PERIOD,
+                drop: 0.0,
+                crash: None,
+                reliable: false,
+            }
+        );
+        assert_eq!(
+            SolverSpec::parse("msgpass:2:4:scc:16:rel").expect("ok").key(),
+            "msgpass:2:4:scc:16:rel"
+        );
+        // Historical canonical keys stay byte-identical — the map and
+        // packer segments print exactly as before the cluster/scc maps
+        // existed.
+        for key in ["sharded:2:8:mod:leader", "sharded:8:64:block:worker", "msgpass:2:4:block:16"]
+        {
+            assert_eq!(SolverSpec::parse(key).expect("ok").key(), key);
+        }
+    }
+
+    #[test]
+    fn bad_shard_map_error_names_the_valid_set() {
+        let err = SolverSpec::parse("sharded:2:8:diagonal").expect_err("bad map");
+        assert!(err.contains("diagonal"), "names the offender: {err}");
+        assert!(err.contains("mod|block|cluster|scc"), "names the valid set: {err}");
+        let err = SolverSpec::parse("msgpass:2:4:diagonal").expect_err("bad map");
+        assert!(err.contains("mod|block|cluster|scc"), "names the valid set: {err}");
     }
 
     #[test]

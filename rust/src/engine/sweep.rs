@@ -19,9 +19,9 @@
 //! ```
 //!
 //! Axes are applied to the *relevant* specs and are experiment-aware:
-//! `shards`/`batch` rewrite the sharded and msgpass (and, for `batch`,
-//! parallel-mp) solver entries, `packer`/`sampling` rewrite the sharded
-//! entries, `gossip` rewrites msgpass entries, `latency` rewrites
+//! `shards`/`batch`/`map` rewrite the sharded and msgpass (and, for
+//! `batch`, parallel-mp) solver entries, `packer`/`sampling` rewrite the
+//! sharded entries, `gossip` rewrites msgpass entries, `latency` rewrites
 //! coordinator entries,
 //! `graph` swaps the whole graph spec (a registry string or object, so a
 //! sweep can range over graph *families*), and naming an axis with no
@@ -54,8 +54,8 @@ pub struct Sweep {
 
 /// The grid axes [`Sweep`] understands.
 pub const SWEEP_AXES: &[&str] = &[
-    "alpha", "batch", "crash", "drop", "gossip", "graph", "latency", "n", "packer", "rounds",
-    "sampling", "seed", "shards", "steps", "stride",
+    "alpha", "batch", "crash", "drop", "gossip", "graph", "latency", "map", "n", "packer",
+    "rounds", "sampling", "seed", "shards", "steps", "stride",
 ];
 
 fn render_param(v: &Json) -> String {
@@ -314,6 +314,37 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
                 );
             }
         }
+        "map" => {
+            // Races shard maps (mod/block/cluster/scc) across a grid —
+            // the locality experiment's axis. Rewrites both sharded and
+            // msgpass entries so one cell compares like with like.
+            let spec = value
+                .as_str()
+                .ok_or_else(|| format!("axis \"map\": {} is not a string", value.render()))?;
+            let map = crate::coordinator::ShardMap::parse(spec)
+                .map_err(|e| format!("axis \"map\": {e}"))?;
+            let mut hit = false;
+            for s in pagerank_solvers(scenario, axis)? {
+                match s {
+                    SolverSpec::Sharded { map: m, .. } => {
+                        *m = map;
+                        hit = true;
+                    }
+                    SolverSpec::Msgpass { map: m, .. } => {
+                        *m = map;
+                        hit = true;
+                    }
+                    _ => {}
+                }
+            }
+            if !hit {
+                return Err(
+                    "axis \"map\" needs a sharded or msgpass solver in the scenario \
+                     (e.g. \"sharded:2:8:cluster\", \"msgpass:2:8:scc\")"
+                        .into(),
+                );
+            }
+        }
         "packer" => {
             let spec = value
                 .as_str()
@@ -433,7 +464,7 @@ impl Sweep {
     /// Expand the grid: every cell as `(params, ready-to-run scenario)`.
     /// Axis application is validated here, so errors surface before any
     /// cell runs.
-    pub fn cells(&self) -> Result<Vec<(Vec<(String, Json)>, Scenario)>, String> {
+    pub fn cells(&self) -> Result<Vec<ExpandedCell>, String> {
         let total = self.cell_count();
         let mut cells = Vec::with_capacity(total);
         // Mixed-radix counter over the axes (first axis slowest, so cells
@@ -494,6 +525,10 @@ impl Sweep {
         })
     }
 }
+
+/// One expanded-but-unrun grid cell: the axis assignment (in axis
+/// order) plus the fully-formed scenario it produced.
+pub type ExpandedCell = (Vec<(String, Json)>, Scenario);
 
 /// One grid cell's outcome.
 #[derive(Debug, Clone)]
@@ -714,6 +749,43 @@ mod tests {
         }"#;
         let err = Sweep::from_json_str(se).expect("parses").cells().expect_err("must fail");
         assert!(err.contains("sampling"), "{err}");
+    }
+
+    #[test]
+    fn map_axis_rewrites_sharded_and_msgpass_entries() {
+        let text = r#"{
+          "name": "map-grid",
+          "scenario": {
+            "graph": "paper:12", "solvers": ["sharded:2:4:mod:worker", "msgpass:2:4:mod"],
+            "steps": 100, "stride": 50, "rounds": 1, "threads": 1, "seed": 3
+          },
+          "grid": {"map": ["mod", "cluster", "scc"]}
+        }"#;
+        let sweep = Sweep::from_json_str(text).expect("parses");
+        let cells = sweep.cells().expect("expands");
+        assert_eq!(cells.len(), 3);
+        let want = [ShardMap::Modulo, ShardMap::Cluster, ShardMap::Scc];
+        for (i, want) in want.iter().enumerate() {
+            // Both backend entries move together, so a cell compares
+            // like with like.
+            assert!(cells[i].1.solvers().iter().all(|s| matches!(
+                s,
+                SolverSpec::Sharded { map, .. } | SolverSpec::Msgpass { map, .. }
+                    if map == want
+            )));
+        }
+        assert_eq!(cells[1].1.name, "map-grid[map=cluster]");
+        // Bad values fail up front, and the error names the valid set.
+        let bad = Sweep::from_json_str(&base_json(r#"{"map": ["diagonal"]}"#)).expect("parses");
+        let err = bad.cells().expect_err("must fail");
+        assert!(err.contains("mod|block|cluster|scc"), "{err}");
+        // And the axis is loud without a sharded or msgpass solver.
+        let no_sharded = r#"{
+          "scenario": {"graph": "paper:10", "solvers": ["mp"]},
+          "grid": {"map": ["cluster"]}
+        }"#;
+        let sweep = Sweep::from_json_str(no_sharded).expect("parses");
+        assert!(sweep.cells().expect_err("must fail").contains("sharded"));
     }
 
     #[test]
@@ -952,6 +1024,7 @@ mod tests {
             (r#"{"shards": [2]}"#, "shards"),
             (r#"{"batch": [4]}"#, "batch"),
             (r#"{"packer": ["worker"]}"#, "packer"),
+            (r#"{"map": ["cluster"]}"#, "map"),
             (r#"{"gossip": [4]}"#, "gossip"),
             (r#"{"latency": ["const:0.1"]}"#, "latency"),
             (r#"{"alpha": [0.5]}"#, "alpha"),

@@ -20,11 +20,15 @@
 //! * [`stats`] — degree summaries.
 //! * [`scc`] — Tarjan strongly-connected components (Algorithm 2 assumes
 //!   strong connectivity).
+//! * [`partition`] — topology-aware page→shard owner tables (seeded
+//!   label propagation and SCC condensation, balance-bounded packing)
+//!   behind the `cluster`/`scc` shard maps.
 
 pub mod builder;
 pub mod csr;
 pub mod generators;
 pub mod io;
+pub mod partition;
 pub mod scc;
 pub mod stats;
 

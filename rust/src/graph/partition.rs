@@ -1,0 +1,428 @@
+//! Topology-aware page→shard partitions (ROADMAP "topology-aware
+//! sharding").
+//!
+//! Suzuki–Ishii get their distributed-PageRank speedup from web
+//! *clustering*: most hyperlinks are intra-cluster, so placing whole
+//! clusters on one shard makes most neighbourhood claims (sharded
+//! runtime) and most `ResidualUpdate` subscriptions (msgpass backend)
+//! local. This module builds the owner tables behind the `cluster` and
+//! `scc` shard maps:
+//!
+//! * [`label_propagation`] — deterministic seeded label propagation over
+//!   the out-CSR only (no in-links: the sharded runtime must resolve on
+//!   graphs loaded `without_in_links`).
+//! * [`scc_labels`] — condensation components from the existing
+//!   iterative [`tarjan_scc`].
+//! * [`pack_labels`] — balance-bounded largest-first greedy bin-packing
+//!   of clusters onto shards: locality comes from keeping clusters
+//!   whole, while a hard [`BALANCE_SLACK`] capacity cap keeps one giant
+//!   cluster from starving the other workers (clusters above the cap
+//!   are split — balance wins over locality at the margin).
+//! * [`OwnerTable`] — the Arc-shared table form implementing the same
+//!   `owner` / `owned_count` / `owned_page` / `local_index` contract as
+//!   the closed-form `mod`/`block` maps, with pages ascending within
+//!   each shard so `local_index` stays monotone in page id (the
+//!   residual samplers rely on a deterministic ascending update order).
+//!
+//! Partitions are resolved with a *fixed* internal seed
+//! ([`PARTITION_SEED`]), deliberately not the scenario seed: both
+//! runtimes must resolve the identical partition for the same
+//! `(graph, shards)` so sharded-vs-msgpass locality cells are
+//! comparable and the `sharded:1:1:cluster:worker ≡ mp` equivalence pin
+//! holds for every run seed.
+
+use std::sync::Arc;
+
+use crate::graph::scc::tarjan_scc;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Fixed internal seed for label propagation (see module docs for why
+/// this is not the scenario seed).
+pub const PARTITION_SEED: u64 = 0x7061_7274; // "part"
+
+/// Maximum label-propagation sweeps before accepting the labels as-is
+/// (the sweep loop stops earlier as soon as a pass changes nothing).
+pub const MAX_SWEEPS: usize = 10;
+
+/// Per-shard capacity slack over the perfectly balanced `n/shards`.
+pub const BALANCE_SLACK: f64 = 1.25;
+
+/// Per-shard page capacity under the balance bound:
+/// `max(⌈BALANCE_SLACK·n/shards⌉, ⌈n/shards⌉)`. The second term makes
+/// the packing always feasible (`shards · capacity ≥ n`).
+pub fn shard_capacity(n: usize, shards: usize) -> usize {
+    assert!(shards > 0, "capacity needs at least one shard");
+    let slack = (BALANCE_SLACK * n as f64 / shards as f64).ceil() as usize;
+    slack.max(n.div_ceil(shards))
+}
+
+/// Table-backed page→shard map: a shared owner array plus the per-shard
+/// owned-page index. Cheap to clone (all Arcs) so every worker thread
+/// holds its own handle.
+#[derive(Debug, Clone)]
+pub struct OwnerTable {
+    shards: usize,
+    /// `owner[k]` = shard that owns page `k`.
+    owner: Arc<[u32]>,
+    /// Pages grouped by shard, ascending within each shard.
+    pages: Arc<[u32]>,
+    /// `pages[starts[w]..starts[w+1]]` = shard `w`'s pages (len shards+1).
+    starts: Arc<[usize]>,
+    /// `local[k]` = index of `k` within its shard's page slice.
+    local: Arc<[u32]>,
+}
+
+impl OwnerTable {
+    /// Build the grouped index from a raw owner vector. Every entry must
+    /// be `< shards`; pages stay ascending within each shard.
+    pub fn from_owner_vec(owner: Vec<u32>, shards: usize) -> OwnerTable {
+        assert!(shards > 0, "owner table needs at least one shard");
+        let n = owner.len();
+        let mut starts = vec![0usize; shards + 1];
+        for &w in &owner {
+            assert!((w as usize) < shards, "owner {w} out of range (shards = {shards})");
+            starts[w as usize + 1] += 1;
+        }
+        for w in 0..shards {
+            starts[w + 1] += starts[w];
+        }
+        let mut cursor = starts.clone();
+        let mut pages = vec![0u32; n];
+        let mut local = vec![0u32; n];
+        for (k, &w) in owner.iter().enumerate() {
+            let at = cursor[w as usize];
+            pages[at] = k as u32;
+            local[k] = (at - starts[w as usize]) as u32;
+            cursor[w as usize] += 1;
+        }
+        OwnerTable {
+            shards,
+            owner: owner.into(),
+            pages: pages.into(),
+            starts: starts.into(),
+            local: local.into(),
+        }
+    }
+
+    /// Number of pages in the table.
+    pub fn n(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Number of shards the table partitions onto.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard that owns page `k`.
+    #[inline]
+    pub fn owner(&self, k: usize) -> usize {
+        self.owner[k] as usize
+    }
+
+    /// Number of pages shard `w` owns.
+    #[inline]
+    pub fn owned_count(&self, w: usize) -> usize {
+        self.starts[w + 1] - self.starts[w]
+    }
+
+    /// The `i`-th page owned by shard `w` (ascending in `i`).
+    #[inline]
+    pub fn owned_page(&self, w: usize, i: usize) -> usize {
+        self.pages[self.starts[w] + i] as usize
+    }
+
+    /// Index of page `k` within its owner's page slice
+    /// (`owned_page(owner(k), local_index(k)) == k`).
+    #[inline]
+    pub fn local_index(&self, k: usize) -> usize {
+        self.local[k] as usize
+    }
+}
+
+/// Deterministic seeded label propagation over the out-CSR.
+///
+/// Labels start as page ids; each sweep visits pages in a freshly
+/// shuffled order and adopts the most frequent label among the closed
+/// out-neighbourhood `{k} ∪ out(k)` (ties break to the smallest label).
+/// Updates are asynchronous (within-sweep), which is what lets labels
+/// flood through a cluster in a handful of sweeps. Single-threaded on
+/// purpose: determinism is the contract, and resolution is a one-off
+/// cost per `(graph, shards)`.
+pub fn label_propagation(g: &Graph, seed: u64) -> Vec<u32> {
+    let n = g.n();
+    let mut labels: Vec<u32> = (0..n as u32).collect();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let mut rng = Rng::seeded(seed);
+    let mut neigh: Vec<u32> = Vec::new();
+    for _ in 0..MAX_SWEEPS {
+        rng.shuffle(&mut order);
+        let mut changed = 0usize;
+        for &ku in &order {
+            let k = ku as usize;
+            neigh.clear();
+            neigh.push(labels[k]);
+            for &j in g.out(k) {
+                neigh.push(labels[j as usize]);
+            }
+            neigh.sort_unstable();
+            // Longest run wins; on equal counts the earlier (smaller)
+            // label is kept.
+            let mut best = neigh[0];
+            let mut best_count = 0usize;
+            let mut at = 0usize;
+            while at < neigh.len() {
+                let label = neigh[at];
+                let mut end = at + 1;
+                while end < neigh.len() && neigh[end] == label {
+                    end += 1;
+                }
+                if end - at > best_count {
+                    best = label;
+                    best_count = end - at;
+                }
+                at = end;
+            }
+            if labels[k] != best {
+                labels[k] = best;
+                changed += 1;
+            }
+        }
+        if changed == 0 {
+            break;
+        }
+    }
+    labels
+}
+
+/// Condensation-component labels from iterative Tarjan (out-CSR only).
+pub fn scc_labels(g: &Graph) -> Vec<u32> {
+    tarjan_scc(g).into_iter().map(|c| c as u32).collect()
+}
+
+/// Pack cluster labels onto shards: balance-bounded largest-first
+/// greedy. Clusters (pages sharing a label) are placed whole where
+/// possible — largest first, each into the shard with the most free
+/// capacity (ties → lowest shard id) — and split across shards only
+/// when they exceed the [`shard_capacity`] cap, so no shard ever owns
+/// more than the cap.
+pub fn pack_labels(labels: &[u32], shards: usize) -> Vec<u32> {
+    assert!(shards > 0, "packing needs at least one shard");
+    let n = labels.len();
+    // Group pages by label; within a group pages stay ascending.
+    let mut by_label: Vec<u32> = (0..n as u32).collect();
+    by_label.sort_unstable_by_key(|&k| (labels[k as usize], k));
+    let mut clusters: Vec<(usize, usize)> = Vec::new(); // (start, len) runs
+    let mut at = 0usize;
+    while at < n {
+        let label = labels[by_label[at] as usize];
+        let mut end = at + 1;
+        while end < n && labels[by_label[end] as usize] == label {
+            end += 1;
+        }
+        clusters.push((at, end - at));
+        at = end;
+    }
+    // Largest first; equal sizes break on the smallest member page so
+    // the order (and thus the packing) is fully deterministic.
+    clusters.sort_unstable_by_key(|&(start, len)| (std::cmp::Reverse(len), by_label[start]));
+
+    let cap = shard_capacity(n, shards);
+    let mut free = vec![cap; shards];
+    let mut owner = vec![0u32; n];
+    for &(start, len) in &clusters {
+        let mut placed = 0usize;
+        while placed < len {
+            let w = (0..shards)
+                .max_by_key(|&w| (free[w], std::cmp::Reverse(w)))
+                .expect("at least one shard");
+            debug_assert!(free[w] > 0, "packing infeasible: total capacity < n");
+            let take = (len - placed).min(free[w]);
+            for &k in &by_label[start + placed..start + placed + take] {
+                owner[k as usize] = w as u32;
+            }
+            free[w] -= take;
+            placed += take;
+        }
+    }
+    owner
+}
+
+/// The `cluster` map: seeded label propagation + balance-bounded
+/// packing, as an [`OwnerTable`].
+pub fn cluster_partition(g: &Graph, shards: usize) -> OwnerTable {
+    let labels = label_propagation(g, PARTITION_SEED);
+    OwnerTable::from_owner_vec(pack_labels(&labels, shards), shards)
+}
+
+/// The `scc` map: condensation components + balance-bounded packing.
+pub fn scc_partition(g: &Graph, shards: usize) -> OwnerTable {
+    let labels = scc_labels(g);
+    OwnerTable::from_owner_vec(pack_labels(&labels, shards), shards)
+}
+
+/// Fraction of out-edges `(k → j)` whose endpoints live on different
+/// shards under `owner` — the locality gauge both runtimes report.
+/// `0.0` on edge-free graphs.
+pub fn cross_edge_fraction<F: Fn(usize) -> usize>(g: &Graph, owner: F) -> f64 {
+    let mut total = 0u64;
+    let mut cross = 0u64;
+    for k in 0..g.n() {
+        let wk = owner(k);
+        for &j in g.out(k) {
+            total += 1;
+            if owner(j as usize) != wk {
+                cross += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        cross as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn check_contract(t: &OwnerTable, n: usize, shards: usize) {
+        assert_eq!(t.n(), n);
+        assert_eq!(t.shards(), shards);
+        let mut seen = vec![false; n];
+        let mut total = 0usize;
+        for w in 0..shards {
+            let owned = t.owned_count(w);
+            total += owned;
+            let mut prev: Option<usize> = None;
+            for i in 0..owned {
+                let k = t.owned_page(w, i);
+                assert!(k < n);
+                assert!(!seen[k], "page {k} owned twice");
+                seen[k] = true;
+                assert_eq!(t.owner(k), w);
+                assert_eq!(t.local_index(k), i);
+                if let Some(p) = prev {
+                    assert!(k > p, "pages not ascending within shard {w}");
+                }
+                prev = Some(k);
+            }
+        }
+        assert_eq!(total, n, "pages not partitioned exactly once");
+    }
+
+    #[test]
+    fn owner_table_contract_on_every_family_and_shard_count() {
+        let graphs = [
+            generators::sbm_two_block(60, 0.3, 0.02, 7),
+            generators::chain(23),
+            generators::erdos_renyi(40, 0.1, 11),
+        ];
+        for g in &graphs {
+            for shards in [1usize, 2, 4, 7] {
+                check_contract(&cluster_partition(g, shards), g.n(), shards);
+                check_contract(&scc_partition(g, shards), g.n(), shards);
+            }
+        }
+    }
+
+    #[test]
+    fn balance_bound_holds_even_with_one_giant_cluster() {
+        // ring(n) is one SCC and label propagation coalesces chains —
+        // the single giant cluster must be split to respect the cap.
+        let g = generators::ring(30);
+        for shards in [2usize, 3, 4] {
+            let cap = shard_capacity(30, shards);
+            for t in [cluster_partition(&g, shards), scc_partition(&g, shards)] {
+                for w in 0..shards {
+                    assert!(
+                        t.owned_count(w) <= cap,
+                        "shard {w} owns {} > cap {cap}",
+                        t.owned_count(w)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn label_propagation_is_deterministic_for_a_fixed_seed() {
+        let g = generators::sbm_two_block(50, 0.3, 0.02, 3);
+        let a = label_propagation(&g, PARTITION_SEED);
+        let b = label_propagation(&g, PARTITION_SEED);
+        assert_eq!(a, b);
+        let c = label_propagation(&g, PARTITION_SEED + 1);
+        assert_eq!(a.len(), c.len()); // different seed may differ, same shape
+    }
+
+    #[test]
+    fn single_shard_tables_are_the_identity() {
+        let g = generators::sbm_two_block(20, 0.3, 0.05, 5);
+        for t in [cluster_partition(&g, 1), scc_partition(&g, 1)] {
+            assert_eq!(t.owned_count(0), 20);
+            for k in 0..20 {
+                assert_eq!(t.owner(k), 0);
+                assert_eq!(t.owned_page(0, k), k);
+                assert_eq!(t.local_index(k), k);
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_map_beats_modulo_on_a_clustered_graph() {
+        // Two dense blocks with sparse cross links: modulo interleaves
+        // the blocks across shards (~half the edges cross), the cluster
+        // map keeps each block nearly whole.
+        let g = generators::sbm_two_block(80, 0.3, 0.02, 13);
+        let shards = 2usize;
+        let t = cluster_partition(&g, shards);
+        let cluster_frac = cross_edge_fraction(&g, |k| t.owner(k));
+        let mod_frac = cross_edge_fraction(&g, |k| k % shards);
+        assert!(
+            cluster_frac < mod_frac,
+            "cluster {cluster_frac} not below modulo {mod_frac}"
+        );
+    }
+
+    #[test]
+    fn scc_map_keeps_small_components_whole() {
+        // Two 3-rings joined by a one-way bridge: two SCCs, each should
+        // land whole on its own shard (sizes fit the cap).
+        let mut b = crate::graph::GraphBuilder::new(6);
+        for i in 0..3 {
+            b.add_edge(i, (i + 1) % 3);
+            b.add_edge(3 + i, 3 + (i + 1) % 3);
+        }
+        b.add_edge(0, 3);
+        let g = b.build().expect("builds");
+        let t = scc_partition(&g, 2);
+        assert_eq!(t.owner(0), t.owner(1));
+        assert_eq!(t.owner(1), t.owner(2));
+        assert_eq!(t.owner(3), t.owner(4));
+        assert_eq!(t.owner(4), t.owner(5));
+        assert_ne!(t.owner(0), t.owner(3));
+    }
+
+    #[test]
+    fn capacity_is_always_feasible() {
+        for n in [0usize, 1, 5, 100, 101] {
+            for shards in [1usize, 2, 3, 8] {
+                assert!(shards * shard_capacity(n, shards) >= n);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_edge_fraction_edge_cases() {
+        let g = crate::graph::GraphBuilder::new(0).build().expect("builds");
+        assert_eq!(cross_edge_fraction(&g, |_| 0), 0.0);
+        let ring = generators::ring(4);
+        // Everything on one shard: no cross edges.
+        assert_eq!(cross_edge_fraction(&ring, |_| 0), 0.0);
+        // Alternating owners on a ring: every edge crosses.
+        assert_eq!(cross_edge_fraction(&ring, |k| k % 2), 1.0);
+    }
+}

@@ -146,8 +146,8 @@ fn cmd_list_solvers(_args: &Args) -> Result<(), String> {
     }
     println!(
         "\nparameterized forms: mp:residual[:<floor>], parallel-mp:<batch>, \
-         sharded:<shards>[:<batch>[:<mod|block>[:<leader|worker>[:<uniform|residual>]]]], \
-         msgpass:<shards>[:<batch>[:<mod|block>[:<gossip-period>]]]\
+         sharded:<shards>[:<batch>[:<mod|block|cluster|scc>[:<leader|worker>[:<uniform|residual>]]]], \
+         msgpass:<shards>[:<batch>[:<mod|block|cluster|scc>[:<gossip-period>]]]\
          [:drop<p>][:crash<shard>@<at>+<down-for>][:rel|raw], \
          coordinator:<sequential|async>:<uniform|clocks|weighted>:<zero|const:L|uniform:lo:hi|exp:mean>"
     );

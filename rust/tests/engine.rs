@@ -287,6 +287,72 @@ fn one_shard_msgpass_scenario_matches_matrix_mp() {
 }
 
 #[test]
+fn one_shard_table_backed_maps_match_matrix_mp() {
+    // Equivalence anchor for the table-backed maps: at shards=1 every
+    // map (closed-form or partitioned) owns all pages in ascending
+    // order, so cluster/scc-mapped runs must replay `mp` exactly —
+    // a partition changes where pages live, never the arithmetic.
+    let report = small(
+        "table-maps-vs-mp",
+        vec![
+            SolverSpec::Mp,
+            SolverSpec::parse("sharded:1:1:cluster:worker").expect("registry"),
+            SolverSpec::parse("sharded:1:1:scc:leader").expect("registry"),
+            SolverSpec::parse("msgpass:1:1:cluster").expect("registry"),
+        ],
+    )
+    .run()
+    .expect("runs");
+    let mp = report.get("mp").expect("mp ran");
+    for key in [
+        "sharded:1:1:cluster:worker",
+        "sharded:1:1:scc:leader",
+        "msgpass:1:1:cluster",
+    ] {
+        let r = report.get(key).expect("table-backed run");
+        assert_eq!(
+            mp.total_stats, r.total_stats,
+            "{key}: identical activation sequences must cost the same"
+        );
+        for (a, b) in mp.trajectory.mean.iter().zip(&r.trajectory.mean) {
+            assert!(
+                (a - b).abs() <= 1e-9 * a.abs() + 1e-30,
+                "{key}: trajectories diverged: {a} vs {b}"
+            );
+        }
+        assert!(
+            !r.locality.any(),
+            "{key}: one shard has no boundary to cross"
+        );
+    }
+}
+
+#[test]
+fn every_shard_map_reaches_the_exact_fixed_point() {
+    // ER (homogeneous), BA (hub-heavy), chain (multi-SCC with a genuine
+    // sink): all four shard maps must converge to the same
+    // exact_pagerank fixed point — a partition can cost locality, never
+    // correctness.
+    for (family, g, steps) in [
+        ("er", generators::erdos_renyi(60, 0.1, 51), 25_000usize),
+        ("ba", generators::barabasi_albert(60, 4, 52), 25_000),
+        ("chain", generators::chain(30), 40_000),
+    ] {
+        let x_star = exact_pagerank(&g, 0.85);
+        for map in [ShardMap::Modulo, ShardMap::Block, ShardMap::Cluster, ShardMap::Scc] {
+            let mut sh =
+                ShardedSolver::new(&g, 0.85, 3, 8, map, Packer::Worker, Sampling::Uniform);
+            let mut rng = Rng::seeded(53);
+            for _ in 0..steps {
+                sh.step(&mut rng);
+            }
+            let err = sh.error_sq_vs(&x_star);
+            assert!(err < 1e-10, "{family}/{map:?}: ‖x-x*‖² = {err}");
+        }
+    }
+}
+
+#[test]
 fn one_shard_residual_sharded_matches_matrix_residual_mp() {
     // The residual-sampling equivalence anchor, pinned for BOTH packers:
     // at shards=1 batch=1, the global and per-shard weight trees are the

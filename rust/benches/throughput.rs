@@ -34,6 +34,13 @@
 //!   bytes-on-wire and the fault ledger into `BENCH_faults.json` (the
 //!   reliable protocol's overhead vs the raw wire's honest stall).
 //!
+//! * **partitions**: partition tolerance — raw vs reliable msgpass
+//!   across an asymmetric link window, a healing shard bipartition and
+//!   two overlapping crash windows, each × drop ∈ {0, 0.05}, recording
+//!   the fault ledger plus the divergence gauges sampled at partition
+//!   onset and heal into `BENCH_partitions.json` (reliable must drain
+//!   to convergence with zero abandoned frames after every heal).
+//!
 //! * **locality**: the shard-map race — mod/block/cluster/scc on
 //!   clustered (SBM), hub-heavy (webgraph) and homogeneous (ER)
 //!   families, sharded worker cells timing the intra/cross conflict
@@ -48,8 +55,9 @@
 //! section, `THROUGHPUT_ONLY=network-sweep` only the msgpass race,
 //! `THROUGHPUT_ONLY=webgraph` only the corpus pipeline,
 //! `THROUGHPUT_ONLY=faults` only the degradation curve,
+//! `THROUGHPUT_ONLY=partitions` only the partition-tolerance race,
 //! `THROUGHPUT_ONLY=locality` only the shard-map race (CI runs all
-//! five on every push to keep the `bench-json` artifact fed).
+//! six on every push to keep the `bench-json` artifact fed).
 
 use std::collections::BTreeMap;
 
@@ -59,7 +67,7 @@ use pagerank_mp::coordinator::{MsgpassConfig, MsgpassRuntime, Packer, Sampling, 
 use pagerank_mp::engine::{CoordinatorSolver, ShardedSolver, SolverSpec};
 use pagerank_mp::graph::{generators, io as graph_io, DanglingPolicy, LoadOptions};
 use pagerank_mp::linalg::vector;
-use pagerank_mp::network::{CrashWindow, FaultPlan, LatencyModel};
+use pagerank_mp::network::{CrashWindow, FaultPlan, LatencyModel, LinkWindow, PartitionWindow};
 use pagerank_mp::util::bench;
 use pagerank_mp::util::json::Json;
 use pagerank_mp::util::rng::Rng;
@@ -359,7 +367,9 @@ fn faults_race_cell(
         map: ShardMap::Modulo,
         gossip: DEFAULT_GOSSIP_PERIOD,
         drop: plan.drop,
-        crash: plan.crashes.first().copied(),
+        crashes: plan.crashes.clone(),
+        links: plan.links.clone(),
+        partitions: plan.partitions.clone(),
         reliable,
     };
     let spec_key = spec.key();
@@ -418,10 +428,16 @@ fn faults_race_cell(
     );
     cell.insert("retransmits".to_string(), Json::Number(f.retransmits as f64));
     cell.insert("recoveries".to_string(), Json::Number(f.recoveries as f64));
+    cell.insert("link_downs".to_string(), Json::Number(f.link_downs as f64));
+    cell.insert("partitions_healed".to_string(), Json::Number(f.partitions_healed as f64));
+    cell.insert("rtt_estimate".to_string(), Json::Number(f.rtt_estimate));
     cell.insert(
         "residual_divergence_at_crash".to_string(),
         Json::Number(f.residual_divergence_at_crash),
     );
+    let (div_onset, div_heal) = rt.partition_divergence();
+    cell.insert("partition_divergence_onset".to_string(), Json::Number(div_onset));
+    cell.insert("partition_divergence_heal".to_string(), Json::Number(div_heal));
     cell.insert("abandoned".to_string(), Json::Number(rt.abandoned_messages() as f64));
     cell.insert("wall_ms".to_string(), Json::Number(wall.as_secs_f64() * 1e3));
     if let Some(e) = error {
@@ -474,6 +490,72 @@ fn faults_degradation_sweep(quick: bool) {
     let out = repo_root().join("BENCH_faults.json");
     pagerank_mp::harness::report::write_file(&out, &Json::Object(doc).render())
         .expect("write BENCH_faults.json");
+    println!("wrote {}", out.display());
+}
+
+/// Partition tolerance (ISSUE 10): raw vs reliable msgpass across the
+/// three partition shapes — an asymmetric one-direction link window, a
+/// healing shard bipartition, and two *overlapping* crash windows —
+/// each × drop ∈ {0, 0.05}. Reliable cells must converge with zero
+/// abandoned frames once the fault heals (the RTT-adaptive retransmit
+/// budget is measured in round-trips, so an outage never exhausts it);
+/// raw cells report their conservation drift honestly via the
+/// divergence gauges sampled at partition onset and heal. Dumps
+/// `BENCH_partitions.json` for the CI artifact and `scripts/bench_diff`.
+fn partitions_sweep(quick: bool) {
+    println!("\n=== partition tolerance: raw vs reliable across fault shapes ===");
+    let (n, batch, eps, max_super_steps) = if quick {
+        (2_000usize, 64usize, 1e-6f64, 10_000usize)
+    } else {
+        (20_000, 256, 1e-8, 40_000)
+    };
+    let g = generators::erdos_renyi(n, 8.0 / n as f64, 12);
+    let graph_key = format!("er-sparse N={n} deg~8");
+    let shards = 4usize;
+    // Windows land mid-run: vtime advances ~batch/shards per super-step,
+    // so [400, 600) opens a few dozen super-steps in, once real residual
+    // mass is crossing shard boundaries.
+    let shapes: Vec<(&str, FaultPlan)> = vec![
+        (
+            "asymmetric-link",
+            FaultPlan::default()
+                .with_link(LinkWindow { src: 0, dst: 1, at: 400.0, down_for: 200.0 }),
+        ),
+        (
+            "healing-bipartition",
+            FaultPlan::default().with_partition(PartitionWindow::new(vec![0, 1], 400.0, 200.0)),
+        ),
+        (
+            "overlapping-crashes",
+            FaultPlan::default()
+                .with_crash(CrashWindow { shard: 1, at: 400.0, down_for: 200.0 })
+                .with_crash(CrashWindow { shard: 2, at: 500.0, down_for: 200.0 }),
+        ),
+    ];
+    let mut cells = Vec::new();
+    for (shape, base) in &shapes {
+        for drop in [0.0, 0.05] {
+            for reliable in [false, true] {
+                let plan = base.clone().with_drop(drop);
+                let mut cell =
+                    faults_race_cell(&g, shards, batch, plan, reliable, eps, max_super_steps);
+                if let Json::Object(m) = &mut cell {
+                    m.insert("shape".to_string(), Json::String(shape.to_string()));
+                }
+                cells.push(cell);
+            }
+        }
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::String("throughput.partitions".to_string()));
+    doc.insert("graph".to_string(), Json::String(graph_key));
+    doc.insert("shards".to_string(), Json::Number(shards as f64));
+    doc.insert("batch".to_string(), Json::Number(batch as f64));
+    doc.insert("eps".to_string(), Json::Number(eps));
+    doc.insert("cells".to_string(), Json::Array(cells));
+    let out = repo_root().join("BENCH_partitions.json");
+    pagerank_mp::harness::report::write_file(&out, &Json::Object(doc).render())
+        .expect("write BENCH_partitions.json");
     println!("wrote {}", out.display());
 }
 
@@ -890,6 +972,10 @@ fn main() {
         faults_degradation_sweep(quick);
         return;
     }
+    if std::env::var("THROUGHPUT_ONLY").as_deref() == Ok("partitions") {
+        partitions_sweep(quick);
+        return;
+    }
     if std::env::var("THROUGHPUT_ONLY").as_deref() == Ok("locality") {
         locality_sweep(quick);
         return;
@@ -986,6 +1072,7 @@ fn main() {
     network_msgpass_sweep(quick);
     webgraph_bench(quick);
     faults_degradation_sweep(quick);
+    partitions_sweep(quick);
     locality_sweep(quick);
 
     println!("\n{}", b.to_csv());

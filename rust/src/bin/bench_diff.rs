@@ -2,7 +2,7 @@
 //!
 //! Compares a baseline and a candidate `BENCH_scenario.json`,
 //! `BENCH_sweep.json`, `BENCH_throughput.json`, `BENCH_network.json`,
-//! `BENCH_faults.json` or `BENCH_locality.json`
+//! `BENCH_faults.json`, `BENCH_partitions.json` or `BENCH_locality.json`
 //! (the artifacts CI uploads as `bench-json` on every push) and prints
 //! one line per metric
 //! that moved past the threshold. Exit code 1 when a regression is
@@ -663,6 +663,61 @@ mod tests {
             true,
         );
         assert!(flagged.is_some(), "reliable-mode vtime regression must flag");
+    }
+
+    #[test]
+    fn partitions_artifact_cells_are_keyed_by_their_window_specs() {
+        // BENCH_partitions.json cells carry the full registry spec with
+        // link/partition/overlapping-crash segments, plus the divergence
+        // gauges and heal counters — all of which must key and diff
+        // like any other spec-shaped throughput cell.
+        let doc = |vtime: f64| {
+            format!(
+                r#"{{"bench": "throughput.partitions", "eps": 1e-6, "shards": 4, "cells": [
+                     {{"spec": "msgpass:4:64:mod:link0-1@400+200:rel", "mode": "rel",
+                       "shape": "asymmetric-link", "drop": 0.0, "converged": true,
+                       "final_residual": 9e-7, "vtime_to_eps": {vtime},
+                       "bytes_on_wire": 1.0e5, "link_downs": 120,
+                       "partitions_healed": 0, "rtt_estimate": 1.0,
+                       "partition_divergence_onset": 0.0,
+                       "partition_divergence_heal": 0.0,
+                       "retransmits": 130, "abandoned": 0, "wall_ms": 10.0}},
+                     {{"spec": "msgpass:4:64:mod:part0.1@400+200", "mode": "raw",
+                       "shape": "healing-bipartition", "drop": 0.0, "converged": false,
+                       "final_residual": 2e-4, "vtime_to_eps": 9000,
+                       "bytes_on_wire": 3.0e5, "link_downs": 600,
+                       "partitions_healed": 1, "rtt_estimate": 0.0,
+                       "partition_divergence_onset": 1.2e-7,
+                       "partition_divergence_heal": 4.0e-6,
+                       "retransmits": 0, "abandoned": 0, "wall_ms": 10.0}},
+                     {{"spec": "msgpass:4:64:mod:crash1@400+200:crash2@500+200:rel",
+                       "mode": "rel", "shape": "overlapping-crashes", "drop": 0.0,
+                       "converged": true, "final_residual": 8e-7,
+                       "vtime_to_eps": 2200, "bytes_on_wire": 1.4e5,
+                       "link_downs": 0, "partitions_healed": 0, "rtt_estimate": 1.0,
+                       "partition_divergence_onset": 0.0,
+                       "partition_divergence_heal": 0.0,
+                       "retransmits": 300, "abandoned": 0, "wall_ms": 10.0}}]}}"#
+            )
+        };
+        let old = extract(&Json::parse(&doc(1500.0)).expect("json")).expect("extracts");
+        assert_eq!(old.len(), 3);
+        assert_eq!(
+            old["msgpass:4:64:mod:link0-1@400+200:rel"].vtime_to_eps,
+            Some(1500.0)
+        );
+        assert_eq!(
+            old["msgpass:4:64:mod:crash1@400+200:crash2@500+200:rel"].bytes_on_wire,
+            Some(1.4e5)
+        );
+        // A reliable link-window cell taking 40% longer to recover to ε
+        // is a protocol regression and must flag on its window-qualified
+        // key.
+        let new = extract(&Json::parse(&doc(2100.0)).expect("json")).expect("extracts");
+        let key = "msgpass:4:64:mod:link0-1@400+200:rel";
+        let flagged =
+            check(key, "vtime_to_eps", old[key].vtime_to_eps, new[key].vtime_to_eps, 0.15, true);
+        assert!(flagged.is_some(), "link-window recovery regression must flag");
     }
 
     #[test]

@@ -72,6 +72,25 @@
 //!   ordinary metered traffic: sequence-numbered in `rel` mode,
 //!   droppable in `raw`.
 //!
+//! **Link and partition windows** generalize the recovery path to
+//! *heal* events. While a directional link (or a bipartition's crossing
+//! links) is cut, the transport loses every frame across it; the
+//! runtime's fault-schedule state machine watches the same windows and
+//! fires at two extra instants:
+//!
+//! * **partition onset / heal**: the divergence gauge
+//!   `(1/N)·Σ_j (r_owner_j − (y−Bx)_j)²` is sampled at both instants
+//!   ([`MsgpassRuntime::partition_divergence`]), so
+//!   `BENCH_partitions.json` can chart how far the halves drifted and
+//!   how fast conservation recovers.
+//! * **heal** (link restored or partition merged): a *targeted* re-sync
+//!   — for each healed `src → dst` direction, `src` pushes one
+//!   [`Msg::ResidualSync`] to `dst` for every page `src` owns and `dst`
+//!   subscribes to. The stale side catches up without waiting for the
+//!   next organic update; in `rel` mode retransmission already replays
+//!   the lost deltas, so the sync is pure staleness repair and the
+//!   conservation invariant holds exactly after drain.
+//!
 //! Correctness under faults is owner-authoritative: conservation
 //! `Bx + r = (1−α)𝟙` needs every `ResidualUpdate` applied to its
 //! *owner* exactly once. `rel` mode guarantees that (retransmission
@@ -86,7 +105,9 @@ use crate::coordinator::sharded::{LocalityCounters, ResolvedMap, ShardMap};
 use crate::graph::Graph;
 use crate::linalg::select::{DEFAULT_WEIGHT_FLOOR, WeightTree};
 use crate::linalg::sparse::BColumns;
-use crate::network::faults::{CrashWindow, FaultCounters, FaultPlan, NetProfile, Reliability};
+use crate::network::faults::{
+    CrashWindow, FaultCounters, FaultPlan, LinkWindow, NetProfile, PartitionWindow, Reliability,
+};
 use crate::network::latency::LatencyModel;
 use crate::network::transport::{Transport, TransportEvent, WireSized};
 use crate::util::error::{Context, Result};
@@ -234,14 +255,35 @@ pub struct MsgpassRuntime {
     old_vals: Vec<f64>,
     /// Crash windows from the fault plan (construction order) with
     /// onset/recovery progress flags, ticked against event times.
+    /// Overlapping windows are legal — each advances independently.
     crashes: Vec<CrashWindow>,
     crash_started: Vec<bool>,
     crash_recovered: Vec<bool>,
+    /// Directional link windows from the plan; the transport loses the
+    /// frames, this schedule fires the heal-triggered re-sync.
+    links: Vec<LinkWindow>,
+    link_started: Vec<bool>,
+    link_healed: Vec<bool>,
+    /// Partition windows from the plan; onset and heal both sample the
+    /// divergence gauge, heal re-syncs every crossing direction.
+    partitions: Vec<PartitionWindow>,
+    part_started: Vec<bool>,
+    part_healed: Vec<bool>,
     /// Completed restarts (checkpoint restore + peer re-sync issued).
     recoveries: u64,
+    /// Partition windows that have healed (merged + re-synced).
+    partitions_healed: u64,
     /// Max over crash instants of the owner-residual's squared
     /// divergence from the true residual, scaled by 1/N.
     fault_divergence: f64,
+    /// Max of the divergence gauge sampled at partition *onset*
+    /// instants — how far the halves had already drifted when the wall
+    /// came down.
+    partition_divergence_onset: f64,
+    /// Max of the divergence gauge sampled at partition *heal* instants
+    /// — the drift accumulated across the window, the quantity
+    /// `BENCH_partitions.json` charts recovering.
+    partition_divergence_heal: f64,
     /// Largest `|{k} ∪ out(k)|` over pages — sizes the per-super-step
     /// event budget.
     max_fanout: usize,
@@ -282,11 +324,17 @@ impl MsgpassRuntime {
         assert!(batch >= 1, "need at least one activation per super-step");
         assert!(gossip >= 1, "gossip period must be >= 1");
         let faults = faults.filter(|p| !p.is_empty());
+        if let Some(p) = faults.as_ref() {
+            if let Err(e) = p.validate(shards) {
+                panic!("invalid fault plan: {e}");
+            }
+        }
         let crashes: Vec<CrashWindow> =
             faults.as_ref().map(|p| p.crashes.clone()).unwrap_or_default();
-        for c in &crashes {
-            assert!(c.shard < shards, "crash window names shard {} of {shards}", c.shard);
-        }
+        let links: Vec<LinkWindow> =
+            faults.as_ref().map(|p| p.links.clone()).unwrap_or_default();
+        let partitions: Vec<PartitionWindow> =
+            faults.as_ref().map(|p| p.partitions.clone()).unwrap_or_default();
         let n = graph.n();
         let cols = BColumns::new(&graph, alpha);
         let y = 1.0 - alpha;
@@ -318,6 +366,8 @@ impl MsgpassRuntime {
         let max_fanout =
             (0..n).map(|k| 1 + graph.out(k).len()).max().unwrap_or(1);
         let crash_count = crashes.len();
+        let link_count = links.len();
+        let part_count = partitions.len();
         MsgpassRuntime {
             cols,
             alpha,
@@ -348,8 +398,17 @@ impl MsgpassRuntime {
             crashes,
             crash_started: vec![false; crash_count],
             crash_recovered: vec![false; crash_count],
+            links,
+            link_started: vec![false; link_count],
+            link_healed: vec![false; link_count],
+            partitions,
+            part_started: vec![false; part_count],
+            part_healed: vec![false; part_count],
             recoveries: 0,
+            partitions_healed: 0,
             fault_divergence: 0.0,
+            partition_divergence_onset: 0.0,
+            partition_divergence_heal: 0.0,
             max_fanout,
             budget_override: None,
             locality,
@@ -369,7 +428,7 @@ impl MsgpassRuntime {
     /// Run one super-step: allocate `batch` activation slots across the
     /// shards from the gossiped weight summaries, schedule each shard's
     /// slots on its event loop, and drain the transport (activations,
-    /// deliveries, gossip, crash/recovery ticks and the reliability
+    /// deliveries, gossip, fault-schedule ticks and the reliability
     /// protocol interleave in virtual-time order).
     ///
     /// Fails loudly — a named error instead of a spin — if the drain
@@ -409,7 +468,7 @@ impl MsgpassRuntime {
                     self.transport.now(),
                 ));
             }
-            self.tick_crashes(ev.time);
+            self.tick_faults(ev.time);
             match ev.event {
                 TransportEvent::Wake { shard } => {
                     // A crashed shard's event loop is dead: its slots
@@ -428,15 +487,17 @@ impl MsgpassRuntime {
     /// the transport consumes protocol frames and suppressed deliveries
     /// internally, so what reaches the runtime is at most the wakes,
     /// each send's deliveries (×2 for duplication), re-sync fan-in
-    /// after recoveries, and whatever was carried over in the queue.
+    /// after recoveries and heals (a partition heal re-syncs up to
+    /// `shards` crossing directions), and whatever was carried over in
+    /// the queue.
     /// Exceeding it is impossible for a draining queue by construction.
     fn event_budget(&self) -> u64 {
         let n = self.graph.n() as u64;
         let per_act = (self.max_fanout as u64 + 2) * self.shards as u64 * 4;
         let carry = self.transport.len() as u64;
-        (self.batch as u64 + carry) * per_act
-            + (self.crashes.len() as u64 + 1) * 4 * n
-            + 1024
+        let windows = (self.crashes.len() + self.links.len()) as u64
+            + self.partitions.len() as u64 * self.shards as u64;
+        (self.batch as u64 + carry) * per_act + (windows + 1) * 4 * n + 1024
     }
 
     /// Test hook: force the super-step event budget to exercise the
@@ -466,11 +527,14 @@ impl MsgpassRuntime {
         Ok(max_super_steps)
     }
 
-    /// Advance the crash/recovery state machine to `now`: fire every
-    /// onset (divergence gauge + replica wipe) and recovery (counter +
-    /// peer re-sync) whose instant has passed. Windows fire in
-    /// event-time order because this is called per popped event.
-    fn tick_crashes(&mut self, now: f64) {
+    /// Advance the fault-schedule state machine to `now`: fire every
+    /// crash onset (divergence gauge + replica wipe), recovery (counter
+    /// + peer re-sync), partition onset (gauge sample), and heal (link
+    /// restored / partition merged — targeted re-sync) whose instant
+    /// has passed. Windows fire in event-time order because this is
+    /// called per popped event; overlapping windows of any kind advance
+    /// independently.
+    fn tick_faults(&mut self, now: f64) {
         for i in 0..self.crashes.len() {
             let c = self.crashes[i];
             if !self.crash_started[i] && now >= c.at {
@@ -482,14 +546,35 @@ impl MsgpassRuntime {
                 self.on_recover(c.shard);
             }
         }
+        for i in 0..self.links.len() {
+            let l = self.links[i];
+            if !self.link_started[i] && now >= l.at {
+                self.link_started[i] = true;
+            }
+            if self.link_started[i] && !self.link_healed[i] && now >= l.heal_at() {
+                self.link_healed[i] = true;
+                self.sync_direction(l.src, l.dst);
+            }
+        }
+        for i in 0..self.partitions.len() {
+            let (at, heal_at) = (self.partitions[i].at, self.partitions[i].heal_at());
+            if !self.part_started[i] && now >= at {
+                self.part_started[i] = true;
+                let g = self.divergence_gauge();
+                self.partition_divergence_onset = self.partition_divergence_onset.max(g);
+            }
+            if self.part_started[i] && !self.part_healed[i] && now >= heal_at {
+                self.part_healed[i] = true;
+                self.on_partition_heal(i);
+            }
+        }
     }
 
-    /// Crash instant: gauge how far the owner-authoritative residual
-    /// had diverged from the true `y − Bx` (in-flight and lost mass),
-    /// then drop the shard's replica memory of unowned pages. The owned
-    /// `(x_k, r_k)` pairs are the durable two-scalars-per-page
-    /// checkpoint and survive.
-    fn on_crash(&mut self, w: usize) {
+    /// The divergence gauge: `(1/N)·Σ_j (r_owner_j − (y − Bx)_j)²` —
+    /// how far the owner-authoritative residuals have drifted from the
+    /// true residual (in-flight and lost mass). Sampled at crash
+    /// instants and at partition onset/heal.
+    fn divergence_gauge(&self) -> f64 {
         let n = self.graph.n();
         let y = 1.0 - self.alpha;
         let mut truth = vec![y; n];
@@ -503,10 +588,58 @@ impl MsgpassRuntime {
             let d = self.views[self.rmap.owner(j)][j] - t;
             div += d * d;
         }
-        self.fault_divergence = self.fault_divergence.max(div / n as f64);
-        for j in 0..n {
+        div / n as f64
+    }
+
+    /// Crash instant: gauge how far the owner-authoritative residual
+    /// had diverged from the true `y − Bx` (in-flight and lost mass),
+    /// then drop the shard's replica memory of unowned pages. The owned
+    /// `(x_k, r_k)` pairs are the durable two-scalars-per-page
+    /// checkpoint and survive.
+    fn on_crash(&mut self, w: usize) {
+        let g = self.divergence_gauge();
+        self.fault_divergence = self.fault_divergence.max(g);
+        for j in 0..self.graph.n() {
             if self.rmap.owner(j) != w {
                 self.views[w][j] = 0.0;
+            }
+        }
+    }
+
+    /// A healed `src → dst` direction: `src` pushes its authoritative
+    /// value to `dst` for every page it owns and `dst` subscribes to —
+    /// the targeted analogue of the post-restart re-sync (same metered,
+    /// faultable [`Msg::ResidualSync`] traffic). Pages `dst` owns need
+    /// no sync: `dst`'s own entries are authoritative, and in `rel`
+    /// mode the lost owner deltas are replayed by retransmission.
+    fn sync_direction(&mut self, src: usize, dst: usize) {
+        for j in 0..self.graph.n() {
+            if self.rmap.owner(j) != src || self.subs[j].binary_search(&(dst as u32)).is_err() {
+                continue;
+            }
+            let value = self.views[src][j];
+            self.transport.send(
+                src,
+                dst,
+                Msg::ResidualSync { page: j as u32, value },
+                &mut self.net_rng,
+            );
+        }
+    }
+
+    /// Partition heal: sample the divergence gauge (the drift the
+    /// window accumulated), then re-sync every crossing direction of
+    /// the bipartition.
+    fn on_partition_heal(&mut self, idx: usize) {
+        self.partitions_healed += 1;
+        let g = self.divergence_gauge();
+        self.partition_divergence_heal = self.partition_divergence_heal.max(g);
+        let p = self.partitions[idx].clone();
+        for a in 0..self.shards {
+            for b in 0..self.shards {
+                if a != b && p.cuts(a, b) {
+                    self.sync_direction(a, b);
+                }
             }
         }
     }
@@ -726,12 +859,21 @@ impl MsgpassRuntime {
     }
 
     /// The merged fault ledger: the transport's wire counters plus the
-    /// runtime's recovery count and crash-divergence gauge.
+    /// runtime's recovery/heal counts and crash-divergence gauge.
     pub fn fault_counters(&self) -> FaultCounters {
         let mut c = self.transport.fault_counters();
         c.recoveries = self.recoveries;
+        c.partitions_healed = self.partitions_healed;
         c.residual_divergence_at_crash = self.fault_divergence;
         c
+    }
+
+    /// The divergence gauge sampled at partition `(onset, heal)`
+    /// instants — max over windows of
+    /// `(1/N)·Σ_j (r_owner_j − (y − Bx)_j)²`. Both zero when no
+    /// partition window has fired.
+    pub fn partition_divergence(&self) -> (f64, f64) {
+        (self.partition_divergence_onset, self.partition_divergence_heal)
     }
 
     /// The locality ledger: cross-shard residual-update messages and
@@ -1186,6 +1328,37 @@ mod tests {
                     .with_jitter(1.5)
                     .with_crash(CrashWindow { shard: 2, at: 30.0, down_for: 15.0 }),
             ),
+            (
+                "link",
+                FaultPlan::default().with_link(LinkWindow {
+                    src: 0,
+                    dst: 1,
+                    at: 40.0,
+                    down_for: 20.0,
+                }),
+            ),
+            (
+                "partition",
+                FaultPlan::default().with_partition(PartitionWindow::new(
+                    vec![0],
+                    40.0,
+                    20.0,
+                )),
+            ),
+            (
+                "overlapping-crashes",
+                FaultPlan::default()
+                    .with_crash(CrashWindow { shard: 1, at: 40.0, down_for: 30.0 })
+                    .with_crash(CrashWindow { shard: 2, at: 50.0, down_for: 30.0 }),
+            ),
+            (
+                "partition+crash+drop",
+                FaultPlan::default()
+                    .with_drop(0.05)
+                    .with_link(LinkWindow { src: 2, dst: 0, at: 25.0, down_for: 10.0 })
+                    .with_partition(PartitionWindow::new(vec![1], 60.0, 15.0))
+                    .with_crash(CrashWindow { shard: 0, at: 65.0, down_for: 20.0 }),
+            ),
         ];
         for (name, plan) in plans {
             let g = generators::er_threshold(24, 0.5, 11);
@@ -1304,6 +1477,106 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn asymmetric_link_window_reliable_conserves_and_raw_degrades() {
+        // One direction of one link down mid-run: `rel` retransmits
+        // across the window and conserves exactly; `raw` loses the
+        // owner deltas that crossed the cut and the gap shows.
+        let window = LinkWindow { src: 0, dst: 1, at: 30.0, down_for: 25.0 };
+        let run = |reliable: bool| {
+            let g = generators::er_threshold(24, 0.5, 11);
+            let plan = FaultPlan::default().with_link(window);
+            let mut rt = faulted(g.clone(), 3, LatencyModel::Zero, plan, reliable);
+            let mut rng = Rng::seeded(55);
+            for _ in 0..400 {
+                rt.run_super_step(&mut rng);
+            }
+            (rt, g)
+        };
+        let (rel, g) = run(true);
+        let c = rel.fault_counters();
+        assert!(c.link_downs > 0, "the window must have cut frames, got {}", c.link_downs);
+        assert!(c.retransmits > 0, "recovery must ride retransmission");
+        assert_eq!(rel.abandoned_messages(), 0);
+        let viol = max_conservation_violation(&rel, &g);
+        assert!(viol < 1e-9, "rel: conservation violated by {viol}");
+
+        let (raw, g) = run(false);
+        let c = raw.fault_counters();
+        assert!(c.link_downs > 0);
+        assert_eq!(c.retransmits, 0, "raw mode never retransmits");
+        let viol = max_conservation_violation(&raw, &g);
+        assert!(viol > 1e-9, "raw: deltas lost to the cut must show as a gap");
+    }
+
+    #[test]
+    fn partition_heal_gauges_divergence_and_resyncs() {
+        // A healing bipartition: both crossing directions cut for the
+        // window, the divergence gauge sampled at onset and heal, one
+        // `partitions_healed` tick, and (rel) exact conservation after
+        // the retransmitted deltas land.
+        let g = generators::er_threshold(24, 0.5, 11);
+        let plan =
+            FaultPlan::default().with_partition(PartitionWindow::new(vec![0], 30.0, 20.0));
+        let mut rt = faulted(g.clone(), 3, LatencyModel::Zero, plan, true);
+        let mut rng = Rng::seeded(55);
+        for _ in 0..400 {
+            rt.run_super_step(&mut rng);
+        }
+        let c = rt.fault_counters();
+        assert_eq!(c.partitions_healed, 1, "exactly one partition window healed");
+        assert!(c.link_downs > 0, "crossing frames must have been cut");
+        let (onset, heal) = rt.partition_divergence();
+        assert!(onset >= 0.0 && onset.is_finite());
+        assert!(
+            heal > 0.0,
+            "the window must accumulate owner-visible drift, gauge was {heal}"
+        );
+        assert_eq!(rt.abandoned_messages(), 0);
+        let viol = max_conservation_violation(&rt, &g);
+        assert!(viol < 1e-9, "conservation violated by {viol}");
+    }
+
+    #[test]
+    fn overlapping_crashes_both_recover_and_are_deterministic() {
+        // Two crash windows overlapping in time (legal since the
+        // multi-window schedule): both shards restart, both re-sync,
+        // and the run stays deterministic and conservative.
+        let run = || {
+            let g = generators::er_threshold(24, 0.5, 11);
+            let plan = FaultPlan::default()
+                .with_crash(CrashWindow { shard: 1, at: 30.0, down_for: 25.0 })
+                .with_crash(CrashWindow { shard: 2, at: 40.0, down_for: 25.0 });
+            let mut rt = faulted(g.clone(), 3, LatencyModel::Zero, plan, true);
+            let mut rng = Rng::seeded(55);
+            for _ in 0..400 {
+                rt.run_super_step(&mut rng);
+            }
+            (rt, g)
+        };
+        let (a, g) = run();
+        let (b, _) = run();
+        assert_eq!(a.estimate(), b.estimate(), "overlapping-crash runs are deterministic");
+        let c = a.fault_counters();
+        assert_eq!(c.recoveries, 2, "both crashed shards must restart");
+        assert_eq!(a.abandoned_messages(), 0);
+        let viol = max_conservation_violation(&a, &g);
+        assert!(viol < 1e-9, "conservation violated by {viol}");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid fault plan")]
+    fn out_of_range_fault_plan_panics_at_construction() {
+        let g = generators::er_threshold(10, 0.5, 1);
+        let plan = FaultPlan::default().with_link(LinkWindow {
+            src: 0,
+            dst: 7,
+            at: 1.0,
+            down_for: 1.0,
+        });
+        let _ = faulted(g, 2, LatencyModel::Zero, plan, true);
     }
 
     #[test]

@@ -376,6 +376,18 @@ impl ScenarioReport {
                                 "residual_divergence_at_crash".to_string(),
                                 Json::Number(f.residual_divergence_at_crash),
                             );
+                            s.insert(
+                                "link_downs".to_string(),
+                                Json::Number(f.link_downs as f64),
+                            );
+                            s.insert(
+                                "partitions_healed".to_string(),
+                                Json::Number(f.partitions_healed as f64),
+                            );
+                            s.insert(
+                                "rtt_estimate".to_string(),
+                                Json::Number(f.rtt_estimate),
+                            );
                         }
                         // Locality fields likewise appear only for runs
                         // with a shard boundary to measure, keeping
@@ -542,6 +554,9 @@ mod tests {
             "retransmits",
             "recoveries",
             "residual_divergence_at_crash",
+            "link_downs",
+            "partitions_healed",
+            "rtt_estimate",
         ] {
             assert!(
                 faulted.get(field).and_then(Json::as_f64).is_some(),

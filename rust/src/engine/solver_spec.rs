@@ -31,7 +31,7 @@ use crate::coordinator::{
 };
 use crate::graph::Graph;
 use crate::linalg::select::DEFAULT_WEIGHT_FLOOR;
-use crate::network::faults::{CrashWindow, FaultPlan};
+use crate::network::faults::{CrashWindow, FaultPlan, LinkWindow, PartitionWindow};
 use crate::network::{FaultCounters, LatencyModel};
 use crate::util::rng::Rng;
 
@@ -90,18 +90,24 @@ pub enum SolverSpec {
     /// over the virtual-time network, communicating only by metered
     /// `ResidualUpdate` / `WeightSummary` messages. `gossip` is the
     /// activations-per-shard between weight-summary broadcasts.
-    /// `drop`/`crash` compose a seeded fault plan onto the wire
-    /// (`drop<p>` = per-frame loss probability, `crash<w>@<t>+<d>` =
-    /// one shard down-window), and `reliable` switches on the
-    /// sequence-number/ack/retransmit protocol (`:rel`; fire-and-forget
-    /// `:raw` is the default and is omitted from the key).
+    /// `drop`/`crash`/`link`/`part` compose a seeded fault plan onto
+    /// the wire (`drop<p>` = per-frame loss probability,
+    /// `crash<w>@<t>+<d>` = one shard down-window — repeatable, and
+    /// overlapping windows are legal; `link<s>-<d>@<t>+<d>` = one
+    /// directional link cut; `part<s1>.<s2>…@<t>+<d>` = a healing
+    /// bipartition cutting every crossing link), and `reliable`
+    /// switches on the sequence-number/ack/retransmit protocol
+    /// (`:rel`; fire-and-forget `:raw` is the default and is omitted
+    /// from the key).
     Msgpass {
         shards: usize,
         batch: usize,
         map: ShardMap,
         gossip: usize,
         drop: f64,
-        crash: Option<CrashWindow>,
+        crashes: Vec<CrashWindow>,
+        links: Vec<LinkWindow>,
+        partitions: Vec<PartitionWindow>,
         reliable: bool,
     },
     /// The dense backend: Jacobi sweeps on a materialized hyperlink
@@ -183,11 +189,23 @@ impl SolverSpec {
                     Sampling::Residual => format!("{base}:residual"),
                 }
             }
-            SolverSpec::Msgpass { shards, batch, map, gossip, drop, crash, reliable } => {
+            SolverSpec::Msgpass {
+                shards,
+                batch,
+                map,
+                gossip,
+                drop,
+                crashes,
+                links,
+                partitions,
+                reliable,
+            } => {
                 // Segments are omitted when default (gossip, drop=0,
-                // no crash, raw), mirroring the sharded
+                // no windows, raw), mirroring the sharded
                 // sampling-segment convention — PR-6 era keys and the
                 // BENCH cell names built from them are unchanged.
+                // Windows print one segment each, in construction
+                // order within their kind.
                 let mut key = format!("msgpass:{shards}:{batch}:{}", map.key());
                 if *gossip != DEFAULT_GOSSIP_PERIOD {
                     key.push_str(&format!(":{gossip}"));
@@ -195,8 +213,14 @@ impl SolverSpec {
                 if *drop > 0.0 {
                     key.push_str(&format!(":drop{drop}"));
                 }
-                if let Some(c) = crash {
+                for c in crashes {
                     key.push_str(&format!(":crash{}", c.key()));
+                }
+                for l in links {
+                    key.push_str(&format!(":link{}", l.key()));
+                }
+                for p in partitions {
+                    key.push_str(&format!(":part{}", p.key()));
                 }
                 if *reliable {
                     key.push_str(":rel");
@@ -369,12 +393,16 @@ impl SolverSpec {
             "msgpass" | "msg" => {
                 let grammar =
                     "msgpass:<shards>[:<batch>[:<mod|block|cluster|scc>[:<gossip-period>]]]\
-                     [:drop<p>][:crash<shard>@<at>+<down-for>][:rel|raw]";
+                     [:drop<p>][:crash<shard>@<at>+<down-for>]\
+                     [:link<src>-<dst>@<at>+<down-for>]\
+                     [:part<s1>.<s2>...@<at>+<down-for>][:rel|raw]";
                 // Positional prefix runs until the first tagged fault/
                 // reliability segment; everything after must be tagged.
                 let is_tagged = |p: &str| {
                     p.starts_with("drop")
                         || p.starts_with("crash")
+                        || p.starts_with("link")
+                        || p.starts_with("part")
                         || matches!(p, "rel" | "reliable" | "raw")
                 };
                 let mut pos: Vec<&str> = Vec::new();
@@ -417,7 +445,9 @@ impl SolverSpec {
                     return Err(arity_err("a gossip period >= 1"));
                 }
                 let mut drop = 0.0;
-                let mut crash = None;
+                let mut crashes: Vec<CrashWindow> = Vec::new();
+                let mut links: Vec<LinkWindow> = Vec::new();
+                let mut partitions: Vec<PartitionWindow> = Vec::new();
                 let mut reliable = false;
                 for p in &parts[tail_start..] {
                     if let Some(body) = p.strip_prefix("drop") {
@@ -433,14 +463,15 @@ impl SolverSpec {
                     } else if let Some(body) = p.strip_prefix("crash") {
                         let c = CrashWindow::parse(body)
                             .map_err(|e| format!("solver spec {s:?}: {e}"))?;
-                        if c.shard >= shards {
-                            return Err(format!(
-                                "crash window names shard {} but the spec has {shards} \
-                                 shard(s)",
-                                c.shard
-                            ));
-                        }
-                        crash = Some(c);
+                        crashes.push(c);
+                    } else if let Some(body) = p.strip_prefix("link") {
+                        let l = LinkWindow::parse(body)
+                            .map_err(|e| format!("solver spec {s:?}: {e}"))?;
+                        links.push(l);
+                    } else if let Some(body) = p.strip_prefix("part") {
+                        let w = PartitionWindow::parse(body)
+                            .map_err(|e| format!("solver spec {s:?}: {e}"))?;
+                        partitions.push(w);
                     } else if matches!(*p, "rel" | "reliable") {
                         reliable = true;
                     } else if *p == "raw" {
@@ -449,7 +480,27 @@ impl SolverSpec {
                         return Err(format!("bad msgpass segment {p:?} ({grammar})"));
                     }
                 }
-                Ok(SolverSpec::Msgpass { shards, batch, map, gossip, drop, crash, reliable })
+                // Range/topology validation happens here at parse time
+                // (positioned errors naming the valid shard range), not
+                // at runtime construction.
+                let probe = FaultPlan {
+                    crashes: crashes.clone(),
+                    links: links.clone(),
+                    partitions: partitions.clone(),
+                    ..FaultPlan::default()
+                };
+                probe.validate(shards).map_err(|e| format!("solver spec {s:?}: {e}"))?;
+                Ok(SolverSpec::Msgpass {
+                    shards,
+                    batch,
+                    map,
+                    gossip,
+                    drop,
+                    crashes,
+                    links,
+                    partitions,
+                    reliable,
+                })
             }
             "google-power" | "google" => Ok(SolverSpec::GooglePower),
             "ishii-tempo" | "it" => Ok(SolverSpec::IshiiTempo),
@@ -543,7 +594,9 @@ impl SolverSpec {
                 map: ShardMap::Modulo,
                 gossip: DEFAULT_GOSSIP_PERIOD,
                 drop: 0.0,
-                crash: None,
+                crashes: vec![],
+                links: vec![],
+                partitions: vec![],
                 reliable: false,
             },
             SolverSpec::Msgpass {
@@ -552,7 +605,9 @@ impl SolverSpec {
                 map: ShardMap::Scc,
                 gossip: DEFAULT_GOSSIP_PERIOD,
                 drop: 0.0,
-                crash: None,
+                crashes: vec![],
+                links: vec![],
+                partitions: vec![],
                 reliable: false,
             },
             SolverSpec::Dense,
@@ -611,15 +666,31 @@ impl SolverSpec {
             SolverSpec::Sharded { shards, batch, map, packer, sampling } => Box::new(
                 ShardedSolver::new(graph, alpha, *shards, *batch, *map, *packer, *sampling),
             ),
-            SolverSpec::Msgpass { shards, batch, map, gossip, drop, crash, reliable } => {
+            SolverSpec::Msgpass {
+                shards,
+                batch,
+                map,
+                gossip,
+                drop,
+                crashes,
+                links,
+                partitions,
+                reliable,
+            } => {
                 let mut cfg =
                     MsgpassConfig::new(*shards, *batch, *map, *gossip, LatencyModel::Zero);
                 let mut plan = FaultPlan::default();
                 if *drop > 0.0 {
                     plan = plan.with_drop(*drop);
                 }
-                if let Some(c) = crash {
+                for c in crashes {
                     plan = plan.with_crash(*c);
+                }
+                for l in links {
+                    plan = plan.with_link(*l);
+                }
+                for p in partitions {
+                    plan = plan.with_partition(p.clone());
                 }
                 cfg = cfg.with_faults(plan);
                 if *reliable {
@@ -1092,7 +1163,9 @@ mod tests {
                 map: ShardMap::Modulo,
                 gossip: DEFAULT_GOSSIP_PERIOD,
                 drop: 0.0,
-                crash: None,
+                crashes: vec![],
+                links: vec![],
+                partitions: vec![],
                 reliable: false,
             }
         );
@@ -1104,7 +1177,9 @@ mod tests {
                 map: ShardMap::Block,
                 gossip: 16,
                 drop: 0.0,
-                crash: None,
+                crashes: vec![],
+                links: vec![],
+                partitions: vec![],
                 reliable: false,
             }
         );
@@ -1137,7 +1212,9 @@ mod tests {
                 map: ShardMap::Modulo,
                 gossip: DEFAULT_GOSSIP_PERIOD,
                 drop: 0.05,
-                crash: Some(CrashWindow { shard: 1, at: 64.0, down_for: 32.0 }),
+                crashes: vec![CrashWindow { shard: 1, at: 64.0, down_for: 32.0 }],
+                links: vec![],
+                partitions: vec![],
                 reliable: true,
             }
         );
@@ -1162,6 +1239,63 @@ mod tests {
     }
 
     #[test]
+    fn msgpass_link_and_partition_segments_parse_and_round_trip() {
+        let spec = SolverSpec::parse("msgpass:4:8:mod:link0-1@64+32:part0.1@100+16:rel")
+            .expect("ok");
+        assert_eq!(
+            spec,
+            SolverSpec::Msgpass {
+                shards: 4,
+                batch: 8,
+                map: ShardMap::Modulo,
+                gossip: DEFAULT_GOSSIP_PERIOD,
+                drop: 0.0,
+                crashes: vec![],
+                links: vec![LinkWindow { src: 0, dst: 1, at: 64.0, down_for: 32.0 }],
+                partitions: vec![PartitionWindow::new(vec![0, 1], 100.0, 16.0)],
+                reliable: true,
+            }
+        );
+        assert_eq!(spec.key(), "msgpass:4:8:mod:link0-1@64+32:part0.1@100+16:rel");
+        assert_eq!(SolverSpec::parse(&spec.key()).expect("ok"), spec);
+        // Windows repeat: two crash segments and a link compose into
+        // one plan, overlapping legally, and keep construction order.
+        let multi =
+            SolverSpec::parse("msgpass:4:8:mod:crash1@40+30:crash2@50+30:link3-0@10+5:rel")
+                .expect("ok");
+        assert_eq!(
+            multi.key(),
+            "msgpass:4:8:mod:crash1@40+30:crash2@50+30:link3-0@10+5:rel"
+        );
+        assert_eq!(SolverSpec::parse(&multi.key()).expect("ok"), multi);
+        if let SolverSpec::Msgpass { crashes, links, .. } = &multi {
+            assert_eq!(crashes.len(), 2);
+            assert_eq!(links.len(), 1);
+        } else {
+            panic!("parsed a non-msgpass spec");
+        }
+    }
+
+    #[test]
+    fn msgpass_window_validation_is_positioned_and_names_the_range() {
+        // Out-of-range shards and self-links are rejected at parse
+        // time with the window's index, its spec, and the valid range.
+        let err = SolverSpec::parse("msgpass:2:4:mod:link0-7@1+1").expect_err("bad dst");
+        assert!(err.contains("link window #0"), "positions the window: {err}");
+        assert!(err.contains("0..2"), "names the valid range: {err}");
+        let err = SolverSpec::parse("msgpass:2:4:mod:link1-1@1+1").expect_err("self-link");
+        assert!(err.contains("self-link"), "{err}");
+        let err = SolverSpec::parse("msgpass:2:4:mod:part0.5@1+1").expect_err("bad member");
+        assert!(err.contains("partition window #0"), "{err}");
+        assert!(err.contains("0..2"), "{err}");
+        let err = SolverSpec::parse("msgpass:2:4:mod:part0.1@1+1").expect_err("degenerate");
+        assert!(err.contains("bipartition"), "{err}");
+        let err = SolverSpec::parse("msgpass:2:4:mod:crash9@64+32").expect_err("bad shard");
+        assert!(err.contains("crash window #0"), "{err}");
+        assert!(err.contains("0..2"), "{err}");
+    }
+
+    #[test]
     fn bad_msgpass_specs_rejected() {
         assert!(SolverSpec::parse("msgpass:0").is_err());
         assert!(SolverSpec::parse("msgpass:2:0").is_err());
@@ -1177,6 +1311,10 @@ mod tests {
         assert!(SolverSpec::parse("msgpass:2:4:mod:crash9@64+32").is_err(), "shard 9 of 2");
         assert!(SolverSpec::parse("msgpass:2:4:mod:rel:extra").is_err());
         assert!(SolverSpec::parse("msgpass:2:4:mod:drop0.1:8").is_err(), "gossip after a tag");
+        assert!(SolverSpec::parse("msgpass:2:4:mod:link0-1@64").is_err(), "no duration");
+        assert!(SolverSpec::parse("msgpass:2:4:mod:link01@64+32").is_err(), "no dash");
+        assert!(SolverSpec::parse("msgpass:2:4:mod:part0@64").is_err(), "no duration");
+        assert!(SolverSpec::parse("msgpass:4:8:mod:part@64+32").is_err(), "no members");
     }
 
     #[test]
@@ -1211,7 +1349,9 @@ mod tests {
                 map: ShardMap::Cluster,
                 gossip: DEFAULT_GOSSIP_PERIOD,
                 drop: 0.0,
-                crash: None,
+                crashes: vec![],
+                links: vec![],
+                partitions: vec![],
                 reliable: false,
             }
         );

@@ -21,7 +21,10 @@
 //! Axes are applied to the *relevant* specs and are experiment-aware:
 //! `shards`/`batch`/`map` rewrite the sharded and msgpass (and, for
 //! `batch`, parallel-mp) solver entries, `packer`/`sampling` rewrite the
-//! sharded entries, `gossip` rewrites msgpass entries, `latency` rewrites
+//! sharded entries, `gossip` rewrites msgpass entries,
+//! `drop`/`crash`/`link`/`partition` rewrite msgpass fault plans (each
+//! window axis takes a window spec string or `"none"`, so one grid races
+//! faulted against fault-free runs), `latency` rewrites
 //! coordinator entries,
 //! `graph` swaps the whole graph spec (a registry string or object, so a
 //! sweep can range over graph *families*), and naming an axis with no
@@ -54,8 +57,8 @@ pub struct Sweep {
 
 /// The grid axes [`Sweep`] understands.
 pub const SWEEP_AXES: &[&str] = &[
-    "alpha", "batch", "crash", "drop", "gossip", "graph", "latency", "map", "n", "packer",
-    "rounds", "sampling", "seed", "shards", "steps", "stride",
+    "alpha", "batch", "crash", "drop", "gossip", "graph", "latency", "link", "map", "n",
+    "packer", "partition", "rounds", "sampling", "seed", "shards", "steps", "stride",
 ];
 
 fn render_param(v: &Json) -> String {
@@ -277,8 +280,9 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
         }
         "crash" => {
             // A crash-window string ("1@64+32") or "none" to clear the
-            // window for this cell — so a sweep can race crashed
-            // against crash-free runs on one grid.
+            // windows for this cell — so a sweep can race crashed
+            // against crash-free runs on one grid. The axis replaces
+            // the solver's whole crash list with the one window.
             let spec = value
                 .as_str()
                 .ok_or_else(|| format!("axis \"crash\": {} is not a string", value.render()))?;
@@ -292,7 +296,7 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
             };
             let mut hit = false;
             for s in pagerank_solvers(scenario, axis)? {
-                if let SolverSpec::Msgpass { shards, crash: c, .. } = s {
+                if let SolverSpec::Msgpass { shards, crashes, .. } = s {
                     if let Some(w) = &window {
                         if w.shard >= *shards {
                             return Err(format!(
@@ -302,13 +306,99 @@ fn apply_axis(scenario: &mut Scenario, axis: &str, value: &Json) -> Result<(), S
                             ));
                         }
                     }
-                    *c = window;
+                    *crashes = window.iter().copied().collect();
                     hit = true;
                 }
             }
             if !hit {
                 return Err(
                     "axis \"crash\" needs a msgpass solver in the scenario (e.g. \
+                     \"msgpass:2:8:mod:rel\")"
+                        .into(),
+                );
+            }
+        }
+        "link" => {
+            // A directional link-window string ("0-1@64+32") or "none"
+            // to clear the windows — the partition-tolerance race axis
+            // for asymmetric failures.
+            let spec = value
+                .as_str()
+                .ok_or_else(|| format!("axis \"link\": {} is not a string", value.render()))?;
+            let window = if spec == "none" {
+                None
+            } else {
+                Some(
+                    crate::network::LinkWindow::parse(spec)
+                        .map_err(|e| format!("axis \"link\": {e}"))?,
+                )
+            };
+            let mut hit = false;
+            for s in pagerank_solvers(scenario, axis)? {
+                if let SolverSpec::Msgpass { shards, links, .. } = s {
+                    if let Some(w) = &window {
+                        for (role, sh) in [("src", w.src), ("dst", w.dst)] {
+                            if sh >= *shards {
+                                return Err(format!(
+                                    "axis \"link\": window names {role} shard {sh} but the \
+                                     solver has {shards} shard(s)"
+                                ));
+                            }
+                        }
+                    }
+                    *links = window.iter().copied().collect();
+                    hit = true;
+                }
+            }
+            if !hit {
+                return Err(
+                    "axis \"link\" needs a msgpass solver in the scenario (e.g. \
+                     \"msgpass:2:8:mod:rel\")"
+                        .into(),
+                );
+            }
+        }
+        "partition" => {
+            // A bipartition-window string ("0.1@64+32") or "none" — the
+            // healing-partition race axis. Left-side members before the
+            // `@`, dot-separated.
+            let spec = value
+                .as_str()
+                .ok_or_else(|| format!("axis \"partition\": {} is not a string", value.render()))?;
+            let window = if spec == "none" {
+                None
+            } else {
+                Some(
+                    crate::network::PartitionWindow::parse(spec)
+                        .map_err(|e| format!("axis \"partition\": {e}"))?,
+                )
+            };
+            let mut hit = false;
+            for s in pagerank_solvers(scenario, axis)? {
+                if let SolverSpec::Msgpass { shards, partitions, .. } = s {
+                    if let Some(w) = &window {
+                        for &m in &w.left {
+                            if m >= *shards {
+                                return Err(format!(
+                                    "axis \"partition\": window names shard {m} but the \
+                                     solver has {shards} shard(s)"
+                                ));
+                            }
+                        }
+                        if w.left.len() >= *shards {
+                            return Err(format!(
+                                "axis \"partition\": window is not a proper bipartition \
+                                 at {shards} shard(s): both sides must be non-empty"
+                            ));
+                        }
+                    }
+                    *partitions = window.iter().cloned().collect();
+                    hit = true;
+                }
+            }
+            if !hit {
+                return Err(
+                    "axis \"partition\" needs a msgpass solver in the scenario (e.g. \
                      \"msgpass:2:8:mod:rel\")"
                         .into(),
                 );
@@ -807,7 +897,9 @@ mod tests {
             map: ShardMap::Modulo,
             gossip: 2,
             drop: 0.0,
-            crash: None,
+            crashes: vec![],
+            links: vec![],
+            partitions: vec![],
             reliable: false,
         }));
         // gossip is a msgpass-only axis: loud error without one.
@@ -847,13 +939,15 @@ mod tests {
             map: ShardMap::Modulo,
             gossip: crate::coordinator::msgpass::DEFAULT_GOSSIP_PERIOD,
             drop: 0.05,
-            crash: Some(CrashWindow { shard: 1, at: 64.0, down_for: 32.0 }),
+            crashes: vec![CrashWindow { shard: 1, at: 64.0, down_for: 32.0 }],
+            links: vec![],
+            partitions: vec![],
             reliable: true,
         }));
-        // "none" clears the window so one grid races crashed vs crash-free.
+        // "none" clears the windows so one grid races crashed vs crash-free.
         assert!(specs.iter().any(|s| matches!(
             s,
-            SolverSpec::Msgpass { drop, crash: None, .. } if *drop == 0.0
+            SolverSpec::Msgpass { drop, crashes, .. } if *drop == 0.0 && crashes.is_empty()
         )));
         // Both axes are msgpass-only: loud error without one.
         for grid in [r#"{"drop": [0.1]}"#, r#"{"crash": ["0@10+5"]}"#] {
@@ -870,6 +964,65 @@ mod tests {
             r#"{"drop": [-0.1]}"#,
             r#"{"crash": ["1@64"]}"#,
             r#"{"crash": ["9@64+32"]}"#,
+        ] {
+            let text = format!(
+                r#"{{"scenario": {{"graph": "paper:10", "solvers": ["msgpass:2:4"]}},
+                     "grid": {grid}}}"#
+            );
+            let sweep = Sweep::from_json_str(&text).expect("parses");
+            assert!(sweep.cells().is_err(), "grid {grid} should be rejected");
+        }
+    }
+
+    #[test]
+    fn link_and_partition_axes_rewrite_msgpass_fault_fields() {
+        use crate::network::{LinkWindow, PartitionWindow};
+        let text = r#"{
+          "name": "partition-grid",
+          "scenario": {
+            "graph": "paper:12", "solvers": ["msgpass:4:8:mod:rel"],
+            "steps": 100, "stride": 50, "rounds": 1, "threads": 1, "seed": 3
+          },
+          "grid": {"link": ["0-1@64+32", "none"], "partition": ["0.1@64+32", "none"]}
+        }"#;
+        let sweep = Sweep::from_json_str(text).expect("parses");
+        let cells = sweep.cells().expect("expands");
+        assert_eq!(cells.len(), 4);
+        let specs: Vec<SolverSpec> =
+            cells.iter().map(|(_, s)| s.solvers()[0].clone()).collect();
+        assert!(specs.contains(&SolverSpec::Msgpass {
+            shards: 4,
+            batch: 8,
+            map: ShardMap::Modulo,
+            gossip: crate::coordinator::msgpass::DEFAULT_GOSSIP_PERIOD,
+            drop: 0.0,
+            crashes: vec![],
+            links: vec![LinkWindow { src: 0, dst: 1, at: 64.0, down_for: 32.0 }],
+            partitions: vec![PartitionWindow::new(vec![0, 1], 64.0, 32.0)],
+            reliable: true,
+        }));
+        // "none"/"none" clears both lists — the fault-free control cell.
+        assert!(specs.iter().any(|s| matches!(
+            s,
+            SolverSpec::Msgpass { links, partitions, .. }
+                if links.is_empty() && partitions.is_empty()
+        )));
+        // Both axes are msgpass-only: loud error without one.
+        for grid in [r#"{"link": ["0-1@10+5"]}"#, r#"{"partition": ["0@10+5"]}"#] {
+            let text = format!(
+                r#"{{"scenario": {{"graph": "paper:10", "solvers": ["mp"]}}, "grid": {grid}}}"#
+            );
+            let sweep = Sweep::from_json_str(&text).expect("parses");
+            assert!(sweep.cells().expect_err("must fail").contains("msgpass"));
+        }
+        // Malformed windows, out-of-range shards, self-links and
+        // degenerate bipartitions are all rejected up front.
+        for grid in [
+            r#"{"link": ["0-1@64"]}"#,
+            r#"{"link": ["0-9@64+32"]}"#,
+            r#"{"link": ["1-1@64+32"]}"#,
+            r#"{"partition": ["9@64+32"]}"#,
+            r#"{"partition": ["0.1@64+32"]}"#,
         ] {
             let text = format!(
                 r#"{{"scenario": {{"graph": "paper:10", "solvers": ["msgpass:2:4"]}},

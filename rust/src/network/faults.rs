@@ -3,14 +3,19 @@
 //!
 //! The plan describes what the simulated wire does to traffic —
 //! per-transmission **drop** probability, **duplication** probability,
-//! adversarial **reordering** (extra latency jitter drawn per frame) and
-//! scheduled **shard crash/restart windows** — plus the seed of the
-//! dedicated fault stream, so identical plans replay identical fault
-//! realizations whatever the run seed or reliability mode. The plan is
-//! pure data; the transport owns the stream and makes the per-frame
-//! decisions, and [`crate::coordinator::msgpass::MsgpassRuntime`]
-//! interprets the crash windows (queue discard, checkpoint restore,
-//! peer re-sync).
+//! adversarial **reordering** (extra latency jitter drawn per frame),
+//! scheduled **shard crash/restart windows** (any number, overlap is
+//! legal), directional **link windows** (one `src → dst` direction cut
+//! on `[at, at + down_for)`, so asymmetric failures are expressible)
+//! and **partition windows** (every link crossing a shard bipartition
+//! cut and later healed) — plus the seed of the dedicated fault stream,
+//! so identical plans replay identical fault realizations whatever the
+//! run seed or reliability mode. The plan is pure data; the transport
+//! owns the stream and makes the per-frame decisions (every frame —
+//! data, ack, retransmission — is routed through the window check), and
+//! [`crate::coordinator::msgpass::MsgpassRuntime`] interprets the
+//! windows (queue discard, checkpoint restore, peer re-sync on restart
+//! *and* on heal).
 //!
 //! [`Reliability`] selects what the transport layers on top of that
 //! wire: `raw` is the PR-6 fire-and-forget semantics (drops lose
@@ -117,6 +122,170 @@ impl fmt::Display for CrashWindow {
     }
 }
 
+/// A scheduled *directional* link failure: every frame travelling
+/// `src → dst` (data, duplicates, retransmissions — and acks for data
+/// that flowed `dst → src`) is lost on `[at, at + down_for)` in virtual
+/// time. The reverse direction is untouched, so an asymmetric failure
+/// (`A → B` up, `B → A` down) is one window, not two.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkWindow {
+    pub src: usize,
+    pub dst: usize,
+    /// Virtual time the link goes down.
+    pub at: f64,
+    /// How long it stays down; it heals at `at + down_for`.
+    pub down_for: f64,
+}
+
+impl LinkWindow {
+    pub fn heal_at(&self) -> f64 {
+        self.at + self.down_for
+    }
+
+    /// Parse the `<src>-<dst>@<at>+<down_for>` segment body (the part
+    /// after the `link` tag), e.g. `0-1@64+32`. Self-links are rejected
+    /// here — a shard's frames to itself never touch the wire.
+    pub fn parse(s: &str) -> Result<LinkWindow, String> {
+        let grammar = "link<src>-<dst>@<at>+<down-for>, e.g. link0-1@64+32";
+        let (pair, rest) = s
+            .split_once('@')
+            .ok_or_else(|| format!("bad link spec {s:?} ({grammar})"))?;
+        let (src, dst) = pair
+            .split_once('-')
+            .ok_or_else(|| format!("bad link spec {s:?} ({grammar})"))?;
+        let (at, down_for) = rest
+            .split_once('+')
+            .ok_or_else(|| format!("bad link spec {s:?} ({grammar})"))?;
+        let src: usize = src
+            .parse()
+            .map_err(|_| format!("bad link src shard {src:?} ({grammar})"))?;
+        let dst: usize = dst
+            .parse()
+            .map_err(|_| format!("bad link dst shard {dst:?} ({grammar})"))?;
+        let at: f64 = at
+            .parse()
+            .map_err(|_| format!("bad link time {at:?} ({grammar})"))?;
+        let down_for: f64 = down_for
+            .parse()
+            .map_err(|_| format!("bad link duration {down_for:?} ({grammar})"))?;
+        if src == dst {
+            return Err(format!(
+                "link window {s:?} is a self-link (src == dst == {src}); \
+                 links connect distinct shards"
+            ));
+        }
+        if !(at.is_finite() && at >= 0.0) {
+            return Err(format!("link time must be finite and >= 0, got {at}"));
+        }
+        if !(down_for.is_finite() && down_for > 0.0) {
+            return Err(format!("link duration must be finite and > 0, got {down_for}"));
+        }
+        Ok(LinkWindow { src, dst, at, down_for })
+    }
+
+    /// Canonical segment body (inverse of [`LinkWindow::parse`]).
+    pub fn key(&self) -> String {
+        format!("{}-{}@{}+{}", self.src, self.dst, self.at, self.down_for)
+    }
+}
+
+impl fmt::Display for LinkWindow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "link {}->{} down on [{}, {})",
+            self.src,
+            self.dst,
+            self.at,
+            self.heal_at()
+        )
+    }
+}
+
+/// A scheduled network partition: every link crossing the bipartition
+/// `{left} | {rest}` is cut — both directions — on `[at, at + down_for)`
+/// and heals at `at + down_for`. Convenience over 2·|left|·|rest|
+/// individual [`LinkWindow`]s; the heal instant is what triggers the
+/// runtime's re-sync of the two drifted halves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionWindow {
+    /// One side of the bipartition, sorted and deduplicated; every
+    /// shard not listed is on the other side.
+    pub left: Vec<usize>,
+    /// Virtual time the partition begins.
+    pub at: f64,
+    /// How long it lasts; it heals at `at + down_for`.
+    pub down_for: f64,
+}
+
+impl PartitionWindow {
+    pub fn new(mut left: Vec<usize>, at: f64, down_for: f64) -> Self {
+        left.sort_unstable();
+        left.dedup();
+        PartitionWindow { left, at, down_for }
+    }
+
+    pub fn heal_at(&self) -> f64 {
+        self.at + self.down_for
+    }
+
+    /// Whether the directed link `src → dst` crosses the bipartition.
+    pub fn cuts(&self, src: usize, dst: usize) -> bool {
+        self.left.binary_search(&src).is_ok() != self.left.binary_search(&dst).is_ok()
+    }
+
+    /// Parse the `<s1>.<s2>…@<at>+<down_for>` segment body (the part
+    /// after the `part` tag), e.g. `0.1@64+32` — shards {0, 1} cut off
+    /// from everything else on `[64, 96)`.
+    pub fn parse(s: &str) -> Result<PartitionWindow, String> {
+        let grammar = "part<s1>.<s2>...@<at>+<down-for>, e.g. part0.1@64+32";
+        let (members, rest) = s
+            .split_once('@')
+            .ok_or_else(|| format!("bad partition spec {s:?} ({grammar})"))?;
+        let (at, down_for) = rest
+            .split_once('+')
+            .ok_or_else(|| format!("bad partition spec {s:?} ({grammar})"))?;
+        let mut left = Vec::new();
+        for m in members.split('.') {
+            let shard: usize = m
+                .parse()
+                .map_err(|_| format!("bad partition shard {m:?} ({grammar})"))?;
+            left.push(shard);
+        }
+        let at: f64 = at
+            .parse()
+            .map_err(|_| format!("bad partition time {at:?} ({grammar})"))?;
+        let down_for: f64 = down_for
+            .parse()
+            .map_err(|_| format!("bad partition duration {down_for:?} ({grammar})"))?;
+        if !(at.is_finite() && at >= 0.0) {
+            return Err(format!("partition time must be finite and >= 0, got {at}"));
+        }
+        if !(down_for.is_finite() && down_for > 0.0) {
+            return Err(format!("partition duration must be finite and > 0, got {down_for}"));
+        }
+        Ok(PartitionWindow::new(left, at, down_for))
+    }
+
+    /// Canonical segment body (inverse of [`PartitionWindow::parse`]).
+    pub fn key(&self) -> String {
+        let members: Vec<String> = self.left.iter().map(|s| s.to_string()).collect();
+        format!("{}@{}+{}", members.join("."), self.at, self.down_for)
+    }
+}
+
+impl fmt::Display for PartitionWindow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "partition {{{}}} | rest on [{}, {})",
+            self.left.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(","),
+            self.at,
+            self.heal_at()
+        )
+    }
+}
+
 /// A seeded fault plan — pure data describing the injected wire faults.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FaultPlan {
@@ -128,8 +297,13 @@ pub struct FaultPlan {
     /// Adversarial reordering: extra latency drawn uniformly from
     /// `[0, jitter]` per frame, on top of the latency model.
     pub jitter: f64,
-    /// Scheduled crash/restart windows.
+    /// Scheduled crash/restart windows — any number; overlapping
+    /// multi-shard crashes are a legal plan.
     pub crashes: Vec<CrashWindow>,
+    /// Scheduled directional link failures.
+    pub links: Vec<LinkWindow>,
+    /// Scheduled bipartition cuts (every crossing link, both ways).
+    pub partitions: Vec<PartitionWindow>,
     /// Seed of the dedicated fault stream (drop/duplicate/jitter
     /// decisions) — independent of the run seed, so `raw` and `rel` are
     /// raced under the *identical* plan.
@@ -143,6 +317,8 @@ impl Default for FaultPlan {
             duplicate: 0.0,
             jitter: 0.0,
             crashes: Vec::new(),
+            links: Vec::new(),
+            partitions: Vec::new(),
             seed: DEFAULT_FAULT_SEED,
         }
     }
@@ -157,6 +333,8 @@ impl FaultPlan {
             && self.duplicate == 0.0
             && self.jitter == 0.0
             && self.crashes.is_empty()
+            && self.links.is_empty()
+            && self.partitions.is_empty()
     }
 
     pub fn with_drop(mut self, p: f64) -> Self {
@@ -182,6 +360,17 @@ impl FaultPlan {
         self
     }
 
+    pub fn with_link(mut self, link: LinkWindow) -> Self {
+        assert!(link.src != link.dst, "self-link window: src == dst == {}", link.src);
+        self.links.push(link);
+        self
+    }
+
+    pub fn with_partition(mut self, partition: PartitionWindow) -> Self {
+        self.partitions.push(partition);
+        self
+    }
+
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -192,6 +381,71 @@ impl FaultPlan {
         self.crashes
             .iter()
             .any(|c| c.shard == shard && time >= c.at && time < c.restart_at())
+    }
+
+    /// Whether the directed link `src → dst` is cut at `time` — by a
+    /// scheduled [`LinkWindow`] or by a [`PartitionWindow`] whose
+    /// bipartition the link crosses. Windows are half-open `[at, heal)`.
+    pub fn is_link_down(&self, src: usize, dst: usize, time: f64) -> bool {
+        self.links
+            .iter()
+            .any(|l| l.src == src && l.dst == dst && time >= l.at && time < l.heal_at())
+            || self
+                .partitions
+                .iter()
+                .any(|p| p.cuts(src, dst) && time >= p.at && time < p.heal_at())
+    }
+
+    /// Check every window against the actual shard count, so a plan
+    /// naming an unreachable shard (or a degenerate bipartition) fails
+    /// loudly where it is built instead of silently never firing.
+    pub fn validate(&self, shards: usize) -> Result<(), String> {
+        for (i, c) in self.crashes.iter().enumerate() {
+            if c.shard >= shards {
+                return Err(format!(
+                    "crash window #{i} (crash{}) names shard {} but valid shards are 0..{shards}",
+                    c.key(),
+                    c.shard
+                ));
+            }
+        }
+        for (i, l) in self.links.iter().enumerate() {
+            if l.src == l.dst {
+                return Err(format!(
+                    "link window #{i} (link{}) is a self-link; \
+                     src and dst must be distinct shards in 0..{shards}",
+                    l.key()
+                ));
+            }
+            for (role, s) in [("src", l.src), ("dst", l.dst)] {
+                if s >= shards {
+                    return Err(format!(
+                        "link window #{i} (link{}) names {role} shard {s} \
+                         but valid shards are 0..{shards}",
+                        l.key()
+                    ));
+                }
+            }
+        }
+        for (i, p) in self.partitions.iter().enumerate() {
+            for &s in &p.left {
+                if s >= shards {
+                    return Err(format!(
+                        "partition window #{i} (part{}) names shard {s} \
+                         but valid shards are 0..{shards}",
+                        p.key()
+                    ));
+                }
+            }
+            if p.left.is_empty() || p.left.len() >= shards {
+                return Err(format!(
+                    "partition window #{i} (part{}) is not a proper bipartition \
+                     of 0..{shards}: both sides must be non-empty",
+                    p.key()
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -238,6 +492,17 @@ pub struct FaultCounters {
     /// — how far the owner-authoritative residual had diverged from the
     /// true residual when the crash hit (in-flight and lost mass).
     pub residual_divergence_at_crash: f64,
+    /// Frames lost to a cut link — a scheduled [`LinkWindow`] or a
+    /// [`PartitionWindow`] crossing (data, duplicates, retransmissions
+    /// and acks all count).
+    pub link_downs: u64,
+    /// Partition windows that completed their heal (re-sync fired).
+    pub partitions_healed: u64,
+    /// Max over links of the reliable sender's EWMA ack-RTT estimate,
+    /// in virtual-time units — the base the adaptive retransmission
+    /// backoff and abandon budget are expressed in. Zero until the
+    /// first ack RTT is observed.
+    pub rtt_estimate: f64,
 }
 
 impl FaultCounters {
@@ -246,9 +511,9 @@ impl FaultCounters {
         *self != FaultCounters::default()
     }
 
-    /// Merge another ledger: event counters add, the divergence gauge
-    /// takes the max — both commute, so cross-round accumulation is
-    /// thread-invariant.
+    /// Merge another ledger: event counters add, the gauges (divergence,
+    /// RTT estimate) take the max — both commute, so cross-round
+    /// accumulation is thread-invariant.
     pub fn absorb(&mut self, other: &FaultCounters) {
         self.messages_dropped += other.messages_dropped;
         self.duplicates_suppressed += other.duplicates_suppressed;
@@ -256,6 +521,9 @@ impl FaultCounters {
         self.recoveries += other.recoveries;
         self.residual_divergence_at_crash =
             self.residual_divergence_at_crash.max(other.residual_divergence_at_crash);
+        self.link_downs += other.link_downs;
+        self.partitions_healed += other.partitions_healed;
+        self.rtt_estimate = self.rtt_estimate.max(other.rtt_estimate);
     }
 }
 
@@ -296,6 +564,114 @@ mod tests {
     }
 
     #[test]
+    fn link_window_parses_and_round_trips() {
+        let l = LinkWindow::parse("0-1@64+32").expect("parses");
+        assert_eq!(l, LinkWindow { src: 0, dst: 1, at: 64.0, down_for: 32.0 });
+        assert_eq!(l.key(), "0-1@64+32");
+        assert_eq!(l.heal_at(), 96.0);
+        let l = LinkWindow::parse("3-0@12.5+0.5").expect("parses");
+        assert_eq!(l.key(), "3-0@12.5+0.5");
+        assert_eq!(LinkWindow::parse(&l.key()).expect("round-trips"), l);
+    }
+
+    #[test]
+    fn bad_link_specs_are_loud() {
+        for bad in [
+            "", "0-1", "0-1@64", "0@64+32", "x-1@1+2", "0-x@1+2", "0-1@x+2", "0-1@1+x",
+            "0-1@-3+2", "0-1@3+0", "0-1@3+-1",
+        ] {
+            assert!(LinkWindow::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        let self_link = LinkWindow::parse("2-2@5+5").unwrap_err();
+        assert!(self_link.contains("self-link"), "{self_link}");
+    }
+
+    #[test]
+    fn partition_window_parses_sorts_and_round_trips() {
+        let p = PartitionWindow::parse("0.1@64+32").expect("parses");
+        assert_eq!(p, PartitionWindow::new(vec![0, 1], 64.0, 32.0));
+        assert_eq!(p.key(), "0.1@64+32");
+        assert_eq!(p.heal_at(), 96.0);
+        // Members are canonicalized: sorted and deduplicated.
+        let p = PartitionWindow::parse("2.0.2@8+4").expect("parses");
+        assert_eq!(p.left, vec![0, 2]);
+        assert_eq!(p.key(), "0.2@8+4");
+        assert_eq!(PartitionWindow::parse(&p.key()).expect("round-trips"), p);
+    }
+
+    #[test]
+    fn bad_partition_specs_are_loud() {
+        for bad in ["", "0.1", "0.1@64", "x@1+2", "0.x@1+2", "0@x+2", "0@1+x", "0@-3+2", "0@3+0"] {
+            assert!(PartitionWindow::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn partition_cuts_only_crossing_links() {
+        let p = PartitionWindow::new(vec![0, 1], 10.0, 5.0);
+        assert!(p.cuts(0, 2) && p.cuts(2, 0), "crossing links cut both ways");
+        assert!(p.cuts(1, 3) && p.cuts(3, 1));
+        assert!(!p.cuts(0, 1) && !p.cuts(1, 0), "intra-left links survive");
+        assert!(!p.cuts(2, 3) && !p.cuts(3, 2), "intra-rest links survive");
+    }
+
+    #[test]
+    fn link_down_windows_are_half_open_and_directional() {
+        let plan = FaultPlan::default()
+            .with_link(LinkWindow { src: 0, dst: 1, at: 10.0, down_for: 5.0 });
+        assert!(!plan.is_link_down(0, 1, 9.999));
+        assert!(plan.is_link_down(0, 1, 10.0));
+        assert!(plan.is_link_down(0, 1, 14.999));
+        assert!(!plan.is_link_down(0, 1, 15.0), "heal instant is up");
+        assert!(!plan.is_link_down(1, 0, 12.0), "reverse direction stays up");
+
+        let plan = FaultPlan::default()
+            .with_partition(PartitionWindow::new(vec![0], 10.0, 5.0));
+        assert!(plan.is_link_down(0, 1, 12.0) && plan.is_link_down(1, 0, 12.0));
+        assert!(!plan.is_link_down(1, 2, 12.0), "intra-side link stays up");
+        assert!(!plan.is_link_down(0, 1, 15.0), "partition heals");
+    }
+
+    #[test]
+    fn plan_validation_names_the_offender_and_the_range() {
+        let ok = FaultPlan::default()
+            .with_crash(CrashWindow { shard: 1, at: 4.0, down_for: 2.0 })
+            .with_crash(CrashWindow { shard: 2, at: 5.0, down_for: 2.0 })
+            .with_link(LinkWindow { src: 0, dst: 3, at: 1.0, down_for: 1.0 })
+            .with_partition(PartitionWindow::new(vec![0, 1], 2.0, 2.0));
+        assert!(ok.validate(4).is_ok(), "overlapping crashes are a legal plan");
+
+        let e = FaultPlan::default()
+            .with_crash(CrashWindow { shard: 9, at: 1.0, down_for: 1.0 })
+            .validate(2)
+            .unwrap_err();
+        assert!(e.contains("crash window #0") && e.contains("shard 9") && e.contains("0..2"), "{e}");
+
+        let e = FaultPlan::default()
+            .with_link(LinkWindow { src: 0, dst: 5, at: 1.0, down_for: 1.0 })
+            .validate(4)
+            .unwrap_err();
+        assert!(e.contains("link window #0") && e.contains("dst shard 5") && e.contains("0..4"), "{e}");
+
+        let mut self_link = FaultPlan::default();
+        self_link.links.push(LinkWindow { src: 1, dst: 1, at: 1.0, down_for: 1.0 });
+        let e = self_link.validate(4).unwrap_err();
+        assert!(e.contains("self-link"), "{e}");
+
+        let e = FaultPlan::default()
+            .with_partition(PartitionWindow::new(vec![0, 7], 1.0, 1.0))
+            .validate(4)
+            .unwrap_err();
+        assert!(e.contains("partition window #0") && e.contains("shard 7") && e.contains("0..4"), "{e}");
+
+        let e = FaultPlan::default()
+            .with_partition(PartitionWindow::new(vec![0, 1], 1.0, 1.0))
+            .validate(2)
+            .unwrap_err();
+        assert!(e.contains("bipartition"), "{e}");
+    }
+
+    #[test]
     fn empty_plan_detection() {
         assert!(FaultPlan::default().is_empty());
         assert!(!FaultPlan::default().with_drop(0.1).is_empty());
@@ -305,6 +681,18 @@ mod tests {
             !FaultPlan::default()
                 .with_crash(CrashWindow { shard: 0, at: 1.0, down_for: 1.0 })
                 .is_empty()
+        );
+        assert!(
+            !FaultPlan::default()
+                .with_link(LinkWindow { src: 0, dst: 1, at: 1.0, down_for: 1.0 })
+                .is_empty(),
+            "a links-only plan must not be normalized away"
+        );
+        assert!(
+            !FaultPlan::default()
+                .with_partition(PartitionWindow::new(vec![0], 1.0, 1.0))
+                .is_empty(),
+            "a partitions-only plan must not be normalized away"
         );
     }
 
@@ -316,6 +704,9 @@ mod tests {
             retransmits: 5,
             recoveries: 1,
             residual_divergence_at_crash: 0.25,
+            link_downs: 4,
+            partitions_healed: 1,
+            rtt_estimate: 2.0,
         };
         let b = FaultCounters {
             messages_dropped: 2,
@@ -323,6 +714,9 @@ mod tests {
             retransmits: 1,
             recoveries: 0,
             residual_divergence_at_crash: 0.5,
+            link_downs: 3,
+            partitions_healed: 0,
+            rtt_estimate: 1.5,
         };
         a.absorb(&b);
         assert_eq!(a.messages_dropped, 5);
@@ -330,8 +724,13 @@ mod tests {
         assert_eq!(a.retransmits, 6);
         assert_eq!(a.recoveries, 1);
         assert_eq!(a.residual_divergence_at_crash, 0.5);
+        assert_eq!(a.link_downs, 7);
+        assert_eq!(a.partitions_healed, 1);
+        assert_eq!(a.rtt_estimate, 2.0, "RTT gauge max-merges");
         assert!(a.any());
         assert!(!FaultCounters::default().any());
+        let gauge_only = FaultCounters { rtt_estimate: 3.5, ..FaultCounters::default() };
+        assert!(gauge_only.any(), "a nonzero RTT gauge alone counts as activity");
     }
 
     #[test]

@@ -16,8 +16,9 @@
 //!   draws, congestion tracking and bytes-on-the-wire accounting behind a
 //!   single `send`/`pop` interface;
 //! * [`faults`] — seeded fault plans (drop / duplicate / reorder jitter /
-//!   crash windows) composed with the transport, the `raw`/`rel`
-//!   reliability modes, and the fault ledger threaded into reports.
+//!   crash windows / directional link windows / partition windows)
+//!   composed with the transport, the `raw`/`rel` reliability modes,
+//!   and the fault ledger threaded into reports.
 //!
 //! As of the msgpass backend ([`crate::coordinator::msgpass`]) this
 //! substrate is load-bearing, not decorative: every cross-shard residual
@@ -35,6 +36,8 @@ pub mod latency;
 pub mod transport;
 
 pub use events::{EventQueue, Timed};
-pub use faults::{CrashWindow, FaultCounters, FaultPlan, NetProfile, Reliability};
+pub use faults::{
+    CrashWindow, FaultCounters, FaultPlan, LinkWindow, NetProfile, PartitionWindow, Reliability,
+};
 pub use latency::LatencyModel;
 pub use transport::{Transport, TransportEvent, WireSized};

@@ -680,7 +680,7 @@ fn shipped_sweep_and_smoke_files_parse() {
         cells.iter().any(|(_, s)| s
             .solvers()
             .iter()
-            .any(|sp| matches!(sp, SolverSpec::Msgpass { drop, crash: Some(_), reliable: true, .. } if *drop > 0.0))),
+            .any(|sp| matches!(sp, SolverSpec::Msgpass { drop, crashes, reliable: true, .. } if *drop > 0.0 && !crashes.is_empty()))),
         "the fault sweep must exercise drop+crash in reliable mode"
     );
     assert!(
@@ -689,6 +689,37 @@ fn shipped_sweep_and_smoke_files_parse() {
             .iter()
             .any(|sp| matches!(sp, SolverSpec::Msgpass { reliable: false, drop, .. } if *drop > 0.0))),
         "the fault sweep must race the raw wire under the same plan"
+    );
+
+    // The partition-smoke sweep CI runs: link/partition axes over raw
+    // and reliable msgpass.
+    let parts_text = std::fs::read_to_string(root.join("examples/partitions_sweep.json"))
+        .expect("partitions sweep readable");
+    let parts = Sweep::from_json_str(&parts_text).expect("partitions sweep parses");
+    assert!(parts.cell_count() >= 4, "link × partition must be a real grid");
+    let cells = parts.cells().expect("every partition cell must be expandable");
+    assert!(
+        cells.iter().any(|(_, s)| s.solvers().iter().any(|sp| matches!(
+            sp,
+            SolverSpec::Msgpass { links, partitions, reliable: true, .. }
+                if !links.is_empty() && !partitions.is_empty()
+        ))),
+        "the partition sweep must exercise link+partition windows in reliable mode"
+    );
+    assert!(
+        cells.iter().any(|(_, s)| s.solvers().iter().any(|sp| matches!(
+            sp,
+            SolverSpec::Msgpass { links, reliable: false, .. } if !links.is_empty()
+        ))),
+        "the partition sweep must race the raw wire under the same windows"
+    );
+    assert!(
+        cells.iter().any(|(_, s)| s.solvers().iter().any(|sp| matches!(
+            sp,
+            SolverSpec::Msgpass { links, partitions, .. }
+                if links.is_empty() && partitions.is_empty()
+        ))),
+        "the partition sweep must keep a window-free control cell"
     );
 }
 

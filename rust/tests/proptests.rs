@@ -462,6 +462,134 @@ fn prop_reliable_transport_never_double_delivers() {
     }
 }
 
+/// PROPERTY: conservation after heal (eq. 11 under partition
+/// tolerance). Under a composed fault plan — an asymmetric link window,
+/// a healing shard bipartition and two *overlapping* crash windows,
+/// optionally with 5% random drop — the reliable msgpass backend drains
+/// back to exact conservation once every window heals: retransmission
+/// replays what the cuts swallowed, the restart/heal re-syncs repair the
+/// replicas, and no frame ever exhausts its RTT-denominated retry
+/// budget.
+#[test]
+fn prop_reliable_msgpass_conserves_after_heal() {
+    use pagerank_mp::coordinator::{MsgpassConfig, MsgpassRuntime, ShardMap};
+    use pagerank_mp::network::{CrashWindow, FaultPlan, LatencyModel, LinkWindow, PartitionWindow};
+
+    for case in 0..10u64 {
+        let mut rng = Rng::seeded(10_600 + case);
+        let n = rng.range(16, 40);
+        let g = generators::er_threshold(n, 0.5, 10_600 + case);
+        let shards = rng.range(3, 6);
+        let at = 20.0 + 30.0 * rng.uniform();
+        let down = 8.0 + 16.0 * rng.uniform();
+        let src = rng.below(shards);
+        let dst = (src + 1 + rng.below(shards - 1)) % shards;
+        let crash_a = rng.below(shards);
+        let crash_b = (crash_a + 1) % shards;
+        let plan = FaultPlan::default()
+            .with_seed(31_600 + case)
+            .with_drop(if rng.bernoulli(0.5) { 0.05 } else { 0.0 })
+            .with_link(LinkWindow { src, dst, at, down_for: down })
+            .with_partition(PartitionWindow::new(vec![rng.below(shards)], at + 5.0, down))
+            // down_for >= 8, so the second window opens before the first
+            // closes: the overlapping-crash case the single-crash era
+            // rejected.
+            .with_crash(CrashWindow { shard: crash_a, at: at + 10.0, down_for: down })
+            .with_crash(CrashWindow { shard: crash_b, at: at + 14.0, down_for: down });
+        let cfg = MsgpassConfig::new(shards, 2 * shards, ShardMap::Modulo, 4, LatencyModel::Zero)
+            .with_faults(plan)
+            .reliable();
+        let mut rt = MsgpassRuntime::with_config(g.clone(), 0.85, cfg);
+        let mut run_rng = rng.fork(1);
+        for _ in 0..400 {
+            rt.try_run_super_step(&mut run_rng)
+                .expect("reliable faulted run must drain every super-step");
+        }
+        let f = rt.fault_counters();
+        assert_eq!(
+            rt.abandoned_messages(),
+            0,
+            "case {case}: an outage must never exhaust the RTT-denominated retry budget"
+        );
+        assert_eq!(f.recoveries, 2, "case {case}: both overlapping crashes must restart");
+        assert_eq!(f.partitions_healed, 1, "case {case}: the bipartition must heal");
+        let b = DenseMatrix::b_matrix(&g, 0.85);
+        let bx = b.matvec(&rt.estimate());
+        let viol = bx
+            .iter()
+            .zip(&rt.residual())
+            .map(|(v, r)| (v + r - 0.15).abs())
+            .fold(0.0, f64::max);
+        assert!(viol < 1e-9, "case {case}: conservation violated by {viol:.3e} after heal");
+    }
+}
+
+/// PROPERTY: the raw wire under a healing bipartition is honestly
+/// degraded — the ledger counts every frame the cut swallowed, the
+/// divergence gauge is sampled at partition onset and heal, and the
+/// owner-bound deltas the cut dropped leave a nonzero conservation
+/// violation that raw mode (no retransmission) can never repair.
+#[test]
+fn prop_raw_msgpass_counts_partition_losses_honestly() {
+    use pagerank_mp::coordinator::{MsgpassConfig, MsgpassRuntime, ShardMap};
+    use pagerank_mp::network::{FaultPlan, LatencyModel, PartitionWindow};
+
+    let cases = 10u64;
+    let mut violated = 0usize;
+    let mut gauged = 0usize;
+    for case in 0..cases {
+        let mut rng = Rng::seeded(10_700 + case);
+        let n = rng.range(16, 40);
+        let g = generators::er_threshold(n, 0.5, 10_700 + case);
+        let shards = rng.range(2, 5);
+        let plan = FaultPlan::default()
+            .with_seed(31_700 + case)
+            .with_partition(PartitionWindow::new(vec![rng.below(shards)], 30.0, 20.0));
+        let cfg = MsgpassConfig::new(shards, 2 * shards, ShardMap::Modulo, 4, LatencyModel::Zero)
+            .with_faults(plan);
+        let mut rt = MsgpassRuntime::with_config(g.clone(), 0.85, cfg);
+        let mut run_rng = rng.fork(1);
+        for _ in 0..300 {
+            rt.try_run_super_step(&mut run_rng)
+                .expect("raw faulted run must drain every super-step");
+        }
+        let f = rt.fault_counters();
+        assert!(
+            f.link_downs > 0,
+            "case {case}: a 20-vtime all-link cut on a dense graph must swallow traffic"
+        );
+        assert_eq!(f.retransmits, 0, "case {case}: raw mode never retransmits");
+        assert_eq!(f.partitions_healed, 1, "case {case}: the window must heal");
+        let (onset, heal) = rt.partition_divergence();
+        assert!(onset.is_finite() && onset >= 0.0, "case {case}: onset gauge {onset}");
+        assert!(heal.is_finite() && heal >= 0.0, "case {case}: heal gauge {heal}");
+        if heal > 0.0 {
+            gauged += 1;
+        }
+        let b = DenseMatrix::b_matrix(&g, 0.85);
+        let bx = b.matvec(&rt.estimate());
+        let viol = bx
+            .iter()
+            .zip(&rt.residual())
+            .map(|(v, r)| (v + r - 0.15).abs())
+            .fold(0.0, f64::max);
+        if viol > 1e-9 {
+            violated += 1;
+        }
+    }
+    // Every case is seeded (replayable), but whether a specific run loses
+    // an owner-bound delta inside its window is plan-dependent — demand a
+    // solid majority rather than pinning each seed.
+    assert!(
+        violated >= cases as usize / 2,
+        "only {violated}/{cases} raw runs showed the expected conservation debt"
+    );
+    assert!(
+        gauged >= cases as usize / 2,
+        "only {gauged}/{cases} raw runs gauged heal-time divergence"
+    );
+}
+
 /// PROPERTY: `remap_ids` compacts sparse/gappy ids to first-seen order —
 /// the same graph as manually renumbering ids in line order (src before
 /// dst) and feeding the builder.
